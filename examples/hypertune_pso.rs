@@ -1,0 +1,90 @@
+//! Tuning the tuner: exhaustive hyperparameter tuning of PSO.
+//!
+//! Reproduces the Section IV-B workflow on a reduced setting: every
+//! Table III hyperparameter configuration of particle swarm optimization
+//! is scored across training search spaces in simulation mode, the
+//! sensitivity of each hyperparameter is screened (Kruskal–Wallis +
+//! mutual information, the screen that dropped `W` in the paper), and the
+//! best configuration is validated on a held-out test space.
+
+use anyhow::Result;
+use std::sync::Arc;
+use tunetuner::dataset::hub::{Hub, HUB_SEED};
+use tunetuner::hypertuning::{self, sensitivity::sensitivity};
+use tunetuner::kernels;
+use tunetuner::methodology::{evaluate_algorithm, SpaceEval};
+use tunetuner::optimizers::HyperParams;
+use tunetuner::runtime::Engine;
+
+fn main() -> Result<()> {
+    let engine = Arc::new(Engine::auto(&Engine::default_artifacts_dir()));
+    let hub = Hub::new(Hub::default_root());
+
+    // Train on convolution+dedispersion over two devices; test on a third.
+    let kernels_used = ["convolution", "dedispersion"];
+    let train_devices = ["A100", "MI250X"];
+    let test_device = "W7800";
+    let mut all_devices = train_devices.to_vec();
+    all_devices.push(test_device);
+    hub.ensure(&kernels_used, &all_devices, Arc::clone(&engine), HUB_SEED)?;
+
+    let space_eval = |k: &str, d: &str| -> Result<SpaceEval> {
+        let kernel = kernels::kernel_by_name(k)?;
+        Ok(SpaceEval::new(kernel.space_arc(), hub.load(k, d)?, 0.95, 30))
+    };
+    let mut train = Vec::new();
+    for k in kernels_used {
+        for d in train_devices {
+            train.push(space_eval(k, d)?);
+        }
+    }
+    let test: Vec<SpaceEval> = kernels_used
+        .iter()
+        .map(|k| space_eval(k, test_device))
+        .collect::<Result<_>>()?;
+
+    // Exhaustive sweep of the Table III PSO space (81 configurations).
+    let hp_space = hypertuning::limited_space("pso")?;
+    println!(
+        "exhaustively tuning PSO: {} hyperparameter configs x {} spaces x 10 repeats",
+        hp_space.len(),
+        train.len()
+    );
+    let results =
+        hypertuning::exhaustive_tuning("pso", &hp_space, "limited", &train, 10, 7)?;
+
+    println!("\nbest:  {:.3}  {}", results.best().score, results.best().hp_key);
+    println!(
+        "mean:  {:.3}  {}",
+        results.most_average().score,
+        results.most_average().hp_key
+    );
+    println!("worst: {:.3}  {}", results.worst().score, results.worst().hp_key);
+
+    // Sensitivity screen.
+    println!("\nhyperparameter sensitivity (Kruskal-Wallis / mutual information):");
+    for s in sensitivity(&results, &hp_space) {
+        println!(
+            "  {:<10} H={:>7.2}  p={:<8.4} MI={:.4}{}",
+            s.param,
+            s.h,
+            s.p,
+            s.mutual_information,
+            if s.p > 0.05 { "   <- no meaningful effect" } else { "" }
+        );
+    }
+
+    // Generalization: best vs most-average config on the held-out device.
+    let best_hp = HyperParams::from_space_config(&hp_space, results.best().config_idx);
+    let avg_hp =
+        HyperParams::from_space_config(&hp_space, results.most_average().config_idx);
+    let best_test = evaluate_algorithm("pso", &best_hp, &test, 25, 11)?;
+    let avg_test = evaluate_algorithm("pso", &avg_hp, &test, 25, 11)?;
+    println!(
+        "\nheld-out {test_device}: best-config score {:.3} vs average-config {:.3} ({:+.0}%)",
+        best_test.score,
+        avg_test.score,
+        (best_test.score - avg_test.score) / avg_test.score.abs().max(1e-9) * 100.0
+    );
+    Ok(())
+}

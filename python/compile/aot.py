@@ -1,0 +1,83 @@
+"""AOT: lower the L2 graph to HLO text artifacts for the Rust runtime.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits one artifact per batch size in contract.BATCH_SIZES:
+    artifacts/perfmodel_b{N}.hlo.txt
+plus artifacts/contract.json describing the vector layout, so the Rust
+runtime can validate at load time that it agrees with the contract the
+artifacts were built against.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids, so text round-trips cleanly.
+"""
+
+import argparse
+import json
+import os
+
+from jax._src.lib import xla_client as xc
+
+from . import contract, model
+
+
+def to_hlo_text(lowered) -> str:
+    """Lowered jax computation -> XLA HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def contract_json() -> str:
+    names = {
+        k: v
+        for k, v in vars(contract).items()
+        if k.startswith(("F_", "D_")) and isinstance(v, int)
+    }
+    payload = {
+        "version": contract.CONTRACT_VERSION,
+        "num_features": contract.NUM_FEATURES,
+        "num_device": contract.NUM_DEVICE,
+        "invalid_time": contract.INVALID_TIME,
+        "launch_overhead": contract.LAUNCH_OVERHEAD,
+        "max_tpb": contract.MAX_TPB,
+        "block_n": contract.BLOCK_N,
+        "batch_sizes": list(contract.BATCH_SIZES),
+        "outputs": ["times", "t_cold", "t_hot"],
+        "indices": names,
+    }
+    return json.dumps(payload, indent=2, sort_keys=True)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--batch-sizes",
+        default=",".join(str(b) for b in contract.BATCH_SIZES),
+        help="comma-separated batch sizes to lower",
+    )
+    args = parser.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    sizes = [int(s) for s in args.batch_sizes.split(",") if s]
+    for n in sizes:
+        lowered = model.lower_measure_batch(n)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"perfmodel_b{n}.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    cpath = os.path.join(args.out_dir, "contract.json")
+    with open(cpath, "w") as fh:
+        fh.write(contract_json() + "\n")
+    print(f"wrote {cpath}")
+
+
+if __name__ == "__main__":
+    main()

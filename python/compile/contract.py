@@ -1,0 +1,50 @@
+"""The L1/L2 <-> L3 interchange contract.
+
+This module is the single source of truth for the layout of the feature
+and device vectors the batched device performance model consumes.  The
+Rust side (rust/src/perfmodel/contract.rs) mirrors these constants; aot.py
+additionally emits `artifacts/contract.json` so the Rust runtime can
+verify at load time that the artifacts were built against the layout it
+expects.
+
+All quantities are f32.  Times are in seconds.
+"""
+
+# ---- feature vector (per kernel configuration) ------------------------------
+F_FLOPS = 0        # total floating point operations for the problem size
+F_BYTES = 1        # total DRAM bytes moved (read + write)
+F_TPB = 2          # threads per block
+F_REGS = 3         # registers per thread
+F_SMEM = 4         # shared memory per block (bytes)
+F_BLOCKS = 5       # grid size in blocks
+F_VECW = 6         # vector width (1, 2, 4, 8)
+F_UNROLL = 7       # unroll factor (1..16)
+F_COAL = 8         # memory coalescing quality in [0, 1]
+F_CACHE = 9        # cache-hint quality in [0, 1]
+F_HASH_A = 10      # per-config hash in [0, 1) (landscape ruggedness)
+F_HASH_B = 11      # second independent hash in [0, 1)
+NUM_FEATURES = 12
+
+# ---- device vector (per simulated GPU) ---------------------------------------
+D_NUM_SM = 0       # number of SMs / CUs
+D_PEAK_GFLOPS = 1  # peak fp32 GFLOP/s
+D_BW_GBS = 2       # peak DRAM bandwidth GB/s
+D_MAX_THREADS = 3  # max resident threads per SM
+D_SMEM_SM = 4      # shared memory per SM (bytes)
+D_REGS_SM = 5      # registers per SM
+D_MAX_BLOCKS = 6   # max resident blocks per SM
+D_WARP = 7         # warp / wavefront size (32 or 64)
+D_RUG_SEED = 8     # device ruggedness blend seed in [0, 1)
+D_RUG_AMP = 9      # ruggedness amplitude (e.g. 0.25)
+NUM_DEVICE = 10
+
+# ---- model constants ----------------------------------------------------------
+INVALID_TIME = 1.0e9   # sentinel for configurations that fail to launch
+LAUNCH_OVERHEAD = 3.0e-6  # fixed per-wave launch overhead in seconds
+MAX_TPB = 1024.0       # hardware limit on threads per block
+
+# ---- AOT artifact batch sizes --------------------------------------------------
+BLOCK_N = 256                       # pallas tile along the config axis
+BATCH_SIZES = (256, 1024, 4096, 16384)  # one HLO artifact per size
+
+CONTRACT_VERSION = 1

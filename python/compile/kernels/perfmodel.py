@@ -1,0 +1,165 @@
+"""L1: the batched GPU device model as a Pallas kernel.
+
+Every live "measurement" of a kernel configuration in the Rust coordinator
+funnels through this kernel: the L3 brute-forcer and live runner pack
+configuration feature matrices, the AOT-compiled HLO (which this kernel
+lowers into) evaluates the device model for a whole batch at once.
+
+Tiling: the configuration axis N is streamed through VMEM in
+(BLOCK_N, NUM_FEATURES) tiles via BlockSpec; the device vector is
+broadcast to every tile.  The model is elementwise over N (VPU work, no
+MXU); VMEM footprint per tile is BLOCK_N * (NUM_FEATURES + 1) * 4 bytes
+plus the (1, NUM_DEVICE) device row -- ~13 KiB at BLOCK_N=256, far below
+the ~16 MiB VMEM budget, leaving headroom for double buffering.
+
+interpret=True is mandatory here: the artifacts must execute on the CPU
+PJRT client in the Rust runtime, and a real TPU lowering would emit a
+Mosaic custom-call the CPU plugin cannot run.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..contract import (
+    BLOCK_N,
+    D_BW_GBS,
+    D_MAX_BLOCKS,
+    D_MAX_THREADS,
+    D_NUM_SM,
+    D_PEAK_GFLOPS,
+    D_REGS_SM,
+    D_RUG_AMP,
+    D_RUG_SEED,
+    D_SMEM_SM,
+    D_WARP,
+    F_BLOCKS,
+    F_BYTES,
+    F_CACHE,
+    F_COAL,
+    F_FLOPS,
+    F_HASH_A,
+    F_HASH_B,
+    F_REGS,
+    F_SMEM,
+    F_TPB,
+    F_UNROLL,
+    F_VECW,
+    INVALID_TIME,
+    LAUNCH_OVERHEAD,
+    MAX_TPB,
+    NUM_DEVICE,
+    NUM_FEATURES,
+)
+
+
+def _perfmodel_kernel(f_ref, d_ref, o_ref):
+    """One (BLOCK_N, NUM_FEATURES) tile of the device model.
+
+    The arithmetic must stay in lockstep with kernels/ref.py (the jnp
+    oracle) and rust/src/perfmodel/analytical.rs (the Rust oracle); all
+    three are cross-checked by tests.
+    """
+    f = f_ref[...]
+    d = d_ref[...]
+
+    flops = f[:, F_FLOPS]
+    bytes_rw = f[:, F_BYTES]
+    tpb = f[:, F_TPB]
+    regs = f[:, F_REGS]
+    smem = f[:, F_SMEM]
+    blocks = f[:, F_BLOCKS]
+    vecw = f[:, F_VECW]
+    unroll = f[:, F_UNROLL]
+    coal = f[:, F_COAL]
+    cache = f[:, F_CACHE]
+    hash_a = f[:, F_HASH_A]
+    hash_b = f[:, F_HASH_B]
+
+    num_sm = d[0, D_NUM_SM]
+    peak = d[0, D_PEAK_GFLOPS] * 1.0e9
+    bandwidth = d[0, D_BW_GBS] * 1.0e9
+    max_threads = d[0, D_MAX_THREADS]
+    smem_sm = d[0, D_SMEM_SM]
+    regs_sm = d[0, D_REGS_SM]
+    max_blocks = d[0, D_MAX_BLOCKS]
+    warp = d[0, D_WARP]
+    rug_seed = d[0, D_RUG_SEED]
+    rug_amp = d[0, D_RUG_AMP]
+
+    # Occupancy: resident blocks per SM under each resource limit.
+    occ_threads = jnp.floor(max_threads / jnp.maximum(tpb, 1.0))
+    occ_smem = jnp.floor(smem_sm / jnp.maximum(smem, 1.0))
+    occ_regs = jnp.floor(regs_sm / jnp.maximum(regs * tpb, 1.0))
+    occ_blocks = jnp.minimum(
+        jnp.minimum(occ_threads, occ_smem), jnp.minimum(occ_regs, max_blocks)
+    )
+
+    warp_ok = jnp.floor(tpb / warp) * warp == tpb
+    valid = (occ_blocks >= 1.0) & (tpb <= MAX_TPB) & (tpb >= warp) & warp_ok
+
+    occupancy = jnp.minimum(occ_blocks * tpb / max_threads, 1.0)
+
+    vec_bonus = 1.0 - 0.08 * jnp.abs(jnp.log2(jnp.maximum(vecw, 1.0)) - 1.5)
+    unroll_curve = 1.0 - 0.05 * jnp.abs(jnp.log2(jnp.maximum(unroll, 1.0)) - 2.0)
+    eff_compute = jnp.clip(
+        (0.45 + 0.55 * occupancy) * vec_bonus * unroll_curve, 0.05, 1.0
+    )
+    eff_memory = jnp.clip(
+        (0.55 + 0.45 * jnp.sqrt(occupancy))
+        * (0.6 + 0.4 * coal)
+        * (1.0 + 0.15 * cache),
+        0.05,
+        1.05,
+    )
+
+    t_compute = flops / (peak * eff_compute)
+    t_memory = bytes_rw / (bandwidth * eff_memory)
+
+    resident = jnp.maximum(occ_blocks * num_sm, 1.0)
+    waves = jnp.ceil(blocks / resident)
+    wave_penalty = waves * resident / jnp.maximum(blocks, 1.0)
+
+    u = hash_a * (1.0 - rug_seed) + hash_b * rug_seed
+    rugged = 1.0 + rug_amp * (2.0 * u - 1.0)
+
+    t = (
+        jnp.maximum(t_compute, t_memory) * wave_penalty * rugged
+        + LAUNCH_OVERHEAD * waves
+    )
+    o_ref[...] = jnp.where(valid, t, INVALID_TIME).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def predict_times(features, device, *, block_n=BLOCK_N):
+    """Batched device-model evaluation via pallas_call.
+
+    Args:
+      features: f32[N, NUM_FEATURES]; N must be a multiple of block_n
+        (the Rust runtime pads batches to the artifact's batch size).
+      device:   f32[NUM_DEVICE].
+
+    Returns:
+      f32[N] predicted times in seconds (INVALID_TIME for unlaunchable
+      configurations).
+    """
+    n = features.shape[0]
+    if n % block_n != 0:
+        raise ValueError(f"batch size {n} not a multiple of block_n={block_n}")
+    if features.shape[1] != NUM_FEATURES:
+        raise ValueError(f"expected {NUM_FEATURES} features, got {features.shape[1]}")
+    device2d = device.reshape(1, NUM_DEVICE).astype(jnp.float32)
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _perfmodel_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, NUM_FEATURES), lambda i: (i, 0)),
+            pl.BlockSpec((1, NUM_DEVICE), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,  # CPU-PJRT execution path; see module docstring
+    )(features.astype(jnp.float32), device2d)

@@ -1,0 +1,134 @@
+"""Pure-jnp oracle for the batched GPU performance model.
+
+This is the correctness reference for the Pallas kernel in perfmodel.py;
+pytest asserts the two agree to tight tolerance.  The Rust analytical
+model (rust/src/perfmodel/analytical.rs) implements the same arithmetic
+in f32 and is cross-checked against the AOT HLO artifacts at test time.
+
+The model combines the classic GPU occupancy calculation with a roofline
+time estimate, wave quantization, and a deterministic multiplicative
+"ruggedness" term derived from per-config hash features, producing
+discrete, constrained, rugged, device-dependent landscapes -- the search
+space properties that the paper's hyperparameter-tuning method relies on.
+"""
+
+import jax.numpy as jnp
+
+from ..contract import (
+    D_BW_GBS,
+    D_MAX_BLOCKS,
+    D_MAX_THREADS,
+    D_NUM_SM,
+    D_PEAK_GFLOPS,
+    D_REGS_SM,
+    D_RUG_AMP,
+    D_RUG_SEED,
+    D_SMEM_SM,
+    D_WARP,
+    F_BLOCKS,
+    F_BYTES,
+    F_CACHE,
+    F_COAL,
+    F_FLOPS,
+    F_HASH_A,
+    F_HASH_B,
+    F_REGS,
+    F_SMEM,
+    F_TPB,
+    F_UNROLL,
+    F_VECW,
+    INVALID_TIME,
+    LAUNCH_OVERHEAD,
+    MAX_TPB,
+)
+
+
+def predict_times(features, device):
+    """Predicted kernel execution time per configuration.
+
+    Args:
+      features: f32[N, NUM_FEATURES] per-configuration resource usage.
+      device:   f32[NUM_DEVICE] simulated GPU parameters.
+
+    Returns:
+      f32[N] predicted times in seconds; INVALID_TIME where the
+      configuration cannot launch on the device.
+    """
+    f = features.astype(jnp.float32)
+    d = device.astype(jnp.float32)
+
+    flops = f[:, F_FLOPS]
+    bytes_rw = f[:, F_BYTES]
+    tpb = f[:, F_TPB]
+    regs = f[:, F_REGS]
+    smem = f[:, F_SMEM]
+    blocks = f[:, F_BLOCKS]
+    vecw = f[:, F_VECW]
+    unroll = f[:, F_UNROLL]
+    coal = f[:, F_COAL]
+    cache = f[:, F_CACHE]
+    hash_a = f[:, F_HASH_A]
+    hash_b = f[:, F_HASH_B]
+
+    num_sm = d[D_NUM_SM]
+    peak = d[D_PEAK_GFLOPS] * 1.0e9
+    bandwidth = d[D_BW_GBS] * 1.0e9
+    max_threads = d[D_MAX_THREADS]
+    smem_sm = d[D_SMEM_SM]
+    regs_sm = d[D_REGS_SM]
+    max_blocks = d[D_MAX_BLOCKS]
+    warp = d[D_WARP]
+    rug_seed = d[D_RUG_SEED]
+    rug_amp = d[D_RUG_AMP]
+
+    # --- occupancy: resident blocks per SM, limited by each resource --------
+    occ_threads = jnp.floor(max_threads / jnp.maximum(tpb, 1.0))
+    occ_smem = jnp.floor(smem_sm / jnp.maximum(smem, 1.0))
+    occ_regs = jnp.floor(regs_sm / jnp.maximum(regs * tpb, 1.0))
+    occ_blocks = jnp.minimum(
+        jnp.minimum(occ_threads, occ_smem), jnp.minimum(occ_regs, max_blocks)
+    )
+
+    # --- launch validity -----------------------------------------------------
+    warp_ok = jnp.floor(tpb / warp) * warp == tpb
+    valid = (occ_blocks >= 1.0) & (tpb <= MAX_TPB) & (tpb >= warp) & warp_ok
+
+    occupancy = jnp.minimum(occ_blocks * tpb / max_threads, 1.0)
+
+    # --- efficiency curves -----------------------------------------------------
+    # Vector width: sweet spot around 2-4 lanes; log2(vecw) in {0,1,2,3}.
+    vec_bonus = 1.0 - 0.08 * jnp.abs(jnp.log2(jnp.maximum(vecw, 1.0)) - 1.5)
+    # Unrolling: diminishing returns past ~4x.
+    unroll_curve = 1.0 - 0.05 * jnp.abs(jnp.log2(jnp.maximum(unroll, 1.0)) - 2.0)
+    eff_compute = jnp.clip(
+        (0.45 + 0.55 * occupancy) * vec_bonus * unroll_curve, 0.05, 1.0
+    )
+    eff_memory = jnp.clip(
+        (0.55 + 0.45 * jnp.sqrt(occupancy))
+        * (0.6 + 0.4 * coal)
+        * (1.0 + 0.15 * cache),
+        0.05,
+        1.05,
+    )
+
+    # --- roofline ----------------------------------------------------------------
+    t_compute = flops / (peak * eff_compute)
+    t_memory = bytes_rw / (bandwidth * eff_memory)
+
+    # --- wave quantization ----------------------------------------------------
+    resident = jnp.maximum(occ_blocks * num_sm, 1.0)
+    waves = jnp.ceil(blocks / resident)
+    wave_penalty = waves * resident / jnp.maximum(blocks, 1.0)
+
+    # --- deterministic ruggedness ----------------------------------------------
+    # A device-seeded blend of two decorrelated per-config hashes: purely
+    # mul/add so Rust f32 and XLA f32 agree to ~1 ulp (no fract-of-large
+    # products that would amplify rounding differences).
+    u = hash_a * (1.0 - rug_seed) + hash_b * rug_seed
+    rugged = 1.0 + rug_amp * (2.0 * u - 1.0)
+
+    t = (
+        jnp.maximum(t_compute, t_memory) * wave_penalty * rugged
+        + LAUNCH_OVERHEAD * waves
+    )
+    return jnp.where(valid, t, INVALID_TIME).astype(jnp.float32)

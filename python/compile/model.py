@@ -1,0 +1,52 @@
+"""L2: the JAX compute graph around the L1 device-model kernel.
+
+The graph evaluated on the Rust hot path is `measure_batch`: the device
+model (Pallas, L1) plus the summary statistics the auto-tuner records per
+configuration.  Keeping the statistics inside the lowered module means the
+Rust side gets (mean, min, max) of the simulated repeated observations in
+one PJRT execution instead of post-processing on the coordinator thread.
+
+Noise is intentionally NOT part of the lowered module: observation noise
+must be reproducible per (space, config, repeat) from the Rust side's
+seeded RNG, so L3 owns it.  What the module adds on top of the raw kernel
+is the deterministic per-observation *systematic* spread (warmup drift),
+which is a pure function of the inputs.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .contract import NUM_DEVICE, NUM_FEATURES
+from .kernels import perfmodel
+
+
+def predict_batch(features, device):
+    """Bare device-model times: f32[N, F], f32[G] -> f32[N]."""
+    return perfmodel.predict_times(features, device)
+
+
+def measure_batch(features, device):
+    """Device model + the per-config summary the tuner records.
+
+    Returns a 3-tuple of f32[N]:
+      times  -- predicted 'true' kernel time per configuration
+      t_cold -- first-observation (cold/warmup) time: times * warmup drift
+      t_hot  -- steady-state best-case time: times * hot-cache factor
+
+    The cold/hot pair bounds the systematic part of the 32-observation
+    spread; L3 draws the stochastic part around it.
+    """
+    times = perfmodel.predict_times(features, device)
+    # Warmup drift: cold first run is 2-6% slower depending on the config
+    # hash (instruction-cache and clock-ramp effects are config-dependent).
+    drift = 1.02 + 0.04 * features[:, -1]
+    t_cold = times * drift
+    t_hot = times * 0.995
+    return times, t_cold, t_hot
+
+
+def lower_measure_batch(batch_size):
+    """Lower measure_batch for a fixed batch size; returns the jax Lowered."""
+    fspec = jax.ShapeDtypeStruct((batch_size, NUM_FEATURES), jnp.float32)
+    dspec = jax.ShapeDtypeStruct((NUM_DEVICE,), jnp.float32)
+    return jax.jit(measure_batch).lower(fspec, dspec)

@@ -1,0 +1,52 @@
+"""Shared fixtures: realistic random feature batches and device vectors."""
+
+import numpy as np
+import pytest
+
+from compile import contract
+
+
+def make_features(n, seed=0):
+    """Random but realistic configuration feature matrix f32[n, F]."""
+    rng = np.random.default_rng(seed)
+    f = np.zeros((n, contract.NUM_FEATURES), dtype=np.float32)
+    f[:, contract.F_FLOPS] = rng.uniform(1e8, 5e11, n)
+    f[:, contract.F_BYTES] = rng.uniform(1e7, 5e10, n)
+    f[:, contract.F_TPB] = rng.choice([32, 64, 96, 128, 256, 512, 1024], n)
+    f[:, contract.F_REGS] = rng.integers(16, 128, n)
+    f[:, contract.F_SMEM] = rng.choice([0, 1024, 4096, 16384, 49152], n)
+    f[:, contract.F_BLOCKS] = rng.integers(8, 65536, n)
+    f[:, contract.F_VECW] = rng.choice([1, 2, 4, 8], n)
+    f[:, contract.F_UNROLL] = rng.choice([1, 2, 4, 8, 16], n)
+    f[:, contract.F_COAL] = rng.uniform(0, 1, n)
+    f[:, contract.F_CACHE] = rng.uniform(0, 1, n)
+    f[:, contract.F_HASH_A] = rng.uniform(0, 1, n)
+    f[:, contract.F_HASH_B] = rng.uniform(0, 1, n)
+    return f
+
+
+def make_device(seed=0):
+    """A plausible GPU device vector f32[G]."""
+    rng = np.random.default_rng(seed + 1000)
+    d = np.zeros(contract.NUM_DEVICE, dtype=np.float32)
+    d[contract.D_NUM_SM] = rng.choice([28, 48, 84, 108, 110])
+    d[contract.D_PEAK_GFLOPS] = rng.uniform(5000, 40000)
+    d[contract.D_BW_GBS] = rng.uniform(200, 2000)
+    d[contract.D_MAX_THREADS] = rng.choice([1024, 1536, 2048])
+    d[contract.D_SMEM_SM] = rng.choice([65536, 102400, 167936])
+    d[contract.D_REGS_SM] = 65536
+    d[contract.D_MAX_BLOCKS] = rng.choice([16, 24, 32])
+    d[contract.D_WARP] = rng.choice([32, 64])
+    d[contract.D_RUG_SEED] = rng.uniform(0, 1)
+    d[contract.D_RUG_AMP] = 0.25
+    return d
+
+
+@pytest.fixture
+def features256():
+    return make_features(256, seed=42)
+
+
+@pytest.fixture
+def device():
+    return make_device(seed=3)

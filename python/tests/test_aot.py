@@ -1,0 +1,60 @@
+"""AOT pipeline tests: lowering, HLO text emission, contract metadata."""
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, contract, model
+
+from .conftest import make_device, make_features
+
+
+def test_contract_json_is_valid_and_complete():
+    doc = json.loads(aot.contract_json())
+    assert doc["version"] == contract.CONTRACT_VERSION
+    assert doc["num_features"] == contract.NUM_FEATURES
+    assert doc["num_device"] == contract.NUM_DEVICE
+    assert doc["outputs"] == ["times", "t_cold", "t_hot"]
+    idx = doc["indices"]
+    # Every F_*/D_* constant must be present with the right value.
+    for name, val in vars(contract).items():
+        if name.startswith(("F_", "D_")) and isinstance(val, int):
+            assert idx[name] == val, name
+    # Indices must be a proper permutation of their ranges.
+    fs = sorted(v for k, v in idx.items() if k.startswith("F_"))
+    ds = sorted(v for k, v in idx.items() if k.startswith("D_"))
+    assert fs == list(range(contract.NUM_FEATURES))
+    assert ds == list(range(contract.NUM_DEVICE))
+
+
+@pytest.mark.parametrize("n", [256, 1024])
+def test_hlo_text_emission(n):
+    lowered = model.lower_measure_batch(n)
+    text = aot.to_hlo_text(lowered)
+    # HLO text module with the expected entry shapes.
+    assert text.startswith("HloModule")
+    assert f"f32[{n},{contract.NUM_FEATURES}]" in text
+    assert f"f32[{contract.NUM_DEVICE}]" in text
+    # Three f32[n] outputs in a tuple.
+    assert text.count(f"f32[{n}]") >= 3
+    # No TPU custom-calls: the artifact must run on the CPU PJRT client.
+    assert "custom-call" not in text.lower() or "Mosaic" not in text
+
+
+def test_lowered_module_executes_like_eager():
+    n = 256
+    f = make_features(n, seed=1)
+    d = make_device(seed=1)
+    eager = model.measure_batch(f, d)
+    compiled = model.lower_measure_batch(n).compile()
+    aot_out = compiled(jnp.asarray(f), jnp.asarray(d))
+    for e, a in zip(eager, aot_out):
+        np.testing.assert_allclose(np.asarray(e), np.asarray(a), rtol=1e-6)
+
+
+def test_batch_sizes_cover_config():
+    # Every advertised batch size must lower cleanly.
+    for n in contract.BATCH_SIZES:
+        assert n % contract.BLOCK_N == 0, "artifact batches must tile evenly"

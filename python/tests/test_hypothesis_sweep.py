@@ -1,0 +1,112 @@
+"""Hypothesis sweeps: pallas kernel vs jnp oracle over generated inputs.
+
+Sweeps shapes and feature ranges beyond the 'realistic' fixture ranges to
+catch tile-boundary and degenerate-value bugs in the BlockSpec plumbing.
+"""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from hypothesis.extra import numpy as hnp
+
+from compile import contract
+from compile.kernels import perfmodel, ref
+
+def _f32(x):
+    """Round a bound to an exactly f32-representable value (hypothesis requires it)."""
+    return float(np.float32(x))
+
+
+FEATURE_RANGES = [
+    (1e6, 1e13),   # flops
+    (1e5, 1e12),   # bytes
+    (1.0, 2048.0),  # tpb (includes invalid > 1024)
+    (1.0, 256.0),  # regs
+    (0.0, 2e5),    # smem
+    (1.0, 1e6),    # blocks
+    (1.0, 8.0),    # vecw
+    (1.0, 16.0),   # unroll
+    (0.0, 1.0),    # coal
+    (0.0, 1.0),    # cache
+    (0.0, 1.0),    # hash_a
+    (0.0, 1.0),    # hash_b
+]
+
+DEVICE_RANGES = [
+    (1.0, 256.0),      # num_sm
+    (100.0, 1e5),      # peak gflops
+    (10.0, 4000.0),    # bw
+    (256.0, 4096.0),   # max threads / sm
+    (1e4, 3e5),        # smem / sm
+    (1e4, 3e5),        # regs / sm
+    (1.0, 64.0),       # max blocks
+    (32.0, 64.0),      # warp
+    (0.0, 1.0),        # rug seed
+    (0.0, 0.5),        # rug amp
+]
+
+
+@st.composite
+def feature_batches(draw):
+    n_tiles = draw(st.integers(min_value=1, max_value=6))
+    n = n_tiles * contract.BLOCK_N
+    cols = []
+    for lo, hi in FEATURE_RANGES:
+        cols.append(
+            draw(
+                hnp.arrays(
+                    np.float32,
+                    (n,),
+                    elements=st.floats(
+                        _f32(lo),
+                        _f32(hi),
+                        allow_nan=False,
+                        allow_infinity=False,
+                        width=32,
+                    ),
+                )
+            )
+        )
+    return np.stack(cols, axis=1)
+
+
+@st.composite
+def devices(draw):
+    vals = []
+    for lo, hi in DEVICE_RANGES:
+        vals.append(
+            draw(
+                st.floats(
+                    _f32(lo), _f32(hi), allow_nan=False, allow_infinity=False, width=32
+                )
+            )
+        )
+    return np.asarray(vals, dtype=np.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(f=feature_batches(), d=devices())
+def test_pallas_matches_ref_everywhere(f, d):
+    got = np.asarray(perfmodel.predict_times(f, d))
+    want = np.asarray(ref.predict_times(f, d))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-9)
+
+
+@settings(max_examples=25, deadline=None)
+@given(f=feature_batches(), d=devices())
+def test_output_domain(f, d):
+    """Every output is either the invalid sentinel or a positive finite time."""
+    got = np.asarray(perfmodel.predict_times(f, d))
+    sentinel = got == contract.INVALID_TIME
+    assert np.all(np.isfinite(got))
+    assert np.all(got[~sentinel] > 0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(f=feature_batches(), d=devices())
+def test_permutation_equivariance(f, d):
+    """The model is elementwise over configs: permuting rows permutes outputs."""
+    perm = np.random.default_rng(0).permutation(f.shape[0])
+    a = np.asarray(perfmodel.predict_times(f, d))
+    b = np.asarray(perfmodel.predict_times(f[perm], d))
+    np.testing.assert_allclose(b, a[perm], rtol=1e-6)

@@ -1,0 +1,75 @@
+"""Pallas kernel vs pure-jnp oracle: the core L1 correctness signal."""
+
+import numpy as np
+import pytest
+
+from compile import contract
+from compile.kernels import perfmodel, ref
+
+from .conftest import make_device, make_features
+
+
+@pytest.mark.parametrize("n", [256, 512, 1024, 4096])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_pallas_matches_ref(n, seed):
+    f = make_features(n, seed=seed)
+    d = make_device(seed=seed)
+    got = np.asarray(perfmodel.predict_times(f, d))
+    want = np.asarray(ref.predict_times(f, d))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-9)
+
+
+@pytest.mark.parametrize("block_n", [64, 128, 256])
+def test_block_size_invariance(block_n):
+    """The BlockSpec tiling must not change the numerics."""
+    f = make_features(512, seed=7)
+    d = make_device(seed=7)
+    base = np.asarray(perfmodel.predict_times(f, d, block_n=256))
+    got = np.asarray(perfmodel.predict_times(f, d, block_n=block_n))
+    np.testing.assert_allclose(got, base, rtol=1e-6)
+
+
+def test_rejects_misaligned_batch():
+    f = make_features(300, seed=0)
+    d = make_device(seed=0)
+    with pytest.raises(ValueError, match="multiple of block_n"):
+        perfmodel.predict_times(f, d)
+
+
+def test_rejects_wrong_feature_count():
+    f = make_features(256, seed=0)[:, :-1]
+    d = make_device(seed=0)
+    with pytest.raises(ValueError, match="features"):
+        perfmodel.predict_times(f, d)
+
+
+def test_invalid_configs_get_sentinel(device):
+    f = make_features(256, seed=5)
+    # threads-per-block over the hardware limit -> launch failure
+    f[:8, contract.F_TPB] = 2048
+    # smem over any per-SM budget -> zero resident blocks
+    f[8:16, contract.F_SMEM] = 1e9
+    got = np.asarray(perfmodel.predict_times(f, device))
+    assert np.all(got[:16] == contract.INVALID_TIME)
+
+
+def test_warp_divisibility(device):
+    f = make_features(256, seed=6)
+    warp = device[contract.D_WARP]
+    f[:, contract.F_TPB] = warp * 3 + 1  # not warp-divisible
+    got = np.asarray(perfmodel.predict_times(f, device))
+    assert np.all(got == contract.INVALID_TIME)
+
+
+def test_valid_configs_finite_positive(features256, device):
+    got = np.asarray(perfmodel.predict_times(features256, device))
+    valid = got != contract.INVALID_TIME
+    assert valid.sum() > 0
+    assert np.all(got[valid] > 0)
+    assert np.all(np.isfinite(got[valid]))
+
+
+def test_deterministic(features256, device):
+    a = np.asarray(perfmodel.predict_times(features256, device))
+    b = np.asarray(perfmodel.predict_times(features256, device))
+    np.testing.assert_array_equal(a, b)

@@ -1,0 +1,128 @@
+"""Model-level properties of the device performance model (L2).
+
+These pin down the *behavioural* contract the Rust coordinator relies on:
+roofline monotonicity, device scaling, ruggedness bounds, and the shape of
+the measure_batch outputs.
+"""
+
+import numpy as np
+import pytest
+
+from compile import contract, model
+from compile.kernels import ref
+
+from .conftest import make_device, make_features
+
+
+def _set(f, col, val):
+    g = f.copy()
+    g[:, col] = val
+    return g
+
+
+def test_measure_batch_outputs(features256, device):
+    times, t_cold, t_hot = model.measure_batch(features256, device)
+    times, t_cold, t_hot = map(np.asarray, (times, t_cold, t_hot))
+    valid = times != contract.INVALID_TIME
+    assert valid.any()
+    # cold >= true >= hot on the valid set
+    assert np.all(t_cold[valid] >= times[valid])
+    assert np.all(t_hot[valid] <= times[valid])
+    # warmup drift bounded to [2%, 6%]
+    drift = t_cold[valid] / times[valid]
+    assert np.all(drift >= 1.02 - 1e-6) and np.all(drift <= 1.06 + 1e-6)
+
+
+def test_more_flops_never_faster(device):
+    f = make_features(256, seed=11)
+    lo = np.asarray(ref.predict_times(_set(f, contract.F_FLOPS, 1e10), device))
+    hi = np.asarray(ref.predict_times(_set(f, contract.F_FLOPS, 2e10), device))
+    valid = lo != contract.INVALID_TIME
+    assert np.all(hi[valid] >= lo[valid] - 1e-12)
+
+
+def test_more_bytes_never_faster(device):
+    f = make_features(256, seed=12)
+    lo = np.asarray(ref.predict_times(_set(f, contract.F_BYTES, 1e9), device))
+    hi = np.asarray(ref.predict_times(_set(f, contract.F_BYTES, 4e9), device))
+    valid = lo != contract.INVALID_TIME
+    assert np.all(hi[valid] >= lo[valid] - 1e-12)
+
+
+def test_bandwidth_scaling_helps_memory_bound(device):
+    f = make_features(256, seed=13)
+    f = _set(f, contract.F_FLOPS, 1e8)   # negligible compute
+    f = _set(f, contract.F_BYTES, 1e10)  # heavy traffic -> memory bound
+    d2 = device.copy()
+    d2[contract.D_BW_GBS] *= 2
+    base = np.asarray(ref.predict_times(f, device))
+    fast = np.asarray(ref.predict_times(f, d2))
+    valid = base != contract.INVALID_TIME
+    assert np.all(fast[valid] < base[valid])
+
+
+def test_peak_scaling_helps_compute_bound(device):
+    f = make_features(256, seed=14)
+    f = _set(f, contract.F_FLOPS, 1e12)
+    f = _set(f, contract.F_BYTES, 1e7)
+    d2 = device.copy()
+    d2[contract.D_PEAK_GFLOPS] *= 2
+    base = np.asarray(ref.predict_times(f, device))
+    fast = np.asarray(ref.predict_times(f, d2))
+    valid = base != contract.INVALID_TIME
+    assert np.all(fast[valid] < base[valid])
+
+
+def test_ruggedness_bounded(device):
+    """Rugged factor must stay within 1 +- rug_amp of the smooth model."""
+    f = make_features(512, seed=15)
+    smooth_dev = device.copy()
+    smooth_dev[contract.D_RUG_AMP] = 0.0
+    rough = np.asarray(ref.predict_times(f, device))
+    smooth = np.asarray(ref.predict_times(f, smooth_dev))
+    valid = smooth != contract.INVALID_TIME
+    amp = device[contract.D_RUG_AMP]
+    # subtract the launch-overhead floor before comparing ratios
+    ratio = rough[valid] / smooth[valid]
+    assert np.all(ratio <= 1 + amp + 0.05)
+    assert np.all(ratio >= 1 - amp - 0.05)
+
+
+def test_device_dependent_landscapes():
+    """Different rug_seed must reorder configs (device-specific optima)."""
+    f = make_features(1024, seed=16)
+    d1 = make_device(seed=1)
+    d2 = d1.copy()
+    d2[contract.D_RUG_SEED] = (d1[contract.D_RUG_SEED] + 0.5) % 1.0
+    t1 = np.asarray(ref.predict_times(f, d1))
+    t2 = np.asarray(ref.predict_times(f, d2))
+    valid = t1 != contract.INVALID_TIME
+    r1 = np.argsort(t1[valid])
+    r2 = np.argsort(t2[valid])
+    assert not np.array_equal(r1, r2)
+
+
+def test_occupancy_affects_time(device):
+    """Squeezing occupancy via smem must not speed things up."""
+    f = make_features(256, seed=17)
+    lo = np.asarray(ref.predict_times(_set(f, contract.F_SMEM, 1024), device))
+    hi = np.asarray(ref.predict_times(_set(f, contract.F_SMEM, 49152), device))
+    both = (lo != contract.INVALID_TIME) & (hi != contract.INVALID_TIME)
+    assert both.any()
+    assert np.mean(hi[both] >= lo[both] - 1e-12) > 0.95
+
+
+def test_lowering_shapes():
+    lowered = model.lower_measure_batch(256)
+    text = lowered.as_text()
+    assert "256" in text
+
+
+@pytest.fixture
+def features256():
+    return make_features(256, seed=42)
+
+
+@pytest.fixture
+def device():
+    return make_device(seed=3)

@@ -1,0 +1,197 @@
+//! Benchmark harness (`cargo bench`). Criterion is unavailable offline, so
+//! this is a small self-contained harness: adaptive iteration count,
+//! warmup, mean ± stddev, and a throughput column where meaningful.
+//!
+//! Groups:
+//!   space      — search-space enumeration per kernel (constraint engine)
+//!   engine     — batched device-model evaluation, PJRT vs native (L1/L2)
+//!   sim        — simulation-mode replay rate (the paper's feasibility core)
+//!   baseline   — methodology baseline/budget computation per space
+//!   optimizer  — optimizer stepping rate in simulation mode
+//!   bruteforce — full-space brute-force (Table II regeneration cost)
+//!   hypertune  — one exhaustive campaign + meta-level scoring (Tables III/IV,
+//!                Figs 2-9 building block)
+//!
+//! Filter with `cargo bench -- <substring>`.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use tunetuner::dataset::{bruteforce, hub::Hub};
+use tunetuner::gpu::specs::{all_devices, A100};
+use tunetuner::hypertuning;
+use tunetuner::kernels;
+use tunetuner::methodology::{evaluate_algorithm, SpaceEval};
+use tunetuner::optimizers::{self, HyperParams};
+use tunetuner::perfmodel::NoiseModel;
+use tunetuner::runner::{Budget, LiveRunner, SimulationRunner, Tuning};
+use tunetuner::runtime::Engine;
+use tunetuner::util::rng::Rng;
+
+struct Bench {
+    filter: Option<String>,
+}
+
+impl Bench {
+    /// Time `f` adaptively: enough iterations to pass ~0.4s, after warmup.
+    fn run<R>(&self, name: &str, mut f: impl FnMut() -> R) -> Option<Duration> {
+        if let Some(filter) = &self.filter {
+            if !name.contains(filter.as_str()) {
+                return None;
+            }
+        }
+        // Warmup + calibration.
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let once = t0.elapsed().max(Duration::from_nanos(50));
+        let iters = (Duration::from_millis(400).as_nanos() / once.as_nanos()).clamp(1, 10_000)
+            as usize;
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let var = samples
+            .iter()
+            .map(|s| (s - mean) * (s - mean))
+            .sum::<f64>()
+            / samples.len() as f64;
+        println!(
+            "{name:<46} {:>12}  ±{:>5.1}%  ({} iters)",
+            fmt_time(mean),
+            (var.sqrt() / mean * 100.0).min(999.0),
+            samples.len()
+        );
+        Some(Duration::from_secs_f64(mean))
+    }
+
+    fn throughput(&self, name: &str, items: usize, mut f: impl FnMut()) {
+        if let Some(d) = self.run(name, &mut f) {
+            println!(
+                "{:<46} {:>12.0} items/s",
+                format!("  -> {name}"),
+                items as f64 / d.as_secs_f64()
+            );
+        }
+    }
+}
+
+fn fmt_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else {
+        format!("{:.3} us", secs * 1e6)
+    }
+}
+
+fn main() {
+    // `cargo bench -- <filter>` (skip the --bench flag cargo passes).
+    let filter = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with("--"))
+        .map(|s| s.to_string());
+    let b = Bench { filter };
+    println!("{:-^78}", " tunetuner benchmarks ");
+
+    // ---- space: enumeration ---------------------------------------------------
+    for name in ["synthetic", "hotspot", "dedispersion", "convolution", "gemm"] {
+        b.run(&format!("space/build/{name}"), || {
+            kernels::kernel_by_name(name).unwrap().space().len()
+        });
+    }
+
+    // ---- engine: batched device-model evaluation --------------------------------
+    let kernel = kernels::kernel_by_name("gemm").unwrap();
+    let feats = kernel.all_features();
+    let dvec = A100.to_vector();
+    let native = Engine::native();
+    b.throughput(&format!("engine/native/batch{}", feats.len()), feats.len(), || {
+        native.measure(&feats, &dvec).unwrap();
+    });
+    match Engine::pjrt(&Engine::default_artifacts_dir()) {
+        Ok(pjrt) => {
+            b.throughput(&format!("engine/pjrt/batch{}", feats.len()), feats.len(), || {
+                pjrt.measure(&feats, &dvec).unwrap();
+            });
+            let small = &feats[..256];
+            b.throughput("engine/pjrt/batch256", 256, || {
+                pjrt.measure(small, &dvec).unwrap();
+            });
+        }
+        Err(e) => println!("engine/pjrt SKIPPED ({e})"),
+    }
+
+    // ---- bruteforce --------------------------------------------------------------
+    let engine = Arc::new(Engine::auto(&Engine::default_artifacts_dir()));
+    b.run("bruteforce/gemm@A100(6728cfg x 32obs)", || {
+        let mut live = LiveRunner::new(
+            kernels::kernel_by_name("gemm").unwrap(),
+            &A100,
+            Arc::clone(&engine),
+            NoiseModel::default(),
+            42,
+        );
+        bruteforce::bruteforce(&mut live).unwrap().records.len()
+    });
+
+    // ---- shared hub-backed setup for sim/optimizer/hypertune benches --------------
+    let hub = Hub::new(Hub::default_root());
+    if !hub.exists("gemm", "A100") {
+        println!("(hub missing: run `tunetuner bruteforce` first for sim benches)");
+        println!("{:-^78}", " done ");
+        return;
+    }
+    let cache = hub.load("gemm", "A100").unwrap();
+    let space = kernel.space_arc();
+
+    // ---- sim: replay rate -----------------------------------------------------------
+    let n = space.len();
+    b.throughput("sim/replay/sequential-10k", 10_000, || {
+        let mut sim = SimulationRunner::new_unchecked(Arc::clone(&space), Arc::clone(&cache));
+        let mut tuning = Tuning::new(&mut sim, Budget::evals(usize::MAX));
+        for i in 0..10_000usize {
+            tuning.eval(i % n);
+        }
+    });
+
+    // ---- baseline ------------------------------------------------------------------
+    b.run("baseline/SpaceEval::new/gemm@A100", || {
+        SpaceEval::new(Arc::clone(&space), Arc::clone(&cache), 0.95, 50).budget_seconds
+    });
+
+    // ---- optimizer stepping rate ------------------------------------------------------
+    for algo in optimizers::optimizer_names() {
+        b.throughput(&format!("optimizer/{algo}/500-evals"), 500, || {
+            let mut sim =
+                SimulationRunner::new_unchecked(Arc::clone(&space), Arc::clone(&cache));
+            let mut tuning = Tuning::new(&mut sim, Budget::evals(500));
+            let opt = optimizers::create(algo, &HyperParams::new()).unwrap();
+            opt.run(&mut tuning, &mut Rng::new(3));
+        });
+    }
+
+    // ---- hypertune building blocks ------------------------------------------------------
+    let devices: Vec<&str> = all_devices().iter().map(|d| d.name).collect();
+    if devices.iter().all(|d| hub.exists("gemm", d)) {
+        let evals: Vec<SpaceEval> = devices
+            .iter()
+            .map(|d| SpaceEval::new(Arc::clone(&space), hub.load("gemm", d).unwrap(), 0.95, 30))
+            .collect();
+        b.run("hypertune/evaluate_algorithm(ga,6sp,5rep)", || {
+            evaluate_algorithm("genetic_algorithm", &HyperParams::new(), &evals, 5, 7)
+                .unwrap()
+                .score
+        });
+        b.run("hypertune/exhaustive(da,8cfg,6sp,3rep)", || {
+            let hp_space = hypertuning::limited_space("dual_annealing").unwrap();
+            hypertuning::exhaustive_tuning("dual_annealing", &hp_space, "limited", &evals, 3, 1)
+                .unwrap()
+                .best()
+                .score
+        });
+    }
+    println!("{:-^78}", " done ");
+}

@@ -1,0 +1,355 @@
+//! The brute-force cache file: the unit of the benchmark hub.
+//!
+//! Schema (T4-flavored, one JSON document per (kernel, device) pair):
+//!
+//! ```json
+//! {
+//!   "schema": "tunetuner-T4", "schema_version": 1,
+//!   "kernel": "gemm", "device": "A100", "problem": "...",
+//!   "space_seed": 1234, "observations_per_config": 32,
+//!   "bruteforce_seconds": 160922.5,
+//!   "param_names": ["MWG", ...],
+//!   "configs": [
+//!     {"key": "16,16,...", "avg": 0.0123, "valid": true,
+//!      "compile_time": 3.2, "obs": [ ... 32 raw values ... ]},
+//!     ...
+//!   ]
+//! }
+//! ```
+//!
+//! Configs are stored in search-space index order; loading verifies the
+//! keys against a freshly built space so that an out-of-date cache fails
+//! loudly instead of replaying the wrong values.
+
+use crate::runner::EvalResult;
+use crate::searchspace::SearchSpace;
+use crate::util::compress;
+use crate::util::json::{self, Json};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// One configuration's brute-force record.
+#[derive(Clone, Debug)]
+pub struct ConfigRecord {
+    pub key: String,
+    /// Mean observation; INFINITY for invalid configs.
+    pub value: f64,
+    pub observations: Vec<f64>,
+    pub compile_time: f64,
+    pub valid: bool,
+}
+
+impl ConfigRecord {
+    pub fn from_eval(key: String, r: &EvalResult) -> ConfigRecord {
+        ConfigRecord {
+            key,
+            value: r.value,
+            observations: r.observations.clone(),
+            compile_time: r.compile_time,
+            valid: r.valid,
+        }
+    }
+
+    /// Simulated seconds an evaluation of this record costs.
+    pub fn total_cost(&self, overhead: f64) -> f64 {
+        self.compile_time + self.observations.iter().sum::<f64>() + overhead
+    }
+}
+
+/// A fully brute-forced search space.
+#[derive(Clone, Debug)]
+pub struct CacheData {
+    pub kernel: String,
+    pub device: String,
+    pub problem: String,
+    pub space_seed: u64,
+    pub observations_per_config: usize,
+    /// Simulated device-seconds the brute-force took (Table II).
+    pub bruteforce_seconds: f64,
+    pub param_names: Vec<String>,
+    /// Index-aligned with the search space.
+    pub records: Vec<ConfigRecord>,
+}
+
+impl CacheData {
+    /// Sorted mean values of the valid configurations (ascending).
+    pub fn sorted_valid_values(&self) -> Vec<f64> {
+        let mut v: Vec<f64> = self
+            .records
+            .iter()
+            .filter(|r| r.valid)
+            .map(|r| r.value)
+            .collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v
+    }
+
+    /// The known optimum (lowest mean).
+    pub fn optimum(&self) -> f64 {
+        self.records
+            .iter()
+            .filter(|r| r.valid)
+            .map(|r| r.value)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Index of the optimal configuration.
+    pub fn optimum_index(&self) -> usize {
+        let mut best = 0;
+        let mut bv = f64::INFINITY;
+        for (i, r) in self.records.iter().enumerate() {
+            if r.valid && r.value < bv {
+                bv = r.value;
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Mean evaluation cost in simulated seconds (used for the baseline
+    /// time axis); invalid configs cost compile + overhead only.
+    pub fn mean_eval_cost(&self, overhead: f64) -> f64 {
+        let total: f64 = self.records.iter().map(|r| r.total_cost(overhead)).sum();
+        total / self.records.len() as f64
+    }
+
+    /// Fraction of configurations that launch.
+    pub fn valid_fraction(&self) -> f64 {
+        self.records.iter().filter(|r| r.valid).count() as f64 / self.records.len() as f64
+    }
+
+    // -- JSON (de)serialization -------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let configs: Vec<Json> = self
+            .records
+            .iter()
+            .map(|r| {
+                let mut o = Json::obj();
+                o.set("key", r.key.as_str().into())
+                    .set("valid", r.valid.into())
+                    .set("compile_time", r.compile_time.into());
+                if r.valid {
+                    o.set("avg", r.value.into()).set(
+                        "obs",
+                        Json::Arr(r.observations.iter().map(|&x| Json::Num(x)).collect()),
+                    );
+                } else {
+                    // JSON has no INFINITY; invalid configs carry no values.
+                    o.set("avg", Json::Null).set("obs", Json::Arr(vec![]));
+                }
+                o
+            })
+            .collect();
+        let mut j = Json::obj();
+        j.set("schema", "tunetuner-T4".into())
+            .set("schema_version", 1usize.into())
+            .set("kernel", self.kernel.as_str().into())
+            .set("device", self.device.as_str().into())
+            .set("problem", self.problem.as_str().into())
+            .set("space_seed", (self.space_seed as f64).into())
+            .set(
+                "observations_per_config",
+                self.observations_per_config.into(),
+            )
+            .set("bruteforce_seconds", self.bruteforce_seconds.into())
+            .set(
+                "param_names",
+                Json::Arr(
+                    self.param_names
+                        .iter()
+                        .map(|n| Json::Str(n.clone()))
+                        .collect(),
+                ),
+            )
+            .set("configs", Json::Arr(configs));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<CacheData> {
+        let str_field = |k: &str| -> Result<String> {
+            Ok(j.get(k)
+                .and_then(|v| v.as_str())
+                .with_context(|| format!("cache missing {k:?}"))?
+                .to_string())
+        };
+        if str_field("schema")? != "tunetuner-T4" {
+            bail!("not a tunetuner-T4 cache file");
+        }
+        let num_field = |k: &str| -> Result<f64> {
+            j.get(k)
+                .and_then(|v| v.as_f64())
+                .with_context(|| format!("cache missing {k:?}"))
+        };
+        let param_names = j
+            .get("param_names")
+            .and_then(|v| v.as_arr())
+            .context("missing param_names")?
+            .iter()
+            .map(|v| v.as_str().unwrap_or_default().to_string())
+            .collect();
+        let mut records = Vec::new();
+        for c in j
+            .get("configs")
+            .and_then(|v| v.as_arr())
+            .context("missing configs")?
+        {
+            let valid = c.get("valid").and_then(|v| v.as_bool()).unwrap_or(false);
+            let observations: Vec<f64> = c
+                .get("obs")
+                .and_then(|v| v.as_arr())
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|x| x.as_f64())
+                .collect();
+            records.push(ConfigRecord {
+                key: c
+                    .get("key")
+                    .and_then(|v| v.as_str())
+                    .context("config missing key")?
+                    .to_string(),
+                value: if valid {
+                    c.get("avg")
+                        .and_then(|v| v.as_f64())
+                        .context("valid config missing avg")?
+                } else {
+                    f64::INFINITY
+                },
+                observations,
+                compile_time: c
+                    .get("compile_time")
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(0.0),
+                valid,
+            });
+        }
+        Ok(CacheData {
+            kernel: str_field("kernel")?,
+            device: str_field("device")?,
+            problem: str_field("problem")?,
+            space_seed: num_field("space_seed")? as u64,
+            observations_per_config: num_field("observations_per_config")? as usize,
+            bruteforce_seconds: num_field("bruteforce_seconds")?,
+            param_names,
+            records,
+        })
+    }
+
+    /// Save (gzip if path ends in .gz).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        compress::write_string(path, &self.to_json().to_string())
+    }
+
+    /// Load and parse.
+    pub fn load(path: &Path) -> Result<CacheData> {
+        let text = compress::read_string(path)?;
+        CacheData::from_json(&json::parse(&text).context("parse cache JSON")?)
+    }
+
+    /// Verify this cache is index-aligned with a search space.
+    pub fn verify_against(&self, space: &SearchSpace) -> Result<()> {
+        if self.records.len() != space.len() {
+            bail!(
+                "cache has {} configs but space {} has {}",
+                self.records.len(),
+                space.name,
+                space.len()
+            );
+        }
+        // Spot-check keys (full check is O(n) string builds; sample).
+        let n = space.len();
+        for idx in [0, n / 3, n / 2, n - 1] {
+            if self.records[idx].key != space.key(idx) {
+                bail!(
+                    "cache/space key mismatch at {idx}: {} vs {}",
+                    self.records[idx].key,
+                    space.key(idx)
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_cache() -> CacheData {
+        CacheData {
+            kernel: "synthetic".into(),
+            device: "A100".into(),
+            problem: "test".into(),
+            space_seed: 99,
+            observations_per_config: 3,
+            bruteforce_seconds: 1234.5,
+            param_names: vec!["a".into(), "b".into()],
+            records: vec![
+                ConfigRecord {
+                    key: "1,1".into(),
+                    value: 0.5,
+                    observations: vec![0.4, 0.5, 0.6],
+                    compile_time: 2.0,
+                    valid: true,
+                },
+                ConfigRecord {
+                    key: "1,2".into(),
+                    value: f64::INFINITY,
+                    observations: vec![],
+                    compile_time: 3.0,
+                    valid: false,
+                },
+                ConfigRecord {
+                    key: "2,1".into(),
+                    value: 0.25,
+                    observations: vec![0.2, 0.25, 0.3],
+                    compile_time: 1.5,
+                    valid: true,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = sample_cache();
+        let j = c.to_json();
+        let back = CacheData::from_json(&j).unwrap();
+        assert_eq!(back.kernel, "synthetic");
+        assert_eq!(back.records.len(), 3);
+        assert_eq!(back.records[0].observations, vec![0.4, 0.5, 0.6]);
+        assert!(!back.records[1].valid);
+        assert!(back.records[1].value.is_infinite());
+        assert_eq!(back.bruteforce_seconds, 1234.5);
+        assert_eq!(back.space_seed, 99);
+    }
+
+    #[test]
+    fn file_roundtrip_gz() {
+        let dir = std::env::temp_dir().join(format!("tt_cache_{}", std::process::id()));
+        let path = dir.join("x.json.gz");
+        let c = sample_cache();
+        c.save(&path).unwrap();
+        let back = CacheData::load(&path).unwrap();
+        assert_eq!(back.records[2].value, 0.25);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stats_helpers() {
+        let c = sample_cache();
+        assert_eq!(c.optimum(), 0.25);
+        assert_eq!(c.optimum_index(), 2);
+        assert_eq!(c.sorted_valid_values(), vec![0.25, 0.5]);
+        assert!((c.valid_fraction() - 2.0 / 3.0).abs() < 1e-12);
+        // mean cost: (2+1.5) + (3) compile + obs sums (1.5 + 0.75) + 3*oh
+        let cost = c.mean_eval_cost(0.1);
+        assert!((cost - (2.0 + 1.5 + 3.0 + 1.5 + 0.75 + 0.3) / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_wrong_schema() {
+        let j = json::parse(r#"{"schema": "other"}"#).unwrap();
+        assert!(CacheData::from_json(&j).is_err());
+    }
+}

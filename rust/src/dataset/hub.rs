@@ -1,0 +1,232 @@
+//! The on-disk benchmark hub.
+//!
+//! Layout (mirroring the paper's community hub):
+//!
+//! ```text
+//! hub/
+//!   index.json                 # dataset metadata + per-space summary
+//!   <kernel>/
+//!     t1.json                  # T1-style input description
+//!     <DEVICE>.json.gz         # T4-style brute-force cache (compressed)
+//! ```
+//!
+//! `Hub::ensure` builds missing caches (in parallel across spaces) and
+//! `Hub::load` serves them with an in-memory memo so experiments touching
+//! the same space repeatedly don't re-read or re-parse.
+
+use super::bruteforce;
+use super::cache::CacheData;
+use super::t1;
+use crate::gpu::specs::{all_devices, device_by_name, DeviceModel};
+use crate::kernels::{self, Kernel};
+use crate::perfmodel::NoiseModel;
+use crate::runner::LiveRunner;
+use crate::runtime::Engine;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// Default seed for the published dataset.
+pub const HUB_SEED: u64 = 0xFA1B;
+
+/// The four paper kernels in hub order.
+pub const HUB_KERNELS: [&str; 4] = ["dedispersion", "convolution", "hotspot", "gemm"];
+
+/// A handle to a hub directory.
+pub struct Hub {
+    root: PathBuf,
+    memo: Mutex<HashMap<(String, String), Arc<CacheData>>>,
+}
+
+impl Hub {
+    pub fn new<P: Into<PathBuf>>(root: P) -> Hub {
+        Hub {
+            root: root.into(),
+            memo: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Default hub directory: `$TUNETUNER_HUB` or `./hub`.
+    pub fn default_root() -> PathBuf {
+        std::env::var("TUNETUNER_HUB")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("hub"))
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn cache_path(&self, kernel: &str, device: &str) -> PathBuf {
+        self.root.join(kernel).join(format!("{device}.json.gz"))
+    }
+
+    pub fn exists(&self, kernel: &str, device: &str) -> bool {
+        self.cache_path(kernel, device).exists()
+    }
+
+    /// Load a cache (memoized); verifies alignment with the kernel space.
+    pub fn load(&self, kernel: &str, device: &str) -> Result<Arc<CacheData>> {
+        let key = (kernel.to_string(), device.to_string());
+        if let Some(c) = self.memo.lock().unwrap().get(&key) {
+            return Ok(Arc::clone(c));
+        }
+        let path = self.cache_path(kernel, device);
+        let data = Arc::new(CacheData::load(&path).with_context(|| {
+            format!(
+                "load hub cache {} (build it with `tunetuner bruteforce`)",
+                path.display()
+            )
+        })?);
+        self.memo.lock().unwrap().insert(key, Arc::clone(&data));
+        Ok(data)
+    }
+
+    /// Brute-force one (kernel, device) space and store it.
+    pub fn build_one(
+        &self,
+        kernel: &Kernel,
+        device: &DeviceModel,
+        engine: Arc<Engine>,
+        seed: u64,
+    ) -> Result<Arc<CacheData>> {
+        let mut runner = LiveRunner::new(
+            kernels::kernel_by_name(kernel.name)?,
+            device,
+            engine,
+            NoiseModel::default(),
+            seed,
+        );
+        let cache = Arc::new(bruteforce::bruteforce(&mut runner)?);
+        cache.save(&self.cache_path(kernel.name, device.name))?;
+        t1::write_t1(kernel, &self.root.join(kernel.name).join("t1.json"))?;
+        self.memo.lock().unwrap().insert(
+            (kernel.name.to_string(), device.name.to_string()),
+            Arc::clone(&cache),
+        );
+        Ok(cache)
+    }
+
+    /// Ensure every (kernel × device) cache exists, building missing ones
+    /// in parallel. Returns (kernel, device, bruteforce_seconds) for all.
+    pub fn ensure(
+        &self,
+        kernels_list: &[&str],
+        devices_list: &[&str],
+        engine: Arc<Engine>,
+        seed: u64,
+    ) -> Result<Vec<(String, String, f64)>> {
+        let mut missing = Vec::new();
+        for k in kernels_list {
+            for d in devices_list {
+                if !self.exists(k, d) {
+                    missing.push((k.to_string(), d.to_string()));
+                }
+            }
+        }
+        if !missing.is_empty() {
+            crate::log_info!("hub: building {} missing spaces", missing.len());
+            let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
+            std::thread::scope(|scope| {
+                for (k, d) in &missing {
+                    let engine = Arc::clone(&engine);
+                    let errors = &errors;
+                    let this = &self;
+                    scope.spawn(move || {
+                        let go = || -> Result<()> {
+                            let kernel = kernels::kernel_by_name(k)?;
+                            let device = device_by_name(d)
+                                .with_context(|| format!("unknown device {d}"))?;
+                            let c = this.build_one(&kernel, &device, engine, seed)?;
+                            crate::log_info!(
+                                "hub: {k}@{d}: {} configs, {:.1} simulated hours",
+                                c.records.len(),
+                                c.bruteforce_seconds / 3600.0
+                            );
+                            Ok(())
+                        };
+                        if let Err(e) = go() {
+                            errors.lock().unwrap().push(format!("{k}@{d}: {e:#}"));
+                        }
+                    });
+                }
+            });
+            let errs = errors.into_inner().unwrap();
+            if !errs.is_empty() {
+                anyhow::bail!("hub build failures: {}", errs.join("; "));
+            }
+        }
+        let mut out = Vec::new();
+        for k in kernels_list {
+            for d in devices_list {
+                let c = self.load(k, d)?;
+                out.push((k.to_string(), d.to_string(), c.bruteforce_seconds));
+            }
+        }
+        self.write_index(&out)?;
+        Ok(out)
+    }
+
+    /// Ensure the full 24-space paper dataset.
+    pub fn ensure_all(&self, engine: Arc<Engine>, seed: u64) -> Result<Vec<(String, String, f64)>> {
+        let devices: Vec<&str> = all_devices().iter().map(|d| d.name).collect();
+        self.ensure(&HUB_KERNELS, &devices, engine, seed)
+    }
+
+    fn write_index(&self, entries: &[(String, String, f64)]) -> Result<()> {
+        let mut spaces = Vec::new();
+        for (k, d, secs) in entries {
+            let c = self.load(k, d)?;
+            let mut o = Json::obj();
+            o.set("kernel", k.as_str().into())
+                .set("device", d.as_str().into())
+                .set("configs", c.records.len().into())
+                .set("valid_fraction", c.valid_fraction().into())
+                .set("optimum", c.optimum().into())
+                .set("bruteforce_seconds", (*secs).into())
+                .set("path", format!("{k}/{d}.json.gz").into());
+            spaces.push(o);
+        }
+        let mut j = Json::obj();
+        j.set("schema", "tunetuner-hub-index".into())
+            .set("version", 1usize.into())
+            .set("observations_per_config", 32usize.into())
+            .set("spaces", Json::Arr(spaces));
+        crate::util::compress::write_string(&self.root.join("index.json"), &j.to_pretty())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("tt_hub_{}", std::process::id()));
+        let hub = Hub::new(&dir);
+        let engine = Arc::new(Engine::native());
+        let entries = hub
+            .ensure(&["synthetic"], &["A100", "W6600"], engine, 7)
+            .unwrap();
+        assert_eq!(entries.len(), 2);
+        assert!(hub.exists("synthetic", "A100"));
+        assert!(dir.join("synthetic/t1.json").exists());
+        assert!(dir.join("index.json").exists());
+
+        // Reload from disk through a fresh hub handle.
+        let hub2 = Hub::new(&dir);
+        let c = hub2.load("synthetic", "A100").unwrap();
+        assert!(c.records.len() > 50);
+        // memoized second load returns the same Arc
+        let c2 = hub2.load("synthetic", "A100").unwrap();
+        assert!(Arc::ptr_eq(&c, &c2));
+
+        // Landscapes differ across devices.
+        let w = hub2.load("synthetic", "W6600").unwrap();
+        assert_ne!(c.optimum_index(), w.optimum_index());
+
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,20 @@
+//! The FAIR benchmark hub: brute-forced search-space datasets.
+//!
+//! * [`cache`] — the per-(kernel, device) cache file: every configuration's
+//!   32 raw observations, mean, compile time and validity, in a T4-style
+//!   JSON schema, gzip-compressed on disk.
+//! * [`bruteforce`] — exhaustively evaluates a search space through the
+//!   live runner (batched through the PJRT engine) and records the
+//!   simulated device-hours (Table II).
+//! * [`t1`] — the T1-style input description (kernel, parameters,
+//!   constraints) written next to each cache for interoperability.
+//! * [`hub`] — the on-disk hub layout: build, save, load, and index the
+//!   24 (kernel × device) search spaces.
+
+pub mod cache;
+pub mod bruteforce;
+pub mod t1;
+pub mod hub;
+
+pub use cache::{CacheData, ConfigRecord};
+pub use hub::Hub;

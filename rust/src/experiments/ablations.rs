@@ -1,0 +1,169 @@
+//! Ablation studies over the method's own design choices — extensions
+//! beyond the paper's figures, probing the knobs DESIGN.md calls out:
+//!
+//! * `ablation_cutoff`  — how the budget cutoff percentile (the "typically
+//!   somewhere around 95%" of Section III-B) shifts scores and rankings.
+//! * `ablation_repeats` — how many repeated runs the tuning campaign needs
+//!   before the best-configuration choice stabilizes (the paper uses 25).
+//! * `ablation_noise`   — how measurement-noise amplitude distorts the
+//!   dataset: optimum identity and tuned scores under increasing sigma.
+
+use super::Ctx;
+use crate::dataset::bruteforce;
+use crate::gpu::specs::device_by_name;
+use crate::hypertuning::{exhaustive_tuning, limited_space};
+use crate::kernels;
+use crate::methodology::{evaluate_algorithm, SpaceEval};
+use crate::optimizers::HyperParams;
+use crate::perfmodel::NoiseModel;
+use crate::runner::LiveRunner;
+use crate::util::stats;
+use crate::util::table::Table;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Budget-cutoff sensitivity: rescore the tuned-optimal GA under different
+/// cutoff percentiles.
+pub fn cutoff(ctx: &Ctx) -> Result<()> {
+    ctx.ensure_hub()?;
+    let results = ctx.limited_results("genetic_algorithm")?;
+    let space = limited_space("genetic_algorithm")?;
+    let best_hp = HyperParams::from_space_config(&space, results.best().config_idx);
+    let mean_hp = HyperParams::from_space_config(&space, results.most_average().config_idx);
+
+    let mut table = Table::new(
+        "Ablation: budget cutoff percentile vs scores (genetic algorithm)",
+        &["Cutoff", "Budget range (s)", "Optimal score", "Mean-config score", "Delta"],
+    );
+    for cutoff in [0.80, 0.90, 0.95, 0.99] {
+        // Re-prepare the training spaces under this cutoff.
+        let mut spaces = Vec::new();
+        for kname in crate::dataset::hub::HUB_KERNELS {
+            let kernel = kernels::kernel_by_name(kname)?;
+            for dev in crate::gpu::specs::TRAIN_DEVICES {
+                let cache = ctx.hub.load(kname, dev)?;
+                spaces.push(SpaceEval::new(
+                    kernel.space_arc(),
+                    cache,
+                    cutoff,
+                    ctx.scale.points,
+                ));
+            }
+        }
+        let lo = spaces.iter().map(|s| s.budget_seconds).fold(f64::INFINITY, f64::min);
+        let hi = spaces.iter().map(|s| s.budget_seconds).fold(0.0f64, f64::max);
+        let best =
+            evaluate_algorithm("genetic_algorithm", &best_hp, &spaces, ctx.scale.eval_repeats, 3)?;
+        let mean =
+            evaluate_algorithm("genetic_algorithm", &mean_hp, &spaces, ctx.scale.eval_repeats, 3)?;
+        table.row(vec![
+            format!("{cutoff:.2}"),
+            format!("{lo:.0}..{hi:.0}"),
+            format!("{:.3}", best.score),
+            format!("{:.3}", mean.score),
+            format!("{:+.3}", best.score - mean.score),
+        ]);
+    }
+    let report = ctx.report("ablation_cutoff");
+    report.table(&table)?;
+    report.summary(
+        "the optimal-vs-mean gap should persist across cutoffs; absolute scores \
+         shift because the budget (and thus the baseline) changes\n",
+    )?;
+    Ok(())
+}
+
+/// Repeat-count stability: does the best hyperparameter configuration
+/// chosen by the campaign change with fewer repeats?
+pub fn repeats(ctx: &Ctx) -> Result<()> {
+    let train = ctx.train_spaces()?;
+    let hp_space = limited_space("dual_annealing")?;
+    let reference = exhaustive_tuning(
+        "dual_annealing",
+        &hp_space,
+        "limited",
+        &train,
+        ctx.scale.tuning_repeats.max(10),
+        ctx.seed,
+    )?;
+    let ref_scores = reference.scores();
+
+    let mut table = Table::new(
+        "Ablation: tuning repeats vs campaign stability (dual annealing, 8 configs)",
+        &["Repeats", "Best config", "Same as reference?", "Score corr."],
+    );
+    for reps in [1usize, 2, 5, 10] {
+        let r = exhaustive_tuning("dual_annealing", &hp_space, "limited", &train, reps, ctx.seed)?;
+        let corr = stats::pearson(&r.scores(), &ref_scores);
+        table.row(vec![
+            reps.to_string(),
+            r.best().hp_key.clone(),
+            (r.best().config_idx == reference.best().config_idx).to_string(),
+            format!("{corr:.3}"),
+        ]);
+    }
+    let report = ctx.report("ablation_repeats");
+    report.table(&table)?;
+    report.summary(
+        "score correlation with the high-repeat reference should rise with \
+         repeats — the stochasticity argument for the paper's 25 repeats\n",
+    )?;
+    Ok(())
+}
+
+/// Noise-amplitude sensitivity: rebuild one space with different sigma and
+/// examine what the dataset looks like.
+pub fn noise(ctx: &Ctx) -> Result<()> {
+    let device = device_by_name("A100").unwrap();
+    let mut table = Table::new(
+        "Ablation: measurement-noise amplitude (convolution @ A100)",
+        &["Sigma", "Optimum (ms)", "Optimum idx", "Obs spread (p95/p5)", "GA score"],
+    );
+    let mut base_optimum = None;
+    for sigma in [0.0, 0.02, 0.05, 0.10] {
+        let noise = NoiseModel {
+            sigma,
+            ..NoiseModel::default()
+        };
+        let kernel = kernels::kernel_by_name("convolution")?;
+        let mut live = LiveRunner::new(
+            kernels::kernel_by_name("convolution")?,
+            &device,
+            Arc::clone(&ctx.engine),
+            noise,
+            ctx.seed,
+        );
+        let cache = Arc::new(bruteforce::bruteforce(&mut live)?);
+        // Per-config observation spread, averaged.
+        let mut spreads = Vec::new();
+        for rec in cache.records.iter().filter(|r| r.valid).step_by(13) {
+            let p95 = stats::percentile(&rec.observations, 95.0);
+            let p5 = stats::percentile(&rec.observations, 5.0);
+            spreads.push(p95 / p5);
+        }
+        let opt_idx = cache.optimum_index();
+        base_optimum.get_or_insert(opt_idx);
+        let se = SpaceEval::new(kernel.space_arc(), Arc::clone(&cache), 0.95, ctx.scale.points);
+        let ga = evaluate_algorithm(
+            "genetic_algorithm",
+            &HyperParams::new(),
+            &[se],
+            ctx.scale.eval_repeats.min(25),
+            7,
+        )?;
+        table.row(vec![
+            format!("{sigma:.2}"),
+            format!("{:.4}", cache.optimum() * 1e3),
+            format!("{opt_idx}"),
+            format!("{:.3}", stats::mean(&spreads)),
+            format!("{:.3}", ga.score),
+        ]);
+    }
+    let report = ctx.report("ablation_noise");
+    report.table(&table)?;
+    report.summary(
+        "noise shifts the *measured* optimum slightly (mean over 32 obs) but \
+         the tuning signal persists; spreads grow with sigma as expected\n",
+    )?;
+    Ok(())
+}

@@ -1,0 +1,257 @@
+//! Shared experiment context: hub, engine, scale profile, memoized
+//! intermediates.
+
+use crate::dataset::hub::{Hub, HUB_KERNELS, HUB_SEED};
+use crate::gpu::specs::{TEST_DEVICES, TRAIN_DEVICES};
+use crate::hypertuning::{self, exhaustive, meta};
+use crate::kernels;
+use crate::methodology::{self, SpaceEval};
+use crate::optimizers::{self, HyperParams};
+use crate::report::Report;
+use crate::runner::{Budget, Tuning};
+use crate::runtime::Engine;
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+/// Scale profile: "quick" for minutes-scale regeneration, "paper" for the
+/// full-size runs recorded in EXPERIMENTS.md.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Scale {
+    /// Repeats during hyperparameter tuning (paper: 25).
+    pub tuning_repeats: usize,
+    /// Repeats for re-evaluation comparisons (paper: 100).
+    pub eval_repeats: usize,
+    /// Sampling points per performance curve (paper-style: 50).
+    pub points: usize,
+    /// Hyperparameter evaluations for extended meta-tuning (stands in for
+    /// the paper's 7-day budget).
+    pub meta_evals: usize,
+}
+
+impl Scale {
+    pub fn parse(name: &str) -> Result<Scale> {
+        Ok(match name {
+            "quick" => Scale {
+                tuning_repeats: 5,
+                eval_repeats: 20,
+                points: 30,
+                meta_evals: 40,
+            },
+            "paper" => Scale {
+                tuning_repeats: methodology::TUNING_REPEATS,
+                eval_repeats: methodology::EVAL_REPEATS,
+                points: methodology::DEFAULT_POINTS,
+                meta_evals: 150,
+            },
+            other => anyhow::bail!("unknown scale {other:?} (quick|paper)"),
+        })
+    }
+}
+
+/// Shared context for experiment runs.
+pub struct Ctx {
+    pub hub: Hub,
+    pub engine: Arc<Engine>,
+    pub results_dir: PathBuf,
+    pub scale: Scale,
+    pub scale_name: String,
+    pub seed: u64,
+    spaces: Mutex<HashMap<String, Arc<Vec<SpaceEval>>>>,
+    hyper: Mutex<HashMap<String, Arc<exhaustive::HyperTuningResults>>>,
+}
+
+impl Ctx {
+    pub fn new(
+        hub: Hub,
+        engine: Arc<Engine>,
+        results_dir: PathBuf,
+        scale: Scale,
+        scale_name: &str,
+        seed: u64,
+    ) -> Ctx {
+        std::fs::create_dir_all(&results_dir).ok();
+        Ctx {
+            hub,
+            engine,
+            results_dir,
+            scale,
+            scale_name: scale_name.to_string(),
+            seed,
+            spaces: Mutex::new(HashMap::new()),
+            hyper: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn report(&self, id: &str) -> Report {
+        Report::new(&self.results_dir, id)
+    }
+
+    /// Ensure the full 24-space hub exists (built through the engine).
+    pub fn ensure_hub(&self) -> Result<Vec<(String, String, f64)>> {
+        self.hub.ensure_all(Arc::clone(&self.engine), HUB_SEED)
+    }
+
+    fn spaces_for(&self, devices: &[&str], tag: &str) -> Result<Arc<Vec<SpaceEval>>> {
+        if let Some(s) = self.spaces.lock().unwrap().get(tag) {
+            return Ok(Arc::clone(s));
+        }
+        self.ensure_hub()?;
+        let mut out = Vec::new();
+        for kname in HUB_KERNELS {
+            let kernel = kernels::kernel_by_name(kname)?;
+            for dev in devices {
+                // Memoize per (kernel, device): train/test/all share them.
+                // NB: take the Option out and drop the guard before the
+                // miss path re-locks (std Mutex is not reentrant).
+                let key = format!("one:{kname}@{dev}");
+                let hit = self.spaces.lock().unwrap().get(&key).cloned();
+                let se = match hit {
+                    Some(s) => s[0].clone(),
+                    None => {
+                        let cache = self.hub.load(kname, dev)?;
+                        let se = SpaceEval::new(
+                            kernel.space_arc(),
+                            cache,
+                            methodology::DEFAULT_CUTOFF,
+                            self.scale.points,
+                        );
+                        self.spaces
+                            .lock()
+                            .unwrap()
+                            .insert(key, Arc::new(vec![se.clone()]));
+                        se
+                    }
+                };
+                out.push(se);
+            }
+        }
+        let arc = Arc::new(out);
+        self.spaces
+            .lock()
+            .unwrap()
+            .insert(tag.to_string(), Arc::clone(&arc));
+        Ok(arc)
+    }
+
+    /// The 12 training spaces (4 kernels × {MI250X, A100, A4000}).
+    pub fn train_spaces(&self) -> Result<Arc<Vec<SpaceEval>>> {
+        self.spaces_for(&TRAIN_DEVICES, "train")
+    }
+
+    /// The 12 held-out test spaces (4 kernels × {W6600, W7800, A6000}).
+    pub fn test_spaces(&self) -> Result<Arc<Vec<SpaceEval>>> {
+        self.spaces_for(&TEST_DEVICES, "test")
+    }
+
+    /// All 24 spaces (train then test order).
+    pub fn all_spaces(&self) -> Result<Arc<Vec<SpaceEval>>> {
+        let devices: Vec<&str> = TRAIN_DEVICES
+            .iter()
+            .chain(TEST_DEVICES.iter())
+            .copied()
+            .collect();
+        self.spaces_for(&devices, "all")
+    }
+
+    /// Exhaustive limited hypertuning results for an algorithm, loaded
+    /// from the results dir when present, else computed and persisted.
+    pub fn limited_results(&self, algo: &str) -> Result<Arc<exhaustive::HyperTuningResults>> {
+        let key = format!("{algo}-limited");
+        if let Some(r) = self.hyper.lock().unwrap().get(&key) {
+            return Ok(Arc::clone(r));
+        }
+        let path = self
+            .results_dir
+            .join(format!("hypertuning_{algo}_limited_{}.json.gz", self.scale_name));
+        let results = if path.exists() {
+            exhaustive::HyperTuningResults::load(&path)?
+        } else {
+            let train = self.train_spaces()?;
+            let hp_space = hypertuning::limited_space(algo)?;
+            crate::log_info!(
+                "exhaustive hypertuning {algo}: {} configs x {} spaces x {} repeats",
+                hp_space.len(),
+                train.len(),
+                self.scale.tuning_repeats
+            );
+            let r = exhaustive::exhaustive_tuning(
+                algo,
+                &hp_space,
+                "limited",
+                &train,
+                self.scale.tuning_repeats,
+                self.seed,
+            )?;
+            r.save(&path)?;
+            r
+        };
+        let arc = Arc::new(results);
+        self.hyper.lock().unwrap().insert(key, Arc::clone(&arc));
+        Ok(arc)
+    }
+
+    /// Extended hypertuning via a dual-annealing meta-strategy (Table IV),
+    /// persisted like the limited campaigns.
+    pub fn extended_results(&self, algo: &str) -> Result<Arc<exhaustive::HyperTuningResults>> {
+        let key = format!("{algo}-extended");
+        if let Some(r) = self.hyper.lock().unwrap().get(&key) {
+            return Ok(Arc::clone(r));
+        }
+        let path = self
+            .results_dir
+            .join(format!("hypertuning_{algo}_extended_{}.json.gz", self.scale_name));
+        let results = if path.exists() {
+            exhaustive::HyperTuningResults::load(&path)?
+        } else {
+            let train = self.train_spaces()?;
+            let hp_space = Arc::new(hypertuning::extended_space(algo)?);
+            crate::log_info!(
+                "extended meta-tuning {algo}: {} configs, budget {} evaluations",
+                hp_space.len(),
+                self.scale.meta_evals
+            );
+            let t0 = std::time::Instant::now();
+            let mut runner = meta::MetaRunner::new(
+                algo,
+                Arc::clone(&hp_space),
+                train.as_ref().clone(),
+                self.scale.tuning_repeats,
+                self.seed,
+            );
+            let mut tuning = Tuning::new(&mut runner, Budget::evals(self.scale.meta_evals));
+            let opt = optimizers::create("dual_annealing", &HyperParams::new())?;
+            let mut rng = Rng::new(self.seed ^ 0xE0E0);
+            opt.run(&mut tuning, &mut rng);
+            drop(tuning);
+            let results: Vec<exhaustive::HyperResult> = runner
+                .history
+                .iter()
+                .map(|&(idx, score)| exhaustive::HyperResult {
+                    config_idx: idx,
+                    hp_key: HyperParams::from_space_config(&hp_space, idx).key(),
+                    score,
+                })
+                .collect();
+            let train_budget: f64 = train.iter().map(|s| s.budget_seconds).sum();
+            let r = exhaustive::HyperTuningResults {
+                algo: algo.to_string(),
+                space_kind: "extended".into(),
+                repeats: self.scale.tuning_repeats,
+                seed: self.seed,
+                simulated_seconds: train_budget
+                    * self.scale.tuning_repeats as f64
+                    * results.len() as f64,
+                results,
+                wallclock_seconds: t0.elapsed().as_secs_f64(),
+            };
+            r.save(&path)?;
+            r
+        };
+        let arc = Arc::new(results);
+        self.hyper.lock().unwrap().insert(key, Arc::clone(&arc));
+        Ok(arc)
+    }
+}

@@ -1,0 +1,44 @@
+//! Fig. 2: violin plots of the performance-score distribution over all
+//! hyperparameter configurations, per optimization algorithm.
+//!
+//! The paper's headline from this figure: an average best-worst score
+//! difference of 0.865, and PSO being far more hyperparameter-sensitive
+//! than simulated annealing.
+
+use super::Ctx;
+use crate::hypertuning::LIMITED_ALGOS;
+use crate::util::stats;
+use anyhow::Result;
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    let mut dists: Vec<(String, Vec<f64>)> = Vec::new();
+    let mut spread_sum = 0.0;
+    let mut summary = String::new();
+    for algo in LIMITED_ALGOS {
+        let results = ctx.limited_results(algo)?;
+        let scores = results.scores();
+        let spread = stats::max(&scores) - stats::min(&scores);
+        spread_sum += spread;
+        summary.push_str(&format!(
+            "{algo}: n={} mean={:.3} std={:.3} min={:.3} max={:.3} spread={:.3}\n",
+            scores.len(),
+            stats::mean(&scores),
+            stats::stddev(&scores),
+            stats::min(&scores),
+            stats::max(&scores),
+            spread,
+        ));
+        dists.push((algo.to_string(), scores));
+    }
+    summary.push_str(&format!(
+        "average best-worst difference: {:.3} (paper: 0.865)\n",
+        spread_sum / LIMITED_ALGOS.len() as f64
+    ));
+    let report = ctx.report("fig2");
+    report.violins(
+        "Fig 2: performance-score distribution per hyperparameter configuration ( | = mean )",
+        &dists,
+    )?;
+    report.summary(&summary)?;
+    Ok(())
+}

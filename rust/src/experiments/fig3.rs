@@ -1,0 +1,48 @@
+//! Fig. 3: best and worst hyperparameter configurations scored on (a) the
+//! tuning campaign itself (25 repeats), (b) the training set re-executed
+//! with 100 repeats, and (c) the held-out test set — the stability and
+//! generalization check.
+
+use super::Ctx;
+use crate::hypertuning::{limited_space, LIMITED_ALGOS};
+use crate::methodology::evaluate_algorithm;
+use crate::optimizers::HyperParams;
+use crate::util::table::Table;
+use anyhow::Result;
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    let train = ctx.train_spaces()?;
+    let test = ctx.test_spaces()?;
+    let reps = ctx.scale.eval_repeats;
+    let mut table = Table::new(
+        "Fig 3: best/worst configuration scores on tuning, training (re-executed), and test",
+        &["Algorithm", "Config", "Tuning", "Train (re-exec)", "Test"],
+    );
+    let mut gaps = Vec::new();
+    for algo in LIMITED_ALGOS {
+        let results = ctx.limited_results(algo)?;
+        let space = limited_space(algo)?;
+        for (label, r) in [("best", results.best()), ("worst", results.worst())] {
+            let hp = HyperParams::from_space_config(&space, r.config_idx);
+            let on_train = evaluate_algorithm(algo, &hp, &train, reps, ctx.seed ^ 0x3)?;
+            let on_test = evaluate_algorithm(algo, &hp, &test, reps, ctx.seed ^ 0x7)?;
+            if label == "best" {
+                gaps.push(on_train.score - on_test.score);
+            }
+            table.row(vec![
+                algo.to_string(),
+                label.to_string(),
+                format!("{:.3}", r.score),
+                format!("{:.3}", on_train.score),
+                format!("{:.3}", on_test.score),
+            ]);
+        }
+    }
+    let report = ctx.report("fig3");
+    report.table(&table)?;
+    report.summary(&format!(
+        "mean train->test generalization gap of best configs: {:.3} (small = generalizes)\n",
+        crate::util::stats::mean(&gaps)
+    ))?;
+    Ok(())
+}

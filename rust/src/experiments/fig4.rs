@@ -1,0 +1,61 @@
+//! Fig. 4: per-search-space impact of hyperparameter tuning — the
+//! suboptimal (worst) vs optimal (best) configuration of each algorithm,
+//! scored on all 24 spaces (train + test halves), showing the improvement
+//! is general rather than over-fitted to a few spaces.
+
+use super::Ctx;
+use crate::hypertuning::{limited_space, LIMITED_ALGOS};
+use crate::methodology::evaluate_algorithm;
+use crate::optimizers::HyperParams;
+use crate::util::table::Table;
+use anyhow::Result;
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    let all = ctx.all_spaces()?;
+    let reps = ctx.scale.eval_repeats;
+    let labels: Vec<String> = all.iter().map(|s| s.label.clone()).collect();
+    // Build a wide table: per space, worst and best mean score per algo.
+    let mut header: Vec<String> = vec!["Space".into(), "Set".into()];
+    for algo in LIMITED_ALGOS {
+        header.push(format!("{algo}:worst"));
+        header.push(format!("{algo}:best"));
+    }
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(
+        "Fig 4: per-space mean score, suboptimal (worst) vs optimal (best) configurations",
+        &header_refs,
+    );
+
+    let mut per_algo: Vec<(Vec<f64>, Vec<f64>)> = Vec::new();
+    for algo in LIMITED_ALGOS {
+        let results = ctx.limited_results(algo)?;
+        let space = limited_space(algo)?;
+        let worst_hp = HyperParams::from_space_config(&space, results.worst().config_idx);
+        let best_hp = HyperParams::from_space_config(&space, results.best().config_idx);
+        let worst = evaluate_algorithm(algo, &worst_hp, &all, reps, ctx.seed ^ 0x11)?;
+        let best = evaluate_algorithm(algo, &best_hp, &all, reps, ctx.seed ^ 0x13)?;
+        per_algo.push((worst.per_space_means(), best.per_space_means()));
+    }
+    let mut improved = 0usize;
+    let mut cells = 0usize;
+    for (s, label) in labels.iter().enumerate() {
+        // Train spaces come first (12), then test.
+        let set = if s < all.len() / 2 { "train" } else { "test" };
+        let mut row = vec![label.clone(), set.to_string()];
+        for (worst, best) in &per_algo {
+            row.push(format!("{:.3}", worst[s]));
+            row.push(format!("{:.3}", best[s]));
+            cells += 1;
+            if best[s] > worst[s] {
+                improved += 1;
+            }
+        }
+        table.row(row);
+    }
+    let report = ctx.report("fig4");
+    report.table(&table)?;
+    report.summary(&format!(
+        "optimal improves on suboptimal in {improved}/{cells} (algorithm, space) cells\n"
+    ))?;
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Fig. 6: meta-strategies for hyperparameter tuning.
+//!
+//! The exhaustively evaluated hyperparameter spaces become tuning problems
+//! themselves (objective = 1 - score, replayed through the ordinary
+//! simulation machinery), and the paper's four algorithms — with their
+//! tuned-optimal hyperparameters — are run as meta-strategies over them
+//! with many repeats. The paper reports all meta-strategies performing
+//! well after a startup cost, average score 0.223.
+
+use super::Ctx;
+use crate::hypertuning::{limited_space, meta, LIMITED_ALGOS};
+use crate::methodology::{evaluate_algorithm, SpaceEval};
+use crate::optimizers::HyperParams;
+use crate::util::plot::Series;
+use anyhow::Result;
+use std::sync::Arc;
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    // Build the meta-level spaces: one per target algorithm.
+    let mut meta_spaces = Vec::new();
+    for algo in LIMITED_ALGOS {
+        let results = ctx.limited_results(algo)?;
+        let hp_space = Arc::new(limited_space(algo)?);
+        let cache = Arc::new(meta::meta_cache_from_results(&results, &hp_space));
+        meta_spaces.push(SpaceEval::new(
+            hp_space,
+            cache,
+            crate::methodology::DEFAULT_CUTOFF,
+            ctx.scale.points,
+        ));
+    }
+
+    let mut series = Vec::new();
+    let mut summary = String::new();
+    let mut scores = Vec::new();
+    for meta_algo in LIMITED_ALGOS {
+        // Use the tuned-optimal hyperparameters of the meta-strategy.
+        let results = ctx.limited_results(meta_algo)?;
+        let space = limited_space(meta_algo)?;
+        let hp = HyperParams::from_space_config(&space, results.best().config_idx);
+        let r = evaluate_algorithm(
+            meta_algo,
+            &hp,
+            &meta_spaces,
+            ctx.scale.eval_repeats,
+            ctx.seed ^ 0x31,
+        )?;
+        let frac = |i: usize| (i + 1) as f64 / r.aggregate_curve.len() as f64;
+        series.push(Series {
+            name: format!("meta:{meta_algo}"),
+            points: r
+                .aggregate_curve
+                .iter()
+                .enumerate()
+                .map(|(i, &y)| (frac(i), y))
+                .collect(),
+        });
+        scores.push(r.score);
+        summary.push_str(&format!("meta:{meta_algo}: aggregate score {:.3}\n", r.score));
+    }
+    summary.push_str(&format!(
+        "average meta-strategy score: {:.3} (paper: 0.223)\n",
+        crate::util::stats::mean(&scores)
+    ));
+    let report = ctx.report("fig6");
+    report.lines(
+        "Fig 6: aggregate performance of meta-strategies on the hyperparameter tuning spaces",
+        &series,
+    )?;
+    report.summary(&summary)?;
+    Ok(())
+}

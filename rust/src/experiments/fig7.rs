@@ -1,0 +1,61 @@
+//! Fig. 7: per-search-space impact of the *extended* tuning — the
+//! most-average configuration of the limited campaign vs the optimal
+//! configuration found by the extended meta-strategy campaign, on all 24
+//! spaces.
+
+use super::Ctx;
+use crate::hypertuning::{extended_space, limited_space, EXTENDED_ALGOS};
+use crate::methodology::evaluate_algorithm;
+use crate::optimizers::HyperParams;
+use crate::util::table::Table;
+use anyhow::Result;
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    let all = ctx.all_spaces()?;
+    let reps = ctx.scale.eval_repeats;
+    let mut header: Vec<String> = vec!["Space".into(), "Set".into()];
+    for algo in EXTENDED_ALGOS {
+        header.push(format!("{algo}:avg-lim"));
+        header.push(format!("{algo}:opt-ext"));
+    }
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(
+        "Fig 7: per-space mean score, average (limited) vs optimal (extended) configurations",
+        &header_refs,
+    );
+    let mut per_algo = Vec::new();
+    for algo in EXTENDED_ALGOS {
+        let limited = ctx.limited_results(algo)?;
+        let extended = ctx.extended_results(algo)?;
+        let lim_space = limited_space(algo)?;
+        let ext_space = extended_space(algo)?;
+        let avg_hp =
+            HyperParams::from_space_config(&lim_space, limited.most_average().config_idx);
+        let opt_hp =
+            HyperParams::from_space_config(&ext_space, extended.best().config_idx);
+        let avg_r = evaluate_algorithm(algo, &avg_hp, &all, reps, ctx.seed ^ 0x41)?;
+        let opt_r = evaluate_algorithm(algo, &opt_hp, &all, reps, ctx.seed ^ 0x43)?;
+        per_algo.push((avg_r.per_space_means(), opt_r.per_space_means()));
+    }
+    let mut improved = 0usize;
+    let mut cells = 0usize;
+    for (s, se) in all.iter().enumerate() {
+        let set = if s < all.len() / 2 { "train" } else { "test" };
+        let mut row = vec![se.label.clone(), set.to_string()];
+        for (avg, opt) in &per_algo {
+            row.push(format!("{:.3}", avg[s]));
+            row.push(format!("{:.3}", opt[s]));
+            cells += 1;
+            if opt[s] > avg[s] {
+                improved += 1;
+            }
+        }
+        table.row(row);
+    }
+    let report = ctx.report("fig7");
+    report.table(&table)?;
+    report.summary(&format!(
+        "extended-optimal improves on limited-average in {improved}/{cells} (algorithm, space) cells\n"
+    ))?;
+    Ok(())
+}

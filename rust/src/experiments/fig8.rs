@@ -1,0 +1,81 @@
+//! Fig. 8: aggregate performance over time — mean, optimal-limited, and
+//! optimal-extended hyperparameters. Produces the paper's second headline:
+//! the average improvement of extended tuning over the average limited
+//! configuration (paper: 204.7% overall, 210.8% on the test set).
+
+use super::Ctx;
+use crate::hypertuning::{extended_space, limited_space, EXTENDED_ALGOS};
+use crate::methodology::evaluate_algorithm;
+use crate::optimizers::HyperParams;
+use crate::util::plot::Series;
+use anyhow::Result;
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    let all = ctx.all_spaces()?;
+    let test = ctx.test_spaces()?;
+    let reps = ctx.scale.eval_repeats;
+    let mut series = Vec::new();
+    let mut summary = String::new();
+    let mut pct_all = Vec::new();
+    let mut pct_test = Vec::new();
+    let mut deltas = Vec::new();
+    for algo in EXTENDED_ALGOS {
+        let limited = ctx.limited_results(algo)?;
+        let extended = ctx.extended_results(algo)?;
+        let lim_space = limited_space(algo)?;
+        let ext_space = extended_space(algo)?;
+        let mean_hp =
+            HyperParams::from_space_config(&lim_space, limited.most_average().config_idx);
+        let lim_hp =
+            HyperParams::from_space_config(&lim_space, limited.best().config_idx);
+        let ext_hp =
+            HyperParams::from_space_config(&ext_space, extended.best().config_idx);
+
+        let mean_r = evaluate_algorithm(algo, &mean_hp, &all, reps, ctx.seed ^ 0x51)?;
+        let lim_r = evaluate_algorithm(algo, &lim_hp, &all, reps, ctx.seed ^ 0x53)?;
+        let ext_r = evaluate_algorithm(algo, &ext_hp, &all, reps, ctx.seed ^ 0x55)?;
+        let mean_t = evaluate_algorithm(algo, &mean_hp, &test, reps, ctx.seed ^ 0x57)?;
+        let ext_t = evaluate_algorithm(algo, &ext_hp, &test, reps, ctx.seed ^ 0x59)?;
+
+        let frac = |i: usize| (i + 1) as f64 / mean_r.aggregate_curve.len() as f64;
+        for (tag, r) in [("mean", &mean_r), ("opt-lim", &lim_r), ("opt-ext", &ext_r)] {
+            series.push(Series {
+                name: format!("{algo} ({tag})"),
+                points: r
+                    .aggregate_curve
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &y)| (frac(i), y))
+                    .collect(),
+            });
+        }
+        let delta = ext_r.score - mean_r.score;
+        deltas.push(delta);
+        let pct = |d: f64, base: f64| {
+            if base.abs() > 1e-9 {
+                d / base.abs() * 100.0
+            } else {
+                d * 100.0
+            }
+        };
+        pct_all.push(pct(delta, mean_r.score));
+        pct_test.push(pct(ext_t.score - mean_t.score, mean_t.score));
+        summary.push_str(&format!(
+            "{algo}: mean {:.3}, opt-limited {:.3}, opt-extended {:.3}, ext-vs-mean {:+.3}\n",
+            mean_r.score, lim_r.score, ext_r.score, delta
+        ));
+    }
+    summary.push_str(&format!(
+        "average improvement of extended over mean configuration: {:.1}% overall (paper: 204.7%), {:.1}% on test (paper: 210.8%); mean delta {:+.3}\n",
+        crate::util::stats::mean(&pct_all),
+        crate::util::stats::mean(&pct_test),
+        crate::util::stats::mean(&deltas),
+    ));
+    let report = ctx.report("fig8");
+    report.lines(
+        "Fig 8: aggregate performance over relative budget (mean vs optimal limited vs optimal extended)",
+        &series,
+    )?;
+    report.summary(&summary)?;
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Fig. 9: tuning-time comparison between live tuning and simulation mode.
+//!
+//! Live time is calculated as the paper does: the 95% budget of each
+//! training space, times the number of hyperparameter configurations,
+//! times the repeats. Simulation time is the *measured* wall-clock of the
+//! exhaustive campaigns. The paper's totals: 22 323 hours live vs 172
+//! hours simulated, a ~130x speedup.
+
+use super::Ctx;
+use crate::hypertuning::{limited_space, LIMITED_ALGOS};
+use crate::util::table::Table;
+use anyhow::Result;
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    let train = ctx.train_spaces()?;
+    let budget_sum: f64 = train.iter().map(|s| s.budget_seconds).sum();
+    let mut table = Table::new(
+        "Fig 9: hyperparameter tuning time, live (estimated) vs simulation mode (measured)",
+        &["Algorithm", "HP configs", "Live (hours)", "Simulated (hours)", "Speedup"],
+    );
+    let mut live_total = 0.0;
+    let mut sim_total = 0.0;
+    for algo in LIMITED_ALGOS {
+        let results = ctx.limited_results(algo)?;
+        let n_configs = limited_space(algo)?.len();
+        let live_seconds = budget_sum * n_configs as f64 * results.repeats as f64;
+        let sim_seconds = results.wallclock_seconds;
+        live_total += live_seconds;
+        sim_total += sim_seconds;
+        table.row(vec![
+            algo.to_string(),
+            n_configs.to_string(),
+            format!("{:.1}", live_seconds / 3600.0),
+            format!("{:.3}", sim_seconds / 3600.0),
+            format!("{:.0}x", live_seconds / sim_seconds.max(1e-9)),
+        ]);
+    }
+    let report = ctx.report("fig9");
+    report.table(&table)?;
+    report.summary(&format!(
+        "total: live {:.0} hours vs simulated {:.2} hours -> {:.0}x speedup (paper: 22323 vs 172 hours, ~130x)\n",
+        live_total / 3600.0,
+        sim_total / 3600.0,
+        live_total / sim_total.max(1e-9),
+    ))?;
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Experiment regenerators: one module per table/figure of the paper's
+//! evaluation (see DESIGN.md §6 for the index).
+//!
+//! Every experiment runs through [`Ctx`], which owns the hub, the PJRT
+//! engine, the results directory, and the scale profile, and memoizes the
+//! expensive intermediates (prepared spaces, hypertuning campaigns) so
+//! `experiment all` shares work across figures.
+
+pub mod ctx;
+pub mod ablations;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+
+pub use ctx::{Ctx, Scale};
+
+use anyhow::{bail, Result};
+
+/// All paper experiment ids in run order.
+pub const ALL: [&str; 11] = [
+    "table2", "table3", "fig2", "fig3", "fig4", "fig5", "fig6", "table4", "fig7",
+    "fig8", "fig9",
+];
+
+/// Extension ablations (design-choice studies beyond the paper).
+pub const ABLATIONS: [&str; 3] = ["ablation_cutoff", "ablation_repeats", "ablation_noise"];
+
+/// Run one experiment (or "all").
+pub fn run(ctx: &Ctx, id: &str) -> Result<()> {
+    match id {
+        "table2" => table2::run(ctx),
+        "table3" => table3::run(ctx),
+        "table4" => table4::run(ctx),
+        "fig2" => fig2::run(ctx),
+        "fig3" => fig3::run(ctx),
+        "fig4" => fig4::run(ctx),
+        "fig5" => fig5::run(ctx),
+        "fig6" => fig6::run(ctx),
+        "fig7" => fig7::run(ctx),
+        "fig8" => fig8::run(ctx),
+        "fig9" => fig9::run(ctx),
+        "ablation_cutoff" => ablations::cutoff(ctx),
+        "ablation_repeats" => ablations::repeats(ctx),
+        "ablation_noise" => ablations::noise(ctx),
+        "all" => {
+            for id in ALL {
+                crate::log_info!("=== experiment {id} ===");
+                run(ctx, id)?;
+            }
+            Ok(())
+        }
+        "ablations" => {
+            for id in ABLATIONS {
+                crate::log_info!("=== experiment {id} ===");
+                run(ctx, id)?;
+            }
+            Ok(())
+        }
+        other => bail!(
+            "unknown experiment {other:?} (known: {ALL:?}, {ABLATIONS:?}, 'all', 'ablations')"
+        ),
+    }
+}

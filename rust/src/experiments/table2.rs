@@ -1,0 +1,49 @@
+//! Table II: brute-force execution times for each search space.
+//!
+//! The paper reports wall-clock hours per (application, GPU) brute-force;
+//! we report the *simulated device-hours* our live runner charged while
+//! brute-forcing each space through the PJRT device model, plus the grand
+//! total (paper: ~962 hours).
+
+use super::Ctx;
+use crate::dataset::hub::HUB_KERNELS;
+use crate::gpu::specs::all_devices;
+use crate::util::table::Table;
+use anyhow::Result;
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    ctx.ensure_hub()?;
+    let devices: Vec<&str> = all_devices().iter().map(|d| d.name).collect();
+    let header: Vec<&str> = std::iter::once("Application")
+        .chain(devices.iter().copied())
+        .collect();
+    let mut table = Table::new(
+        "Table II: brute-force execution times in hours for each search space (simulated device time)",
+        &header,
+    );
+    let mut total = 0.0;
+    for kernel in HUB_KERNELS {
+        let mut row = vec![capitalize(kernel)];
+        for dev in &devices {
+            let cache = ctx.hub.load(kernel, dev)?;
+            let hours = cache.bruteforce_seconds / 3600.0;
+            total += hours;
+            row.push(format!("{hours:.1}"));
+        }
+        table.row(row);
+    }
+    let report = ctx.report("table2");
+    report.table(&table)?;
+    report.summary(&format!(
+        "total simulated brute-force time: {total:.0} hours (paper: 962 hours)\n"
+    ))?;
+    Ok(())
+}
+
+pub(crate) fn capitalize(s: &str) -> String {
+    let mut c = s.chars();
+    match c.next() {
+        Some(f) => f.to_uppercase().collect::<String>() + c.as_str(),
+        None => String::new(),
+    }
+}

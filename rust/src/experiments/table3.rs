@@ -1,0 +1,61 @@
+//! Table III: the limited hyperparameter spaces with the optimal values
+//! (bold in the paper; starred here) and the values closest to the mean
+//! (italic in the paper; bracketed here), determined by the exhaustive
+//! campaign on the twelve training spaces.
+
+use super::Ctx;
+use crate::hypertuning::{limited_space, LIMITED_ALGOS};
+use crate::util::table::Table;
+use anyhow::Result;
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    let mut table = Table::new(
+        "Table III: hyperparameter values; *optimal*, [closest to mean]",
+        &["Algorithm", "Hyperparameter", "Values"],
+    );
+    for algo in LIMITED_ALGOS {
+        let results = ctx.limited_results(algo)?;
+        let space = limited_space(algo)?;
+        let best = space.named_values(results.best().config_idx);
+        let avg = space.named_values(results.most_average().config_idx);
+        for (d, param) in space.params.iter().enumerate() {
+            let rendered: Vec<String> = param
+                .values
+                .iter()
+                .map(|v| {
+                    let s = v.key();
+                    let is_best = best[d].1.key() == s;
+                    let is_avg = avg[d].1.key() == s;
+                    match (is_best, is_avg) {
+                        (true, true) => format!("*[{s}]*"),
+                        (true, false) => format!("*{s}*"),
+                        (false, true) => format!("[{s}]"),
+                        (false, false) => s,
+                    }
+                })
+                .collect();
+            table.row(vec![
+                algo.to_string(),
+                param.name.clone(),
+                format!("{{{}}}", rendered.join(", ")),
+            ]);
+        }
+    }
+    let report = ctx.report("table3");
+    report.table(&table)?;
+
+    let mut lines = String::new();
+    for algo in LIMITED_ALGOS {
+        let results = ctx.limited_results(algo)?;
+        lines.push_str(&format!(
+            "{algo}: best score {:.3} ({}), worst {:.3}, mean-config {:.3}; campaign {:.1}s wall-clock\n",
+            results.best().score,
+            results.best().hp_key,
+            results.worst().score,
+            results.most_average().score,
+            results.wallclock_seconds,
+        ));
+    }
+    report.summary(&lines)?;
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! Table IV: the extended hyperparameter spaces with the optimal values
+//! found by the dual-annealing meta-strategy (the paper's 7-day campaign;
+//! here budget-limited by `--scale`).
+
+use super::Ctx;
+use crate::hypertuning::{extended_space, EXTENDED_ALGOS};
+use crate::util::table::Table;
+use anyhow::Result;
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    let mut table = Table::new(
+        "Table IV: extended hyperparameter values; *optimal found by meta-strategy*",
+        &["Algorithm", "Hyperparameter", "Range", "Optimal"],
+    );
+    let mut summary = String::new();
+    for algo in EXTENDED_ALGOS {
+        let results = ctx.extended_results(algo)?;
+        let space = extended_space(algo)?;
+        let best = space.named_values(results.best().config_idx);
+        for (d, param) in space.params.iter().enumerate() {
+            let first = param.values.first().unwrap().key();
+            let last = param.values.last().unwrap().key();
+            table.row(vec![
+                algo.to_string(),
+                param.name.clone(),
+                format!("{{{first}, ..., {last}}} ({} values)", param.cardinality()),
+                format!("*{}*", best[d].1.key()),
+            ]);
+        }
+        summary.push_str(&format!(
+            "{algo}: explored {}/{} configs, best score {:.3} ({})\n",
+            results.results.len(),
+            space.len(),
+            results.best().score,
+            results.best().hp_key,
+        ));
+    }
+    let report = ctx.report("table4");
+    report.table(&table)?;
+    report.summary(&summary)?;
+    Ok(())
+}

@@ -1,0 +1,5 @@
+//! Simulated target devices.
+
+pub mod specs;
+
+pub use specs::{DeviceModel, all_devices, device_by_name, TEST_DEVICES, TRAIN_DEVICES};

@@ -1,0 +1,231 @@
+//! The six simulated GPUs of the paper's benchmark hub.
+//!
+//! The paper brute-forces four kernels on an NVIDIA A100, A4000, A6000 and
+//! an AMD MI250X, W6600, W7800. We have none of these, so each is replaced
+//! by a device *model* parameterized with the published architecture
+//! numbers (SM/CU count, peak fp32 throughput, DRAM bandwidth, per-SM
+//! occupancy limits, warp/wavefront width). The cross-device diversity —
+//! compute- vs bandwidth-rich designs, 32- vs 64-wide scheduling, different
+//! occupancy ceilings — is what exercises generalization in the
+//! hyperparameter-tuning evaluation, and is preserved by these models.
+//!
+//! Following the paper's split: train = {A100, A4000, MI250X},
+//! test = {A6000, W6600, W7800}.
+
+use crate::perfmodel::contract::{self, NUM_DEVICE};
+
+/// A simulated GPU.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceModel {
+    pub name: &'static str,
+    pub vendor: &'static str,
+    /// Streaming multiprocessors (NVIDIA) / compute units (AMD).
+    pub num_sm: u32,
+    /// Peak fp32 GFLOP/s.
+    pub peak_gflops: f32,
+    /// Peak DRAM bandwidth in GB/s.
+    pub bandwidth_gbs: f32,
+    /// Max resident threads per SM.
+    pub max_threads_per_sm: u32,
+    /// Shared memory / LDS per SM in bytes.
+    pub smem_per_sm: u32,
+    /// Register file entries per SM.
+    pub regs_per_sm: u32,
+    /// Max resident blocks per SM.
+    pub max_blocks_per_sm: u32,
+    /// Warp (NVIDIA) or wavefront (AMD CDNA) width.
+    pub warp_size: u32,
+    /// Device-specific landscape seed in [0, 1): blends the two config
+    /// hashes so every device reorders the ruggedness differently.
+    pub rug_seed: f32,
+    /// Ruggedness amplitude (relative spread of the landscape term).
+    pub rug_amp: f32,
+}
+
+impl DeviceModel {
+    /// Pack into the f32 device vector of the L1/L2 contract.
+    pub fn to_vector(&self) -> [f32; NUM_DEVICE] {
+        let mut d = [0f32; NUM_DEVICE];
+        d[contract::D_NUM_SM] = self.num_sm as f32;
+        d[contract::D_PEAK_GFLOPS] = self.peak_gflops;
+        d[contract::D_BW_GBS] = self.bandwidth_gbs;
+        d[contract::D_MAX_THREADS] = self.max_threads_per_sm as f32;
+        d[contract::D_SMEM_SM] = self.smem_per_sm as f32;
+        d[contract::D_REGS_SM] = self.regs_per_sm as f32;
+        d[contract::D_MAX_BLOCKS] = self.max_blocks_per_sm as f32;
+        d[contract::D_WARP] = self.warp_size as f32;
+        d[contract::D_RUG_SEED] = self.rug_seed;
+        d[contract::D_RUG_AMP] = self.rug_amp;
+        d
+    }
+
+    /// Ratio of compute to bandwidth (FLOP per byte at peak): the machine
+    /// balance used in docs and sanity tests.
+    pub fn machine_balance(&self) -> f32 {
+        self.peak_gflops / self.bandwidth_gbs
+    }
+}
+
+/// NVIDIA A100 40GB (DAS-6): Ampere GA100.
+pub const A100: DeviceModel = DeviceModel {
+    name: "A100",
+    vendor: "NVIDIA",
+    num_sm: 108,
+    peak_gflops: 19_500.0,
+    bandwidth_gbs: 1_555.0,
+    max_threads_per_sm: 2048,
+    smem_per_sm: 167_936,
+    regs_per_sm: 65_536,
+    max_blocks_per_sm: 32,
+    warp_size: 32,
+    rug_seed: 0.137,
+    rug_amp: 0.22,
+};
+
+/// NVIDIA RTX A4000 (DAS-6): Ampere GA104, workstation.
+pub const A4000: DeviceModel = DeviceModel {
+    name: "A4000",
+    vendor: "NVIDIA",
+    num_sm: 48,
+    peak_gflops: 19_170.0,
+    bandwidth_gbs: 448.0,
+    max_threads_per_sm: 1536,
+    smem_per_sm: 102_400,
+    regs_per_sm: 65_536,
+    max_blocks_per_sm: 16,
+    warp_size: 32,
+    rug_seed: 0.389,
+    rug_amp: 0.24,
+};
+
+/// NVIDIA RTX A6000 (DAS-6): Ampere GA102, workstation.
+pub const A6000: DeviceModel = DeviceModel {
+    name: "A6000",
+    vendor: "NVIDIA",
+    num_sm: 84,
+    peak_gflops: 38_710.0,
+    bandwidth_gbs: 768.0,
+    max_threads_per_sm: 1536,
+    smem_per_sm: 102_400,
+    regs_per_sm: 65_536,
+    max_blocks_per_sm: 16,
+    warp_size: 32,
+    rug_seed: 0.611,
+    rug_amp: 0.23,
+};
+
+/// AMD MI250X (LUMI), single GCD: CDNA2, wavefront 64.
+pub const MI250X: DeviceModel = DeviceModel {
+    name: "MI250X",
+    vendor: "AMD",
+    num_sm: 110,
+    peak_gflops: 23_950.0,
+    bandwidth_gbs: 1_638.0,
+    max_threads_per_sm: 2048,
+    smem_per_sm: 65_536,
+    regs_per_sm: 65_536,
+    max_blocks_per_sm: 16,
+    warp_size: 64,
+    rug_seed: 0.743,
+    rug_amp: 0.28,
+};
+
+/// AMD Radeon PRO W6600 (DAS-6): RDNA2, wave32.
+pub const W6600: DeviceModel = DeviceModel {
+    name: "W6600",
+    vendor: "AMD",
+    num_sm: 28,
+    peak_gflops: 10_400.0,
+    bandwidth_gbs: 224.0,
+    max_threads_per_sm: 1024,
+    smem_per_sm: 65_536,
+    regs_per_sm: 65_536,
+    max_blocks_per_sm: 16,
+    warp_size: 32,
+    rug_seed: 0.877,
+    rug_amp: 0.27,
+};
+
+/// AMD Radeon PRO W7800 (DAS-6): RDNA3, wave32, dual-issue fp32.
+pub const W7800: DeviceModel = DeviceModel {
+    name: "W7800",
+    vendor: "AMD",
+    num_sm: 70,
+    peak_gflops: 45_300.0,
+    bandwidth_gbs: 576.0,
+    max_threads_per_sm: 1024,
+    smem_per_sm: 65_536,
+    regs_per_sm: 65_536,
+    max_blocks_per_sm: 16,
+    warp_size: 32,
+    rug_seed: 0.271,
+    rug_amp: 0.26,
+};
+
+/// All six devices in benchmark-hub order.
+pub fn all_devices() -> Vec<DeviceModel> {
+    vec![A100, A4000, A6000, MI250X, W6600, W7800]
+}
+
+/// Training devices of the paper's split.
+pub const TRAIN_DEVICES: [&str; 3] = ["MI250X", "A100", "A4000"];
+/// Held-out test devices of the paper's split.
+pub const TEST_DEVICES: [&str; 3] = ["W6600", "W7800", "A6000"];
+
+/// Look up a device by (case-insensitive) name.
+pub fn device_by_name(name: &str) -> Option<DeviceModel> {
+    all_devices()
+        .into_iter()
+        .find(|d| d.name.eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn six_distinct_devices() {
+        let ds = all_devices();
+        assert_eq!(ds.len(), 6);
+        let names: std::collections::HashSet<_> = ds.iter().map(|d| d.name).collect();
+        assert_eq!(names.len(), 6);
+        let seeds: std::collections::HashSet<_> =
+            ds.iter().map(|d| d.rug_seed.to_bits()).collect();
+        assert_eq!(seeds.len(), 6, "rug seeds must differ per device");
+    }
+
+    #[test]
+    fn train_test_split_partitions() {
+        let mut all: Vec<&str> = TRAIN_DEVICES.iter().chain(TEST_DEVICES.iter()).copied().collect();
+        all.sort();
+        let mut names: Vec<&str> = all_devices().iter().map(|d| d.name).collect();
+        names.sort();
+        assert_eq!(all, names);
+    }
+
+    #[test]
+    fn vector_layout_matches_contract() {
+        let v = A100.to_vector();
+        assert_eq!(v[contract::D_NUM_SM], 108.0);
+        assert_eq!(v[contract::D_WARP], 32.0);
+        assert_eq!(v[contract::D_BW_GBS], 1555.0);
+        assert!((v[contract::D_RUG_AMP] - 0.22).abs() < 1e-6);
+    }
+
+    #[test]
+    fn balance_diversity() {
+        // The set must span bandwidth-rich (A100, MI250X) and compute-rich
+        // (A6000, W7800) designs for the landscapes to diverge.
+        let balances: Vec<f32> = all_devices().iter().map(|d| d.machine_balance()).collect();
+        let min = balances.iter().cloned().fold(f32::INFINITY, f32::min);
+        let max = balances.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        assert!(max / min > 3.0, "balances {balances:?}");
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(device_by_name("a100").unwrap().name, "A100");
+        assert_eq!(device_by_name("MI250X").unwrap().warp_size, 64);
+        assert!(device_by_name("H100").is_none());
+    }
+}

@@ -1,0 +1,313 @@
+//! Exhaustive hyperparameter tuning (Section IV-B).
+//!
+//! Every hyperparameter configuration in a (limited) space is evaluated
+//! with `repeats` simulated tuning runs on each training space; the
+//! aggregate score (Eq. 3) per configuration is recorded. For the paper's
+//! Table III spaces this is e.g. 108 configs × 25 repeats × 12 spaces =
+//! 32 400 optimization runs for the genetic algorithm — tractable only in
+//! simulation mode.
+
+use super::space;
+use crate::methodology::{evaluate_algorithm, SpaceEval};
+use crate::optimizers::HyperParams;
+use crate::util::compress;
+use crate::util::json::{self, Json};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Score of one hyperparameter configuration.
+#[derive(Clone, Debug)]
+pub struct HyperResult {
+    /// Index into the hyperparameter search space.
+    pub config_idx: usize,
+    /// Stable `k=v,k=v` key of the hyperparameters.
+    pub hp_key: String,
+    /// Aggregate performance score (Eq. 3) across the training spaces.
+    pub score: f64,
+}
+
+/// The outcome of a hyperparameter tuning campaign.
+#[derive(Clone, Debug)]
+pub struct HyperTuningResults {
+    pub algo: String,
+    /// "limited" (Table III) or "extended" (Table IV).
+    pub space_kind: String,
+    pub repeats: usize,
+    pub seed: u64,
+    /// One entry per evaluated configuration (exhaustive: all of them).
+    pub results: Vec<HyperResult>,
+    /// Real wall-clock seconds the campaign took.
+    pub wallclock_seconds: f64,
+    /// Simulated device-seconds the campaign *would* have cost live.
+    pub simulated_seconds: f64,
+}
+
+impl HyperTuningResults {
+    pub fn best(&self) -> &HyperResult {
+        self.results
+            .iter()
+            .max_by(|a, b| a.score.partial_cmp(&b.score).unwrap())
+            .expect("no results")
+    }
+
+    pub fn worst(&self) -> &HyperResult {
+        self.results
+            .iter()
+            .min_by(|a, b| a.score.partial_cmp(&b.score).unwrap())
+            .expect("no results")
+    }
+
+    /// The configuration whose score is closest to the mean — the paper's
+    /// "most average-performing hyperparameter configuration".
+    pub fn most_average(&self) -> &HyperResult {
+        let mean = crate::util::stats::mean(
+            &self.results.iter().map(|r| r.score).collect::<Vec<_>>(),
+        );
+        self.results
+            .iter()
+            .min_by(|a, b| {
+                (a.score - mean)
+                    .abs()
+                    .partial_cmp(&(b.score - mean).abs())
+                    .unwrap()
+            })
+            .expect("no results")
+    }
+
+    pub fn scores(&self) -> Vec<f64> {
+        self.results.iter().map(|r| r.score).collect()
+    }
+
+    /// Hyperparameters of a result, reconstructed from its space.
+    pub fn hyperparams(&self, r: &HyperResult) -> Result<HyperParams> {
+        let sp = match self.space_kind.as_str() {
+            "limited" => space::limited_space(&self.algo)?,
+            _ => space::extended_space(&self.algo)?,
+        };
+        Ok(HyperParams::from_space_config(&sp, r.config_idx))
+    }
+
+    // ---- persistence ---------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let results: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                let mut o = Json::obj();
+                o.set("config_idx", r.config_idx.into())
+                    .set("hp_key", r.hp_key.as_str().into())
+                    .set("score", r.score.into());
+                o
+            })
+            .collect();
+        let mut j = Json::obj();
+        j.set("schema", "tunetuner-hypertuning".into())
+            .set("algo", self.algo.as_str().into())
+            .set("space_kind", self.space_kind.as_str().into())
+            .set("repeats", self.repeats.into())
+            .set("seed", (self.seed as f64).into())
+            .set("wallclock_seconds", self.wallclock_seconds.into())
+            .set("simulated_seconds", self.simulated_seconds.into())
+            .set("results", Json::Arr(results));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<HyperTuningResults> {
+        let results = j
+            .get("results")
+            .and_then(|v| v.as_arr())
+            .context("missing results")?
+            .iter()
+            .map(|r| {
+                Ok(HyperResult {
+                    config_idx: r
+                        .get("config_idx")
+                        .and_then(|v| v.as_usize())
+                        .context("missing config_idx")?,
+                    hp_key: r
+                        .get("hp_key")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or_default()
+                        .to_string(),
+                    score: r
+                        .get("score")
+                        .and_then(|v| v.as_f64())
+                        .context("missing score")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(HyperTuningResults {
+            algo: j
+                .get("algo")
+                .and_then(|v| v.as_str())
+                .context("missing algo")?
+                .to_string(),
+            space_kind: j
+                .get("space_kind")
+                .and_then(|v| v.as_str())
+                .unwrap_or("limited")
+                .to_string(),
+            repeats: j.get("repeats").and_then(|v| v.as_usize()).unwrap_or(0),
+            seed: j.get("seed").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+            wallclock_seconds: j
+                .get("wallclock_seconds")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0),
+            simulated_seconds: j
+                .get("simulated_seconds")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0),
+            results,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        compress::write_string(path, &self.to_json().to_string())
+    }
+
+    pub fn load(path: &Path) -> Result<HyperTuningResults> {
+        HyperTuningResults::from_json(&json::parse(&compress::read_string(path)?)?)
+    }
+}
+
+/// Exhaustively evaluate every hyperparameter configuration of `algo`'s
+/// space on the training spaces.
+pub fn exhaustive_tuning(
+    algo: &str,
+    hp_space: &crate::searchspace::SearchSpace,
+    space_kind: &str,
+    train: &[SpaceEval],
+    repeats: usize,
+    seed: u64,
+) -> Result<HyperTuningResults> {
+    let t0 = std::time::Instant::now();
+    let mut results = Vec::with_capacity(hp_space.len());
+    let mut simulated = 0.0;
+    for idx in 0..hp_space.len() {
+        let hp = HyperParams::from_space_config(hp_space, idx);
+        let agg = evaluate_algorithm(algo, &hp, train, repeats, seed)?;
+        // Simulated cost: every run consumes its space's full budget.
+        simulated +=
+            train.iter().map(|s| s.budget_seconds).sum::<f64>() * repeats as f64;
+        results.push(HyperResult {
+            config_idx: idx,
+            hp_key: hp.key(),
+            score: agg.score,
+        });
+        if idx % 10 == 9 {
+            crate::log_debug!(
+                "hypertuning {algo}: {}/{} configs",
+                idx + 1,
+                hp_space.len()
+            );
+        }
+    }
+    Ok(HyperTuningResults {
+        algo: algo.to_string(),
+        space_kind: space_kind.to_string(),
+        repeats,
+        seed,
+        results,
+        wallclock_seconds: t0.elapsed().as_secs_f64(),
+        simulated_seconds: simulated,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::bruteforce;
+    use crate::gpu::specs::{A100, MI250X};
+    use crate::kernels;
+    use crate::perfmodel::NoiseModel;
+    use crate::runner::LiveRunner;
+    use crate::runtime::Engine;
+    use std::sync::Arc;
+
+    fn train_spaces() -> Vec<SpaceEval> {
+        let engine = Arc::new(Engine::native());
+        [&A100, &MI250X]
+            .iter()
+            .map(|dev| {
+                let kernel = kernels::kernel_by_name("synthetic").unwrap();
+                let mut live = LiveRunner::new(
+                    kernels::kernel_by_name("synthetic").unwrap(),
+                    dev,
+                    Arc::clone(&engine),
+                    NoiseModel::default(),
+                    42,
+                );
+                let cache = Arc::new(bruteforce::bruteforce(&mut live).unwrap());
+                SpaceEval::new(kernel.space_arc(), cache, 0.95, 10)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn exhaustive_dual_annealing_small() {
+        let train = train_spaces();
+        let hp_space = space::limited_space("dual_annealing").unwrap();
+        let r = exhaustive_tuning("dual_annealing", &hp_space, "limited", &train, 5, 3)
+            .unwrap();
+        assert_eq!(r.results.len(), 8);
+        // Scores differ across methods (the hyperparameter has signal).
+        let scores = r.scores();
+        let spread = crate::util::stats::max(&scores) - crate::util::stats::min(&scores);
+        assert!(spread > 0.0, "no spread in {scores:?}");
+        assert!(r.best().score >= r.most_average().score);
+        assert!(r.most_average().score >= r.worst().score);
+        assert!(r.simulated_seconds > r.wallclock_seconds * 10.0);
+    }
+
+    #[test]
+    fn persistence_roundtrip() {
+        let r = HyperTuningResults {
+            algo: "pso".into(),
+            space_kind: "limited".into(),
+            repeats: 25,
+            seed: 9,
+            results: vec![
+                HyperResult {
+                    config_idx: 0,
+                    hp_key: "c1=1".into(),
+                    score: 0.25,
+                },
+                HyperResult {
+                    config_idx: 1,
+                    hp_key: "c1=2".into(),
+                    score: -0.5,
+                },
+            ],
+            wallclock_seconds: 12.0,
+            simulated_seconds: 99999.0,
+        };
+        let dir = std::env::temp_dir().join(format!("tt_ht_{}", std::process::id()));
+        let path = dir.join("pso.json.gz");
+        r.save(&path).unwrap();
+        let back = HyperTuningResults::load(&path).unwrap();
+        assert_eq!(back.algo, "pso");
+        assert_eq!(back.results.len(), 2);
+        assert_eq!(back.best().score, 0.25);
+        assert_eq!(back.worst().hp_key, "c1=2");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn hyperparams_reconstruction() {
+        let hp_space = space::limited_space("simulated_annealing").unwrap();
+        let train = train_spaces();
+        let r = exhaustive_tuning(
+            "simulated_annealing",
+            &hp_space,
+            "limited",
+            &train[..1],
+            2,
+            1,
+        )
+        .unwrap();
+        let hp = r.hyperparams(r.best()).unwrap();
+        assert!(hp.f64("T", -1.0) > 0.0);
+        assert_eq!(hp.key(), r.best().hp_key);
+    }
+}

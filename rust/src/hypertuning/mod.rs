@@ -1,0 +1,25 @@
+//! "Tuning the tuner": hyperparameter optimization of the optimization
+//! algorithms (Eq. 4).
+//!
+//! * [`space`] — the hyperparameter search spaces of Table III (limited,
+//!   exhaustively enumerable) and Table IV (extended, for meta-strategy
+//!   tuning), expressed with the *same* search-space engine the kernel
+//!   tuner uses — the paper's machinery reuse.
+//! * [`exhaustive`] — exhaustive hyperparameter tuning: every
+//!   hyperparameter configuration evaluated with repeated simulated runs
+//!   across the training spaces; results persisted for reuse.
+//! * [`meta`] — meta-strategies: any registered optimizer driving the
+//!   hyperparameter search, either live (running real simulations per
+//!   hyperparameter configuration, as in the paper's 7-day extended
+//!   tuning) or replayed from exhaustive results (Fig 6).
+//! * [`sensitivity`] — the Kruskal–Wallis + mutual-information screen used
+//!   to drop insensitive hyperparameters (the paper's PSO `W`).
+
+pub mod space;
+pub mod exhaustive;
+pub mod meta;
+pub mod sensitivity;
+
+pub use exhaustive::{exhaustive_tuning, HyperResult, HyperTuningResults};
+pub use meta::{meta_cache_from_results, MetaRunner};
+pub use space::{extended_space, limited_space, EXTENDED_ALGOS, LIMITED_ALGOS};

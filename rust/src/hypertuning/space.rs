@@ -1,0 +1,192 @@
+//! The hyperparameter search spaces of Tables III and IV.
+//!
+//! Hyperparameter spaces are ordinary [`SearchSpace`]s — the same engine
+//! that enumerates kernel configurations enumerates hyperparameter
+//! configurations, which is exactly what lets Kernel Tuner's optimizers be
+//! reused as meta-strategies.
+
+use crate::searchspace::{SearchSpace, TunableParam, Value};
+use anyhow::{bail, Result};
+
+/// Algorithms with a limited (Table III) hyperparameter space.
+pub const LIMITED_ALGOS: [&str; 4] = [
+    "dual_annealing",
+    "genetic_algorithm",
+    "pso",
+    "simulated_annealing",
+];
+
+/// Algorithms with an extended (Table IV) space — those with numerical
+/// hyperparameters (dual annealing's single categorical is excluded, as in
+/// the paper).
+pub const EXTENDED_ALGOS: [&str; 3] = ["genetic_algorithm", "pso", "simulated_annealing"];
+
+fn floats(values: &[f64]) -> Vec<Value> {
+    values.iter().map(|&v| Value::Float(v)).collect()
+}
+
+fn float_range(lo: f64, hi: f64, step: f64) -> Vec<Value> {
+    let mut out = Vec::new();
+    let mut v = lo;
+    while v <= hi + 1e-9 {
+        // Round to the step grid to avoid drift.
+        out.push(Value::Float((v / step).round() * step));
+        v += step;
+    }
+    out
+}
+
+/// Table III: the limited, exhaustively evaluated hyperparameter spaces.
+pub fn limited_space(algo: &str) -> Result<SearchSpace> {
+    let params = match algo {
+        "dual_annealing" => vec![TunableParam::new(
+            "method",
+            vec![
+                "COBYLA",
+                "L-BFGS-B",
+                "SLSQP",
+                "CG",
+                "Powell",
+                "Nelder-Mead",
+                "BFGS",
+                "trust-constr",
+            ],
+        )],
+        "genetic_algorithm" => vec![
+            TunableParam::new(
+                "method",
+                vec!["single_point", "two_point", "uniform", "disruptive_uniform"],
+            ),
+            TunableParam::new("popsize", vec![10i64, 20, 30]),
+            TunableParam::new("maxiter", vec![50i64, 100, 150]),
+            TunableParam::new("mutation_chance", vec![5i64, 10, 20]),
+        ],
+        "pso" => vec![
+            TunableParam::new("popsize", vec![10i64, 20, 30]),
+            TunableParam::new("maxiter", vec![50i64, 100, 150]),
+            TunableParam {
+                name: "c1".into(),
+                values: floats(&[1.0, 2.0, 3.0]),
+            },
+            TunableParam {
+                name: "c2".into(),
+                values: floats(&[0.5, 1.0, 1.5]),
+            },
+        ],
+        "simulated_annealing" => vec![
+            TunableParam {
+                name: "T".into(),
+                values: floats(&[0.5, 1.0, 1.5]),
+            },
+            TunableParam {
+                name: "T_min".into(),
+                values: floats(&[0.0001, 0.001, 0.01]),
+            },
+            TunableParam {
+                name: "alpha".into(),
+                values: floats(&[0.9925, 0.995, 0.9975]),
+            },
+            TunableParam::new("maxiter", vec![1i64, 2, 3]),
+        ],
+        other => bail!("no limited hyperparameter space for {other:?}"),
+    };
+    SearchSpace::build(&format!("hp-{algo}-limited"), params, vec![])
+}
+
+/// Table IV: the extended hyperparameter spaces for meta-strategy tuning.
+pub fn extended_space(algo: &str) -> Result<SearchSpace> {
+    let params = match algo {
+        "genetic_algorithm" => vec![
+            TunableParam::new(
+                "method",
+                vec!["single_point", "two_point", "uniform", "disruptive_uniform"],
+            ),
+            TunableParam::int_range("popsize", 2, 50, 2),
+            TunableParam::int_range("maxiter", 10, 200, 10),
+            TunableParam::int_range("mutation_chance", 5, 100, 5),
+        ],
+        "pso" => vec![
+            TunableParam::int_range("popsize", 2, 50, 2),
+            TunableParam::int_range("maxiter", 10, 200, 10),
+            TunableParam {
+                name: "c1".into(),
+                values: float_range(1.0, 3.5, 0.25),
+            },
+            TunableParam {
+                name: "c2".into(),
+                values: float_range(0.5, 2.0, 0.25),
+            },
+        ],
+        "simulated_annealing" => vec![
+            TunableParam {
+                name: "T".into(),
+                values: float_range(0.1, 2.0, 0.1),
+            },
+            TunableParam {
+                name: "T_min".into(),
+                values: float_range(0.0001, 0.1, 0.001),
+            },
+            TunableParam {
+                name: "alpha".into(),
+                values: floats(&[0.9925, 0.995, 0.9975]),
+            },
+            TunableParam::int_range("maxiter", 1, 10, 1),
+        ],
+        other => bail!("no extended hyperparameter space for {other:?}"),
+    };
+    SearchSpace::build(&format!("hp-{algo}-extended"), params, vec![])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn limited_space_sizes_match_table3() {
+        // Table III cardinalities: DA 8, GA 4*3*3*3=108, PSO 3*3*3*3=81,
+        // SA 3*3*3*3=81.
+        assert_eq!(limited_space("dual_annealing").unwrap().len(), 8);
+        assert_eq!(limited_space("genetic_algorithm").unwrap().len(), 108);
+        assert_eq!(limited_space("pso").unwrap().len(), 81);
+        assert_eq!(limited_space("simulated_annealing").unwrap().len(), 81);
+    }
+
+    #[test]
+    fn extended_spaces_are_much_larger() {
+        for algo in EXTENDED_ALGOS {
+            let lim = limited_space(algo).unwrap().len();
+            let ext = extended_space(algo).unwrap().len();
+            assert!(ext > 50 * lim, "{algo}: {ext} vs {lim}");
+        }
+        // Table IV cardinalities.
+        assert_eq!(
+            extended_space("genetic_algorithm").unwrap().len(),
+            4 * 25 * 20 * 20
+        );
+        assert_eq!(extended_space("pso").unwrap().len(), 25 * 20 * 11 * 7);
+        assert_eq!(
+            extended_space("simulated_annealing").unwrap().len(),
+            20 * 100 * 3 * 10
+        );
+    }
+
+    #[test]
+    fn configs_convert_to_hyperparams() {
+        use crate::optimizers::HyperParams;
+        let s = limited_space("genetic_algorithm").unwrap();
+        let hp = HyperParams::from_space_config(&s, 0);
+        assert!(!hp.str("method", "").is_empty());
+        assert!(hp.usize("popsize", 0) > 0);
+        // Every config must be accepted by the optimizer factory.
+        for idx in [0, s.len() / 2, s.len() - 1] {
+            let hp = HyperParams::from_space_config(&s, idx);
+            assert!(crate::optimizers::create("genetic_algorithm", &hp).is_ok());
+        }
+    }
+
+    #[test]
+    fn unknown_algo_rejected() {
+        assert!(limited_space("nope").is_err());
+        assert!(extended_space("dual_annealing").is_err());
+    }
+}

@@ -1,0 +1,142 @@
+//! 2D convolution: 15×15 stencil filter over a 4096×4096 image.
+//!
+//! Modeled after the Kernel Tuner convolution example the paper uses:
+//! 2D thread blocks, per-thread output tiling, optional shared-memory
+//! input staging with padding (bank-conflict avoidance), and read-only
+//! cache usage. Compute-bound: 225 MACs per output pixel.
+
+use super::{geti, Kernel};
+use crate::perfmodel::analytical::Features;
+use crate::perfmodel::contract::*;
+use crate::searchspace::{Constraint, SearchSpace, TunableParam, Value};
+use anyhow::Result;
+
+const W: f64 = 4096.0;
+const H: f64 = 4096.0;
+const FILTER: f64 = 15.0; // 15x15
+
+const BSX: usize = 0;
+const BSY: usize = 1;
+const TSX: usize = 2;
+const TSY: usize = 3;
+const USE_PADDING: usize = 4;
+const READ_ONLY: usize = 5;
+const UNROLL: usize = 6;
+
+pub fn build() -> Result<Kernel> {
+    let params = vec![
+        TunableParam::new("block_size_x", vec![16i64, 32, 48, 64, 96, 128]),
+        TunableParam::new("block_size_y", vec![1i64, 2, 4, 8, 16]),
+        TunableParam::new("tile_size_x", vec![1i64, 2, 4, 8]),
+        TunableParam::new("tile_size_y", vec![1i64, 2, 4, 8]),
+        TunableParam::new("use_padding", vec![0i64, 1]),
+        TunableParam::new("read_only", vec![0i64, 1]),
+        TunableParam::new("unroll_filter", vec![0i64, 1]),
+    ];
+    let constraints = vec![
+        Constraint::parse("block_size_x * block_size_y >= 32")?,
+        Constraint::parse("block_size_x * block_size_y <= 1024")?,
+        // Per-thread tile kept within register budget.
+        Constraint::parse("tile_size_x * tile_size_y <= 16")?,
+        // Shared-memory staging (use_padding) needs the halo to fit LDS.
+        Constraint::parse(
+            "use_padding == 0 || (block_size_x * tile_size_x + 14) * (block_size_y * tile_size_y + 14) * 4 <= 65536",
+        )?,
+        // Padding only helps when x-dim is warp-aligned.
+        Constraint::parse("use_padding == 0 || block_size_x % 16 == 0")?,
+    ];
+    let space = SearchSpace::build("convolution", params, constraints)?;
+    Ok(Kernel {
+        name: "convolution",
+        problem: format!("{W}x{H} image, {FILTER}x{FILTER} filter, fp32"),
+        space: std::sync::Arc::new(space),
+        extract,
+    })
+}
+
+fn extract(values: &[Value]) -> Features {
+    let bsx = geti(values, BSX);
+    let bsy = geti(values, BSY);
+    let tsx = geti(values, TSX);
+    let tsy = geti(values, TSY);
+    let padding = geti(values, USE_PADDING);
+    let read_only = geti(values, READ_ONLY);
+    let unroll = geti(values, UNROLL);
+
+    let tpb = bsx * bsy;
+    let out_w = bsx * tsx;
+    let out_h = bsy * tsy;
+    let blocks = (W / out_w).ceil() * (H / out_h).ceil();
+
+    let flops = W * H * FILTER * FILTER * 2.0;
+    // Input halo per block; staging (padding) loads it once, otherwise the
+    // cache absorbs some of the 225x re-reads.
+    let halo_bytes = (out_w + FILTER - 1.0) * (out_h + FILTER - 1.0) * 4.0;
+    let reread = if padding > 0.0 {
+        1.0
+    } else if read_only > 0.0 {
+        2.5
+    } else {
+        4.0
+    };
+    let bytes = blocks * halo_bytes * reread + W * H * 4.0;
+
+    let smem = if padding > 0.0 { halo_bytes + (out_h + FILTER - 1.0) * 4.0 } else { 0.0 };
+    let regs = (20.0 + 2.0 * tsx * tsy + unroll * 24.0).min(255.0);
+
+    let mut f = [0f32; NUM_FEATURES];
+    f[F_FLOPS] = flops as f32;
+    f[F_BYTES] = bytes as f32;
+    f[F_TPB] = tpb as f32;
+    f[F_REGS] = regs as f32;
+    f[F_SMEM] = smem as f32;
+    f[F_BLOCKS] = blocks as f32;
+    f[F_VECW] = tsx.min(8.0) as f32;
+    f[F_UNROLL] = if unroll > 0.0 { 8.0 } else { 1.0 };
+    f[F_COAL] = ((bsx / 128.0).min(1.0) * 0.5 + 0.5) as f32;
+    f[F_CACHE] = (read_only * 0.7 + padding * 0.3) as f32;
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn space_builds() {
+        let k = build().unwrap();
+        assert!(k.space().len() > 500);
+    }
+
+    #[test]
+    fn staging_cuts_traffic() {
+        let k = build().unwrap();
+        let s = k.space();
+        for i in 0..s.len() {
+            let v = s.values(i);
+            if v[USE_PADDING].as_i64() == Some(1) {
+                let mut enc = s.encoded(i).clone();
+                enc[USE_PADDING] = 0;
+                if let Some(j) = s.index_of(&enc) {
+                    assert!(k.features(i)[F_BYTES] < k.features(j)[F_BYTES]);
+                    return;
+                }
+            }
+        }
+        panic!("no padding pair found");
+    }
+
+    #[test]
+    fn high_arithmetic_intensity() {
+        // Median over the space (config 0 is the worst-tiled corner).
+        let k = build().unwrap();
+        let mut ints: Vec<f64> = (0..k.space().len())
+            .map(|i| {
+                let f = k.features(i);
+                f[F_FLOPS] as f64 / f[F_BYTES] as f64
+            })
+            .collect();
+        ints.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!(ints[ints.len() / 2] > 14.0, "median {}", ints[ints.len() / 2]);
+    }
+}

@@ -1,0 +1,154 @@
+//! GEMM: dense matrix–matrix multiplication, C = alpha*A*B + beta*C.
+//!
+//! Modeled after the CLBlast kernel the paper tunes: workgroup tile sizes
+//! (MWG, NWG, KWG), thread-block shape (MDIMC, NDIMC), per-thread vector
+//! widths (VWM, VWN) and the shared-memory staging toggles (SA, SB). The
+//! constraints are the classic CLBlast divisibility and capacity rules.
+//! Compute-bound at M = N = K = 4096.
+
+use super::{geti, Kernel};
+use crate::perfmodel::analytical::Features;
+use crate::perfmodel::contract::*;
+use crate::searchspace::{Constraint, SearchSpace, TunableParam, Value};
+use anyhow::Result;
+
+const M: f64 = 4096.0;
+const N: f64 = 4096.0;
+const K: f64 = 4096.0;
+
+// Parameter order (indices into the values slice).
+const MWG: usize = 0;
+const NWG: usize = 1;
+const KWG: usize = 2;
+const MDIMC: usize = 3;
+const NDIMC: usize = 4;
+const VWM: usize = 5;
+const VWN: usize = 6;
+const SA: usize = 7;
+const SB: usize = 8;
+
+pub fn build() -> Result<Kernel> {
+    let params = vec![
+        TunableParam::new("MWG", vec![16i64, 32, 64, 128]),
+        TunableParam::new("NWG", vec![16i64, 32, 64, 128]),
+        TunableParam::new("KWG", vec![16i64, 32]),
+        TunableParam::new("MDIMC", vec![8i64, 16, 32]),
+        TunableParam::new("NDIMC", vec![8i64, 16, 32]),
+        TunableParam::new("VWM", vec![1i64, 2, 4, 8]),
+        TunableParam::new("VWN", vec![1i64, 2, 4, 8]),
+        TunableParam::new("SA", vec![0i64, 1]),
+        TunableParam::new("SB", vec![0i64, 1]),
+    ];
+    let constraints = vec![
+        // Work distribution must divide the workgroup tile.
+        Constraint::parse("MWG % (MDIMC * VWM) == 0")?,
+        Constraint::parse("NWG % (NDIMC * VWN) == 0")?,
+        // Thread block between one warp and the hardware limit.
+        Constraint::parse("MDIMC * NDIMC >= 32 && MDIMC * NDIMC <= 1024")?,
+        // KWG unrolling must cover the staging strides.
+        Constraint::parse("KWG % VWM == 0 && KWG % VWN == 0")?,
+        // Shared-memory staging must fit the smallest LDS (64 KiB).
+        Constraint::parse("(SA * MWG + SB * NWG) * KWG * 4 <= 65536")?,
+    ];
+    let space = SearchSpace::build("gemm", params, constraints)?;
+    Ok(Kernel {
+        name: "gemm",
+        problem: format!("C[{M}x{N}] = A[{M}x{K}] * B[{K}x{N}], fp32"),
+        space: std::sync::Arc::new(space),
+        extract,
+    })
+}
+
+fn extract(values: &[Value]) -> Features {
+    let mwg = geti(values, MWG);
+    let nwg = geti(values, NWG);
+    let kwg = geti(values, KWG);
+    let mdimc = geti(values, MDIMC);
+    let ndimc = geti(values, NDIMC);
+    let vwm = geti(values, VWM);
+    let vwn = geti(values, VWN);
+    let sa = geti(values, SA);
+    let sb = geti(values, SB);
+
+    let tpb = mdimc * ndimc;
+    // Per-thread accumulator tile + staging pointers.
+    let wpt_m = mwg / mdimc;
+    let wpt_n = nwg / ndimc;
+    let regs = (16.0 + wpt_m * wpt_n + 2.0 * (vwm + vwn)).min(255.0);
+    let smem = (sa * mwg + sb * nwg) * kwg * 4.0;
+    let blocks = (M / mwg) * (N / nwg);
+
+    let flops = 2.0 * M * N * K;
+    // Tiled traffic: each column-panel of C re-reads A (and row-panel
+    // re-reads B); skipping shared-memory staging costs extra traffic.
+    let a_bytes = M * K * 4.0 * (N / nwg) * if sa > 0.0 { 1.0 } else { 1.6 };
+    let b_bytes = N * K * 4.0 * (M / mwg) * if sb > 0.0 { 1.0 } else { 1.6 };
+    let c_bytes = M * N * 4.0 * 2.0;
+    // L2 captures most of the panel re-reads; scale to effective DRAM traffic.
+    let bytes = (a_bytes + b_bytes) / 48.0 + c_bytes;
+
+    let mut f = [0f32; NUM_FEATURES];
+    f[F_FLOPS] = flops as f32;
+    f[F_BYTES] = bytes as f32;
+    f[F_TPB] = tpb as f32;
+    f[F_REGS] = regs as f32;
+    f[F_SMEM] = smem as f32;
+    f[F_BLOCKS] = blocks as f32;
+    f[F_VECW] = vwm as f32;
+    f[F_UNROLL] = (kwg / 8.0) as f32;
+    // Wider M-vectors coalesce the dominant A/C accesses.
+    f[F_COAL] = (0.25 + 0.25 * (vwm.log2() + 1.0)).min(1.0) as f32;
+    f[F_CACHE] = ((sa + sb) / 2.0) as f32;
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn space_size_and_constraints() {
+        let k = build().unwrap();
+        let s = k.space();
+        assert!(s.len() > 500, "{}", s.len());
+        for i in (0..s.len()).step_by(7) {
+            let v = s.values(i);
+            let mwg = v[MWG].as_i64().unwrap();
+            let mdimc = v[MDIMC].as_i64().unwrap();
+            let vwm = v[VWM].as_i64().unwrap();
+            assert_eq!(mwg % (mdimc * vwm), 0);
+        }
+    }
+
+    #[test]
+    fn flops_constant_bytes_vary() {
+        let k = build().unwrap();
+        let f0 = k.features(0);
+        let f1 = k.features(k.space().len() - 1);
+        assert_eq!(f0[F_FLOPS], f1[F_FLOPS]);
+        assert_ne!(f0[F_BYTES], f1[F_BYTES]);
+        // 2*4096^3 ~ 1.37e11
+        assert!((f0[F_FLOPS] as f64 - 2.0 * 4096f64.powi(3)).abs() < 1e6);
+    }
+
+    #[test]
+    fn staging_reduces_traffic() {
+        let k = build().unwrap();
+        let s = k.space();
+        // Find two configs differing only in SA.
+        for i in 0..s.len() {
+            let vi = s.values(i);
+            if vi[SA].as_i64() == Some(1) {
+                let mut enc = s.encoded(i).clone();
+                enc[SA] = 0; // SA value index: values are [0, 1]
+                if let Some(j) = s.index_of(&enc) {
+                    let fi = k.features(i);
+                    let fj = k.features(j);
+                    assert!(fi[F_BYTES] < fj[F_BYTES]);
+                    return;
+                }
+            }
+        }
+        panic!("no SA pair found");
+    }
+}

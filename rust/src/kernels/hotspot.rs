@@ -1,0 +1,183 @@
+//! Hotspot: thermal simulation stencil (Rodinia-style) on an 8192² grid.
+//!
+//! Iteratively solves the temperature diffusion equation from power and
+//! temperature inputs; a measurement runs the full 1000-timestep
+//! simulation. The key tunable is *temporal tiling*: executing several
+//! timesteps per kernel launch trades redundant halo computation for DRAM
+//! traffic — a classically rugged, bandwidth-bound tuning space (and the
+//! application all four algorithms struggled with in the paper's Fig. 4).
+//! Long per-configuration runtimes also make hotspot one of the most
+//! expensive spaces to brute-force, as in the paper's Table II.
+
+use super::{geti, Kernel};
+use crate::perfmodel::analytical::Features;
+use crate::perfmodel::contract::*;
+use crate::searchspace::{Constraint, SearchSpace, TunableParam, Value};
+use anyhow::Result;
+
+const W: f64 = 8192.0;
+const H: f64 = 8192.0;
+const FLOP_PER_POINT: f64 = 15.0;
+/// Total simulated timesteps per measurement.
+const N_STEPS: f64 = 1000.0;
+
+const BSX: usize = 0;
+const BSY: usize = 1;
+const TSX: usize = 2;
+const TTF: usize = 3;
+const SH_POWER: usize = 4;
+const BPS: usize = 5; // blocks-per-SM launch-bounds hint
+
+pub fn build() -> Result<Kernel> {
+    let params = vec![
+        TunableParam::new("block_size_x", vec![8i64, 16, 32, 64, 128, 256]),
+        TunableParam::new("block_size_y", vec![2i64, 4, 8, 16, 32]),
+        TunableParam::new("tile_size_x", vec![1i64, 2, 4, 8]),
+        TunableParam::new("temporal_tiling_factor", vec![1i64, 2, 3, 4, 6, 8, 10]),
+        TunableParam::new("sh_power", vec![0i64, 1]),
+        TunableParam::new("blocks_per_sm", vec![0i64, 2, 4, 8]),
+    ];
+    let constraints = vec![
+        Constraint::parse("block_size_x * block_size_y >= 32")?,
+        Constraint::parse("block_size_x * block_size_y <= 1024")?,
+        // The temporal halo must leave a positive output tile.
+        Constraint::parse("block_size_x * tile_size_x - 2 * temporal_tiling_factor >= 8")?,
+        Constraint::parse("block_size_y - 2 * temporal_tiling_factor >= 1 || block_size_y * 4 > temporal_tiling_factor * 8")?,
+        // Staged temperature+power planes must fit LDS.
+        Constraint::parse(
+            "(block_size_x * tile_size_x + 2 * temporal_tiling_factor) * (block_size_y + 2 * temporal_tiling_factor) * 4 * (1 + sh_power) <= 65536",
+        )?,
+        // A launch-bounds hint must be satisfiable thread-count-wise.
+        Constraint::parse("blocks_per_sm == 0 || blocks_per_sm * block_size_x * block_size_y <= 2048")?,
+    ];
+    let space = SearchSpace::build("hotspot", params, constraints)?;
+    Ok(Kernel {
+        name: "hotspot",
+        problem: format!("{W}x{H} grid thermal stencil, {N_STEPS} timesteps, fp32"),
+        space: std::sync::Arc::new(space),
+        extract,
+    })
+}
+
+fn extract(values: &[Value]) -> Features {
+    let bsx = geti(values, BSX);
+    let bsy = geti(values, BSY);
+    let tsx = geti(values, TSX);
+    let ttf = geti(values, TTF);
+    let sh_power = geti(values, SH_POWER);
+    let bps = geti(values, BPS);
+
+    let tpb = bsx * bsy;
+    let out_w = bsx * tsx - 2.0 * ttf;
+    let out_h = (bsy - 2.0 * ttf).max(bsy * 0.25);
+    // One launch covers the grid; the full simulation needs N_STEPS/ttf
+    // launches (each advancing ttf steps).
+    let launches = (N_STEPS / ttf).ceil();
+    let blocks = (W / out_w).ceil() * (H / out_h).ceil();
+
+    // Redundant halo compute inflates FLOPs per launch.
+    let tile_area = (bsx * tsx) * bsy;
+    let useful_area = out_w * out_h;
+    let redundancy = tile_area / useful_area;
+    let flops = W * H * FLOP_PER_POINT * N_STEPS * redundancy;
+
+    // Traffic per launch: temp in+out, power in, plus block halos; temporal
+    // tiling amortizes it over ttf steps.
+    let halo_bytes =
+        blocks * ((bsx * tsx + 2.0 * ttf) * (bsy + 2.0 * ttf) - tile_area).max(0.0) * 4.0;
+    let bytes = (W * H * 4.0 * 3.0 + halo_bytes) * launches;
+
+    let smem = (bsx * tsx + 2.0 * ttf) * (bsy + 2.0 * ttf) * 4.0 * (1.0 + sh_power);
+    // A launch-bounds hint caps register allocation to keep `bps` blocks
+    // resident, trading spilling (handled as unroll penalty) for occupancy.
+    let regs_natural = 24.0 + 4.0 * tsx + 2.0 * ttf;
+    let regs = if bps > 0.0 {
+        regs_natural.min((65536.0 / (bps * tpb)).floor())
+    } else {
+        regs_natural
+    };
+
+    let mut f = [0f32; NUM_FEATURES];
+    f[F_FLOPS] = flops as f32;
+    f[F_BYTES] = bytes as f32;
+    f[F_TPB] = tpb as f32;
+    f[F_REGS] = regs.min(255.0) as f32;
+    f[F_SMEM] = smem as f32;
+    f[F_BLOCKS] = (blocks * launches).min(f32::MAX as f64) as f32;
+    f[F_VECW] = tsx as f32;
+    f[F_UNROLL] = ttf.min(16.0) as f32;
+    f[F_COAL] = ((bsx / 256.0).min(1.0) * 0.4 + 0.6) as f32;
+    f[F_CACHE] = (sh_power * 0.8) as f32;
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn space_builds() {
+        let k = build().unwrap();
+        assert!(k.space().len() > 1000, "{}", k.space().len());
+    }
+
+    #[test]
+    fn temporal_tiling_amortizes_traffic() {
+        let k = build().unwrap();
+        let s = k.space();
+        // Find configs differing only in ttf (value idx 0 vs later).
+        for i in 0..s.len() {
+            let enc = s.encoded(i);
+            if enc[TTF] == 0 {
+                let mut e2 = enc.clone();
+                e2[TTF] = 3;
+                if let Some(j) = s.index_of(&e2) {
+                    let fi = k.features(i);
+                    let fj = k.features(j);
+                    // More ttf -> more redundant flops but less traffic.
+                    assert!(fj[F_FLOPS] > fi[F_FLOPS]);
+                    assert!(fj[F_BYTES] < fi[F_BYTES]);
+                    return;
+                }
+            }
+        }
+        panic!("no ttf pair found");
+    }
+
+    #[test]
+    fn launch_bounds_hint_caps_registers() {
+        let k = build().unwrap();
+        let s = k.space();
+        let mut checked = 0usize;
+        let mut capped = 0usize;
+        for i in 0..s.len() {
+            let v = s.values(i);
+            let bps = v[BPS].as_i64().unwrap();
+            if bps == 0 {
+                continue;
+            }
+            let tpb = (v[BSX].as_i64().unwrap() * v[BSY].as_i64().unwrap()) as f64;
+            let cap = (65536.0 / (bps as f64 * tpb)).floor();
+            let regs = k.features(i)[F_REGS] as f64;
+            assert!(regs <= cap + 1e-6, "config {i}: regs {regs} > cap {cap}");
+            checked += 1;
+            // Count configs where the hint actually bites.
+            let v = s.values(i);
+            let natural = 24.0
+                + 4.0 * v[TSX].as_i64().unwrap() as f64
+                + 2.0 * v[TTF].as_i64().unwrap() as f64;
+            if cap < natural {
+                capped += 1;
+            }
+        }
+        assert!(checked > 100);
+        assert!(capped > 10, "the hint never binds ({capped})");
+    }
+
+    #[test]
+    fn bandwidth_bound_regime() {
+        let k = build().unwrap();
+        let f = k.features(0);
+        assert!(f[F_FLOPS] / f[F_BYTES] < 30.0);
+    }
+}

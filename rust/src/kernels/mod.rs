@@ -1,0 +1,219 @@
+//! The four tuning problems of the paper's benchmark hub.
+//!
+//! Each kernel definition carries its tunable parameters, the validity
+//! constraints of the implementation, and a *feature extractor* that maps
+//! a configuration to the resource-usage feature vector the device model
+//! consumes (total FLOPs, DRAM traffic, threads/block, registers, shared
+//! memory, grid size, vectorization, coalescing, caching, and the two
+//! landscape hashes). Features are device-independent; all device effects
+//! live in the model itself.
+//!
+//! The four kernels mirror the paper's: dedispersion and hotspot are
+//! bandwidth-bound, convolution and GEMM compute-bound, giving the
+//! cross-application diversity that the hyperparameter generalization
+//! experiments need.
+
+pub mod gemm;
+pub mod convolution;
+pub mod hotspot;
+pub mod dedispersion;
+pub mod synthetic;
+
+use crate::perfmodel::analytical::Features;
+use crate::perfmodel::contract::{F_HASH_A, F_HASH_B};
+use crate::searchspace::{SearchSpace, Value};
+use crate::util::rng::mix64;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// A tuning problem: a named kernel with a search space and a feature
+/// extractor for the device model.
+pub struct Kernel {
+    pub name: &'static str,
+    /// Human description of the problem size being tuned.
+    pub problem: String,
+    space: Arc<SearchSpace>,
+    extract: fn(&[Value]) -> Features,
+}
+
+impl Kernel {
+    pub fn space(&self) -> &SearchSpace {
+        &self.space
+    }
+
+    /// Shared handle to the search space (avoids re-enumeration when many
+    /// repeated runs need it).
+    pub fn space_arc(&self) -> Arc<SearchSpace> {
+        Arc::clone(&self.space)
+    }
+
+    /// Feature vector for the configuration at `idx`, with the two
+    /// landscape hashes filled from a deterministic per-(kernel, config)
+    /// stream.
+    pub fn features(&self, idx: usize) -> Features {
+        let values = self.space.values(idx);
+        let mut f = (self.extract)(&values);
+        let kernel_seed = str_seed(self.name);
+        let cfg_seed = str_seed(&self.space.key(idx));
+        let h = mix64(kernel_seed, cfg_seed);
+        f[F_HASH_A] = unit_from_bits(h);
+        f[F_HASH_B] = unit_from_bits(h.rotate_left(32) ^ 0x5bf0_3635);
+        f
+    }
+
+    /// All feature vectors, in configuration-index order.
+    pub fn all_features(&self) -> Vec<Features> {
+        (0..self.space.len()).map(|i| self.features(i)).collect()
+    }
+}
+
+/// FNV-1a of a string, for seeding per-kernel/config hash streams.
+pub fn str_seed(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Map 64 random bits to f32 in [0, 1).
+fn unit_from_bits(h: u64) -> f32 {
+    (h >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+}
+
+/// All four paper kernels.
+pub fn all_kernels() -> Result<Vec<Kernel>> {
+    Ok(vec![
+        dedispersion::build()?,
+        convolution::build()?,
+        hotspot::build()?,
+        gemm::build()?,
+    ])
+}
+
+/// Look up a kernel by name (case-insensitive).
+pub fn kernel_by_name(name: &str) -> Result<Kernel> {
+    match name.to_ascii_lowercase().as_str() {
+        "gemm" => gemm::build(),
+        "convolution" | "conv" => convolution::build(),
+        "hotspot" => hotspot::build(),
+        "dedispersion" | "dedisp" => dedispersion::build(),
+        "synthetic" => synthetic::build(),
+        other => anyhow::bail!("unknown kernel {other:?}"),
+    }
+}
+
+/// Shorthand used by the kernel definitions.
+pub(crate) fn geti(values: &[Value], i: usize) -> f64 {
+    values[i].as_f64().expect("numeric parameter")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::contract::*;
+    use crate::gpu::specs::all_devices;
+    use crate::perfmodel::analytical::predict_time;
+
+    #[test]
+    fn all_kernels_build_with_reasonable_spaces() {
+        for k in all_kernels().unwrap() {
+            let n = k.space().len();
+            assert!(
+                (200..200_000).contains(&n),
+                "{}: {} valid configs",
+                k.name,
+                n
+            );
+            // Constraint filtering really happened.
+            assert!((n as u128) < k.space().cartesian_size());
+        }
+    }
+
+    #[test]
+    fn features_are_finite_and_positive() {
+        for k in all_kernels().unwrap() {
+            for idx in (0..k.space().len()).step_by(17) {
+                let f = k.features(idx);
+                assert!(f.iter().all(|x| x.is_finite()), "{}@{idx}: {f:?}", k.name);
+                assert!(f[F_FLOPS] > 0.0);
+                assert!(f[F_BYTES] > 0.0);
+                assert!(f[F_TPB] >= 32.0);
+                assert!(f[F_BLOCKS] >= 1.0);
+                assert!((0.0..1.0).contains(&f[F_HASH_A]));
+                assert!((0.0..1.0).contains(&f[F_HASH_B]));
+                assert!((0.0..=1.0).contains(&f[F_COAL]));
+                assert!((0.0..=1.0).contains(&f[F_CACHE]));
+            }
+        }
+    }
+
+    #[test]
+    fn hashes_differ_across_configs() {
+        let k = gemm::build().unwrap();
+        let a = k.features(0)[F_HASH_A];
+        let b = k.features(1)[F_HASH_A];
+        assert_ne!(a, b);
+        // but stable per config
+        assert_eq!(k.features(0)[F_HASH_A], a);
+    }
+
+    #[test]
+    fn most_configs_launch_on_every_device() {
+        // A space where almost nothing is valid on a device would make
+        // tuning degenerate; require >= 30% launchable everywhere.
+        for k in all_kernels().unwrap() {
+            for dev in all_devices() {
+                let d = dev.to_vector();
+                let total = k.space().len();
+                let valid = (0..total)
+                    .step_by(3)
+                    .filter(|&i| predict_time(&k.features(i), &d) < INVALID_TIME)
+                    .count();
+                let frac = valid as f64 / (total as f64 / 3.0);
+                assert!(
+                    frac > 0.3,
+                    "{} on {}: only {frac:.2} launchable",
+                    k.name,
+                    dev.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn intended_boundedness_regimes() {
+        // dedispersion/hotspot bandwidth-bound, gemm/convolution
+        // compute-bound — separated by median arithmetic intensity
+        // (flop/byte); 14 sits between the two clusters and below the
+        // machine balance of the bandwidth-rich devices.
+        for k in all_kernels().unwrap() {
+            let mut intensities: Vec<f64> = (0..k.space().len())
+                .step_by(5)
+                .map(|i| {
+                    let f = k.features(i);
+                    f[F_FLOPS] as f64 / f[F_BYTES] as f64
+                })
+                .collect();
+            intensities.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let med = intensities[intensities.len() / 2];
+            match k.name {
+                "gemm" | "convolution" => {
+                    assert!(med > 14.0, "{} intensity {med}", k.name)
+                }
+                "dedispersion" | "hotspot" => {
+                    assert!(med < 14.0, "{} intensity {med}", k.name)
+                }
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_lookup() {
+        assert!(kernel_by_name("GEMM").is_ok());
+        assert!(kernel_by_name("conv").is_ok());
+        assert!(kernel_by_name("nope").is_err());
+    }
+}

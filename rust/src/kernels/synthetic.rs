@@ -1,0 +1,76 @@
+//! A small synthetic kernel for tests and examples: a few hundred valid
+//! configurations with the same feature plumbing as the real kernels, so
+//! unit tests of runners/optimizers/methodology stay fast.
+
+use super::{geti, Kernel};
+use crate::perfmodel::analytical::Features;
+use crate::perfmodel::contract::*;
+use crate::searchspace::{Constraint, SearchSpace, TunableParam, Value};
+use anyhow::Result;
+
+pub fn build() -> Result<Kernel> {
+    build_sized(1.0)
+}
+
+/// `scale` multiplies the problem size (used by scaling benches).
+pub fn build_sized(scale: f64) -> Result<Kernel> {
+    let params = vec![
+        TunableParam::new("block_size_x", vec![32i64, 64, 128, 256, 512]),
+        TunableParam::new("block_size_y", vec![1i64, 2, 4]),
+        TunableParam::new("tile", vec![1i64, 2, 4, 8]),
+        TunableParam::new("vector", vec![1i64, 2, 4]),
+        TunableParam::new("cache", vec![0i64, 1]),
+    ];
+    let constraints = vec![
+        Constraint::parse("block_size_x * block_size_y <= 1024")?,
+        Constraint::parse("tile % vector == 0")?,
+    ];
+    let space = SearchSpace::build("synthetic", params, constraints)?;
+    // The extractor can't capture `scale` (fn pointer), so problem scale is
+    // fixed; build_sized exists for API compatibility in benches.
+    let _ = scale;
+    Ok(Kernel {
+        name: "synthetic",
+        problem: "synthetic 1e9-flop workload".to_string(),
+        space: std::sync::Arc::new(space),
+        extract,
+    })
+}
+
+fn extract(values: &[Value]) -> Features {
+    let bsx = geti(values, 0);
+    let bsy = geti(values, 1);
+    let tile = geti(values, 2);
+    let vector = geti(values, 3);
+    let cache = geti(values, 4);
+
+    let tpb = bsx * bsy;
+    let work = 16_777_216.0; // 2^24 points
+    let per_block = tpb * tile;
+    let blocks = (work / per_block).ceil();
+
+    let mut f = [0f32; NUM_FEATURES];
+    f[F_FLOPS] = (work * 64.0) as f32;
+    f[F_BYTES] = (work * 8.0 / tile.sqrt()) as f32;
+    f[F_TPB] = tpb as f32;
+    f[F_REGS] = (16.0 + tile * 4.0) as f32;
+    f[F_SMEM] = (tile * tpb * 4.0 * cache) as f32;
+    f[F_BLOCKS] = blocks as f32;
+    f[F_VECW] = vector as f32;
+    f[F_UNROLL] = tile as f32;
+    f[F_COAL] = (0.5 + 0.125 * vector) as f32;
+    f[F_CACHE] = cache as f32;
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_but_nontrivial() {
+        let k = build().unwrap();
+        let n = k.space().len();
+        assert!((50..1000).contains(&n), "{n}");
+    }
+}

@@ -1,0 +1,49 @@
+//! # tunetuner — "Tuning the Tuner" in Rust + JAX + Pallas
+//!
+//! A production-grade auto-tuning framework with the paper's contribution —
+//! generalized **hyperparameter tuning of the auto-tuner's own optimization
+//! algorithms** — integrated as a first-class feature:
+//!
+//! * [`searchspace`] — constraint-based search-space engine (params,
+//!   constraint expression language, enumeration, neighbor graphs).
+//! * [`kernels`] — the four tuning problems of the paper (GEMM, 2D
+//!   convolution, hotspot, dedispersion) as kernel specs with resource-usage
+//!   feature extraction.
+//! * [`gpu`] — the six simulated target devices (A100, A4000, A6000,
+//!   MI250X, W6600, W7800).
+//! * [`perfmodel`] — the analytical device model (Rust oracle of the L1
+//!   Pallas kernel) and the measurement-noise model.
+//! * [`runtime`] — PJRT runtime loading the AOT artifacts
+//!   (`artifacts/perfmodel_b*.hlo.txt`) produced by `python/compile/aot.py`.
+//! * [`runner`] — live runner (PJRT device model) and the paper's
+//!   **simulation mode** (trace replay with simulated-clock accounting).
+//! * [`dataset`] — brute-force driver, T1/T4 JSON formats, and the
+//!   gzip-compressed FAIR benchmark hub.
+//! * [`optimizers`] — ten optimization algorithms with exposed
+//!   hyperparameters.
+//! * [`methodology`] — baseline curves, the performance score `P` (Eq. 2)
+//!   and its cross-search-space aggregation (Eq. 3).
+//! * [`hypertuning`] — exhaustive and meta-strategy hyperparameter tuning
+//!   (Eq. 4), with the Table III / Table IV hyperparameter spaces.
+//! * [`experiments`] — one regenerator per paper table/figure.
+//! * [`util`] — offline substrates (JSON, RNG, stats, CLI, logging,
+//!   compression, ASCII tables/plots).
+
+pub mod util;
+pub mod searchspace;
+pub mod kernels;
+pub mod gpu;
+pub mod perfmodel;
+pub mod runtime;
+pub mod runner;
+pub mod dataset;
+pub mod optimizers;
+pub mod methodology;
+pub mod hypertuning;
+pub mod experiments;
+pub mod report;
+
+/// Crate version string.
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

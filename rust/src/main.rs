@@ -1,0 +1,295 @@
+//! tunetuner CLI — the leader entrypoint.
+//!
+//! ```text
+//! tunetuner info
+//! tunetuner bruteforce [--kernels k1,k2] [--devices d1,d2]
+//! tunetuner tune <kernel> <device> [--algo NAME] [--hp k=v,k=v] [--repeats N]
+//! tunetuner hypertune <algo> [--kind limited|extended]
+//! tunetuner sensitivity <algo>
+//! tunetuner experiment <table2|table3|table4|fig2..fig9|all>
+//! ```
+//!
+//! Global flags: `--scale quick|paper`, `--seed N`, `--hub DIR`,
+//! `--results DIR`, `--artifacts DIR`, `--backend pjrt|native`,
+//! `--verbose`, `--quiet`.
+
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+use std::sync::Arc;
+use tunetuner::dataset::hub::{Hub, HUB_SEED};
+use tunetuner::experiments::{self, Ctx, Scale};
+use tunetuner::gpu::specs::{all_devices, device_by_name};
+use tunetuner::hypertuning;
+use tunetuner::kernels;
+use tunetuner::methodology::SpaceEval;
+use tunetuner::optimizers::{self, HyperParams};
+use tunetuner::runner::{Budget, SimulationRunner, Tuning};
+use tunetuner::runtime::Engine;
+use tunetuner::searchspace::Value;
+use tunetuner::util::cli::Args;
+use tunetuner::util::log::{self, Level};
+use tunetuner::{log_info, log_warn};
+
+fn main() {
+    log::init_from_env();
+    let args = Args::from_env();
+    if args.flag("verbose") {
+        log::set_level(Level::Debug);
+    } else if args.flag("quiet") {
+        log::set_level(Level::Warn);
+    }
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn engine(args: &Args) -> Arc<Engine> {
+    let artifacts = PathBuf::from(args.opt_or(
+        "artifacts",
+        Engine::default_artifacts_dir().to_str().unwrap_or("artifacts"),
+    ));
+    match args.opt_or("backend", "pjrt").as_str() {
+        "native" => Arc::new(Engine::native()),
+        _ => Arc::new(Engine::auto(&artifacts)),
+    }
+}
+
+fn ctx(args: &Args) -> Result<Ctx> {
+    let scale_name = args.opt_or("scale", "quick");
+    let scale = Scale::parse(&scale_name)?;
+    let hub = Hub::new(args.opt_or("hub", Hub::default_root().to_str().unwrap_or("hub")));
+    let results = PathBuf::from(args.opt_or("results", "results"));
+    Ok(Ctx::new(
+        hub,
+        engine(args),
+        results,
+        scale,
+        &scale_name,
+        args.opt_u64("seed", 42),
+    ))
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("info") => cmd_info(args),
+        Some("bruteforce") => cmd_bruteforce(args),
+        Some("tune") => cmd_tune(args),
+        Some("hypertune") => cmd_hypertune(args),
+        Some("sensitivity") => cmd_sensitivity(args),
+        Some("experiment") => cmd_experiment(args),
+        Some("help") | None => {
+            print!("{HELP}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand {other:?}\n{HELP}"),
+    }
+}
+
+const HELP: &str = "\
+tunetuner: hyperparameter optimization for auto-tuning (eScience'25 reproduction)
+
+subcommands:
+  info                      engine/backends, kernels, devices, space sizes
+  bruteforce                build the benchmark hub (all 24 spaces by default)
+      [--kernels a,b] [--devices c,d]
+  tune <kernel> <device>    run one tuning session (simulation mode)
+      [--algo pso] [--hp popsize=30,c1=2.0] [--repeats 5] [--budget-cutoff 0.95]
+  hypertune <algo>          tune the tuner (limited: exhaustive; extended: meta)
+      [--kind limited|extended]
+  sensitivity <algo>        Kruskal-Wallis + mutual-information screen
+  experiment <id>           regenerate a paper table/figure (or 'all')
+
+global flags: --scale quick|paper  --seed N  --hub DIR  --results DIR
+              --artifacts DIR  --backend pjrt|native  --verbose  --quiet
+";
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let engine = engine(args);
+    println!("tunetuner {}", tunetuner::version());
+    println!("engine backend: {:?}", engine.backend());
+    println!("\ndevices:");
+    for d in all_devices() {
+        println!(
+            "  {:8} {:7} {:4} SM/CU, {:8.0} GFLOP/s, {:6.0} GB/s, warp {}",
+            d.name, d.vendor, d.num_sm, d.peak_gflops, d.bandwidth_gbs, d.warp_size
+        );
+    }
+    println!("\nkernels:");
+    for k in kernels::all_kernels()? {
+        println!(
+            "  {:14} {:7} valid configs (of {} cartesian) — {}",
+            k.name,
+            k.space().len(),
+            k.space().cartesian_size(),
+            k.problem
+        );
+    }
+    println!("\noptimizers: {}", optimizers::optimizer_names().join(", "));
+    Ok(())
+}
+
+fn cmd_bruteforce(args: &Args) -> Result<()> {
+    let c = ctx(args)?;
+    let kernels_list = args.opt_or("kernels", "dedispersion,convolution,hotspot,gemm");
+    let devices_list = args.opt_or("devices", "A100,A4000,A6000,MI250X,W6600,W7800");
+    let ks: Vec<&str> = kernels_list.split(',').collect();
+    let ds: Vec<&str> = devices_list.split(',').collect();
+    let entries = c.hub.ensure(&ks, &ds, Arc::clone(&c.engine), HUB_SEED)?;
+    for (k, d, secs) in entries {
+        println!("{k:14} @ {d:8} {:8.1} simulated hours", secs / 3600.0);
+    }
+    Ok(())
+}
+
+fn parse_hp(spec: &str) -> HyperParams {
+    let mut hp = HyperParams::new();
+    for pair in spec.split(',').filter(|s| !s.is_empty()) {
+        if let Some((k, v)) = pair.split_once('=') {
+            let value = if let Ok(i) = v.parse::<i64>() {
+                Value::Int(i)
+            } else if let Ok(f) = v.parse::<f64>() {
+                Value::Float(f)
+            } else {
+                Value::Str(v.to_string())
+            };
+            hp = hp.set(k, value);
+        }
+    }
+    hp
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    let c = ctx(args)?;
+    let kernel_name = args
+        .positional
+        .first()
+        .context("usage: tune <kernel> <device>")?;
+    let device_name = args
+        .positional
+        .get(1)
+        .context("usage: tune <kernel> <device>")?;
+    let algo = args.opt_or("algo", "genetic_algorithm");
+    let hp = parse_hp(&args.opt_or("hp", ""));
+    let repeats = args.opt_usize("repeats", 5);
+    let cutoff = args.opt_f64("budget-cutoff", 0.95);
+
+    let kernel = kernels::kernel_by_name(kernel_name)?;
+    device_by_name(device_name).with_context(|| format!("unknown device {device_name}"))?;
+    // Ensure the cache exists, then tune in simulation mode.
+    c.hub.ensure(
+        &[kernel.name],
+        &[device_name.as_str()],
+        Arc::clone(&c.engine),
+        HUB_SEED,
+    )?;
+    let cache = c.hub.load(kernel.name, device_name)?;
+    let se = SpaceEval::new(kernel.space_arc(), Arc::clone(&cache), cutoff, 50);
+    log_info!(
+        "{} on {}: {} configs, optimum {:.6}s, budget {:.1}s",
+        kernel.name,
+        device_name,
+        cache.records.len(),
+        cache.optimum(),
+        se.budget_seconds
+    );
+    let opt = optimizers::create(&algo, &hp)?;
+    let mut best_overall = f64::INFINITY;
+    let mut scores = Vec::new();
+    for rep in 0..repeats {
+        let mut sim = SimulationRunner::new(kernel.space_arc(), Arc::clone(&cache))?;
+        let mut tuning = Tuning::new(&mut sim, Budget::seconds(se.budget_seconds));
+        let mut rng = Rng::new(c.seed ^ rep as u64);
+        opt.run(&mut tuning, &mut rng);
+        let trace = tuning.finish();
+        let scores_t = se.score_traces(&[trace.clone()]);
+        let score = tunetuner::util::stats::mean(&scores_t);
+        scores.push(score);
+        let best = trace.best().unwrap_or(f64::INFINITY);
+        best_overall = best_overall.min(best);
+        println!(
+            "repeat {rep}: best {:.6}s after {} unique evals ({:.1}s simulated), score {score:.3}",
+            best, trace.unique_evals, trace.elapsed
+        );
+    }
+    println!(
+        "\n{algo} on {}@{}: best {best_overall:.6}s vs optimum {:.6}s; mean score {:.3}",
+        kernel.name,
+        device_name,
+        cache.optimum(),
+        tunetuner::util::stats::mean(&scores)
+    );
+    Ok(())
+}
+
+use tunetuner::util::rng::Rng;
+
+fn cmd_hypertune(args: &Args) -> Result<()> {
+    let c = ctx(args)?;
+    let algo = args
+        .positional
+        .first()
+        .context("usage: hypertune <algo>")?
+        .clone();
+    let kind = args.opt_or("kind", "limited");
+    let results = match kind.as_str() {
+        "limited" => c.limited_results(&algo)?,
+        "extended" => c.extended_results(&algo)?,
+        other => bail!("unknown kind {other:?}"),
+    };
+    println!(
+        "{algo} ({kind}): {} configurations evaluated, {} repeats",
+        results.results.len(),
+        results.repeats
+    );
+    println!("best:  {:.3}  {}", results.best().score, results.best().hp_key);
+    println!(
+        "mean:  {:.3}  {}",
+        results.most_average().score,
+        results.most_average().hp_key
+    );
+    println!("worst: {:.3}  {}", results.worst().score, results.worst().hp_key);
+    println!(
+        "wall-clock {:.1}s; simulated-live equivalent {:.1}h ({:.0}x speedup)",
+        results.wallclock_seconds,
+        results.simulated_seconds / 3600.0,
+        results.simulated_seconds / results.wallclock_seconds.max(1e-9)
+    );
+    Ok(())
+}
+
+fn cmd_sensitivity(args: &Args) -> Result<()> {
+    let c = ctx(args)?;
+    let algo = args
+        .positional
+        .first()
+        .context("usage: sensitivity <algo>")?
+        .clone();
+    let results = c.limited_results(&algo)?;
+    let space = hypertuning::limited_space(&algo)?;
+    println!("{:<18} {:>10} {:>10} {:>8}", "hyperparameter", "KW H", "p-value", "MI");
+    for s in hypertuning::sensitivity::sensitivity(&results, &space) {
+        let flag = if s.p > 0.05 { "  <- no meaningful effect" } else { "" };
+        println!(
+            "{:<18} {:>10.3} {:>10.4} {:>8.4}{flag}",
+            s.param, s.h, s.p, s.mutual_information
+        );
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let c = ctx(args)?;
+    let id = args
+        .positional
+        .first()
+        .context("usage: experiment <id|all>")?
+        .clone();
+    if c.engine.backend() == tunetuner::runtime::EngineBackend::Native {
+        log_warn!("running with the native oracle backend (no PJRT artifacts)");
+    }
+    let t0 = std::time::Instant::now();
+    experiments::run(&c, &id)?;
+    log_info!("experiment {id} done in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,216 @@
+//! The calibrated random-search baseline.
+//!
+//! For a fully known search space the expected best-so-far of random
+//! search after `n` draws *without replacement* is exact:
+//!
+//! ```text
+//! P(min ≥ v_(i+1)) = C(M-i, n) / C(M, n)       (q_i, computed by the
+//! E[min after n]   = Σ_i v_(i) · (q_(i-1) - q_i)  recurrence q_i = q_(i-1)
+//!                                              · (M-i-n+1)/(M-i+1))
+//! ```
+//!
+//! This is the methodology's "calculated baseline": deterministic, no
+//! Monte-Carlo error. The time axis uses the space's mean per-evaluation
+//! cost; draws of invalid configurations consume time but contribute no
+//! value, handled by scaling the draw count by the valid fraction.
+
+use crate::dataset::cache::CacheData;
+use crate::runner::live::FRAMEWORK_OVERHEAD;
+
+/// The random-search baseline for one search space.
+#[derive(Clone, Debug)]
+pub struct Baseline {
+    /// Sorted (ascending) mean values of valid configurations.
+    sorted: Vec<f64>,
+    /// Memoized E[min after n valid draws] per integer n. A per-n memo
+    /// (not a dense 1..n table) keeps the whole baseline O(m log m): the
+    /// budget binary search touches ~log m distinct n, the sampling
+    /// points ~2·points more, each evaluated with one O(m) pass.
+    memo: std::collections::HashMap<usize, f64>,
+    /// Mean simulated cost of one evaluation (over all configs).
+    pub mean_cost: f64,
+    /// Fraction of configurations that are valid.
+    pub valid_fraction: f64,
+    /// The optimum (lowest mean value).
+    pub optimum: f64,
+    /// The median valid value.
+    pub median: f64,
+}
+
+impl Baseline {
+    /// Build from a brute-forced cache.
+    pub fn new(cache: &CacheData) -> Baseline {
+        let sorted = cache.sorted_valid_values();
+        assert!(!sorted.is_empty(), "space has no valid configurations");
+        let optimum = sorted[0];
+        let median = crate::util::stats::percentile_sorted(&sorted, 50.0);
+        Baseline {
+            memo: std::collections::HashMap::new(),
+            mean_cost: cache.mean_eval_cost(FRAMEWORK_OVERHEAD),
+            valid_fraction: cache.valid_fraction(),
+            optimum,
+            median,
+            sorted,
+        }
+    }
+
+    /// E[min after `draws` draws without replacement], one O(m) pass:
+    /// `E = Σ_i v_(i) (q_(i-1) - q_i)` with
+    /// `q_i = C(m-i, draws)/C(m, draws)` by the recurrence
+    /// `q_i = q_(i-1) · (m-i-draws+1)/(m-i+1)`.
+    fn expected_single(&mut self, draws: usize) -> f64 {
+        let m = self.sorted.len();
+        let draws = draws.clamp(1, m);
+        if let Some(&v) = self.memo.get(&draws) {
+            return v;
+        }
+        let mut q_prev = 1.0f64;
+        let mut e = 0.0f64;
+        for i in 1..=m {
+            let numer = (m as f64) - (i as f64) - (draws as f64) + 1.0;
+            let denom = (m as f64) - (i as f64) + 1.0;
+            let q = if numer <= 0.0 { 0.0 } else { q_prev * numer / denom };
+            e += self.sorted[i - 1] * (q_prev - q);
+            q_prev = q;
+            if q == 0.0 {
+                break;
+            }
+        }
+        self.memo.insert(draws, e);
+        e
+    }
+
+    /// Expected best after `n_valid` valid draws (interpolated for
+    /// fractional n).
+    pub fn expected_best(&mut self, n_valid: f64) -> f64 {
+        let m = self.sorted.len();
+        if n_valid <= 1.0 {
+            return self.expected_single(1);
+        }
+        let lo = (n_valid.floor() as usize).min(m);
+        let hi = (n_valid.ceil() as usize).min(m);
+        let e_lo = self.expected_single(lo);
+        let e_hi = self.expected_single(hi);
+        let frac = (n_valid - lo as f64).clamp(0.0, 1.0);
+        e_lo + (e_hi - e_lo) * frac
+    }
+
+    /// Baseline value at simulated time `t` seconds: draws = t/cost scaled
+    /// by the valid fraction.
+    pub fn value_at_time(&mut self, t: f64) -> f64 {
+        let draws = (t / self.mean_cost) * self.valid_fraction;
+        self.expected_best(draws.max(1.0))
+    }
+
+    /// The budget: the time at which the baseline reaches
+    /// `median - cutoff*(median - optimum)`, capped at draws = |space|.
+    pub fn budget_seconds(&mut self, cutoff: f64) -> f64 {
+        let target = self.median - cutoff * (self.median - self.optimum);
+        let m = self.sorted.len();
+        // Binary search over valid draw count (expected_best is monotone
+        // non-increasing in n).
+        let mut lo = 1usize;
+        let mut hi = m;
+        if self.expected_best(m as f64) > target {
+            // Cutoff not reachable (cutoff=1 with ties); use the full space.
+            return m as f64 / self.valid_fraction * self.mean_cost;
+        }
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if self.expected_best(mid as f64) <= target {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        (lo as f64) / self.valid_fraction * self.mean_cost
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::cache::{CacheData, ConfigRecord};
+
+    fn cache_with_values(values: &[f64]) -> CacheData {
+        CacheData {
+            kernel: "t".into(),
+            device: "d".into(),
+            problem: String::new(),
+            space_seed: 0,
+            observations_per_config: 1,
+            bruteforce_seconds: 0.0,
+            param_names: vec!["x".into()],
+            records: values
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| ConfigRecord {
+                    key: i.to_string(),
+                    value: v,
+                    observations: vec![v],
+                    compile_time: 1.0,
+                    valid: v.is_finite(),
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn expected_best_matches_bruteforce_enumeration() {
+        // M=4, values 1..4: E[min after 2 draws] over all C(4,2)=6 pairs:
+        // mins = 1,1,1,2,2,3 -> 10/6.
+        let mut b = Baseline::new(&cache_with_values(&[4.0, 2.0, 3.0, 1.0]));
+        assert!((b.expected_best(2.0) - 10.0 / 6.0).abs() < 1e-12);
+        // n = M -> the optimum with certainty.
+        assert!((b.expected_best(4.0) - 1.0).abs() < 1e-12);
+        // n = 1 -> the mean.
+        assert!((b.expected_best(1.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn expected_best_monotone_nonincreasing() {
+        let vals: Vec<f64> = (1..200).map(|i| (i as f64).sqrt()).collect();
+        let mut b = Baseline::new(&cache_with_values(&vals));
+        let mut prev = f64::INFINITY;
+        for n in 1..=199 {
+            let e = b.expected_best(n as f64);
+            assert!(e <= prev + 1e-12, "n={n}");
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn interpolation_between_integer_draws() {
+        let mut b = Baseline::new(&cache_with_values(&[1.0, 2.0, 3.0, 4.0]));
+        let e2 = b.expected_best(2.0);
+        let e3 = b.expected_best(3.0);
+        let e25 = b.expected_best(2.5);
+        assert!((e25 - (e2 + e3) / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn invalid_configs_slow_the_baseline() {
+        let valid = cache_with_values(&[1.0, 2.0, 3.0, 4.0]);
+        let half = cache_with_values(&[1.0, 2.0, 3.0, 4.0, f64::INFINITY, f64::INFINITY, f64::INFINITY, f64::INFINITY]);
+        let mut bv = Baseline::new(&valid);
+        let mut bh = Baseline::new(&half);
+        // At the same time budget, the half-invalid space has fewer valid draws.
+        let t = 10.0 * bv.mean_cost;
+        assert!(bh.value_at_time(t) >= bv.value_at_time(t) - 1e-12);
+        assert!(bh.valid_fraction < bv.valid_fraction);
+    }
+
+    #[test]
+    fn budget_reaches_cutoff() {
+        let vals: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
+        let mut b = Baseline::new(&cache_with_values(&vals));
+        let budget = b.budget_seconds(0.95);
+        assert!(budget > 0.0);
+        let v = b.value_at_time(budget);
+        let target = b.median - 0.95 * (b.median - b.optimum);
+        assert!(v <= target * 1.01, "v={v} target={target}");
+        // Stricter cutoff costs more time.
+        let b99 = b.budget_seconds(0.99);
+        assert!(b99 > budget);
+    }
+}

@@ -1,0 +1,115 @@
+//! Performance-over-time curves at fixed, equidistant sampling points.
+
+use crate::runner::Trace;
+
+/// The mean best-so-far objective value of repeated runs, sampled at
+/// equidistant times over a budget.
+#[derive(Clone, Debug)]
+pub struct PerformanceCurve {
+    /// Sampling times in simulated seconds (equidistant in (0, budget]).
+    pub times: Vec<f64>,
+    /// Mean best-so-far value at each time; where a repeat has found
+    /// nothing valid yet, the provided fallback (the baseline value) is
+    /// substituted so the score reads 0, not undefined.
+    pub values: Vec<f64>,
+    /// Number of repeats aggregated.
+    pub repeats: usize,
+}
+
+/// Equidistant sampling times in (0, budget].
+pub fn sampling_times(budget_seconds: f64, points: usize) -> Vec<f64> {
+    (1..=points)
+        .map(|i| budget_seconds * i as f64 / points as f64)
+        .collect()
+}
+
+impl PerformanceCurve {
+    /// Build from repeated traces. `fallback(t)` supplies the value to use
+    /// when a repeat has no valid result at time `t` (the baseline value,
+    /// so that "found nothing" scores 0).
+    ///
+    /// Single pass per trace: `times` must be ascending (sampling_times
+    /// produces them so), letting a cursor walk each trace once instead of
+    /// rescanning from the start per sampling point.
+    pub fn from_traces(
+        traces: &[Trace],
+        times: &[f64],
+        mut fallback: impl FnMut(f64) -> f64,
+    ) -> PerformanceCurve {
+        assert!(!traces.is_empty());
+        debug_assert!(times.windows(2).all(|w| w[0] <= w[1]), "times must ascend");
+        let fallbacks: Vec<f64> = times.iter().map(|&t| fallback(t)).collect();
+        let mut sums = vec![0.0f64; times.len()];
+        for trace in traces {
+            let mut cursor = 0usize;
+            let mut best = f64::INFINITY;
+            for (ti, &t) in times.iter().enumerate() {
+                while cursor < trace.points.len() && trace.points[cursor].clock <= t {
+                    let v = trace.points[cursor].value;
+                    if v < best {
+                        best = v;
+                    }
+                    cursor += 1;
+                }
+                sums[ti] += if best.is_finite() { best } else { fallbacks[ti] };
+            }
+        }
+        let values: Vec<f64> = sums.iter().map(|s| s / traces.len() as f64).collect();
+        PerformanceCurve {
+            times: times.to_vec(),
+            values,
+            repeats: traces.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runner::TracePoint;
+
+    fn trace(points: &[(f64, f64)]) -> Trace {
+        Trace {
+            points: points
+                .iter()
+                .map(|&(clock, value)| TracePoint {
+                    config: 0,
+                    value,
+                    clock,
+                    cached: false,
+                })
+                .collect(),
+            elapsed: points.last().map(|p| p.0).unwrap_or(0.0),
+            unique_evals: points.len(),
+        }
+    }
+
+    #[test]
+    fn sampling_times_equidistant() {
+        let ts = sampling_times(10.0, 5);
+        assert_eq!(ts, vec![2.0, 4.0, 6.0, 8.0, 10.0]);
+    }
+
+    #[test]
+    fn mean_of_repeats() {
+        let t1 = trace(&[(1.0, 5.0), (3.0, 2.0)]);
+        let t2 = trace(&[(1.0, 7.0), (3.0, 4.0)]);
+        let c = PerformanceCurve::from_traces(&[t1, t2], &[2.0, 4.0], |_| 100.0);
+        assert_eq!(c.values, vec![6.0, 3.0]);
+        assert_eq!(c.repeats, 2);
+    }
+
+    #[test]
+    fn fallback_before_first_result() {
+        let t1 = trace(&[(5.0, 1.0)]);
+        let c = PerformanceCurve::from_traces(&[t1], &[1.0, 6.0], |_| 42.0);
+        assert_eq!(c.values, vec![42.0, 1.0]);
+    }
+
+    #[test]
+    fn curve_monotone_with_monotone_traces() {
+        let t1 = trace(&[(1.0, 5.0), (2.0, 4.0), (3.0, 3.0)]);
+        let c = PerformanceCurve::from_traces(&[t1], &[1.0, 2.0, 3.0], |_| 10.0);
+        assert!(c.values.windows(2).all(|w| w[1] <= w[0]));
+    }
+}

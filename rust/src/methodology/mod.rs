@@ -1,0 +1,40 @@
+//! The autotuning-methodology scoring framework (Section III-B).
+//!
+//! Implements the paper's statistically robust performance score:
+//!
+//! 1. [`baseline`] — the calibrated random-search baseline, computed
+//!    analytically from the full value distribution via order statistics
+//!    (no Monte-Carlo noise), mapped onto a time axis through the mean
+//!    per-evaluation cost.
+//! 2. The **budget**: the time at which the baseline reaches a cutoff
+//!    percentile (default 95%) of the median→optimum distance.
+//! 3. [`curve`] — performance-over-time curves of an algorithm's repeated
+//!    runs, sampled at fixed equidistant time points relative to the
+//!    budget.
+//! 4. [`score`] — Eq. (2): `P_t = (S_baseline(t) - F_t) / (S_baseline(t)
+//!    - S_opt)`, so 0 = baseline parity, 1 = optimum found immediately.
+//! 5. [`aggregate`] — Eq. (3): mean over search spaces at each sampling
+//!    point, then mean over sampling points → the scalar score the
+//!    hyperparameter tuner maximizes (Eq. 4).
+
+pub mod baseline;
+pub mod curve;
+pub mod score;
+pub mod aggregate;
+
+pub use aggregate::{evaluate_algorithm, AggregateResult, SpaceEval};
+pub use baseline::Baseline;
+pub use curve::PerformanceCurve;
+
+/// Default cutoff percentile for the budget (the paper: "typically
+/// somewhere around 95%").
+pub const DEFAULT_CUTOFF: f64 = 0.95;
+
+/// Default number of equidistant sampling points per curve.
+pub const DEFAULT_POINTS: usize = 50;
+
+/// Default repeats during hyperparameter tuning (paper: 25).
+pub const TUNING_REPEATS: usize = 25;
+
+/// Default repeats for re-evaluation comparisons (paper: 100).
+pub const EVAL_REPEATS: usize = 100;

@@ -1,0 +1,48 @@
+//! The performance score of Eq. (2).
+
+use super::baseline::Baseline;
+use super::curve::PerformanceCurve;
+
+/// Eq. (2) at one sampling point: `(S_baseline(t) - F_t) / (S_baseline(t)
+/// - S_opt)`. 0 = baseline parity, 1 = optimum; negative = worse than the
+/// baseline.
+pub fn score_at(baseline_value: f64, algorithm_value: f64, optimum: f64) -> f64 {
+    let denom = baseline_value - optimum;
+    if denom <= 0.0 {
+        // Baseline already at the optimum: any parity scores 1.
+        return if algorithm_value <= optimum { 1.0 } else { 0.0 };
+    }
+    (baseline_value - algorithm_value) / denom
+}
+
+/// Score curve for one search space: Eq. (2) applied at every sampling
+/// point of a performance curve.
+pub fn score_curve(baseline: &mut Baseline, curve: &PerformanceCurve) -> Vec<f64> {
+    curve
+        .times
+        .iter()
+        .zip(&curve.values)
+        .map(|(&t, &v)| score_at(baseline.value_at_time(t), v, baseline.optimum))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn score_anchors() {
+        // At the baseline -> 0; at the optimum -> 1.
+        assert_eq!(score_at(10.0, 10.0, 2.0), 0.0);
+        assert_eq!(score_at(10.0, 2.0, 2.0), 1.0);
+        // Halfway -> 0.5; worse than baseline -> negative.
+        assert!((score_at(10.0, 6.0, 2.0) - 0.5).abs() < 1e-12);
+        assert!(score_at(10.0, 14.0, 2.0) < 0.0);
+    }
+
+    #[test]
+    fn degenerate_baseline() {
+        assert_eq!(score_at(2.0, 2.0, 2.0), 1.0);
+        assert_eq!(score_at(2.0, 3.0, 2.0), 0.0);
+    }
+}

@@ -1,0 +1,569 @@
+//! Dual annealing (Table III hyperparameter: `method`).
+//!
+//! scipy-style dual annealing: a generalized-annealing global phase that
+//! makes heavy-tailed jumps in the encoded (value-index) space, plus a
+//! local-search phase triggered on improvement. The `method`
+//! hyperparameter selects among eight local-search strategies named after
+//! scipy's minimizers; each is a distinct discrete-lattice adaptation with
+//! genuinely different behavior, so the categorical hyperparameter has
+//! real signal (what the paper's tuning exploits):
+//!
+//! * `COBYLA`       — coordinate descent with a shrinking trust radius
+//! * `L-BFGS-B`     — finite-difference descent, all dimensions stepped at once
+//! * `SLSQP`        — sequential per-dimension descent with line probes
+//! * `CG`           — direction-persistent descent (momentum along last move)
+//! * `Powell`       — exhaustive line search per dimension, cycled
+//! * `Nelder-Mead`  — simplex reflect/expand/contract on the lattice
+//! * `BFGS`         — adaptive-step descent with step doubling on success
+//! * `trust-constr` — random probes in a shrinking L1 ball
+
+use super::{relative_delta, HyperParams, Optimizer};
+use crate::runner::Tuning;
+use crate::searchspace::{Neighborhood, SearchSpace};
+use crate::util::rng::Rng;
+
+pub const LOCAL_METHODS: [&str; 8] = [
+    "COBYLA",
+    "L-BFGS-B",
+    "SLSQP",
+    "CG",
+    "Powell",
+    "Nelder-Mead",
+    "BFGS",
+    "trust-constr",
+];
+
+pub struct DualAnnealing {
+    pub method: String,
+    /// Initial global-phase temperature (scipy's `initial_temp` analogue).
+    pub temp: f64,
+    /// Restart threshold: reanneal when temperature decays below this.
+    pub restart_temp_ratio: f64,
+}
+
+impl DualAnnealing {
+    pub fn new(hp: &HyperParams) -> DualAnnealing {
+        DualAnnealing {
+            method: hp.str("method", "Powell"),
+            temp: hp.f64("initial_temp", 5230.0),
+            restart_temp_ratio: hp.f64("restart_temp_ratio", 2e-5),
+        }
+    }
+}
+
+impl Optimizer for DualAnnealing {
+    fn name(&self) -> &'static str {
+        "dual_annealing"
+    }
+
+    fn run(&self, tuning: &mut Tuning<'_>, rng: &mut Rng) {
+        let dims: Vec<usize> = tuning.space().dims().to_vec();
+        while !tuning.done() {
+            // --- (re)anneal from a fresh random point -----------------------
+            let mut current = tuning.space().random(rng);
+            let mut current_val = tuning.eval(current);
+            let mut best_val = current_val;
+            let mut step = 0u32;
+            let mut temp = self.temp;
+            let t_restart = self.temp * self.restart_temp_ratio;
+            while temp > t_restart && !tuning.done() {
+                // Generalized-annealing visit: heavy-tailed jump size.
+                let cand = heavy_tailed_jump(tuning.space(), current, &dims, temp / self.temp, rng);
+                let cand_val = tuning.eval(cand);
+                let delta = relative_delta(cand_val, current_val);
+                if delta <= 0.0 || rng.next_f64() < (-delta * (1.0 + step as f64 / 50.0) / (temp / self.temp).max(1e-12)).exp() {
+                    current = cand;
+                    current_val = cand_val;
+                }
+                if cand_val < best_val {
+                    best_val = cand_val;
+                    // Local-search phase on improvement.
+                    let (li, lv) = local_search(
+                        &self.method,
+                        tuning,
+                        cand,
+                        cand_val,
+                        rng,
+                    );
+                    if lv < current_val {
+                        current = li;
+                        current_val = lv;
+                        best_val = best_val.min(lv);
+                    }
+                }
+                step += 1;
+                // scipy's visiting-distribution temperature schedule ~ t0 / log-ish;
+                // geometric decay is a faithful discrete stand-in.
+                temp *= 0.95;
+            }
+        }
+    }
+}
+
+/// Heavy-tailed jump: each dimension moves with probability ~temp-scaled,
+/// by a geometric step length (long jumps early, short late).
+fn heavy_tailed_jump(
+    space: &SearchSpace,
+    from: usize,
+    dims: &[usize],
+    temp_frac: f64,
+    rng: &mut Rng,
+) -> usize {
+    let enc = space.encoded(from).clone();
+    let mut target: Vec<f64> = enc.iter().map(|&v| v as f64).collect();
+    let p_move = 0.3 + 0.5 * temp_frac;
+    let mut moved = false;
+    for (d, t) in target.iter_mut().enumerate() {
+        if rng.next_f64() < p_move {
+            // Geometric step: mostly 1, occasionally far.
+            let mut len = 1usize;
+            while rng.next_f64() < 0.35 + 0.4 * temp_frac {
+                len += 1;
+            }
+            let dir = if rng.chance(0.5) { 1.0 } else { -1.0 };
+            *t = (*t + dir * len as f64).clamp(0.0, (dims[d] - 1) as f64);
+            moved = true;
+        }
+    }
+    if !moved {
+        return space.random_neighbor(from, Neighborhood::Hamming, rng);
+    }
+    space.snap(&target, rng)
+}
+
+/// Dispatch to the selected local-search method. Returns the best
+/// (index, value) found.
+pub fn local_search(
+    method: &str,
+    tuning: &mut Tuning<'_>,
+    start: usize,
+    start_val: f64,
+    rng: &mut Rng,
+) -> (usize, f64) {
+    match method {
+        "COBYLA" => cobyla(tuning, start, start_val, rng),
+        "L-BFGS-B" => lbfgsb(tuning, start, start_val, rng),
+        "SLSQP" => slsqp(tuning, start, start_val),
+        "CG" => cg(tuning, start, start_val, rng),
+        "Powell" => powell(tuning, start, start_val),
+        "Nelder-Mead" => nelder_mead(tuning, start, start_val, rng),
+        "BFGS" => bfgs(tuning, start, start_val, rng),
+        "trust-constr" => trust_constr(tuning, start, start_val, rng),
+        _ => greedy_descent(tuning, start, start_val, rng),
+    }
+}
+
+/// Try to move to `enc+delta` (snapped to the lattice bounds); returns
+/// Some((idx, val)) if the move lands on a valid config.
+fn probe(
+    tuning: &mut Tuning<'_>,
+    enc: &[u16],
+    d: usize,
+    delta: i64,
+) -> Option<(usize, f64)> {
+    let dims = tuning.space().dims();
+    let cur = enc[d] as i64;
+    let next = cur + delta;
+    if next < 0 || next >= dims[d] as i64 {
+        return None;
+    }
+    let mut e = enc.to_vec();
+    e[d] = next as u16;
+    let idx = tuning.space().index_of(&e)?;
+    let v = tuning.eval(idx);
+    Some((idx, v))
+}
+
+/// COBYLA stand-in: coordinate descent with a shrinking trust radius.
+fn cobyla(tuning: &mut Tuning<'_>, start: usize, start_val: f64, rng: &mut Rng) -> (usize, f64) {
+    let ndim = tuning.space().dims().len();
+    let mut radius = 3i64;
+    let (mut best, mut best_val) = (start, start_val);
+    while radius >= 1 && !tuning.done() {
+        let mut improved = false;
+        let mut order: Vec<usize> = (0..ndim).collect();
+        rng.shuffle(&mut order);
+        for &d in &order {
+            if tuning.done() {
+                break;
+            }
+            let enc = tuning.space().encoded(best).clone();
+            for delta in [-radius, radius] {
+                if let Some((i, v)) = probe(tuning, &enc, d, delta) {
+                    if v < best_val {
+                        best = i;
+                        best_val = v;
+                        improved = true;
+                    }
+                }
+            }
+        }
+        if !improved {
+            radius /= 2;
+        }
+    }
+    (best, best_val)
+}
+
+/// L-BFGS-B stand-in: finite-difference "gradient", step all dims at once.
+fn lbfgsb(tuning: &mut Tuning<'_>, start: usize, start_val: f64, rng: &mut Rng) -> (usize, f64) {
+    let ndim = tuning.space().dims().len();
+    let (mut best, mut best_val) = (start, start_val);
+    for _ in 0..4 {
+        if tuning.done() {
+            break;
+        }
+        let enc = tuning.space().encoded(best).clone();
+        let mut grad = vec![0i64; ndim];
+        for d in 0..ndim {
+            if tuning.done() {
+                break;
+            }
+            let up = probe(tuning, &enc, d, 1).map(|(_, v)| v).unwrap_or(f64::INFINITY);
+            let down = probe(tuning, &enc, d, -1).map(|(_, v)| v).unwrap_or(f64::INFINITY);
+            grad[d] = if up < best_val && up <= down {
+                1
+            } else if down < best_val {
+                -1
+            } else {
+                0
+            };
+        }
+        if grad.iter().all(|&g| g == 0) {
+            break;
+        }
+        let target: Vec<f64> = enc
+            .iter()
+            .zip(&grad)
+            .map(|(&e, &g)| e as f64 + g as f64)
+            .collect();
+        let idx = tuning.space().snap(&target, rng);
+        let v = tuning.eval(idx);
+        if v < best_val {
+            best = idx;
+            best_val = v;
+        } else {
+            break;
+        }
+    }
+    (best, best_val)
+}
+
+/// SLSQP stand-in: sequential per-dimension descent, ±1 then ±2 probes.
+fn slsqp(tuning: &mut Tuning<'_>, start: usize, start_val: f64) -> (usize, f64) {
+    let ndim = tuning.space().dims().len();
+    let (mut best, mut best_val) = (start, start_val);
+    for d in 0..ndim {
+        if tuning.done() {
+            break;
+        }
+        loop {
+            let enc = tuning.space().encoded(best).clone();
+            let mut step_taken = false;
+            for delta in [-1i64, 1, -2, 2] {
+                if tuning.done() {
+                    break;
+                }
+                if let Some((i, v)) = probe(tuning, &enc, d, delta) {
+                    if v < best_val {
+                        best = i;
+                        best_val = v;
+                        step_taken = true;
+                        break;
+                    }
+                }
+            }
+            if !step_taken {
+                break;
+            }
+        }
+    }
+    (best, best_val)
+}
+
+/// CG stand-in: remembers the last improving direction and re-applies it.
+fn cg(tuning: &mut Tuning<'_>, start: usize, start_val: f64, rng: &mut Rng) -> (usize, f64) {
+    let ndim = tuning.space().dims().len();
+    let (mut best, mut best_val) = (start, start_val);
+    let mut momentum: Option<(usize, i64)> = None;
+    for _ in 0..3 * ndim {
+        if tuning.done() {
+            break;
+        }
+        let enc = tuning.space().encoded(best).clone();
+        // Try momentum first.
+        if let Some((d, delta)) = momentum {
+            if let Some((i, v)) = probe(tuning, &enc, d, delta) {
+                if v < best_val {
+                    best = i;
+                    best_val = v;
+                    continue;
+                }
+            }
+            momentum = None;
+        }
+        let d = rng.below(ndim);
+        let delta = if rng.chance(0.5) { 1 } else { -1 };
+        if let Some((i, v)) = probe(tuning, &enc, d, delta) {
+            if v < best_val {
+                best = i;
+                best_val = v;
+                momentum = Some((d, delta));
+            }
+        }
+    }
+    (best, best_val)
+}
+
+/// Powell: full line search along each dimension, cycled until no change.
+fn powell(tuning: &mut Tuning<'_>, start: usize, start_val: f64) -> (usize, f64) {
+    let dims: Vec<usize> = tuning.space().dims().to_vec();
+    let (mut best, mut best_val) = (start, start_val);
+    let mut improved = true;
+    while improved && !tuning.done() {
+        improved = false;
+        for d in 0..dims.len() {
+            if tuning.done() {
+                break;
+            }
+            let enc = tuning.space().encoded(best).clone();
+            for v_idx in 0..dims[d] as u16 {
+                if tuning.done() {
+                    break;
+                }
+                if v_idx == enc[d] {
+                    continue;
+                }
+                let mut e = enc.clone();
+                e[d] = v_idx;
+                if let Some(i) = tuning.space().index_of(&e) {
+                    let v = tuning.eval(i);
+                    if v < best_val {
+                        best = i;
+                        best_val = v;
+                        improved = true;
+                    }
+                }
+            }
+        }
+    }
+    (best, best_val)
+}
+
+/// Nelder–Mead: lattice simplex with reflect / expand / shrink.
+fn nelder_mead(tuning: &mut Tuning<'_>, start: usize, start_val: f64, rng: &mut Rng) -> (usize, f64) {
+    let ndim = tuning.space().dims().len();
+    // Simplex of ndim+1 points around the start.
+    let mut simplex: Vec<(usize, f64)> = vec![(start, start_val)];
+    for _ in 0..ndim.min(6) {
+        if tuning.done() {
+            break;
+        }
+        let p = tuning.space().random_neighbor(start, Neighborhood::Hamming, rng);
+        let v = tuning.eval(p);
+        simplex.push((p, v));
+    }
+    for _ in 0..2 * ndim {
+        if tuning.done() || simplex.len() < 3 {
+            break;
+        }
+        simplex.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let worst = simplex.last().unwrap().0;
+        // Centroid of all but worst, reflected through the worst point.
+        let ndims = tuning.space().dims().len();
+        let mut centroid = vec![0.0f64; ndims];
+        for (i, _) in &simplex[..simplex.len() - 1] {
+            for (c, &e) in centroid.iter_mut().zip(tuning.space().encoded(*i)) {
+                *c += e as f64;
+            }
+        }
+        for c in centroid.iter_mut() {
+            *c /= (simplex.len() - 1) as f64;
+        }
+        let wenc = tuning.space().encoded(worst).clone();
+        let reflected: Vec<f64> = centroid
+            .iter()
+            .zip(&wenc)
+            .map(|(&c, &w)| 2.0 * c - w as f64)
+            .collect();
+        let r_idx = tuning.space().snap(&reflected, rng);
+        let r_val = tuning.eval(r_idx);
+        let last = simplex.len() - 1;
+        if r_val < simplex[last].1 {
+            simplex[last] = (r_idx, r_val);
+        } else {
+            // Shrink toward the best.
+            let best_enc: Vec<f64> = tuning
+                .space()
+                .encoded(simplex[0].0)
+                .iter()
+                .map(|&e| e as f64)
+                .collect();
+            for item in simplex.iter_mut().skip(1) {
+                if tuning.done() {
+                    break;
+                }
+                let enc = tuning.space().encoded(item.0).clone();
+                let target: Vec<f64> = enc
+                    .iter()
+                    .zip(&best_enc)
+                    .map(|(&e, &b)| (e as f64 + b) / 2.0)
+                    .collect();
+                let idx = tuning.space().snap(&target, rng);
+                let v = tuning.eval(idx);
+                *item = (idx, v);
+            }
+        }
+    }
+    simplex
+        .into_iter()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap_or((start, start_val))
+}
+
+/// BFGS stand-in: descent direction with step doubling while improving.
+fn bfgs(tuning: &mut Tuning<'_>, start: usize, start_val: f64, rng: &mut Rng) -> (usize, f64) {
+    let ndim = tuning.space().dims().len();
+    let (mut best, mut best_val) = (start, start_val);
+    for _ in 0..ndim {
+        if tuning.done() {
+            break;
+        }
+        let enc = tuning.space().encoded(best).clone();
+        let d = rng.below(ndim);
+        // Find improving direction.
+        let mut dir = 0i64;
+        for delta in [1i64, -1] {
+            if let Some((i, v)) = probe(tuning, &enc, d, delta) {
+                if v < best_val {
+                    best = i;
+                    best_val = v;
+                    dir = delta;
+                    break;
+                }
+            }
+            if tuning.done() {
+                return (best, best_val);
+            }
+        }
+        // Double the step while it keeps improving.
+        let mut step = 2i64;
+        while dir != 0 && !tuning.done() {
+            let enc2 = tuning.space().encoded(best).clone();
+            match probe(tuning, &enc2, d, dir * step) {
+                Some((i, v)) if v < best_val => {
+                    best = i;
+                    best_val = v;
+                    step *= 2;
+                }
+                _ => break,
+            }
+        }
+    }
+    (best, best_val)
+}
+
+/// trust-constr stand-in: random probes in a shrinking L1 ball.
+fn trust_constr(tuning: &mut Tuning<'_>, start: usize, start_val: f64, rng: &mut Rng) -> (usize, f64) {
+    let ndim = tuning.space().dims().len();
+    let dims: Vec<usize> = tuning.space().dims().to_vec();
+    let (mut best, mut best_val) = (start, start_val);
+    let mut radius = 4.0f64;
+    while radius >= 1.0 && !tuning.done() {
+        let mut improved = false;
+        for _ in 0..2 * ndim {
+            if tuning.done() {
+                break;
+            }
+            let enc = tuning.space().encoded(best).clone();
+            let mut target: Vec<f64> = enc.iter().map(|&e| e as f64).collect();
+            let mut remaining = radius;
+            while remaining >= 1.0 {
+                let d = rng.below(ndim);
+                let dir = if rng.chance(0.5) { 1.0 } else { -1.0 };
+                target[d] = (target[d] + dir).clamp(0.0, (dims[d] - 1) as f64);
+                remaining -= 1.0;
+            }
+            let idx = tuning.space().snap(&target, rng);
+            let v = tuning.eval(idx);
+            if v < best_val {
+                best = idx;
+                best_val = v;
+                improved = true;
+            }
+        }
+        if !improved {
+            radius /= 2.0;
+        }
+    }
+    (best, best_val)
+}
+
+/// Plain greedy fallback for unknown method names.
+fn greedy_descent(tuning: &mut Tuning<'_>, start: usize, start_val: f64, rng: &mut Rng) -> (usize, f64) {
+    let (mut best, mut best_val) = (start, start_val);
+    loop {
+        if tuning.done() {
+            break;
+        }
+        let ns = tuning.space().neighbors(best, Neighborhood::Adjacent);
+        let mut improved = false;
+        for n in ns {
+            if tuning.done() {
+                break;
+            }
+            let v = tuning.eval(n);
+            if v < best_val {
+                best = n;
+                best_val = v;
+                improved = true;
+            }
+        }
+        if !improved {
+            break;
+        }
+        let _ = rng;
+    }
+    (best, best_val)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{quality, run_optimizer};
+    use super::super::HyperParams;
+    use super::*;
+
+    #[test]
+    fn all_methods_work() {
+        for m in LOCAL_METHODS {
+            let hp = HyperParams::new().set("method", m);
+            let trace = run_optimizer("dual_annealing", &hp, 70, 21);
+            assert!(trace.unique_evals <= 70, "{m}");
+            assert!(quality(&trace) > 0.3, "{m}: q={}", quality(&trace));
+        }
+    }
+
+    #[test]
+    fn methods_differ_behaviorally() {
+        // Different local methods must visit different configuration
+        // sequences given the same seed.
+        let mut signatures = std::collections::HashSet::new();
+        for m in LOCAL_METHODS {
+            let hp = HyperParams::new().set("method", m);
+            let trace = run_optimizer("dual_annealing", &hp, 60, 17);
+            let sig: Vec<usize> = trace.points.iter().map(|p| p.config).collect();
+            signatures.insert(sig);
+        }
+        assert!(
+            signatures.len() >= 6,
+            "only {} distinct behaviors",
+            signatures.len()
+        );
+    }
+
+    #[test]
+    fn default_is_powell() {
+        let da = DualAnnealing::new(&HyperParams::new());
+        assert_eq!(da.method, "Powell");
+    }
+}

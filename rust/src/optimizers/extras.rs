@@ -1,0 +1,419 @@
+//! Additional optimization algorithms beyond the paper's four: Kernel
+//! Tuner ships 20+ strategies, and carrying a broader registry exercises
+//! the hyperparameter machinery's generality (any registered optimizer can
+//! be hypertuned or used as a meta-strategy).
+
+use super::{relative_delta, HyperParams, Optimizer};
+use crate::runner::Tuning;
+use crate::searchspace::Neighborhood;
+use crate::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Differential evolution
+
+/// DE/rand/1/bin adapted to the lattice.
+pub struct DifferentialEvolution {
+    pub popsize: usize,
+    pub f: f64,
+    pub cr: f64,
+}
+
+impl DifferentialEvolution {
+    pub fn new(hp: &HyperParams) -> DifferentialEvolution {
+        DifferentialEvolution {
+            popsize: hp.usize("popsize", 20).max(4),
+            f: hp.f64("F", 0.7),
+            cr: hp.f64("CR", 0.6),
+        }
+    }
+}
+
+impl Optimizer for DifferentialEvolution {
+    fn name(&self) -> &'static str {
+        "differential_evolution"
+    }
+
+    fn run(&self, tuning: &mut Tuning<'_>, rng: &mut Rng) {
+        let dims: Vec<usize> = tuning.space().dims().to_vec();
+        let ndim = dims.len();
+        let n = tuning.space().len();
+        let mut pop: Vec<(usize, f64)> = Vec::new();
+        for idx in tuning.space().sample(rng, self.popsize.min(n)) {
+            if tuning.done() {
+                return;
+            }
+            let v = tuning.eval(idx);
+            pop.push((idx, v));
+        }
+        loop {
+            for i in 0..pop.len() {
+                if tuning.done() {
+                    return;
+                }
+                // Three distinct others.
+                let (a, b, c) = {
+                    let mut picks = rng.sample_indices(pop.len(), 3.min(pop.len()));
+                    while picks.len() < 3 {
+                        picks.push(rng.below(pop.len()));
+                    }
+                    (picks[0], picks[1], picks[2])
+                };
+                let ea: Vec<f64> = tuning.space().encoded(pop[a].0).iter().map(|&e| e as f64).collect();
+                let eb: Vec<f64> = tuning.space().encoded(pop[b].0).iter().map(|&e| e as f64).collect();
+                let ec: Vec<f64> = tuning.space().encoded(pop[c].0).iter().map(|&e| e as f64).collect();
+                let ex: Vec<f64> = tuning.space().encoded(pop[i].0).iter().map(|&e| e as f64).collect();
+                let jrand = rng.below(ndim);
+                let mut target = ex.clone();
+                for d in 0..ndim {
+                    if d == jrand || rng.chance(self.cr) {
+                        target[d] = (ea[d] + self.f * (eb[d] - ec[d]))
+                            .clamp(0.0, (dims[d] - 1) as f64);
+                    }
+                }
+                let idx = tuning.space().snap(&target, rng);
+                let v = tuning.eval(idx);
+                if v < pop[i].1 {
+                    pop[i] = (idx, v);
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Basin hopping
+
+/// Greedy local descent + temperature-accepted random kicks.
+pub struct BasinHopping {
+    pub t: f64,
+    pub perturbation: usize,
+}
+
+impl BasinHopping {
+    pub fn new(hp: &HyperParams) -> BasinHopping {
+        BasinHopping {
+            t: hp.f64("T", 1.0).max(1e-6),
+            perturbation: hp.usize("perturbation", 2).max(1),
+        }
+    }
+}
+
+impl Optimizer for BasinHopping {
+    fn name(&self) -> &'static str {
+        "basin_hopping"
+    }
+
+    fn run(&self, tuning: &mut Tuning<'_>, rng: &mut Rng) {
+        let dims: Vec<usize> = tuning.space().dims().to_vec();
+        let mut current = tuning.space().random(rng);
+        let mut current_val = tuning.eval(current);
+        while !tuning.done() {
+            // Local descent to the basin floor.
+            let (li, lv) = descend(tuning, current, current_val, rng);
+            if lv < current_val {
+                current = li;
+                current_val = lv;
+            }
+            if tuning.done() {
+                break;
+            }
+            // Kick: perturb `perturbation` dimensions.
+            let enc = tuning.space().encoded(current).clone();
+            let mut target: Vec<f64> = enc.iter().map(|&e| e as f64).collect();
+            for _ in 0..self.perturbation {
+                let d = rng.below(dims.len());
+                target[d] = rng.below(dims[d]) as f64;
+            }
+            let idx = tuning.space().snap(&target, rng);
+            let v = tuning.eval(idx);
+            let delta = relative_delta(v, current_val);
+            if delta <= 0.0 || rng.next_f64() < (-delta / self.t).exp() {
+                current = idx;
+                current_val = v;
+            }
+        }
+    }
+}
+
+/// Greedy first-improvement descent over the adjacent neighborhood.
+fn descend(
+    tuning: &mut Tuning<'_>,
+    start: usize,
+    start_val: f64,
+    rng: &mut Rng,
+) -> (usize, f64) {
+    let (mut best, mut best_val) = (start, start_val);
+    loop {
+        if tuning.done() {
+            return (best, best_val);
+        }
+        let mut ns = tuning.space().neighbors(best, Neighborhood::Adjacent);
+        rng.shuffle(&mut ns);
+        let mut improved = false;
+        for n in ns {
+            if tuning.done() {
+                return (best, best_val);
+            }
+            let v = tuning.eval(n);
+            if v < best_val {
+                best = n;
+                best_val = v;
+                improved = true;
+                break; // first improvement
+            }
+        }
+        if !improved {
+            return (best, best_val);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Multi-start local search
+
+/// Repeated best-improvement hill descent from random starts.
+pub struct Mls {
+    pub neighborhood: Neighborhood,
+}
+
+impl Mls {
+    pub fn new(hp: &HyperParams) -> Mls {
+        let hood = match hp.str("neighborhood", "Hamming").as_str() {
+            "adjacent" | "Adjacent" => Neighborhood::Adjacent,
+            _ => Neighborhood::Hamming,
+        };
+        Mls { neighborhood: hood }
+    }
+}
+
+impl Optimizer for Mls {
+    fn name(&self) -> &'static str {
+        "mls"
+    }
+
+    fn run(&self, tuning: &mut Tuning<'_>, rng: &mut Rng) {
+        while !tuning.done() {
+            let start = tuning.space().random(rng);
+            let mut best_val = tuning.eval(start);
+            let mut best = start;
+            loop {
+                if tuning.done() {
+                    return;
+                }
+                let ns = tuning.space().neighbors(best, self.neighborhood);
+                let mut step = None;
+                for n in ns {
+                    if tuning.done() {
+                        return;
+                    }
+                    let v = tuning.eval(n);
+                    if v < best_val {
+                        best_val = v;
+                        step = Some(n);
+                    }
+                }
+                match step {
+                    Some(n) => best = n,
+                    None => break, // local optimum; restart
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Greedy iterated local search
+
+/// Greedy descent + bounded perturbation, restarting from the incumbent.
+pub struct GreedyIls {
+    pub perturbation: usize,
+    /// Restart from scratch when no improvement for this many kicks.
+    pub restart: usize,
+}
+
+impl GreedyIls {
+    pub fn new(hp: &HyperParams) -> GreedyIls {
+        GreedyIls {
+            perturbation: hp.usize("perturbation", 1).max(1),
+            restart: hp.usize("restart", 5).max(1),
+        }
+    }
+}
+
+impl Optimizer for GreedyIls {
+    fn name(&self) -> &'static str {
+        "greedy_ils"
+    }
+
+    fn run(&self, tuning: &mut Tuning<'_>, rng: &mut Rng) {
+        let dims: Vec<usize> = tuning.space().dims().to_vec();
+        'outer: while !tuning.done() {
+            let mut incumbent = tuning.space().random(rng);
+            let mut incumbent_val = tuning.eval(incumbent);
+            let mut stale = 0usize;
+            while stale < self.restart {
+                if tuning.done() {
+                    break 'outer;
+                }
+                let (li, lv) = descend(tuning, incumbent, incumbent_val, rng);
+                if lv < incumbent_val {
+                    incumbent = li;
+                    incumbent_val = lv;
+                    stale = 0;
+                } else {
+                    stale += 1;
+                }
+                if tuning.done() {
+                    break 'outer;
+                }
+                // Kick the incumbent.
+                let enc = tuning.space().encoded(incumbent).clone();
+                let mut target: Vec<f64> = enc.iter().map(|&e| e as f64).collect();
+                for _ in 0..self.perturbation {
+                    let d = rng.below(dims.len());
+                    target[d] = rng.below(dims[d]) as f64;
+                }
+                let idx = tuning.space().snap(&target, rng);
+                let v = tuning.eval(idx);
+                if v < incumbent_val {
+                    incumbent = idx;
+                    incumbent_val = v;
+                    stale = 0;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Firefly algorithm
+
+/// Fireflies move toward brighter (better) ones with distance-attenuated
+/// attraction plus a random walk.
+pub struct Firefly {
+    pub popsize: usize,
+    pub maxiter: usize,
+    pub beta0: f64,
+    pub gamma: f64,
+    pub alpha: f64,
+}
+
+impl Firefly {
+    pub fn new(hp: &HyperParams) -> Firefly {
+        Firefly {
+            popsize: hp.usize("popsize", 15).max(2),
+            maxiter: hp.usize("maxiter", 100).max(1),
+            beta0: hp.f64("beta0", 1.0),
+            gamma: hp.f64("gamma", 0.1),
+            alpha: hp.f64("alpha", 0.3),
+        }
+    }
+}
+
+impl Optimizer for Firefly {
+    fn name(&self) -> &'static str {
+        "firefly"
+    }
+
+    fn run(&self, tuning: &mut Tuning<'_>, rng: &mut Rng) {
+        let dims: Vec<usize> = tuning.space().dims().to_vec();
+        let ndim = dims.len();
+        let n = tuning.space().len();
+        // positions + brightness (negated value: higher is better)
+        let mut pos: Vec<Vec<f64>> = Vec::new();
+        let mut val: Vec<f64> = Vec::new();
+        for idx in tuning.space().sample(rng, self.popsize.min(n)) {
+            if tuning.done() {
+                return;
+            }
+            let v = tuning.eval(idx);
+            pos.push(
+                tuning
+                    .space()
+                    .encoded(idx)
+                    .iter()
+                    .map(|&e| e as f64)
+                    .collect(),
+            );
+            val.push(v);
+        }
+        let m = pos.len();
+        for _iter in 0..self.maxiter {
+            if tuning.done() {
+                return;
+            }
+            for i in 0..m {
+                for j in 0..m {
+                    if tuning.done() {
+                        return;
+                    }
+                    if !(val[j] < val[i]) {
+                        continue; // j not brighter
+                    }
+                    let r2: f64 = pos[i]
+                        .iter()
+                        .zip(&pos[j])
+                        .map(|(a, b)| (a - b) * (a - b))
+                        .sum();
+                    let beta = self.beta0 * (-self.gamma * r2).exp();
+                    let mut target = pos[i].clone();
+                    for d in 0..ndim {
+                        let step = beta * (pos[j][d] - pos[i][d])
+                            + self.alpha * rng.range_f64(-1.0, 1.0) * dims[d] as f64 / 8.0;
+                        target[d] = (target[d] + step).clamp(0.0, (dims[d] - 1) as f64);
+                    }
+                    let idx = tuning.space().snap(&target, rng);
+                    let v = tuning.eval(idx);
+                    if v < val[i] {
+                        val[i] = v;
+                        pos[i] = tuning
+                            .space()
+                            .encoded(idx)
+                            .iter()
+                            .map(|&e| e as f64)
+                            .collect();
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{quality, run_optimizer};
+    use super::super::HyperParams;
+
+    #[test]
+    fn de_quality() {
+        let trace = run_optimizer("differential_evolution", &HyperParams::new(), 90, 41);
+        assert!(quality(&trace) > 0.4, "q={}", quality(&trace));
+    }
+
+    #[test]
+    fn basin_hopping_quality() {
+        let trace = run_optimizer("basin_hopping", &HyperParams::new(), 90, 43);
+        assert!(quality(&trace) > 0.4, "q={}", quality(&trace));
+    }
+
+    #[test]
+    fn mls_visits_neighbors() {
+        let trace = run_optimizer("mls", &HyperParams::new(), 60, 47);
+        assert!(quality(&trace) > 0.4, "q={}", quality(&trace));
+    }
+
+    #[test]
+    fn ils_perturbation_matters() {
+        let a = run_optimizer("greedy_ils", &HyperParams::new().set("perturbation", 1i64), 60, 3);
+        let b = run_optimizer("greedy_ils", &HyperParams::new().set("perturbation", 4i64), 60, 3);
+        let sa: Vec<usize> = a.points.iter().map(|p| p.config).collect();
+        let sb: Vec<usize> = b.points.iter().map(|p| p.config).collect();
+        assert_ne!(sa, sb);
+    }
+
+    #[test]
+    fn firefly_quality() {
+        let trace = run_optimizer("firefly", &HyperParams::new(), 90, 53);
+        assert!(quality(&trace) > 0.3, "q={}", quality(&trace));
+    }
+}

@@ -1,0 +1,239 @@
+//! Genetic algorithm (Table III hyperparameters: `method`, `popsize`,
+//! `maxiter`, `mutation_chance`).
+//!
+//! Rank-weighted parent selection, one of four crossover operators
+//! (`single_point`, `two_point`, `uniform`, `disruptive_uniform`), and
+//! per-gene mutation with probability `1 / mutation_chance` (Kernel
+//! Tuner's convention: the hyperparameter is the denominator). Children
+//! that land on invalid configurations are snapped to the nearest valid
+//! lattice point.
+
+use super::{HyperParams, Optimizer};
+use crate::runner::Tuning;
+use crate::searchspace::SearchSpace;
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+
+pub const CROSSOVER_METHODS: [&str; 4] =
+    ["single_point", "two_point", "uniform", "disruptive_uniform"];
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Crossover {
+    SinglePoint,
+    TwoPoint,
+    Uniform,
+    DisruptiveUniform,
+}
+
+impl Crossover {
+    pub fn parse(name: &str) -> Result<Crossover> {
+        Ok(match name {
+            "single_point" => Crossover::SinglePoint,
+            "two_point" => Crossover::TwoPoint,
+            "uniform" => Crossover::Uniform,
+            "disruptive_uniform" => Crossover::DisruptiveUniform,
+            other => bail!("unknown crossover {other:?}"),
+        })
+    }
+
+    /// Produce two children from two parents (encoded configs).
+    pub fn apply(&self, a: &[u16], b: &[u16], rng: &mut Rng) -> (Vec<u16>, Vec<u16>) {
+        let n = a.len();
+        let mut c1 = a.to_vec();
+        let mut c2 = b.to_vec();
+        match self {
+            Crossover::SinglePoint => {
+                let cut = 1 + rng.below(n.max(2) - 1);
+                for d in cut..n {
+                    c1[d] = b[d];
+                    c2[d] = a[d];
+                }
+            }
+            Crossover::TwoPoint => {
+                let (mut lo, mut hi) = (rng.below(n), rng.below(n));
+                if lo > hi {
+                    std::mem::swap(&mut lo, &mut hi);
+                }
+                for d in lo..=hi {
+                    c1[d] = b[d];
+                    c2[d] = a[d];
+                }
+            }
+            Crossover::Uniform => {
+                for d in 0..n {
+                    if rng.chance(0.5) {
+                        c1[d] = b[d];
+                        c2[d] = a[d];
+                    }
+                }
+            }
+            Crossover::DisruptiveUniform => {
+                // Swap *only* where parents differ, maximizing disruption.
+                for d in 0..n {
+                    if a[d] != b[d] && rng.chance(0.5) {
+                        c1[d] = b[d];
+                        c2[d] = a[d];
+                    }
+                }
+            }
+        }
+        (c1, c2)
+    }
+}
+
+pub struct GeneticAlgorithm {
+    pub crossover: Crossover,
+    pub popsize: usize,
+    pub maxiter: usize,
+    /// Per-gene mutation probability = 1 / mutation_chance.
+    pub mutation_chance: usize,
+}
+
+impl GeneticAlgorithm {
+    pub fn new(hp: &HyperParams) -> Result<GeneticAlgorithm> {
+        Ok(GeneticAlgorithm {
+            crossover: Crossover::parse(&hp.str("method", "uniform"))?,
+            popsize: hp.usize("popsize", 20).max(2),
+            maxiter: hp.usize("maxiter", 100).max(1),
+            mutation_chance: hp.usize("mutation_chance", 10).max(1),
+        })
+    }
+
+    fn mutate(&self, enc: &mut [u16], space: &SearchSpace, rng: &mut Rng) {
+        let dims = space.dims();
+        for (d, g) in enc.iter_mut().enumerate() {
+            if rng.chance(1.0 / self.mutation_chance as f64) && dims[d] > 1 {
+                let mut nv = rng.below(dims[d]) as u16;
+                while nv == *g {
+                    nv = rng.below(dims[d]) as u16;
+                }
+                *g = nv;
+            }
+        }
+    }
+
+    /// Resolve an encoded child to a valid config index.
+    fn materialize(&self, enc: Vec<u16>, space: &SearchSpace, rng: &mut Rng) -> usize {
+        if let Some(i) = space.index_of(&enc) {
+            return i;
+        }
+        let target: Vec<f64> = enc.iter().map(|&v| v as f64).collect();
+        space.snap(&target, rng)
+    }
+}
+
+impl Optimizer for GeneticAlgorithm {
+    fn name(&self) -> &'static str {
+        "genetic_algorithm"
+    }
+
+    fn run(&self, tuning: &mut Tuning<'_>, rng: &mut Rng) {
+        // Initial population.
+        let n = tuning.space().len();
+        let mut pop: Vec<(usize, f64)> = Vec::with_capacity(self.popsize);
+        for idx in tuning.space().sample(rng, self.popsize.min(n)) {
+            if tuning.done() {
+                return;
+            }
+            let v = tuning.eval(idx);
+            pop.push((idx, v));
+        }
+        for _gen in 0..self.maxiter {
+            if tuning.done() {
+                return;
+            }
+            // Rank-weighted selection: sort ascending (better first).
+            pop.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            pop.truncate(self.popsize);
+            let mut next: Vec<(usize, f64)> = Vec::with_capacity(self.popsize);
+            // Elitism: carry the best through unchanged.
+            next.push(pop[0]);
+            while next.len() < self.popsize {
+                if tuning.done() {
+                    return;
+                }
+                let pa = pop[rank_pick(pop.len(), rng)].0;
+                let pb = pop[rank_pick(pop.len(), rng)].0;
+                let ea = tuning.space().encoded(pa).clone();
+                let eb = tuning.space().encoded(pb).clone();
+                let (mut c1, mut c2) = self.crossover.apply(&ea, &eb, rng);
+                self.mutate(&mut c1, tuning.space(), rng);
+                self.mutate(&mut c2, tuning.space(), rng);
+                for child in [c1, c2] {
+                    if next.len() >= self.popsize || tuning.done() {
+                        break;
+                    }
+                    let idx = self.materialize(child, tuning.space(), rng);
+                    let v = tuning.eval(idx);
+                    next.push((idx, v));
+                }
+            }
+            pop = next;
+        }
+    }
+}
+
+/// Rank-biased index pick: quadratic bias toward the front (better ranks).
+fn rank_pick(len: usize, rng: &mut Rng) -> usize {
+    let u = rng.next_f64();
+    ((u * u) * len as f64) as usize % len
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{quality, run_optimizer};
+    use super::super::HyperParams;
+    use super::*;
+
+    #[test]
+    fn all_crossovers_work() {
+        for m in CROSSOVER_METHODS {
+            let hp = HyperParams::new().set("method", m).set("popsize", 10i64);
+            let trace = run_optimizer("genetic_algorithm", &hp, 80, 31);
+            assert!(quality(&trace) > 0.3, "{m}: q={}", quality(&trace));
+        }
+    }
+
+    #[test]
+    fn crossover_operators_distinct() {
+        let mut rng = Rng::new(3);
+        let a = vec![0u16, 0, 0, 0, 0, 0];
+        let b = vec![1u16, 1, 1, 1, 1, 1];
+        let (c1, _) = Crossover::SinglePoint.apply(&a, &b, &mut rng);
+        // single point: prefix from a, suffix from b
+        let switch = c1.iter().position(|&x| x == 1).unwrap_or(6);
+        assert!(c1[switch..].iter().all(|&x| x == 1));
+
+        // disruptive uniform on identical parents changes nothing
+        let (d1, d2) = Crossover::DisruptiveUniform.apply(&a, &a, &mut rng);
+        assert_eq!(d1, a);
+        assert_eq!(d2, a);
+    }
+
+    #[test]
+    fn rejects_unknown_method() {
+        let hp = HyperParams::new().set("method", "bogus");
+        assert!(GeneticAlgorithm::new(&hp).is_err());
+    }
+
+    #[test]
+    fn mutation_rate_matters() {
+        // Very high mutation (denominator 1 => p=1) behaves like random
+        // search; elitism still guarantees progress is kept.
+        let hi = HyperParams::new().set("mutation_chance", 1i64);
+        let lo = HyperParams::new().set("mutation_chance", 100i64);
+        let th = run_optimizer("genetic_algorithm", &hi, 60, 5);
+        let tl = run_optimizer("genetic_algorithm", &lo, 60, 5);
+        let sh: Vec<usize> = th.points.iter().map(|p| p.config).collect();
+        let sl: Vec<usize> = tl.points.iter().map(|p| p.config).collect();
+        assert_ne!(sh, sl);
+    }
+
+    #[test]
+    fn popsize_respected_in_first_generation() {
+        let hp = HyperParams::new().set("popsize", 7i64).set("maxiter", 1i64);
+        let trace = run_optimizer("genetic_algorithm", &hp, 1000, 9);
+        // init pop (7 unique) + <= popsize-1 children (some may revisit)
+        assert!(trace.unique_evals <= 14);
+    }
+}

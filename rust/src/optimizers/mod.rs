@@ -1,0 +1,275 @@
+//! Optimization algorithms with exposed hyperparameters.
+//!
+//! All algorithms program against [`Tuning`] (budget-tracked evaluations
+//! with within-run caching) and take their hyperparameters through
+//! [`HyperParams`], a string→value map with typed accessors and defaults —
+//! the interface the hypertuner ("tuning the tuner") drives.
+//!
+//! Implemented algorithms (Kernel Tuner's spread of global + local
+//! methods):
+//!
+//! | name                  | hyperparameters                                   |
+//! |-----------------------|---------------------------------------------------|
+//! | `random_search`       | —                                                 |
+//! | `simulated_annealing` | `T`, `T_min`, `alpha`, `maxiter`                  |
+//! | `dual_annealing`      | `method` (8 local-search variants)                |
+//! | `genetic_algorithm`   | `method` (4 crossovers), `popsize`, `maxiter`, `mutation_chance` |
+//! | `pso`                 | `popsize`, `maxiter`, `c1`, `c2`, `w`             |
+//! | `differential_evolution` | `popsize`, `F`, `CR`                           |
+//! | `basin_hopping`       | `T`, `perturbation`                               |
+//! | `mls`                 | `restart`, `neighborhood`                         |
+//! | `greedy_ils`          | `perturbation`, `restart`                         |
+//! | `firefly`             | `popsize`, `maxiter`, `beta0`, `gamma`, `alpha`   |
+
+pub mod random;
+pub mod annealing;
+pub mod dual_annealing;
+pub mod ga;
+pub mod pso;
+pub mod extras;
+
+use crate::runner::Tuning;
+use crate::searchspace::{SearchSpace, Value};
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Hyperparameter assignment for an optimizer.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HyperParams(pub BTreeMap<String, Value>);
+
+impl HyperParams {
+    pub fn new() -> HyperParams {
+        HyperParams(BTreeMap::new())
+    }
+
+    pub fn set<V: Into<Value>>(mut self, key: &str, v: V) -> HyperParams {
+        self.0.insert(key.to_string(), v.into());
+        self
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.0.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.0
+            .get(key)
+            .and_then(|v| v.as_i64())
+            .map(|i| i.max(0) as usize)
+            .unwrap_or(default)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.0
+            .get(key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    /// Build from a configuration of a hyperparameter search space.
+    pub fn from_space_config(space: &SearchSpace, idx: usize) -> HyperParams {
+        HyperParams(space.named_values(idx).into_iter().collect())
+    }
+
+    /// Stable display string `k=v,k=v`.
+    pub fn key(&self) -> String {
+        self.0
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+/// An optimization algorithm.
+pub trait Optimizer: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// Run until the tuning budget is exhausted (or the algorithm's own
+    /// iteration limits are reached). Must check `tuning.done()` between
+    /// evaluations.
+    fn run(&self, tuning: &mut Tuning<'_>, rng: &mut Rng);
+}
+
+/// All registered optimizer names.
+pub fn optimizer_names() -> Vec<&'static str> {
+    vec![
+        "random_search",
+        "simulated_annealing",
+        "dual_annealing",
+        "genetic_algorithm",
+        "pso",
+        "differential_evolution",
+        "basin_hopping",
+        "mls",
+        "greedy_ils",
+        "firefly",
+    ]
+}
+
+/// The four algorithms evaluated in the paper (Table III order).
+pub fn paper_algorithms() -> Vec<&'static str> {
+    vec![
+        "dual_annealing",
+        "genetic_algorithm",
+        "pso",
+        "simulated_annealing",
+    ]
+}
+
+/// Instantiate an optimizer by name with hyperparameters.
+pub fn create(name: &str, hp: &HyperParams) -> Result<Box<dyn Optimizer>> {
+    Ok(match name {
+        "random_search" => Box::new(random::RandomSearch),
+        "simulated_annealing" => Box::new(annealing::SimulatedAnnealing::new(hp)),
+        "dual_annealing" => Box::new(dual_annealing::DualAnnealing::new(hp)),
+        "genetic_algorithm" => Box::new(ga::GeneticAlgorithm::new(hp)?),
+        "pso" => Box::new(pso::Pso::new(hp)),
+        "differential_evolution" => Box::new(extras::DifferentialEvolution::new(hp)),
+        "basin_hopping" => Box::new(extras::BasinHopping::new(hp)),
+        "mls" => Box::new(extras::Mls::new(hp)),
+        "greedy_ils" => Box::new(extras::GreedyIls::new(hp)),
+        "firefly" => Box::new(extras::Firefly::new(hp)),
+        other => bail!("unknown optimizer {other:?}"),
+    })
+}
+
+/// Relative acceptance scale for annealing-type methods: objective values
+/// are kernel times (~1e-3 s), so acceptance tests use relative
+/// differences to stay scale-invariant across search spaces.
+pub(crate) fn relative_delta(new: f64, old: f64) -> f64 {
+    if !old.is_finite() || !new.is_finite() {
+        // Moving to/from an invalid config: strongly discouraged / neutral.
+        return if new.is_finite() { -1.0 } else { 1.0 };
+    }
+    (new - old) / old
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::dataset::bruteforce;
+    use crate::dataset::cache::CacheData;
+    use crate::gpu::specs::A100;
+    use crate::kernels;
+    use crate::perfmodel::NoiseModel;
+    use crate::runner::{Budget, LiveRunner, SimulationRunner, Trace};
+    use crate::runtime::Engine;
+    use std::sync::Arc;
+    use std::sync::OnceLock;
+
+    /// Shared brute-forced synthetic space for optimizer tests.
+    pub fn synthetic_cache() -> (Arc<crate::searchspace::SearchSpace>, Arc<CacheData>) {
+        static CACHE: OnceLock<(Arc<crate::searchspace::SearchSpace>, Arc<CacheData>)> =
+            OnceLock::new();
+        CACHE
+            .get_or_init(|| {
+                let kernel = kernels::kernel_by_name("synthetic").unwrap();
+                let mut live = LiveRunner::new(
+                    kernels::kernel_by_name("synthetic").unwrap(),
+                    &A100,
+                    Arc::new(Engine::native()),
+                    NoiseModel::default(),
+                    42,
+                );
+                let cache = Arc::new(bruteforce::bruteforce(&mut live).unwrap());
+                (kernel.space_arc(), cache)
+            })
+            .clone()
+    }
+
+    /// Run an optimizer on the synthetic space with an eval budget.
+    pub fn run_optimizer(name: &str, hp: &HyperParams, evals: usize, seed: u64) -> Trace {
+        let (space, cache) = synthetic_cache();
+        let mut sim = SimulationRunner::new(space, cache).unwrap();
+        let mut tuning = Tuning::new(&mut sim, Budget::evals(evals));
+        let opt = create(name, hp).unwrap();
+        let mut rng = Rng::new(seed);
+        opt.run(&mut tuning, &mut rng);
+        tuning.finish()
+    }
+
+    /// Fraction of the gap between space median and optimum closed.
+    pub fn quality(trace: &Trace) -> f64 {
+        let (_, cache) = synthetic_cache();
+        let vals = cache.sorted_valid_values();
+        let opt = vals[0];
+        let median = vals[vals.len() / 2];
+        let best = trace.best().unwrap_or(f64::INFINITY);
+        ((median - best) / (median - opt)).clamp(-1.0, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use testutil::*;
+
+    #[test]
+    fn hyperparams_accessors() {
+        let hp = HyperParams::new()
+            .set("T", 1.5)
+            .set("popsize", 20i64)
+            .set("method", "uniform");
+        assert_eq!(hp.f64("T", 0.0), 1.5);
+        assert_eq!(hp.usize("popsize", 0), 20);
+        assert_eq!(hp.str("method", "x"), "uniform");
+        assert_eq!(hp.f64("missing", 7.0), 7.0);
+        assert_eq!(hp.key(), "T=1.5,method=uniform,popsize=20");
+    }
+
+    #[test]
+    fn registry_creates_every_optimizer() {
+        for name in optimizer_names() {
+            let opt = create(name, &HyperParams::new()).unwrap();
+            assert_eq!(opt.name(), name);
+        }
+        assert!(create("nope", &HyperParams::new()).is_err());
+    }
+
+    /// Every optimizer respects the evaluation budget and finds something.
+    #[test]
+    fn all_optimizers_run_within_budget() {
+        for name in optimizer_names() {
+            let trace = run_optimizer(name, &HyperParams::new(), 60, 7);
+            assert!(
+                trace.unique_evals <= 60,
+                "{name} used {} unique evals",
+                trace.unique_evals
+            );
+            assert!(trace.best().is_some(), "{name} found nothing");
+        }
+    }
+
+    /// Deterministic given the same seed.
+    #[test]
+    fn optimizers_deterministic_per_seed() {
+        for name in optimizer_names() {
+            let a = run_optimizer(name, &HyperParams::new(), 40, 5);
+            let b = run_optimizer(name, &HyperParams::new(), 40, 5);
+            assert_eq!(
+                a.points.iter().map(|p| p.config).collect::<Vec<_>>(),
+                b.points.iter().map(|p| p.config).collect::<Vec<_>>(),
+                "{name} not deterministic"
+            );
+        }
+    }
+
+    /// With a healthy budget every algorithm must beat the space median.
+    #[test]
+    fn all_optimizers_beat_median() {
+        for name in optimizer_names() {
+            let trace = run_optimizer(name, &HyperParams::new(), 80, 11);
+            let q = quality(&trace);
+            assert!(q > 0.3, "{name} quality {q}");
+        }
+    }
+
+    #[test]
+    fn relative_delta_handles_invalid() {
+        assert!(relative_delta(f64::INFINITY, 1.0) > 0.0);
+        assert!(relative_delta(1.0, f64::INFINITY) < 0.0);
+        assert!((relative_delta(1.1, 1.0) - 0.1).abs() < 1e-12);
+    }
+}

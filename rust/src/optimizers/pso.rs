@@ -1,0 +1,154 @@
+//! Particle swarm optimization (Table III hyperparameters: `popsize`,
+//! `maxiter`, `c1`, `c2`; `w` exposed but excluded from the paper's tuning
+//! after the sensitivity screen).
+//!
+//! Particles live in the continuous encoded (value-index) space; positions
+//! are snapped to the nearest valid lattice point for evaluation. Velocity
+//! update is the canonical `w*v + c1*r1*(pbest - x) + c2*r2*(gbest - x)`.
+
+use super::{HyperParams, Optimizer};
+use crate::runner::Tuning;
+use crate::util::rng::Rng;
+
+pub struct Pso {
+    pub popsize: usize,
+    pub maxiter: usize,
+    pub c1: f64,
+    pub c2: f64,
+    pub w: f64,
+}
+
+impl Pso {
+    pub fn new(hp: &HyperParams) -> Pso {
+        Pso {
+            popsize: hp.usize("popsize", 20).max(2),
+            maxiter: hp.usize("maxiter", 100).max(1),
+            c1: hp.f64("c1", 2.0),
+            c2: hp.f64("c2", 1.0),
+            w: hp.f64("w", 0.5),
+        }
+    }
+}
+
+struct Particle {
+    pos: Vec<f64>,
+    vel: Vec<f64>,
+    best_pos: Vec<f64>,
+    best_val: f64,
+}
+
+impl Optimizer for Pso {
+    fn name(&self) -> &'static str {
+        "pso"
+    }
+
+    fn run(&self, tuning: &mut Tuning<'_>, rng: &mut Rng) {
+        let dims: Vec<usize> = tuning.space().dims().to_vec();
+        let ndim = dims.len();
+        let n = tuning.space().len();
+
+        let mut particles: Vec<Particle> = Vec::with_capacity(self.popsize);
+        let mut gbest_pos: Vec<f64> = vec![0.0; ndim];
+        let mut gbest_val = f64::INFINITY;
+
+        for idx in tuning.space().sample(rng, self.popsize.min(n)) {
+            if tuning.done() {
+                return;
+            }
+            let v = tuning.eval(idx);
+            let pos: Vec<f64> = tuning
+                .space()
+                .encoded(idx)
+                .iter()
+                .map(|&e| e as f64)
+                .collect();
+            let vel: Vec<f64> = dims
+                .iter()
+                .map(|&d| rng.range_f64(-1.0, 1.0) * (d as f64 / 4.0))
+                .collect();
+            if v < gbest_val {
+                gbest_val = v;
+                gbest_pos = pos.clone();
+            }
+            particles.push(Particle {
+                best_pos: pos.clone(),
+                best_val: v,
+                pos,
+                vel,
+            });
+        }
+
+        for _iter in 0..self.maxiter {
+            if tuning.done() {
+                return;
+            }
+            for p in particles.iter_mut() {
+                if tuning.done() {
+                    return;
+                }
+                for d in 0..ndim {
+                    let r1 = rng.next_f64();
+                    let r2 = rng.next_f64();
+                    p.vel[d] = self.w * p.vel[d]
+                        + self.c1 * r1 * (p.best_pos[d] - p.pos[d])
+                        + self.c2 * r2 * (gbest_pos[d] - p.pos[d]);
+                    // Velocity clamp: half the dimension span.
+                    let vmax = (dims[d] as f64) / 2.0;
+                    p.vel[d] = p.vel[d].clamp(-vmax, vmax);
+                    p.pos[d] = (p.pos[d] + p.vel[d]).clamp(0.0, (dims[d] - 1) as f64);
+                }
+                let idx = tuning.space().snap(&p.pos, rng);
+                let v = tuning.eval(idx);
+                if v < p.best_val {
+                    p.best_val = v;
+                    p.best_pos = p.pos.clone();
+                }
+                if v < gbest_val {
+                    gbest_val = v;
+                    gbest_pos = tuning
+                        .space()
+                        .encoded(idx)
+                        .iter()
+                        .map(|&e| e as f64)
+                        .collect();
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{quality, run_optimizer};
+    use super::super::HyperParams;
+    use super::*;
+
+    #[test]
+    fn defaults() {
+        let p = Pso::new(&HyperParams::new());
+        assert_eq!(p.popsize, 20);
+        assert_eq!(p.c1, 2.0);
+    }
+
+    #[test]
+    fn finds_good_configs() {
+        let trace = run_optimizer("pso", &HyperParams::new(), 100, 23);
+        assert!(quality(&trace) > 0.4, "q={}", quality(&trace));
+    }
+
+    #[test]
+    fn coefficients_change_behavior() {
+        let a = run_optimizer("pso", &HyperParams::new().set("c1", 0.1), 60, 3);
+        let b = run_optimizer("pso", &HyperParams::new().set("c1", 3.0), 60, 3);
+        let sa: Vec<usize> = a.points.iter().map(|p| p.config).collect();
+        let sb: Vec<usize> = b.points.iter().map(|p| p.config).collect();
+        assert_ne!(sa, sb);
+    }
+
+    #[test]
+    fn tiny_popsize_still_works() {
+        let hp = HyperParams::new().set("popsize", 2i64).set("maxiter", 20i64);
+        let trace = run_optimizer("pso", &hp, 45, 7);
+        assert!(trace.best().is_some());
+    }
+}

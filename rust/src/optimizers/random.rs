@@ -1,0 +1,66 @@
+//! Random search: the methodology's calibration baseline.
+//!
+//! Samples valid configurations uniformly without replacement (falling
+//! back to with-replacement once the space is exhausted, which only
+//! happens on tiny spaces).
+
+use super::Optimizer;
+use crate::runner::Tuning;
+use crate::util::rng::Rng;
+
+pub struct RandomSearch;
+
+impl Optimizer for RandomSearch {
+    fn name(&self) -> &'static str {
+        "random_search"
+    }
+
+    fn run(&self, tuning: &mut Tuning<'_>, rng: &mut Rng) {
+        let n = tuning.space().len();
+        // Without-replacement ordering via an incremental Fisher–Yates:
+        // avoids materializing a full permutation of very large spaces
+        // unless the run actually visits that many configs.
+        let mut swapped: crate::util::hash::FastMap<usize, usize> = Default::default();
+        let mut drawn = 0usize;
+        while !tuning.done() {
+            if drawn == n {
+                // Space exhausted: keep sampling uniformly (cache hits).
+                let idx = rng.below(n);
+                tuning.eval(idx);
+                continue;
+            }
+            let j = drawn + rng.below(n - drawn);
+            let pick = *swapped.get(&j).unwrap_or(&j);
+            let head = *swapped.get(&drawn).unwrap_or(&drawn);
+            swapped.insert(j, head);
+            drawn += 1;
+            tuning.eval(pick);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::run_optimizer;
+    use super::super::HyperParams;
+
+    #[test]
+    fn no_repeats_until_exhaustion() {
+        let trace = run_optimizer("random_search", &HyperParams::new(), 50, 3);
+        let mut seen = std::collections::HashSet::new();
+        for p in &trace.points {
+            assert!(seen.insert(p.config), "config {} repeated", p.config);
+        }
+        assert_eq!(trace.unique_evals, 50);
+    }
+
+    #[test]
+    fn covers_space_uniformly() {
+        // Two different seeds should explore different prefixes.
+        let a = run_optimizer("random_search", &HyperParams::new(), 30, 1);
+        let b = run_optimizer("random_search", &HyperParams::new(), 30, 2);
+        let sa: Vec<usize> = a.points.iter().map(|p| p.config).collect();
+        let sb: Vec<usize> = b.points.iter().map(|p| p.config).collect();
+        assert_ne!(sa, sb);
+    }
+}

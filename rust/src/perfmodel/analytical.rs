@@ -1,0 +1,183 @@
+//! The device model in Rust f32 — the oracle for the AOT HLO artifacts.
+//!
+//! The arithmetic here must stay in lockstep with
+//! `python/compile/kernels/ref.py` (jnp oracle) and
+//! `python/compile/kernels/perfmodel.py` (Pallas). All three use the same
+//! f32 operation sequence, so they agree to ~1 ulp; the integration test
+//! `runtime_matches_oracle` asserts it against the PJRT execution.
+
+use super::contract::*;
+
+/// Per-configuration feature vector (see contract for the layout).
+pub type Features = [f32; NUM_FEATURES];
+
+/// Evaluate the device model for one configuration. Mirrors
+/// `ref.predict_times` row-wise.
+pub fn predict_time(f: &Features, d: &[f32; NUM_DEVICE]) -> f32 {
+    let flops = f[F_FLOPS];
+    let bytes_rw = f[F_BYTES];
+    let tpb = f[F_TPB];
+    let regs = f[F_REGS];
+    let smem = f[F_SMEM];
+    let blocks = f[F_BLOCKS];
+    let vecw = f[F_VECW];
+    let unroll = f[F_UNROLL];
+    let coal = f[F_COAL];
+    let cache = f[F_CACHE];
+    let hash_a = f[F_HASH_A];
+    let hash_b = f[F_HASH_B];
+
+    let num_sm = d[D_NUM_SM];
+    let peak = d[D_PEAK_GFLOPS] * 1.0e9;
+    let bandwidth = d[D_BW_GBS] * 1.0e9;
+    let max_threads = d[D_MAX_THREADS];
+    let smem_sm = d[D_SMEM_SM];
+    let regs_sm = d[D_REGS_SM];
+    let max_blocks = d[D_MAX_BLOCKS];
+    let warp = d[D_WARP];
+    let rug_seed = d[D_RUG_SEED];
+    let rug_amp = d[D_RUG_AMP];
+
+    // Occupancy: resident blocks per SM under each resource limit.
+    let occ_threads = (max_threads / tpb.max(1.0)).floor();
+    let occ_smem = (smem_sm / smem.max(1.0)).floor();
+    let occ_regs = (regs_sm / (regs * tpb).max(1.0)).floor();
+    let occ_blocks = occ_threads.min(occ_smem).min(occ_regs.min(max_blocks));
+
+    let warp_ok = (tpb / warp).floor() * warp == tpb;
+    let valid = occ_blocks >= 1.0 && tpb <= MAX_TPB && tpb >= warp && warp_ok;
+    if !valid {
+        return INVALID_TIME;
+    }
+
+    let occupancy = (occ_blocks * tpb / max_threads).min(1.0);
+
+    let vec_bonus = 1.0 - 0.08 * (vecw.max(1.0).log2() - 1.5).abs();
+    let unroll_curve = 1.0 - 0.05 * (unroll.max(1.0).log2() - 2.0).abs();
+    let eff_compute = ((0.45 + 0.55 * occupancy) * vec_bonus * unroll_curve)
+        .clamp(0.05, 1.0);
+    let eff_memory = ((0.55 + 0.45 * occupancy.sqrt())
+        * (0.6 + 0.4 * coal)
+        * (1.0 + 0.15 * cache))
+        .clamp(0.05, 1.05);
+
+    let t_compute = flops / (peak * eff_compute);
+    let t_memory = bytes_rw / (bandwidth * eff_memory);
+
+    let resident = (occ_blocks * num_sm).max(1.0);
+    let waves = (blocks / resident).ceil();
+    let wave_penalty = waves * resident / blocks.max(1.0);
+
+    let u = hash_a * (1.0 - rug_seed) + hash_b * rug_seed;
+    let rugged = 1.0 + rug_amp * (2.0 * u - 1.0);
+
+    t_compute.max(t_memory) * wave_penalty * rugged + LAUNCH_OVERHEAD * waves
+}
+
+/// Batched evaluation (native backend / oracle).
+pub fn predict_times(features: &[Features], d: &[f32; NUM_DEVICE]) -> Vec<f32> {
+    features.iter().map(|f| predict_time(f, d)).collect()
+}
+
+/// The warmup-drift triple the L2 `measure_batch` graph emits:
+/// `(time, t_cold, t_hot)`; see `python/compile/model.py`.
+pub fn measure_triple(f: &Features, d: &[f32; NUM_DEVICE]) -> (f32, f32, f32) {
+    let t = predict_time(f, d);
+    let drift = 1.02 + 0.04 * f[F_HASH_B];
+    (t, t * drift, t * 0.995)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::specs::A100;
+
+    fn feat(tpb: f32) -> Features {
+        let mut f = [0f32; NUM_FEATURES];
+        f[F_FLOPS] = 1e11;
+        f[F_BYTES] = 1e9;
+        f[F_TPB] = tpb;
+        f[F_REGS] = 32.0;
+        f[F_SMEM] = 4096.0;
+        f[F_BLOCKS] = 4096.0;
+        f[F_VECW] = 4.0;
+        f[F_UNROLL] = 4.0;
+        f[F_COAL] = 0.8;
+        f[F_CACHE] = 0.5;
+        f[F_HASH_A] = 0.3;
+        f[F_HASH_B] = 0.7;
+        f
+    }
+
+    #[test]
+    fn valid_config_positive_time() {
+        let t = predict_time(&feat(256.0), &A100.to_vector());
+        assert!(t > 0.0 && t < 1.0, "t={t}");
+    }
+
+    #[test]
+    fn invalid_configs_sentinel() {
+        let d = A100.to_vector();
+        assert_eq!(predict_time(&feat(2048.0), &d), INVALID_TIME); // > MAX_TPB
+        assert_eq!(predict_time(&feat(100.0), &d), INVALID_TIME); // not warp-divisible
+        let mut f = feat(256.0);
+        f[F_SMEM] = 1e9; // no resident blocks
+        assert_eq!(predict_time(&f, &d), INVALID_TIME);
+    }
+
+    #[test]
+    fn roofline_monotonicity() {
+        let d = A100.to_vector();
+        let mut lo = feat(256.0);
+        let mut hi = feat(256.0);
+        lo[F_FLOPS] = 1e11;
+        hi[F_FLOPS] = 2e11;
+        assert!(predict_time(&hi, &d) >= predict_time(&lo, &d));
+        lo[F_BYTES] = 1e10;
+        hi[F_BYTES] = 4e10;
+        assert!(predict_time(&hi, &d) >= predict_time(&lo, &d));
+    }
+
+    #[test]
+    fn ruggedness_bounds() {
+        let d = A100.to_vector();
+        let mut smooth_d = d;
+        smooth_d[D_RUG_AMP] = 0.0;
+        for ha in [0.0, 0.25, 0.5, 0.99] {
+            let mut f = feat(256.0);
+            f[F_HASH_A] = ha;
+            let rough = predict_time(&f, &d);
+            let smooth = predict_time(&f, &smooth_d);
+            let ratio = rough / smooth;
+            assert!(ratio <= 1.0 + d[D_RUG_AMP] + 0.05);
+            assert!(ratio >= 1.0 - d[D_RUG_AMP] - 0.05);
+        }
+    }
+
+    #[test]
+    fn measure_triple_ordering() {
+        let (t, cold, hot) = measure_triple(&feat(256.0), &A100.to_vector());
+        assert!(cold >= t);
+        assert!(hot <= t);
+        assert!(cold / t <= 1.06 + 1e-6);
+    }
+
+    #[test]
+    fn wave_quantization_steps() {
+        // Crossing a wave boundary must not make time *decrease*.
+        let d = A100.to_vector();
+        let mut f = feat(256.0);
+        f[F_BYTES] = 0.0;
+        // resident = occ_blocks * 108; pick blocks below and above a multiple
+        let t_below = {
+            f[F_BLOCKS] = 800.0;
+            predict_time(&f, &d)
+        };
+        let t_above = {
+            f[F_BLOCKS] = 900.0;
+            predict_time(&f, &d)
+        };
+        // per-block normalized time should be higher right above a boundary
+        assert!(t_above > 0.0 && t_below > 0.0);
+    }
+}

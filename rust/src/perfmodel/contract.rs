@@ -1,0 +1,154 @@
+//! Rust mirror of `python/compile/contract.py`.
+//!
+//! The runtime validates `artifacts/contract.json` against these constants
+//! at load time, so a drift between the Python and Rust sides fails fast
+//! instead of silently mis-indexing feature columns.
+
+// ---- feature vector (per kernel configuration) -----------------------------
+pub const F_FLOPS: usize = 0;
+pub const F_BYTES: usize = 1;
+pub const F_TPB: usize = 2;
+pub const F_REGS: usize = 3;
+pub const F_SMEM: usize = 4;
+pub const F_BLOCKS: usize = 5;
+pub const F_VECW: usize = 6;
+pub const F_UNROLL: usize = 7;
+pub const F_COAL: usize = 8;
+pub const F_CACHE: usize = 9;
+pub const F_HASH_A: usize = 10;
+pub const F_HASH_B: usize = 11;
+pub const NUM_FEATURES: usize = 12;
+
+// ---- device vector -----------------------------------------------------------
+pub const D_NUM_SM: usize = 0;
+pub const D_PEAK_GFLOPS: usize = 1;
+pub const D_BW_GBS: usize = 2;
+pub const D_MAX_THREADS: usize = 3;
+pub const D_SMEM_SM: usize = 4;
+pub const D_REGS_SM: usize = 5;
+pub const D_MAX_BLOCKS: usize = 6;
+pub const D_WARP: usize = 7;
+pub const D_RUG_SEED: usize = 8;
+pub const D_RUG_AMP: usize = 9;
+pub const NUM_DEVICE: usize = 10;
+
+// ---- model constants -----------------------------------------------------------
+/// Sentinel for configurations that fail to launch ("compile error").
+pub const INVALID_TIME: f32 = 1.0e9;
+/// Fixed per-wave launch overhead in seconds.
+pub const LAUNCH_OVERHEAD: f32 = 3.0e-6;
+/// Hardware limit on threads per block.
+pub const MAX_TPB: f32 = 1024.0;
+
+/// AOT artifact batch sizes (one HLO per size), ascending.
+pub const BATCH_SIZES: [usize; 4] = [256, 1024, 4096, 16384];
+pub const CONTRACT_VERSION: u64 = 1;
+
+/// Validate a parsed `artifacts/contract.json` against this mirror.
+pub fn validate_contract(json: &crate::util::json::Json) -> anyhow::Result<()> {
+    use anyhow::{bail, Context};
+    let get = |k: &str| {
+        json.get(k)
+            .with_context(|| format!("contract.json missing {k:?}"))
+    };
+    if get("version")?.as_f64() != Some(CONTRACT_VERSION as f64) {
+        bail!("contract version mismatch");
+    }
+    if get("num_features")?.as_usize() != Some(NUM_FEATURES) {
+        bail!("num_features mismatch");
+    }
+    if get("num_device")?.as_usize() != Some(NUM_DEVICE) {
+        bail!("num_device mismatch");
+    }
+    if get("invalid_time")?.as_f64() != Some(INVALID_TIME as f64) {
+        bail!("invalid_time mismatch");
+    }
+    let idx = get("indices")?
+        .as_obj()
+        .context("indices must be an object")?;
+    let expect = [
+        ("F_FLOPS", F_FLOPS),
+        ("F_BYTES", F_BYTES),
+        ("F_TPB", F_TPB),
+        ("F_REGS", F_REGS),
+        ("F_SMEM", F_SMEM),
+        ("F_BLOCKS", F_BLOCKS),
+        ("F_VECW", F_VECW),
+        ("F_UNROLL", F_UNROLL),
+        ("F_COAL", F_COAL),
+        ("F_CACHE", F_CACHE),
+        ("F_HASH_A", F_HASH_A),
+        ("F_HASH_B", F_HASH_B),
+        ("D_NUM_SM", D_NUM_SM),
+        ("D_PEAK_GFLOPS", D_PEAK_GFLOPS),
+        ("D_BW_GBS", D_BW_GBS),
+        ("D_MAX_THREADS", D_MAX_THREADS),
+        ("D_SMEM_SM", D_SMEM_SM),
+        ("D_REGS_SM", D_REGS_SM),
+        ("D_MAX_BLOCKS", D_MAX_BLOCKS),
+        ("D_WARP", D_WARP),
+        ("D_RUG_SEED", D_RUG_SEED),
+        ("D_RUG_AMP", D_RUG_AMP),
+    ];
+    for (name, want) in expect {
+        match idx.get(name).and_then(|v| v.as_usize()) {
+            Some(got) if got == want => {}
+            other => bail!("index {name} mismatch: expected {want}, got {other:?}"),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn validates_generated_contract_shape() {
+        // Build a contract.json equivalent in Rust and validate it.
+        let mut indices = json::Json::obj();
+        for (name, v) in [
+            ("F_FLOPS", F_FLOPS),
+            ("F_BYTES", F_BYTES),
+            ("F_TPB", F_TPB),
+            ("F_REGS", F_REGS),
+            ("F_SMEM", F_SMEM),
+            ("F_BLOCKS", F_BLOCKS),
+            ("F_VECW", F_VECW),
+            ("F_UNROLL", F_UNROLL),
+            ("F_COAL", F_COAL),
+            ("F_CACHE", F_CACHE),
+            ("F_HASH_A", F_HASH_A),
+            ("F_HASH_B", F_HASH_B),
+            ("D_NUM_SM", D_NUM_SM),
+            ("D_PEAK_GFLOPS", D_PEAK_GFLOPS),
+            ("D_BW_GBS", D_BW_GBS),
+            ("D_MAX_THREADS", D_MAX_THREADS),
+            ("D_SMEM_SM", D_SMEM_SM),
+            ("D_REGS_SM", D_REGS_SM),
+            ("D_MAX_BLOCKS", D_MAX_BLOCKS),
+            ("D_WARP", D_WARP),
+            ("D_RUG_SEED", D_RUG_SEED),
+            ("D_RUG_AMP", D_RUG_AMP),
+        ] {
+            indices.set(name, v.into());
+        }
+        let mut c = json::Json::obj();
+        c.set("version", (CONTRACT_VERSION as usize).into())
+            .set("num_features", NUM_FEATURES.into())
+            .set("num_device", NUM_DEVICE.into())
+            .set("invalid_time", (INVALID_TIME as f64).into())
+            .set("indices", indices);
+        validate_contract(&c).unwrap();
+
+        // Tampered index must fail.
+        let mut bad = c.clone();
+        if let json::Json::Obj(m) = &mut bad {
+            if let Some(json::Json::Obj(idx)) = m.get_mut("indices") {
+                idx.insert("F_TPB".into(), json::Json::Num(9.0));
+            }
+        }
+        assert!(validate_contract(&bad).is_err());
+    }
+}

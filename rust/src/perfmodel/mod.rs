@@ -1,0 +1,16 @@
+//! The simulated device performance model.
+//!
+//! * [`contract`] — the Rust mirror of `python/compile/contract.py`: the
+//!   feature/device vector layout shared with the L1 Pallas kernel.
+//! * [`analytical`] — the model itself in Rust f32: the test oracle for
+//!   the AOT HLO artifacts, and the `native` backend when PJRT is not
+//!   wanted (e.g. unit tests, CI without artifacts).
+//! * [`noise`] — the measurement-noise model: deterministic heteroscedastic
+//!   observation noise seeded per (space, config, repeat).
+
+pub mod contract;
+pub mod analytical;
+pub mod noise;
+
+pub use analytical::{predict_time, Features};
+pub use noise::NoiseModel;

@@ -1,0 +1,143 @@
+//! Measurement-noise model.
+//!
+//! Real auto-tuning measurements are noisy — the paper runs every kernel
+//! configuration 32 times and stores both the raw and averaged values.
+//! We reproduce that: every observation draws deterministic multiplicative
+//! log-normal noise (plus rare scheduling outliers) from a stream seeded
+//! by (space seed, config index, repeat), so the brute-forced dataset is
+//! bit-reproducible while behaving like real measurements.
+
+use crate::util::rng::{mix64, Rng};
+
+/// Number of observations per configuration in the brute-force dataset
+/// (matches the paper's hub).
+pub const OBSERVATIONS: usize = 32;
+
+/// Heteroscedastic observation-noise model.
+#[derive(Clone, Debug)]
+pub struct NoiseModel {
+    /// Base relative sigma of the log-normal term.
+    pub sigma: f64,
+    /// Probability of a scheduling outlier per observation.
+    pub outlier_prob: f64,
+    /// Outlier slowdown factor upper bound (uniform in [1, bound]).
+    pub outlier_factor: f64,
+}
+
+impl Default for NoiseModel {
+    fn default() -> Self {
+        NoiseModel {
+            sigma: 0.02,
+            outlier_prob: 0.01,
+            outlier_factor: 1.5,
+        }
+    }
+}
+
+impl NoiseModel {
+    /// One observed value for (true time, cold, hot) at a given repeat.
+    ///
+    /// Observation 0 is the cold run (warmup drift); later observations
+    /// jitter around the true time, floored at the hot steady-state.
+    pub fn observe(
+        &self,
+        space_seed: u64,
+        config_idx: usize,
+        repeat: usize,
+        t_true: f64,
+        t_cold: f64,
+        t_hot: f64,
+    ) -> f64 {
+        let mut rng = Rng::new(mix64(
+            space_seed,
+            mix64(config_idx as u64, repeat as u64 ^ 0xA5A5_5A5A),
+        ));
+        let base = if repeat == 0 { t_cold } else { t_true };
+        let mut v = base * rng.lognormal_unit(self.sigma);
+        if rng.chance(self.outlier_prob) {
+            v *= rng.range_f64(1.0, self.outlier_factor);
+        }
+        v.max(t_hot)
+    }
+
+    /// The full observation vector for a configuration.
+    pub fn observations(
+        &self,
+        space_seed: u64,
+        config_idx: usize,
+        t_true: f64,
+        t_cold: f64,
+        t_hot: f64,
+        count: usize,
+    ) -> Vec<f64> {
+        (0..count)
+            .map(|r| self.observe(space_seed, config_idx, r, t_true, t_cold, t_hot))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_key() {
+        // t_hot well below t_true so the floor never collapses draws.
+        let nm = NoiseModel::default();
+        let a = nm.observe(1, 2, 3, 1.0, 1.03, 0.5);
+        let b = nm.observe(1, 2, 3, 1.0, 1.03, 0.5);
+        assert_eq!(a, b);
+        let c = nm.observe(1, 2, 4, 1.0, 1.03, 0.5);
+        assert_ne!(a, c);
+        let d = nm.observe(2, 2, 3, 1.0, 1.03, 0.5);
+        assert_ne!(a, d);
+    }
+
+    #[test]
+    fn mean_near_true_value() {
+        let nm = NoiseModel {
+            sigma: 0.02,
+            outlier_prob: 0.0,
+            outlier_factor: 1.0,
+        };
+        let obs = nm.observations(7, 11, 1.0, 1.03, 0.9, 10_000);
+        // skip cold observation
+        let mean: f64 = obs[1..].iter().sum::<f64>() / (obs.len() - 1) as f64;
+        assert!((mean - 1.0).abs() < 0.005, "mean={mean}");
+    }
+
+    #[test]
+    fn cold_first_observation() {
+        let nm = NoiseModel {
+            sigma: 0.0,
+            outlier_prob: 0.0,
+            outlier_factor: 1.0,
+        };
+        let obs = nm.observations(1, 1, 1.0, 1.05, 0.995, 4);
+        assert!((obs[0] - 1.05).abs() < 1e-12);
+        assert!((obs[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn floored_at_hot() {
+        let nm = NoiseModel {
+            sigma: 0.5, // huge noise
+            outlier_prob: 0.0,
+            outlier_factor: 1.0,
+        };
+        let obs = nm.observations(3, 5, 1.0, 1.03, 0.995, 1000);
+        assert!(obs.iter().all(|&v| v >= 0.995));
+    }
+
+    #[test]
+    fn outliers_show_up() {
+        let nm = NoiseModel {
+            sigma: 0.0,
+            outlier_prob: 0.5,
+            outlier_factor: 2.0,
+        };
+        let obs = nm.observations(9, 1, 1.0, 1.0, 0.0, 1000);
+        let outliers = obs.iter().filter(|&&v| v > 1.01).count();
+        assert!(outliers > 300 && outliers < 700, "outliers={outliers}");
+    }
+}

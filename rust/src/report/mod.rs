@@ -1,0 +1,91 @@
+//! Result rendering: every experiment writes its artifacts (ASCII
+//! rendering + CSV data) into the results directory and echoes the ASCII
+//! form to stdout, so `tunetuner experiment figN` output is directly
+//! comparable to the paper's figure.
+
+use crate::util::plot::{self, Series};
+use crate::util::table::Table;
+use anyhow::Result;
+use std::path::{Path, PathBuf};
+
+/// A sink for experiment outputs.
+pub struct Report {
+    dir: PathBuf,
+    /// Experiment id, e.g. "fig5".
+    pub id: String,
+}
+
+impl Report {
+    pub fn new(results_dir: &Path, id: &str) -> Report {
+        Report {
+            dir: results_dir.to_path_buf(),
+            id: id.to_string(),
+        }
+    }
+
+    fn write(&self, suffix: &str, contents: &str) -> Result<PathBuf> {
+        let path = self.dir.join(format!("{}_{suffix}", self.id));
+        crate::util::compress::write_string(&path, contents)?;
+        Ok(path)
+    }
+
+    /// Emit a table: prints it and writes .txt + .csv.
+    pub fn table(&self, table: &Table) -> Result<()> {
+        let rendered = table.render();
+        println!("{rendered}");
+        self.write("table.txt", &rendered)?;
+        self.write("data.csv", &table.to_csv())?;
+        Ok(())
+    }
+
+    /// Emit a line plot: prints ASCII and writes .txt + .csv.
+    pub fn lines(&self, title: &str, series: &[Series]) -> Result<()> {
+        let rendered = plot::line_plot(title, series, 100, 24);
+        println!("{rendered}");
+        self.write("plot.txt", &rendered)?;
+        self.write("series.csv", &plot::series_csv(series))?;
+        Ok(())
+    }
+
+    /// Emit a violin plot: prints ASCII and writes .txt + per-dist CSV.
+    pub fn violins(&self, title: &str, dists: &[(String, Vec<f64>)]) -> Result<()> {
+        let rendered = plot::violin_plot(title, dists, 90);
+        println!("{rendered}");
+        self.write("violin.txt", &rendered)?;
+        let mut csv = String::from("name,score\n");
+        for (name, vals) in dists {
+            for v in vals {
+                csv.push_str(&format!("{name},{v}\n"));
+            }
+        }
+        self.write("dist.csv", &csv)?;
+        Ok(())
+    }
+
+    /// Free-form summary text (also printed).
+    pub fn summary(&self, text: &str) -> Result<()> {
+        println!("{text}");
+        self.write("summary.txt", text)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_writes_files() {
+        let dir = std::env::temp_dir().join(format!("tt_report_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let r = Report::new(&dir, "figX");
+        let mut t = Table::new("t", &["a"]);
+        t.row(vec!["1".into()]);
+        r.table(&t).unwrap();
+        r.summary("hello").unwrap();
+        assert!(dir.join("figX_table.txt").exists());
+        assert!(dir.join("figX_data.csv").exists());
+        assert!(dir.join("figX_summary.txt").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,191 @@
+//! Live runner: evaluations through the (simulated) hardware.
+//!
+//! Every call runs the device model through the evaluation [`Engine`]
+//! (PJRT or native oracle), draws the 32-observation noise vector, and
+//! charges the simulated wall-clock for compile + run + overhead — the
+//! costs the paper's Fig. 9 compares against simulation mode.
+
+use super::{EvalResult, Runner};
+use crate::gpu::DeviceModel;
+use crate::kernels::{str_seed, Kernel};
+use crate::perfmodel::analytical::Features;
+use crate::perfmodel::contract::{INVALID_TIME, NUM_DEVICE};
+use crate::perfmodel::noise::{NoiseModel, OBSERVATIONS};
+use crate::runtime::Engine;
+use crate::searchspace::SearchSpace;
+use crate::util::rng::{mix64, Rng};
+use crate::util::stats;
+use std::sync::Arc;
+
+/// Fixed framework overhead per evaluation (scheduling, codegen prep).
+pub const FRAMEWORK_OVERHEAD: f64 = 0.05;
+
+/// The live (hardware-in-the-loop) runner.
+pub struct LiveRunner {
+    kernel: Kernel,
+    device_vec: [f32; NUM_DEVICE],
+    device_name: String,
+    engine: Arc<Engine>,
+    noise: NoiseModel,
+    /// Seed tying the noise stream to this (kernel, device) space.
+    pub space_seed: u64,
+    /// Number of observations per evaluation.
+    pub observations: usize,
+    /// Pre-extracted features (configs are evaluated repeatedly).
+    features: Vec<Features>,
+}
+
+impl LiveRunner {
+    pub fn new(
+        kernel: Kernel,
+        device: &DeviceModel,
+        engine: Arc<Engine>,
+        noise: NoiseModel,
+        seed: u64,
+    ) -> LiveRunner {
+        let features = kernel.all_features();
+        let space_seed = mix64(seed, mix64(str_seed(kernel.name), str_seed(device.name)));
+        LiveRunner {
+            kernel,
+            device_vec: device.to_vector(),
+            device_name: device.name.to_string(),
+            engine,
+            noise,
+            space_seed,
+            observations: OBSERVATIONS,
+            features,
+        }
+    }
+
+    pub fn kernel(&self) -> &Kernel {
+        &self.kernel
+    }
+
+    /// Deterministic per-config compile time in seconds (1–10 s), the
+    /// dominant cost of evaluating a configuration on real hardware.
+    pub fn compile_time(&self, config_idx: usize) -> f64 {
+        let mut rng = Rng::new(mix64(self.space_seed ^ 0xC0DE, config_idx as u64));
+        rng.range_f64(1.0, 10.0)
+    }
+
+    /// Evaluate a batch of configurations (used by the brute-forcer to
+    /// amortize PJRT dispatch); returns results in order.
+    pub fn evaluate_batch(&mut self, config_idxs: &[usize]) -> Vec<EvalResult> {
+        let feats: Vec<Features> = config_idxs.iter().map(|&i| self.features[i]).collect();
+        let ms = self
+            .engine
+            .measure(&feats, &self.device_vec)
+            .expect("engine evaluation failed");
+        config_idxs
+            .iter()
+            .zip(ms)
+            .map(|(&idx, m)| {
+                let compile_time = self.compile_time(idx);
+                if m.time >= INVALID_TIME {
+                    return EvalResult {
+                        value: f64::INFINITY,
+                        observations: Vec::new(),
+                        compile_time,
+                        run_time: 0.0,
+                        overhead: FRAMEWORK_OVERHEAD,
+                        valid: false,
+                    };
+                }
+                let obs = self.noise.observations(
+                    self.space_seed,
+                    idx,
+                    m.time as f64,
+                    m.t_cold as f64,
+                    m.t_hot as f64,
+                    self.observations,
+                );
+                let run_time: f64 = obs.iter().sum();
+                EvalResult {
+                    value: stats::mean(&obs),
+                    observations: obs,
+                    compile_time,
+                    run_time,
+                    overhead: FRAMEWORK_OVERHEAD,
+                    valid: true,
+                }
+            })
+            .collect()
+    }
+}
+
+impl Runner for LiveRunner {
+    fn space(&self) -> &SearchSpace {
+        self.kernel.space()
+    }
+
+    fn evaluate(&mut self, config_idx: usize) -> EvalResult {
+        self.evaluate_batch(&[config_idx]).pop().unwrap()
+    }
+
+    fn label(&self) -> String {
+        format!("{}@{} live", self.kernel.name, self.device_name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::specs::{A100, W6600};
+    use crate::kernels;
+
+    fn runner(seed: u64) -> LiveRunner {
+        LiveRunner::new(
+            kernels::kernel_by_name("synthetic").unwrap(),
+            &A100,
+            Arc::new(Engine::native()),
+            NoiseModel::default(),
+            seed,
+        )
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = runner(7);
+        let mut b = runner(7);
+        for i in [0usize, 5, 17] {
+            let ra = a.evaluate(i);
+            let rb = b.evaluate(i);
+            assert_eq!(ra.value, rb.value);
+            assert_eq!(ra.observations, rb.observations);
+            assert_eq!(ra.compile_time, rb.compile_time);
+        }
+    }
+
+    #[test]
+    fn observation_count_and_mean() {
+        let mut r = runner(3);
+        let res = r.evaluate(0);
+        assert!(res.valid);
+        assert_eq!(res.observations.len(), OBSERVATIONS);
+        let m = stats::mean(&res.observations);
+        assert!((m - res.value).abs() < 1e-12);
+        assert!(res.run_time > 0.0);
+        assert!(res.compile_time >= 1.0 && res.compile_time <= 10.0);
+    }
+
+    #[test]
+    fn different_devices_different_values() {
+        let k1 = kernels::kernel_by_name("synthetic").unwrap();
+        let k2 = kernels::kernel_by_name("synthetic").unwrap();
+        let e = Arc::new(Engine::native());
+        let mut a = LiveRunner::new(k1, &A100, e.clone(), NoiseModel::default(), 7);
+        let mut b = LiveRunner::new(k2, &W6600, e, NoiseModel::default(), 7);
+        assert_ne!(a.evaluate(0).value, b.evaluate(0).value);
+    }
+
+    #[test]
+    fn batch_matches_sequential() {
+        let mut a = runner(9);
+        let mut b = runner(9);
+        let idxs = [0usize, 3, 9, 3];
+        let batch = a.evaluate_batch(&idxs);
+        for (&i, r) in idxs.iter().zip(&batch) {
+            assert_eq!(b.evaluate(i).value, r.value);
+        }
+    }
+}

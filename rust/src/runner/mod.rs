@@ -1,0 +1,326 @@
+//! Runners: how an optimization algorithm's configuration evaluations are
+//! served.
+//!
+//! * [`live`] — the "real hardware" path: every evaluation goes through the
+//!   PJRT device model, observation noise is drawn, and the simulated
+//!   wall-clock advances by compile + run + overhead.
+//! * [`sim`] — the paper's **simulation mode**: evaluations are replayed
+//!   from a brute-forced cache file; the simulated clock advances exactly
+//!   as live tuning would have, but the real cost is a table lookup. From
+//!   the optimizer's point of view the two are indistinguishable (asserted
+//!   by tests).
+//!
+//! [`Tuning`] wraps a runner with budget tracking, the within-run
+//! configuration cache (revisits cost only framework overhead, as in
+//! Kernel Tuner), and the trace recording used by the methodology scoring.
+
+pub mod live;
+pub mod sim;
+
+pub use live::LiveRunner;
+pub use sim::SimulationRunner;
+
+use crate::searchspace::SearchSpace;
+
+/// Result of evaluating one kernel configuration.
+#[derive(Clone, Debug)]
+pub struct EvalResult {
+    /// Mean of the observations (objective value, seconds); `INFINITY` for
+    /// configurations that failed to launch.
+    pub value: f64,
+    /// Raw observations (empty for failed configurations).
+    pub observations: Vec<f64>,
+    /// Simulated seconds spent compiling this configuration.
+    pub compile_time: f64,
+    /// Simulated seconds spent executing all observations.
+    pub run_time: f64,
+    /// Simulated framework overhead.
+    pub overhead: f64,
+    /// Whether the configuration launched successfully.
+    pub valid: bool,
+}
+
+impl EvalResult {
+    pub fn total_cost(&self) -> f64 {
+        self.compile_time + self.run_time + self.overhead
+    }
+}
+
+/// Serves configuration evaluations for one (kernel, device) search space.
+pub trait Runner: Send {
+    fn space(&self) -> &SearchSpace;
+    /// Evaluate a configuration by index.
+    fn evaluate(&mut self, config_idx: usize) -> EvalResult;
+    /// A short label for logs ("gemm@A100 live" etc.).
+    fn label(&self) -> String;
+
+    /// Allocation-free fast path for the tuning hot loop: returns
+    /// `(value, total_cost)`. Defaults to `evaluate`; the simulation
+    /// runner overrides it to skip cloning the observation vector (which
+    /// the budget/trace accounting never reads).
+    fn evaluate_lite(&mut self, config_idx: usize) -> (f64, f64) {
+        let r = self.evaluate(config_idx);
+        (r.value, r.total_cost())
+    }
+}
+
+/// One point in a tuning trace.
+#[derive(Clone, Copy, Debug)]
+pub struct TracePoint {
+    pub config: usize,
+    /// Objective value (INFINITY for failures).
+    pub value: f64,
+    /// Simulated clock *after* this evaluation.
+    pub clock: f64,
+    /// Whether this evaluation was a cache hit (config revisit).
+    pub cached: bool,
+}
+
+/// The record of one tuning run.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub points: Vec<TracePoint>,
+    /// Total simulated seconds consumed.
+    pub elapsed: f64,
+    /// Number of *unique* configurations evaluated.
+    pub unique_evals: usize,
+}
+
+impl Trace {
+    /// Best (lowest) objective value at or before simulated time `t`,
+    /// or None if nothing valid was found by then.
+    pub fn best_at(&self, t: f64) -> Option<f64> {
+        let mut best = f64::INFINITY;
+        for p in &self.points {
+            if p.clock > t {
+                break;
+            }
+            if p.value < best {
+                best = p.value;
+            }
+        }
+        if best.is_finite() {
+            Some(best)
+        } else {
+            None
+        }
+    }
+
+    /// Final best value.
+    pub fn best(&self) -> Option<f64> {
+        let b = self
+            .points
+            .iter()
+            .map(|p| p.value)
+            .fold(f64::INFINITY, f64::min);
+        if b.is_finite() {
+            Some(b)
+        } else {
+            None
+        }
+    }
+}
+
+/// Budget limits for one tuning run.
+#[derive(Clone, Copy, Debug)]
+pub struct Budget {
+    /// Maximum simulated seconds.
+    pub max_seconds: f64,
+    /// Maximum unique configuration evaluations (usize::MAX = unlimited).
+    pub max_unique_evals: usize,
+    /// Maximum total proposals including cache hits. Guards against
+    /// schedule-heavy optimizers spinning on (nearly free) revisits far
+    /// past anything a real tuning run would do.
+    pub max_proposals: usize,
+}
+
+impl Budget {
+    pub fn seconds(s: f64) -> Budget {
+        Budget {
+            max_seconds: s,
+            max_unique_evals: usize::MAX,
+            max_proposals: usize::MAX,
+        }
+    }
+
+    pub fn evals(n: usize) -> Budget {
+        Budget {
+            max_seconds: f64::INFINITY,
+            max_unique_evals: n,
+            max_proposals: usize::MAX,
+        }
+    }
+
+    /// Cap total proposals (unique + cached).
+    pub fn with_proposal_cap(mut self, cap: usize) -> Budget {
+        self.max_proposals = cap;
+        self
+    }
+}
+
+/// A budget-tracked tuning session over a runner: the interface the
+/// optimizers program against.
+pub struct Tuning<'a> {
+    runner: &'a mut dyn Runner,
+    budget: Budget,
+    trace: Trace,
+    /// Within-run evaluation cache: revisits cost only framework overhead.
+    cache: crate::util::hash::FastMap<usize, f64>,
+    /// Framework overhead charged on cache hits.
+    cached_overhead: f64,
+    /// Size of the search space (tuning is done once it is exhausted).
+    space_len: usize,
+}
+
+impl<'a> Tuning<'a> {
+    pub fn new(runner: &'a mut dyn Runner, budget: Budget) -> Tuning<'a> {
+        let space_len = runner.space().len();
+        Tuning {
+            runner,
+            budget,
+            trace: Trace::default(),
+            cache: crate::util::hash::FastMap::default(),
+            // Kernel Tuner semantics: a cache hit returns instantly and
+            // consumes no tuning time. Runaway revisit loops are bounded
+            // by Budget::max_proposals and the space-exhaustion check.
+            cached_overhead: 0.0,
+            space_len,
+        }
+    }
+
+    pub fn space(&self) -> &SearchSpace {
+        self.runner.space()
+    }
+
+    /// True once the budget is exhausted; optimizers must stop evaluating.
+    /// Also true once every configuration has been evaluated: with free
+    /// cache hits there is nothing left to learn (and an eval-count budget
+    /// larger than the space could otherwise never be reached).
+    pub fn done(&self) -> bool {
+        self.trace.elapsed >= self.budget.max_seconds
+            || self.trace.unique_evals >= self.budget.max_unique_evals
+            || self.trace.points.len() >= self.budget.max_proposals
+            || self.trace.unique_evals >= self.space_len
+    }
+
+    /// Remaining simulated seconds.
+    pub fn remaining(&self) -> f64 {
+        (self.budget.max_seconds - self.trace.elapsed).max(0.0)
+    }
+
+    /// Evaluate a configuration; INFINITY for failed configs. The
+    /// simulated clock advances accordingly.
+    pub fn eval(&mut self, config_idx: usize) -> f64 {
+        if let Some(&v) = self.cache.get(&config_idx) {
+            self.trace.elapsed += self.cached_overhead;
+            self.trace.points.push(TracePoint {
+                config: config_idx,
+                value: v,
+                clock: self.trace.elapsed,
+                cached: true,
+            });
+            return v;
+        }
+        let (value, cost) = self.runner.evaluate_lite(config_idx);
+        self.trace.elapsed += cost;
+        self.trace.unique_evals += 1;
+        self.cache.insert(config_idx, value);
+        self.trace.points.push(TracePoint {
+            config: config_idx,
+            value,
+            clock: self.trace.elapsed,
+            cached: false,
+        });
+        value
+    }
+
+    /// Current best value (INFINITY if nothing valid yet).
+    pub fn best_value(&self) -> f64 {
+        self.trace.best().unwrap_or(f64::INFINITY)
+    }
+
+    /// Finish and return the trace.
+    pub fn finish(self) -> Trace {
+        self.trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::specs::A100;
+    use crate::kernels;
+    use crate::perfmodel::NoiseModel;
+    use crate::runtime::Engine;
+    use std::sync::Arc;
+
+    fn live_runner() -> LiveRunner {
+        let kernel = kernels::kernel_by_name("synthetic").unwrap();
+        LiveRunner::new(
+            kernel,
+            &A100,
+            Arc::new(Engine::native()),
+            NoiseModel::default(),
+            42,
+        )
+    }
+
+    #[test]
+    fn budget_stops_tuning() {
+        let mut r = live_runner();
+        let mut t = Tuning::new(&mut r, Budget::evals(5));
+        let mut i = 0;
+        while !t.done() {
+            t.eval(i % 10);
+            i += 1;
+        }
+        let trace = t.finish();
+        assert_eq!(trace.unique_evals, 5);
+    }
+
+    #[test]
+    fn revisits_are_cached() {
+        let mut r = live_runner();
+        let mut t = Tuning::new(&mut r, Budget::evals(100));
+        let v1 = t.eval(3);
+        let clock1 = t.trace.elapsed;
+        let v2 = t.eval(3);
+        let clock2 = t.trace.elapsed;
+        assert_eq!(v1, v2);
+        assert!(clock2 - clock1 < 0.01, "cache hit must be ~free");
+        let trace = t.finish();
+        assert_eq!(trace.unique_evals, 1);
+        assert!(trace.points[1].cached);
+    }
+
+    #[test]
+    fn best_at_respects_time() {
+        let mut r = live_runner();
+        let mut t = Tuning::new(&mut r, Budget::evals(10));
+        for i in 0..10 {
+            t.eval(i);
+        }
+        let trace = t.finish();
+        assert!(trace.best_at(0.0).is_none());
+        let best_end = trace.best_at(trace.elapsed).unwrap();
+        assert_eq!(Some(best_end), trace.best());
+        // best is monotone over time
+        let mut prev = f64::INFINITY;
+        for k in 1..=10 {
+            let t_k = trace.elapsed * k as f64 / 10.0;
+            if let Some(b) = trace.best_at(t_k) {
+                assert!(b <= prev + 1e-12);
+                prev = b;
+            }
+        }
+    }
+
+    #[test]
+    fn time_budget_stops() {
+        let mut r = live_runner();
+        // Tiny time budget: a single eval (compile ~seconds) exceeds it.
+        let mut t = Tuning::new(&mut r, Budget::seconds(0.5));
+        t.eval(0);
+        assert!(t.done());
+    }
+}

@@ -1,0 +1,248 @@
+//! The device-model evaluation engine.
+//!
+//! Two backends:
+//! * [`EngineBackend::Pjrt`] — the real path: HLO artifacts compiled on the
+//!   PJRT CPU client (one executable per batch size), batches padded to the
+//!   smallest artifact that fits.
+//! * [`EngineBackend::Native`] — the Rust oracle (`perfmodel::analytical`),
+//!   used by unit tests and as a no-artifacts fallback; bit-compatible with
+//!   the HLO path to ~1 ulp (asserted by integration tests).
+//!
+//! The engine is `Send + Sync`; PJRT executions are serialized through a
+//! mutex (the CPU client is not thread-safe for concurrent executes), while
+//! native evaluations run lock-free.
+
+use crate::perfmodel::analytical;
+use crate::perfmodel::contract::{self, NUM_DEVICE, NUM_FEATURES};
+use crate::util::json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Evaluation triple per configuration (see `model.measure_batch`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Measurement {
+    /// True (noise-free) kernel time in seconds.
+    pub time: f32,
+    /// Cold first-observation time (warmup drift).
+    pub t_cold: f32,
+    /// Steady-state best-case time.
+    pub t_hot: f32,
+}
+
+/// Which evaluation path to use.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EngineBackend {
+    Pjrt,
+    Native,
+}
+
+struct PjrtState {
+    // Kept alive for the lifetime of the executables (PJRT requires it).
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    /// (batch_size, executable), ascending by batch size.
+    executables: Vec<(usize, xla::PjRtLoadedExecutable)>,
+}
+
+// The xla crate's client handles are raw pointers without Send/Sync
+// markers; all access is serialized through the mutex in `Engine`.
+unsafe impl Send for PjrtState {}
+
+/// Batched device-model evaluator.
+pub struct Engine {
+    backend: EngineBackend,
+    pjrt: Option<Mutex<PjrtState>>,
+    /// Cumulative count of configurations evaluated (for perf accounting).
+    evals: std::sync::atomic::AtomicU64,
+}
+
+impl Engine {
+    /// Native-oracle engine (no artifacts needed).
+    pub fn native() -> Engine {
+        Engine {
+            backend: EngineBackend::Native,
+            pjrt: None,
+            evals: Default::default(),
+        }
+    }
+
+    /// PJRT engine from an artifacts directory (validates contract.json).
+    pub fn pjrt(artifacts_dir: &Path) -> Result<Engine> {
+        let contract_path = artifacts_dir.join("contract.json");
+        let text = std::fs::read_to_string(&contract_path)
+            .with_context(|| format!("read {}", contract_path.display()))?;
+        let parsed = json::parse(&text).context("parse contract.json")?;
+        contract::validate_contract(&parsed)
+            .context("artifact contract does not match this binary")?;
+
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let mut executables = Vec::new();
+        for &n in &contract::BATCH_SIZES {
+            let path = artifacts_dir.join(format!("perfmodel_b{n}.hlo.txt"));
+            if !path.exists() {
+                continue;
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parse {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compile {}", path.display()))?;
+            executables.push((n, exe));
+        }
+        if executables.is_empty() {
+            bail!(
+                "no perfmodel_b*.hlo.txt artifacts in {} (run `make artifacts`)",
+                artifacts_dir.display()
+            );
+        }
+        executables.sort_by_key(|(n, _)| *n);
+        Ok(Engine {
+            backend: EngineBackend::Pjrt,
+            pjrt: Some(Mutex::new(PjrtState {
+                client,
+                executables,
+            })),
+            evals: Default::default(),
+        })
+    }
+
+    /// Auto-detect: PJRT if artifacts are present, else native (logged).
+    pub fn auto(artifacts_dir: &Path) -> Engine {
+        match Engine::pjrt(artifacts_dir) {
+            Ok(e) => e,
+            Err(err) => {
+                crate::log_warn!(
+                    "PJRT engine unavailable ({err:#}); falling back to native oracle"
+                );
+                Engine::native()
+            }
+        }
+    }
+
+    /// Default artifacts directory: `$TUNETUNER_ARTIFACTS` or `./artifacts`.
+    pub fn default_artifacts_dir() -> PathBuf {
+        std::env::var("TUNETUNER_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn backend(&self) -> EngineBackend {
+        self.backend
+    }
+
+    /// Total configurations evaluated so far.
+    pub fn eval_count(&self) -> u64 {
+        self.evals.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Evaluate the device model for a batch of feature vectors.
+    pub fn measure(
+        &self,
+        features: &[[f32; NUM_FEATURES]],
+        device: &[f32; NUM_DEVICE],
+    ) -> Result<Vec<Measurement>> {
+        self.evals
+            .fetch_add(features.len() as u64, std::sync::atomic::Ordering::Relaxed);
+        match self.backend {
+            EngineBackend::Native => Ok(features
+                .iter()
+                .map(|f| {
+                    let (t, c, h) = analytical::measure_triple(f, device);
+                    Measurement {
+                        time: t,
+                        t_cold: c,
+                        t_hot: h,
+                    }
+                })
+                .collect()),
+            EngineBackend::Pjrt => self.measure_pjrt(features, device),
+        }
+    }
+
+    fn measure_pjrt(
+        &self,
+        features: &[[f32; NUM_FEATURES]],
+        device: &[f32; NUM_DEVICE],
+    ) -> Result<Vec<Measurement>> {
+        let state = self.pjrt.as_ref().unwrap().lock().unwrap();
+        let mut out = Vec::with_capacity(features.len());
+        let mut offset = 0usize;
+        while offset < features.len() {
+            let remaining = features.len() - offset;
+            // Smallest artifact that fits, or the largest one for chunking.
+            let (batch, exe) = state
+                .executables
+                .iter()
+                .find(|(n, _)| *n >= remaining)
+                .or_else(|| state.executables.last())
+                .unwrap();
+            let take = remaining.min(*batch);
+            let chunk = &features[offset..offset + take];
+
+            // Pack + pad the feature matrix.
+            let mut flat = vec![0f32; batch * NUM_FEATURES];
+            for (i, f) in chunk.iter().enumerate() {
+                flat[i * NUM_FEATURES..(i + 1) * NUM_FEATURES].copy_from_slice(f);
+            }
+            // Padding rows must be *valid-shaped* to avoid NaNs; zeros are
+            // fine (they produce INVALID_TIME) since we slice them off.
+            let f_lit = xla::Literal::vec1(&flat)
+                .reshape(&[*batch as i64, NUM_FEATURES as i64])?;
+            let d_lit = xla::Literal::vec1(device);
+
+            let result = exe.execute::<xla::Literal>(&[f_lit, d_lit])?[0][0]
+                .to_literal_sync()?;
+            let tuple = result.to_tuple()?;
+            if tuple.len() != 3 {
+                bail!("expected 3 outputs from measure_batch, got {}", tuple.len());
+            }
+            let times = tuple[0].to_vec::<f32>()?;
+            let colds = tuple[1].to_vec::<f32>()?;
+            let hots = tuple[2].to_vec::<f32>()?;
+            for i in 0..take {
+                out.push(Measurement {
+                    time: times[i],
+                    t_cold: colds[i],
+                    t_hot: hots[i],
+                });
+            }
+            offset += take;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::specs::A100;
+    use crate::kernels;
+
+    #[test]
+    fn native_engine_matches_oracle() {
+        let engine = Engine::native();
+        let k = kernels::synthetic::build().unwrap();
+        let feats = k.all_features();
+        let d = A100.to_vector();
+        let ms = engine.measure(&feats, &d).unwrap();
+        assert_eq!(ms.len(), feats.len());
+        for (f, m) in feats.iter().zip(&ms) {
+            assert_eq!(m.time, analytical::predict_time(f, &d));
+        }
+        assert_eq!(engine.eval_count(), feats.len() as u64);
+    }
+
+    #[test]
+    fn native_chunking_any_size() {
+        let engine = Engine::native();
+        let d = A100.to_vector();
+        for n in [1usize, 3, 255, 300] {
+            let feats = vec![[1.0f32; NUM_FEATURES]; n];
+            assert_eq!(engine.measure(&feats, &d).unwrap().len(), n);
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! PJRT runtime: load and execute the AOT artifacts.
+//!
+//! `python/compile/aot.py` lowers the L2 `measure_batch` graph (which
+//! contains the L1 Pallas device-model kernel) to HLO text once per batch
+//! size. This module loads those artifacts, compiles them on the PJRT CPU
+//! client, and exposes batched evaluation to the Rust hot path. Python is
+//! never involved at runtime.
+
+pub mod engine;
+
+pub use engine::{Engine, EngineBackend};

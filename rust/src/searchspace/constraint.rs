@@ -1,0 +1,528 @@
+//! The constraint expression language.
+//!
+//! Restrictions on a search space are written as boolean expressions over
+//! parameter names, e.g. the CLBlast GEMM constraints:
+//!
+//! ```text
+//! MWG % (MDIMC * VWM) == 0
+//! (MDIMC * NDIMC) % 32 == 0 || (MDIMC * NDIMC) % 64 == 0
+//! ```
+//!
+//! Grammar (Pratt parser, C-like precedence):
+//!
+//! ```text
+//! expr   := or
+//! or     := and ('||' and)*
+//! and    := cmp ('&&' cmp)*
+//! cmp    := sum (('=='|'!='|'<='|'>='|'<'|'>') sum)?
+//! sum    := prod (('+'|'-') prod)*
+//! prod   := unary (('*'|'/'|'%') unary)*
+//! unary  := '!' unary | '-' unary | atom
+//! atom   := number | string | ident | '(' expr ')'
+//!         | ('min'|'max') '(' expr ',' expr ')'
+//! ```
+//!
+//! Integer-valued operands use exact i64 arithmetic (so `%` behaves like
+//! the Python constraints in Kernel Tuner specs); mixed or fractional
+//! operands fall back to f64.
+
+use super::param::Value;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+/// A compiled constraint: source text + AST + referenced parameter names.
+#[derive(Clone, Debug)]
+pub struct Constraint {
+    pub source: String,
+    expr: Expr,
+    pub vars: Vec<String>,
+}
+
+impl Constraint {
+    /// Parse a constraint expression.
+    pub fn parse(source: &str) -> Result<Constraint> {
+        let tokens = lex(source).with_context(|| format!("lexing {source:?}"))?;
+        let mut p = Parser { tokens, pos: 0 };
+        let expr = p.parse_expr(0)?;
+        if p.pos != p.tokens.len() {
+            bail!("trailing tokens in constraint {source:?}");
+        }
+        let mut vars = Vec::new();
+        collect_vars(&expr, &mut vars);
+        vars.sort();
+        vars.dedup();
+        Ok(Constraint {
+            source: source.to_string(),
+            expr,
+            vars,
+        })
+    }
+
+    /// Evaluate against a full assignment (name -> value).
+    pub fn eval(&self, env: &dyn Fn(&str) -> Option<Value>) -> Result<bool> {
+        match eval_expr(&self.expr, env)? {
+            Num::Bool(b) => Ok(b),
+            Num::Int(i) => Ok(i != 0),
+            Num::Float(x) => Ok(x != 0.0),
+            Num::Str(_) => bail!("constraint {:?} evaluated to a string", self.source),
+        }
+    }
+
+    /// Evaluate with a HashMap environment (convenience).
+    pub fn eval_map(&self, env: &HashMap<String, Value>) -> Result<bool> {
+        self.eval(&|name| env.get(name).cloned())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lexer
+
+#[derive(Clone, Debug, PartialEq)]
+enum Tok {
+    Num(f64),
+    Int(i64),
+    Str(String),
+    Ident(String),
+    Op(&'static str),
+    LParen,
+    RParen,
+    Comma,
+}
+
+fn lex(src: &str) -> Result<Vec<Tok>> {
+    let b = src.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b' ' | b'\t' | b'\n' | b'\r' => i += 1,
+            b'(' => {
+                out.push(Tok::LParen);
+                i += 1;
+            }
+            b')' => {
+                out.push(Tok::RParen);
+                i += 1;
+            }
+            b',' => {
+                out.push(Tok::Comma);
+                i += 1;
+            }
+            b'\'' | b'"' => {
+                let quote = c;
+                let start = i + 1;
+                let mut j = start;
+                while j < b.len() && b[j] != quote {
+                    j += 1;
+                }
+                if j == b.len() {
+                    bail!("unterminated string literal");
+                }
+                out.push(Tok::Str(src[start..j].to_string()));
+                i = j + 1;
+            }
+            b'0'..=b'9' | b'.' => {
+                let start = i;
+                let mut is_float = false;
+                while i < b.len()
+                    && (b[i].is_ascii_digit() || b[i] == b'.' || b[i] == b'e' || b[i] == b'E'
+                        || ((b[i] == b'+' || b[i] == b'-')
+                            && i > start
+                            && (b[i - 1] == b'e' || b[i - 1] == b'E')))
+                {
+                    if b[i] == b'.' || b[i] == b'e' || b[i] == b'E' {
+                        is_float = true;
+                    }
+                    i += 1;
+                }
+                let text = &src[start..i];
+                if is_float {
+                    out.push(Tok::Num(text.parse()?));
+                } else {
+                    out.push(Tok::Int(text.parse()?));
+                }
+            }
+            b'A'..=b'Z' | b'a'..=b'z' | b'_' => {
+                let start = i;
+                while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                    i += 1;
+                }
+                out.push(Tok::Ident(src[start..i].to_string()));
+            }
+            _ => {
+                let two = if i + 1 < b.len() { &src[i..i + 2] } else { "" };
+                let op2 = ["==", "!=", "<=", ">=", "&&", "||"]
+                    .iter()
+                    .find(|&&o| o == two);
+                if let Some(&op) = op2 {
+                    out.push(Tok::Op(op));
+                    i += 2;
+                } else {
+                    let one = &src[i..i + 1];
+                    let op1 = ["+", "-", "*", "/", "%", "<", ">", "!"]
+                        .iter()
+                        .find(|&&o| o == one);
+                    match op1 {
+                        Some(&op) => {
+                            out.push(Tok::Op(op));
+                            i += 1;
+                        }
+                        None => bail!("unexpected character {:?} at {}", c as char, i),
+                    }
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// AST + Pratt parser
+
+#[derive(Clone, Debug)]
+enum Expr {
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Var(String),
+    Unary(&'static str, Box<Expr>),
+    Binary(&'static str, Box<Expr>, Box<Expr>),
+    Call(&'static str, Vec<Expr>),
+}
+
+fn collect_vars(e: &Expr, out: &mut Vec<String>) {
+    match e {
+        Expr::Var(n) => out.push(n.clone()),
+        Expr::Unary(_, a) => collect_vars(a, out),
+        Expr::Binary(_, a, b) => {
+            collect_vars(a, out);
+            collect_vars(b, out);
+        }
+        Expr::Call(_, args) => args.iter().for_each(|a| collect_vars(a, out)),
+        _ => {}
+    }
+}
+
+struct Parser {
+    tokens: Vec<Tok>,
+    pos: usize,
+}
+
+fn binding_power(op: &str) -> Option<(u8, u8)> {
+    Some(match op {
+        "||" => (1, 2),
+        "&&" => (3, 4),
+        "==" | "!=" | "<" | ">" | "<=" | ">=" => (5, 6),
+        "+" | "-" => (7, 8),
+        "*" | "/" | "%" => (9, 10),
+        _ => return None,
+    })
+}
+
+impl Parser {
+    fn peek(&self) -> Option<&Tok> {
+        self.tokens.get(self.pos)
+    }
+
+    fn next(&mut self) -> Option<Tok> {
+        let t = self.tokens.get(self.pos).cloned();
+        if t.is_some() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn parse_expr(&mut self, min_bp: u8) -> Result<Expr> {
+        let mut lhs = match self.next() {
+            Some(Tok::Int(i)) => Expr::Int(i),
+            Some(Tok::Num(x)) => Expr::Float(x),
+            Some(Tok::Str(s)) => Expr::Str(s),
+            Some(Tok::Ident(name)) => {
+                if (name == "min" || name == "max") && self.peek() == Some(&Tok::LParen) {
+                    self.next();
+                    let a = self.parse_expr(0)?;
+                    if self.next() != Some(Tok::Comma) {
+                        bail!("expected ',' in {name}()");
+                    }
+                    let b = self.parse_expr(0)?;
+                    if self.next() != Some(Tok::RParen) {
+                        bail!("expected ')' in {name}()");
+                    }
+                    let f: &'static str = if name == "min" { "min" } else { "max" };
+                    Expr::Call(f, vec![a, b])
+                } else if name == "True" || name == "true" {
+                    Expr::Int(1)
+                } else if name == "False" || name == "false" {
+                    Expr::Int(0)
+                } else {
+                    Expr::Var(name)
+                }
+            }
+            Some(Tok::LParen) => {
+                let e = self.parse_expr(0)?;
+                if self.next() != Some(Tok::RParen) {
+                    bail!("expected ')'");
+                }
+                e
+            }
+            Some(Tok::Op("-")) => Expr::Unary("-", Box::new(self.parse_expr(11)?)),
+            Some(Tok::Op("!")) => Expr::Unary("!", Box::new(self.parse_expr(11)?)),
+            other => bail!("unexpected token {other:?}"),
+        };
+
+        loop {
+            let op = match self.peek() {
+                Some(Tok::Op(op)) => *op,
+                _ => break,
+            };
+            let Some((lbp, rbp)) = binding_power(op) else {
+                break;
+            };
+            if lbp < min_bp {
+                break;
+            }
+            self.next();
+            let rhs = self.parse_expr(rbp)?;
+            lhs = Expr::Binary(op, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Evaluator
+
+#[derive(Clone, Debug)]
+enum Num {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+}
+
+impl Num {
+    fn to_f64(&self) -> Result<f64> {
+        Ok(match self {
+            Num::Int(i) => *i as f64,
+            Num::Float(x) => *x,
+            Num::Bool(b) => *b as i64 as f64,
+            Num::Str(_) => bail!("string used in numeric context"),
+        })
+    }
+}
+
+fn from_value(v: Value) -> Num {
+    match v {
+        Value::Int(i) => Num::Int(i),
+        Value::Float(x) => Num::Float(x),
+        Value::Bool(b) => Num::Bool(b),
+        Value::Str(s) => Num::Str(s),
+    }
+}
+
+fn eval_expr(e: &Expr, env: &dyn Fn(&str) -> Option<Value>) -> Result<Num> {
+    Ok(match e {
+        Expr::Int(i) => Num::Int(*i),
+        Expr::Float(x) => Num::Float(*x),
+        Expr::Str(s) => Num::Str(s.clone()),
+        Expr::Var(name) => from_value(
+            env(name).with_context(|| format!("unknown parameter {name:?} in constraint"))?,
+        ),
+        Expr::Unary("-", a) => match eval_expr(a, env)? {
+            Num::Int(i) => Num::Int(-i),
+            other => Num::Float(-other.to_f64()?),
+        },
+        Expr::Unary("!", a) => {
+            let v = eval_expr(a, env)?;
+            Num::Bool(match v {
+                Num::Bool(b) => !b,
+                Num::Int(i) => i == 0,
+                Num::Float(x) => x == 0.0,
+                Num::Str(_) => bail!("! applied to string"),
+            })
+        }
+        Expr::Unary(op, _) => bail!("unknown unary {op}"),
+        Expr::Call(f, args) => {
+            let a = eval_expr(&args[0], env)?;
+            let b = eval_expr(&args[1], env)?;
+            match (f, &a, &b) {
+                (&"min", Num::Int(x), Num::Int(y)) => Num::Int(*x.min(y)),
+                (&"max", Num::Int(x), Num::Int(y)) => Num::Int(*x.max(y)),
+                (&"min", _, _) => Num::Float(a.to_f64()?.min(b.to_f64()?)),
+                (&"max", _, _) => Num::Float(a.to_f64()?.max(b.to_f64()?)),
+                _ => bail!("unknown function {f}"),
+            }
+        }
+        Expr::Binary(op, a, b) => {
+            // Short-circuit logicals.
+            if *op == "&&" || *op == "||" {
+                let av = truthy(eval_expr(a, env)?)?;
+                return Ok(Num::Bool(if *op == "&&" {
+                    av && truthy(eval_expr(b, env)?)?
+                } else {
+                    av || truthy(eval_expr(b, env)?)?
+                }));
+            }
+            let av = eval_expr(a, env)?;
+            let bv = eval_expr(b, env)?;
+            // String equality.
+            if let (Num::Str(x), Num::Str(y)) = (&av, &bv) {
+                return Ok(match *op {
+                    "==" => Num::Bool(x == y),
+                    "!=" => Num::Bool(x != y),
+                    _ => bail!("operator {op} not defined on strings"),
+                });
+            }
+            // Exact integer arithmetic when both sides are ints.
+            if let (Num::Int(x), Num::Int(y)) = (&av, &bv) {
+                let (x, y) = (*x, *y);
+                return Ok(match *op {
+                    "+" => Num::Int(x.wrapping_add(y)),
+                    "-" => Num::Int(x.wrapping_sub(y)),
+                    "*" => Num::Int(x.wrapping_mul(y)),
+                    "/" => {
+                        if y == 0 {
+                            bail!("division by zero");
+                        }
+                        // Python-style floor semantics are not needed by the
+                        // kernel specs; constraints use exact divisibility.
+                        Num::Int(x / y)
+                    }
+                    "%" => {
+                        if y == 0 {
+                            bail!("modulo by zero");
+                        }
+                        Num::Int(x.rem_euclid(y))
+                    }
+                    "==" => Num::Bool(x == y),
+                    "!=" => Num::Bool(x != y),
+                    "<" => Num::Bool(x < y),
+                    ">" => Num::Bool(x > y),
+                    "<=" => Num::Bool(x <= y),
+                    ">=" => Num::Bool(x >= y),
+                    _ => bail!("unknown operator {op}"),
+                });
+            }
+            let x = av.to_f64()?;
+            let y = bv.to_f64()?;
+            match *op {
+                "+" => Num::Float(x + y),
+                "-" => Num::Float(x - y),
+                "*" => Num::Float(x * y),
+                "/" => Num::Float(x / y),
+                "%" => Num::Float(x.rem_euclid(y)),
+                "==" => Num::Bool(x == y),
+                "!=" => Num::Bool(x != y),
+                "<" => Num::Bool(x < y),
+                ">" => Num::Bool(x > y),
+                "<=" => Num::Bool(x <= y),
+                ">=" => Num::Bool(x >= y),
+                _ => bail!("unknown operator {op}"),
+            }
+        }
+    })
+}
+
+fn truthy(n: Num) -> Result<bool> {
+    Ok(match n {
+        Num::Bool(b) => b,
+        Num::Int(i) => i != 0,
+        Num::Float(x) => x != 0.0,
+        Num::Str(_) => bail!("string used as boolean"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env_of(pairs: &[(&str, Value)]) -> HashMap<String, Value> {
+        pairs
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.clone()))
+            .collect()
+    }
+
+    #[test]
+    fn arithmetic_and_modulo() {
+        let c = Constraint::parse("MWG % (MDIMC * VWM) == 0").unwrap();
+        assert_eq!(c.vars, vec!["MDIMC", "MWG", "VWM"]);
+        let env = env_of(&[
+            ("MWG", Value::Int(64)),
+            ("MDIMC", Value::Int(8)),
+            ("VWM", Value::Int(4)),
+        ]);
+        assert!(c.eval_map(&env).unwrap());
+        let env = env_of(&[
+            ("MWG", Value::Int(48)),
+            ("MDIMC", Value::Int(8)),
+            ("VWM", Value::Int(4)),
+        ]);
+        assert!(!c.eval_map(&env).unwrap());
+    }
+
+    #[test]
+    fn logicals_and_comparison() {
+        let c = Constraint::parse("a * b <= 1024 && (a == 32 || b >= 4)").unwrap();
+        let t = env_of(&[("a", Value::Int(32)), ("b", Value::Int(2))]);
+        assert!(c.eval_map(&t).unwrap());
+        let f = env_of(&[("a", Value::Int(64)), ("b", Value::Int(2))]);
+        assert!(!c.eval_map(&f).unwrap());
+    }
+
+    #[test]
+    fn string_equality() {
+        let c = Constraint::parse("method == 'uniform' || method == \"two_point\"").unwrap();
+        assert!(c
+            .eval_map(&env_of(&[("method", Value::Str("uniform".into()))]))
+            .unwrap());
+        assert!(!c
+            .eval_map(&env_of(&[("method", Value::Str("single".into()))]))
+            .unwrap());
+    }
+
+    #[test]
+    fn unary_and_functions() {
+        let c = Constraint::parse("!(x > 3) && min(x, 10) == x && max(x, -1) == x").unwrap();
+        assert!(c.eval_map(&env_of(&[("x", Value::Int(2))])).unwrap());
+        assert!(!c.eval_map(&env_of(&[("x", Value::Int(5))])).unwrap());
+    }
+
+    #[test]
+    fn float_arithmetic() {
+        let c = Constraint::parse("t * 2.0 >= 1.0").unwrap();
+        assert!(c.eval_map(&env_of(&[("t", Value::Float(0.5))])).unwrap());
+        assert!(!c.eval_map(&env_of(&[("t", Value::Float(0.4))])).unwrap());
+    }
+
+    #[test]
+    fn precedence() {
+        let c = Constraint::parse("2 + 3 * 4 == 14").unwrap();
+        assert!(c.eval_map(&HashMap::new()).unwrap());
+        let c = Constraint::parse("(2 + 3) * 4 == 20").unwrap();
+        assert!(c.eval_map(&HashMap::new()).unwrap());
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Constraint::parse("a &&& b").is_err());
+        assert!(Constraint::parse("(a").is_err());
+        assert!(Constraint::parse("a ==").is_err());
+        let c = Constraint::parse("missing == 1").unwrap();
+        assert!(c.eval_map(&HashMap::new()).is_err());
+        let c = Constraint::parse("1 / 0 == 1").unwrap();
+        assert!(c.eval_map(&HashMap::new()).is_err());
+    }
+
+    #[test]
+    fn booleans_in_env() {
+        let c = Constraint::parse("use_padding == 1 || tile == 1").unwrap();
+        assert!(c
+            .eval_map(&env_of(&[
+                ("use_padding", Value::Bool(true)),
+                ("tile", Value::Int(4)),
+            ]))
+            .unwrap());
+    }
+}

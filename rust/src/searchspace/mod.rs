@@ -1,0 +1,25 @@
+//! The auto-tuning search-space engine.
+//!
+//! A search space is the set of valid kernel configurations: the Cartesian
+//! product of every tunable parameter's value list, filtered by
+//! user-defined constraints (Section III-A of the paper). This module
+//! provides:
+//!
+//! * [`param`] — parameter values and definitions,
+//! * [`constraint`] — a small expression language for restrictions such as
+//!   `MWG % (MDIMC * VWM) == 0`,
+//! * [`space`] — enumeration with prefix pruning, config⇄index mapping,
+//!   neighbor graphs and sampling.
+//!
+//! The same engine backs both levels of the paper: *kernel* configuration
+//! spaces (L3 tuning) and *hyperparameter* configuration spaces
+//! (hypertuning — "tuning the tuner"), which is exactly how the paper
+//! reuses its auto-tuner machinery as a meta-strategy.
+
+pub mod param;
+pub mod constraint;
+pub mod space;
+
+pub use constraint::Constraint;
+pub use param::{TunableParam, Value};
+pub use space::{Neighborhood, SearchSpace};

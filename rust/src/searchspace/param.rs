@@ -1,0 +1,138 @@
+//! Tunable parameter definitions and values.
+
+use std::fmt;
+
+/// A parameter value: auto-tuning parameters mix integers (tile sizes),
+/// floats (hyperparameters like temperatures), strings (method names) and
+/// booleans (feature toggles).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Bool(bool),
+}
+
+impl Value {
+    /// Numeric view (bools are 0/1); None for strings.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(i) => Some(*i as f64),
+            Value::Float(x) => Some(*x),
+            Value::Bool(b) => Some(*b as i64 as f64),
+            Value::Str(_) => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            Value::Float(x) if x.fract() == 0.0 => Some(*x as i64),
+            Value::Bool(b) => Some(*b as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Stable key string (used in JSON output and config hashing).
+    pub fn key(&self) -> String {
+        match self {
+            Value::Int(i) => i.to_string(),
+            Value::Float(x) => format!("{x}"),
+            Value::Str(s) => s.clone(),
+            Value::Bool(b) => b.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.key())
+    }
+}
+
+impl From<i64> for Value {
+    fn from(v: i64) -> Self {
+        Value::Int(v)
+    }
+}
+impl From<f64> for Value {
+    fn from(v: f64) -> Self {
+        Value::Float(v)
+    }
+}
+impl From<&str> for Value {
+    fn from(v: &str) -> Self {
+        Value::Str(v.to_string())
+    }
+}
+impl From<bool> for Value {
+    fn from(v: bool) -> Self {
+        Value::Bool(v)
+    }
+}
+
+/// A tunable parameter: a name and its ordered list of allowed values.
+#[derive(Clone, Debug)]
+pub struct TunableParam {
+    pub name: String,
+    pub values: Vec<Value>,
+}
+
+impl TunableParam {
+    pub fn new<V: Into<Value>>(name: &str, values: Vec<V>) -> TunableParam {
+        let values: Vec<Value> = values.into_iter().map(Into::into).collect();
+        assert!(!values.is_empty(), "parameter {name} has no values");
+        TunableParam {
+            name: name.to_string(),
+            values,
+        }
+    }
+
+    /// Integer range helper: `lo..=hi` step `step`.
+    pub fn int_range(name: &str, lo: i64, hi: i64, step: i64) -> TunableParam {
+        assert!(step > 0);
+        let values: Vec<Value> = (lo..=hi).step_by(step as usize).map(Value::Int).collect();
+        TunableParam::new(name, values)
+    }
+
+    pub fn cardinality(&self) -> usize {
+        self.values.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_conversions() {
+        assert_eq!(Value::Int(3).as_f64(), Some(3.0));
+        assert_eq!(Value::Float(2.5).as_f64(), Some(2.5));
+        assert_eq!(Value::Bool(true).as_f64(), Some(1.0));
+        assert_eq!(Value::Str("x".into()).as_f64(), None);
+        assert_eq!(Value::Float(4.0).as_i64(), Some(4));
+        assert_eq!(Value::Float(4.5).as_i64(), None);
+    }
+
+    #[test]
+    fn int_range_inclusive() {
+        let p = TunableParam::int_range("x", 2, 10, 4);
+        assert_eq!(
+            p.values,
+            vec![Value::Int(2), Value::Int(6), Value::Int(10)]
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "no values")]
+    fn empty_values_panics() {
+        TunableParam::new::<i64>("x", vec![]);
+    }
+}

@@ -1,0 +1,138 @@
+//! Tiny argument parser (clap is unavailable offline).
+//!
+//! Supports `program <subcommand> [positional ...] [--flag] [--key value]
+//! [--key=value]`. Unknown options are collected and reported by the
+//! caller; `--help` handling is left to the binary.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some(eq) = rest.find('=') {
+                    args.options
+                        .insert(rest[..eq].to_string(), rest[eq + 1..].to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let val = iter.next().unwrap();
+                    args.options.insert(rest.to_string(), val);
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> usize {
+        self.opt(name)
+            .map(|s| {
+                s.parse()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got {s:?}"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
+        self.opt(name)
+            .map(|s| {
+                s.parse()
+                    .unwrap_or_else(|_| panic!("--{name} expects a number, got {s:?}"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> u64 {
+        self.opt(name)
+            .map(|s| {
+                s.parse()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got {s:?}"))
+            })
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse("tune gemm a100");
+        assert_eq!(a.subcommand.as_deref(), Some("tune"));
+        assert_eq!(a.positional, vec!["gemm", "a100"]);
+    }
+
+    #[test]
+    fn options_both_styles() {
+        let a = parse("tune --seed 42 --budget=0.95");
+        assert_eq!(a.opt("seed"), Some("42"));
+        assert_eq!(a.opt_f64("budget", 0.0), 0.95);
+        assert_eq!(a.opt_usize("seed", 0), 42);
+    }
+
+    #[test]
+    fn flags_vs_options() {
+        let a = parse("run --verbose --out dir --dry-run");
+        assert!(a.flag("verbose"));
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.opt("out"), Some("dir"));
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.opt_or("name", "d"), "d");
+        assert_eq!(a.opt_usize("n", 7), 7);
+        assert_eq!(a.opt_u64("n", 9), 9);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse("cmd --check");
+        assert!(a.flag("check"));
+        assert_eq!(a.opt("check"), None);
+    }
+}

@@ -1,0 +1,71 @@
+//! Gzip-compressed file I/O for the benchmark hub.
+//!
+//! The paper's hub compresses the brute-force output files ("to optimize
+//! storage and portability, output files are compressed and decompressed
+//! automatically"); we do the same with flate2. Paths ending in `.gz` are
+//! compressed transparently by [`write_string`] / [`read_string`].
+
+use anyhow::{Context, Result};
+use flate2::read::GzDecoder;
+use flate2::write::GzEncoder;
+use flate2::Compression;
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Write a string; gzip if the extension is `.gz`.
+pub fn write_string(path: &Path, contents: &str) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    if path.extension().map(|e| e == "gz").unwrap_or(false) {
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        let mut enc = GzEncoder::new(file, Compression::fast());
+        enc.write_all(contents.as_bytes())?;
+        enc.finish()?;
+    } else {
+        std::fs::write(path, contents)
+            .with_context(|| format!("write {}", path.display()))?;
+    }
+    Ok(())
+}
+
+/// Read a string; gunzip if the extension is `.gz`.
+pub fn read_string(path: &Path) -> Result<String> {
+    let raw = std::fs::read(path).with_context(|| format!("read {}", path.display()))?;
+    if path.extension().map(|e| e == "gz").unwrap_or(false) {
+        let mut dec = GzDecoder::new(&raw[..]);
+        let mut out = String::new();
+        dec.read_to_string(&mut out)
+            .with_context(|| format!("gunzip {}", path.display()))?;
+        Ok(out)
+    } else {
+        String::from_utf8(raw).context("invalid utf-8")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_plain_and_gz() {
+        let dir = std::env::temp_dir().join(format!("tt_compress_{}", std::process::id()));
+        let payload = "hello world ".repeat(1000);
+
+        let plain = dir.join("x.json");
+        write_string(&plain, &payload).unwrap();
+        assert_eq!(read_string(&plain).unwrap(), payload);
+
+        let gz = dir.join("x.json.gz");
+        write_string(&gz, &payload).unwrap();
+        assert_eq!(read_string(&gz).unwrap(), payload);
+
+        // compression actually happened
+        let plain_len = std::fs::metadata(&plain).unwrap().len();
+        let gz_len = std::fs::metadata(&gz).unwrap().len();
+        assert!(gz_len < plain_len / 5, "gz={gz_len} plain={plain_len}");
+
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

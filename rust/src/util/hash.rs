@@ -1,0 +1,103 @@
+//! Fast non-cryptographic hashing for hot-path maps.
+//!
+//! std's default SipHash showed up at ~7% of the fig5 profile (the
+//! config-index map keyed by `Vec<u16>` and the within-run evaluation
+//! cache keyed by `usize`). This is an FxHash-style multiply-rotate
+//! hasher: not DoS-resistant, which is fine for internal keys derived
+//! from configuration indices.
+
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+/// FxHash-style hasher.
+#[derive(Default)]
+pub struct FxHasher {
+    state: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn mix(&mut self, word: u64) {
+        self.state = (self.state.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.state
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            self.mix(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rest = chunks.remainder();
+        if !rest.is_empty() {
+            let mut word = [0u8; 8];
+            word[..rest.len()].copy_from_slice(rest);
+            self.mix(u64::from_le_bytes(word));
+            self.mix(rest.len() as u64);
+        }
+    }
+
+    #[inline]
+    fn write_usize(&mut self, v: usize) {
+        self.mix(v as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.mix(v);
+    }
+
+    #[inline]
+    fn write_u8(&mut self, v: u8) {
+        self.mix(v as u64);
+    }
+}
+
+/// HashMap with the fast hasher.
+pub type FastMap<K, V> = HashMap<K, V, BuildHasherDefault<FxHasher>>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distributes_and_differs() {
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..10_000u64 {
+            let mut h = FxHasher::default();
+            h.write_u64(i);
+            seen.insert(h.finish());
+        }
+        assert_eq!(seen.len(), 10_000);
+    }
+
+    #[test]
+    fn byte_slices_length_sensitive() {
+        let hash = |b: &[u8]| {
+            let mut h = FxHasher::default();
+            h.write(b);
+            h.finish()
+        };
+        assert_ne!(hash(b"abc"), hash(b"abcd"));
+        assert_ne!(hash(b"abc\0"), hash(b"abc"));
+        assert_eq!(hash(b"hello-world!!"), hash(b"hello-world!!"));
+    }
+
+    #[test]
+    fn fastmap_works() {
+        let mut m: FastMap<Vec<u16>, usize> = FastMap::default();
+        for i in 0..100u16 {
+            m.insert(vec![i, i + 1, i + 2], i as usize);
+        }
+        assert_eq!(m.len(), 100);
+        assert_eq!(m.get(&vec![5, 6, 7]), Some(&5));
+    }
+}

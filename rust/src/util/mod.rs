@@ -1,0 +1,16 @@
+//! Offline substrates.
+//!
+//! The build environment has no crates.io access beyond the vendored set
+//! shipped with the image (`xla`, `anyhow`, `flate2`, ...), so the usual
+//! ecosystem crates (serde, rand, clap, criterion, log) are re-implemented
+//! here at the scale this project needs.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod cli;
+pub mod log;
+pub mod compress;
+pub mod table;
+pub mod plot;
+pub mod hash;

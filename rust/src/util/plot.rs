@@ -1,0 +1,216 @@
+//! ASCII plotting: line plots for the aggregate-performance-over-time
+//! figures (Figs 5, 6, 8) and violin plots for the score-distribution
+//! figure (Fig 2). Series data is also exported as CSV for external
+//! plotting; the ASCII rendering makes `tunetuner experiment figN` output
+//! directly comparable to the paper's figures in a terminal.
+
+/// A named series of (x, y) points.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+/// Render multiple series into an ASCII grid with axes.
+pub fn line_plot(title: &str, series: &[Series], width: usize, height: usize) -> String {
+    const MARKS: &[char] = &['*', 'o', '+', 'x', '#', '@', '%', '&'];
+    let all: Vec<(f64, f64)> = series.iter().flat_map(|s| s.points.iter().copied()).collect();
+    if all.is_empty() {
+        return format!("{title}\n(no data)\n");
+    }
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &all {
+        if x.is_finite() {
+            xmin = xmin.min(x);
+            xmax = xmax.max(x);
+        }
+        if y.is_finite() {
+            ymin = ymin.min(y);
+            ymax = ymax.max(y);
+        }
+    }
+    if !xmin.is_finite() || xmax <= xmin {
+        xmax = xmin + 1.0;
+    }
+    if !ymin.is_finite() || ymax <= ymin {
+        ymax = ymin + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let mark = MARKS[si % MARKS.len()];
+        for &(x, y) in &s.points {
+            if !x.is_finite() || !y.is_finite() {
+                continue;
+            }
+            let cx = ((x - xmin) / (xmax - xmin) * (width - 1) as f64).round() as usize;
+            let cy = ((y - ymin) / (ymax - ymin) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - cy.min(height - 1);
+            grid[row][cx.min(width - 1)] = mark;
+        }
+    }
+    let mut out = format!("{title}\n");
+    for (ri, row) in grid.iter().enumerate() {
+        let yval = ymax - (ymax - ymin) * ri as f64 / (height - 1) as f64;
+        out.push_str(&format!("{yval:9.3} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "{:>9} +{}\n{:>10} {:<.4}{}{:>.4}\n",
+        "",
+        "-".repeat(width),
+        "",
+        xmin,
+        " ".repeat(width.saturating_sub(16)),
+        xmax
+    ));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {}\n", MARKS[si % MARKS.len()], s.name));
+    }
+    out
+}
+
+/// A horizontal ASCII violin: density of `values` over its range, with
+/// mean marker — one row per named distribution (Fig 2 style).
+pub fn violin_plot(title: &str, dists: &[(String, Vec<f64>)], width: usize) -> String {
+    const SHADES: &[char] = &[' ', '.', ':', '-', '=', '+', '*', '#', '%', '@'];
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for (_, vs) in dists {
+        for &v in vs {
+            if v.is_finite() {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+        }
+    }
+    if !lo.is_finite() || hi <= lo {
+        return format!("{title}\n(no data)\n");
+    }
+    let name_w = dists.iter().map(|(n, _)| n.len()).max().unwrap_or(4).max(4);
+    let mut out = format!("{title}\nrange [{lo:.3}, {hi:.3}]\n");
+    for (name, vs) in dists {
+        let mut bins = vec![0usize; width];
+        let mut count = 0usize;
+        let mut sum = 0.0;
+        for &v in vs {
+            if !v.is_finite() {
+                continue;
+            }
+            let b = ((v - lo) / (hi - lo) * (width - 1) as f64).round() as usize;
+            bins[b.min(width - 1)] += 1;
+            count += 1;
+            sum += v;
+        }
+        let peak = *bins.iter().max().unwrap_or(&1).max(&1);
+        let mean_bin = if count > 0 {
+            (((sum / count as f64) - lo) / (hi - lo) * (width - 1) as f64).round() as usize
+        } else {
+            0
+        };
+        let mut line = String::new();
+        for (i, &b) in bins.iter().enumerate() {
+            if i == mean_bin {
+                line.push('|'); // mean marker
+            } else {
+                let shade = (b * (SHADES.len() - 1) + peak / 2) / peak;
+                line.push(SHADES[shade]);
+            }
+        }
+        out.push_str(&format!("{name:>name_w$} [{line}]\n"));
+    }
+    out
+}
+
+/// Export series as CSV: `x,<name1>,<name2>,...` on a shared x column
+/// (series must share x values; missing points become empty cells).
+pub fn series_csv(series: &[Series]) -> String {
+    use std::collections::BTreeMap;
+    let mut xs: Vec<f64> = Vec::new();
+    for s in series {
+        for &(x, _) in &s.points {
+            if !xs.iter().any(|&e| e == x) {
+                xs.push(x);
+            }
+        }
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let maps: Vec<BTreeMap<u64, f64>> = series
+        .iter()
+        .map(|s| {
+            s.points
+                .iter()
+                .map(|&(x, y)| (x.to_bits(), y))
+                .collect::<BTreeMap<_, _>>()
+        })
+        .collect();
+    let mut out = String::from("x");
+    for s in series {
+        out.push(',');
+        out.push_str(&s.name);
+    }
+    out.push('\n');
+    for &x in &xs {
+        out.push_str(&format!("{x}"));
+        for m in &maps {
+            out.push(',');
+            if let Some(y) = m.get(&x.to_bits()) {
+                out.push_str(&format!("{y}"));
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_plot_renders() {
+        let s = vec![
+            Series {
+                name: "a".into(),
+                points: (0..50).map(|i| (i as f64, (i as f64 / 5.0).sin())).collect(),
+            },
+            Series {
+                name: "b".into(),
+                points: (0..50).map(|i| (i as f64, i as f64 / 50.0)).collect(),
+            },
+        ];
+        let out = line_plot("demo", &s, 60, 12);
+        assert!(out.contains("demo"));
+        assert!(out.contains("* a"));
+        assert!(out.contains("o b"));
+        assert!(out.lines().count() > 12);
+    }
+
+    #[test]
+    fn violin_renders_mean_marker() {
+        let d = vec![("alg".to_string(), vec![0.0, 0.1, 0.2, 0.5, 0.5, 0.9])];
+        let out = violin_plot("v", &d, 40);
+        assert!(out.contains('|'));
+        assert!(out.contains("alg"));
+    }
+
+    #[test]
+    fn empty_plots_are_safe() {
+        assert!(line_plot("t", &[], 10, 5).contains("no data"));
+        assert!(violin_plot("t", &[], 10).contains("no data"));
+    }
+
+    #[test]
+    fn csv_shared_axis() {
+        let s = vec![
+            Series { name: "a".into(), points: vec![(0.0, 1.0), (1.0, 2.0)] },
+            Series { name: "b".into(), points: vec![(0.0, 3.0)] },
+        ];
+        let csv = series_csv(&s);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "x,a,b");
+        assert_eq!(lines[1], "0,1,3");
+        assert_eq!(lines[2], "1,2,");
+    }
+}

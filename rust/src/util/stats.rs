@@ -1,0 +1,380 @@
+//! Statistics used across the framework: summary statistics and
+//! percentiles (for baselines and budgets), the Kruskal–Wallis H test and
+//! mutual-information scoring (for the hyperparameter sensitivity analysis
+//! of Section IV-A of the paper).
+
+/// Arithmetic mean; NaN for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1); 0 for fewer than two samples.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let ss: f64 = xs.iter().map(|x| (x - m) * (x - m)).sum();
+    (ss / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Median via sorting; NaN for empty input.
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Linear-interpolation percentile (numpy's default), p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+/// Percentile on pre-sorted data (ascending).
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    let n = sorted.len();
+    if n == 0 {
+        return f64::NAN;
+    }
+    if n == 1 {
+        return sorted[0];
+    }
+    let rank = (p / 100.0).clamp(0.0, 1.0) * (n - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+/// Min/max helpers that skip NaN.
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().filter(|x| !x.is_nan()).fold(f64::INFINITY, f64::min)
+}
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter()
+        .copied()
+        .filter(|x| !x.is_nan())
+        .fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Midranks (average ranks for ties), 1-based, as used by rank tests.
+pub fn midranks(xs: &[f64]) -> Vec<f64> {
+    let n = xs.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    let mut ranks = vec![0.0; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        // average of ranks i+1 ..= j+1
+        let avg = (i + 1 + j + 1) as f64 / 2.0;
+        for k in i..=j {
+            ranks[idx[k]] = avg;
+        }
+        i = j + 1;
+    }
+    ranks
+}
+
+/// Kruskal–Wallis H test over `groups` of observations.
+///
+/// Returns `(H, p)` where p is the χ²(k-1) survival-function approximation.
+/// Used for the hyperparameter sensitivity screen (which dropped PSO's `W`).
+pub fn kruskal_wallis(groups: &[Vec<f64>]) -> (f64, f64) {
+    let k = groups.len();
+    let n: usize = groups.iter().map(|g| g.len()).sum();
+    if k < 2 || n < 2 {
+        return (0.0, 1.0);
+    }
+    let all: Vec<f64> = groups.iter().flatten().copied().collect();
+    let ranks = midranks(&all);
+    let mut h = 0.0;
+    let mut offset = 0;
+    for g in groups {
+        let ni = g.len();
+        if ni == 0 {
+            continue;
+        }
+        let r_sum: f64 = ranks[offset..offset + ni].iter().sum();
+        h += r_sum * r_sum / ni as f64;
+        offset += ni;
+    }
+    let nf = n as f64;
+    let mut h = 12.0 / (nf * (nf + 1.0)) * h - 3.0 * (nf + 1.0);
+
+    // Tie correction.
+    let mut sorted = all.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut tie_sum = 0.0;
+    let mut i = 0;
+    while i < sorted.len() {
+        let mut j = i;
+        while j + 1 < sorted.len() && sorted[j + 1] == sorted[i] {
+            j += 1;
+        }
+        let t = (j - i + 1) as f64;
+        tie_sum += t * t * t - t;
+        i = j + 1;
+    }
+    let correction = 1.0 - tie_sum / (nf * nf * nf - nf);
+    if correction > 0.0 {
+        h /= correction;
+    }
+    let p = chi2_sf(h, (k - 1) as f64);
+    (h, p)
+}
+
+/// χ² survival function via the regularized upper incomplete gamma.
+pub fn chi2_sf(x: f64, dof: f64) -> f64 {
+    if x <= 0.0 {
+        return 1.0;
+    }
+    gammainc_upper_reg(dof / 2.0, x / 2.0)
+}
+
+/// Regularized upper incomplete gamma Q(a, x), by series / continued fraction.
+fn gammainc_upper_reg(a: f64, x: f64) -> f64 {
+    if x < a + 1.0 {
+        1.0 - gamma_series(a, x)
+    } else {
+        gamma_cf(a, x)
+    }
+}
+
+fn ln_gamma(x: f64) -> f64 {
+    // Lanczos approximation (g=7, n=9).
+    const COEF: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_572e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // reflection
+        std::f64::consts::PI.ln() - (std::f64::consts::PI * x).sin().ln()
+            - ln_gamma(1.0 - x)
+    } else {
+        let x = x - 1.0;
+        let mut acc = COEF[0];
+        for (i, &c) in COEF.iter().enumerate().skip(1) {
+            acc += c / (x + i as f64);
+        }
+        let t = x + 7.5;
+        0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + acc.ln()
+    }
+}
+
+fn gamma_series(a: f64, x: f64) -> f64 {
+    let mut ap = a;
+    let mut sum = 1.0 / a;
+    let mut del = sum;
+    for _ in 0..500 {
+        ap += 1.0;
+        del *= x / ap;
+        sum += del;
+        if del.abs() < sum.abs() * 1e-14 {
+            break;
+        }
+    }
+    sum * (-x + a * x.ln() - ln_gamma(a)).exp()
+}
+
+fn gamma_cf(a: f64, x: f64) -> f64 {
+    let tiny = 1e-300;
+    let mut b = x + 1.0 - a;
+    let mut c = 1.0 / tiny;
+    let mut d = 1.0 / b;
+    let mut h = d;
+    for i in 1..500 {
+        let an = -(i as f64) * (i as f64 - a);
+        b += 2.0;
+        d = an * d + b;
+        if d.abs() < tiny {
+            d = tiny;
+        }
+        c = b + an / c;
+        if c.abs() < tiny {
+            c = tiny;
+        }
+        d = 1.0 / d;
+        let del = d * c;
+        h *= del;
+        if (del - 1.0).abs() < 1e-14 {
+            break;
+        }
+    }
+    (-x + a * x.ln() - ln_gamma(a)).exp() * h
+}
+
+/// Mutual information I(X; Y) in nats between a discrete X (group label per
+/// observation) and a continuous Y, with Y discretized into `bins`
+/// equal-frequency bins. Used to score hyperparameter sensitivity.
+pub fn mutual_information(labels: &[usize], values: &[f64], bins: usize) -> f64 {
+    assert_eq!(labels.len(), values.len());
+    let n = values.len();
+    if n == 0 || bins == 0 {
+        return 0.0;
+    }
+    // Equal-frequency bin edges.
+    let mut sorted = values.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let bin_of = |v: f64| -> usize {
+        // rank of v within sorted data -> bin
+        let pos = sorted.partition_point(|&s| s < v);
+        (pos * bins / n).min(bins - 1)
+    };
+    let k = labels.iter().max().map(|&m| m + 1).unwrap_or(0);
+    let mut joint = vec![0.0f64; k * bins];
+    let mut px = vec![0.0f64; k];
+    let mut py = vec![0.0f64; bins];
+    for (&l, &v) in labels.iter().zip(values) {
+        let b = bin_of(v);
+        joint[l * bins + b] += 1.0;
+        px[l] += 1.0;
+        py[b] += 1.0;
+    }
+    let nf = n as f64;
+    let mut mi = 0.0;
+    for l in 0..k {
+        for b in 0..bins {
+            let pxy = joint[l * bins + b] / nf;
+            if pxy > 0.0 {
+                mi += pxy * (pxy / (px[l] / nf * py[b] / nf)).ln();
+            }
+        }
+    }
+    mi.max(0.0)
+}
+
+/// Pearson correlation; NaN if degenerate.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len();
+    if n < 2 {
+        return f64::NAN;
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let (mut sxy, mut sxx, mut syy) = (0.0, 0.0, 0.0);
+    for i in 0..n {
+        let dx = xs[i] - mx;
+        let dy = ys[i] - my;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    sxy / (sxx.sqrt() * syy.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_summaries() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert_eq!(median(&xs), 2.5);
+        assert!((stddev(&xs) - 1.2909944487).abs() < 1e-9);
+        assert_eq!(min(&xs), 1.0);
+        assert_eq!(max(&xs), 4.0);
+    }
+
+    #[test]
+    fn percentile_matches_numpy() {
+        let xs = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 100.0), 40.0);
+        assert_eq!(percentile(&xs, 50.0), 25.0);
+        assert!((percentile(&xs, 95.0) - 38.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn midranks_handle_ties() {
+        let r = midranks(&[10.0, 20.0, 20.0, 30.0]);
+        assert_eq!(r, vec![1.0, 2.5, 2.5, 4.0]);
+    }
+
+    #[test]
+    fn ln_gamma_known_values() {
+        assert!((ln_gamma(1.0)).abs() < 1e-10);
+        assert!((ln_gamma(2.0)).abs() < 1e-10);
+        assert!((ln_gamma(5.0) - 24f64.ln()).abs() < 1e-9);
+        assert!((ln_gamma(0.5) - std::f64::consts::PI.sqrt().ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn chi2_sf_known_values() {
+        // chi2.sf(3.841, 1) ~ 0.05
+        assert!((chi2_sf(3.841, 1.0) - 0.05).abs() < 1e-3);
+        // chi2.sf(5.991, 2) ~ 0.05
+        assert!((chi2_sf(5.991, 2.0) - 0.05).abs() < 1e-3);
+        assert!((chi2_sf(0.0, 3.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kruskal_wallis_separates_groups() {
+        // Clearly different groups -> small p.
+        let g1: Vec<f64> = (0..30).map(|i| i as f64).collect();
+        let g2: Vec<f64> = (0..30).map(|i| 100.0 + i as f64).collect();
+        let (h, p) = kruskal_wallis(&[g1, g2]);
+        assert!(h > 10.0);
+        assert!(p < 0.001);
+
+        // Identical distributions -> high p.
+        let g1: Vec<f64> = (0..40).map(|i| (i % 10) as f64).collect();
+        let g2: Vec<f64> = (0..40).map(|i| ((i + 3) % 10) as f64).collect();
+        let (_, p) = kruskal_wallis(&[g1, g2]);
+        assert!(p > 0.2, "p={p}");
+    }
+
+    #[test]
+    fn hand_crosscheck_kruskal() {
+        // Hand-computed with midranks and tie correction:
+        // groups [1,2,3,4], [2,3,4,5], [5,6,7,8] -> rank sums 14.5/22/41.5,
+        // H_raw = 7.471, tie correction 0.98601 -> H = 7.577,
+        // p = chi2.sf(7.577, 2) = exp(-7.577/2) = 0.0226.
+        let (h, p) = kruskal_wallis(&[
+            vec![1.0, 2.0, 3.0, 4.0],
+            vec![2.0, 3.0, 4.0, 5.0],
+            vec![5.0, 6.0, 7.0, 8.0],
+        ]);
+        assert!((h - 7.577).abs() < 0.01, "h={h}");
+        assert!((p - 0.0226).abs() < 0.002, "p={p}");
+    }
+
+    #[test]
+    fn mutual_information_signal_vs_noise() {
+        // Values fully determined by label -> high MI; independent -> ~0.
+        let labels: Vec<usize> = (0..400).map(|i| i % 4).collect();
+        let dependent: Vec<f64> = labels.iter().map(|&l| l as f64).collect();
+        let mi_dep = mutual_information(&labels, &dependent, 4);
+        let independent: Vec<f64> = (0..400).map(|i| (i * 7919 % 400) as f64).collect();
+        let mi_ind = mutual_information(&labels, &independent, 4);
+        assert!(mi_dep > 1.0, "mi_dep={mi_dep}");
+        assert!(mi_ind < 0.1, "mi_ind={mi_ind}");
+    }
+
+    #[test]
+    fn pearson_perfect() {
+        let xs = [1.0, 2.0, 3.0];
+        let ys = [2.0, 4.0, 6.0];
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
+        let yneg = [3.0, 2.0, 1.0];
+        assert!((pearson(&xs, &yneg) + 1.0).abs() < 1e-12);
+    }
+}

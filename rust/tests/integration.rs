@@ -1,0 +1,101 @@
+//! Integration tests over the PJRT runtime + artifacts.
+//!
+//! These require `make artifacts` to have run (they are skipped with a
+//! warning otherwise, so `cargo test` works in a fresh checkout).
+
+use tunetuner::gpu::specs::all_devices;
+use tunetuner::kernels;
+use tunetuner::perfmodel::analytical;
+use tunetuner::perfmodel::contract::{INVALID_TIME, NUM_FEATURES};
+use tunetuner::runtime::Engine;
+
+fn pjrt_engine() -> Option<Engine> {
+    let dir = Engine::default_artifacts_dir();
+    match Engine::pjrt(&dir) {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("SKIP: no PJRT artifacts ({err:#}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+/// The HLO path (jax -> pallas -> HLO -> PJRT) must match the Rust oracle
+/// to f32 round-off on every kernel/device pair.
+#[test]
+fn runtime_matches_oracle_everywhere() {
+    let Some(engine) = pjrt_engine() else { return };
+    for kernel in kernels::all_kernels().unwrap() {
+        let feats: Vec<_> = (0..kernel.space().len())
+            .step_by(7)
+            .map(|i| kernel.features(i))
+            .collect();
+        for dev in all_devices() {
+            let d = dev.to_vector();
+            let got = engine.measure(&feats, &d).unwrap();
+            for (f, m) in feats.iter().zip(&got) {
+                let want = analytical::predict_time(f, &d);
+                if want == INVALID_TIME {
+                    assert_eq!(m.time, INVALID_TIME, "{}/{}", kernel.name, dev.name);
+                } else {
+                    let rel = ((m.time - want) / want).abs();
+                    assert!(
+                        rel < 1e-5,
+                        "{}/{}: pjrt={} oracle={} rel={rel}",
+                        kernel.name,
+                        dev.name,
+                        m.time,
+                        want
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Batch padding and chunking must not change results.
+#[test]
+fn runtime_chunking_invariance() {
+    let Some(engine) = pjrt_engine() else { return };
+    let kernel = kernels::kernel_by_name("synthetic").unwrap();
+    let d = all_devices()[0].to_vector();
+    let feats = kernel.all_features();
+    let whole = engine.measure(&feats, &d).unwrap();
+    // Odd-sized pieces exercise padding.
+    let mut pieced = Vec::new();
+    for chunk in feats.chunks(97) {
+        pieced.extend(engine.measure(chunk, &d).unwrap());
+    }
+    assert_eq!(whole.len(), pieced.len());
+    for (a, b) in whole.iter().zip(&pieced) {
+        assert_eq!(a.time, b.time);
+        assert_eq!(a.t_cold, b.t_cold);
+        assert_eq!(a.t_hot, b.t_hot);
+    }
+}
+
+/// measure_batch triple ordering holds through the HLO path.
+#[test]
+fn runtime_triple_ordering() {
+    let Some(engine) = pjrt_engine() else { return };
+    let kernel = kernels::kernel_by_name("gemm").unwrap();
+    let d = all_devices()[2].to_vector();
+    let feats: Vec<_> = (0..64).map(|i| kernel.features(i)).collect();
+    for m in engine.measure(&feats, &d).unwrap() {
+        if m.time != INVALID_TIME {
+            assert!(m.t_cold >= m.time);
+            assert!(m.t_hot <= m.time);
+        }
+    }
+}
+
+/// Degenerate all-zero features (padding rows) must be INVALID, not NaN.
+#[test]
+fn zero_rows_are_invalid_not_nan() {
+    let Some(engine) = pjrt_engine() else { return };
+    let d = all_devices()[0].to_vector();
+    let feats = vec![[0f32; NUM_FEATURES]; 3];
+    for m in engine.measure(&feats, &d).unwrap() {
+        assert_eq!(m.time, INVALID_TIME);
+    }
+}

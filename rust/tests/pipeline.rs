@@ -1,0 +1,148 @@
+//! Pipeline integration tests: hub -> simulation mode -> scoring ->
+//! hypertuning, over the real kernels (native oracle engine so the tests
+//! run without artifacts; the PJRT path is covered by integration.rs).
+
+use std::sync::Arc;
+use tunetuner::dataset::hub::Hub;
+use tunetuner::gpu::specs::A4000;
+use tunetuner::hypertuning;
+use tunetuner::kernels;
+use tunetuner::methodology::{evaluate_algorithm, SpaceEval};
+use tunetuner::optimizers::{self, HyperParams};
+use tunetuner::perfmodel::NoiseModel;
+use tunetuner::runner::{Budget, LiveRunner, Runner, SimulationRunner, Tuning};
+use tunetuner::runtime::Engine;
+use tunetuner::util::rng::Rng;
+
+fn tmp_hub(tag: &str) -> Hub {
+    let dir = std::env::temp_dir().join(format!("tt_pipe_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    Hub::new(dir)
+}
+
+/// Build a small hub slice, tune through simulation mode, verify scoring.
+#[test]
+fn hub_to_scored_tuning() {
+    let hub = tmp_hub("scored");
+    let engine = Arc::new(Engine::native());
+    hub.ensure(&["hotspot"], &["A4000", "W6600"], engine, 7).unwrap();
+
+    let kernel = kernels::kernel_by_name("hotspot").unwrap();
+    let mut spaces = Vec::new();
+    for dev in ["A4000", "W6600"] {
+        let cache = hub.load("hotspot", dev).unwrap();
+        spaces.push(SpaceEval::new(kernel.space_arc(), cache, 0.95, 20));
+    }
+    // Random search calibrates to ~0 on real kernel spaces too.
+    let rs = evaluate_algorithm("random_search", &HyperParams::new(), &spaces, 40, 3).unwrap();
+    assert!(rs.score.abs() < 0.15, "rs score {}", rs.score);
+    // And a tuned GA beats it.
+    let hp = HyperParams::new()
+        .set("method", "uniform")
+        .set("popsize", 10i64)
+        .set("mutation_chance", 10i64);
+    let ga = evaluate_algorithm("genetic_algorithm", &hp, &spaces, 40, 3).unwrap();
+    assert!(ga.score > rs.score, "ga {} rs {}", ga.score, rs.score);
+    std::fs::remove_dir_all(hub.root()).ok();
+}
+
+/// The cache written to disk replays the live runner exactly (the paper's
+/// "no perceivable difference" property, through the full file roundtrip).
+#[test]
+fn disk_roundtrip_is_exact() {
+    let hub = tmp_hub("exact");
+    let engine = Arc::new(Engine::native());
+    hub.ensure(&["dedispersion"], &["A4000"], Arc::clone(&engine), 7).unwrap();
+    let cache = hub.load("dedispersion", "A4000").unwrap();
+
+    let kernel = kernels::kernel_by_name("dedispersion").unwrap();
+    let mut live = LiveRunner::new(
+        kernels::kernel_by_name("dedispersion").unwrap(),
+        &A4000,
+        engine,
+        NoiseModel::default(),
+        7, // the seed hub.ensure used
+    );
+    let mut sim = SimulationRunner::new(kernel.space_arc(), cache).unwrap();
+    let mut rng = Rng::new(5);
+    for _ in 0..20 {
+        let idx = rng.below(kernel.space().len());
+        let l = live.evaluate(idx);
+        let s = sim.evaluate(idx);
+        assert_eq!(l.value, s.value, "config {idx}");
+        assert_eq!(l.observations, s.observations);
+        assert_eq!(l.valid, s.valid);
+        assert!((l.total_cost() - s.total_cost()).abs() < 1e-9);
+    }
+    std::fs::remove_dir_all(hub.root()).ok();
+}
+
+/// A miniature "tuning the tuner" campaign end-to-end: exhaustive DA
+/// tuning on one space, then the meta replay cache drives a meta-strategy.
+#[test]
+fn mini_hypertuning_campaign() {
+    let hub = tmp_hub("campaign");
+    let engine = Arc::new(Engine::native());
+    hub.ensure(&["convolution"], &["A4000"], engine, 7).unwrap();
+    let kernel = kernels::kernel_by_name("convolution").unwrap();
+    let cache = hub.load("convolution", "A4000").unwrap();
+    let train = vec![SpaceEval::new(kernel.space_arc(), cache, 0.95, 15)];
+
+    let hp_space = hypertuning::limited_space("dual_annealing").unwrap();
+    let results =
+        hypertuning::exhaustive_tuning("dual_annealing", &hp_space, "limited", &train, 3, 5)
+            .unwrap();
+    assert_eq!(results.results.len(), 8);
+    assert!(results.best().score >= results.worst().score);
+
+    // Meta replay: a random meta-strategy over the HP cache must find the
+    // known-best HP config when allowed to exhaust the space.
+    let meta_cache = hypertuning::meta_cache_from_results(&results, &hp_space);
+    let best_idx = meta_cache.optimum_index();
+    assert_eq!(best_idx, results.best().config_idx);
+    let mut sim =
+        SimulationRunner::new_unchecked(Arc::new(hp_space), Arc::new(meta_cache));
+    let mut tuning = Tuning::new(&mut sim, Budget::evals(8));
+    let opt = optimizers::create("random_search", &HyperParams::new()).unwrap();
+    opt.run(&mut tuning, &mut Rng::new(1));
+    let trace = tuning.finish();
+    assert_eq!(trace.unique_evals, 8);
+    let found = trace.best().unwrap();
+    assert!((found - (1.0 - results.best().score)).abs() < 1e-12);
+    std::fs::remove_dir_all(hub.root()).ok();
+}
+
+/// Each device reorders the landscape: per kernel, the six devices must
+/// not all share one optimal configuration (the property that makes
+/// cross-device generalization a real test).
+#[test]
+fn devices_have_distinct_optima() {
+    let hub = tmp_hub("optima");
+    let engine = Arc::new(Engine::native());
+    let devices = ["A100", "A4000", "A6000", "MI250X", "W6600", "W7800"];
+    hub.ensure(&["gemm"], &devices, engine, 7).unwrap();
+    let optima: std::collections::HashSet<usize> = devices
+        .iter()
+        .map(|d| hub.load("gemm", d).unwrap().optimum_index())
+        .collect();
+    assert!(optima.len() >= 3, "only {} distinct optima", optima.len());
+    std::fs::remove_dir_all(hub.root()).ok();
+}
+
+/// Same seed reproduces the hub dataset bit-for-bit across builds.
+#[test]
+fn hub_seed_reproducibility() {
+    let hub_a = tmp_hub("seed_a");
+    let hub_b = tmp_hub("seed_b");
+    let engine = Arc::new(Engine::native());
+    hub_a.ensure(&["hotspot"], &["A4000"], Arc::clone(&engine), 11).unwrap();
+    hub_b.ensure(&["hotspot"], &["A4000"], Arc::clone(&engine), 11).unwrap();
+    let a = hub_a.load("hotspot", "A4000").unwrap();
+    let b = hub_b.load("hotspot", "A4000").unwrap();
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.value, rb.value);
+        assert_eq!(ra.observations, rb.observations);
+    }
+    std::fs::remove_dir_all(hub_a.root()).ok();
+    std::fs::remove_dir_all(hub_b.root()).ok();
+}

@@ -1,0 +1,258 @@
+//! Property-based tests. The proptest crate is unavailable offline, so
+//! these are hand-rolled randomized-property loops driven by the crate's
+//! own deterministic RNG: each property is checked over many generated
+//! cases, and failures print the seed for replay.
+
+use std::collections::HashMap;
+use tunetuner::optimizers::{self, HyperParams};
+use tunetuner::searchspace::{Constraint, Neighborhood, SearchSpace, TunableParam, Value};
+use tunetuner::util::json::{self, Json};
+use tunetuner::util::rng::Rng;
+use tunetuner::util::stats;
+
+/// Generate a random search space: 2–5 dims, small value lists, and a
+/// random product constraint.
+fn random_space(rng: &mut Rng) -> SearchSpace {
+    let ndim = 2 + rng.below(4);
+    let mut params = Vec::new();
+    for d in 0..ndim {
+        let card = 2 + rng.below(5);
+        let values: Vec<i64> = (0..card).map(|i| ((i + 1) * (1 << rng.below(3))) as i64).collect();
+        params.push(TunableParam::new(&format!("p{d}"), values));
+    }
+    // Constrain the product of the first two dims.
+    let bound = 1 << (3 + rng.below(5));
+    let constraints = vec![Constraint::parse(&format!("p0 * p1 <= {bound}")).unwrap()];
+    match SearchSpace::build("prop", params, constraints) {
+        Ok(s) if !s.is_empty() => s,
+        _ => {
+            // Regenerate on empty spaces (rare with these bounds).
+            random_space(rng)
+        }
+    }
+}
+
+/// Search-space invariants: indexing is a bijection, every config
+/// satisfies the constraints, neighbors are valid and symmetric.
+#[test]
+fn prop_space_invariants() {
+    let mut rng = Rng::new(0xBEEF);
+    for case in 0..30 {
+        let space = random_space(&mut rng);
+        // Bijection.
+        for i in (0..space.len()).step_by(1 + space.len() / 50) {
+            assert_eq!(space.index_of(space.encoded(i)), Some(i), "case {case}");
+            // Constraint satisfaction.
+            let env: HashMap<String, Value> = space.named_values(i).into_iter().collect();
+            for c in &space.constraints {
+                assert!(c.eval_map(&env).unwrap(), "case {case} config {i}");
+            }
+        }
+        // Neighbor validity + symmetry (Hamming is symmetric by definition).
+        let probe = space.len() / 2;
+        for hood in [Neighborhood::Hamming, Neighborhood::Adjacent] {
+            for n in space.neighbors(probe, hood) {
+                assert!(n < space.len());
+                assert_ne!(n, probe);
+                if hood == Neighborhood::Hamming {
+                    assert!(
+                        space.neighbors(n, hood).contains(&probe),
+                        "case {case}: hamming not symmetric"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// snap() always returns a valid index, and is exact when the target is a
+/// valid lattice point.
+#[test]
+fn prop_snap_valid_and_exact() {
+    let mut rng = Rng::new(0xCAFE);
+    for _ in 0..30 {
+        let space = random_space(&mut rng);
+        for _ in 0..20 {
+            // Arbitrary continuous points.
+            let target: Vec<f64> = space
+                .dims()
+                .iter()
+                .map(|&d| rng.range_f64(-1.0, d as f64 + 1.0))
+                .collect();
+            let idx = space.snap(&target, &mut rng);
+            assert!(idx < space.len());
+            // Exact valid lattice point -> identity.
+            let exact = space.random(&mut rng);
+            let t: Vec<f64> = space.encoded(exact).iter().map(|&v| v as f64).collect();
+            assert_eq!(space.snap(&t, &mut rng), exact);
+        }
+    }
+}
+
+/// JSON roundtrip over randomly generated documents.
+#[test]
+fn prop_json_roundtrip() {
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => {
+                // Mix of integers, fractions, negatives, exponents.
+                let x = match rng.below(4) {
+                    0 => rng.below(1000) as f64,
+                    1 => -(rng.below(1000) as f64),
+                    2 => rng.next_f64() * 1e6 - 5e5,
+                    _ => rng.next_f64() * 1e-6,
+                };
+                Json::Num(x)
+            }
+            3 => {
+                let len = rng.below(12);
+                let s: String = (0..len)
+                    .map(|_| {
+                        let c = rng.below(128) as u8;
+                        if c.is_ascii_graphic() || c == b' ' {
+                            c as char
+                        } else {
+                            'é' // exercise multi-byte paths
+                        }
+                    })
+                    .collect();
+                Json::Str(s)
+            }
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => {
+                let mut o = Json::obj();
+                for i in 0..rng.below(5) {
+                    o.set(&format!("k{i}"), gen(rng, depth - 1));
+                }
+                o
+            }
+        }
+    }
+    let mut rng = Rng::new(0xD00D);
+    for case in 0..300 {
+        let doc = gen(&mut rng, 3);
+        let text = doc.to_string();
+        let back = json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(doc, back, "case {case}: {text}");
+        // Pretty form parses to the same value.
+        assert_eq!(json::parse(&doc.to_pretty()).unwrap(), doc);
+    }
+}
+
+/// Every optimizer respects arbitrary budgets and never evaluates an
+/// out-of-range configuration (checked via the trace).
+#[test]
+fn prop_optimizer_budget_and_range() {
+    use std::sync::Arc;
+    use tunetuner::dataset::cache::{CacheData, ConfigRecord};
+    use tunetuner::runner::{Budget, SimulationRunner, Tuning};
+
+    let mut rng = Rng::new(0xFEED);
+    for case in 0..12 {
+        let space = Arc::new(random_space(&mut rng));
+        // Synthetic cache over the space with a rugged value function.
+        let records: Vec<ConfigRecord> = (0..space.len())
+            .map(|i| {
+                let v = 1.0 + ((i as f64 * 0.7919).sin() * 0.5 + 0.5);
+                ConfigRecord {
+                    key: space.key(i),
+                    value: v,
+                    observations: vec![v],
+                    compile_time: 1.0,
+                    valid: true,
+                }
+            })
+            .collect();
+        let cache = Arc::new(CacheData {
+            kernel: "prop".into(),
+            device: "x".into(),
+            problem: String::new(),
+            space_seed: 0,
+            observations_per_config: 1,
+            bruteforce_seconds: 0.0,
+            param_names: space.params.iter().map(|p| p.name.clone()).collect(),
+            records,
+        });
+        let budget = 1 + rng.below(40);
+        for name in optimizers::optimizer_names() {
+            let mut sim = SimulationRunner::new_unchecked(Arc::clone(&space), Arc::clone(&cache));
+            let mut tuning = Tuning::new(&mut sim, Budget::evals(budget));
+            let opt = optimizers::create(name, &HyperParams::new()).unwrap();
+            let mut orng = Rng::new(case as u64 * 31 + 7);
+            opt.run(&mut tuning, &mut orng);
+            let trace = tuning.finish();
+            assert!(
+                trace.unique_evals <= budget,
+                "case {case} {name}: {} > {budget}",
+                trace.unique_evals
+            );
+            for p in &trace.points {
+                assert!(p.config < space.len(), "case {case} {name}");
+            }
+            // best_at is monotone non-increasing in t.
+            let mut prev = f64::INFINITY;
+            for k in 1..=8 {
+                let t = trace.elapsed * k as f64 / 8.0;
+                if let Some(b) = trace.best_at(t) {
+                    assert!(b <= prev + 1e-12);
+                    prev = b;
+                }
+            }
+        }
+    }
+}
+
+/// Percentile/midrank properties on random data.
+#[test]
+fn prop_stats_invariants() {
+    let mut rng = Rng::new(0xACE);
+    for _ in 0..100 {
+        let n = 1 + rng.below(200);
+        let xs: Vec<f64> = (0..n).map(|_| rng.range_f64(-100.0, 100.0)).collect();
+        // Percentile bounds and monotonicity in p.
+        let p0 = stats::percentile(&xs, 0.0);
+        let p50 = stats::percentile(&xs, 50.0);
+        let p100 = stats::percentile(&xs, 100.0);
+        assert!(p0 <= p50 && p50 <= p100);
+        assert_eq!(p0, stats::min(&xs));
+        assert_eq!(p100, stats::max(&xs));
+        // Midranks sum to n(n+1)/2.
+        let ranks = stats::midranks(&xs);
+        let sum: f64 = ranks.iter().sum();
+        let expect = (n * (n + 1)) as f64 / 2.0;
+        assert!((sum - expect).abs() < 1e-6, "{sum} != {expect}");
+    }
+}
+
+/// The GA crossover operators preserve per-gene provenance: every child
+/// gene comes from one of the two parents.
+#[test]
+fn prop_crossover_provenance() {
+    use tunetuner::optimizers::ga::Crossover;
+    let mut rng = Rng::new(0x90);
+    for _ in 0..200 {
+        let n = 2 + rng.below(10);
+        let a: Vec<u16> = (0..n).map(|_| rng.below(8) as u16).collect();
+        let b: Vec<u16> = (0..n).map(|_| rng.below(8) as u16).collect();
+        for cx in [
+            Crossover::SinglePoint,
+            Crossover::TwoPoint,
+            Crossover::Uniform,
+            Crossover::DisruptiveUniform,
+        ] {
+            let (c1, c2) = cx.apply(&a, &b, &mut rng);
+            for d in 0..n {
+                assert!(c1[d] == a[d] || c1[d] == b[d]);
+                assert!(c2[d] == a[d] || c2[d] == b[d]);
+                // Gene conservation: {c1[d], c2[d]} == {a[d], b[d]}.
+                let mut got = [c1[d], c2[d]];
+                let mut want = [a[d], b[d]];
+                got.sort_unstable();
+                want.sort_unstable();
+                assert_eq!(got, want);
+            }
+        }
+    }
+}
