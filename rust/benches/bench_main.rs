@@ -13,6 +13,12 @@
 //!                Figs 2-9 building block)
 //!
 //! Filter with `cargo bench -- <substring>`.
+//!
+//! Results are also written as machine-readable JSON (group → mean seconds,
+//! items/s) to `BENCH.json` (override with `BENCH_JSON=<path>`), so the
+//! perf trajectory can be tracked across PRs (`BENCH_*.json`). Set
+//! `TUNETUNER_BENCH_SMOKE=1` for a fast smoke pass (CI): fewer iterations,
+//! same coverage.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -25,26 +31,44 @@ use tunetuner::optimizers::{self, HyperParams};
 use tunetuner::perfmodel::NoiseModel;
 use tunetuner::runner::{Budget, LiveRunner, SimulationRunner, Tuning};
 use tunetuner::runtime::Engine;
+use tunetuner::util::json::Json;
 use tunetuner::util::rng::Rng;
+
+/// One finished measurement, kept for the BENCH.json report.
+struct Record {
+    name: String,
+    mean_s: f64,
+    stddev_frac: f64,
+    iters: usize,
+    items_per_s: Option<f64>,
+}
 
 struct Bench {
     filter: Option<String>,
+    /// Smoke mode: much shorter sampling window (CI gate).
+    smoke: bool,
+    records: Vec<Record>,
 }
 
 impl Bench {
-    /// Time `f` adaptively: enough iterations to pass ~0.4s, after warmup.
-    fn run<R>(&self, name: &str, mut f: impl FnMut() -> R) -> Option<Duration> {
+    /// Time `f` adaptively: enough iterations to fill the sampling window
+    /// (~0.4s, ~40ms in smoke mode), after warmup.
+    fn run<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> Option<Duration> {
         if let Some(filter) = &self.filter {
             if !name.contains(filter.as_str()) {
                 return None;
             }
         }
+        let (window, max_iters) = if self.smoke {
+            (Duration::from_millis(40), 50)
+        } else {
+            (Duration::from_millis(400), 10_000)
+        };
         // Warmup + calibration.
         let t0 = Instant::now();
         std::hint::black_box(f());
         let once = t0.elapsed().max(Duration::from_nanos(50));
-        let iters = (Duration::from_millis(400).as_nanos() / once.as_nanos()).clamp(1, 10_000)
-            as usize;
+        let iters = (window.as_nanos() / once.as_nanos()).clamp(1, max_iters) as usize;
         let mut samples = Vec::with_capacity(iters);
         for _ in 0..iters {
             let t = Instant::now();
@@ -57,22 +81,78 @@ impl Bench {
             .map(|s| (s - mean) * (s - mean))
             .sum::<f64>()
             / samples.len() as f64;
+        let stddev_frac = (var.sqrt() / mean).min(9.99);
         println!(
             "{name:<46} {:>12}  ±{:>5.1}%  ({} iters)",
             fmt_time(mean),
-            (var.sqrt() / mean * 100.0).min(999.0),
+            stddev_frac * 100.0,
             samples.len()
         );
+        self.records.push(Record {
+            name: name.to_string(),
+            mean_s: mean,
+            stddev_frac,
+            iters: samples.len(),
+            items_per_s: None,
+        });
         Some(Duration::from_secs_f64(mean))
     }
 
-    fn throughput(&self, name: &str, items: usize, mut f: impl FnMut()) {
+    fn throughput(&mut self, name: &str, items: usize, mut f: impl FnMut()) {
         if let Some(d) = self.run(name, &mut f) {
-            println!(
-                "{:<46} {:>12.0} items/s",
-                format!("  -> {name}"),
-                items as f64 / d.as_secs_f64()
-            );
+            let rate = items as f64 / d.as_secs_f64();
+            println!("{:<46} {:>12.0} items/s", format!("  -> {name}"), rate);
+            if let Some(last) = self.records.last_mut() {
+                last.items_per_s = Some(rate);
+            }
+        }
+    }
+
+    /// Write the machine-readable report (group → mean seconds, items/s).
+    fn write_report(&self) {
+        let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH.json".to_string());
+        let benches: Vec<Json> = self
+            .records
+            .iter()
+            .map(|r| {
+                let mut o = Json::obj();
+                o.set("name", r.name.as_str().into())
+                    .set(
+                        "group",
+                        r.name.split('/').next().unwrap_or(&r.name).into(),
+                    )
+                    .set("mean_s", r.mean_s.into())
+                    .set("stddev_frac", r.stddev_frac.into())
+                    .set("iters", r.iters.into());
+                match r.items_per_s {
+                    Some(rate) => o.set("items_per_s", rate.into()),
+                    None => o.set("items_per_s", Json::Null),
+                };
+                o
+            })
+            .collect();
+        let unix = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs() as f64)
+            .unwrap_or(0.0);
+        let mut j = Json::obj();
+        j.set("schema", "tunetuner-bench".into())
+            .set("schema_version", 1usize.into())
+            .set("smoke", self.smoke.into())
+            // Filter used for this run (null = full suite), so partial
+            // snapshots are distinguishable in the BENCH_*.json trajectory.
+            .set(
+                "filter",
+                match &self.filter {
+                    Some(f) => f.as_str().into(),
+                    None => Json::Null,
+                },
+            )
+            .set("generated_unix", unix.into())
+            .set("benches", Json::Arr(benches));
+        match std::fs::write(&path, j.to_pretty()) {
+            Ok(()) => println!("(wrote {} results to {path})", self.records.len()),
+            Err(e) => eprintln!("(failed to write {path}: {e})"),
         }
     }
 }
@@ -93,13 +173,58 @@ fn main() {
         .skip(1)
         .find(|a| !a.starts_with("--"))
         .map(|s| s.to_string());
-    let b = Bench { filter };
+    let smoke = std::env::var("TUNETUNER_BENCH_SMOKE")
+        .map(|v| v != "0" && !v.is_empty())
+        .unwrap_or(false);
+    let mut b = Bench {
+        filter,
+        smoke,
+        records: Vec::new(),
+    };
     println!("{:-^78}", " tunetuner benchmarks ");
 
     // ---- space: enumeration ---------------------------------------------------
     for name in ["synthetic", "hotspot", "dedispersion", "convolution", "gemm"] {
         b.run(&format!("space/build/{name}"), || {
             kernels::kernel_by_name(name).unwrap().space().len()
+        });
+    }
+
+    // ---- space: packed-rank hot queries ----------------------------------------
+    {
+        let space = kernels::kernel_by_name("gemm").unwrap().space_arc();
+        let n = space.len();
+        b.throughput("space/index_of/gemm-10k", 10_000, || {
+            let mut acc = 0usize;
+            for i in 0..10_000usize {
+                let idx = (i * 2654435761) % n;
+                acc += space.index_of(space.encoded(idx)).unwrap();
+            }
+            std::hint::black_box(acc);
+        });
+        b.throughput("space/random_neighbor/gemm-10k", 10_000, || {
+            let mut rng = Rng::new(7);
+            let mut cur = 0usize;
+            for _ in 0..10_000usize {
+                cur = space.random_neighbor(
+                    cur,
+                    tunetuner::searchspace::Neighborhood::Hamming,
+                    &mut rng,
+                );
+            }
+            std::hint::black_box(cur);
+        });
+        b.throughput("space/snap/gemm-10k", 10_000, || {
+            let mut rng = Rng::new(9);
+            let dims = space.dims().to_vec();
+            let mut target: Vec<f64> = dims.iter().map(|&d| d as f64 / 2.0).collect();
+            let mut acc = 0usize;
+            for i in 0..10_000usize {
+                let d = i % dims.len();
+                target[d] = (i % dims[d].max(1)) as f64 + 0.4;
+                acc += space.snap(&target, &mut rng);
+            }
+            std::hint::black_box(acc);
         });
     }
 
@@ -142,6 +267,7 @@ fn main() {
     if !hub.exists("gemm", "A100") {
         println!("(hub missing: run `tunetuner bruteforce` first for sim benches)");
         println!("{:-^78}", " done ");
+        b.write_report();
         return;
     }
     let cache = hub.load("gemm", "A100").unwrap();
@@ -194,4 +320,5 @@ fn main() {
         });
     }
     println!("{:-^78}", " done ");
+    b.write_report();
 }

@@ -80,7 +80,7 @@ impl CacheData {
             .filter(|r| r.valid)
             .map(|r| r.value)
             .collect();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(f64::total_cmp);
         v
     }
 
@@ -256,7 +256,12 @@ impl CacheData {
                 space.len()
             );
         }
-        // Spot-check keys (full check is O(n) string builds; sample).
+        if space.is_empty() {
+            return Ok(());
+        }
+        // Spot-check keys (full check is O(n) string builds; sample). The
+        // packed-rank engine decodes straight from the SoA buffer, so
+        // space.key() here is allocation-bound, not lookup-bound.
         let n = space.len();
         for idx in [0, n / 3, n / 2, n - 1] {
             if self.records[idx].key != space.key(idx) {

@@ -43,33 +43,57 @@ pub struct HyperTuningResults {
 }
 
 impl HyperTuningResults {
+    /// Total order on scores that demotes NaN (a failed evaluation) below
+    /// every real score, so one NaN can never panic — or win — a campaign.
+    fn nan_last(s: f64) -> f64 {
+        if s.is_nan() {
+            f64::NEG_INFINITY
+        } else {
+            s
+        }
+    }
+
     pub fn best(&self) -> &HyperResult {
         self.results
             .iter()
-            .max_by(|a, b| a.score.partial_cmp(&b.score).unwrap())
+            .max_by(|a, b| Self::nan_last(a.score).total_cmp(&Self::nan_last(b.score)))
             .expect("no results")
     }
 
     pub fn worst(&self) -> &HyperResult {
+        // NaN → +inf here: total_cmp orders a sign-negative NaN below
+        // -inf, which would otherwise let a failed evaluation win "worst".
+        let key = |s: f64| if s.is_nan() { f64::INFINITY } else { s };
         self.results
             .iter()
-            .min_by(|a, b| a.score.partial_cmp(&b.score).unwrap())
+            .min_by(|a, b| key(a.score).total_cmp(&key(b.score)))
             .expect("no results")
     }
 
     /// The configuration whose score is closest to the mean — the paper's
     /// "most average-performing hyperparameter configuration".
     pub fn most_average(&self) -> &HyperResult {
-        let mean = crate::util::stats::mean(
-            &self.results.iter().map(|r| r.score).collect::<Vec<_>>(),
-        );
+        // Mean over real scores only: one NaN would otherwise poison the
+        // mean and with it every distance below.
+        let finite: Vec<f64> = self
+            .results
+            .iter()
+            .map(|r| r.score)
+            .filter(|s| !s.is_nan())
+            .collect();
+        let mean = if finite.is_empty() {
+            0.0
+        } else {
+            crate::util::stats::mean(&finite)
+        };
         self.results
             .iter()
             .min_by(|a, b| {
+                // NaN distances sort last (total_cmp: NaN > +inf), so a
+                // finite-scored config is always preferred when one exists.
                 (a.score - mean)
                     .abs()
-                    .partial_cmp(&(b.score - mean).abs())
-                    .unwrap()
+                    .total_cmp(&(b.score - mean).abs())
             })
             .expect("no results")
     }
@@ -291,6 +315,48 @@ mod tests {
         assert_eq!(back.best().score, 0.25);
         assert_eq!(back.worst().hp_key, "c1=2");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn nan_score_does_not_panic_selection() {
+        // Regression: partial_cmp().unwrap() used to panic the whole
+        // campaign on a single NaN score.
+        let r = HyperTuningResults {
+            algo: "pso".into(),
+            space_kind: "limited".into(),
+            repeats: 1,
+            seed: 0,
+            results: vec![
+                HyperResult {
+                    config_idx: 0,
+                    hp_key: "a".into(),
+                    score: f64::NAN,
+                },
+                HyperResult {
+                    config_idx: 1,
+                    hp_key: "b".into(),
+                    score: 0.4,
+                },
+                HyperResult {
+                    config_idx: 2,
+                    hp_key: "c".into(),
+                    score: -0.2,
+                },
+                HyperResult {
+                    config_idx: 3,
+                    hp_key: "d".into(),
+                    // Sign-negative NaN: total_cmp orders it below -inf,
+                    // so an unguarded min_by would select it as "worst".
+                    score: -f64::NAN,
+                },
+            ],
+            wallclock_seconds: 1.0,
+            simulated_seconds: 1.0,
+        };
+        // NaN never wins "best"; worst/most_average pick real scores.
+        assert_eq!(r.best().config_idx, 1);
+        assert_eq!(r.worst().config_idx, 2);
+        assert!(!r.most_average().score.is_nan());
     }
 
     #[test]

@@ -115,7 +115,7 @@ mod tests {
         for i in 0..s.len() {
             let v = s.values(i);
             if v[USE_PADDING].as_i64() == Some(1) {
-                let mut enc = s.encoded(i).clone();
+                let mut enc = s.encoded(i).to_vec();
                 enc[USE_PADDING] = 0;
                 if let Some(j) = s.index_of(&enc) {
                     assert!(k.features(i)[F_BYTES] < k.features(j)[F_BYTES]);

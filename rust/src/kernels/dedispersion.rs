@@ -107,7 +107,7 @@ mod tests {
             let enc = s.encoded(i);
             if enc[BSY] == 0 && enc[TSD] == 0 {
                 // bsy=1, tsd=1 -> worst traffic
-                let mut e2 = enc.clone();
+                let mut e2 = enc.to_vec();
                 e2[BSY] = 3; // bsy=8
                 if let Some(j) = s.index_of(&e2) {
                     assert!(k.features(j)[F_BYTES] < k.features(i)[F_BYTES]);

@@ -139,7 +139,7 @@ mod tests {
         for i in 0..s.len() {
             let vi = s.values(i);
             if vi[SA].as_i64() == Some(1) {
-                let mut enc = s.encoded(i).clone();
+                let mut enc = s.encoded(i).to_vec();
                 enc[SA] = 0; // SA value index: values are [0, 1]
                 if let Some(j) = s.index_of(&enc) {
                     let fi = k.features(i);

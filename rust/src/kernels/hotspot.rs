@@ -129,7 +129,7 @@ mod tests {
         for i in 0..s.len() {
             let enc = s.encoded(i);
             if enc[TTF] == 0 {
-                let mut e2 = enc.clone();
+                let mut e2 = enc.to_vec();
                 e2[TTF] = 3;
                 if let Some(j) = s.index_of(&e2) {
                     let fi = k.features(i);

@@ -12,7 +12,7 @@ use crate::searchspace::SearchSpace;
 use crate::util::rng::{mix64, Rng};
 use anyhow::Result;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 /// A search space prepared for scoring: budget, sampling times and
 /// baseline values precomputed from its brute-force cache.
@@ -106,51 +106,65 @@ pub fn evaluate_algorithm(
     // Validate the algorithm name once, up front.
     optimizers::create(algo, hp)?;
     let n_jobs = spaces.len() * repeats;
-    let traces: Mutex<Vec<Vec<Option<Trace>>>> =
-        Mutex::new(vec![vec![None; repeats]; spaces.len()]);
     let next = AtomicUsize::new(0);
     let workers = std::thread::available_parallelism()
         .map(|p| p.get())
         .unwrap_or(4)
         .min(n_jobs.max(1));
 
+    // Lock-free scatter/gather: every job writes a distinct trace slot, so
+    // workers accumulate (job, trace) pairs locally and the slots are
+    // filled after join — no shared Mutex on the hot path.
+    let mut slots: Vec<Option<Trace>> = Vec::new();
+    slots.resize_with(n_jobs, || None);
     std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| {
-                // Per-worker optimizer instance (Optimizer is stateless
-                // across runs but create() is cheap anyway).
-                let opt = optimizers::create(algo, hp).expect("validated above");
-                loop {
-                    let job = next.fetch_add(1, Ordering::Relaxed);
-                    if job >= n_jobs {
-                        break;
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                scope.spawn(|| {
+                    // Per-worker optimizer instance (Optimizer is stateless
+                    // across runs but create() is cheap anyway).
+                    let opt = optimizers::create(algo, hp).expect("validated above");
+                    let mut local: Vec<(usize, Trace)> = Vec::new();
+                    loop {
+                        let job = next.fetch_add(1, Ordering::Relaxed);
+                        if job >= n_jobs {
+                            break;
+                        }
+                        let s = job / repeats;
+                        let r = job % repeats;
+                        let se = &spaces[s];
+                        let mut sim = SimulationRunner::new_unchecked(
+                            Arc::clone(&se.space),
+                            Arc::clone(&se.cache),
+                        );
+                        // Proposal cap: no real tuning run proposes more than a
+                        // few multiples of the space size; this bounds the real
+                        // cost of schedule-heavy configs that spin on (cheap)
+                        // cache revisits.
+                        let budget = Budget::seconds(se.budget_seconds)
+                            .with_proposal_cap(4 * se.space.len() + 10_000);
+                        let mut tuning = Tuning::new(&mut sim, budget);
+                        let mut rng = Rng::new(mix64(seed, mix64(s as u64, r as u64)));
+                        opt.run(&mut tuning, &mut rng);
+                        local.push((job, tuning.finish()));
                     }
-                    let s = job / repeats;
-                    let r = job % repeats;
-                    let se = &spaces[s];
-                    let mut sim = SimulationRunner::new_unchecked(
-                        Arc::clone(&se.space),
-                        Arc::clone(&se.cache),
-                    );
-                    // Proposal cap: no real tuning run proposes more than a
-                    // few multiples of the space size; this bounds the real
-                    // cost of schedule-heavy configs that spin on (cheap)
-                    // cache revisits.
-                    let budget = Budget::seconds(se.budget_seconds)
-                        .with_proposal_cap(4 * se.space.len() + 10_000);
-                    let mut tuning = Tuning::new(&mut sim, budget);
-                    let mut rng = Rng::new(mix64(seed, mix64(s as u64, r as u64)));
-                    opt.run(&mut tuning, &mut rng);
-                    traces.lock().unwrap()[s][r] = Some(tuning.finish());
-                }
-            });
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            for (job, trace) in h.join().expect("evaluation worker panicked") {
+                slots[job] = Some(trace);
+            }
         }
     });
 
-    let traces = traces.into_inner().unwrap();
     let mut per_space_scores = Vec::with_capacity(spaces.len());
     for (s, se) in spaces.iter().enumerate() {
-        let ts: Vec<Trace> = traces[s].iter().map(|t| t.clone().unwrap()).collect();
+        let ts: Vec<Trace> = slots[s * repeats..(s + 1) * repeats]
+            .iter_mut()
+            .map(|t| t.take().expect("job slot unfilled"))
+            .collect();
         per_space_scores.push(se.score_traces(&ts));
     }
     let points = per_space_scores[0].len();

@@ -9,6 +9,10 @@
 //! moves at each temperature step (Kernel Tuner's semantics). When a
 //! schedule completes with budget left, the walk restarts from a fresh
 //! random point.
+//!
+//! Each proposal is one `SearchSpace::random_neighbor` call, which the
+//! packed-rank engine serves with a stride-delta and a bitset probe —
+//! zero heap allocations per annealing step.
 
 use super::{relative_delta, HyperParams, Optimizer};
 use crate::runner::Tuning;

@@ -58,6 +58,8 @@ impl Optimizer for DualAnnealing {
 
     fn run(&self, tuning: &mut Tuning<'_>, rng: &mut Rng) {
         let dims: Vec<usize> = tuning.space().dims().to_vec();
+        // Reusable jump-target scratch: one allocation per run, not per step.
+        let mut jump = Vec::with_capacity(dims.len());
         while !tuning.done() {
             // --- (re)anneal from a fresh random point -----------------------
             let mut current = tuning.space().random(rng);
@@ -68,7 +70,14 @@ impl Optimizer for DualAnnealing {
             let t_restart = self.temp * self.restart_temp_ratio;
             while temp > t_restart && !tuning.done() {
                 // Generalized-annealing visit: heavy-tailed jump size.
-                let cand = heavy_tailed_jump(tuning.space(), current, &dims, temp / self.temp, rng);
+                let cand = heavy_tailed_jump(
+                    tuning.space(),
+                    current,
+                    &dims,
+                    temp / self.temp,
+                    rng,
+                    &mut jump,
+                );
                 let cand_val = tuning.eval(cand);
                 let delta = relative_delta(cand_val, current_val);
                 if delta <= 0.0 || rng.next_f64() < (-delta * (1.0 + step as f64 / 50.0) / (temp / self.temp).max(1e-12)).exp() {
@@ -101,16 +110,18 @@ impl Optimizer for DualAnnealing {
 }
 
 /// Heavy-tailed jump: each dimension moves with probability ~temp-scaled,
-/// by a geometric step length (long jumps early, short late).
+/// by a geometric step length (long jumps early, short late). `target` is
+/// a caller-owned scratch buffer reused across steps.
 fn heavy_tailed_jump(
     space: &SearchSpace,
     from: usize,
     dims: &[usize],
     temp_frac: f64,
     rng: &mut Rng,
+    target: &mut Vec<f64>,
 ) -> usize {
-    let enc = space.encoded(from).clone();
-    let mut target: Vec<f64> = enc.iter().map(|&v| v as f64).collect();
+    target.clear();
+    target.extend(space.encoded(from).iter().map(|&v| v as f64));
     let p_move = 0.3 + 0.5 * temp_frac;
     let mut moved = false;
     for (d, t) in target.iter_mut().enumerate() {
@@ -128,7 +139,7 @@ fn heavy_tailed_jump(
     if !moved {
         return space.random_neighbor(from, Neighborhood::Hamming, rng);
     }
-    space.snap(&target, rng)
+    space.snap(target, rng)
 }
 
 /// Dispatch to the selected local-search method. Returns the best
@@ -153,25 +164,25 @@ pub fn local_search(
     }
 }
 
-/// Try to move to `enc+delta` (snapped to the lattice bounds); returns
-/// Some((idx, val)) if the move lands on a valid config.
+/// Try to move config `base` by `delta` along dimension `d`; returns
+/// Some((idx, val)) if the move lands on a valid config. One packed-rank
+/// stride-delta — no encoded-vector clone.
 fn probe(
     tuning: &mut Tuning<'_>,
-    enc: &[u16],
+    base: usize,
     d: usize,
     delta: i64,
 ) -> Option<(usize, f64)> {
-    let dims = tuning.space().dims();
-    let cur = enc[d] as i64;
-    let next = cur + delta;
-    if next < 0 || next >= dims[d] as i64 {
-        return None;
-    }
-    let mut e = enc.to_vec();
-    e[d] = next as u16;
-    let idx = tuning.space().index_of(&e)?;
-    let v = tuning.eval(idx);
-    Some((idx, v))
+    let cand = {
+        let space = tuning.space();
+        let next = space.encoded(base)[d] as i64 + delta;
+        if next < 0 || next >= space.dims()[d] as i64 {
+            return None;
+        }
+        space.with_dim(base, d, next as u16)?
+    };
+    let v = tuning.eval(cand);
+    Some((cand, v))
 }
 
 /// COBYLA stand-in: coordinate descent with a shrinking trust radius.
@@ -187,9 +198,9 @@ fn cobyla(tuning: &mut Tuning<'_>, start: usize, start_val: f64, rng: &mut Rng) 
             if tuning.done() {
                 break;
             }
-            let enc = tuning.space().encoded(best).clone();
+            let base = best;
             for delta in [-radius, radius] {
-                if let Some((i, v)) = probe(tuning, &enc, d, delta) {
+                if let Some((i, v)) = probe(tuning, base, d, delta) {
                     if v < best_val {
                         best = i;
                         best_val = v;
@@ -213,14 +224,14 @@ fn lbfgsb(tuning: &mut Tuning<'_>, start: usize, start_val: f64, rng: &mut Rng) 
         if tuning.done() {
             break;
         }
-        let enc = tuning.space().encoded(best).clone();
+        let base = best;
         let mut grad = vec![0i64; ndim];
         for d in 0..ndim {
             if tuning.done() {
                 break;
             }
-            let up = probe(tuning, &enc, d, 1).map(|(_, v)| v).unwrap_or(f64::INFINITY);
-            let down = probe(tuning, &enc, d, -1).map(|(_, v)| v).unwrap_or(f64::INFINITY);
+            let up = probe(tuning, base, d, 1).map(|(_, v)| v).unwrap_or(f64::INFINITY);
+            let down = probe(tuning, base, d, -1).map(|(_, v)| v).unwrap_or(f64::INFINITY);
             grad[d] = if up < best_val && up <= down {
                 1
             } else if down < best_val {
@@ -232,7 +243,9 @@ fn lbfgsb(tuning: &mut Tuning<'_>, start: usize, start_val: f64, rng: &mut Rng) 
         if grad.iter().all(|&g| g == 0) {
             break;
         }
-        let target: Vec<f64> = enc
+        let target: Vec<f64> = tuning
+            .space()
+            .encoded(base)
             .iter()
             .zip(&grad)
             .map(|(&e, &g)| e as f64 + g as f64)
@@ -258,13 +271,13 @@ fn slsqp(tuning: &mut Tuning<'_>, start: usize, start_val: f64) -> (usize, f64) 
             break;
         }
         loop {
-            let enc = tuning.space().encoded(best).clone();
+            let base = best;
             let mut step_taken = false;
             for delta in [-1i64, 1, -2, 2] {
                 if tuning.done() {
                     break;
                 }
-                if let Some((i, v)) = probe(tuning, &enc, d, delta) {
+                if let Some((i, v)) = probe(tuning, base, d, delta) {
                     if v < best_val {
                         best = i;
                         best_val = v;
@@ -290,10 +303,10 @@ fn cg(tuning: &mut Tuning<'_>, start: usize, start_val: f64, rng: &mut Rng) -> (
         if tuning.done() {
             break;
         }
-        let enc = tuning.space().encoded(best).clone();
+        let base = best;
         // Try momentum first.
         if let Some((d, delta)) = momentum {
-            if let Some((i, v)) = probe(tuning, &enc, d, delta) {
+            if let Some((i, v)) = probe(tuning, base, d, delta) {
                 if v < best_val {
                     best = i;
                     best_val = v;
@@ -304,7 +317,7 @@ fn cg(tuning: &mut Tuning<'_>, start: usize, start_val: f64, rng: &mut Rng) -> (
         }
         let d = rng.below(ndim);
         let delta = if rng.chance(0.5) { 1 } else { -1 };
-        if let Some((i, v)) = probe(tuning, &enc, d, delta) {
+        if let Some((i, v)) = probe(tuning, base, d, delta) {
             if v < best_val {
                 best = i;
                 best_val = v;
@@ -326,17 +339,18 @@ fn powell(tuning: &mut Tuning<'_>, start: usize, start_val: f64) -> (usize, f64)
             if tuning.done() {
                 break;
             }
-            let enc = tuning.space().encoded(best).clone();
+            let base = best;
+            let orig = tuning.space().encoded(base)[d];
             for v_idx in 0..dims[d] as u16 {
                 if tuning.done() {
                     break;
                 }
-                if v_idx == enc[d] {
+                if v_idx == orig {
                     continue;
                 }
-                let mut e = enc.clone();
-                e[d] = v_idx;
-                if let Some(i) = tuning.space().index_of(&e) {
+                // One stride-delta per probe; no encoded-vector clones in
+                // the line search.
+                if let Some(i) = tuning.space().with_dim(base, d, v_idx) {
                     let v = tuning.eval(i);
                     if v < best_val {
                         best = i;
@@ -367,7 +381,7 @@ fn nelder_mead(tuning: &mut Tuning<'_>, start: usize, start_val: f64, rng: &mut 
         if tuning.done() || simplex.len() < 3 {
             break;
         }
-        simplex.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        simplex.sort_by(|a, b| a.1.total_cmp(&b.1));
         let worst = simplex.last().unwrap().0;
         // Centroid of all but worst, reflected through the worst point.
         let ndims = tuning.space().dims().len();
@@ -380,7 +394,7 @@ fn nelder_mead(tuning: &mut Tuning<'_>, start: usize, start_val: f64, rng: &mut 
         for c in centroid.iter_mut() {
             *c /= (simplex.len() - 1) as f64;
         }
-        let wenc = tuning.space().encoded(worst).clone();
+        let wenc = tuning.space().encoded(worst).to_vec();
         let reflected: Vec<f64> = centroid
             .iter()
             .zip(&wenc)
@@ -403,7 +417,7 @@ fn nelder_mead(tuning: &mut Tuning<'_>, start: usize, start_val: f64, rng: &mut 
                 if tuning.done() {
                     break;
                 }
-                let enc = tuning.space().encoded(item.0).clone();
+                let enc = tuning.space().encoded(item.0).to_vec();
                 let target: Vec<f64> = enc
                     .iter()
                     .zip(&best_enc)
@@ -417,7 +431,7 @@ fn nelder_mead(tuning: &mut Tuning<'_>, start: usize, start_val: f64, rng: &mut 
     }
     simplex
         .into_iter()
-        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .min_by(|a, b| a.1.total_cmp(&b.1))
         .unwrap_or((start, start_val))
 }
 
@@ -429,12 +443,12 @@ fn bfgs(tuning: &mut Tuning<'_>, start: usize, start_val: f64, rng: &mut Rng) ->
         if tuning.done() {
             break;
         }
-        let enc = tuning.space().encoded(best).clone();
+        let base = best;
         let d = rng.below(ndim);
         // Find improving direction.
         let mut dir = 0i64;
         for delta in [1i64, -1] {
-            if let Some((i, v)) = probe(tuning, &enc, d, delta) {
+            if let Some((i, v)) = probe(tuning, base, d, delta) {
                 if v < best_val {
                     best = i;
                     best_val = v;
@@ -449,8 +463,7 @@ fn bfgs(tuning: &mut Tuning<'_>, start: usize, start_val: f64, rng: &mut Rng) ->
         // Double the step while it keeps improving.
         let mut step = 2i64;
         while dir != 0 && !tuning.done() {
-            let enc2 = tuning.space().encoded(best).clone();
-            match probe(tuning, &enc2, d, dir * step) {
+            match probe(tuning, best, d, dir * step) {
                 Some((i, v)) if v < best_val => {
                     best = i;
                     best_val = v;
@@ -469,14 +482,15 @@ fn trust_constr(tuning: &mut Tuning<'_>, start: usize, start_val: f64, rng: &mut
     let dims: Vec<usize> = tuning.space().dims().to_vec();
     let (mut best, mut best_val) = (start, start_val);
     let mut radius = 4.0f64;
+    let mut target: Vec<f64> = Vec::with_capacity(ndim);
     while radius >= 1.0 && !tuning.done() {
         let mut improved = false;
         for _ in 0..2 * ndim {
             if tuning.done() {
                 break;
             }
-            let enc = tuning.space().encoded(best).clone();
-            let mut target: Vec<f64> = enc.iter().map(|&e| e as f64).collect();
+            target.clear();
+            target.extend(tuning.space().encoded(best).iter().map(|&e| e as f64));
             let mut remaining = radius;
             while remaining >= 1.0 {
                 let d = rng.below(ndim);
@@ -502,16 +516,18 @@ fn trust_constr(tuning: &mut Tuning<'_>, start: usize, start_val: f64, rng: &mut
 /// Plain greedy fallback for unknown method names.
 fn greedy_descent(tuning: &mut Tuning<'_>, start: usize, start_val: f64, rng: &mut Rng) -> (usize, f64) {
     let (mut best, mut best_val) = (start, start_val);
+    let mut ns: Vec<usize> = Vec::new();
     loop {
         if tuning.done() {
             break;
         }
-        let ns = tuning.space().neighbors(best, Neighborhood::Adjacent);
+        tuning.space().neighbors_into(best, Neighborhood::Adjacent, &mut ns);
         let mut improved = false;
-        for n in ns {
+        for i in 0..ns.len() {
             if tuning.done() {
                 break;
             }
+            let n = ns[i];
             let v = tuning.eval(n);
             if v < best_val {
                 best = n;

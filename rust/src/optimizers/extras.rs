@@ -45,6 +45,8 @@ impl Optimizer for DifferentialEvolution {
             let v = tuning.eval(idx);
             pop.push((idx, v));
         }
+        // Reusable mutant-vector scratch: one allocation per run.
+        let mut target = vec![0.0f64; ndim];
         loop {
             for i in 0..pop.len() {
                 if tuning.done() {
@@ -58,16 +60,22 @@ impl Optimizer for DifferentialEvolution {
                     }
                     (picks[0], picks[1], picks[2])
                 };
-                let ea: Vec<f64> = tuning.space().encoded(pop[a].0).iter().map(|&e| e as f64).collect();
-                let eb: Vec<f64> = tuning.space().encoded(pop[b].0).iter().map(|&e| e as f64).collect();
-                let ec: Vec<f64> = tuning.space().encoded(pop[c].0).iter().map(|&e| e as f64).collect();
-                let ex: Vec<f64> = tuning.space().encoded(pop[i].0).iter().map(|&e| e as f64).collect();
-                let jrand = rng.below(ndim);
-                let mut target = ex.clone();
-                for d in 0..ndim {
-                    if d == jrand || rng.chance(self.cr) {
-                        target[d] = (ea[d] + self.f * (eb[d] - ec[d]))
-                            .clamp(0.0, (dims[d] - 1) as f64);
+                {
+                    // Read parent genes straight from the SoA slices; the
+                    // borrows end before eval() needs &mut tuning.
+                    let space = tuning.space();
+                    let ea = space.encoded(pop[a].0);
+                    let eb = space.encoded(pop[b].0);
+                    let ec = space.encoded(pop[c].0);
+                    let ex = space.encoded(pop[i].0);
+                    let jrand = rng.below(ndim);
+                    for d in 0..ndim {
+                        target[d] = if d == jrand || rng.chance(self.cr) {
+                            (ea[d] as f64 + self.f * (eb[d] as f64 - ec[d] as f64))
+                                .clamp(0.0, (dims[d] - 1) as f64)
+                        } else {
+                            ex[d] as f64
+                        };
                     }
                 }
                 let idx = tuning.space().snap(&target, rng);
@@ -107,9 +115,12 @@ impl Optimizer for BasinHopping {
         let dims: Vec<usize> = tuning.space().dims().to_vec();
         let mut current = tuning.space().random(rng);
         let mut current_val = tuning.eval(current);
+        // Reusable scratch: neighbor list for descent, kick target.
+        let mut ns: Vec<usize> = Vec::new();
+        let mut target: Vec<f64> = Vec::with_capacity(dims.len());
         while !tuning.done() {
             // Local descent to the basin floor.
-            let (li, lv) = descend(tuning, current, current_val, rng);
+            let (li, lv) = descend(tuning, current, current_val, rng, &mut ns);
             if lv < current_val {
                 current = li;
                 current_val = lv;
@@ -118,8 +129,8 @@ impl Optimizer for BasinHopping {
                 break;
             }
             // Kick: perturb `perturbation` dimensions.
-            let enc = tuning.space().encoded(current).clone();
-            let mut target: Vec<f64> = enc.iter().map(|&e| e as f64).collect();
+            target.clear();
+            target.extend(tuning.space().encoded(current).iter().map(|&e| e as f64));
             for _ in 0..self.perturbation {
                 let d = rng.below(dims.len());
                 target[d] = rng.below(dims[d]) as f64;
@@ -135,25 +146,28 @@ impl Optimizer for BasinHopping {
     }
 }
 
-/// Greedy first-improvement descent over the adjacent neighborhood.
+/// Greedy first-improvement descent over the adjacent neighborhood. `ns`
+/// is a caller-owned neighbor buffer reused across descents.
 fn descend(
     tuning: &mut Tuning<'_>,
     start: usize,
     start_val: f64,
     rng: &mut Rng,
+    ns: &mut Vec<usize>,
 ) -> (usize, f64) {
     let (mut best, mut best_val) = (start, start_val);
     loop {
         if tuning.done() {
             return (best, best_val);
         }
-        let mut ns = tuning.space().neighbors(best, Neighborhood::Adjacent);
-        rng.shuffle(&mut ns);
+        tuning.space().neighbors_into(best, Neighborhood::Adjacent, ns);
+        rng.shuffle(ns);
         let mut improved = false;
-        for n in ns {
+        for i in 0..ns.len() {
             if tuning.done() {
                 return (best, best_val);
             }
+            let n = ns[i];
             let v = tuning.eval(n);
             if v < best_val {
                 best = n;
@@ -192,6 +206,8 @@ impl Optimizer for Mls {
     }
 
     fn run(&self, tuning: &mut Tuning<'_>, rng: &mut Rng) {
+        // Reusable neighbor buffer across descents and restarts.
+        let mut ns: Vec<usize> = Vec::new();
         while !tuning.done() {
             let start = tuning.space().random(rng);
             let mut best_val = tuning.eval(start);
@@ -200,12 +216,13 @@ impl Optimizer for Mls {
                 if tuning.done() {
                     return;
                 }
-                let ns = tuning.space().neighbors(best, self.neighborhood);
+                tuning.space().neighbors_into(best, self.neighborhood, &mut ns);
                 let mut step = None;
-                for n in ns {
+                for i in 0..ns.len() {
                     if tuning.done() {
                         return;
                     }
+                    let n = ns[i];
                     let v = tuning.eval(n);
                     if v < best_val {
                         best_val = v;
@@ -247,6 +264,8 @@ impl Optimizer for GreedyIls {
 
     fn run(&self, tuning: &mut Tuning<'_>, rng: &mut Rng) {
         let dims: Vec<usize> = tuning.space().dims().to_vec();
+        let mut ns: Vec<usize> = Vec::new();
+        let mut target: Vec<f64> = Vec::with_capacity(dims.len());
         'outer: while !tuning.done() {
             let mut incumbent = tuning.space().random(rng);
             let mut incumbent_val = tuning.eval(incumbent);
@@ -255,7 +274,7 @@ impl Optimizer for GreedyIls {
                 if tuning.done() {
                     break 'outer;
                 }
-                let (li, lv) = descend(tuning, incumbent, incumbent_val, rng);
+                let (li, lv) = descend(tuning, incumbent, incumbent_val, rng, &mut ns);
                 if lv < incumbent_val {
                     incumbent = li;
                     incumbent_val = lv;
@@ -267,8 +286,8 @@ impl Optimizer for GreedyIls {
                     break 'outer;
                 }
                 // Kick the incumbent.
-                let enc = tuning.space().encoded(incumbent).clone();
-                let mut target: Vec<f64> = enc.iter().map(|&e| e as f64).collect();
+                target.clear();
+                target.extend(tuning.space().encoded(incumbent).iter().map(|&e| e as f64));
                 for _ in 0..self.perturbation {
                     let d = rng.below(dims.len());
                     target[d] = rng.below(dims[d]) as f64;
@@ -338,6 +357,8 @@ impl Optimizer for Firefly {
             val.push(v);
         }
         let m = pos.len();
+        // Reusable move-target scratch: one allocation per run.
+        let mut target = vec![0.0f64; ndim];
         for _iter in 0..self.maxiter {
             if tuning.done() {
                 return;
@@ -356,22 +377,17 @@ impl Optimizer for Firefly {
                         .map(|(a, b)| (a - b) * (a - b))
                         .sum();
                     let beta = self.beta0 * (-self.gamma * r2).exp();
-                    let mut target = pos[i].clone();
                     for d in 0..ndim {
                         let step = beta * (pos[j][d] - pos[i][d])
                             + self.alpha * rng.range_f64(-1.0, 1.0) * dims[d] as f64 / 8.0;
-                        target[d] = (target[d] + step).clamp(0.0, (dims[d] - 1) as f64);
+                        target[d] = (pos[i][d] + step).clamp(0.0, (dims[d] - 1) as f64);
                     }
                     let idx = tuning.space().snap(&target, rng);
                     let v = tuning.eval(idx);
                     if v < val[i] {
                         val[i] = v;
-                        pos[i] = tuning
-                            .space()
-                            .encoded(idx)
-                            .iter()
-                            .map(|&e| e as f64)
-                            .collect();
+                        pos[i].clear();
+                        pos[i].extend(tuning.space().encoded(idx).iter().map(|&e| e as f64));
                     }
                 }
             }

@@ -112,13 +112,10 @@ impl GeneticAlgorithm {
         }
     }
 
-    /// Resolve an encoded child to a valid config index.
-    fn materialize(&self, enc: Vec<u16>, space: &SearchSpace, rng: &mut Rng) -> usize {
-        if let Some(i) = space.index_of(&enc) {
-            return i;
-        }
-        let target: Vec<f64> = enc.iter().map(|&v| v as f64).collect();
-        space.snap(&target, rng)
+    /// Resolve an encoded child to a valid config index (exact packed-rank
+    /// lookup, else integer-L1 snap — no float conversion, no allocation).
+    fn materialize(&self, enc: &[u16], space: &SearchSpace, rng: &mut Rng) -> usize {
+        space.snap_encoded(enc, rng)
     }
 }
 
@@ -143,7 +140,7 @@ impl Optimizer for GeneticAlgorithm {
                 return;
             }
             // Rank-weighted selection: sort ascending (better first).
-            pop.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            pop.sort_by(|a, b| a.1.total_cmp(&b.1));
             pop.truncate(self.popsize);
             let mut next: Vec<(usize, f64)> = Vec::with_capacity(self.popsize);
             // Elitism: carry the best through unchanged.
@@ -154,8 +151,8 @@ impl Optimizer for GeneticAlgorithm {
                 }
                 let pa = pop[rank_pick(pop.len(), rng)].0;
                 let pb = pop[rank_pick(pop.len(), rng)].0;
-                let ea = tuning.space().encoded(pa).clone();
-                let eb = tuning.space().encoded(pb).clone();
+                let ea = tuning.space().encoded(pa).to_vec();
+                let eb = tuning.space().encoded(pb).to_vec();
                 let (mut c1, mut c2) = self.crossover.apply(&ea, &eb, rng);
                 self.mutate(&mut c1, tuning.space(), rng);
                 self.mutate(&mut c2, tuning.space(), rng);
@@ -163,7 +160,7 @@ impl Optimizer for GeneticAlgorithm {
                     if next.len() >= self.popsize || tuning.done() {
                         break;
                     }
-                    let idx = self.materialize(child, tuning.space(), rng);
+                    let idx = self.materialize(&child, tuning.space(), rng);
                     let v = tuning.eval(idx);
                     next.push((idx, v));
                 }

@@ -101,16 +101,12 @@ impl Optimizer for Pso {
                 let v = tuning.eval(idx);
                 if v < p.best_val {
                     p.best_val = v;
-                    p.best_pos = p.pos.clone();
+                    p.best_pos.copy_from_slice(&p.pos);
                 }
                 if v < gbest_val {
                     gbest_val = v;
-                    gbest_pos = tuning
-                        .space()
-                        .encoded(idx)
-                        .iter()
-                        .map(|&e| e as f64)
-                        .collect();
+                    gbest_pos.clear();
+                    gbest_pos.extend(tuning.space().encoded(idx).iter().map(|&e| e as f64));
                 }
             }
         }

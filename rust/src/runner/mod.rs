@@ -164,8 +164,11 @@ pub struct Tuning<'a> {
     runner: &'a mut dyn Runner,
     budget: Budget,
     trace: Trace,
-    /// Within-run evaluation cache: revisits cost only framework overhead.
-    cache: crate::util::hash::FastMap<usize, f64>,
+    /// Within-run evaluation cache, directly indexed by config index:
+    /// `cached_values[i]` is meaningful iff bit `i` of `seen` is set. No
+    /// hashing on the revisit path — one bit test and one array read.
+    seen: Vec<u64>,
+    cached_values: Vec<f64>,
     /// Framework overhead charged on cache hits.
     cached_overhead: f64,
     /// Size of the search space (tuning is done once it is exhausted).
@@ -179,7 +182,8 @@ impl<'a> Tuning<'a> {
             runner,
             budget,
             trace: Trace::default(),
-            cache: crate::util::hash::FastMap::default(),
+            seen: vec![0u64; (space_len + 63) / 64],
+            cached_values: vec![0.0; space_len],
             // Kernel Tuner semantics: a cache hit returns instantly and
             // consumes no tuning time. Runaway revisit loops are bounded
             // by Budget::max_proposals and the space-exhaustion check.
@@ -211,7 +215,9 @@ impl<'a> Tuning<'a> {
     /// Evaluate a configuration; INFINITY for failed configs. The
     /// simulated clock advances accordingly.
     pub fn eval(&mut self, config_idx: usize) -> f64 {
-        if let Some(&v) = self.cache.get(&config_idx) {
+        let (word, bit) = (config_idx >> 6, 1u64 << (config_idx & 63));
+        if self.seen[word] & bit != 0 {
+            let v = self.cached_values[config_idx];
             self.trace.elapsed += self.cached_overhead;
             self.trace.points.push(TracePoint {
                 config: config_idx,
@@ -224,7 +230,8 @@ impl<'a> Tuning<'a> {
         let (value, cost) = self.runner.evaluate_lite(config_idx);
         self.trace.elapsed += cost;
         self.trace.unique_evals += 1;
-        self.cache.insert(config_idx, value);
+        self.seen[word] |= bit;
+        self.cached_values[config_idx] = value;
         self.trace.points.push(TracePoint {
             config: config_idx,
             value,

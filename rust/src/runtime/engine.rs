@@ -13,9 +13,14 @@
 //! native evaluations run lock-free.
 
 use crate::perfmodel::analytical;
-use crate::perfmodel::contract::{self, NUM_DEVICE, NUM_FEATURES};
+#[cfg(feature = "pjrt")]
+use crate::perfmodel::contract;
+use crate::perfmodel::contract::{NUM_DEVICE, NUM_FEATURES};
+#[cfg(feature = "pjrt")]
 use crate::util::json;
-use anyhow::{bail, Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+use anyhow::{bail, Result};
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
@@ -37,6 +42,7 @@ pub enum EngineBackend {
     Native,
 }
 
+#[cfg(feature = "pjrt")]
 struct PjrtState {
     // Kept alive for the lifetime of the executables (PJRT requires it).
     #[allow(dead_code)]
@@ -47,11 +53,19 @@ struct PjrtState {
 
 // The xla crate's client handles are raw pointers without Send/Sync
 // markers; all access is serialized through the mutex in `Engine`.
+#[cfg(feature = "pjrt")]
 unsafe impl Send for PjrtState {}
+
+/// Placeholder so `Engine`'s layout is feature-independent; the `pjrt`
+/// field is always `None` without the `pjrt` feature.
+#[cfg(not(feature = "pjrt"))]
+#[allow(dead_code)]
+struct PjrtState {}
 
 /// Batched device-model evaluator.
 pub struct Engine {
     backend: EngineBackend,
+    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
     pjrt: Option<Mutex<PjrtState>>,
     /// Cumulative count of configurations evaluated (for perf accounting).
     evals: std::sync::atomic::AtomicU64,
@@ -68,6 +82,20 @@ impl Engine {
     }
 
     /// PJRT engine from an artifacts directory (validates contract.json).
+    /// Without the `pjrt` feature (which needs the vendored `xla` crate)
+    /// this always errs, and `Engine::auto` falls back to the native
+    /// oracle.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn pjrt(artifacts_dir: &Path) -> Result<Engine> {
+        let _ = artifacts_dir;
+        bail!(
+            "built without the `pjrt` feature; add the vendored `xla` crate \
+             to [dependencies] in Cargo.toml and rebuild with --features pjrt"
+        )
+    }
+
+    /// PJRT engine from an artifacts directory (validates contract.json).
+    #[cfg(feature = "pjrt")]
     pub fn pjrt(artifacts_dir: &Path) -> Result<Engine> {
         let contract_path = artifacts_dir.join("contract.json");
         let text = std::fs::read_to_string(&contract_path)
@@ -163,6 +191,16 @@ impl Engine {
         }
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    fn measure_pjrt(
+        &self,
+        _features: &[[f32; NUM_FEATURES]],
+        _device: &[f32; NUM_DEVICE],
+    ) -> Result<Vec<Measurement>> {
+        bail!("PJRT backend selected but built without the `pjrt` feature")
+    }
+
+    #[cfg(feature = "pjrt")]
     fn measure_pjrt(
         &self,
         features: &[[f32; NUM_FEATURES]],

@@ -11,6 +11,31 @@
 //! * [`space`] — enumeration with prefix pruning, config⇄index mapping,
 //!   neighbor graphs and sampling.
 //!
+//! # Packed-rank engine
+//!
+//! The config⇄index mapping is a **mixed-radix packed-rank** design
+//! rather than a hash map keyed by encoded vectors:
+//!
+//! * **Strides.** At `build()` time each dimension gets a stride
+//!   `strides[d] = Π dims[d+1..]`, so an encoded configuration packs into
+//!   a single `u64` Cartesian rank `Σ enc[d] * strides[d]`. Moving one
+//!   dimension is one add/subtract of a stride — neighbor candidates and
+//!   local-search probes never materialize an encoded vector.
+//! * **Bitset rank/select.** Validity is a bitset over Cartesian ranks
+//!   with a per-64-bit-word popcount prefix. `index_of` = bit test +
+//!   `prefix[word] + popcnt(word & below)`: two array reads and a
+//!   popcount, no hashing, no allocation. Cartesian products beyond 2^26
+//!   fall back to a `u64 → usize` hash map (still allocation-free per
+//!   lookup). Memory: ≤ 8 MiB bits + 4 MiB prefix at the threshold.
+//! * **Memory layout.** All valid encoded configs live in one row-major
+//!   `Vec<u16>` SoA buffer (`flat`, stride = ndim) — the single source of
+//!   truth for decoding and the cache-friendly scan that `snap()` uses;
+//!   per-index ranks are a parallel `Vec<u64>`. There is no vec-of-vecs.
+//!
+//! Hot queries (`index_of`, `with_dim`, `random_neighbor`,
+//! `for_each_neighbor`, `snap`, `snap_encoded`) perform zero heap
+//! allocations per call.
+//!
 //! The same engine backs both levels of the paper: *kernel* configuration
 //! spaces (L3 tuning) and *hyperparameter* configuration spaces
 //! (hypertuning — "tuning the tuner"), which is exactly how the paper

@@ -5,16 +5,36 @@
 //! (prefix pruning), which skips entire subtrees of invalid assignments —
 //! the same idea behind efficient search-space construction in the
 //! Kernel Tuner ecosystem.
+//!
+//! # Packed-rank representation
+//!
+//! Configurations are addressed internally by their **mixed-radix
+//! Cartesian rank**: a single `u64` computed from per-dimension strides
+//! (`strides[d] = Π dims[d+1..]`, so `rank = Σ enc[d] * strides[d]`).
+//! Because enumeration is lexicographic, ranks of valid configurations are
+//! strictly increasing, and the valid-config index is exactly the number
+//! of valid ranks below a given rank. Validity is stored as a bitset over
+//! Cartesian ranks with a per-word popcount prefix, so [`SearchSpace::index_of`]
+//! is two array reads plus one `popcnt` — no hashing, no allocation. For
+//! Cartesian products too large for a bitset, a `u64 → usize` hash map
+//! takes over (still allocation-free per lookup). Encoded configurations
+//! live in one row-major `Vec<u16>` (the SoA `flat` buffer), the single
+//! source of truth for decoding.
 
 use super::constraint::Constraint;
 use super::param::{TunableParam, Value};
+use crate::util::hash::FastMap;
 use crate::util::rng::Rng;
 use anyhow::{bail, Result};
-use crate::util::hash::FastMap;
 use std::collections::HashMap;
 
 /// Encoded configuration: per-dimension value indices.
 pub type Encoded = Vec<u16>;
+
+/// Largest Cartesian product served by the rank/select bitset; beyond
+/// this, `index_of` falls back to a packed-`u64` hash map. 2^26 ranks cost
+/// at most 8 MiB of bits + 4 MiB of prefix counts.
+const BITSET_MAX_RANKS: u128 = 1 << 26;
 
 /// Neighborhood definitions for local-search moves.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -25,6 +45,14 @@ pub enum Neighborhood {
     Adjacent,
 }
 
+/// Validity index over packed Cartesian ranks.
+enum RankIndex {
+    /// Bitset with per-word rank (popcount prefix) for O(1) select.
+    Bitset { words: Vec<u64>, prefix: Vec<u32> },
+    /// Fallback for Cartesian products past `BITSET_MAX_RANKS`.
+    Map(FastMap<u64, usize>),
+}
+
 /// A fully enumerated, constraint-filtered search space.
 ///
 /// Valid configurations are indexed `0..len()`; optimizers address
@@ -33,14 +61,16 @@ pub struct SearchSpace {
     pub name: String,
     pub params: Vec<TunableParam>,
     pub constraints: Vec<Constraint>,
-    valid: Vec<Encoded>,
-    /// Row-major flattened copy of `valid` (stride = ndim): contiguous
-    /// storage for the snap() distance scan, which is cache-miss bound on
-    /// the nested Vec layout.
+    /// Row-major SoA of all valid encoded configs (stride = ndim):
+    /// contiguous storage for decode and the snap() distance scan.
     flat: Vec<u16>,
-    index: FastMap<Encoded, usize>,
+    /// Packed Cartesian rank of each valid config (ascending).
+    ranks: Vec<u64>,
+    index: RankIndex,
     /// Per-dimension cardinalities.
     dims: Vec<usize>,
+    /// Mixed-radix strides: `strides[d] = Π dims[d+1..]`.
+    strides: Vec<u64>,
 }
 
 impl SearchSpace {
@@ -58,6 +88,19 @@ impl SearchSpace {
             bail!("too many parameters");
         }
         let dims: Vec<usize> = params.iter().map(|p| p.cardinality()).collect();
+        let cart: u128 = dims.iter().map(|&d| d as u128).product();
+        if cart > u64::MAX as u128 {
+            bail!(
+                "search space {name:?}: Cartesian product {cart} exceeds the \
+                 2^64 packed-rank limit"
+            );
+        }
+        let mut strides = vec![0u64; n];
+        let mut acc = 1u64;
+        for d in (0..n).rev() {
+            strides[d] = acc;
+            acc = acc.saturating_mul(dims[d] as u64);
+        }
         let name_to_dim: HashMap<&str, usize> = params
             .iter()
             .enumerate()
@@ -81,7 +124,8 @@ impl SearchSpace {
             by_depth[max_dim].push(c);
         }
 
-        let mut valid: Vec<Encoded> = Vec::new();
+        let mut flat: Vec<u16> = Vec::new();
+        let mut ranks: Vec<u64> = Vec::new();
         let mut cursor: Encoded = vec![0; n];
         // env closure over a prefix of assignments
         let mut depth = 0usize;
@@ -104,7 +148,14 @@ impl SearchSpace {
 
             if assignment_ok {
                 if depth + 1 == n {
-                    valid.push(cursor.clone());
+                    flat.extend_from_slice(&cursor);
+                    ranks.push(
+                        cursor
+                            .iter()
+                            .zip(&strides)
+                            .map(|(&v, &s)| v as u64 * s)
+                            .sum(),
+                    );
                 } else {
                     depth += 1;
                     cursor[depth] = 0;
@@ -125,31 +176,44 @@ impl SearchSpace {
             }
         }
 
-        let index: FastMap<Encoded, usize> = valid
-            .iter()
-            .cloned()
-            .enumerate()
-            .map(|(i, e)| (e, i))
-            .collect();
-        let flat: Vec<u16> = valid.iter().flatten().copied().collect();
+        // Lexicographic enumeration ⇒ ranks ascend, so the bitset's select
+        // (prefix popcount) recovers exactly the enumeration index.
+        debug_assert!(ranks.windows(2).all(|w| w[0] < w[1]));
+        let index = if cart <= BITSET_MAX_RANKS {
+            let nwords = (cart as usize + 63) / 64;
+            let mut words = vec![0u64; nwords.max(1)];
+            for &r in &ranks {
+                words[(r >> 6) as usize] |= 1u64 << (r & 63);
+            }
+            let mut prefix = Vec::with_capacity(words.len());
+            let mut seen = 0u32;
+            for &w in &words {
+                prefix.push(seen);
+                seen += w.count_ones();
+            }
+            RankIndex::Bitset { words, prefix }
+        } else {
+            RankIndex::Map(ranks.iter().enumerate().map(|(i, &r)| (r, i)).collect())
+        };
         Ok(SearchSpace {
             name: name.to_string(),
             params,
             constraints,
-            valid,
             flat,
+            ranks,
             index,
             dims,
+            strides,
         })
     }
 
     /// Number of valid configurations.
     pub fn len(&self) -> usize {
-        self.valid.len()
+        self.ranks.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.valid.is_empty()
+        self.ranks.is_empty()
     }
 
     /// Size of the unconstrained Cartesian product.
@@ -161,14 +225,76 @@ impl SearchSpace {
         &self.dims
     }
 
-    /// Encoded configuration at a valid index.
-    pub fn encoded(&self, idx: usize) -> &Encoded {
-        &self.valid[idx]
+    /// Encoded configuration at a valid index (slice into the SoA buffer).
+    pub fn encoded(&self, idx: usize) -> &[u16] {
+        let n = self.dims.len();
+        &self.flat[idx * n..(idx + 1) * n]
+    }
+
+    /// Packed Cartesian rank of a valid index.
+    #[inline]
+    pub fn rank_of(&self, idx: usize) -> u64 {
+        self.ranks[idx]
+    }
+
+    /// Pack an encoded configuration into its Cartesian rank; `None` if any
+    /// dimension is out of range (an out-of-range value must not alias
+    /// another configuration's rank).
+    #[inline]
+    pub fn pack(&self, enc: &[u16]) -> Option<u64> {
+        if enc.len() != self.dims.len() {
+            return None;
+        }
+        let mut rank = 0u64;
+        for (d, &v) in enc.iter().enumerate() {
+            if (v as usize) >= self.dims[d] {
+                return None;
+            }
+            rank += v as u64 * self.strides[d];
+        }
+        Some(rank)
+    }
+
+    /// Valid-config index of a packed Cartesian rank (None if invalid).
+    /// Two array reads + a popcount on the bitset path; no allocation.
+    #[inline]
+    pub fn index_of_rank(&self, rank: u64) -> Option<usize> {
+        match &self.index {
+            RankIndex::Bitset { words, prefix } => {
+                let w = (rank >> 6) as usize;
+                let bit = 1u64 << (rank & 63);
+                let word = *words.get(w)?;
+                if word & bit == 0 {
+                    None
+                } else {
+                    Some(prefix[w] as usize + (word & (bit - 1)).count_ones() as usize)
+                }
+            }
+            RankIndex::Map(m) => m.get(&rank).copied(),
+        }
+    }
+
+    /// Index of an encoded configuration (None if invalid).
+    #[inline]
+    pub fn index_of(&self, enc: &[u16]) -> Option<usize> {
+        self.index_of_rank(self.pack(enc)?)
+    }
+
+    /// Index of the configuration equal to `idx` with dimension `d` set to
+    /// `v` — a single stride-delta on the packed rank, no probe buffer.
+    #[inline]
+    pub fn with_dim(&self, idx: usize, d: usize, v: u16) -> Option<usize> {
+        if (v as usize) >= self.dims[d] {
+            return None;
+        }
+        let orig = self.encoded(idx)[d] as u64;
+        let rank = self.ranks[idx] - orig * self.strides[d] + v as u64 * self.strides[d];
+        self.index_of_rank(rank)
     }
 
     /// Decode to parameter values.
     pub fn values(&self, idx: usize) -> Vec<Value> {
-        self.valid[idx]
+        self.encoded(idx)
             .iter()
             .zip(&self.params)
             .map(|(&vi, p)| p.values[vi as usize].clone())
@@ -177,7 +303,7 @@ impl SearchSpace {
 
     /// name=value map for a configuration (for JSON output).
     pub fn named_values(&self, idx: usize) -> Vec<(String, Value)> {
-        self.valid[idx]
+        self.encoded(idx)
             .iter()
             .zip(&self.params)
             .map(|(&vi, p)| (p.name.clone(), p.values[vi as usize].clone()))
@@ -193,11 +319,6 @@ impl SearchSpace {
             .join(",")
     }
 
-    /// Index of an encoded configuration (None if invalid).
-    pub fn index_of(&self, enc: &Encoded) -> Option<usize> {
-        self.index.get(enc).copied()
-    }
-
     /// Uniform random valid configuration.
     pub fn random(&self, rng: &mut Rng) -> usize {
         rng.below(self.len())
@@ -208,46 +329,64 @@ impl SearchSpace {
         rng.sample_indices(self.len(), k.min(self.len()))
     }
 
-    /// Neighbor indices of a configuration under a neighborhood.
+    /// Visit the neighbor indices of a configuration under a neighborhood,
+    /// in dimension-major order, without allocating. Each candidate is one
+    /// stride-delta on the packed rank plus an `index_of_rank` check.
     ///
     /// Results are valid configurations only. For `Adjacent`, if neither
     /// ±1 of a dimension yields a valid config, that dimension contributes
     /// nothing (matching Kernel Tuner's 'strictly-adjacent' behavior).
-    pub fn neighbors(&self, idx: usize, hood: Neighborhood) -> Vec<usize> {
-        let enc = &self.valid[idx];
-        let mut out = Vec::new();
-        let mut probe = enc.clone();
+    pub fn for_each_neighbor(
+        &self,
+        idx: usize,
+        hood: Neighborhood,
+        mut visit: impl FnMut(usize),
+    ) {
+        let base = self.ranks[idx];
         for d in 0..self.dims.len() {
-            let orig = enc[d];
+            let orig = self.encoded(idx)[d] as u64;
+            let stride = self.strides[d];
+            // Rank with dimension d zeroed; candidates are floor + v*stride.
+            let floor = base - orig * stride;
             match hood {
                 Neighborhood::Hamming => {
-                    for v in 0..self.dims[d] as u16 {
+                    for v in 0..self.dims[d] as u64 {
                         if v == orig {
                             continue;
                         }
-                        probe[d] = v;
-                        if let Some(i) = self.index_of(&probe) {
-                            out.push(i);
+                        if let Some(i) = self.index_of_rank(floor + v * stride) {
+                            visit(i);
                         }
                     }
                 }
                 Neighborhood::Adjacent => {
                     if orig > 0 {
-                        probe[d] = orig - 1;
-                        if let Some(i) = self.index_of(&probe) {
-                            out.push(i);
+                        if let Some(i) = self.index_of_rank(floor + (orig - 1) * stride) {
+                            visit(i);
                         }
                     }
-                    if (orig as usize) + 1 < self.dims[d] {
-                        probe[d] = orig + 1;
-                        if let Some(i) = self.index_of(&probe) {
-                            out.push(i);
+                    if orig + 1 < self.dims[d] as u64 {
+                        if let Some(i) = self.index_of_rank(floor + (orig + 1) * stride) {
+                            visit(i);
                         }
                     }
                 }
             }
-            probe[d] = orig;
         }
+    }
+
+    /// Neighbor indices collected into a caller-owned buffer (cleared
+    /// first), so tight local-search loops can reuse one allocation.
+    pub fn neighbors_into(&self, idx: usize, hood: Neighborhood, out: &mut Vec<usize>) {
+        out.clear();
+        self.for_each_neighbor(idx, hood, |i| out.push(i));
+    }
+
+    /// Neighbor indices of a configuration (allocating convenience form of
+    /// [`SearchSpace::for_each_neighbor`]).
+    pub fn neighbors(&self, idx: usize, hood: Neighborhood) -> Vec<usize> {
+        let mut out = Vec::new();
+        self.neighbors_into(idx, hood, &mut out);
         out
     }
 
@@ -255,20 +394,19 @@ impl SearchSpace {
     /// neighborhood is empty (keeps stochastic optimizers moving).
     ///
     /// Hot path for annealing-type walks: O(1) rejection sampling (pick a
-    /// dimension, pick a different value, check validity) with a bounded
-    /// number of tries before falling back to full enumeration. Not
-    /// perfectly uniform over the neighborhood, but each valid neighbor
-    /// has positive probability — the property the walks need.
+    /// dimension, pick a different value, check validity via one packed
+    /// stride-delta) with a bounded number of tries before reservoir
+    /// sampling the enumerated neighborhood — no allocation either way.
+    /// Not perfectly uniform over the neighborhood, but each valid
+    /// neighbor has positive probability — the property the walks need.
     pub fn random_neighbor(&self, idx: usize, hood: Neighborhood, rng: &mut Rng) -> usize {
-        let enc = &self.valid[idx];
         let ndim = self.dims.len();
-        let mut probe = enc.clone();
         for _ in 0..16 {
             let d = rng.below(ndim);
             if self.dims[d] < 2 {
                 continue;
             }
-            let orig = enc[d];
+            let orig = self.encoded(idx)[d];
             let cand = match hood {
                 Neighborhood::Hamming => {
                     let mut v = rng.below(self.dims[d]) as u16;
@@ -288,44 +426,56 @@ impl SearchSpace {
                     }
                 }
             };
-            probe[d] = cand;
-            if let Some(i) = self.index_of(&probe) {
+            if let Some(i) = self.with_dim(idx, d, cand) {
                 return i;
             }
-            probe[d] = orig;
         }
-        // Rare: dense constraints around this point; enumerate.
-        let ns = self.neighbors(idx, hood);
-        if ns.is_empty() {
-            self.random(rng)
-        } else {
-            *rng.choose(&ns)
-        }
+        // Rare: dense constraints around this point; reservoir-sample the
+        // full neighborhood without materializing it.
+        let mut chosen = None;
+        let mut count = 0usize;
+        self.for_each_neighbor(idx, hood, |i| {
+            count += 1;
+            if rng.below(count) == 0 {
+                chosen = Some(i);
+            }
+        });
+        chosen.unwrap_or_else(|| self.random(rng))
     }
 
     /// Nearest-ish valid configuration to an arbitrary encoded point
     /// (used by continuous optimizers like PSO that propose off-lattice
     /// points).
     ///
-    /// Hot path (PSO snaps every particle move): round to the lattice and
-    /// accept if valid; otherwise pick the closest of 64 random valid
-    /// candidates by L1 distance (exact nearest would be O(|space|)).
+    /// Hot path (PSO snaps every particle move): round to the lattice —
+    /// packing the rank on the fly, no scratch buffer — and accept if
+    /// valid; otherwise pick the closest of 64 random valid candidates by
+    /// L1 distance over the SoA buffer (exact nearest would be
+    /// O(|space|)). A jittered local repair with rank probes was tried and
+    /// measured 2x slower: constraint patterns like divisibility are
+    /// rarely fixed by ±1 jitter.
+    ///
+    /// Panics on an empty search space (there is nothing valid to return).
     pub fn snap(&self, target: &[f64], rng: &mut Rng) -> usize {
+        assert!(
+            !self.is_empty(),
+            "snap() on empty search space {:?}",
+            self.name
+        );
         // Round to the lattice first; if valid, done.
-        let enc: Encoded = target
-            .iter()
-            .zip(&self.dims)
-            .map(|(&t, &d)| (t.round().clamp(0.0, (d - 1) as f64)) as u16)
-            .collect();
-        if let Some(i) = self.index_of(&enc) {
-            return i;
+        if target.len() == self.dims.len() {
+            let mut rank = 0u64;
+            for (d, &t) in target.iter().enumerate() {
+                // NaN clamps to NaN and casts to 0 — same rounding the
+                // old Vec-based path applied.
+                let v = t.round().clamp(0.0, (self.dims[d] - 1) as f64) as u64;
+                rank += v * self.strides[d];
+            }
+            if let Some(i) = self.index_of_rank(rank) {
+                return i;
+            }
         }
-        // Distance-biased random-candidate search over the flattened
-        // storage (contiguous u16 rows; the nested-Vec layout made this
-        // loop cache-miss bound). Distances use the already-rounded
-        // target in integer arithmetic. (A jittered local repair with
-        // hash probes was tried and measured 2x slower: constraint
-        // patterns like divisibility are rarely fixed by ±1 jitter.)
+        // Distance-biased random-candidate search over the flat SoA rows.
         let ndim = self.dims.len();
         let mut best = usize::MAX;
         let mut best_dist = f64::INFINITY;
@@ -343,6 +493,47 @@ impl SearchSpace {
                 best = cand;
             }
         }
+        if best == usize::MAX {
+            // Every candidate distance was NaN (NaN target): any valid
+            // config beats returning an out-of-range sentinel.
+            return self.random(rng);
+        }
+        best
+    }
+
+    /// Snap an encoded (possibly invalid) lattice point to a valid config:
+    /// the exact index when valid, else the closest of 64 random valid
+    /// candidates by integer L1 distance. Allocation-free variant of
+    /// [`SearchSpace::snap`] for integer proposals (GA children).
+    ///
+    /// Panics on an empty search space.
+    pub fn snap_encoded(&self, enc: &[u16], rng: &mut Rng) -> usize {
+        assert!(
+            !self.is_empty(),
+            "snap_encoded() on empty search space {:?}",
+            self.name
+        );
+        if let Some(i) = self.index_of(enc) {
+            return i;
+        }
+        let ndim = self.dims.len();
+        let mut best = usize::MAX;
+        let mut best_dist = u64::MAX;
+        let n = self.len();
+        for _ in 0..64.min(n) {
+            let cand = rng.below(n);
+            let row = &self.flat[cand * ndim..(cand + 1) * ndim];
+            let dist: u64 = row
+                .iter()
+                .zip(enc)
+                .map(|(&v, &t)| (v as i64 - t as i64).unsigned_abs())
+                .sum();
+            if dist < best_dist {
+                best_dist = dist;
+                best = cand;
+            }
+        }
+        debug_assert_ne!(best, usize::MAX);
         best
     }
 }
@@ -382,8 +573,36 @@ mod tests {
         let s = space_2d();
         for i in 0..s.len() {
             assert_eq!(s.index_of(s.encoded(i)), Some(i));
+            assert_eq!(s.index_of_rank(s.rank_of(i)), Some(i));
         }
-        assert_eq!(s.index_of(&vec![3, 2]), None); // (8,4) invalid
+        assert_eq!(s.index_of(&[3u16, 2]), None); // (8,4) invalid
+    }
+
+    #[test]
+    fn pack_rejects_out_of_range() {
+        let s = space_2d();
+        // Out-of-range dimension values must not alias another config.
+        assert_eq!(s.pack(&[0u16, 3]), None);
+        assert_eq!(s.index_of(&[0u16, 3]), None);
+        assert_eq!(s.index_of(&[4u16, 0]), None);
+        // Wrong arity misses rather than panicking.
+        assert_eq!(s.index_of(&[0u16]), None);
+        assert_eq!(s.index_of(&[0u16, 0, 0]), None);
+    }
+
+    #[test]
+    fn with_dim_matches_index_of() {
+        let s = space_2d();
+        for i in 0..s.len() {
+            for d in 0..s.dims().len() {
+                for v in 0..s.dims()[d] as u16 {
+                    let mut e = s.encoded(i).to_vec();
+                    e[d] = v;
+                    assert_eq!(s.with_dim(i, d, v), s.index_of(&e), "idx {i} d {d} v {v}");
+                }
+                assert_eq!(s.with_dim(i, d, s.dims()[d] as u16), None);
+            }
+        }
     }
 
     #[test]
@@ -416,7 +635,7 @@ mod tests {
     #[test]
     fn neighbors_hamming_and_adjacent() {
         let s = space_2d();
-        let idx = s.index_of(&vec![0, 0]).unwrap(); // (1,1)
+        let idx = s.index_of(&[0u16, 0]).unwrap(); // (1,1)
         let h = s.neighbors(idx, Neighborhood::Hamming);
         // change a: (2,1)(4,1)(8,1); change b: (1,2)(1,4) => 5
         assert_eq!(h.len(), 5);
@@ -428,6 +647,10 @@ mod tests {
             assert_ne!(n, idx);
             assert!(n < s.len());
         }
+        // Buffer reuse path agrees with the allocating path.
+        let mut buf = vec![999usize; 3];
+        s.neighbors_into(idx, Neighborhood::Hamming, &mut buf);
+        assert_eq!(buf, h);
     }
 
     #[test]
@@ -454,6 +677,50 @@ mod tests {
     }
 
     #[test]
+    fn snap_nan_target_still_valid() {
+        // Regression: a NaN component used to poison every candidate
+        // distance and leak usize::MAX out of snap().
+        let s = space_2d();
+        let mut rng = Rng::new(5);
+        for target in [
+            [f64::NAN, f64::NAN],
+            [f64::NAN, 1.0],
+            [f64::INFINITY, f64::NEG_INFINITY],
+        ] {
+            let i = s.snap(&target, &mut rng);
+            assert!(i < s.len(), "target {target:?} -> {i}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "empty search space")]
+    fn snap_on_empty_space_panics() {
+        // All configs violate the constraint -> empty (but buildable) space.
+        let s = SearchSpace::build(
+            "empty",
+            vec![TunableParam::new("a", vec![1i64, 2])],
+            vec![Constraint::parse("a > 10").unwrap()],
+        )
+        .unwrap();
+        assert!(s.is_empty());
+        let mut rng = Rng::new(1);
+        s.snap(&[0.0], &mut rng);
+    }
+
+    #[test]
+    fn snap_encoded_matches_snap_semantics() {
+        let s = space_2d();
+        let mut rng = Rng::new(9);
+        for i in 0..s.len() {
+            // Exact valid lattice point -> identity.
+            assert_eq!(s.snap_encoded(s.encoded(i), &mut rng), i);
+        }
+        // Invalid point still lands on a valid config.
+        let i = s.snap_encoded(&[3u16, 2], &mut rng);
+        assert!(i < s.len());
+    }
+
+    #[test]
     fn unknown_constraint_var_rejected() {
         let r = SearchSpace::build(
             "t",
@@ -466,7 +733,7 @@ mod tests {
     #[test]
     fn key_stable() {
         let s = space_2d();
-        let i = s.index_of(&vec![1, 2]).unwrap();
+        let i = s.index_of(&[1u16, 2]).unwrap();
         assert_eq!(s.key(i), "2,4");
     }
 }

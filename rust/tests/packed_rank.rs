@@ -1,0 +1,188 @@
+//! Equivalence properties for the packed-rank search-space engine: the
+//! mixed-radix rank index must be bit-for-bit interchangeable with the
+//! reference hash index it replaced — same `index_of` bijection, same
+//! `neighbors` sets (Hamming and Adjacent, including order), and `snap`
+//! must always land on a valid configuration. Checked on all seed
+//! kernels' spaces plus randomized constraint spaces.
+
+use tunetuner::kernels;
+use tunetuner::searchspace::{Constraint, Neighborhood, SearchSpace, TunableParam};
+use tunetuner::util::hash::FastMap;
+use tunetuner::util::rng::Rng;
+
+/// Reference config→index map built the way the old engine did it:
+/// a hash map keyed by the full encoded vector.
+fn reference_index(space: &SearchSpace) -> FastMap<Vec<u16>, usize> {
+    (0..space.len())
+        .map(|i| (space.encoded(i).to_vec(), i))
+        .collect()
+}
+
+/// Reference neighbors built the way the old engine did it: clone a probe
+/// vector, mutate one dimension, and look it up in the hash index.
+fn reference_neighbors(
+    space: &SearchSpace,
+    index: &FastMap<Vec<u16>, usize>,
+    idx: usize,
+    hood: Neighborhood,
+) -> Vec<usize> {
+    let enc = space.encoded(idx).to_vec();
+    let dims = space.dims();
+    let mut out = Vec::new();
+    let mut probe = enc.clone();
+    for d in 0..dims.len() {
+        let orig = enc[d];
+        match hood {
+            Neighborhood::Hamming => {
+                for v in 0..dims[d] as u16 {
+                    if v == orig {
+                        continue;
+                    }
+                    probe[d] = v;
+                    if let Some(&i) = index.get(&probe) {
+                        out.push(i);
+                    }
+                }
+            }
+            Neighborhood::Adjacent => {
+                if orig > 0 {
+                    probe[d] = orig - 1;
+                    if let Some(&i) = index.get(&probe) {
+                        out.push(i);
+                    }
+                }
+                if (orig as usize) + 1 < dims[d] {
+                    probe[d] = orig + 1;
+                    if let Some(&i) = index.get(&probe) {
+                        out.push(i);
+                    }
+                }
+            }
+        }
+        probe[d] = orig;
+    }
+    out
+}
+
+/// Step through indices so large spaces stay cheap but every space is
+/// covered end to end.
+fn probe_indices(len: usize) -> impl Iterator<Item = usize> {
+    let step = 1 + len / 200;
+    (0..len).step_by(step)
+}
+
+fn check_space(space: &SearchSpace, label: &str) {
+    let reference = reference_index(space);
+    assert_eq!(reference.len(), space.len(), "{label}: index not a bijection");
+
+    let mut rng = Rng::new(0x5EED ^ space.len() as u64);
+    for i in probe_indices(space.len()) {
+        let enc = space.encoded(i).to_vec();
+        // index_of roundtrip matches the reference hash index exactly.
+        assert_eq!(space.index_of(&enc), Some(i), "{label}: roundtrip {i}");
+        assert_eq!(reference.get(&enc), Some(&i), "{label}: reference {i}");
+        assert_eq!(
+            space.index_of_rank(space.rank_of(i)),
+            Some(i),
+            "{label}: rank roundtrip {i}"
+        );
+
+        // Mutated probes agree with the reference on hits AND misses.
+        for d in 0..space.dims().len() {
+            let mut probe = enc.clone();
+            probe[d] = (probe[d] + 1) % space.dims()[d] as u16;
+            assert_eq!(
+                space.index_of(&probe),
+                reference.get(&probe).copied(),
+                "{label}: probe {i} dim {d}"
+            );
+        }
+
+        // Neighbor sets are identical (order included) for both hoods.
+        for hood in [Neighborhood::Hamming, Neighborhood::Adjacent] {
+            let got = space.neighbors(i, hood);
+            let want = reference_neighbors(space, &reference, i, hood);
+            assert_eq!(got, want, "{label}: neighbors {i} {hood:?}");
+        }
+
+        // snap on jittered lattice points returns valid indices, and is
+        // exact on the unjittered point.
+        let t: Vec<f64> = enc.iter().map(|&v| v as f64).collect();
+        assert_eq!(space.snap(&t, &mut rng), i, "{label}: snap exact {i}");
+        let jittered: Vec<f64> = t
+            .iter()
+            .map(|&v| v + rng.range_f64(-1.5, 1.5))
+            .collect();
+        let s = space.snap(&jittered, &mut rng);
+        assert!(s < space.len(), "{label}: snap jitter {i} -> {s}");
+        let se = space.snap_encoded(&enc, &mut rng);
+        assert_eq!(se, i, "{label}: snap_encoded exact {i}");
+    }
+
+    // Out-of-range encodings never resolve (no rank aliasing).
+    if !space.is_empty() {
+        let mut probe = space.encoded(0).to_vec();
+        for d in 0..space.dims().len() {
+            let orig = probe[d];
+            probe[d] = space.dims()[d] as u16;
+            assert_eq!(space.index_of(&probe), None, "{label}: oob dim {d}");
+            probe[d] = orig;
+        }
+    }
+}
+
+#[test]
+fn packed_rank_matches_reference_on_seed_kernels() {
+    for name in ["synthetic", "hotspot", "dedispersion", "convolution", "gemm"] {
+        let kernel = kernels::kernel_by_name(name).unwrap();
+        check_space(kernel.space(), name);
+    }
+}
+
+#[test]
+fn packed_rank_matches_reference_on_random_spaces() {
+    let mut rng = Rng::new(0xA11CE);
+    for case in 0..25 {
+        let ndim = 2 + rng.below(4);
+        let mut params = Vec::new();
+        for d in 0..ndim {
+            let card = 2 + rng.below(6);
+            let values: Vec<i64> = (0..card)
+                .map(|i| ((i + 1) * (1 << rng.below(3))) as i64)
+                .collect();
+            params.push(TunableParam::new(&format!("p{d}"), values));
+        }
+        let bound = 1 << (3 + rng.below(5));
+        let constraints =
+            vec![Constraint::parse(&format!("p0 * p1 <= {bound}")).unwrap()];
+        let space = match SearchSpace::build("prop", params, constraints) {
+            Ok(s) if !s.is_empty() => s,
+            _ => continue,
+        };
+        check_space(&space, &format!("random case {case}"));
+    }
+}
+
+#[test]
+fn random_neighbor_stays_in_neighborhood() {
+    // random_neighbor must return either a true neighbor or (only when the
+    // neighborhood is empty) some valid config.
+    let kernel = kernels::kernel_by_name("synthetic").unwrap();
+    let space = kernel.space();
+    let reference = reference_index(space);
+    let mut rng = Rng::new(42);
+    for _ in 0..500 {
+        let idx = space.random(&mut rng);
+        for hood in [Neighborhood::Hamming, Neighborhood::Adjacent] {
+            let n = space.random_neighbor(idx, hood, &mut rng);
+            assert!(n < space.len());
+            let hood_set = reference_neighbors(space, &reference, idx, hood);
+            if !hood_set.is_empty() {
+                assert!(
+                    hood_set.contains(&n),
+                    "{n} not a {hood:?} neighbor of {idx}"
+                );
+            }
+        }
+    }
+}
