@@ -13,7 +13,7 @@ use anyhow::Result;
 use std::sync::Arc;
 use tunetuner::dataset::hub::{Hub, HUB_SEED};
 use tunetuner::gpu::specs::{TEST_DEVICES, TRAIN_DEVICES};
-use tunetuner::hypertuning::{exhaustive_tuning, limited_space, LIMITED_ALGOS};
+use tunetuner::hypertuning::{exhaustive_tuning, limited_algos, limited_space};
 use tunetuner::kernels;
 use tunetuner::methodology::{evaluate_algorithm, SpaceEval};
 use tunetuner::optimizers::HyperParams;
@@ -71,7 +71,7 @@ fn main() -> Result<()> {
     let mut sim_wallclock = 0.0;
     let mut live_estimate = 0.0;
     let budget_sum: f64 = train.iter().map(|s| s.budget_seconds).sum();
-    for algo in LIMITED_ALGOS {
+    for algo in limited_algos() {
         let hp_space = limited_space(algo)?;
         let results =
             exhaustive_tuning(algo, &hp_space, "limited", &train, tuning_repeats, 42)?;

@@ -20,6 +20,15 @@
 //! `TUNETUNER_BENCH_SMOKE=1` for a fast smoke pass (CI): fewer iterations,
 //! same coverage.
 
+// Same style-lint policy as the library crate (see rust/src/lib.rs);
+// integration tests and benches are separate crates and do not inherit it.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::many_single_char_names,
+    clippy::type_complexity
+)]
+
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 use tunetuner::dataset::{bruteforce, hub::Hub};
@@ -213,6 +222,32 @@ fn main() {
                 );
             }
             std::hint::black_box(cur);
+        });
+        b.throughput("space/neighbors_csr/gemm-10k", 10_000, || {
+            // CSR slice borrows (graph built once, amortized): the path the
+            // shared local-search engine walks every descent pass.
+            let hood = tunetuner::searchspace::Neighborhood::Adjacent;
+            let mut acc = 0usize;
+            let mut cur = 0usize;
+            for _ in 0..10_000usize {
+                let ns = space.neighbors(cur, hood);
+                acc += ns.len();
+                cur = ns.first().map(|&x| x as usize).unwrap_or((cur + 1) % n);
+            }
+            std::hint::black_box(acc);
+        });
+        b.throughput("space/neighbors_probe/gemm-10k", 10_000, || {
+            // Probing visitor on the same walk, for the before/after delta.
+            let hood = tunetuner::searchspace::Neighborhood::Adjacent;
+            let mut buf = Vec::new();
+            let mut acc = 0usize;
+            let mut cur = 0usize;
+            for _ in 0..10_000usize {
+                space.neighbors_into(cur, hood, &mut buf);
+                acc += buf.len();
+                cur = buf.first().copied().unwrap_or((cur + 1) % n);
+            }
+            std::hint::black_box(acc);
         });
         b.throughput("space/snap/gemm-10k", 10_000, || {
             let mut rng = Rng::new(9);

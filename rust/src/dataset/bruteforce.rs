@@ -27,7 +27,13 @@ pub fn bruteforce(runner: &mut LiveRunner) -> Result<CacheData> {
     let kernel = runner.kernel();
     Ok(CacheData {
         kernel: kernel.name.to_string(),
-        device: runner.label().split('@').nth(1).unwrap_or("?").trim_end_matches(" live").to_string(),
+        device: runner
+            .label()
+            .split('@')
+            .nth(1)
+            .unwrap_or("?")
+            .trim_end_matches(" live")
+            .to_string(),
         problem: kernel.problem.clone(),
         space_seed: runner.space_seed,
         observations_per_config: runner.observations,

@@ -166,11 +166,11 @@ impl Ctx {
         let path = self
             .results_dir
             .join(format!("hypertuning_{algo}_limited_{}.json.gz", self.scale_name));
-        let results = if path.exists() {
-            exhaustive::HyperTuningResults::load(&path)?
+        let hp_space = hypertuning::limited_space(algo)?;
+        let results = if let Some(r) = load_if_current(&path, &hp_space)? {
+            r
         } else {
             let train = self.train_spaces()?;
-            let hp_space = hypertuning::limited_space(algo)?;
             crate::log_info!(
                 "exhaustive hypertuning {algo}: {} configs x {} spaces x {} repeats",
                 hp_space.len(),
@@ -203,11 +203,11 @@ impl Ctx {
         let path = self
             .results_dir
             .join(format!("hypertuning_{algo}_extended_{}.json.gz", self.scale_name));
-        let results = if path.exists() {
-            exhaustive::HyperTuningResults::load(&path)?
+        let hp_space = Arc::new(hypertuning::extended_space(algo)?);
+        let results = if let Some(r) = load_if_current(&path, &hp_space)? {
+            r
         } else {
             let train = self.train_spaces()?;
-            let hp_space = Arc::new(hypertuning::extended_space(algo)?);
             crate::log_info!(
                 "extended meta-tuning {algo}: {} configs, budget {} evaluations",
                 hp_space.len(),
@@ -239,6 +239,7 @@ impl Ctx {
             let r = exhaustive::HyperTuningResults {
                 algo: algo.to_string(),
                 space_kind: "extended".into(),
+                space_key: exhaustive::space_fingerprint(&hp_space),
                 repeats: self.scale.tuning_repeats,
                 seed: self.seed,
                 simulated_seconds: train_budget
@@ -253,5 +254,28 @@ impl Ctx {
         let arc = Arc::new(results);
         self.hyper.lock().unwrap().insert(key, Arc::clone(&arc));
         Ok(arc)
+    }
+}
+
+/// Load persisted hypertuning results only when their space fingerprint
+/// matches the current schema-derived space. A stale (or pre-fingerprint)
+/// file triggers recomputation instead of silently misdecoding its
+/// `config_idx` values against a changed grid.
+fn load_if_current(
+    path: &std::path::Path,
+    hp_space: &crate::searchspace::SearchSpace,
+) -> Result<Option<exhaustive::HyperTuningResults>> {
+    if !path.exists() {
+        return Ok(None);
+    }
+    let r = exhaustive::HyperTuningResults::load(path)?;
+    if r.space_key == exhaustive::space_fingerprint(hp_space) {
+        Ok(Some(r))
+    } else {
+        crate::log_warn!(
+            "stale hypertuning results at {} (hyperparameter space changed); recomputing",
+            path.display()
+        );
+        Ok(None)
     }
 }

@@ -6,7 +6,7 @@
 //! than simulated annealing.
 
 use super::Ctx;
-use crate::hypertuning::LIMITED_ALGOS;
+use crate::hypertuning::limited_algos;
 use crate::util::stats;
 use anyhow::Result;
 
@@ -14,7 +14,7 @@ pub fn run(ctx: &Ctx) -> Result<()> {
     let mut dists: Vec<(String, Vec<f64>)> = Vec::new();
     let mut spread_sum = 0.0;
     let mut summary = String::new();
-    for algo in LIMITED_ALGOS {
+    for algo in limited_algos() {
         let results = ctx.limited_results(algo)?;
         let scores = results.scores();
         let spread = stats::max(&scores) - stats::min(&scores);
@@ -32,7 +32,7 @@ pub fn run(ctx: &Ctx) -> Result<()> {
     }
     summary.push_str(&format!(
         "average best-worst difference: {:.3} (paper: 0.865)\n",
-        spread_sum / LIMITED_ALGOS.len() as f64
+        spread_sum / limited_algos().len() as f64
     ));
     let report = ctx.report("fig2");
     report.violins(

@@ -4,7 +4,7 @@
 //! generalization check.
 
 use super::Ctx;
-use crate::hypertuning::{limited_space, LIMITED_ALGOS};
+use crate::hypertuning::{limited_algos, limited_space};
 use crate::methodology::evaluate_algorithm;
 use crate::optimizers::HyperParams;
 use crate::util::table::Table;
@@ -19,7 +19,7 @@ pub fn run(ctx: &Ctx) -> Result<()> {
         &["Algorithm", "Config", "Tuning", "Train (re-exec)", "Test"],
     );
     let mut gaps = Vec::new();
-    for algo in LIMITED_ALGOS {
+    for algo in limited_algos() {
         let results = ctx.limited_results(algo)?;
         let space = limited_space(algo)?;
         for (label, r) in [("best", results.best()), ("worst", results.worst())] {

@@ -4,7 +4,7 @@
 //! is general rather than over-fitted to a few spaces.
 
 use super::Ctx;
-use crate::hypertuning::{limited_space, LIMITED_ALGOS};
+use crate::hypertuning::{limited_algos, limited_space};
 use crate::methodology::evaluate_algorithm;
 use crate::optimizers::HyperParams;
 use crate::util::table::Table;
@@ -16,7 +16,7 @@ pub fn run(ctx: &Ctx) -> Result<()> {
     let labels: Vec<String> = all.iter().map(|s| s.label.clone()).collect();
     // Build a wide table: per space, worst and best mean score per algo.
     let mut header: Vec<String> = vec!["Space".into(), "Set".into()];
-    for algo in LIMITED_ALGOS {
+    for algo in limited_algos() {
         header.push(format!("{algo}:worst"));
         header.push(format!("{algo}:best"));
     }
@@ -27,7 +27,7 @@ pub fn run(ctx: &Ctx) -> Result<()> {
     );
 
     let mut per_algo: Vec<(Vec<f64>, Vec<f64>)> = Vec::new();
-    for algo in LIMITED_ALGOS {
+    for algo in limited_algos() {
         let results = ctx.limited_results(algo)?;
         let space = limited_space(algo)?;
         let worst_hp = HyperParams::from_space_config(&space, results.worst().config_idx);

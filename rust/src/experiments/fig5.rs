@@ -5,7 +5,7 @@
 //! per-algorithm deltas 0.170 / 0.192 / 0.473 / 0.149).
 
 use super::Ctx;
-use crate::hypertuning::{limited_space, LIMITED_ALGOS};
+use crate::hypertuning::{limited_algos, limited_space};
 use crate::methodology::evaluate_algorithm;
 use crate::optimizers::HyperParams;
 use crate::util::plot::Series;
@@ -18,7 +18,7 @@ pub fn run(ctx: &Ctx) -> Result<()> {
     let mut summary = String::new();
     let mut deltas = Vec::new();
     let mut pct_improvements = Vec::new();
-    for algo in LIMITED_ALGOS {
+    for algo in limited_algos() {
         let results = ctx.limited_results(algo)?;
         let space = limited_space(algo)?;
         let mean_hp =

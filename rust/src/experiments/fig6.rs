@@ -8,7 +8,7 @@
 //! well after a startup cost, average score 0.223.
 
 use super::Ctx;
-use crate::hypertuning::{limited_space, meta, LIMITED_ALGOS};
+use crate::hypertuning::{limited_algos, limited_space, meta};
 use crate::methodology::{evaluate_algorithm, SpaceEval};
 use crate::optimizers::HyperParams;
 use crate::util::plot::Series;
@@ -18,7 +18,7 @@ use std::sync::Arc;
 pub fn run(ctx: &Ctx) -> Result<()> {
     // Build the meta-level spaces: one per target algorithm.
     let mut meta_spaces = Vec::new();
-    for algo in LIMITED_ALGOS {
+    for algo in limited_algos() {
         let results = ctx.limited_results(algo)?;
         let hp_space = Arc::new(limited_space(algo)?);
         let cache = Arc::new(meta::meta_cache_from_results(&results, &hp_space));
@@ -33,7 +33,7 @@ pub fn run(ctx: &Ctx) -> Result<()> {
     let mut series = Vec::new();
     let mut summary = String::new();
     let mut scores = Vec::new();
-    for meta_algo in LIMITED_ALGOS {
+    for meta_algo in limited_algos() {
         // Use the tuned-optimal hyperparameters of the meta-strategy.
         let results = ctx.limited_results(meta_algo)?;
         let space = limited_space(meta_algo)?;

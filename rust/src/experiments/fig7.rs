@@ -4,7 +4,7 @@
 //! spaces.
 
 use super::Ctx;
-use crate::hypertuning::{extended_space, limited_space, EXTENDED_ALGOS};
+use crate::hypertuning::{extended_algos, extended_space, limited_space};
 use crate::methodology::evaluate_algorithm;
 use crate::optimizers::HyperParams;
 use crate::util::table::Table;
@@ -14,7 +14,7 @@ pub fn run(ctx: &Ctx) -> Result<()> {
     let all = ctx.all_spaces()?;
     let reps = ctx.scale.eval_repeats;
     let mut header: Vec<String> = vec!["Space".into(), "Set".into()];
-    for algo in EXTENDED_ALGOS {
+    for algo in extended_algos() {
         header.push(format!("{algo}:avg-lim"));
         header.push(format!("{algo}:opt-ext"));
     }
@@ -24,7 +24,7 @@ pub fn run(ctx: &Ctx) -> Result<()> {
         &header_refs,
     );
     let mut per_algo = Vec::new();
-    for algo in EXTENDED_ALGOS {
+    for algo in extended_algos() {
         let limited = ctx.limited_results(algo)?;
         let extended = ctx.extended_results(algo)?;
         let lim_space = limited_space(algo)?;

@@ -4,7 +4,7 @@
 //! configuration (paper: 204.7% overall, 210.8% on the test set).
 
 use super::Ctx;
-use crate::hypertuning::{extended_space, limited_space, EXTENDED_ALGOS};
+use crate::hypertuning::{extended_algos, extended_space, limited_space};
 use crate::methodology::evaluate_algorithm;
 use crate::optimizers::HyperParams;
 use crate::util::plot::Series;
@@ -19,7 +19,7 @@ pub fn run(ctx: &Ctx) -> Result<()> {
     let mut pct_all = Vec::new();
     let mut pct_test = Vec::new();
     let mut deltas = Vec::new();
-    for algo in EXTENDED_ALGOS {
+    for algo in extended_algos() {
         let limited = ctx.limited_results(algo)?;
         let extended = ctx.extended_results(algo)?;
         let lim_space = limited_space(algo)?;

@@ -7,7 +7,7 @@
 //! hours simulated, a ~130x speedup.
 
 use super::Ctx;
-use crate::hypertuning::{limited_space, LIMITED_ALGOS};
+use crate::hypertuning::{limited_algos, limited_space};
 use crate::util::table::Table;
 use anyhow::Result;
 
@@ -20,7 +20,7 @@ pub fn run(ctx: &Ctx) -> Result<()> {
     );
     let mut live_total = 0.0;
     let mut sim_total = 0.0;
-    for algo in LIMITED_ALGOS {
+    for algo in limited_algos() {
         let results = ctx.limited_results(algo)?;
         let n_configs = limited_space(algo)?.len();
         let live_seconds = budget_sum * n_configs as f64 * results.repeats as f64;

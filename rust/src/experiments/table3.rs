@@ -4,7 +4,7 @@
 //! campaign on the twelve training spaces.
 
 use super::Ctx;
-use crate::hypertuning::{limited_space, LIMITED_ALGOS};
+use crate::hypertuning::{limited_algos, limited_space};
 use crate::util::table::Table;
 use anyhow::Result;
 
@@ -13,7 +13,7 @@ pub fn run(ctx: &Ctx) -> Result<()> {
         "Table III: hyperparameter values; *optimal*, [closest to mean]",
         &["Algorithm", "Hyperparameter", "Values"],
     );
-    for algo in LIMITED_ALGOS {
+    for algo in limited_algos() {
         let results = ctx.limited_results(algo)?;
         let space = limited_space(algo)?;
         let best = space.named_values(results.best().config_idx);
@@ -45,7 +45,7 @@ pub fn run(ctx: &Ctx) -> Result<()> {
     report.table(&table)?;
 
     let mut lines = String::new();
-    for algo in LIMITED_ALGOS {
+    for algo in limited_algos() {
         let results = ctx.limited_results(algo)?;
         lines.push_str(&format!(
             "{algo}: best score {:.3} ({}), worst {:.3}, mean-config {:.3}; campaign {:.1}s wall-clock\n",

@@ -3,7 +3,7 @@
 //! here budget-limited by `--scale`).
 
 use super::Ctx;
-use crate::hypertuning::{extended_space, EXTENDED_ALGOS};
+use crate::hypertuning::{extended_algos, extended_space};
 use crate::util::table::Table;
 use anyhow::Result;
 
@@ -13,7 +13,7 @@ pub fn run(ctx: &Ctx) -> Result<()> {
         &["Algorithm", "Hyperparameter", "Range", "Optimal"],
     );
     let mut summary = String::new();
-    for algo in EXTENDED_ALGOS {
+    for algo in extended_algos() {
         let results = ctx.extended_results(algo)?;
         let space = extended_space(algo)?;
         let best = space.named_values(results.best().config_idx);

@@ -6,6 +6,11 @@
 //! Table III spaces this is e.g. 108 configs × 25 repeats × 12 spaces =
 //! 32 400 optimization runs for the genetic algorithm — tractable only in
 //! simulation mode.
+//!
+//! The spaces come schema-derived from the optimizer registry
+//! ([`super::space`]), so every configuration a campaign evaluates is
+//! schema-valid by construction — `optimizers::create` hard-rejects
+//! anything else.
 
 use super::space;
 use crate::methodology::{evaluate_algorithm, SpaceEval};
@@ -26,12 +31,40 @@ pub struct HyperResult {
     pub score: f64,
 }
 
+/// Stable fingerprint of a hyperparameter space's structure (parameter
+/// names and exact value grids, plus the enumerated size): persisted with
+/// campaign results so a later schema/grid change invalidates stale
+/// caches instead of silently misdecoding their `config_idx` values
+/// against the new space.
+pub fn space_fingerprint(space: &crate::searchspace::SearchSpace) -> String {
+    // FNV-1a over the parameter names and rendered value keys.
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |s: &str| {
+        for &b in s.as_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0100_0000_01b3);
+        }
+        h ^= 0x1f;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    };
+    for p in &space.params {
+        eat(&p.name);
+        for v in &p.values {
+            eat(&v.key());
+        }
+    }
+    format!("{h:016x}-{}", space.len())
+}
+
 /// The outcome of a hyperparameter tuning campaign.
 #[derive(Clone, Debug)]
 pub struct HyperTuningResults {
     pub algo: String,
     /// "limited" (Table III) or "extended" (Table IV).
     pub space_kind: String,
+    /// [`space_fingerprint`] of the space the campaign ran on (empty in
+    /// files written before fingerprinting existed — treated as stale).
+    pub space_key: String,
     pub repeats: usize,
     pub seed: u64,
     /// One entry per evaluated configuration (exhaustive: all of them).
@@ -129,6 +162,7 @@ impl HyperTuningResults {
         j.set("schema", "tunetuner-hypertuning".into())
             .set("algo", self.algo.as_str().into())
             .set("space_kind", self.space_kind.as_str().into())
+            .set("space_key", self.space_key.as_str().into())
             .set("repeats", self.repeats.into())
             .set("seed", (self.seed as f64).into())
             .set("wallclock_seconds", self.wallclock_seconds.into())
@@ -171,6 +205,11 @@ impl HyperTuningResults {
                 .get("space_kind")
                 .and_then(|v| v.as_str())
                 .unwrap_or("limited")
+                .to_string(),
+            space_key: j
+                .get("space_key")
+                .and_then(|v| v.as_str())
+                .unwrap_or_default()
                 .to_string(),
             repeats: j.get("repeats").and_then(|v| v.as_usize()).unwrap_or(0),
             seed: j.get("seed").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
@@ -230,6 +269,7 @@ pub fn exhaustive_tuning(
     Ok(HyperTuningResults {
         algo: algo.to_string(),
         space_kind: space_kind.to_string(),
+        space_key: space_fingerprint(hp_space),
         repeats,
         seed,
         results,
@@ -282,6 +322,18 @@ mod tests {
         assert!(r.best().score >= r.most_average().score);
         assert!(r.most_average().score >= r.worst().score);
         assert!(r.simulated_seconds > r.wallclock_seconds * 10.0);
+        assert_eq!(r.space_key, space_fingerprint(&hp_space));
+    }
+
+    #[test]
+    fn space_fingerprint_stable_and_discriminating() {
+        let pso = space_fingerprint(&space::limited_space("pso").unwrap());
+        let pso2 = space_fingerprint(&space::limited_space("pso").unwrap());
+        let sa = space_fingerprint(&space::limited_space("simulated_annealing").unwrap());
+        let sa_ext = space_fingerprint(&space::extended_space("simulated_annealing").unwrap());
+        assert_eq!(pso, pso2);
+        assert_ne!(pso, sa);
+        assert_ne!(sa, sa_ext);
     }
 
     #[test]
@@ -289,6 +341,7 @@ mod tests {
         let r = HyperTuningResults {
             algo: "pso".into(),
             space_kind: "limited".into(),
+            space_key: "fp-test".into(),
             repeats: 25,
             seed: 9,
             results: vec![
@@ -311,6 +364,7 @@ mod tests {
         r.save(&path).unwrap();
         let back = HyperTuningResults::load(&path).unwrap();
         assert_eq!(back.algo, "pso");
+        assert_eq!(back.space_key, "fp-test");
         assert_eq!(back.results.len(), 2);
         assert_eq!(back.best().score, 0.25);
         assert_eq!(back.worst().hp_key, "c1=2");
@@ -324,6 +378,7 @@ mod tests {
         let r = HyperTuningResults {
             algo: "pso".into(),
             space_kind: "limited".into(),
+            space_key: String::new(),
             repeats: 1,
             seed: 0,
             results: vec![

@@ -183,12 +183,38 @@ mod tests {
         assert!(best <= 1.5);
     }
 
+    /// A meta-tuning replay must be bit-reproducible: same seed, same
+    /// hyperparameter-evaluation history (config indices AND scores),
+    /// regardless of the thread scheduling inside `evaluate_algorithm`.
+    #[test]
+    fn meta_runner_replays_deterministically() {
+        let hp_space = Arc::new(limited_space("simulated_annealing").unwrap());
+        let run = || {
+            let mut meta =
+                MetaRunner::new("simulated_annealing", Arc::clone(&hp_space), train(), 2, 9);
+            let mut tuning = Tuning::new(&mut meta, Budget::evals(5));
+            let opt = optimizers::create("random_search", &HyperParams::new()).unwrap();
+            let mut rng = Rng::new(3);
+            opt.run(&mut tuning, &mut rng);
+            drop(tuning);
+            meta.history
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.len(), 5);
+        for ((ia, sa), (ib, sb)) in a.iter().zip(&b) {
+            assert_eq!(ia, ib);
+            assert_eq!(sa.to_bits(), sb.to_bits(), "score drift at config {ia}");
+        }
+    }
+
     #[test]
     fn replay_cache_matches_results() {
         let hp_space = limited_space("dual_annealing").unwrap();
         let results = HyperTuningResults {
             algo: "dual_annealing".into(),
             space_kind: "limited".into(),
+            space_key: String::new(),
             repeats: 25,
             seed: 1,
             results: (0..hp_space.len())

@@ -4,7 +4,9 @@
 //! * [`space`] — the hyperparameter search spaces of Table III (limited,
 //!   exhaustively enumerable) and Table IV (extended, for meta-strategy
 //!   tuning), expressed with the *same* search-space engine the kernel
-//!   tuner uses — the paper's machinery reuse.
+//!   tuner uses — the paper's machinery reuse. The spaces are derived
+//!   from the typed hyperparameter schemas each optimizer declares in
+//!   [`crate::optimizers::registry`], not hand-written.
 //! * [`exhaustive`] — exhaustive hyperparameter tuning: every
 //!   hyperparameter configuration evaluated with repeated simulated runs
 //!   across the training spaces; results persisted for reuse.
@@ -22,4 +24,4 @@ pub mod sensitivity;
 
 pub use exhaustive::{exhaustive_tuning, HyperResult, HyperTuningResults};
 pub use meta::{meta_cache_from_results, MetaRunner};
-pub use space::{extended_space, limited_space, EXTENDED_ALGOS, LIMITED_ALGOS};
+pub use space::{extended_algos, extended_space, limited_algos, limited_space};

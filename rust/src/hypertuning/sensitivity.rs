@@ -4,7 +4,8 @@
 //! configuration scores by that hyperparameter's value and test whether
 //! the groups differ: the non-parametric Kruskal–Wallis H test plus a
 //! mutual-information score. The paper used exactly this screen to drop
-//! PSO's `W` ("no meaningful effect").
+//! PSO's `W` ("no meaningful effect") — which is why PSO's schema
+//! declares `w` typed and defaulted but with no Table III/IV grid.
 
 use super::exhaustive::HyperTuningResults;
 use crate::searchspace::SearchSpace;
@@ -86,6 +87,7 @@ mod tests {
         let r = HyperTuningResults {
             algo: "test".into(),
             space_kind: "limited".into(),
+            space_key: String::new(),
             repeats: 1,
             seed: 0,
             results,

@@ -1,145 +1,99 @@
-//! The hyperparameter search spaces of Tables III and IV.
+//! The hyperparameter search spaces of Tables III and IV — *derived* from
+//! the optimizer registry.
 //!
 //! Hyperparameter spaces are ordinary [`SearchSpace`]s — the same engine
 //! that enumerates kernel configurations enumerates hyperparameter
 //! configurations, which is exactly what lets Kernel Tuner's optimizers be
 //! reused as meta-strategies.
+//!
+//! The spaces are no longer hand-written tables: every optimizer declares
+//! its hyperparameters as a typed schema
+//! ([`crate::optimizers::HyperSchema`]) with `limited` (Table III) and
+//! `extended` (Table IV) value grids, and this module assembles those
+//! grids into search spaces. The registry is therefore the single source
+//! of truth — a schema edit changes the tables, the validation, and the
+//! docs together. The golden tests below pin the derived Table III
+//! spaces byte-identical to the previous hand-written tables; the
+//! Table IV float grids *intentionally* differ from the pre-registry
+//! code where the old accumulating `float_range` misgenerated them
+//! (most visibly simulated annealing's `T_min`, whose smallest value
+//! came out as 0.0 instead of 0.0001) — the goldens encode the fixed,
+//! index-generated semantics.
 
+use crate::optimizers;
 use crate::searchspace::{SearchSpace, TunableParam, Value};
 use anyhow::{bail, Result};
 
-/// Algorithms with a limited (Table III) hyperparameter space.
-pub const LIMITED_ALGOS: [&str; 4] = [
-    "dual_annealing",
-    "genetic_algorithm",
-    "pso",
-    "simulated_annealing",
-];
-
-/// Algorithms with an extended (Table IV) space — those with numerical
-/// hyperparameters (dual annealing's single categorical is excluded, as in
-/// the paper).
-pub const EXTENDED_ALGOS: [&str; 3] = ["genetic_algorithm", "pso", "simulated_annealing"];
-
-fn floats(values: &[f64]) -> Vec<Value> {
-    values.iter().map(|&v| Value::Float(v)).collect()
+/// The paper's Table III algorithms, in Table III order. Scoped to the
+/// `Descriptor::paper` flag so extra optimizers can declare grids (and
+/// get spaces via [`limited_space`]) without joining the paper drivers.
+pub fn limited_algos() -> Vec<&'static str> {
+    optimizers::paper_algorithms()
 }
 
-fn float_range(lo: f64, hi: f64, step: f64) -> Vec<Value> {
-    let mut out = Vec::new();
-    let mut v = lo;
-    while v <= hi + 1e-9 {
-        // Round to the step grid to avoid drift.
-        out.push(Value::Float((v / step).round() * step));
-        v += step;
+/// The paper's Table IV algorithms — the Table III set minus those with
+/// no tunable numerical hyperparameters (dual annealing's single
+/// categorical is excluded, as in the paper) — in Table IV order.
+pub fn extended_algos() -> Vec<&'static str> {
+    let mut names: Vec<&'static str> = optimizers::registry()
+        .iter()
+        .filter(|d| d.paper && d.has_extended_space())
+        .map(|d| d.name)
+        .collect();
+    names.sort_unstable();
+    names
+}
+
+/// Assemble a search space from one grid (limited or extended) of an
+/// optimizer's schema, preserving schema declaration order.
+fn derive_space(
+    algo: &str,
+    kind: &str,
+    grid: fn(&optimizers::HyperSchema) -> &[Value],
+) -> Result<SearchSpace> {
+    let desc = optimizers::descriptor(algo)?;
+    let params: Vec<TunableParam> = desc
+        .schema
+        .iter()
+        .filter(|s| !grid(s).is_empty())
+        .map(|s| TunableParam {
+            name: s.name.to_string(),
+            values: grid(s).to_vec(),
+        })
+        .collect();
+    if params.is_empty() {
+        bail!("no {kind} hyperparameter space for {algo:?}");
     }
-    out
+    SearchSpace::build(&format!("hp-{algo}-{kind}"), params, vec![])
 }
 
-/// Table III: the limited, exhaustively evaluated hyperparameter spaces.
+/// Table III: the limited, exhaustively evaluated hyperparameter spaces,
+/// derived from the registry's `limited` grids.
 pub fn limited_space(algo: &str) -> Result<SearchSpace> {
-    let params = match algo {
-        "dual_annealing" => vec![TunableParam::new(
-            "method",
-            vec![
-                "COBYLA",
-                "L-BFGS-B",
-                "SLSQP",
-                "CG",
-                "Powell",
-                "Nelder-Mead",
-                "BFGS",
-                "trust-constr",
-            ],
-        )],
-        "genetic_algorithm" => vec![
-            TunableParam::new(
-                "method",
-                vec!["single_point", "two_point", "uniform", "disruptive_uniform"],
-            ),
-            TunableParam::new("popsize", vec![10i64, 20, 30]),
-            TunableParam::new("maxiter", vec![50i64, 100, 150]),
-            TunableParam::new("mutation_chance", vec![5i64, 10, 20]),
-        ],
-        "pso" => vec![
-            TunableParam::new("popsize", vec![10i64, 20, 30]),
-            TunableParam::new("maxiter", vec![50i64, 100, 150]),
-            TunableParam {
-                name: "c1".into(),
-                values: floats(&[1.0, 2.0, 3.0]),
-            },
-            TunableParam {
-                name: "c2".into(),
-                values: floats(&[0.5, 1.0, 1.5]),
-            },
-        ],
-        "simulated_annealing" => vec![
-            TunableParam {
-                name: "T".into(),
-                values: floats(&[0.5, 1.0, 1.5]),
-            },
-            TunableParam {
-                name: "T_min".into(),
-                values: floats(&[0.0001, 0.001, 0.01]),
-            },
-            TunableParam {
-                name: "alpha".into(),
-                values: floats(&[0.9925, 0.995, 0.9975]),
-            },
-            TunableParam::new("maxiter", vec![1i64, 2, 3]),
-        ],
-        other => bail!("no limited hyperparameter space for {other:?}"),
-    };
-    SearchSpace::build(&format!("hp-{algo}-limited"), params, vec![])
+    derive_space(algo, "limited", |s| &s.limited)
 }
 
-/// Table IV: the extended hyperparameter spaces for meta-strategy tuning.
+/// Table IV: the extended hyperparameter spaces for meta-strategy tuning,
+/// derived from the registry's `extended` grids.
 pub fn extended_space(algo: &str) -> Result<SearchSpace> {
-    let params = match algo {
-        "genetic_algorithm" => vec![
-            TunableParam::new(
-                "method",
-                vec!["single_point", "two_point", "uniform", "disruptive_uniform"],
-            ),
-            TunableParam::int_range("popsize", 2, 50, 2),
-            TunableParam::int_range("maxiter", 10, 200, 10),
-            TunableParam::int_range("mutation_chance", 5, 100, 5),
-        ],
-        "pso" => vec![
-            TunableParam::int_range("popsize", 2, 50, 2),
-            TunableParam::int_range("maxiter", 10, 200, 10),
-            TunableParam {
-                name: "c1".into(),
-                values: float_range(1.0, 3.5, 0.25),
-            },
-            TunableParam {
-                name: "c2".into(),
-                values: float_range(0.5, 2.0, 0.25),
-            },
-        ],
-        "simulated_annealing" => vec![
-            TunableParam {
-                name: "T".into(),
-                values: float_range(0.1, 2.0, 0.1),
-            },
-            TunableParam {
-                name: "T_min".into(),
-                values: float_range(0.0001, 0.1, 0.001),
-            },
-            TunableParam {
-                name: "alpha".into(),
-                values: floats(&[0.9925, 0.995, 0.9975]),
-            },
-            TunableParam::int_range("maxiter", 1, 10, 1),
-        ],
-        other => bail!("no extended hyperparameter space for {other:?}"),
-    };
-    SearchSpace::build(&format!("hp-{algo}-extended"), params, vec![])
+    derive_space(algo, "extended", |s| &s.extended)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn algo_lists_match_paper_tables() {
+        assert_eq!(
+            limited_algos(),
+            vec!["dual_annealing", "genetic_algorithm", "pso", "simulated_annealing"]
+        );
+        assert_eq!(
+            extended_algos(),
+            vec!["genetic_algorithm", "pso", "simulated_annealing"]
+        );
+    }
 
     #[test]
     fn limited_space_sizes_match_table3() {
@@ -153,7 +107,7 @@ mod tests {
 
     #[test]
     fn extended_spaces_are_much_larger() {
-        for algo in EXTENDED_ALGOS {
+        for algo in extended_algos() {
             let lim = limited_space(algo).unwrap().len();
             let ext = extended_space(algo).unwrap().len();
             assert!(ext > 50 * lim, "{algo}: {ext} vs {lim}");
@@ -177,7 +131,8 @@ mod tests {
         let hp = HyperParams::from_space_config(&s, 0);
         assert!(!hp.str("method", "").is_empty());
         assert!(hp.usize("popsize", 0) > 0);
-        // Every config must be accepted by the optimizer factory.
+        // Every config must be accepted by the optimizer factory (which
+        // now schema-validates every key).
         for idx in [0, s.len() / 2, s.len() - 1] {
             let hp = HyperParams::from_space_config(&s, idx);
             assert!(crate::optimizers::create("genetic_algorithm", &hp).is_ok());
@@ -185,8 +140,184 @@ mod tests {
     }
 
     #[test]
+    fn every_derived_config_passes_schema_validation() {
+        // The derived spaces and the schema validation must agree by
+        // construction: exhaustively instantiate the small spaces and
+        // sample the large ones.
+        use crate::optimizers::HyperParams;
+        for algo in limited_algos() {
+            let s = limited_space(algo).unwrap();
+            for idx in (0..s.len()).step_by(1 + s.len() / 64) {
+                let hp = HyperParams::from_space_config(&s, idx);
+                crate::optimizers::create(algo, &hp)
+                    .unwrap_or_else(|e| panic!("{algo} limited config {idx}: {e:#}"));
+            }
+        }
+        for algo in extended_algos() {
+            let s = extended_space(algo).unwrap();
+            for idx in (0..s.len()).step_by(1 + s.len() / 64) {
+                let hp = HyperParams::from_space_config(&s, idx);
+                crate::optimizers::create(algo, &hp)
+                    .unwrap_or_else(|e| panic!("{algo} extended config {idx}: {e:#}"));
+            }
+        }
+    }
+
+    #[test]
     fn unknown_algo_rejected() {
         assert!(limited_space("nope").is_err());
         assert!(extended_space("dual_annealing").is_err());
+        assert!(limited_space("mls").is_err());
+    }
+
+    // ---- golden tests: derived spaces == the paper's hand-written tables --
+
+    fn floats(values: &[f64]) -> Vec<Value> {
+        values.iter().map(|&v| Value::Float(v)).collect()
+    }
+
+    /// Independent float grid for the goldens: explicit index arithmetic,
+    /// no shared helper with production code.
+    fn grid(lo: f64, step: f64, n: usize) -> Vec<Value> {
+        (0..n)
+            .map(|i| Value::Float(((lo + i as f64 * step) * 1e9).round() / 1e9))
+            .collect()
+    }
+
+    /// The hand-written Table III tables exactly as previously coded.
+    fn golden_limited(algo: &str) -> SearchSpace {
+        let params = match algo {
+            "dual_annealing" => vec![TunableParam::new(
+                "method",
+                vec![
+                    "COBYLA",
+                    "L-BFGS-B",
+                    "SLSQP",
+                    "CG",
+                    "Powell",
+                    "Nelder-Mead",
+                    "BFGS",
+                    "trust-constr",
+                ],
+            )],
+            "genetic_algorithm" => vec![
+                TunableParam::new(
+                    "method",
+                    vec!["single_point", "two_point", "uniform", "disruptive_uniform"],
+                ),
+                TunableParam::new("popsize", vec![10i64, 20, 30]),
+                TunableParam::new("maxiter", vec![50i64, 100, 150]),
+                TunableParam::new("mutation_chance", vec![5i64, 10, 20]),
+            ],
+            "pso" => vec![
+                TunableParam::new("popsize", vec![10i64, 20, 30]),
+                TunableParam::new("maxiter", vec![50i64, 100, 150]),
+                TunableParam {
+                    name: "c1".into(),
+                    values: floats(&[1.0, 2.0, 3.0]),
+                },
+                TunableParam {
+                    name: "c2".into(),
+                    values: floats(&[0.5, 1.0, 1.5]),
+                },
+            ],
+            "simulated_annealing" => vec![
+                TunableParam {
+                    name: "T".into(),
+                    values: floats(&[0.5, 1.0, 1.5]),
+                },
+                TunableParam {
+                    name: "T_min".into(),
+                    values: floats(&[0.0001, 0.001, 0.01]),
+                },
+                TunableParam {
+                    name: "alpha".into(),
+                    values: floats(&[0.9925, 0.995, 0.9975]),
+                },
+                TunableParam::new("maxiter", vec![1i64, 2, 3]),
+            ],
+            other => panic!("no golden for {other}"),
+        };
+        SearchSpace::build(&format!("hp-{algo}-limited"), params, vec![]).unwrap()
+    }
+
+    /// The hand-written Table IV tables, float ranges spelled out by
+    /// explicit index (the drift-free semantics of the fixed
+    /// `float_range`).
+    fn golden_extended(algo: &str) -> SearchSpace {
+        let params = match algo {
+            "genetic_algorithm" => vec![
+                TunableParam::new(
+                    "method",
+                    vec!["single_point", "two_point", "uniform", "disruptive_uniform"],
+                ),
+                TunableParam::int_range("popsize", 2, 50, 2),
+                TunableParam::int_range("maxiter", 10, 200, 10),
+                TunableParam::int_range("mutation_chance", 5, 100, 5),
+            ],
+            "pso" => vec![
+                TunableParam::int_range("popsize", 2, 50, 2),
+                TunableParam::int_range("maxiter", 10, 200, 10),
+                TunableParam {
+                    name: "c1".into(),
+                    values: grid(1.0, 0.25, 11), // 1.0 ..= 3.5
+                },
+                TunableParam {
+                    name: "c2".into(),
+                    values: grid(0.5, 0.25, 7), // 0.5 ..= 2.0
+                },
+            ],
+            "simulated_annealing" => vec![
+                TunableParam {
+                    name: "T".into(),
+                    values: grid(0.1, 0.1, 20), // 0.1 ..= 2.0
+                },
+                TunableParam {
+                    name: "T_min".into(),
+                    values: grid(0.0001, 0.001, 100), // 0.0001 ..= 0.0991
+                },
+                TunableParam {
+                    name: "alpha".into(),
+                    values: floats(&[0.9925, 0.995, 0.9975]),
+                },
+                TunableParam::int_range("maxiter", 1, 10, 1),
+            ],
+            other => panic!("no golden for {other}"),
+        };
+        SearchSpace::build(&format!("hp-{algo}-extended"), params, vec![]).unwrap()
+    }
+
+    /// Byte-identical comparison: same name, parameters (names, value
+    /// kinds and exact values) and full enumeration key stream.
+    fn assert_spaces_identical(derived: &SearchSpace, golden: &SearchSpace) {
+        assert_eq!(derived.name, golden.name);
+        assert_eq!(derived.params.len(), golden.params.len(), "{}", derived.name);
+        for (dp, gp) in derived.params.iter().zip(&golden.params) {
+            assert_eq!(dp.name, gp.name, "{}", derived.name);
+            assert_eq!(dp.values, gp.values, "{} / {}", derived.name, dp.name);
+            // PartialEq on floats is value equality; pin the rendered keys
+            // too so serialization output cannot drift either.
+            for (dv, gv) in dp.values.iter().zip(&gp.values) {
+                assert_eq!(dv.key(), gv.key(), "{} / {}", derived.name, dp.name);
+            }
+        }
+        assert_eq!(derived.len(), golden.len(), "{}", derived.name);
+        for i in (0..derived.len()).step_by(1 + derived.len() / 512) {
+            assert_eq!(derived.key(i), golden.key(i), "{} config {i}", derived.name);
+        }
+    }
+
+    #[test]
+    fn derived_limited_spaces_match_golden_tables() {
+        for algo in limited_algos() {
+            assert_spaces_identical(&limited_space(algo).unwrap(), &golden_limited(algo));
+        }
+    }
+
+    #[test]
+    fn derived_extended_spaces_match_golden_tables() {
+        for algo in extended_algos() {
+            assert_spaces_identical(&extended_space(algo).unwrap(), &golden_extended(algo));
+        }
     }
 }

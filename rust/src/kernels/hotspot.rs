@@ -42,13 +42,17 @@ pub fn build() -> Result<Kernel> {
         Constraint::parse("block_size_x * block_size_y <= 1024")?,
         // The temporal halo must leave a positive output tile.
         Constraint::parse("block_size_x * tile_size_x - 2 * temporal_tiling_factor >= 8")?,
-        Constraint::parse("block_size_y - 2 * temporal_tiling_factor >= 1 || block_size_y * 4 > temporal_tiling_factor * 8")?,
+        Constraint::parse(
+            "block_size_y - 2 * temporal_tiling_factor >= 1 || block_size_y * 4 > temporal_tiling_factor * 8",
+        )?,
         // Staged temperature+power planes must fit LDS.
         Constraint::parse(
             "(block_size_x * tile_size_x + 2 * temporal_tiling_factor) * (block_size_y + 2 * temporal_tiling_factor) * 4 * (1 + sh_power) <= 65536",
         )?,
         // A launch-bounds hint must be satisfiable thread-count-wise.
-        Constraint::parse("blocks_per_sm == 0 || blocks_per_sm * block_size_x * block_size_y <= 2048")?,
+        Constraint::parse(
+            "blocks_per_sm == 0 || blocks_per_sm * block_size_x * block_size_y <= 2048",
+        )?,
     ];
     let space = SearchSpace::build("hotspot", params, constraints)?;
     Ok(Kernel {

@@ -13,6 +13,9 @@
 //! `--results DIR`, `--artifacts DIR`, `--backend pjrt|native`,
 //! `--verbose`, `--quiet`.
 
+// Same style-lint policy as the library crate (see rust/src/lib.rs).
+#![allow(clippy::needless_range_loop, clippy::collapsible_if, clippy::collapsible_else_if)]
+
 use anyhow::{bail, Context, Result};
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -125,7 +128,10 @@ fn cmd_info(args: &Args) -> Result<()> {
             k.problem
         );
     }
-    println!("\noptimizers: {}", optimizers::optimizer_names().join(", "));
+    // Rendered straight from the optimizer registry's typed schemas, so
+    // this listing can never drift from what `--hp` actually accepts.
+    println!("\noptimizers (hyperparameter=default):");
+    print!("{}", optimizers::schema_table());
     Ok(())
 }
 

@@ -191,7 +191,8 @@ mod tests {
     #[test]
     fn invalid_configs_slow_the_baseline() {
         let valid = cache_with_values(&[1.0, 2.0, 3.0, 4.0]);
-        let half = cache_with_values(&[1.0, 2.0, 3.0, 4.0, f64::INFINITY, f64::INFINITY, f64::INFINITY, f64::INFINITY]);
+        let inf = f64::INFINITY;
+        let half = cache_with_values(&[1.0, 2.0, 3.0, 4.0, inf, inf, inf, inf]);
         let mut bv = Baseline::new(&valid);
         let mut bh = Baseline::new(&half);
         // At the same time budget, the half-invalid space has fewer valid draws.

@@ -14,10 +14,35 @@
 //! packed-rank engine serves with a stride-delta and a bitset probe —
 //! zero heap allocations per annealing step.
 
+use super::schema::{self, Descriptor, HyperSchema};
 use super::{relative_delta, HyperParams, Optimizer};
 use crate::runner::Tuning;
 use crate::searchspace::Neighborhood;
 use crate::util::rng::Rng;
+
+/// Registry entry: the typed hyperparameter schema (Table III column and
+/// Table IV row for simulated annealing derive from these grids).
+pub fn descriptor() -> Descriptor {
+    Descriptor {
+        name: "simulated_annealing",
+        paper: true,
+        schema: vec![
+            HyperSchema::float("T", 1.0)
+                .limited(schema::floats(&[0.5, 1.0, 1.5]))
+                .extended(schema::float_range(0.1, 2.0, 0.1)),
+            HyperSchema::float("T_min", 0.001)
+                .limited(schema::floats(&[0.0001, 0.001, 0.01]))
+                .extended(schema::float_range(0.0001, 0.1, 0.001)),
+            HyperSchema::float("alpha", 0.995)
+                .limited(schema::floats(&[0.9925, 0.995, 0.9975]))
+                .extended(schema::floats(&[0.9925, 0.995, 0.9975])),
+            HyperSchema::int("maxiter", 2)
+                .limited(schema::ints(&[1, 2, 3]))
+                .extended(schema::int_range(1, 10, 1)),
+        ],
+        build: |hp| Ok(Box::new(SimulatedAnnealing::new(hp))),
+    }
+}
 
 pub struct SimulatedAnnealing {
     pub t_start: f64,

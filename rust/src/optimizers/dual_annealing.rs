@@ -17,6 +17,8 @@
 //! * `BFGS`         — adaptive-step descent with step doubling on success
 //! * `trust-constr` — random probes in a shrinking L1 ball
 
+use super::localsearch::{self, DescentRule};
+use super::schema::{self, Descriptor, HyperSchema};
 use super::{relative_delta, HyperParams, Optimizer};
 use crate::runner::Tuning;
 use crate::searchspace::{Neighborhood, SearchSpace};
@@ -32,6 +34,23 @@ pub const LOCAL_METHODS: [&str; 8] = [
     "BFGS",
     "trust-constr",
 ];
+
+/// Registry entry. Only the categorical `method` is hypertuned (Table III);
+/// the annealing-schedule knobs keep scipy's defaults and are excluded
+/// from the extended space, as in the paper.
+pub fn descriptor() -> Descriptor {
+    Descriptor {
+        name: "dual_annealing",
+        paper: true,
+        schema: vec![
+            HyperSchema::str("method", "Powell", &LOCAL_METHODS)
+                .limited(schema::strs(&LOCAL_METHODS)),
+            HyperSchema::float("initial_temp", 5230.0),
+            HyperSchema::float("restart_temp_ratio", 2e-5),
+        ],
+        build: |hp| Ok(Box::new(DualAnnealing::new(hp))),
+    }
+}
 
 pub struct DualAnnealing {
     pub method: String,
@@ -80,7 +99,8 @@ impl Optimizer for DualAnnealing {
                 );
                 let cand_val = tuning.eval(cand);
                 let delta = relative_delta(cand_val, current_val);
-                if delta <= 0.0 || rng.next_f64() < (-delta * (1.0 + step as f64 / 50.0) / (temp / self.temp).max(1e-12)).exp() {
+                let accept = -delta * (1.0 + step as f64 / 50.0) / (temp / self.temp).max(1e-12);
+                if delta <= 0.0 || rng.next_f64() < accept.exp() {
                     current = cand;
                     current_val = cand_val;
                 }
@@ -365,7 +385,12 @@ fn powell(tuning: &mut Tuning<'_>, start: usize, start_val: f64) -> (usize, f64)
 }
 
 /// Nelder–Mead: lattice simplex with reflect / expand / shrink.
-fn nelder_mead(tuning: &mut Tuning<'_>, start: usize, start_val: f64, rng: &mut Rng) -> (usize, f64) {
+fn nelder_mead(
+    tuning: &mut Tuning<'_>,
+    start: usize,
+    start_val: f64,
+    rng: &mut Rng,
+) -> (usize, f64) {
     let ndim = tuning.space().dims().len();
     // Simplex of ndim+1 points around the start.
     let mut simplex: Vec<(usize, f64)> = vec![(start, start_val)];
@@ -477,7 +502,12 @@ fn bfgs(tuning: &mut Tuning<'_>, start: usize, start_val: f64, rng: &mut Rng) ->
 }
 
 /// trust-constr stand-in: random probes in a shrinking L1 ball.
-fn trust_constr(tuning: &mut Tuning<'_>, start: usize, start_val: f64, rng: &mut Rng) -> (usize, f64) {
+fn trust_constr(
+    tuning: &mut Tuning<'_>,
+    start: usize,
+    start_val: f64,
+    rng: &mut Rng,
+) -> (usize, f64) {
     let ndim = tuning.space().dims().len();
     let dims: Vec<usize> = tuning.space().dims().to_vec();
     let (mut best, mut best_val) = (start, start_val);
@@ -513,34 +543,27 @@ fn trust_constr(tuning: &mut Tuning<'_>, start: usize, start_val: f64, rng: &mut
     (best, best_val)
 }
 
-/// Plain greedy fallback for unknown method names.
-fn greedy_descent(tuning: &mut Tuning<'_>, start: usize, start_val: f64, rng: &mut Rng) -> (usize, f64) {
-    let (mut best, mut best_val) = (start, start_val);
+/// Plain greedy fallback for unknown method names (unreachable through
+/// the registry, which validates `method` against the schema choices, but
+/// kept for direct construction): shared best-improvement descent over
+/// the adjacent CSR neighborhood.
+fn greedy_descent(
+    tuning: &mut Tuning<'_>,
+    start: usize,
+    start_val: f64,
+    rng: &mut Rng,
+) -> (usize, f64) {
     let mut ns: Vec<usize> = Vec::new();
-    loop {
-        if tuning.done() {
-            break;
-        }
-        tuning.space().neighbors_into(best, Neighborhood::Adjacent, &mut ns);
-        let mut improved = false;
-        for i in 0..ns.len() {
-            if tuning.done() {
-                break;
-            }
-            let n = ns[i];
-            let v = tuning.eval(n);
-            if v < best_val {
-                best = n;
-                best_val = v;
-                improved = true;
-            }
-        }
-        if !improved {
-            break;
-        }
-        let _ = rng;
-    }
-    (best, best_val)
+    localsearch::descend(
+        tuning,
+        start,
+        start_val,
+        Neighborhood::Adjacent,
+        DescentRule::BestImprovement,
+        false,
+        rng,
+        &mut ns,
+    )
 }
 
 #[cfg(test)]

@@ -3,6 +3,8 @@
 //! the hyperparameter machinery's generality (any registered optimizer can
 //! be hypertuned or used as a meta-strategy).
 
+use super::localsearch::{self, DescentRule};
+use super::schema::{Descriptor, HyperSchema};
 use super::{relative_delta, HyperParams, Optimizer};
 use crate::runner::Tuning;
 use crate::searchspace::Neighborhood;
@@ -10,6 +12,20 @@ use crate::util::rng::Rng;
 
 // ---------------------------------------------------------------------------
 // Differential evolution
+
+/// Registry entry for DE (kept outside any Table III/IV space).
+pub fn differential_evolution_descriptor() -> Descriptor {
+    Descriptor {
+        name: "differential_evolution",
+        paper: false,
+        schema: vec![
+            HyperSchema::int("popsize", 20),
+            HyperSchema::float("F", 0.7),
+            HyperSchema::float("CR", 0.6),
+        ],
+        build: |hp| Ok(Box::new(DifferentialEvolution::new(hp))),
+    }
+}
 
 /// DE/rand/1/bin adapted to the lattice.
 pub struct DifferentialEvolution {
@@ -91,6 +107,19 @@ impl Optimizer for DifferentialEvolution {
 // ---------------------------------------------------------------------------
 // Basin hopping
 
+/// Registry entry for basin hopping.
+pub fn basin_hopping_descriptor() -> Descriptor {
+    Descriptor {
+        name: "basin_hopping",
+        paper: false,
+        schema: vec![
+            HyperSchema::float("T", 1.0),
+            HyperSchema::int("perturbation", 2),
+        ],
+        build: |hp| Ok(Box::new(BasinHopping::new(hp))),
+    }
+}
+
 /// Greedy local descent + temperature-accepted random kicks.
 pub struct BasinHopping {
     pub t: f64,
@@ -146,8 +175,10 @@ impl Optimizer for BasinHopping {
     }
 }
 
-/// Greedy first-improvement descent over the adjacent neighborhood. `ns`
-/// is a caller-owned neighbor buffer reused across descents.
+/// Greedy shuffled first-improvement descent over the adjacent CSR
+/// neighborhood — the shared engine configured the way basin hopping and
+/// greedy ILS walk their basins. `ns` is a caller-owned neighbor buffer
+/// reused across descents.
 fn descend(
     tuning: &mut Tuning<'_>,
     start: usize,
@@ -155,35 +186,34 @@ fn descend(
     rng: &mut Rng,
     ns: &mut Vec<usize>,
 ) -> (usize, f64) {
-    let (mut best, mut best_val) = (start, start_val);
-    loop {
-        if tuning.done() {
-            return (best, best_val);
-        }
-        tuning.space().neighbors_into(best, Neighborhood::Adjacent, ns);
-        rng.shuffle(ns);
-        let mut improved = false;
-        for i in 0..ns.len() {
-            if tuning.done() {
-                return (best, best_val);
-            }
-            let n = ns[i];
-            let v = tuning.eval(n);
-            if v < best_val {
-                best = n;
-                best_val = v;
-                improved = true;
-                break; // first improvement
-            }
-        }
-        if !improved {
-            return (best, best_val);
-        }
-    }
+    localsearch::descend(
+        tuning,
+        start,
+        start_val,
+        Neighborhood::Adjacent,
+        DescentRule::FirstImprovement,
+        true,
+        rng,
+        ns,
+    )
 }
 
 // ---------------------------------------------------------------------------
 // Multi-start local search
+
+/// Registry entry for multi-start local search.
+pub fn mls_descriptor() -> Descriptor {
+    Descriptor {
+        name: "mls",
+        paper: false,
+        schema: vec![HyperSchema::str(
+            "neighborhood",
+            "Hamming",
+            &["Hamming", "Adjacent"],
+        )],
+        build: |hp| Ok(Box::new(Mls::new(hp))),
+    }
+}
 
 /// Repeated best-improvement hill descent from random starts.
 pub struct Mls {
@@ -192,9 +222,15 @@ pub struct Mls {
 
 impl Mls {
     pub fn new(hp: &HyperParams) -> Mls {
-        let hood = match hp.str("neighborhood", "Hamming").as_str() {
-            "adjacent" | "Adjacent" => Neighborhood::Adjacent,
-            _ => Neighborhood::Hamming,
+        // Case-insensitive for direct construction (the registry path is
+        // stricter: create() only admits the schema's exact choices).
+        let hood = if hp
+            .str("neighborhood", "Hamming")
+            .eq_ignore_ascii_case("adjacent")
+        {
+            Neighborhood::Adjacent
+        } else {
+            Neighborhood::Hamming
         };
         Mls { neighborhood: hood }
     }
@@ -210,36 +246,37 @@ impl Optimizer for Mls {
         let mut ns: Vec<usize> = Vec::new();
         while !tuning.done() {
             let start = tuning.space().random(rng);
-            let mut best_val = tuning.eval(start);
-            let mut best = start;
-            loop {
-                if tuning.done() {
-                    return;
-                }
-                tuning.space().neighbors_into(best, self.neighborhood, &mut ns);
-                let mut step = None;
-                for i in 0..ns.len() {
-                    if tuning.done() {
-                        return;
-                    }
-                    let n = ns[i];
-                    let v = tuning.eval(n);
-                    if v < best_val {
-                        best_val = v;
-                        step = Some(n);
-                    }
-                }
-                match step {
-                    Some(n) => best = n,
-                    None => break, // local optimum; restart
-                }
-            }
+            let start_val = tuning.eval(start);
+            localsearch::descend(
+                tuning,
+                start,
+                start_val,
+                self.neighborhood,
+                DescentRule::BestImprovement,
+                false,
+                rng,
+                &mut ns,
+            );
+            // Local optimum (or budget): restart from a fresh random point.
         }
     }
 }
 
 // ---------------------------------------------------------------------------
 // Greedy iterated local search
+
+/// Registry entry for greedy iterated local search.
+pub fn greedy_ils_descriptor() -> Descriptor {
+    Descriptor {
+        name: "greedy_ils",
+        paper: false,
+        schema: vec![
+            HyperSchema::int("perturbation", 1),
+            HyperSchema::int("restart", 5),
+        ],
+        build: |hp| Ok(Box::new(GreedyIls::new(hp))),
+    }
+}
 
 /// Greedy descent + bounded perturbation, restarting from the incumbent.
 pub struct GreedyIls {
@@ -306,6 +343,22 @@ impl Optimizer for GreedyIls {
 
 // ---------------------------------------------------------------------------
 // Firefly algorithm
+
+/// Registry entry for the firefly algorithm.
+pub fn firefly_descriptor() -> Descriptor {
+    Descriptor {
+        name: "firefly",
+        paper: false,
+        schema: vec![
+            HyperSchema::int("popsize", 15),
+            HyperSchema::int("maxiter", 100),
+            HyperSchema::float("beta0", 1.0),
+            HyperSchema::float("gamma", 0.1),
+            HyperSchema::float("alpha", 0.3),
+        ],
+        build: |hp| Ok(Box::new(Firefly::new(hp))),
+    }
+}
 
 /// Fireflies move toward brighter (better) ones with distance-attenuated
 /// attraction plus a random walk.

@@ -8,6 +8,7 @@
 //! that land on invalid configurations are snapped to the nearest valid
 //! lattice point.
 
+use super::schema::{self, Descriptor, HyperSchema};
 use super::{HyperParams, Optimizer};
 use crate::runner::Tuning;
 use crate::searchspace::SearchSpace;
@@ -16,6 +17,29 @@ use anyhow::{bail, Result};
 
 pub const CROSSOVER_METHODS: [&str; 4] =
     ["single_point", "two_point", "uniform", "disruptive_uniform"];
+
+/// Registry entry: the GA's Table III and Table IV grids.
+pub fn descriptor() -> Descriptor {
+    Descriptor {
+        name: "genetic_algorithm",
+        paper: true,
+        schema: vec![
+            HyperSchema::str("method", "uniform", &CROSSOVER_METHODS)
+                .limited(schema::strs(&CROSSOVER_METHODS))
+                .extended(schema::strs(&CROSSOVER_METHODS)),
+            HyperSchema::int("popsize", 20)
+                .limited(schema::ints(&[10, 20, 30]))
+                .extended(schema::int_range(2, 50, 2)),
+            HyperSchema::int("maxiter", 100)
+                .limited(schema::ints(&[50, 100, 150]))
+                .extended(schema::int_range(10, 200, 10)),
+            HyperSchema::int("mutation_chance", 10)
+                .limited(schema::ints(&[5, 10, 20]))
+                .extended(schema::int_range(5, 100, 5)),
+        ],
+        build: |hp| Ok(Box::new(GeneticAlgorithm::new(hp)?)),
+    }
+}
 
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Crossover {

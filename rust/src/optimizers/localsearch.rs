@@ -1,0 +1,209 @@
+//! Shared local-search descent engine.
+//!
+//! `dual_annealing`'s greedy fallback, `mls`, `greedy_ils` and
+//! `basin_hopping` all used to carry their own copy of the same descent
+//! loop. This module is the single implementation they program against;
+//! it walks the precomputed CSR neighbor slices
+//! ([`SearchSpace::neighbors`](crate::searchspace::SearchSpace::neighbors))
+//! instead of re-probing the packed-rank index every pass, copying each
+//! slice into a caller-owned scratch buffer so evaluations can interleave
+//! with the borrow-checked `&mut Tuning`.
+
+use crate::runner::Tuning;
+use crate::searchspace::Neighborhood;
+use crate::util::rng::Rng;
+
+/// Which neighbor a descent pass moves to.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DescentRule {
+    /// Move to the first improving neighbor found (stochastic descent when
+    /// combined with shuffling).
+    FirstImprovement,
+    /// Evaluate the whole neighborhood and move to the best improvement.
+    BestImprovement,
+}
+
+/// Descend from `(start, start_val)` until a local optimum or budget
+/// exhaustion, returning the best `(index, value)` reached.
+///
+/// Each pass copies the incumbent's neighborhood into `ns` (a
+/// caller-owned buffer reused across descents) — from the CSR slice on
+/// spaces small enough for the graph to amortize, else by probing —
+/// optionally shuffles it (`shuffle` — `rng` is untouched otherwise,
+/// preserving RNG streams), then evaluates neighbors under `rule`. Both
+/// fill paths produce the identical visitor order, so the choice never
+/// changes a trajectory and refactored callers keep theirs.
+#[allow(clippy::too_many_arguments)]
+pub fn descend(
+    tuning: &mut Tuning<'_>,
+    start: usize,
+    start_val: f64,
+    hood: Neighborhood,
+    rule: DescentRule,
+    shuffle: bool,
+    rng: &mut Rng,
+    ns: &mut Vec<usize>,
+) -> (usize, f64) {
+    let (mut best, mut best_val) = (start, start_val);
+    // CSR slices only where the one-time graph build amortizes; on bigger
+    // spaces probe per pass (cost proportional to configs visited).
+    let use_csr = tuning.space().csr_worthwhile();
+    loop {
+        if tuning.done() {
+            return (best, best_val);
+        }
+        if use_csr {
+            ns.clear();
+            ns.extend(
+                tuning
+                    .space()
+                    .neighbors(best, hood)
+                    .iter()
+                    .map(|&n| n as usize),
+            );
+        } else {
+            tuning.space().neighbors_into(best, hood, ns);
+        }
+        if shuffle {
+            rng.shuffle(ns);
+        }
+        // `best`/`best_val` move in lockstep so an early (budget) return
+        // never pairs the old incumbent with a newer neighbor's value.
+        let mut improved = false;
+        for i in 0..ns.len() {
+            if tuning.done() {
+                return (best, best_val);
+            }
+            let n = ns[i];
+            let v = tuning.eval(n);
+            if v < best_val {
+                best = n;
+                best_val = v;
+                improved = true;
+                if rule == DescentRule::FirstImprovement {
+                    break;
+                }
+            }
+        }
+        if !improved {
+            return (best, best_val); // local optimum
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizers::testutil::synthetic_cache;
+    use crate::runner::{Budget, SimulationRunner, Tuning};
+    use std::sync::Arc;
+
+    fn with_tuning(evals: usize, f: impl FnOnce(&mut Tuning<'_>)) {
+        let (space, cache) = synthetic_cache();
+        let mut sim = SimulationRunner::new(Arc::clone(&space), cache).unwrap();
+        let mut tuning = Tuning::new(&mut sim, Budget::evals(evals));
+        f(&mut tuning);
+    }
+
+    #[test]
+    fn descent_never_worsens_and_reaches_local_optimum() {
+        with_tuning(500, |tuning| {
+            let mut rng = Rng::new(11);
+            let mut ns = Vec::new();
+            let start = tuning.space().random(&mut rng);
+            let start_val = tuning.eval(start);
+            let (best, best_val) = descend(
+                tuning,
+                start,
+                start_val,
+                Neighborhood::Adjacent,
+                DescentRule::BestImprovement,
+                false,
+                &mut rng,
+                &mut ns,
+            );
+            assert!(best_val <= start_val);
+            if !tuning.done() {
+                // Local optimum: no adjacent neighbor improves on it.
+                let hood: Vec<usize> = tuning
+                    .space()
+                    .neighbors(best, Neighborhood::Adjacent)
+                    .iter()
+                    .map(|&n| n as usize)
+                    .collect();
+                for n in hood {
+                    assert!(tuning.eval(n) >= best_val);
+                }
+            }
+        });
+    }
+
+    /// On a 1-D monotone landscape the two rules' exact evaluation
+    /// sequences are fully determined: first-improvement breaks at the
+    /// first better neighbor each pass (re-probing earlier configs from
+    /// the within-run cache), best-improvement scans each whole
+    /// neighborhood once. Pins both traces end to end.
+    #[test]
+    fn first_improvement_breaks_where_best_scans_all() {
+        use crate::dataset::cache::{CacheData, ConfigRecord};
+        use crate::searchspace::{SearchSpace, TunableParam};
+
+        let space = Arc::new(
+            SearchSpace::build("ls", vec![TunableParam::new("a", vec![0i64, 1, 2, 3, 4])], vec![])
+                .unwrap(),
+        );
+        let vals = [5.0, 4.0, 3.0, 2.0, 1.0];
+        let records: Vec<ConfigRecord> = (0..space.len())
+            .map(|i| ConfigRecord {
+                key: space.key(i),
+                value: vals[i],
+                observations: vec![vals[i]],
+                compile_time: 1.0,
+                valid: true,
+            })
+            .collect();
+        let cache = Arc::new(CacheData {
+            kernel: "ls".into(),
+            device: "x".into(),
+            problem: String::new(),
+            space_seed: 0,
+            observations_per_config: 1,
+            bruteforce_seconds: 0.0,
+            param_names: vec!["a".into()],
+            records,
+        });
+        let trace_for = |rule: DescentRule| {
+            let mut sim =
+                SimulationRunner::new_unchecked(Arc::clone(&space), Arc::clone(&cache));
+            let mut tuning = Tuning::new(&mut sim, Budget::evals(10));
+            let mut rng = Rng::new(1);
+            let mut ns = Vec::new();
+            let v0 = tuning.eval(0);
+            let (best, best_val) = descend(
+                &mut tuning,
+                0,
+                v0,
+                Neighborhood::Hamming,
+                rule,
+                false,
+                &mut rng,
+                &mut ns,
+            );
+            assert_eq!((best, best_val), (4, 1.0));
+            tuning
+                .finish()
+                .points
+                .iter()
+                .map(|p| p.config)
+                .collect::<Vec<_>>()
+        };
+        let first = trace_for(DescentRule::FirstImprovement);
+        let best = trace_for(DescentRule::BestImprovement);
+        // Best-improvement: one full scan of 0's neighborhood finds 4.
+        assert_eq!(best, vec![0, 1, 2, 3, 4]);
+        // First-improvement: one step per pass, rescanning (cached)
+        // earlier configs before reaching the next improvement.
+        assert_eq!(first, vec![0, 1, 0, 2, 0, 1, 3, 0, 1, 2, 4]);
+        assert_ne!(first, best);
+    }
+}

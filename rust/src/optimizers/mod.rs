@@ -2,25 +2,39 @@
 //!
 //! All algorithms program against [`Tuning`] (budget-tracked evaluations
 //! with within-run caching) and take their hyperparameters through
-//! [`HyperParams`], a string→value map with typed accessors and defaults —
-//! the interface the hypertuner ("tuning the tuner") drives.
+//! [`HyperParams`], a string→value map with typed accessors — the
+//! interface the hypertuner ("tuning the tuner") drives.
+//!
+//! Each algorithm *declares* its hyperparameters as a typed
+//! [`schema::HyperSchema`] inside a [`schema::Descriptor`]; the
+//! [`registry`] of descriptors is the single source of truth for names,
+//! defaults, validation (unknown keys and type mismatches are hard errors
+//! in [`create`]) and the Table III / Table IV hyperparameter search
+//! spaces that [`crate::hypertuning::space`] derives from the declared
+//! grids.
 //!
 //! Implemented algorithms (Kernel Tuner's spread of global + local
-//! methods):
+//! methods) and their schema defaults:
 //!
-//! | name                  | hyperparameters                                   |
+//! | name                  | hyperparameters (schema defaults)                 |
 //! |-----------------------|---------------------------------------------------|
 //! | `random_search`       | —                                                 |
-//! | `simulated_annealing` | `T`, `T_min`, `alpha`, `maxiter`                  |
-//! | `dual_annealing`      | `method` (8 local-search variants)                |
-//! | `genetic_algorithm`   | `method` (4 crossovers), `popsize`, `maxiter`, `mutation_chance` |
-//! | `pso`                 | `popsize`, `maxiter`, `c1`, `c2`, `w`             |
-//! | `differential_evolution` | `popsize`, `F`, `CR`                           |
-//! | `basin_hopping`       | `T`, `perturbation`                               |
-//! | `mls`                 | `restart`, `neighborhood`                         |
-//! | `greedy_ils`          | `perturbation`, `restart`                         |
-//! | `firefly`             | `popsize`, `maxiter`, `beta0`, `gamma`, `alpha`   |
+//! | `simulated_annealing` | `T`=1, `T_min`=0.001, `alpha`=0.995, `maxiter`=2  |
+//! | `dual_annealing`      | `method`=Powell (8 local-search variants), `initial_temp`=5230, `restart_temp_ratio`=0.00002 |
+//! | `genetic_algorithm`   | `method`=uniform (4 crossovers), `popsize`=20, `maxiter`=100, `mutation_chance`=10 |
+//! | `pso`                 | `popsize`=20, `maxiter`=100, `c1`=2, `c2`=1, `w`=0.5 |
+//! | `differential_evolution` | `popsize`=20, `F`=0.7, `CR`=0.6                |
+//! | `basin_hopping`       | `T`=1, `perturbation`=2                           |
+//! | `mls`                 | `neighborhood`=Hamming                            |
+//! | `greedy_ils`          | `perturbation`=1, `restart`=5                     |
+//! | `firefly`             | `popsize`=15, `maxiter`=100, `beta0`=1, `gamma`=0.1, `alpha`=0.3 |
+//!
+//! (This table is checked against the registry by the
+//! `doc_table_matches_registry` test — regenerate it from
+//! [`schema_table`] when schemas change.)
 
+pub mod schema;
+pub mod localsearch;
 pub mod random;
 pub mod annealing;
 pub mod dual_annealing;
@@ -28,11 +42,14 @@ pub mod ga;
 pub mod pso;
 pub mod extras;
 
+pub use schema::{Descriptor, HyperKind, HyperSchema};
+
 use crate::runner::Tuning;
 use crate::searchspace::{SearchSpace, Value};
 use crate::util::rng::Rng;
-use anyhow::{bail, Result};
+use anyhow::Result;
 use std::collections::BTreeMap;
+use std::sync::OnceLock;
 
 /// Hyperparameter assignment for an optimizer.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -92,47 +109,84 @@ pub trait Optimizer: Send + Sync {
     fn run(&self, tuning: &mut Tuning<'_>, rng: &mut Rng);
 }
 
-/// All registered optimizer names.
-pub fn optimizer_names() -> Vec<&'static str> {
-    vec![
-        "random_search",
-        "simulated_annealing",
-        "dual_annealing",
-        "genetic_algorithm",
-        "pso",
-        "differential_evolution",
-        "basin_hopping",
-        "mls",
-        "greedy_ils",
-        "firefly",
-    ]
-}
-
-/// The four algorithms evaluated in the paper (Table III order).
-pub fn paper_algorithms() -> Vec<&'static str> {
-    vec![
-        "dual_annealing",
-        "genetic_algorithm",
-        "pso",
-        "simulated_annealing",
-    ]
-}
-
-/// Instantiate an optimizer by name with hyperparameters.
-pub fn create(name: &str, hp: &HyperParams) -> Result<Box<dyn Optimizer>> {
-    Ok(match name {
-        "random_search" => Box::new(random::RandomSearch),
-        "simulated_annealing" => Box::new(annealing::SimulatedAnnealing::new(hp)),
-        "dual_annealing" => Box::new(dual_annealing::DualAnnealing::new(hp)),
-        "genetic_algorithm" => Box::new(ga::GeneticAlgorithm::new(hp)?),
-        "pso" => Box::new(pso::Pso::new(hp)),
-        "differential_evolution" => Box::new(extras::DifferentialEvolution::new(hp)),
-        "basin_hopping" => Box::new(extras::BasinHopping::new(hp)),
-        "mls" => Box::new(extras::Mls::new(hp)),
-        "greedy_ils" => Box::new(extras::GreedyIls::new(hp)),
-        "firefly" => Box::new(extras::Firefly::new(hp)),
-        other => bail!("unknown optimizer {other:?}"),
+/// The self-describing optimizer registry: one [`Descriptor`] per
+/// algorithm, each declaring its typed hyperparameter schema. Built once;
+/// registration order is the public `optimizer_names()` order.
+pub fn registry() -> &'static [Descriptor] {
+    static REGISTRY: OnceLock<Vec<Descriptor>> = OnceLock::new();
+    REGISTRY.get_or_init(|| {
+        vec![
+            random::descriptor(),
+            annealing::descriptor(),
+            dual_annealing::descriptor(),
+            ga::descriptor(),
+            pso::descriptor(),
+            extras::differential_evolution_descriptor(),
+            extras::basin_hopping_descriptor(),
+            extras::mls_descriptor(),
+            extras::greedy_ils_descriptor(),
+            extras::firefly_descriptor(),
+        ]
     })
+}
+
+/// Look up a registered optimizer's descriptor by name.
+pub fn descriptor(name: &str) -> Result<&'static Descriptor> {
+    registry().iter().find(|d| d.name == name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown optimizer {name:?}; registered: {}",
+            optimizer_names().join(", ")
+        )
+    })
+}
+
+/// All registered optimizer names, in registration order.
+pub fn optimizer_names() -> Vec<&'static str> {
+    registry().iter().map(|d| d.name).collect()
+}
+
+/// The four algorithms evaluated in the paper (`Descriptor::paper`), in
+/// Table III (alphabetical) order. Deliberately flag-based: other
+/// optimizers may declare Table III/IV grids to become hypertunable
+/// without silently joining the paper-replication drivers.
+pub fn paper_algorithms() -> Vec<&'static str> {
+    let mut names: Vec<&'static str> = registry()
+        .iter()
+        .filter(|d| d.paper)
+        .map(|d| d.name)
+        .collect();
+    names.sort_unstable();
+    names
+}
+
+/// One-line-per-optimizer rendering of the registry (name plus
+/// `key=default` pairs) — the source for the module-doc table and the
+/// `tunetuner info` listing.
+pub fn schema_table() -> String {
+    let mut out = String::new();
+    for d in registry() {
+        let hps = if d.schema.is_empty() {
+            "—".to_string()
+        } else {
+            d.schema
+                .iter()
+                .map(|s| format!("{}={}", s.name, s.default.key()))
+                .collect::<Vec<_>>()
+                .join(", ")
+        };
+        out.push_str(&format!("  {:<24} {hps}\n", d.name));
+    }
+    out
+}
+
+/// Instantiate an optimizer by name. The hyperparameters are resolved
+/// against the optimizer's declared schema first: unknown keys, type
+/// mismatches, and out-of-choice categoricals are hard errors (listing
+/// the valid keys), and schema defaults are merged in for absent keys.
+pub fn create(name: &str, hp: &HyperParams) -> Result<Box<dyn Optimizer>> {
+    let d = descriptor(name)?;
+    let resolved = d.resolve(hp)?;
+    (d.build)(&resolved)
 }
 
 /// Relative acceptance scale for annealing-type methods: objective values
@@ -226,6 +280,98 @@ mod tests {
             assert_eq!(opt.name(), name);
         }
         assert!(create("nope", &HyperParams::new()).is_err());
+    }
+
+    #[test]
+    fn create_rejects_unknown_keys_listing_schema() {
+        // A typo'd key used to silently fall back to the default,
+        // invalidating a whole tuning campaign.
+        let err = create("pso", &HyperParams::new().set("c3", 1.0)).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown hyperparameter"), "{msg}");
+        assert!(msg.contains("c1") && msg.contains("c2") && msg.contains("w"), "{msg}");
+        // Keys valid for one optimizer are still rejected for another.
+        assert!(create("simulated_annealing", &HyperParams::new().set("c1", 1.0)).is_err());
+        // Optimizers without hyperparameters reject any key.
+        assert!(create("random_search", &HyperParams::new().set("T", 1.0)).is_err());
+    }
+
+    #[test]
+    fn create_rejects_type_mismatches() {
+        // String where a float is expected.
+        assert!(create("pso", &HyperParams::new().set("c1", "fast")).is_err());
+        // Fractional float where an integer is expected.
+        assert!(create("pso", &HyperParams::new().set("popsize", 2.5)).is_err());
+        // Integral float widens fine; integer narrows fine.
+        assert!(create("pso", &HyperParams::new().set("popsize", 10.0)).is_ok());
+        assert!(create("pso", &HyperParams::new().set("c1", 2i64)).is_ok());
+    }
+
+    #[test]
+    fn create_rejects_out_of_choice_categoricals() {
+        let err =
+            create("dual_annealing", &HyperParams::new().set("method", "powwww")).unwrap_err();
+        assert!(format!("{err:#}").contains("Powell"), "{err:#}");
+        assert!(create("mls", &HyperParams::new().set("neighborhood", "diag")).is_err());
+        assert!(create("mls", &HyperParams::new().set("neighborhood", "Adjacent")).is_ok());
+        for m in dual_annealing::LOCAL_METHODS {
+            assert!(create("dual_annealing", &HyperParams::new().set("method", m)).is_ok());
+        }
+    }
+
+    /// The schema defaults must describe the same configuration the
+    /// builders use when a key is absent: building raw (no schema
+    /// resolution) and building through `create` (schema defaults merged
+    /// in) must produce identical trajectories.
+    #[test]
+    fn schema_defaults_match_builder_defaults() {
+        use crate::runner::{Budget, SimulationRunner};
+        for d in registry() {
+            let (space, cache) = synthetic_cache();
+            let seq = |opt: Box<dyn Optimizer>| {
+                let space = std::sync::Arc::clone(&space);
+                let cache = std::sync::Arc::clone(&cache);
+                let mut sim = SimulationRunner::new(space, cache).unwrap();
+                let mut tuning = Tuning::new(&mut sim, Budget::evals(50));
+                let mut rng = Rng::new(23);
+                opt.run(&mut tuning, &mut rng);
+                tuning
+                    .finish()
+                    .points
+                    .iter()
+                    .map(|p| p.config)
+                    .collect::<Vec<_>>()
+            };
+            let raw = seq((d.build)(&HyperParams::new()).unwrap());
+            let resolved = seq(create(d.name, &HyperParams::new()).unwrap());
+            assert_eq!(raw, resolved, "{}: schema defaults drifted", d.name);
+        }
+    }
+
+    /// The module-doc hyperparameter table must track the registry:
+    /// every optimizer and every `name=default` pair appears in it.
+    /// Regenerate it from [`schema_table`] when schemas change.
+    #[test]
+    fn doc_table_matches_registry() {
+        let doc: String = include_str!("mod.rs")
+            .split_whitespace()
+            .collect::<Vec<_>>()
+            .join(" ");
+        for d in registry() {
+            assert!(
+                doc.contains(&format!("| `{}` |", d.name)),
+                "doc table missing row for {}",
+                d.name
+            );
+            for s in &d.schema {
+                let frag = format!("`{}`={}", s.name, s.default.key());
+                assert!(
+                    doc.contains(&format!("{frag},")) || doc.contains(&format!("{frag} ")),
+                    "doc table missing {frag} for {}",
+                    d.name
+                );
+            }
+        }
     }
 
     /// Every optimizer respects the evaluation budget and finds something.

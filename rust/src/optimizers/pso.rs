@@ -6,9 +6,36 @@
 //! are snapped to the nearest valid lattice point for evaluation. Velocity
 //! update is the canonical `w*v + c1*r1*(pbest - x) + c2*r2*(gbest - x)`.
 
+use super::schema::{self, Descriptor, HyperSchema};
 use super::{HyperParams, Optimizer};
 use crate::runner::Tuning;
 use crate::util::rng::Rng;
+
+/// Registry entry. `w` is declared (typed, defaulted) but contributes no
+/// grid: the paper's sensitivity screen found it had no meaningful effect
+/// and dropped it from both hyperparameter spaces.
+pub fn descriptor() -> Descriptor {
+    Descriptor {
+        name: "pso",
+        paper: true,
+        schema: vec![
+            HyperSchema::int("popsize", 20)
+                .limited(schema::ints(&[10, 20, 30]))
+                .extended(schema::int_range(2, 50, 2)),
+            HyperSchema::int("maxiter", 100)
+                .limited(schema::ints(&[50, 100, 150]))
+                .extended(schema::int_range(10, 200, 10)),
+            HyperSchema::float("c1", 2.0)
+                .limited(schema::floats(&[1.0, 2.0, 3.0]))
+                .extended(schema::float_range(1.0, 3.5, 0.25)),
+            HyperSchema::float("c2", 1.0)
+                .limited(schema::floats(&[0.5, 1.0, 1.5]))
+                .extended(schema::float_range(0.5, 2.0, 0.25)),
+            HyperSchema::float("w", 0.5),
+        ],
+        build: |hp| Ok(Box::new(Pso::new(hp))),
+    }
+}
 
 pub struct Pso {
     pub popsize: usize,

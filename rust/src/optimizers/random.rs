@@ -4,9 +4,20 @@
 //! back to with-replacement once the space is exhausted, which only
 //! happens on tiny spaces).
 
+use super::schema::Descriptor;
 use super::Optimizer;
 use crate::runner::Tuning;
 use crate::util::rng::Rng;
+
+/// Registry entry: random search declares no hyperparameters.
+pub fn descriptor() -> Descriptor {
+    Descriptor {
+        name: "random_search",
+        paper: false,
+        schema: vec![],
+        build: |_hp| Ok(Box::new(RandomSearch)),
+    }
+}
 
 pub struct RandomSearch;
 

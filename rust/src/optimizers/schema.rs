@@ -1,0 +1,342 @@
+//! Self-describing optimizer registry: typed hyperparameter schemas.
+//!
+//! Every optimizer *declares* its hyperparameters as a [`HyperSchema`]
+//! list inside a [`Descriptor`], making the registry the single source of
+//! truth for defaults, validation, documentation, and the Table III /
+//! Table IV hyperparameter search spaces (which
+//! [`crate::hypertuning::space`] derives from the `limited` / `extended`
+//! grids declared here). Before this inversion the spaces were
+//! hand-written tables that could silently drift from the string-keyed
+//! defaults buried in each optimizer's `new(hp)` — a typo'd key fell back
+//! to a default with no error, invalidating a whole tuning run.
+//! [`Descriptor::validate`] turns unknown keys and type mismatches into
+//! hard errors.
+
+use super::{HyperParams, Optimizer};
+use crate::searchspace::Value;
+use anyhow::{bail, Result};
+
+/// The value type a hyperparameter accepts.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum HyperKind {
+    /// Real-valued (integers are accepted and widened).
+    Float,
+    /// Integer-valued (floats with a zero fractional part are accepted).
+    Int,
+    /// Categorical string, constrained to the schema's `choices`.
+    Str,
+}
+
+/// Typed declaration of one hyperparameter: its kind, default, and the
+/// value grids it contributes to the limited (Table III) and extended
+/// (Table IV) hyperparameter search spaces. Empty grids mean the
+/// hyperparameter is excluded from that space (e.g. PSO's `w`, dropped by
+/// the paper's sensitivity screen).
+#[derive(Clone, Debug)]
+pub struct HyperSchema {
+    pub name: &'static str,
+    pub kind: HyperKind,
+    /// Default used when the key is absent (merged in by
+    /// [`Descriptor::resolve`]).
+    pub default: Value,
+    /// Allowed values for `Str` kind; empty = unconstrained.
+    pub choices: Vec<Value>,
+    /// Table III grid (empty = not part of the limited space).
+    pub limited: Vec<Value>,
+    /// Table IV grid (empty = not part of the extended space).
+    pub extended: Vec<Value>,
+}
+
+impl HyperSchema {
+    pub fn float(name: &'static str, default: f64) -> HyperSchema {
+        HyperSchema {
+            name,
+            kind: HyperKind::Float,
+            default: Value::Float(default),
+            choices: Vec::new(),
+            limited: Vec::new(),
+            extended: Vec::new(),
+        }
+    }
+
+    pub fn int(name: &'static str, default: i64) -> HyperSchema {
+        HyperSchema {
+            name,
+            kind: HyperKind::Int,
+            default: Value::Int(default),
+            choices: Vec::new(),
+            limited: Vec::new(),
+            extended: Vec::new(),
+        }
+    }
+
+    pub fn str(name: &'static str, default: &str, choices: &[&str]) -> HyperSchema {
+        HyperSchema {
+            name,
+            kind: HyperKind::Str,
+            default: Value::Str(default.to_string()),
+            choices: strs(choices),
+            limited: Vec::new(),
+            extended: Vec::new(),
+        }
+    }
+
+    /// Declare the Table III (limited) value grid.
+    pub fn limited(mut self, values: Vec<Value>) -> HyperSchema {
+        self.limited = values;
+        self
+    }
+
+    /// Declare the Table IV (extended) value grid.
+    pub fn extended(mut self, values: Vec<Value>) -> HyperSchema {
+        self.extended = values;
+        self
+    }
+
+    /// Check one assigned value against this schema entry.
+    fn check(&self, owner: &str, v: &Value) -> Result<()> {
+        match self.kind {
+            // Bools are rejected for numeric kinds even though the Value
+            // accessors would coerce them to 0/1 — exactly the silent
+            // coercion this validation exists to eliminate.
+            HyperKind::Float => {
+                if matches!(v, Value::Bool(_)) || v.as_f64().is_none() {
+                    bail!(
+                        "hyperparameter {:?} of {owner} expects a float, got {v:?}",
+                        self.name
+                    );
+                }
+            }
+            HyperKind::Int => {
+                if matches!(v, Value::Bool(_)) || v.as_i64().is_none() {
+                    bail!(
+                        "hyperparameter {:?} of {owner} expects an integer, got {v:?}",
+                        self.name
+                    );
+                }
+            }
+            HyperKind::Str => {
+                let Some(s) = v.as_str() else {
+                    bail!(
+                        "hyperparameter {:?} of {owner} expects a string, got {v:?}",
+                        self.name
+                    );
+                };
+                if !self.choices.is_empty()
+                    && !self.choices.iter().any(|c| c.as_str() == Some(s))
+                {
+                    bail!(
+                        "hyperparameter {:?} of {owner} has no choice {s:?}; \
+                         valid choices: {}",
+                        self.name,
+                        self.choices
+                            .iter()
+                            .map(|c| c.key())
+                            .collect::<Vec<_>>()
+                            .join(", ")
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A registered optimizer: its name, declared hyperparameter schema, and
+/// factory. [`super::registry`] collects one per optimizer;
+/// [`super::create`] resolves hyperparameters against the schema before
+/// construction.
+pub struct Descriptor {
+    pub name: &'static str,
+    /// One of the four algorithms the paper evaluates (Table III set).
+    /// Deliberately a flag, not derived from the grids: extra optimizers
+    /// may declare `limited`/`extended` grids to become hypertunable
+    /// without silently joining the paper-replication experiment drivers.
+    pub paper: bool,
+    /// Declaration order defines the parameter order of the derived
+    /// Table III / Table IV search spaces.
+    pub schema: Vec<HyperSchema>,
+    /// Factory invoked with schema-resolved (validated + defaulted)
+    /// hyperparameters.
+    pub build: fn(&HyperParams) -> Result<Box<dyn Optimizer>>,
+}
+
+impl Descriptor {
+    /// True if any hyperparameter contributes a limited (Table III) grid.
+    pub fn has_limited_space(&self) -> bool {
+        self.schema.iter().any(|s| !s.limited.is_empty())
+    }
+
+    /// True if any hyperparameter contributes an extended (Table IV) grid.
+    pub fn has_extended_space(&self) -> bool {
+        self.schema.iter().any(|s| !s.extended.is_empty())
+    }
+
+    /// Hard-validate an assignment: unknown keys, type mismatches and
+    /// out-of-choice categoricals are errors (listing the valid keys),
+    /// rather than silently falling back to defaults.
+    pub fn validate(&self, hp: &HyperParams) -> Result<()> {
+        for (key, value) in &hp.0 {
+            let Some(schema) = self.schema.iter().find(|s| s.name == key.as_str()) else {
+                if self.schema.is_empty() {
+                    bail!(
+                        "unknown hyperparameter {key:?}: {} takes no hyperparameters",
+                        self.name
+                    );
+                }
+                bail!(
+                    "unknown hyperparameter {key:?} for {}; valid keys: {}",
+                    self.name,
+                    self.schema
+                        .iter()
+                        .map(|s| s.name)
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                );
+            };
+            schema.check(self.name, value)?;
+        }
+        Ok(())
+    }
+
+    /// Validate, then merge schema defaults for every absent key, so the
+    /// optimizer constructor always sees a fully populated assignment and
+    /// the schema stays the single source of truth for defaults.
+    pub fn resolve(&self, hp: &HyperParams) -> Result<HyperParams> {
+        self.validate(hp)?;
+        let mut full = hp.clone();
+        for s in &self.schema {
+            full.0
+                .entry(s.name.to_string())
+                .or_insert_with(|| s.default.clone());
+        }
+        Ok(full)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Grid helpers for schema declarations
+
+/// Float literals as grid values.
+pub fn floats(values: &[f64]) -> Vec<Value> {
+    values.iter().map(|&v| Value::Float(v)).collect()
+}
+
+/// Integer literals as grid values.
+pub fn ints(values: &[i64]) -> Vec<Value> {
+    values.iter().map(|&v| Value::Int(v)).collect()
+}
+
+/// String literals as grid values.
+pub fn strs(values: &[&str]) -> Vec<Value> {
+    values.iter().map(|&v| Value::Str(v.to_string())).collect()
+}
+
+/// Inclusive integer grid `lo, lo+step, …, hi`.
+pub fn int_range(lo: i64, hi: i64, step: i64) -> Vec<Value> {
+    assert!(step > 0);
+    (lo..=hi).step_by(step as usize).map(Value::Int).collect()
+}
+
+/// Float grid `lo, lo+step, …`, stopping at the last value ≤ `hi`. `hi`
+/// itself is included exactly when `hi - lo` is an (almost exact)
+/// multiple of `step` — e.g. `(0.1, 2.0, 0.1)` ends at 2.0, while
+/// `(0.0001, 0.1, 0.001)` ends at 0.0991 because `lo` is off the step
+/// grid.
+///
+/// Generated by integer index — never by accumulation, whose rounding
+/// drift could drop an on-grid upper endpoint — and snapped to 1e-9
+/// precision so grid values print cleanly (`0.3`, not
+/// `0.30000000000000004`). The result is deduplicated, so a step below
+/// the snap precision cannot emit repeated values.
+pub fn float_range(lo: f64, hi: f64, step: f64) -> Vec<Value> {
+    assert!(step > 0.0 && hi >= lo && lo.is_finite() && hi.is_finite());
+    let span = (hi - lo) / step;
+    // Tolerate representation error in the step count so an (almost)
+    // exactly divisible span still includes `hi`.
+    let steps = if (span - span.round()).abs() < 1e-6 {
+        span.round()
+    } else {
+        span.floor()
+    };
+    let n = steps as usize;
+    let mut out: Vec<Value> = Vec::with_capacity(n + 1);
+    for i in 0..=n {
+        let raw = lo + i as f64 * step;
+        out.push(Value::Float((raw * 1e9).round() / 1e9));
+    }
+    out.dedup();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn float_range_keeps_endpoints_and_dedupes() {
+        // (0.1, 2.0, 0.1): 1.9/0.1 is 18.999999999999996 in f64 — the old
+        // accumulating generator was one rounding error away from dropping
+        // the 2.0 endpoint.
+        let vals = float_range(0.1, 2.0, 0.1);
+        assert_eq!(vals.len(), 20);
+        assert_eq!(vals.first().unwrap().as_f64(), Some(0.1));
+        assert_eq!(vals.last().unwrap().as_f64(), Some(2.0));
+        // Snapped values print cleanly.
+        assert_eq!(vals[2].key(), "0.3");
+        // Strictly increasing — no duplicates after rounding.
+        for w in vals.windows(2) {
+            assert!(w[0].as_f64().unwrap() < w[1].as_f64().unwrap());
+        }
+    }
+
+    #[test]
+    fn float_range_off_grid_lo_preserved() {
+        // The old generator snapped values to the step grid, collapsing an
+        // off-grid `lo` like 0.0001 to 0.0 (a nonsense T_min).
+        let vals = float_range(0.0001, 0.1, 0.001);
+        assert_eq!(vals.len(), 100);
+        assert_eq!(vals[0].as_f64(), Some(0.0001));
+        assert_eq!(vals[0].key(), "0.0001");
+        assert_eq!(vals[99].key(), "0.0991");
+        for w in vals.windows(2) {
+            assert!(w[0].as_f64().unwrap() < w[1].as_f64().unwrap());
+        }
+    }
+
+    #[test]
+    fn float_range_quarter_steps_exact() {
+        let c1 = float_range(1.0, 3.5, 0.25);
+        assert_eq!(c1.len(), 11);
+        assert_eq!(c1.last().unwrap().as_f64(), Some(3.5));
+        let c2 = float_range(0.5, 2.0, 0.25);
+        assert_eq!(c2.len(), 7);
+        assert_eq!(c2.last().unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn int_range_inclusive() {
+        let vals = int_range(2, 50, 2);
+        assert_eq!(vals.len(), 25);
+        assert_eq!(vals[0].as_i64(), Some(2));
+        assert_eq!(vals[24].as_i64(), Some(50));
+    }
+
+    #[test]
+    fn schema_check_types() {
+        let s = HyperSchema::float("T", 1.0);
+        assert!(s.check("x", &Value::Float(2.0)).is_ok());
+        assert!(s.check("x", &Value::Int(2)).is_ok());
+        assert!(s.check("x", &Value::Str("hot".into())).is_err());
+        assert!(s.check("x", &Value::Bool(true)).is_err());
+        let i = HyperSchema::int("popsize", 20);
+        assert!(i.check("x", &Value::Int(10)).is_ok());
+        assert!(i.check("x", &Value::Float(10.0)).is_ok());
+        assert!(i.check("x", &Value::Float(10.5)).is_err());
+        assert!(i.check("x", &Value::Bool(true)).is_err());
+        let c = HyperSchema::str("method", "a", &["a", "b"]);
+        assert!(c.check("x", &Value::Str("b".into())).is_ok());
+        assert!(c.check("x", &Value::Str("z".into())).is_err());
+        assert!(c.check("x", &Value::Int(1)).is_err());
+    }
+}

@@ -32,9 +32,15 @@
 //!   truth for decoding and the cache-friendly scan that `snap()` uses;
 //!   per-index ranks are a parallel `Vec<u64>`. There is no vec-of-vecs.
 //!
+//! * **CSR neighbor graphs.** Each `(space, neighborhood)` pair lazily
+//!   builds a compressed-sparse-row adjacency on first use, after which
+//!   `neighbors` is a borrowed `&[u32]` slice — zero probes — at
+//!   ~O(Σ|N(v)|) memory; the shared local-search engine in
+//!   [`crate::optimizers::localsearch`] walks these slices.
+//!
 //! Hot queries (`index_of`, `with_dim`, `random_neighbor`,
-//! `for_each_neighbor`, `snap`, `snap_encoded`) perform zero heap
-//! allocations per call.
+//! `for_each_neighbor`, `neighbors`, `snap`, `snap_encoded`) perform zero
+//! heap allocations per call (the CSR build being a one-time cost).
 //!
 //! The same engine backs both levels of the paper: *kernel* configuration
 //! spaces (L3 tuning) and *hyperparameter* configuration spaces

@@ -20,6 +20,17 @@
 //! takes over (still allocation-free per lookup). Encoded configurations
 //! live in one row-major `Vec<u16>` (the SoA `flat` buffer), the single
 //! source of truth for decoding.
+//!
+//! # CSR neighbor graphs
+//!
+//! Local-search-heavy optimizers re-walk the same neighborhoods every
+//! descent, so each `(space, neighborhood)` pair additionally carries a
+//! **compressed-sparse-row adjacency** built lazily on first use:
+//! [`SearchSpace::neighbors`] then returns a borrowed `&[u32]` slice —
+//! zero probes and zero allocation per call — while the probing visitor
+//! [`SearchSpace::for_each_neighbor`] remains available for one-shot
+//! traversals (and is what the CSR build itself uses, so the two paths
+//! agree element-for-element by construction).
 
 use super::constraint::Constraint;
 use super::param::{TunableParam, Value};
@@ -27,6 +38,7 @@ use crate::util::hash::FastMap;
 use crate::util::rng::Rng;
 use anyhow::{bail, Result};
 use std::collections::HashMap;
+use std::sync::OnceLock;
 
 /// Encoded configuration: per-dimension value indices.
 pub type Encoded = Vec<u16>;
@@ -43,6 +55,24 @@ pub enum Neighborhood {
     Hamming,
     /// Change one dimension to an adjacent value index (±1).
     Adjacent,
+}
+
+impl Neighborhood {
+    /// Slot in the per-space CSR graph array.
+    fn slot(self) -> usize {
+        match self {
+            Neighborhood::Hamming => 0,
+            Neighborhood::Adjacent => 1,
+        }
+    }
+}
+
+/// Precomputed compressed-sparse-row adjacency for one neighborhood:
+/// the neighbors of config `i` are `targets[offsets[i]..offsets[i + 1]]`,
+/// in the same dimension-major order `for_each_neighbor` visits them.
+struct CsrGraph {
+    offsets: Vec<usize>,
+    targets: Vec<u32>,
 }
 
 /// Validity index over packed Cartesian ranks.
@@ -71,9 +101,30 @@ pub struct SearchSpace {
     dims: Vec<usize>,
     /// Mixed-radix strides: `strides[d] = Π dims[d+1..]`.
     strides: Vec<u64>,
+    /// Lazily built CSR neighbor graphs, one per [`Neighborhood`]
+    /// (`[Hamming, Adjacent]`). Local-search-heavy optimizers replay the
+    /// same neighborhoods across many descents and repeats; paying the
+    /// one-time Σ|N(v)| probe cost turns every later `neighbors` call
+    /// into a borrowed slice — zero probes, zero allocation.
+    csr: [OnceLock<CsrGraph>; 2],
 }
 
 impl SearchSpace {
+    /// Largest space for which the lazy CSR neighbor-graph build behind
+    /// [`SearchSpace::neighbors`] is presumed to amortize (≈30 MiB of
+    /// targets at typical degrees). Callers that might touch bigger
+    /// spaces only a handful of times should consult
+    /// [`SearchSpace::csr_worthwhile`] and fall back to
+    /// [`SearchSpace::neighbors_into`].
+    pub const CSR_AMORTIZE_MAX_CONFIGS: usize = 1 << 18;
+
+    /// True when this space is small enough that the one-time CSR build
+    /// amortizes over replayed neighborhoods (the local-search engine's
+    /// criterion for choosing the slice path over per-pass probing).
+    pub fn csr_worthwhile(&self) -> bool {
+        self.len() <= Self::CSR_AMORTIZE_MAX_CONFIGS
+    }
+
     /// Enumerate the valid configurations of `params` under `constraints`.
     pub fn build(
         name: &str,
@@ -204,6 +255,7 @@ impl SearchSpace {
             index,
             dims,
             strides,
+            csr: [OnceLock::new(), OnceLock::new()],
         })
     }
 
@@ -377,17 +429,46 @@ impl SearchSpace {
 
     /// Neighbor indices collected into a caller-owned buffer (cleared
     /// first), so tight local-search loops can reuse one allocation.
+    /// Probes the packed-rank index directly — does *not* build the CSR
+    /// graph (use [`SearchSpace::neighbors`] for replayed neighborhoods).
     pub fn neighbors_into(&self, idx: usize, hood: Neighborhood, out: &mut Vec<usize>) {
         out.clear();
         self.for_each_neighbor(idx, hood, |i| out.push(i));
     }
 
-    /// Neighbor indices of a configuration (allocating convenience form of
-    /// [`SearchSpace::for_each_neighbor`]).
-    pub fn neighbors(&self, idx: usize, hood: Neighborhood) -> Vec<usize> {
-        let mut out = Vec::new();
-        self.neighbors_into(idx, hood, &mut out);
-        out
+    /// The CSR graph for a neighborhood, built on first use from the
+    /// probing visitor (so slice order equals `for_each_neighbor` order).
+    fn csr(&self, hood: Neighborhood) -> &CsrGraph {
+        self.csr[hood.slot()].get_or_init(|| {
+            assert!(
+                self.len() <= u32::MAX as usize,
+                "search space {:?} too large for a CSR neighbor graph",
+                self.name
+            );
+            let mut offsets = Vec::with_capacity(self.len() + 1);
+            let mut targets: Vec<u32> = Vec::new();
+            offsets.push(0);
+            for idx in 0..self.len() {
+                self.for_each_neighbor(idx, hood, |i| targets.push(i as u32));
+                offsets.push(targets.len());
+            }
+            CsrGraph { offsets, targets }
+        })
+    }
+
+    /// Neighbor indices of a configuration as a borrowed slice into the
+    /// precomputed CSR graph for this `(space, neighborhood)` — zero
+    /// probes and zero allocation per call after the lazy one-time build.
+    /// Order matches [`SearchSpace::for_each_neighbor`] exactly.
+    ///
+    /// The first call pays the whole-space build: O(Σ|N(v)|) probes and
+    /// ~4·Σ|N(v)| bytes, worthwhile only when neighborhoods are replayed.
+    /// Callers that may touch very large spaces a handful of times should
+    /// prefer [`SearchSpace::neighbors_into`] (as the local-search engine
+    /// does past its size threshold).
+    pub fn neighbors(&self, idx: usize, hood: Neighborhood) -> &[u32] {
+        let csr = self.csr(hood);
+        &csr.targets[csr.offsets[idx]..csr.offsets[idx + 1]]
     }
 
     /// A random valid neighbor, falling back to a random config if the
@@ -644,13 +725,29 @@ mod tests {
         assert_eq!(adj.len(), 2);
         // All neighbors valid and distinct from self.
         for &n in h.iter().chain(adj.iter()) {
-            assert_ne!(n, idx);
-            assert!(n < s.len());
+            assert_ne!(n as usize, idx);
+            assert!((n as usize) < s.len());
         }
-        // Buffer reuse path agrees with the allocating path.
+        // Buffer reuse (probing) path agrees with the CSR slice path.
         let mut buf = vec![999usize; 3];
         s.neighbors_into(idx, Neighborhood::Hamming, &mut buf);
-        assert_eq!(buf, h);
+        let h_usize: Vec<usize> = h.iter().map(|&n| n as usize).collect();
+        assert_eq!(buf, h_usize);
+    }
+
+    #[test]
+    fn csr_slices_match_visitor_on_every_config() {
+        let s = space_2d();
+        let mut visited = Vec::new();
+        for hood in [Neighborhood::Hamming, Neighborhood::Adjacent] {
+            for i in 0..s.len() {
+                visited.clear();
+                s.for_each_neighbor(i, hood, |n| visited.push(n));
+                let slice: Vec<usize> =
+                    s.neighbors(i, hood).iter().map(|&n| n as usize).collect();
+                assert_eq!(slice, visited, "config {i} {hood:?}");
+            }
+        }
     }
 
     #[test]

@@ -3,6 +3,15 @@
 //! These require `make artifacts` to have run (they are skipped with a
 //! warning otherwise, so `cargo test` works in a fresh checkout).
 
+// Same style-lint policy as the library crate (see rust/src/lib.rs);
+// integration tests and benches are separate crates and do not inherit it.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::many_single_char_names,
+    clippy::type_complexity
+)]
+
 use tunetuner::gpu::specs::all_devices;
 use tunetuner::kernels;
 use tunetuner::perfmodel::analytical;

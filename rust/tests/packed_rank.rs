@@ -2,8 +2,19 @@
 //! mixed-radix rank index must be bit-for-bit interchangeable with the
 //! reference hash index it replaced — same `index_of` bijection, same
 //! `neighbors` sets (Hamming and Adjacent, including order), and `snap`
-//! must always land on a valid configuration. Checked on all seed
-//! kernels' spaces plus randomized constraint spaces.
+//! must always land on a valid configuration. The CSR-backed `neighbors`
+//! slices must additionally visit exactly what the probing
+//! `for_each_neighbor` visitor yields. Checked on all seed kernels'
+//! spaces plus randomized constraint spaces.
+
+// Same style-lint policy as the library crate (see rust/src/lib.rs);
+// integration tests and benches are separate crates and do not inherit it.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::many_single_char_names,
+    clippy::type_complexity
+)]
 
 use tunetuner::kernels;
 use tunetuner::searchspace::{Constraint, Neighborhood, SearchSpace, TunableParam};
@@ -98,11 +109,22 @@ fn check_space(space: &SearchSpace, label: &str) {
             );
         }
 
-        // Neighbor sets are identical (order included) for both hoods.
+        // Neighbor sets are identical (order included) for both hoods,
+        // on all three paths: CSR slice, probing visitor, buffer reuse.
         for hood in [Neighborhood::Hamming, Neighborhood::Adjacent] {
-            let got = space.neighbors(i, hood);
+            let got: Vec<usize> = space
+                .neighbors(i, hood)
+                .iter()
+                .map(|&n| n as usize)
+                .collect();
             let want = reference_neighbors(space, &reference, i, hood);
-            assert_eq!(got, want, "{label}: neighbors {i} {hood:?}");
+            assert_eq!(got, want, "{label}: CSR neighbors {i} {hood:?}");
+            let mut visited = Vec::new();
+            space.for_each_neighbor(i, hood, |n| visited.push(n));
+            assert_eq!(got, visited, "{label}: CSR vs visitor {i} {hood:?}");
+            let mut buf = Vec::new();
+            space.neighbors_into(i, hood, &mut buf);
+            assert_eq!(got, buf, "{label}: CSR vs buffer {i} {hood:?}");
         }
 
         // snap on jittered lattice points returns valid indices, and is

@@ -2,6 +2,15 @@
 //! hypertuning, over the real kernels (native oracle engine so the tests
 //! run without artifacts; the PJRT path is covered by integration.rs).
 
+// Same style-lint policy as the library crate (see rust/src/lib.rs);
+// integration tests and benches are separate crates and do not inherit it.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::many_single_char_names,
+    clippy::type_complexity
+)]
+
 use std::sync::Arc;
 use tunetuner::dataset::hub::Hub;
 use tunetuner::gpu::specs::A4000;

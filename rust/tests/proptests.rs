@@ -3,6 +3,15 @@
 //! own deterministic RNG: each property is checked over many generated
 //! cases, and failures print the seed for replay.
 
+// Same style-lint policy as the library crate (see rust/src/lib.rs);
+// integration tests and benches are separate crates and do not inherit it.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::many_single_char_names,
+    clippy::type_complexity
+)]
+
 use std::collections::HashMap;
 use tunetuner::optimizers::{self, HyperParams};
 use tunetuner::searchspace::{Constraint, Neighborhood, SearchSpace, TunableParam, Value};
@@ -51,15 +60,40 @@ fn prop_space_invariants() {
         // Neighbor validity + symmetry (Hamming is symmetric by definition).
         let probe = space.len() / 2;
         for hood in [Neighborhood::Hamming, Neighborhood::Adjacent] {
-            for n in space.neighbors(probe, hood) {
+            for &n in space.neighbors(probe, hood) {
+                let n = n as usize;
                 assert!(n < space.len());
                 assert_ne!(n, probe);
                 if hood == Neighborhood::Hamming {
                     assert!(
-                        space.neighbors(n, hood).contains(&probe),
+                        space.neighbors(n, hood).contains(&(probe as u32)),
                         "case {case}: hamming not symmetric"
                     );
                 }
+            }
+        }
+    }
+}
+
+/// The CSR-backed `neighbors` slices visit exactly the same indices, in
+/// the same order, as the probing `for_each_neighbor` visitor — on every
+/// config of many randomized constraint spaces.
+#[test]
+fn prop_csr_slices_match_visitor() {
+    let mut rng = Rng::new(0xC5A);
+    for case in 0..20 {
+        let space = random_space(&mut rng);
+        let mut visited = Vec::new();
+        for hood in [Neighborhood::Hamming, Neighborhood::Adjacent] {
+            for i in 0..space.len() {
+                visited.clear();
+                space.for_each_neighbor(i, hood, |n| visited.push(n));
+                let slice: Vec<usize> = space
+                    .neighbors(i, hood)
+                    .iter()
+                    .map(|&n| n as usize)
+                    .collect();
+                assert_eq!(slice, visited, "case {case} config {i} {hood:?}");
             }
         }
     }
