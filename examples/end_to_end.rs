@@ -3,7 +3,8 @@
 //!
 //!   L1/L2 AOT artifacts -> PJRT engine -> brute-force hub (24 spaces)
 //!   -> simulation mode -> exhaustive hyperparameter tuning on the
-//!   12 training spaces -> generalization to the 12 test spaces
+//!   12 training spaces (campaigns on the persistent executor)
+//!   -> generalization to the 12 test spaces via `Campaign` re-evaluation
 //!   -> headline metrics (improvement %, live-vs-sim speedup).
 //!
 //! This is the run recorded in EXPERIMENTS.md §End-to-end. Runtime is a
@@ -11,11 +12,12 @@
 
 use anyhow::Result;
 use std::sync::Arc;
+use tunetuner::campaign::Campaign;
 use tunetuner::dataset::hub::{Hub, HUB_SEED};
 use tunetuner::gpu::specs::{TEST_DEVICES, TRAIN_DEVICES};
 use tunetuner::hypertuning::{exhaustive_tuning, limited_algos, limited_space};
 use tunetuner::kernels;
-use tunetuner::methodology::{evaluate_algorithm, SpaceEval};
+use tunetuner::methodology::SpaceEval;
 use tunetuner::optimizers::HyperParams;
 use tunetuner::runtime::Engine;
 use tunetuner::util::stats;
@@ -40,7 +42,7 @@ fn main() -> Result<()> {
     );
 
     // ---- Stage 3: prepared train/test spaces --------------------------------
-    let prep = |devices: &[&str]| -> Result<Vec<SpaceEval>> {
+    let prep = |devices: &[&str]| -> Result<Arc<Vec<SpaceEval>>> {
         let mut out = Vec::new();
         for k in ["dedispersion", "convolution", "hotspot", "gemm"] {
             let kernel = kernels::kernel_by_name(k)?;
@@ -53,7 +55,7 @@ fn main() -> Result<()> {
                 ));
             }
         }
-        Ok(out)
+        Ok(Arc::new(out))
     };
     let train = prep(&TRAIN_DEVICES)?;
     let test = prep(&TEST_DEVICES)?;
@@ -79,23 +81,34 @@ fn main() -> Result<()> {
         live_estimate += budget_sum * hp_space.len() as f64 * tuning_repeats as f64;
 
         // ---- Stage 5: re-evaluate best vs most-average on train + test ------
+        // One campaign per (hyperparameter assignment, split), all sharing
+        // the prepared spaces and the process-wide executor pool.
         let best_hp = HyperParams::from_space_config(&hp_space, results.best().config_idx);
         let avg_hp =
             HyperParams::from_space_config(&hp_space, results.most_average().config_idx);
-        let best_all = evaluate_algorithm(algo, &best_hp, &train, eval_repeats, 7)?;
-        let avg_all = evaluate_algorithm(algo, &avg_hp, &train, eval_repeats, 7)?;
-        let best_test = evaluate_algorithm(algo, &best_hp, &test, eval_repeats, 9)?;
-        let avg_test = evaluate_algorithm(algo, &avg_hp, &test, eval_repeats, 9)?;
+        let campaign = |spaces: &Arc<Vec<SpaceEval>>, hp: &HyperParams, seed: u64| {
+            Campaign::new(algo)
+                .hyperparams(hp.clone())
+                .spaces_arc(Arc::clone(spaces))
+                .repeats(eval_repeats)
+                .seed(seed)
+                .run()
+                .map(|r| r.score())
+        };
+        let best_all = campaign(&train, &best_hp, 7)?;
+        let avg_all = campaign(&train, &avg_hp, 7)?;
+        let best_test = campaign(&test, &best_hp, 9)?;
+        let avg_test = campaign(&test, &avg_hp, 9)?;
         let pct = |b: f64, a: f64| (b - a) / a.abs().max(1e-9) * 100.0;
-        improvements_pct.push(pct(best_all.score, avg_all.score));
-        test_improvements_pct.push(pct(best_test.score, avg_test.score));
+        improvements_pct.push(pct(best_all, avg_all));
+        test_improvements_pct.push(pct(best_test, avg_test));
         println!(
             "[4] {algo:<22} best {} | train {:.3} -> {:.3} | test {:.3} -> {:.3}",
             results.best().hp_key,
-            avg_all.score,
-            best_all.score,
-            avg_test.score,
-            best_test.score
+            avg_all,
+            best_all,
+            avg_test,
+            best_test
         );
     }
 

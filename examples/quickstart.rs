@@ -1,23 +1,22 @@
-//! Quickstart: auto-tune one kernel on one (simulated) GPU.
+//! Quickstart: auto-tune one kernel on one (simulated) GPU through the
+//! `Campaign` API.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 //!
-//! Demonstrates the core loop a framework user sees: build/load the
-//! brute-force cache for a (kernel, device) pair, run an optimization
-//! algorithm in simulation mode under a time budget, and compare against
-//! the known optimum.
+//! Demonstrates the loop a framework user sees: build a campaign over a
+//! kernel×device matrix (the brute-force cache is built on demand), run
+//! repeated tuning sessions in simulation mode on the persistent worker
+//! pool, and read the scored, provenance-carrying result envelope.
 
 use anyhow::Result;
 use std::sync::Arc;
-use tunetuner::dataset::hub::{Hub, HUB_SEED};
+use tunetuner::campaign::{Campaign, LogObserver};
+use tunetuner::dataset::hub::Hub;
 use tunetuner::kernels;
-use tunetuner::methodology::SpaceEval;
-use tunetuner::optimizers::{self, HyperParams};
-use tunetuner::runner::{Budget, SimulationRunner, Tuning};
+use tunetuner::optimizers::HyperParams;
 use tunetuner::runtime::Engine;
-use tunetuner::util::rng::Rng;
 
 fn main() -> Result<()> {
     // 1. The tuning problem: GEMM on the simulated A100.
@@ -34,50 +33,45 @@ fn main() -> Result<()> {
     let engine = Arc::new(Engine::auto(&Engine::default_artifacts_dir()));
     println!("engine backend: {:?}", engine.backend());
 
-    // 3. Brute-force cache (built once, then loaded from the hub).
-    let hub = Hub::new(Hub::default_root());
-    hub.ensure(&["gemm"], &["A100"], Arc::clone(&engine), HUB_SEED)?;
-    let cache = hub.load("gemm", "A100")?;
-    println!(
-        "cache: {} configs, optimum {:.4} ms, {:.1} simulated brute-force hours",
-        cache.records.len(),
-        cache.optimum() * 1e3,
-        cache.bruteforce_seconds / 3600.0
-    );
-
-    // 4. The methodology budget: time for random search to reach 95% of
-    //    the median->optimum distance.
-    let se = SpaceEval::new(kernel.space_arc(), Arc::clone(&cache), 0.95, 50);
-    println!("tuning budget: {:.0} simulated seconds", se.budget_seconds);
-
-    // 5. Tune with the genetic algorithm (tuned-default hyperparameters).
+    // 3. One campaign: the genetic algorithm with tuned-default
+    //    hyperparameters, 5 repeats under the methodology budget. The hub
+    //    cache for gemm@A100 is brute-forced on first run, then reused.
     let hp = HyperParams::new()
         .set("method", "uniform")
         .set("popsize", 20i64)
         .set("maxiter", 150i64)
         .set("mutation_chance", 10i64);
-    let opt = optimizers::create("genetic_algorithm", &hp)?;
-    let mut sim = SimulationRunner::new(kernel.space_arc(), Arc::clone(&cache))?;
-    let mut tuning = Tuning::new(&mut sim, Budget::seconds(se.budget_seconds));
     let wall = std::time::Instant::now();
-    opt.run(&mut tuning, &mut Rng::new(42));
+    let result = Campaign::new("genetic_algorithm")
+        .hyperparams(hp)
+        .matrix(&Hub::new(Hub::default_root()), engine, &["gemm"], &["A100"])?
+        .repeats(5)
+        .seed(42)
+        .observer(Arc::new(LogObserver))
+        .run()?;
     let wall = wall.elapsed();
-    let trace = tuning.finish();
 
-    let best = trace.best().expect("found nothing");
-    let score = tunetuner::util::stats::mean(&se.score_traces(&[trace.clone()]));
+    // 4. The result envelope: per-space outcome + Eq. 3 aggregate.
+    let space = &result.spaces[0];
     println!(
-        "\ngenetic_algorithm: best {:.4} ms after {} unique evaluations \
-         ({:.0}s simulated, {:.3} performance score)",
-        best * 1e3,
-        trace.unique_evals,
-        trace.elapsed,
-        score
+        "\n{}: budget {:.0}s, optimum {:.4} ms (fingerprint {})",
+        space.label,
+        space.budget_seconds,
+        space.optimum * 1e3,
+        space.space_fingerprint
     );
     println!(
-        "gap to optimum: {:.2}% — simulation served {} evals in {wall:?} real time",
-        (best / cache.optimum() - 1.0) * 100.0,
-        sim.lookups,
+        "genetic_algorithm: best {:.4} ms after {:.0} unique evaluations \
+         on average ({:.0}s simulated per run, {:.3} performance score)",
+        space.best_value * 1e3,
+        space.mean_unique_evals,
+        result.simulated_seconds / result.repeats as f64,
+        result.score()
+    );
+    println!(
+        "gap to optimum: {:.2}% — {:.0}s of simulated tuning served in {wall:?} real time",
+        (space.best_value / space.optimum - 1.0) * 100.0,
+        result.simulated_seconds,
     );
     Ok(())
 }

@@ -297,6 +297,93 @@ fn main() {
         bruteforce::bruteforce(&mut live).unwrap().records.len()
     });
 
+    // ---- executor: persistent pool vs spawn-per-call (reuse_vs_spawn) -------------
+    // The meta-tuning path runs ~150 evaluate_algorithm calls back to back;
+    // before the campaign API each call spawned a fresh thread::scope. This
+    // group measures exactly that delta on a synthetic-kernel workload that
+    // needs no hub: N batches of 2 tuning runs each, scatter/gathered either
+    // through the persistent executor or through per-call scoped threads.
+    //
+    // The setup (synthetic brute-force) is gated on the filter so e.g.
+    // `cargo bench -- space` doesn't pay for it.
+    let executor_bench_names = "executor/spawn_scope/100-runs \
+         executor/persistent/100-runs executor/campaign_run/4-repeats";
+    let wants_executor = b
+        .filter
+        .as_ref()
+        .map(|f| executor_bench_names.contains(f.as_str()))
+        .unwrap_or(true);
+    if wants_executor {
+        let kernel = kernels::kernel_by_name("synthetic").unwrap();
+        let mut live = LiveRunner::new(
+            kernels::kernel_by_name("synthetic").unwrap(),
+            &A100,
+            Arc::clone(&engine),
+            NoiseModel::default(),
+            42,
+        );
+        let syn_cache = Arc::new(bruteforce::bruteforce(&mut live).unwrap());
+        let syn_space = kernel.space_arc();
+        let run_one = {
+            let space = Arc::clone(&syn_space);
+            let cache = Arc::clone(&syn_cache);
+            move |seed: u64| {
+                let mut sim =
+                    SimulationRunner::new_unchecked(Arc::clone(&space), Arc::clone(&cache));
+                let mut tuning = Tuning::new(&mut sim, Budget::evals(20));
+                let opt = optimizers::create("random_search", &HyperParams::new()).unwrap();
+                opt.run(&mut tuning, &mut Rng::new(seed));
+                tuning.finish().unique_evals
+            }
+        };
+        let batches = 50usize;
+        {
+            let run_one = run_one.clone();
+            b.throughput("executor/spawn_scope/100-runs", batches * 2, move || {
+                let mut acc = 0usize;
+                for batch in 0..batches {
+                    let mut out = [0usize; 2];
+                    std::thread::scope(|scope| {
+                        for (r, slot) in out.iter_mut().enumerate() {
+                            let run_one = &run_one;
+                            scope.spawn(move || {
+                                *slot = run_one((batch * 2 + r) as u64);
+                            });
+                        }
+                    });
+                    acc += out[0] + out[1];
+                }
+                std::hint::black_box(acc);
+            });
+        }
+        {
+            let pool = tunetuner::campaign::Executor::global();
+            b.throughput("executor/persistent/100-runs", batches * 2, move || {
+                let mut acc = 0usize;
+                for batch in 0..batches {
+                    let run_one = run_one.clone();
+                    let out =
+                        pool.scatter(2, move |r| run_one((batch * 2 + r) as u64));
+                    acc += out[0] + out[1];
+                }
+                std::hint::black_box(acc);
+            });
+        }
+        // End-to-end campaign rate on the same workload (scoring included).
+        let campaign = tunetuner::campaign::Campaign::new("random_search")
+            .space_evals(vec![SpaceEval::new(
+                Arc::clone(&syn_space),
+                Arc::clone(&syn_cache),
+                0.95,
+                20,
+            )])
+            .repeats(4)
+            .budget(tunetuner::campaign::BudgetPolicy::Evals(20));
+        b.throughput("executor/campaign_run/4-repeats", 4, || {
+            std::hint::black_box(campaign.run().unwrap().score());
+        });
+    }
+
     // ---- shared hub-backed setup for sim/optimizer/hypertune benches --------------
     let hub = Hub::new(Hub::default_root());
     if !hub.exists("gemm", "A100") {

@@ -1,0 +1,339 @@
+//! Persistent scatter/gather worker pool.
+//!
+//! Before the campaign API, every call to `evaluate_algorithm` spawned a
+//! fresh `std::thread::scope` — the meta-tuning path re-created the whole
+//! pool for each of its ~150 hyperparameter evaluations. The [`Executor`]
+//! keeps one set of workers alive for the process (or a scoped pool for
+//! tests/benches) and hands them batches of independent jobs:
+//!
+//! * **scatter** — jobs are claimed from a shared atomic counter, so work
+//!   distribution is dynamic (a slow space doesn't idle the other
+//!   workers) exactly as with the old per-call scope;
+//! * **gather** — every job writes its own slot; results come back in job
+//!   order, so downstream scoring is independent of thread scheduling.
+//!
+//! Determinism is unaffected by pooling: job payloads derive their RNG
+//! streams from the job index, never from the executing thread.
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+thread_local! {
+    /// True while this thread is executing an executor job. `scatter` is
+    /// not reentrant (the submit lock is held for the whole batch); a
+    /// nested call from inside a job would deadlock, so it panics with a
+    /// diagnosis instead.
+    static IN_EXECUTOR_JOB: Cell<bool> = const { Cell::new(false) };
+}
+
+/// One published batch of jobs.
+struct Batch {
+    n_jobs: usize,
+    /// Next job index to claim.
+    next: AtomicUsize,
+    /// Jobs finished (success or panic).
+    completed: AtomicUsize,
+    panicked: AtomicBool,
+    /// Runs job `i`; the closure writes its result into slot `i`.
+    job: Box<dyn Fn(usize) + Send + Sync>,
+}
+
+struct State {
+    batch: Option<Arc<Batch>>,
+    /// Bumped on every publish so sleeping workers can tell a new batch
+    /// from a spurious wakeup.
+    epoch: u64,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    work_ready: Condvar,
+    batch_done: Condvar,
+    jobs_completed: AtomicU64,
+    batches: AtomicU64,
+}
+
+/// A persistent worker pool executing scatter/gather batches.
+pub struct Executor {
+    shared: Arc<Shared>,
+    /// Serializes batches: one in flight at a time (batches from
+    /// concurrent tests/threads queue up here).
+    submit: Mutex<()>,
+    workers: usize,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Executor {
+    /// Pool with an explicit worker count (0 = jobs run on the submitting
+    /// thread only, still correct — useful for tests).
+    pub fn new(workers: usize) -> Executor {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                batch: None,
+                epoch: 0,
+                shutdown: false,
+            }),
+            work_ready: Condvar::new(),
+            batch_done: Condvar::new(),
+            jobs_completed: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("tt-exec-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn executor worker")
+            })
+            .collect();
+        Executor {
+            shared,
+            submit: Mutex::new(()),
+            workers,
+            handles,
+        }
+    }
+
+    /// The process-wide shared pool (sized to the available parallelism),
+    /// created on first use and kept alive for the process lifetime.
+    pub fn global() -> Arc<Executor> {
+        static GLOBAL: OnceLock<Arc<Executor>> = OnceLock::new();
+        Arc::clone(GLOBAL.get_or_init(|| {
+            let workers = std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(4);
+            Arc::new(Executor::new(workers))
+        }))
+    }
+
+    /// Number of pool workers (the submitting thread also participates in
+    /// every batch, so effective parallelism is `workers + 1`).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Total jobs completed over the executor's lifetime.
+    pub fn jobs_completed(&self) -> u64 {
+        self.shared.jobs_completed.load(Ordering::Relaxed)
+    }
+
+    /// Total batches executed over the executor's lifetime.
+    pub fn batches(&self) -> u64 {
+        self.shared.batches.load(Ordering::Relaxed)
+    }
+
+    /// Run `n_jobs` independent jobs and gather their results in job
+    /// order. Blocks until every job finished; panics (after the batch
+    /// drains) if any job panicked, mirroring `thread::scope` semantics.
+    ///
+    /// Not reentrant: a job (or an observer it calls) must not scatter on
+    /// any executor from inside the job — the calling batch would wait on
+    /// the nested one while holding its slot. Detected and panicked with
+    /// a diagnosis rather than deadlocking.
+    pub fn scatter<T, F>(&self, n_jobs: usize, job: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(usize) -> T + Send + Sync + 'static,
+    {
+        if IN_EXECUTOR_JOB.with(|f| f.get()) {
+            panic!(
+                "Executor::scatter called from inside an executor job; nested \
+                 scatter/Campaign::run would deadlock the pool — restructure so \
+                 campaigns are submitted from the driving thread"
+            );
+        }
+        if n_jobs == 0 {
+            return Vec::new();
+        }
+        let slots: Arc<Vec<Mutex<Option<T>>>> =
+            Arc::new((0..n_jobs).map(|_| Mutex::new(None)).collect());
+        let write_slots = Arc::clone(&slots);
+        let batch = Arc::new(Batch {
+            n_jobs,
+            next: AtomicUsize::new(0),
+            completed: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+            job: Box::new(move |i| {
+                let v = job(i);
+                *write_slots[i].lock().unwrap() = Some(v);
+            }),
+        });
+
+        let submit = self.submit.lock().unwrap();
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.epoch += 1;
+            st.batch = Some(Arc::clone(&batch));
+            self.shared.work_ready.notify_all();
+        }
+        self.shared.batches.fetch_add(1, Ordering::Relaxed);
+        // The submitting thread drains the same counter: a zero-worker
+        // executor still completes, and small batches don't wait on pool
+        // wakeup latency.
+        run_jobs(&self.shared, &batch);
+        let mut st = self.shared.state.lock().unwrap();
+        while batch.completed.load(Ordering::Acquire) < n_jobs {
+            st = self.shared.batch_done.wait(st).unwrap();
+        }
+        st.batch = None;
+        drop(st);
+        drop(submit);
+
+        if batch.panicked.load(Ordering::Relaxed) {
+            panic!("executor job panicked");
+        }
+        slots
+            .iter()
+            .map(|m| m.lock().unwrap().take().expect("job slot unfilled"))
+            .collect()
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_ready.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            h.join().ok();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut last_epoch = 0u64;
+    loop {
+        let batch = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != last_epoch {
+                    last_epoch = st.epoch;
+                    if let Some(b) = st.batch.clone() {
+                        break b;
+                    }
+                    // Epoch advanced but the batch already drained and was
+                    // cleared — keep waiting for the next one.
+                }
+                st = shared.work_ready.wait(st).unwrap();
+            }
+        };
+        run_jobs(shared, &batch);
+    }
+}
+
+/// Claim and run jobs from `batch` until its counter is exhausted.
+fn run_jobs(shared: &Shared, batch: &Batch) {
+    loop {
+        let i = batch.next.fetch_add(1, Ordering::Relaxed);
+        if i >= batch.n_jobs {
+            return;
+        }
+        IN_EXECUTOR_JOB.with(|f| f.set(true));
+        let ok = catch_unwind(AssertUnwindSafe(|| (batch.job)(i)));
+        IN_EXECUTOR_JOB.with(|f| f.set(false));
+        if ok.is_err() {
+            batch.panicked.store(true, Ordering::Relaxed);
+        }
+        shared.jobs_completed.fetch_add(1, Ordering::Relaxed);
+        let done = batch.completed.fetch_add(1, Ordering::AcqRel) + 1;
+        if done == batch.n_jobs {
+            // Take the state lock before notifying so the submitter can't
+            // miss the wakeup between its check and its wait.
+            let _guard = shared.state.lock().unwrap();
+            shared.batch_done.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scatter_returns_in_job_order() {
+        let ex = Executor::new(4);
+        let out = ex.scatter(100, |i| i * 3);
+        assert_eq!(out, (0..100).map(|i| i * 3).collect::<Vec<_>>());
+        assert_eq!(ex.jobs_completed(), 100);
+        assert_eq!(ex.batches(), 1);
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_on_submitter() {
+        let ex = Executor::new(0);
+        let out = ex.scatter(10, |i| i + 1);
+        assert_eq!(out, (1..=10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_batch_is_noop() {
+        let ex = Executor::new(2);
+        let out: Vec<usize> = ex.scatter(0, |i| i);
+        assert!(out.is_empty());
+        assert_eq!(ex.batches(), 0);
+    }
+
+    #[test]
+    fn pool_is_reusable_across_batches() {
+        let ex = Executor::new(3);
+        for round in 0..50u64 {
+            let out = ex.scatter(8, move |i| round * 100 + i as u64);
+            assert_eq!(out, (0..8).map(|i| round * 100 + i).collect::<Vec<_>>());
+        }
+        assert_eq!(ex.batches(), 50);
+        assert_eq!(ex.jobs_completed(), 400);
+    }
+
+    #[test]
+    fn concurrent_submitters_serialize() {
+        let ex = Arc::new(Executor::new(2));
+        std::thread::scope(|scope| {
+            for t in 0..4u64 {
+                let ex = Arc::clone(&ex);
+                scope.spawn(move || {
+                    let out = ex.scatter(20, move |i| t * 1000 + i as u64);
+                    assert_eq!(out, (0..20).map(|i| t * 1000 + i).collect::<Vec<_>>());
+                });
+            }
+        });
+        assert_eq!(ex.jobs_completed(), 80);
+    }
+
+    #[test]
+    fn nested_scatter_fails_loudly_instead_of_deadlocking() {
+        let ex = Arc::new(Executor::new(1));
+        let inner = Arc::clone(&ex);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            ex.scatter(2, move |_| inner.scatter(1, |i| i))
+        }));
+        assert!(r.is_err(), "nested scatter must panic, not hang");
+        // The pool survives.
+        assert_eq!(ex.scatter(2, |i| i), vec![0, 1]);
+    }
+
+    #[test]
+    fn job_panic_propagates_to_submitter() {
+        let ex = Executor::new(2);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            ex.scatter(10, |i| {
+                if i == 5 {
+                    panic!("boom");
+                }
+                i
+            })
+        }));
+        assert!(r.is_err());
+        // The pool survives a panicked batch.
+        assert_eq!(ex.scatter(3, |i| i), vec![0, 1, 2]);
+    }
+}

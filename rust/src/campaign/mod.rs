@@ -1,0 +1,652 @@
+//! The orchestration API: one typed, observable entry point for all
+//! tuning runs.
+//!
+//! The paper's core loop — repeated simulated tuning runs aggregated into
+//! Eq. 3 scores — used to be re-plumbed by hand in every driver (CLI
+//! `tune`/`hypertune`, the exhaustive sweep, the meta-strategies, the
+//! experiment regenerators), each with its own seed derivation, budgets,
+//! and thread scopes. A [`Campaign`] owns that loop once:
+//!
+//! ```no_run
+//! use tunetuner::campaign::Campaign;
+//! use tunetuner::dataset::hub::Hub;
+//! use tunetuner::optimizers::HyperParams;
+//! use tunetuner::runtime::Engine;
+//! use std::sync::Arc;
+//!
+//! # fn main() -> tunetuner::Result<()> {
+//! let engine = Arc::new(Engine::auto(&Engine::default_artifacts_dir()));
+//! let result = Campaign::new("genetic_algorithm")
+//!     .hyperparams(HyperParams::new().set("popsize", 20i64))
+//!     .matrix(&Hub::new(Hub::default_root()), engine, &["gemm"], &["A100"])?
+//!     .repeats(5)
+//!     .seed(42)
+//!     .run()?;
+//! println!("score {:.3}", result.score());
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! * Spaces come either from a kernel×device **matrix** (brute-force
+//!   caches are built on demand through the engine) or from prepared
+//!   [`SpaceEval`]s.
+//! * Execution happens on a persistent [`Executor`] worker pool — one
+//!   pool per process instead of one `thread::scope` per evaluation
+//!   (the meta-tuning path runs ~150 campaigns back to back).
+//! * Progress surfaces through an [`Observer`]; results come back as a
+//!   serde-stable, versioned [`CampaignResult`] carrying each space's
+//!   structural fingerprint as provenance.
+//! * Seeds are deterministic per (campaign seed, space index, repeat):
+//!   results are bit-reproducible regardless of pool size or scheduling.
+//!
+//! `methodology::evaluate_algorithm`, `hypertuning::exhaustive_tuning`
+//! and `hypertuning::MetaRunner` are thin wrappers over this module.
+
+pub mod executor;
+pub mod observer;
+pub mod result;
+
+pub use executor::Executor;
+pub use observer::{LogObserver, NullObserver, Observer};
+pub use result::{CampaignResult, SpaceOutcome, SCHEMA, SCHEMA_VERSION};
+
+use crate::dataset::hub::{Hub, HUB_SEED};
+use crate::error::{Result, TuneError};
+use crate::gpu::specs::device_by_name;
+use crate::kernels;
+use crate::methodology::{AggregateResult, SpaceEval};
+use crate::optimizers::{self, HyperParams};
+use crate::perfmodel::NoiseModel;
+use crate::runner::{Budget, LiveRunner, SimulationRunner, Trace, Tuning};
+use crate::runtime::Engine;
+use crate::util::rng::{mix64, Rng};
+use std::sync::Arc;
+
+/// How each tuning run's budget is derived.
+#[derive(Clone, Debug)]
+pub enum BudgetPolicy {
+    /// The methodology default: each space's calibrated baseline budget
+    /// (`SpaceEval::budget_seconds`) with the standard proposal cap
+    /// (`4 × space + 10_000`) bounding schedule-heavy revisit spins.
+    Methodology,
+    /// Fixed simulated seconds per run (same proposal cap).
+    Seconds(f64),
+    /// Fixed unique-evaluation count per run.
+    Evals(usize),
+}
+
+impl BudgetPolicy {
+    fn for_space(&self, se: &SpaceEval) -> Budget {
+        match self {
+            BudgetPolicy::Methodology => Budget::seconds(se.budget_seconds)
+                .with_proposal_cap(4 * se.space.len() + 10_000),
+            BudgetPolicy::Seconds(s) => {
+                Budget::seconds(*s).with_proposal_cap(4 * se.space.len() + 10_000)
+            }
+            BudgetPolicy::Evals(n) => Budget::evals(*n),
+        }
+    }
+
+    fn render(&self) -> String {
+        match self {
+            BudgetPolicy::Methodology => "methodology".to_string(),
+            BudgetPolicy::Seconds(s) => format!("{s}s"),
+            BudgetPolicy::Evals(n) => format!("{n} evals"),
+        }
+    }
+}
+
+/// Where evaluations come from.
+#[derive(Clone)]
+pub enum Backend {
+    /// The paper's simulation mode: replay from the brute-force caches
+    /// (the default — what makes hypertuning feasible).
+    Sim,
+    /// Live evaluation through the device-model engine: every proposal is
+    /// measured fresh (noise included). `seed` is the hub-style raw seed
+    /// the per-(kernel, device) noise streams are derived from.
+    Live { engine: Arc<Engine>, seed: u64 },
+}
+
+impl Backend {
+    fn name(&self) -> &'static str {
+        match self {
+            Backend::Sim => "sim",
+            Backend::Live { .. } => "live",
+        }
+    }
+}
+
+/// A configured tuning campaign: one algorithm + hyperparameter
+/// assignment, run `repeats` times on every prepared space, scored with
+/// the methodology's Eq. 2/Eq. 3. Build with [`Campaign::new`] and the
+/// chained setters, execute with [`Campaign::run`].
+#[derive(Clone)]
+pub struct Campaign {
+    algo: String,
+    hp: HyperParams,
+    spaces: Arc<Vec<SpaceEval>>,
+    repeats: usize,
+    seed: u64,
+    cutoff: f64,
+    points: usize,
+    budget: BudgetPolicy,
+    backend: Backend,
+    observer: Arc<dyn Observer>,
+    executor: Arc<Executor>,
+}
+
+impl Campaign {
+    /// Start a campaign for a registered optimizer (validated at
+    /// [`run`](Campaign::run) time against the optimizer's schema).
+    pub fn new(algo: &str) -> Campaign {
+        Campaign {
+            algo: algo.to_string(),
+            hp: HyperParams::new(),
+            spaces: Arc::new(Vec::new()),
+            repeats: 1,
+            seed: 42,
+            cutoff: crate::methodology::DEFAULT_CUTOFF,
+            points: crate::methodology::DEFAULT_POINTS,
+            budget: BudgetPolicy::Methodology,
+            backend: Backend::Sim,
+            observer: Arc::new(NullObserver),
+            executor: Executor::global(),
+        }
+    }
+
+    /// Hyperparameter assignment (schema-validated at run time).
+    pub fn hyperparams(mut self, hp: HyperParams) -> Campaign {
+        self.hp = hp;
+        self
+    }
+
+    /// Same campaign, different hyperparameters — the cheap per-config
+    /// clone the hypertuning drivers use (spaces stay shared).
+    pub fn with_hyperparams(&self, hp: &HyperParams) -> Campaign {
+        let mut c = self.clone();
+        c.hp = hp.clone();
+        c
+    }
+
+    /// Explicit prepared spaces.
+    pub fn space_evals(mut self, spaces: Vec<SpaceEval>) -> Campaign {
+        self.spaces = Arc::new(spaces);
+        self
+    }
+
+    /// Prepared spaces shared with other campaigns (no clone).
+    pub fn spaces_arc(mut self, spaces: Arc<Vec<SpaceEval>>) -> Campaign {
+        self.spaces = spaces;
+        self
+    }
+
+    /// Budget-cutoff percentile for [`matrix`](Campaign::matrix)-prepared
+    /// spaces (default [`crate::methodology::DEFAULT_CUTOFF`]). Must be
+    /// set **before** `matrix()`, which consumes it to build the spaces.
+    pub fn cutoff(mut self, cutoff: f64) -> Campaign {
+        self.cutoff = cutoff;
+        self
+    }
+
+    /// Sampling points per curve for [`matrix`](Campaign::matrix)-prepared
+    /// spaces (default [`crate::methodology::DEFAULT_POINTS`]). Must be
+    /// set **before** `matrix()`, which consumes it to build the spaces.
+    pub fn points(mut self, points: usize) -> Campaign {
+        self.points = points;
+        self
+    }
+
+    /// Prepare the kernel×device matrix: ensure every brute-force cache
+    /// exists in the hub (building missing ones through `engine`), then
+    /// derive each space's methodology budget and baseline — using the
+    /// [`cutoff`](Campaign::cutoff) / [`points`](Campaign::points) set so
+    /// far, so call those first. Spaces are ordered kernel-major
+    /// (`k0×d0, k0×d1, …`), matching the paper's train/test layouts.
+    pub fn matrix(
+        mut self,
+        hub: &Hub,
+        engine: Arc<Engine>,
+        kernel_names: &[&str],
+        device_names: &[&str],
+    ) -> Result<Campaign> {
+        for d in device_names {
+            if device_by_name(d).is_none() {
+                return Err(TuneError::UnknownDevice((*d).to_string()));
+            }
+        }
+        hub.ensure(kernel_names, device_names, engine, HUB_SEED)?;
+        let mut spaces = Vec::with_capacity(kernel_names.len() * device_names.len());
+        for k in kernel_names {
+            let kernel = kernels::kernel_by_name(k)?;
+            for d in device_names {
+                let cache = hub.load(kernel.name, d)?;
+                spaces.push(SpaceEval::new(
+                    kernel.space_arc(),
+                    cache,
+                    self.cutoff,
+                    self.points,
+                ));
+            }
+        }
+        self.spaces = Arc::new(spaces);
+        Ok(self)
+    }
+
+    /// Tuning runs per space (the paper: 25 while hypertuning, 100 for
+    /// re-evaluation).
+    pub fn repeats(mut self, repeats: usize) -> Campaign {
+        self.repeats = repeats;
+        self
+    }
+
+    /// Campaign seed. Each (space `s`, repeat `r`) run draws its RNG from
+    /// `mix64(seed, mix64(s, r))`, so results are reproducible regardless
+    /// of pool size or scheduling.
+    pub fn seed(mut self, seed: u64) -> Campaign {
+        self.seed = seed;
+        self
+    }
+
+    /// Budget policy (default [`BudgetPolicy::Methodology`]).
+    pub fn budget(mut self, budget: BudgetPolicy) -> Campaign {
+        self.budget = budget;
+        self
+    }
+
+    /// Evaluation backend (default [`Backend::Sim`]).
+    pub fn backend(mut self, backend: Backend) -> Campaign {
+        self.backend = backend;
+        self
+    }
+
+    /// Progress observer (default [`NullObserver`]).
+    pub fn observer(mut self, observer: Arc<dyn Observer>) -> Campaign {
+        self.observer = observer;
+        self
+    }
+
+    /// Executor to run on (default the process-wide [`Executor::global`]).
+    pub fn executor(mut self, executor: Arc<Executor>) -> Campaign {
+        self.executor = executor;
+        self
+    }
+
+    /// The prepared spaces.
+    pub fn spaces(&self) -> &[SpaceEval] {
+        &self.spaces
+    }
+
+    /// Validate, scatter all (space, repeat) runs onto the executor,
+    /// gather and score the traces, and assemble the result envelope.
+    pub fn run(&self) -> Result<CampaignResult> {
+        let t0 = std::time::Instant::now();
+        // Validate up front: algorithm + hyperparameters against the
+        // registry schema (typed errors), spaces and repeats non-empty,
+        // and — for the live backend — resolvable kernel/device names.
+        let resolved = optimizers::descriptor(&self.algo)?.resolve(&self.hp)?;
+        // Full construction once up front: a descriptor whose `build` can
+        // fail beyond schema checks must surface a typed error here, not
+        // a panic inside a pool worker.
+        optimizers::create(&self.algo, &self.hp)?;
+        if self.spaces.is_empty() {
+            return Err(TuneError::InvalidInput(
+                "campaign has no spaces (use .matrix() or .space_evals())".into(),
+            ));
+        }
+        if self.repeats == 0 {
+            return Err(TuneError::InvalidInput("campaign repeats must be >= 1".into()));
+        }
+        match &self.backend {
+            Backend::Sim => {
+                // Fail fast on stale caches (TuneError::StaleCache) before
+                // burning a whole campaign replaying misaligned indices —
+                // the guard the old per-run `SimulationRunner::new` gave
+                // the CLI path. Spot-checks 4 keys per space, so the jobs
+                // themselves can keep using the unchecked constructor.
+                for se in self.spaces.iter() {
+                    se.cache.verify_against(&se.space)?;
+                }
+            }
+            Backend::Live { .. } => {
+                for se in self.spaces.iter() {
+                    kernels::kernel_by_name(&se.cache.kernel)?;
+                    if device_by_name(&se.cache.device).is_none() {
+                        return Err(TuneError::UnknownDevice(se.cache.device.clone()));
+                    }
+                }
+            }
+        }
+
+        let hp_key = resolved.key();
+        self.observer
+            .campaign_started(&self.algo, &hp_key, self.spaces.len(), self.repeats);
+        for (s, se) in self.spaces.iter().enumerate() {
+            self.observer.space_started(s, &se.label, se.budget_seconds);
+        }
+
+        // Scatter: one job per (space, repeat); every job derives its RNG
+        // from the job index, so gather order == job order and results
+        // are scheduling-independent.
+        let n_jobs = self.spaces.len() * self.repeats;
+        let job_spaces = Arc::clone(&self.spaces);
+        let job_observer = Arc::clone(&self.observer);
+        let algo = self.algo.clone();
+        let hp = self.hp.clone();
+        let repeats = self.repeats;
+        let seed = self.seed;
+        let budget = self.budget.clone();
+        let backend = self.backend.clone();
+        let traces: Vec<Trace> = self.executor.scatter(n_jobs, move |job| {
+            let (s, r) = (job / repeats, job % repeats);
+            let se = &job_spaces[s];
+            job_observer.run_started(s, r);
+            // Per-job optimizer instance (Optimizer is stateless across
+            // runs, and create() is cheap).
+            let opt = optimizers::create(&algo, &hp).expect("validated before scatter");
+            let budget = budget.for_space(se);
+            let mut rng = Rng::new(mix64(seed, mix64(s as u64, r as u64)));
+            let trace = match &backend {
+                Backend::Sim => {
+                    let mut sim = SimulationRunner::new_unchecked(
+                        Arc::clone(&se.space),
+                        Arc::clone(&se.cache),
+                    );
+                    let mut tuning = Tuning::new(&mut sim, budget);
+                    opt.run(&mut tuning, &mut rng);
+                    tuning.finish()
+                }
+                Backend::Live { engine, seed } => {
+                    let kernel = kernels::kernel_by_name(&se.cache.kernel)
+                        .expect("validated before scatter");
+                    let device = device_by_name(&se.cache.device)
+                        .expect("validated before scatter");
+                    let mut live = LiveRunner::new(
+                        kernel,
+                        &device,
+                        Arc::clone(engine),
+                        NoiseModel::default(),
+                        *seed,
+                    );
+                    let mut tuning = Tuning::new(&mut live, budget);
+                    opt.run(&mut tuning, &mut rng);
+                    tuning.finish()
+                }
+            };
+            job_observer.trace_completed(
+                s,
+                r,
+                trace.best().unwrap_or(f64::INFINITY),
+                trace.unique_evals,
+                trace.elapsed,
+            );
+            trace
+        });
+
+        // Gather: score each space's repeats (traces are in job order).
+        let mut spaces_out = Vec::with_capacity(self.spaces.len());
+        let mut per_space_scores = Vec::with_capacity(self.spaces.len());
+        let mut simulated = 0.0;
+        for (s, se) in self.spaces.iter().enumerate() {
+            let runs = &traces[s * self.repeats..(s + 1) * self.repeats];
+            let scores = se.score_traces(runs);
+            let mean_score = crate::util::stats::mean(&scores);
+            self.observer.space_scored(s, &se.label, mean_score);
+            simulated += runs.iter().map(|t| t.elapsed).sum::<f64>();
+            spaces_out.push(SpaceOutcome {
+                label: se.label.clone(),
+                kernel: se.cache.kernel.clone(),
+                device: se.cache.device.clone(),
+                space_fingerprint: se.space.fingerprint(),
+                budget_seconds: se.budget_seconds,
+                optimum: se.optimum,
+                best_value: runs
+                    .iter()
+                    .filter_map(|t| t.best())
+                    .fold(f64::INFINITY, f64::min),
+                mean_unique_evals: runs.iter().map(|t| t.unique_evals as f64).sum::<f64>()
+                    / runs.len() as f64,
+                mean_score,
+                scores: scores.clone(),
+            });
+            per_space_scores.push(scores);
+        }
+        let aggregate = AggregateResult::from_per_space_scores(per_space_scores);
+        let wallclock = t0.elapsed().as_secs_f64();
+        self.observer.campaign_finished(aggregate.score, wallclock);
+        Ok(CampaignResult {
+            algo: self.algo.clone(),
+            hp_key,
+            hp: resolved.0.into_iter().collect(),
+            repeats: self.repeats,
+            seed: self.seed,
+            backend: self.backend.name().to_string(),
+            budget: self.budget.render(),
+            spaces: spaces_out,
+            aggregate,
+            wallclock_seconds: wallclock,
+            simulated_seconds: simulated,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::bruteforce;
+    use crate::gpu::specs::{A100, W7800};
+    use crate::perfmodel::NoiseModel;
+    use std::sync::Mutex;
+    use std::sync::OnceLock;
+
+    fn spaces() -> &'static Vec<SpaceEval> {
+        static SPACES: OnceLock<Vec<SpaceEval>> = OnceLock::new();
+        SPACES.get_or_init(|| {
+            let engine = Arc::new(Engine::native());
+            [&A100, &W7800]
+                .iter()
+                .map(|dev| {
+                    let kernel = kernels::kernel_by_name("synthetic").unwrap();
+                    let mut live = LiveRunner::new(
+                        kernels::kernel_by_name("synthetic").unwrap(),
+                        dev,
+                        Arc::clone(&engine),
+                        NoiseModel::default(),
+                        42,
+                    );
+                    let cache = Arc::new(bruteforce::bruteforce(&mut live).unwrap());
+                    SpaceEval::new(kernel.space_arc(), cache, 0.95, 20)
+                })
+                .collect()
+        })
+    }
+
+    // The golden comparison against a verbatim copy of the pre-refactor
+    // thread::scope evaluator lives in rust/tests/campaign.rs (comparing
+    // against `evaluate_algorithm` here would be tautological — it is a
+    // thin wrapper over this module now).
+
+    #[test]
+    fn stale_cache_is_typed_error() {
+        let se = &spaces()[0];
+        let gemm = kernels::kernel_by_name("gemm").unwrap();
+        // A cache for the synthetic space presented with the gemm space:
+        // the campaign must refuse before running anything.
+        let stale = SpaceEval::new(gemm.space_arc(), Arc::clone(&se.cache), 0.95, 10);
+        let err = Campaign::new("random_search")
+            .space_evals(vec![stale])
+            .run()
+            .unwrap_err();
+        assert!(matches!(err, TuneError::StaleCache(_)), "{err}");
+    }
+
+    #[test]
+    fn campaign_is_deterministic_across_pool_sizes() {
+        let base = Campaign::new("genetic_algorithm")
+            .space_evals(spaces().clone())
+            .repeats(6)
+            .seed(11);
+        let wide = base.clone().run().unwrap();
+        let narrow = base
+            .executor(Arc::new(Executor::new(0)))
+            .run()
+            .unwrap();
+        assert_eq!(wide.score().to_bits(), narrow.score().to_bits());
+        assert_eq!(wide.aggregate.aggregate_curve, narrow.aggregate.aggregate_curve);
+    }
+
+    #[test]
+    fn validation_is_typed() {
+        let err = Campaign::new("nope")
+            .space_evals(spaces().clone())
+            .run()
+            .unwrap_err();
+        assert!(matches!(err, TuneError::UnknownAlgorithm { .. }), "{err}");
+        let err = Campaign::new("pso")
+            .hyperparams(HyperParams::new().set("c3", 1.0))
+            .space_evals(spaces().clone())
+            .run()
+            .unwrap_err();
+        assert!(matches!(err, TuneError::SchemaViolation(_)), "{err}");
+        let err = Campaign::new("pso").run().unwrap_err();
+        assert!(matches!(err, TuneError::InvalidInput(_)), "{err}");
+        let err = Campaign::new("pso")
+            .space_evals(spaces().clone())
+            .repeats(0)
+            .run()
+            .unwrap_err();
+        assert!(matches!(err, TuneError::InvalidInput(_)), "{err}");
+    }
+
+    #[test]
+    fn envelope_carries_provenance_and_outcomes() {
+        let c = Campaign::new("mls")
+            .space_evals(spaces().clone())
+            .repeats(4)
+            .seed(5)
+            .run()
+            .unwrap();
+        assert_eq!(c.spaces.len(), 2);
+        for (so, se) in c.spaces.iter().zip(spaces()) {
+            assert_eq!(so.space_fingerprint, se.space.fingerprint());
+            assert_eq!(so.kernel, "synthetic");
+            assert_eq!(so.scores.len(), 20);
+            assert!(so.best_value.is_finite());
+            assert!(so.mean_unique_evals > 0.0);
+        }
+        assert_eq!(c.backend, "sim");
+        assert_eq!(c.budget, "methodology");
+        // The resolved hyperparameters (schema defaults) are recorded.
+        assert!(c.hp_key.contains("neighborhood="), "{}", c.hp_key);
+        // Round-trips through the JSON envelope.
+        let back = CampaignResult::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.score(), c.score());
+        assert_eq!(back.spaces[0].space_fingerprint, c.spaces[0].space_fingerprint);
+    }
+
+    #[test]
+    fn eval_budget_policy_bounds_runs() {
+        let c = Campaign::new("random_search")
+            .space_evals(spaces().clone())
+            .repeats(3)
+            .budget(BudgetPolicy::Evals(7))
+            .run()
+            .unwrap();
+        for so in &c.spaces {
+            assert!(so.mean_unique_evals <= 7.0 + 1e-9);
+        }
+        assert_eq!(c.budget, "7 evals");
+    }
+
+    #[test]
+    fn live_backend_runs_and_scores() {
+        let c = Campaign::new("random_search")
+            .space_evals(spaces().clone())
+            .repeats(3)
+            .seed(9)
+            .backend(Backend::Live {
+                engine: Arc::new(Engine::native()),
+                seed: 42,
+            })
+            .run()
+            .unwrap();
+        assert_eq!(c.backend, "live");
+        // Live evaluations replay the same device model the caches were
+        // built from, so scores stay in the plausible band.
+        assert!(c.score() > -1.5 && c.score() < 1.0, "score {}", c.score());
+    }
+
+    /// Events from the submitting thread are totally ordered; worker
+    /// events respect the documented partial order.
+    #[derive(Default)]
+    struct Collector(Mutex<Vec<String>>);
+
+    impl Observer for Collector {
+        fn campaign_started(&self, algo: &str, _hp: &str, spaces: usize, repeats: usize) {
+            self.0
+                .lock()
+                .unwrap()
+                .push(format!("campaign_started {algo} {spaces} {repeats}"));
+        }
+        fn space_started(&self, s: usize, _label: &str, _b: f64) {
+            self.0.lock().unwrap().push(format!("space_started {s}"));
+        }
+        fn run_started(&self, s: usize, r: usize) {
+            self.0.lock().unwrap().push(format!("run_started {s} {r}"));
+        }
+        fn trace_completed(&self, s: usize, r: usize, _b: f64, _u: usize, _e: f64) {
+            self.0.lock().unwrap().push(format!("trace_completed {s} {r}"));
+        }
+        fn space_scored(&self, s: usize, _label: &str, _m: f64) {
+            self.0.lock().unwrap().push(format!("space_scored {s}"));
+        }
+        fn campaign_finished(&self, _score: f64, _w: f64) {
+            self.0.lock().unwrap().push("campaign_finished".to_string());
+        }
+    }
+
+    #[test]
+    fn observer_event_ordering() {
+        let collector = Arc::new(Collector::default());
+        Campaign::new("pso")
+            .space_evals(spaces().clone())
+            .repeats(3)
+            .observer(Arc::clone(&collector) as Arc<dyn Observer>)
+            .run()
+            .unwrap();
+        let events = collector.0.lock().unwrap().clone();
+        let pos = |name: &str| events.iter().position(|e| e == name).unwrap();
+
+        assert!(events[0].starts_with("campaign_started pso 2 3"));
+        assert_eq!(events.last().unwrap(), "campaign_finished");
+        // All space_started events precede all run/trace events.
+        let last_started = events
+            .iter()
+            .rposition(|e| e.starts_with("space_started"))
+            .unwrap();
+        let first_run = events
+            .iter()
+            .position(|e| e.starts_with("run_started"))
+            .unwrap();
+        assert!(last_started < first_run);
+        // Every (space, repeat) ran exactly once, start before completion.
+        for s in 0..2 {
+            for r in 0..3 {
+                let started = pos(&format!("run_started {s} {r}"));
+                let done = pos(&format!("trace_completed {s} {r}"));
+                assert!(started < done);
+                assert_eq!(
+                    events.iter().filter(|e| **e == format!("trace_completed {s} {r}")).count(),
+                    1
+                );
+            }
+        }
+        // Scoring happens after every trace, in space order.
+        let last_trace = events
+            .iter()
+            .rposition(|e| e.starts_with("trace_completed"))
+            .unwrap();
+        assert!(pos("space_scored 0") > last_trace);
+        assert!(pos("space_scored 0") < pos("space_scored 1"));
+    }
+}

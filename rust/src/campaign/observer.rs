@@ -1,0 +1,103 @@
+//! Campaign progress events.
+//!
+//! A [`Campaign`](super::Campaign) reports its life cycle through an
+//! [`Observer`]: batch consumers (exhaustive sweeps, experiments) attach
+//! the no-op [`NullObserver`], the CLI attaches a [`LogObserver`], and
+//! tests attach collectors to assert event ordering. All methods have
+//! empty default bodies, so observers implement only what they need.
+//!
+//! Threading: `campaign_started`, `space_started`, `space_scored`,
+//! `config_scored` and `campaign_finished` are emitted from the
+//! submitting thread in deterministic order; `run_started` and
+//! `trace_completed` are emitted from pool workers as runs execute, so
+//! their relative order across (space, repeat) pairs depends on
+//! scheduling. The guaranteed partial order: every `space_started`
+//! precedes every `run_started`/`trace_completed` of the campaign, and
+//! every `trace_completed` precedes every `space_scored`.
+
+/// Receives campaign progress events. Implementations must be cheap and
+/// non-blocking — `trace_completed` fires on the tuning hot path.
+pub trait Observer: Send + Sync {
+    /// A campaign began: algorithm, stable hyperparameter key, number of
+    /// prepared spaces and repeats per space.
+    fn campaign_started(&self, _algo: &str, _hp_key: &str, _spaces: usize, _repeats: usize) {}
+
+    /// A search space is about to be tuned (emitted once per space, in
+    /// space order, before any run starts).
+    fn space_started(&self, _space_idx: usize, _label: &str, _budget_seconds: f64) {}
+
+    /// One (space, repeat) tuning run was claimed by a worker.
+    fn run_started(&self, _space_idx: usize, _repeat: usize) {}
+
+    /// One tuning run finished with its best value, unique-evaluation
+    /// count, and simulated seconds consumed.
+    fn trace_completed(
+        &self,
+        _space_idx: usize,
+        _repeat: usize,
+        _best: f64,
+        _unique_evals: usize,
+        _elapsed: f64,
+    ) {
+    }
+
+    /// A space's repeats were aggregated into its Eq. 2 score curve.
+    fn space_scored(&self, _space_idx: usize, _label: &str, _mean_score: f64) {}
+
+    /// A hyperparameter configuration received its aggregate (Eq. 3)
+    /// score — emitted by the hypertuning drivers, once per campaign they
+    /// run, with the configuration's index in the hyperparameter space.
+    fn config_scored(&self, _config_idx: usize, _hp_key: &str, _score: f64) {}
+
+    /// The campaign finished with its scalar score.
+    fn campaign_finished(&self, _score: f64, _wallclock_seconds: f64) {}
+}
+
+/// Ignores every event (the default for batch/library use).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NullObserver;
+
+impl Observer for NullObserver {}
+
+/// Logs campaign progress through the crate logger: space/campaign
+/// milestones at info level, per-run completions at debug level (visible
+/// with `--verbose`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LogObserver;
+
+impl Observer for LogObserver {
+    fn campaign_started(&self, algo: &str, hp_key: &str, spaces: usize, repeats: usize) {
+        let hp = if hp_key.is_empty() { "defaults" } else { hp_key };
+        crate::log_info!("campaign {algo} [{hp}]: {spaces} spaces x {repeats} repeats");
+    }
+
+    fn space_started(&self, space_idx: usize, label: &str, budget_seconds: f64) {
+        crate::log_debug!("  space {space_idx} {label}: budget {budget_seconds:.1}s");
+    }
+
+    fn trace_completed(
+        &self,
+        space_idx: usize,
+        repeat: usize,
+        best: f64,
+        unique_evals: usize,
+        elapsed: f64,
+    ) {
+        crate::log_debug!(
+            "  space {space_idx} repeat {repeat}: best {best:.6} \
+             ({unique_evals} unique evals, {elapsed:.1}s simulated)"
+        );
+    }
+
+    fn space_scored(&self, _space_idx: usize, label: &str, mean_score: f64) {
+        crate::log_info!("  {label}: mean score {mean_score:.3}");
+    }
+
+    fn config_scored(&self, config_idx: usize, hp_key: &str, score: f64) {
+        crate::log_info!("config {config_idx} [{hp_key}]: score {score:.3}");
+    }
+
+    fn campaign_finished(&self, score: f64, wallclock_seconds: f64) {
+        crate::log_info!("campaign done: score {score:.3} in {wallclock_seconds:.1}s");
+    }
+}

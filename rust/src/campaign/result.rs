@@ -1,0 +1,334 @@
+//! Serde-stable campaign result envelope.
+//!
+//! [`CampaignResult`] is the machine-consumable record of one campaign:
+//! a versioned schema (`tunetuner-campaign` / [`SCHEMA_VERSION`]), the
+//! campaign inputs (algorithm, hyperparameter key/values, repeats, seed,
+//! backend, budget policy), one [`SpaceOutcome`] per search space —
+//! carrying the space's [`fingerprint`](crate::searchspace::SearchSpace::fingerprint)
+//! as provenance — and the Eq. 3 aggregate. `tunetuner tune --json`
+//! prints exactly this envelope, and the JSON round-trips through
+//! [`CampaignResult::from_json`].
+
+use crate::error::{Context, Result};
+use crate::methodology::AggregateResult;
+use crate::searchspace::Value;
+use crate::util::json::Json;
+
+/// Version of the serialized envelope; bump on breaking field changes.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Schema tag of the serialized envelope.
+pub const SCHEMA: &str = "tunetuner-campaign";
+
+/// Per-space outcome of a campaign.
+#[derive(Clone, Debug)]
+pub struct SpaceOutcome {
+    /// Display label (`kernel@device`).
+    pub label: String,
+    pub kernel: String,
+    pub device: String,
+    /// Structural fingerprint of the kernel search space the runs walked.
+    pub space_fingerprint: String,
+    /// Methodology budget of this space in simulated seconds.
+    pub budget_seconds: f64,
+    /// Known optimum of the space (from its brute-force cache).
+    pub optimum: f64,
+    /// Best objective value found across the repeats.
+    pub best_value: f64,
+    /// Mean unique evaluations per repeat.
+    pub mean_unique_evals: f64,
+    /// Eq. 2 score at each sampling point (mean over repeats).
+    pub scores: Vec<f64>,
+    /// Mean of `scores`.
+    pub mean_score: f64,
+}
+
+/// The complete, serializable outcome of one campaign.
+#[derive(Clone, Debug)]
+pub struct CampaignResult {
+    pub algo: String,
+    /// Stable `k=v,k=v` rendering of the (schema-resolved) hyperparameters.
+    pub hp_key: String,
+    /// The hyperparameter assignment itself.
+    pub hp: Vec<(String, Value)>,
+    pub repeats: usize,
+    pub seed: u64,
+    /// `"sim"` or `"live"`.
+    pub backend: String,
+    /// Budget policy rendering (`"methodology"`, `"12.5s"`, `"200 evals"`).
+    pub budget: String,
+    pub spaces: Vec<SpaceOutcome>,
+    /// The Eq. 3 aggregation the hypertuner maximizes.
+    pub aggregate: AggregateResult,
+    /// Real seconds the campaign took.
+    pub wallclock_seconds: f64,
+    /// Simulated device-seconds consumed by all runs.
+    pub simulated_seconds: f64,
+}
+
+impl CampaignResult {
+    /// The scalar Eq. 3 score.
+    pub fn score(&self) -> f64 {
+        self.aggregate.score
+    }
+
+    pub fn to_json(&self) -> Json {
+        let spaces: Vec<Json> = self
+            .spaces
+            .iter()
+            .map(|s| {
+                let mut o = Json::obj();
+                o.set("label", s.label.as_str().into())
+                    .set("kernel", s.kernel.as_str().into())
+                    .set("device", s.device.as_str().into())
+                    .set("space_fingerprint", s.space_fingerprint.as_str().into())
+                    .set("budget_seconds", s.budget_seconds.into())
+                    .set("optimum", s.optimum.into())
+                    .set("best_value", s.best_value.into())
+                    .set("mean_unique_evals", s.mean_unique_evals.into())
+                    .set(
+                        "scores",
+                        Json::Arr(s.scores.iter().map(|&v| v.into()).collect()),
+                    )
+                    .set("mean_score", s.mean_score.into());
+                o
+            })
+            .collect();
+        let mut hp = Json::obj();
+        for (k, v) in &self.hp {
+            hp.set(k, value_to_json(v));
+        }
+        let mut j = Json::obj();
+        j.set("schema", SCHEMA.into())
+            .set("schema_version", (SCHEMA_VERSION as f64).into())
+            .set("algo", self.algo.as_str().into())
+            .set("hp_key", self.hp_key.as_str().into())
+            .set("hp", hp)
+            .set("repeats", self.repeats.into())
+            // String, not number: JSON numbers are f64 and would corrupt
+            // seeds >= 2^53 on the round-trip.
+            .set("seed", self.seed.to_string().as_str().into())
+            .set("backend", self.backend.as_str().into())
+            .set("budget", self.budget.as_str().into())
+            .set("spaces", Json::Arr(spaces))
+            .set(
+                "aggregate_curve",
+                Json::Arr(self.aggregate.aggregate_curve.iter().map(|&v| v.into()).collect()),
+            )
+            .set("score", self.aggregate.score.into())
+            .set("wallclock_seconds", self.wallclock_seconds.into())
+            .set("simulated_seconds", self.simulated_seconds.into());
+        j
+    }
+
+    /// Parse an envelope previously produced by [`to_json`](Self::to_json).
+    ///
+    /// Numeric hyperparameter *kinds* normalize on the round-trip: JSON
+    /// numbers are untyped, so a whole-valued `Value::Float` comes back
+    /// as `Value::Int` (same rendered key, and schema validation widens
+    /// integers to floats, so feeding the parsed assignment back into a
+    /// campaign is lossless in behavior).
+    pub fn from_json(j: &Json) -> Result<CampaignResult> {
+        if j.get("schema").and_then(|v| v.as_str()) != Some(SCHEMA) {
+            crate::bail!("not a {SCHEMA} envelope");
+        }
+        let version = j
+            .get("schema_version")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0) as u64;
+        if version > SCHEMA_VERSION {
+            crate::bail!(
+                "campaign envelope version {version} is newer than this \
+                 binary's {SCHEMA_VERSION}"
+            );
+        }
+        let f64s = |v: &Json| -> Vec<f64> {
+            v.as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|x| x.as_f64())
+                .collect()
+        };
+        let mut spaces = Vec::new();
+        for s in j.get("spaces").and_then(|v| v.as_arr()).context("missing spaces")? {
+            let str_field = |k: &str| -> String {
+                s.get(k).and_then(|v| v.as_str()).unwrap_or_default().to_string()
+            };
+            let num_field =
+                |k: &str| -> f64 { s.get(k).and_then(|v| v.as_f64()).unwrap_or(f64::NAN) };
+            spaces.push(SpaceOutcome {
+                label: str_field("label"),
+                kernel: str_field("kernel"),
+                device: str_field("device"),
+                space_fingerprint: str_field("space_fingerprint"),
+                budget_seconds: num_field("budget_seconds"),
+                optimum: num_field("optimum"),
+                best_value: num_field("best_value"),
+                mean_unique_evals: num_field("mean_unique_evals"),
+                scores: s.get("scores").map(&f64s).unwrap_or_default(),
+                mean_score: num_field("mean_score"),
+            });
+        }
+        let aggregate_curve = j.get("aggregate_curve").map(&f64s).unwrap_or_default();
+        let score = j.get("score").and_then(|v| v.as_f64()).context("missing score")?;
+        let hp: Vec<(String, Value)> = j
+            .get("hp")
+            .and_then(|v| v.as_obj())
+            .map(|m| m.iter().map(|(k, v)| (k.clone(), json_to_value(v))).collect())
+            .unwrap_or_default();
+        Ok(CampaignResult {
+            algo: j
+                .get("algo")
+                .and_then(|v| v.as_str())
+                .context("missing algo")?
+                .to_string(),
+            hp_key: j
+                .get("hp_key")
+                .and_then(|v| v.as_str())
+                .unwrap_or_default()
+                .to_string(),
+            hp,
+            repeats: j.get("repeats").and_then(|v| v.as_usize()).unwrap_or(0),
+            seed: match j.get("seed") {
+                Some(Json::Str(s)) => s.parse().unwrap_or(0),
+                Some(v) => v.as_f64().unwrap_or(0.0) as u64,
+                None => 0,
+            },
+            backend: j
+                .get("backend")
+                .and_then(|v| v.as_str())
+                .unwrap_or("sim")
+                .to_string(),
+            budget: j
+                .get("budget")
+                .and_then(|v| v.as_str())
+                .unwrap_or("methodology")
+                .to_string(),
+            aggregate: AggregateResult {
+                per_space_scores: spaces.iter().map(|s| s.scores.clone()).collect(),
+                aggregate_curve,
+                score,
+            },
+            spaces,
+            wallclock_seconds: j
+                .get("wallclock_seconds")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0),
+            simulated_seconds: j
+                .get("simulated_seconds")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0),
+        })
+    }
+}
+
+fn value_to_json(v: &Value) -> Json {
+    match v {
+        Value::Int(i) => Json::Num(*i as f64),
+        Value::Float(f) => Json::Num(*f),
+        Value::Str(s) => Json::Str(s.clone()),
+        Value::Bool(b) => Json::Bool(*b),
+    }
+}
+
+fn json_to_value(j: &Json) -> Value {
+    match j {
+        Json::Num(x) if x.fract() == 0.0 && x.abs() < 9e15 => Value::Int(*x as i64),
+        Json::Num(x) => Value::Float(*x),
+        Json::Bool(b) => Value::Bool(*b),
+        other => Value::Str(other.as_str().unwrap_or_default().to_string()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CampaignResult {
+        CampaignResult {
+            algo: "pso".into(),
+            hp_key: "c1=2,popsize=20".into(),
+            hp: vec![
+                ("c1".to_string(), Value::Float(2.0)),
+                ("popsize".to_string(), Value::Int(20)),
+            ],
+            repeats: 5,
+            seed: 42,
+            backend: "sim".into(),
+            budget: "methodology".into(),
+            spaces: vec![SpaceOutcome {
+                label: "gemm@A100".into(),
+                kernel: "gemm".into(),
+                device: "A100".into(),
+                space_fingerprint: "abc-123".into(),
+                budget_seconds: 12.5,
+                optimum: 0.001,
+                best_value: 0.0012,
+                mean_unique_evals: 40.0,
+                scores: vec![0.1, 0.2, 0.3],
+                mean_score: 0.2,
+            }],
+            aggregate: AggregateResult {
+                per_space_scores: vec![vec![0.1, 0.2, 0.3]],
+                aggregate_curve: vec![0.1, 0.2, 0.3],
+                score: 0.2,
+            },
+            wallclock_seconds: 1.5,
+            simulated_seconds: 60.0,
+        }
+    }
+
+    #[test]
+    fn envelope_roundtrip() {
+        let r = sample();
+        let j = r.to_json();
+        assert_eq!(j.get("schema").and_then(|v| v.as_str()), Some(SCHEMA));
+        let back = CampaignResult::from_json(&j).unwrap();
+        assert_eq!(back.algo, "pso");
+        assert_eq!(back.hp_key, r.hp_key);
+        // Kinds normalize (whole Float -> Int) but names and rendered
+        // values survive exactly.
+        assert_eq!(back.hp.len(), r.hp.len());
+        for ((bk, bv), (rk, rv)) in back.hp.iter().zip(&r.hp) {
+            assert_eq!(bk, rk);
+            assert_eq!(bv.key(), rv.key());
+        }
+        assert_eq!(back.spaces.len(), 1);
+        assert_eq!(back.spaces[0].space_fingerprint, "abc-123");
+        assert_eq!(back.spaces[0].scores, vec![0.1, 0.2, 0.3]);
+        assert_eq!(back.aggregate.score, 0.2);
+        assert_eq!(back.aggregate.per_space_scores, r.aggregate.per_space_scores);
+        assert_eq!(back.seed, 42);
+        assert_eq!(back.backend, "sim");
+    }
+
+    #[test]
+    fn roundtrip_through_text() {
+        let r = sample();
+        let text = r.to_json().to_pretty();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        let back = CampaignResult::from_json(&parsed).unwrap();
+        assert_eq!(back.hp_key, r.hp_key);
+        assert_eq!(back.score(), r.score());
+    }
+
+    #[test]
+    fn seed_survives_beyond_f64_precision() {
+        let mut r = sample();
+        r.seed = 0xDEAD_BEEF_DEAD_BEEF; // > 2^53: a JSON number would corrupt it
+        let text = r.to_json().to_string();
+        let back =
+            CampaignResult::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.seed, 0xDEAD_BEEF_DEAD_BEEF);
+    }
+
+    #[test]
+    fn rejects_foreign_and_future_envelopes() {
+        let mut j = Json::obj();
+        j.set("schema", "something-else".into());
+        assert!(CampaignResult::from_json(&j).is_err());
+        let mut j = sample().to_json();
+        j.set("schema_version", 999.0.into());
+        assert!(CampaignResult::from_json(&j).is_err());
+    }
+}

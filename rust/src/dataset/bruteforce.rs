@@ -8,7 +8,7 @@
 use super::cache::{CacheData, ConfigRecord};
 use crate::runner::live::LiveRunner;
 use crate::runner::Runner;
-use anyhow::Result;
+use crate::error::Result;
 
 /// Brute-force a full (kernel, device) search space through a live runner.
 pub fn bruteforce(runner: &mut LiveRunner) -> Result<CacheData> {

@@ -25,7 +25,8 @@ use crate::runner::EvalResult;
 use crate::searchspace::SearchSpace;
 use crate::util::compress;
 use crate::util::json::{self, Json};
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::error::{Context, Result};
 use std::path::Path;
 
 /// One configuration's brute-force record.
@@ -249,12 +250,12 @@ impl CacheData {
     /// Verify this cache is index-aligned with a search space.
     pub fn verify_against(&self, space: &SearchSpace) -> Result<()> {
         if self.records.len() != space.len() {
-            bail!(
+            return Err(crate::error::TuneError::StaleCache(format!(
                 "cache has {} configs but space {} has {}",
                 self.records.len(),
                 space.name,
                 space.len()
-            );
+            )));
         }
         if space.is_empty() {
             return Ok(());
@@ -265,11 +266,11 @@ impl CacheData {
         let n = space.len();
         for idx in [0, n / 3, n / 2, n - 1] {
             if self.records[idx].key != space.key(idx) {
-                bail!(
+                return Err(crate::error::TuneError::StaleCache(format!(
                     "cache/space key mismatch at {idx}: {} vs {}",
                     self.records[idx].key,
                     space.key(idx)
-                );
+                )));
             }
         }
         Ok(())

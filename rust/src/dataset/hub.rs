@@ -23,7 +23,7 @@ use crate::perfmodel::NoiseModel;
 use crate::runner::LiveRunner;
 use crate::runtime::Engine;
 use crate::util::json::Json;
-use anyhow::{Context, Result};
+use crate::error::{Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
@@ -137,8 +137,9 @@ impl Hub {
                     scope.spawn(move || {
                         let go = || -> Result<()> {
                             let kernel = kernels::kernel_by_name(k)?;
-                            let device = device_by_name(d)
-                                .with_context(|| format!("unknown device {d}"))?;
+                            let device = device_by_name(d).ok_or_else(|| {
+                                crate::error::TuneError::UnknownDevice(d.clone())
+                            })?;
                             let c = this.build_one(&kernel, &device, engine, seed)?;
                             crate::log_info!(
                                 "hub: {k}@{d}: {} configs, {:.1} simulated hours",
@@ -155,7 +156,7 @@ impl Hub {
             });
             let errs = errors.into_inner().unwrap();
             if !errs.is_empty() {
-                anyhow::bail!("hub build failures: {}", errs.join("; "));
+                crate::bail!("hub build failures: {}", errs.join("; "));
             }
         }
         let mut out = Vec::new();

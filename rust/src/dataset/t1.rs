@@ -9,7 +9,7 @@
 use crate::kernels::Kernel;
 use crate::searchspace::{SearchSpace, TunableParam, Value};
 use crate::util::json::{self, Json};
-use anyhow::{Context, Result};
+use crate::error::{Context, Result};
 
 /// Serialize a kernel's tuning problem to a T1-style JSON document.
 pub fn to_t1(kernel: &Kernel) -> Json {

@@ -1,0 +1,240 @@
+//! Typed errors for the library crate.
+//!
+//! Everything fallible in `tunetuner` returns [`TuneError`] (through the
+//! crate-wide [`Result`] alias) so embedders can match on failure classes
+//! — an unknown optimizer name is programmatically distinguishable from a
+//! stale cache or an I/O failure — instead of string-matching an opaque
+//! `anyhow::Error`. The CLI binary (`main.rs`) still uses `anyhow` for
+//! top-level reporting; `TuneError` implements [`std::error::Error`], so
+//! `?` converts at that boundary.
+//!
+//! The [`Context`] extension trait mirrors the `anyhow::Context` API
+//! (`.context(...)` / `.with_context(...)` on `Result` and `Option`), and
+//! the [`crate::bail!`] macro mirrors `anyhow::bail!`, so error-handling
+//! call sites read the same as before the migration. `{err:#}` renders
+//! the full context chain, `{err}` just the outermost message.
+
+use std::fmt;
+
+/// Crate-wide result alias over [`TuneError`].
+pub type Result<T, E = TuneError> = std::result::Result<T, E>;
+
+/// The failure classes of the tunetuner library.
+#[derive(Debug)]
+pub enum TuneError {
+    /// Optimizer name not present in the registry.
+    UnknownAlgorithm {
+        name: String,
+        /// Comma-separated registered names (for the message).
+        known: String,
+    },
+    /// Kernel name not known to `kernels::kernel_by_name`.
+    UnknownKernel(String),
+    /// Device name not known to `gpu::specs`.
+    UnknownDevice(String),
+    /// A hyperparameter assignment violated an optimizer's declared
+    /// schema (unknown key, type mismatch, out-of-choice categorical).
+    SchemaViolation(String),
+    /// A persisted cache no longer matches the space it claims to index
+    /// (fingerprint/key/length mismatch).
+    StaleCache(String),
+    /// JSON / constraint-expression / file-format parse failure.
+    Parse(String),
+    /// Engine (PJRT/XLA runtime) failure, including artifact problems.
+    Engine(String),
+    /// Underlying I/O failure.
+    Io(std::io::Error),
+    /// Malformed input that fits no more specific class.
+    InvalidInput(String),
+    /// Free-form message (the [`crate::bail!`] macro produces these).
+    Msg(String),
+    /// A lower-level error wrapped with a context message.
+    Context {
+        msg: String,
+        source: Box<TuneError>,
+    },
+}
+
+impl TuneError {
+    /// Free-form error from a message.
+    pub fn msg(m: impl Into<String>) -> TuneError {
+        TuneError::Msg(m.into())
+    }
+
+    /// The outermost message, without the source chain.
+    fn message(&self) -> String {
+        match self {
+            TuneError::UnknownAlgorithm { name, known } => {
+                format!("unknown optimizer {name:?}; registered: {known}")
+            }
+            TuneError::UnknownKernel(n) => format!("unknown kernel {n:?}"),
+            TuneError::UnknownDevice(n) => format!("unknown device {n:?}"),
+            TuneError::SchemaViolation(m)
+            | TuneError::StaleCache(m)
+            | TuneError::Parse(m)
+            | TuneError::Engine(m)
+            | TuneError::InvalidInput(m)
+            | TuneError::Msg(m) => m.clone(),
+            TuneError::Io(e) => e.to_string(),
+            TuneError::Context { msg, .. } => msg.clone(),
+        }
+    }
+
+    /// Wrap with a context message (the `source` of the result is `self`).
+    pub fn wrap(self, msg: impl Into<String>) -> TuneError {
+        TuneError::Context {
+            msg: msg.into(),
+            source: Box::new(self),
+        }
+    }
+
+    fn source_tune(&self) -> Option<&TuneError> {
+        match self {
+            TuneError::Context { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for TuneError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.message())?;
+        if f.alternate() {
+            // `{err:#}`: anyhow-style "outer: inner: innermost" chain.
+            let mut cur = self.source_tune();
+            while let Some(e) = cur {
+                write!(f, ": {}", e.message())?;
+                cur = e.source_tune();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for TuneError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            TuneError::Io(e) => Some(e),
+            TuneError::Context { source, .. } => Some(source.as_ref()),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for TuneError {
+    fn from(e: std::io::Error) -> TuneError {
+        TuneError::Io(e)
+    }
+}
+
+impl From<crate::util::json::ParseError> for TuneError {
+    fn from(e: crate::util::json::ParseError) -> TuneError {
+        TuneError::Parse(e.to_string())
+    }
+}
+
+impl From<std::string::FromUtf8Error> for TuneError {
+    fn from(e: std::string::FromUtf8Error) -> TuneError {
+        TuneError::Parse(e.to_string())
+    }
+}
+
+/// `anyhow::Context`-style extension methods for attaching a message to
+/// an error (`Result`) or turning an absent value into one (`Option`).
+pub trait Context<T> {
+    /// Attach a fixed context message.
+    fn context<S: Into<String>>(self, msg: S) -> Result<T>;
+    /// Attach a lazily computed context message.
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<TuneError>> Context<T> for std::result::Result<T, E> {
+    fn context<S: Into<String>>(self, msg: S) -> Result<T> {
+        self.map_err(|e| e.into().wrap(msg))
+    }
+
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<S: Into<String>>(self, msg: S) -> Result<T> {
+        self.ok_or_else(|| TuneError::Msg(msg.into()))
+    }
+
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| TuneError::Msg(f().into()))
+    }
+}
+
+/// Return early with a [`TuneError::Msg`] built from format arguments —
+/// the drop-in replacement for `anyhow::bail!` inside the library.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::error::TuneError::Msg(format!($($arg)*)))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let inner = TuneError::Parse("bad token".into());
+        let outer = inner.wrap("parsing config").wrap("loading cache");
+        assert_eq!(format!("{outer}"), "loading cache");
+        assert_eq!(
+            format!("{outer:#}"),
+            "loading cache: parsing config: bad token"
+        );
+    }
+
+    #[test]
+    fn source_chain_reaches_io() {
+        use std::error::Error;
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e = TuneError::from(io).wrap("read hub");
+        let src = e.source().expect("has source");
+        assert!(src.source().is_some(), "Io links through to io::Error");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> =
+            Err(std::io::Error::other("boom"));
+        let e = r.context("doing io").unwrap_err();
+        assert_eq!(format!("{e:#}"), "doing io: boom");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing key");
+        assert_eq!(Some(5).context("missing").unwrap(), 5);
+    }
+
+    #[test]
+    fn bail_macro_formats() {
+        fn f(x: usize) -> Result<()> {
+            if x > 2 {
+                bail!("x too big: {x}");
+            }
+            Ok(())
+        }
+        assert!(f(1).is_ok());
+        assert_eq!(format!("{}", f(3).unwrap_err()), "x too big: 3");
+    }
+
+    #[test]
+    fn typed_variants_render() {
+        let e = TuneError::UnknownAlgorithm {
+            name: "nope".into(),
+            known: "pso, mls".into(),
+        };
+        let s = format!("{e}");
+        assert!(s.contains("nope") && s.contains("pso"), "{s}");
+        assert!(format!("{}", TuneError::UnknownKernel("k".into())).contains("kernel"));
+        assert!(format!("{}", TuneError::UnknownDevice("d".into())).contains("device"));
+    }
+}

@@ -19,7 +19,7 @@ use crate::perfmodel::NoiseModel;
 use crate::runner::LiveRunner;
 use crate::util::stats;
 use crate::util::table::Table;
-use anyhow::Result;
+use crate::error::Result;
 use std::sync::Arc;
 
 /// Budget-cutoff sensitivity: rescore the tuned-optimal GA under different

@@ -1,7 +1,9 @@
 //! Shared experiment context: hub, engine, scale profile, memoized
 //! intermediates.
 
+use crate::campaign::{NullObserver, Observer};
 use crate::dataset::hub::{Hub, HUB_KERNELS, HUB_SEED};
+use crate::error::Result;
 use crate::gpu::specs::{TEST_DEVICES, TRAIN_DEVICES};
 use crate::hypertuning::{self, exhaustive, meta};
 use crate::kernels;
@@ -11,7 +13,6 @@ use crate::report::Report;
 use crate::runner::{Budget, Tuning};
 use crate::runtime::Engine;
 use crate::util::rng::Rng;
-use anyhow::Result;
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
@@ -46,7 +47,7 @@ impl Scale {
                 points: methodology::DEFAULT_POINTS,
                 meta_evals: 150,
             },
-            other => anyhow::bail!("unknown scale {other:?} (quick|paper)"),
+            other => crate::bail!("unknown scale {other:?} (quick|paper)"),
         })
     }
 }
@@ -59,6 +60,10 @@ pub struct Ctx {
     pub scale: Scale,
     pub scale_name: String,
     pub seed: u64,
+    /// Campaign progress observer attached to every hypertuning run this
+    /// context launches (the CLI installs a progress logger; batch runs
+    /// keep the no-op default).
+    observer: Arc<dyn Observer>,
     spaces: Mutex<HashMap<String, Arc<Vec<SpaceEval>>>>,
     hyper: Mutex<HashMap<String, Arc<exhaustive::HyperTuningResults>>>,
 }
@@ -80,9 +85,17 @@ impl Ctx {
             scale,
             scale_name: scale_name.to_string(),
             seed,
+            observer: Arc::new(NullObserver),
             spaces: Mutex::new(HashMap::new()),
             hyper: Mutex::new(HashMap::new()),
         }
+    }
+
+    /// Attach a campaign observer to the hypertuning runs this context
+    /// launches.
+    pub fn with_observer(mut self, observer: Arc<dyn Observer>) -> Ctx {
+        self.observer = observer;
+        self
     }
 
     pub fn report(&self, id: &str) -> Report {
@@ -177,13 +190,14 @@ impl Ctx {
                 train.len(),
                 self.scale.tuning_repeats
             );
-            let r = exhaustive::exhaustive_tuning(
+            let r = exhaustive::exhaustive_tuning_observed(
                 algo,
                 &hp_space,
                 "limited",
                 &train,
                 self.scale.tuning_repeats,
                 self.seed,
+                Arc::clone(&self.observer),
             )?;
             r.save(&path)?;
             r
@@ -220,7 +234,8 @@ impl Ctx {
                 train.as_ref().clone(),
                 self.scale.tuning_repeats,
                 self.seed,
-            );
+            )
+            .with_observer(Arc::clone(&self.observer));
             let mut tuning = Tuning::new(&mut runner, Budget::evals(self.scale.meta_evals));
             let opt = optimizers::create("dual_annealing", &HyperParams::new())?;
             let mut rng = Rng::new(self.seed ^ 0xE0E0);

@@ -8,7 +8,7 @@
 use super::Ctx;
 use crate::hypertuning::limited_algos;
 use crate::util::stats;
-use anyhow::Result;
+use crate::error::Result;
 
 pub fn run(ctx: &Ctx) -> Result<()> {
     let mut dists: Vec<(String, Vec<f64>)> = Vec::new();

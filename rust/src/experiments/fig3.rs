@@ -8,7 +8,7 @@ use crate::hypertuning::{limited_algos, limited_space};
 use crate::methodology::evaluate_algorithm;
 use crate::optimizers::HyperParams;
 use crate::util::table::Table;
-use anyhow::Result;
+use crate::error::Result;
 
 pub fn run(ctx: &Ctx) -> Result<()> {
     let train = ctx.train_spaces()?;

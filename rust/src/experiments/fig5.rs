@@ -9,7 +9,7 @@ use crate::hypertuning::{limited_algos, limited_space};
 use crate::methodology::evaluate_algorithm;
 use crate::optimizers::HyperParams;
 use crate::util::plot::Series;
-use anyhow::Result;
+use crate::error::Result;
 
 pub fn run(ctx: &Ctx) -> Result<()> {
     let all = ctx.all_spaces()?;

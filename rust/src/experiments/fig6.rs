@@ -12,7 +12,7 @@ use crate::hypertuning::{limited_algos, limited_space, meta};
 use crate::methodology::{evaluate_algorithm, SpaceEval};
 use crate::optimizers::HyperParams;
 use crate::util::plot::Series;
-use anyhow::Result;
+use crate::error::Result;
 use std::sync::Arc;
 
 pub fn run(ctx: &Ctx) -> Result<()> {

@@ -8,7 +8,7 @@ use crate::hypertuning::{extended_algos, extended_space, limited_space};
 use crate::methodology::evaluate_algorithm;
 use crate::optimizers::HyperParams;
 use crate::util::table::Table;
-use anyhow::Result;
+use crate::error::Result;
 
 pub fn run(ctx: &Ctx) -> Result<()> {
     let all = ctx.all_spaces()?;

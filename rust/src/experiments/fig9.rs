@@ -9,7 +9,7 @@
 use super::Ctx;
 use crate::hypertuning::{limited_algos, limited_space};
 use crate::util::table::Table;
-use anyhow::Result;
+use crate::error::Result;
 
 pub fn run(ctx: &Ctx) -> Result<()> {
     let train = ctx.train_spaces()?;

@@ -22,7 +22,8 @@ pub mod fig9;
 
 pub use ctx::{Ctx, Scale};
 
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::error::Result;
 
 /// All paper experiment ids in run order.
 pub const ALL: [&str; 11] = [

@@ -9,7 +9,7 @@ use super::Ctx;
 use crate::dataset::hub::HUB_KERNELS;
 use crate::gpu::specs::all_devices;
 use crate::util::table::Table;
-use anyhow::Result;
+use crate::error::Result;
 
 pub fn run(ctx: &Ctx) -> Result<()> {
     ctx.ensure_hub()?;

@@ -5,7 +5,7 @@
 use super::Ctx;
 use crate::hypertuning::{extended_algos, extended_space};
 use crate::util::table::Table;
-use anyhow::Result;
+use crate::error::Result;
 
 pub fn run(ctx: &Ctx) -> Result<()> {
     let mut table = Table::new(

@@ -13,12 +13,14 @@
 //! anything else.
 
 use super::space;
-use crate::methodology::{evaluate_algorithm, SpaceEval};
+use crate::campaign::{Campaign, NullObserver, Observer};
+use crate::error::{Context, Result};
+use crate::methodology::SpaceEval;
 use crate::optimizers::HyperParams;
 use crate::util::compress;
 use crate::util::json::{self, Json};
-use anyhow::{Context, Result};
 use std::path::Path;
+use std::sync::Arc;
 
 /// Score of one hyperparameter configuration.
 #[derive(Clone, Debug)]
@@ -35,25 +37,11 @@ pub struct HyperResult {
 /// names and exact value grids, plus the enumerated size): persisted with
 /// campaign results so a later schema/grid change invalidates stale
 /// caches instead of silently misdecoding their `config_idx` values
-/// against the new space.
+/// against the new space. Now lives on the space itself
+/// ([`crate::searchspace::SearchSpace::fingerprint`]) so kernel spaces
+/// carry the same provenance; kept here as the established call site.
 pub fn space_fingerprint(space: &crate::searchspace::SearchSpace) -> String {
-    // FNV-1a over the parameter names and rendered value keys.
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    let mut eat = |s: &str| {
-        for &b in s.as_bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x0100_0000_01b3);
-        }
-        h ^= 0x1f;
-        h = h.wrapping_mul(0x0100_0000_01b3);
-    };
-    for p in &space.params {
-        eat(&p.name);
-        for v in &p.values {
-            eat(&v.key());
-        }
-    }
-    format!("{h:016x}-{}", space.len())
+    space.fingerprint()
 }
 
 /// The outcome of a hyperparameter tuning campaign.
@@ -244,18 +232,50 @@ pub fn exhaustive_tuning(
     repeats: usize,
     seed: u64,
 ) -> Result<HyperTuningResults> {
+    exhaustive_tuning_observed(
+        algo,
+        hp_space,
+        space_kind,
+        train,
+        repeats,
+        seed,
+        Arc::new(NullObserver),
+    )
+}
+
+/// [`exhaustive_tuning`] with campaign progress reported to `observer`
+/// (one [`Observer::config_scored`] per evaluated configuration, plus the
+/// per-campaign events).
+pub fn exhaustive_tuning_observed(
+    algo: &str,
+    hp_space: &crate::searchspace::SearchSpace,
+    space_kind: &str,
+    train: &[SpaceEval],
+    repeats: usize,
+    seed: u64,
+    observer: Arc<dyn Observer>,
+) -> Result<HyperTuningResults> {
     let t0 = std::time::Instant::now();
+    // One campaign per configuration, all sharing the prepared spaces and
+    // the persistent executor pool.
+    let base = Campaign::new(algo)
+        .space_evals(train.to_vec())
+        .repeats(repeats)
+        .seed(seed)
+        .observer(Arc::clone(&observer));
     let mut results = Vec::with_capacity(hp_space.len());
     let mut simulated = 0.0;
     for idx in 0..hp_space.len() {
         let hp = HyperParams::from_space_config(hp_space, idx);
-        let agg = evaluate_algorithm(algo, &hp, train, repeats, seed)?;
+        let agg = base.with_hyperparams(&hp).run()?.aggregate;
         // Simulated cost: every run consumes its space's full budget.
         simulated +=
             train.iter().map(|s| s.budget_seconds).sum::<f64>() * repeats as f64;
+        let hp_key = hp.key();
+        observer.config_scored(idx, &hp_key, agg.score);
         results.push(HyperResult {
             config_idx: idx,
-            hp_key: hp.key(),
+            hp_key,
             score: agg.score,
         });
         if idx % 10 == 9 {

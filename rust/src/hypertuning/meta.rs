@@ -14,8 +14,9 @@
 //!   speed (Fig. 6) using the very same simulation-mode machinery.
 
 use super::exhaustive::HyperTuningResults;
+use crate::campaign::{Campaign, Observer};
 use crate::dataset::cache::{CacheData, ConfigRecord};
-use crate::methodology::{evaluate_algorithm, SpaceEval};
+use crate::methodology::SpaceEval;
 use crate::optimizers::HyperParams;
 use crate::runner::{EvalResult, Runner};
 use crate::searchspace::SearchSpace;
@@ -23,12 +24,19 @@ use std::sync::Arc;
 
 /// Live meta-evaluation: a Runner over a hyperparameter space whose
 /// evaluations run full (simulated) tuning campaigns.
+///
+/// Holds one base [`Campaign`] (algorithm, shared training spaces,
+/// repeats, seed) and clones it per hyperparameter configuration; the
+/// campaigns all execute on the persistent executor pool, so a meta run
+/// with ~150 hyperparameter evaluations re-uses one set of workers
+/// instead of spawning a fresh `thread::scope` per evaluation.
 pub struct MetaRunner {
     pub algo: String,
     hp_space: Arc<SearchSpace>,
-    train: Vec<SpaceEval>,
-    pub repeats: usize,
-    pub seed: u64,
+    /// Base campaign; `repeats` and `seed` live here (snapshotted at
+    /// construction), not as separate fields that could silently drift.
+    campaign: Campaign,
+    observer: Option<Arc<dyn Observer>>,
     /// (config_idx, score) history, in evaluation order.
     pub history: Vec<(usize, f64)>,
 }
@@ -44,11 +52,22 @@ impl MetaRunner {
         MetaRunner {
             algo: algo.to_string(),
             hp_space,
-            train,
-            repeats,
-            seed,
+            campaign: Campaign::new(algo)
+                .space_evals(train)
+                .repeats(repeats)
+                .seed(seed),
+            observer: None,
             history: Vec::new(),
         }
+    }
+
+    /// Report campaign progress and per-configuration scores to
+    /// `observer` ([`Observer::config_scored`] fires once per
+    /// meta-evaluation).
+    pub fn with_observer(mut self, observer: Arc<dyn Observer>) -> MetaRunner {
+        self.campaign = self.campaign.observer(Arc::clone(&observer));
+        self.observer = Some(observer);
+        self
     }
 }
 
@@ -60,15 +79,19 @@ impl Runner for MetaRunner {
     fn evaluate(&mut self, config_idx: usize) -> EvalResult {
         let t0 = std::time::Instant::now();
         let hp = HyperParams::from_space_config(&self.hp_space, config_idx);
-        let result = evaluate_algorithm(&self.algo, &hp, &self.train, self.repeats, self.seed);
+        let result = self.campaign.with_hyperparams(&hp).run();
         let elapsed = t0.elapsed().as_secs_f64();
         match result {
-            Ok(agg) => {
-                self.history.push((config_idx, agg.score));
+            Ok(r) => {
+                let score = r.score();
+                if let Some(obs) = &self.observer {
+                    obs.config_scored(config_idx, &r.hp_key, score);
+                }
+                self.history.push((config_idx, score));
                 EvalResult {
                     // Minimized objective: 1 - score (score <= 1).
-                    value: 1.0 - agg.score,
-                    observations: vec![1.0 - agg.score],
+                    value: 1.0 - score,
+                    observations: vec![1.0 - score],
                     compile_time: 0.0,
                     run_time: elapsed,
                     overhead: 0.0,

@@ -22,6 +22,8 @@ pub mod exhaustive;
 pub mod meta;
 pub mod sensitivity;
 
-pub use exhaustive::{exhaustive_tuning, HyperResult, HyperTuningResults};
+pub use exhaustive::{
+    exhaustive_tuning, exhaustive_tuning_observed, HyperResult, HyperTuningResults,
+};
 pub use meta::{meta_cache_from_results, MetaRunner};
 pub use space::{extended_algos, extended_space, limited_algos, limited_space};

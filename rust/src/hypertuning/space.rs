@@ -22,7 +22,8 @@
 
 use crate::optimizers;
 use crate::searchspace::{SearchSpace, TunableParam, Value};
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::error::Result;
 
 /// The paper's Table III algorithms, in Table III order. Scoped to the
 /// `Descriptor::paper` flag so extra optimizers can declare grids (and
@@ -168,6 +169,40 @@ mod tests {
         assert!(limited_space("nope").is_err());
         assert!(extended_space("dual_annealing").is_err());
         assert!(limited_space("mls").is_err());
+    }
+
+    /// Any optimizer that declares grids gets a derived space — including
+    /// the registry extras (`greedy_ils`, `basin_hopping`) — while
+    /// grid-less optimizers are rejected, and the `Descriptor::paper`
+    /// flag keeps the extras out of the paper-replication sets.
+    #[test]
+    fn derived_spaces_exist_for_every_optimizer_with_grids() {
+        use crate::optimizers::{self, HyperParams};
+        for d in optimizers::registry() {
+            if d.has_limited_space() {
+                let s = limited_space(d.name).unwrap();
+                assert!(s.len() > 1, "{}: degenerate limited space", d.name);
+                // Every derived configuration passes schema validation.
+                for idx in [0, s.len() / 2, s.len() - 1] {
+                    let hp = HyperParams::from_space_config(&s, idx);
+                    optimizers::create(d.name, &hp)
+                        .unwrap_or_else(|e| panic!("{} config {idx}: {e:#}", d.name));
+                }
+            } else {
+                assert!(limited_space(d.name).is_err(), "{}", d.name);
+            }
+            if d.has_extended_space() {
+                assert!(extended_space(d.name).unwrap().len() > 1, "{}", d.name);
+            } else {
+                assert!(extended_space(d.name).is_err(), "{}", d.name);
+            }
+        }
+        // The ROADMAP extras are hypertunable (3×3 limited grids)...
+        assert_eq!(limited_space("greedy_ils").unwrap().len(), 9);
+        assert_eq!(limited_space("basin_hopping").unwrap().len(), 9);
+        // ...but stay out of the paper's Table III/IV algorithm lists.
+        assert!(!limited_algos().contains(&"greedy_ils"));
+        assert!(!limited_algos().contains(&"basin_hopping"));
     }
 
     // ---- golden tests: derived spaces == the paper's hand-written tables --

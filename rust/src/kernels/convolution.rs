@@ -9,7 +9,7 @@ use super::{geti, Kernel};
 use crate::perfmodel::analytical::Features;
 use crate::perfmodel::contract::*;
 use crate::searchspace::{Constraint, SearchSpace, TunableParam, Value};
-use anyhow::Result;
+use crate::error::Result;
 
 const W: f64 = 4096.0;
 const H: f64 = 4096.0;

@@ -10,7 +10,7 @@ use super::{geti, Kernel};
 use crate::perfmodel::analytical::Features;
 use crate::perfmodel::contract::*;
 use crate::searchspace::{Constraint, SearchSpace, TunableParam, Value};
-use anyhow::Result;
+use crate::error::Result;
 
 const NR_DMS: f64 = 2048.0;
 const NR_SAMPLES: f64 = 32768.0;

@@ -10,7 +10,7 @@ use super::{geti, Kernel};
 use crate::perfmodel::analytical::Features;
 use crate::perfmodel::contract::*;
 use crate::searchspace::{Constraint, SearchSpace, TunableParam, Value};
-use anyhow::Result;
+use crate::error::Result;
 
 const M: f64 = 4096.0;
 const N: f64 = 4096.0;

@@ -13,7 +13,7 @@ use super::{geti, Kernel};
 use crate::perfmodel::analytical::Features;
 use crate::perfmodel::contract::*;
 use crate::searchspace::{Constraint, SearchSpace, TunableParam, Value};
-use anyhow::Result;
+use crate::error::Result;
 
 const W: f64 = 8192.0;
 const H: f64 = 8192.0;

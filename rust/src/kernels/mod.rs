@@ -23,7 +23,7 @@ use crate::perfmodel::analytical::Features;
 use crate::perfmodel::contract::{F_HASH_A, F_HASH_B};
 use crate::searchspace::{SearchSpace, Value};
 use crate::util::rng::mix64;
-use anyhow::Result;
+use crate::error::Result;
 use std::sync::Arc;
 
 /// A tuning problem: a named kernel with a search space and a feature
@@ -100,7 +100,7 @@ pub fn kernel_by_name(name: &str) -> Result<Kernel> {
         "hotspot" => hotspot::build(),
         "dedispersion" | "dedisp" => dedispersion::build(),
         "synthetic" => synthetic::build(),
-        other => anyhow::bail!("unknown kernel {other:?}"),
+        other => return Err(crate::error::TuneError::UnknownKernel(other.to_string())),
     }
 }
 

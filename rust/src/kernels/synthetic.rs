@@ -6,7 +6,7 @@ use super::{geti, Kernel};
 use crate::perfmodel::analytical::Features;
 use crate::perfmodel::contract::*;
 use crate::searchspace::{Constraint, SearchSpace, TunableParam, Value};
-use anyhow::Result;
+use crate::error::Result;
 
 pub fn build() -> Result<Kernel> {
     build_sized(1.0)

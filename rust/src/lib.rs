@@ -26,11 +26,24 @@
 //!   engine.
 //! * [`methodology`] — baseline curves, the performance score `P` (Eq. 2)
 //!   and its cross-search-space aggregation (Eq. 3).
+//! * [`campaign`] — the orchestration API: a builder-style [`Campaign`]
+//!   over a kernel×device matrix (or explicit `SpaceEval`s) executed on a
+//!   persistent worker-pool [`Executor`], with [`Observer`] progress
+//!   events and serde-stable [`CampaignResult`] envelopes. Every tuning
+//!   run — exhaustive, meta, CLI — goes through it.
 //! * [`hypertuning`] — exhaustive and meta-strategy hyperparameter tuning
 //!   (Eq. 4), with the Table III / Table IV hyperparameter spaces.
 //! * [`experiments`] — one regenerator per paper table/figure.
+//! * [`error`] — the typed [`TuneError`] every fallible library API
+//!   returns (the binary converts to `anyhow` at its boundary).
 //! * [`util`] — offline substrates (JSON, RNG, stats, CLI, logging,
 //!   compression, ASCII tables/plots).
+//!
+//! [`Campaign`]: campaign::Campaign
+//! [`Executor`]: campaign::Executor
+//! [`Observer`]: campaign::Observer
+//! [`CampaignResult`]: campaign::CampaignResult
+//! [`TuneError`]: error::TuneError
 
 // Style lints this codebase deliberately deviates from: hot loops index
 // buffers so evaluations can interleave with `&mut Tuning` borrows, the
@@ -50,6 +63,7 @@
     clippy::type_complexity
 )]
 
+pub mod error;
 pub mod util;
 pub mod searchspace;
 pub mod kernels;
@@ -60,9 +74,12 @@ pub mod runner;
 pub mod dataset;
 pub mod optimizers;
 pub mod methodology;
+pub mod campaign;
 pub mod hypertuning;
 pub mod experiments;
 pub mod report;
+
+pub use error::{Result, TuneError};
 
 /// Crate version string.
 pub fn version() -> &'static str {

@@ -19,14 +19,14 @@
 use anyhow::{bail, Context, Result};
 use std::path::PathBuf;
 use std::sync::Arc;
+use tunetuner::campaign::{Campaign, LogObserver, Observer};
 use tunetuner::dataset::hub::{Hub, HUB_SEED};
 use tunetuner::experiments::{self, Ctx, Scale};
-use tunetuner::gpu::specs::{all_devices, device_by_name};
+use tunetuner::gpu::specs::all_devices;
 use tunetuner::hypertuning;
 use tunetuner::kernels;
-use tunetuner::methodology::SpaceEval;
-use tunetuner::optimizers::{self, HyperParams};
-use tunetuner::runner::{Budget, SimulationRunner, Tuning};
+use tunetuner::optimizers;
+use tunetuner::optimizers::HyperParams;
 use tunetuner::runtime::Engine;
 use tunetuner::searchspace::Value;
 use tunetuner::util::cli::Args;
@@ -96,10 +96,11 @@ subcommands:
   info                      engine/backends, kernels, devices, space sizes
   bruteforce                build the benchmark hub (all 24 spaces by default)
       [--kernels a,b] [--devices c,d]
-  tune <kernel> <device>    run one tuning session (simulation mode)
+  tune <kernel> <device>    run one tuning campaign (simulation mode)
       [--algo pso] [--hp popsize=30,c1=2.0] [--repeats 5] [--budget-cutoff 0.95]
+      [--json]  print the campaign-result envelope instead of tables
   hypertune <algo>          tune the tuner (limited: exhaustive; extended: meta)
-      [--kind limited|extended]
+      [--kind limited|extended] [--json]
   sensitivity <algo>        Kruskal-Wallis + mutual-information screen
   experiment <id>           regenerate a paper table/figure (or 'all')
 
@@ -179,59 +180,75 @@ fn cmd_tune(args: &Args) -> Result<()> {
     let hp = parse_hp(&args.opt_or("hp", ""));
     let repeats = args.opt_usize("repeats", 5);
     let cutoff = args.opt_f64("budget-cutoff", 0.95);
+    let json = args.flag("json");
 
+    // One campaign on the (kernel × device) matrix: the hub cache is
+    // built on demand, the methodology budget/baseline derived, and the
+    // repeats executed on the persistent worker pool.
     let kernel = kernels::kernel_by_name(kernel_name)?;
-    device_by_name(device_name).with_context(|| format!("unknown device {device_name}"))?;
-    // Ensure the cache exists, then tune in simulation mode.
-    c.hub.ensure(
-        &[kernel.name],
-        &[device_name.as_str()],
-        Arc::clone(&c.engine),
-        HUB_SEED,
-    )?;
-    let cache = c.hub.load(kernel.name, device_name)?;
-    let se = SpaceEval::new(kernel.space_arc(), Arc::clone(&cache), cutoff, 50);
-    log_info!(
-        "{} on {}: {} configs, optimum {:.6}s, budget {:.1}s",
-        kernel.name,
-        device_name,
-        cache.records.len(),
-        cache.optimum(),
-        se.budget_seconds
-    );
-    let opt = optimizers::create(&algo, &hp)?;
-    let mut best_overall = f64::INFINITY;
-    let mut scores = Vec::new();
-    for rep in 0..repeats {
-        let mut sim = SimulationRunner::new(kernel.space_arc(), Arc::clone(&cache))?;
-        let mut tuning = Tuning::new(&mut sim, Budget::seconds(se.budget_seconds));
-        let mut rng = Rng::new(c.seed ^ rep as u64);
-        opt.run(&mut tuning, &mut rng);
-        let trace = tuning.finish();
-        let scores_t = se.score_traces(&[trace.clone()]);
-        let score = tunetuner::util::stats::mean(&scores_t);
-        scores.push(score);
-        let best = trace.best().unwrap_or(f64::INFINITY);
-        best_overall = best_overall.min(best);
+    let mut campaign = Campaign::new(&algo)
+        .hyperparams(hp)
+        .cutoff(cutoff)
+        .points(50)
+        .matrix(
+            &c.hub,
+            Arc::clone(&c.engine),
+            &[kernel.name],
+            &[device_name.as_str()],
+        )?
+        .repeats(repeats)
+        .seed(c.seed);
+    if !json {
+        campaign = campaign.observer(Arc::new(LogObserver));
+    }
+    let result = campaign.run()?;
+
+    if json {
+        println!("{}", result.to_json().to_pretty());
+        return Ok(());
+    }
+    for so in &result.spaces {
         println!(
-            "repeat {rep}: best {:.6}s after {} unique evals ({:.1}s simulated), score {score:.3}",
-            best, trace.unique_evals, trace.elapsed
+            "{}: best {:.6}s vs optimum {:.6}s | mean score {:.3} \
+             ({:.0} unique evals avg, budget {:.1}s)",
+            so.label,
+            so.best_value,
+            so.optimum,
+            so.mean_score,
+            so.mean_unique_evals,
+            so.budget_seconds
         );
     }
     println!(
-        "\n{algo} on {}@{}: best {best_overall:.6}s vs optimum {:.6}s; mean score {:.3}",
-        kernel.name,
-        device_name,
-        cache.optimum(),
-        tunetuner::util::stats::mean(&scores)
+        "\n{} [{}]: aggregate score {:.3} over {} repeats \
+         ({:.2}s wall-clock, {:.0}s simulated)",
+        result.algo,
+        result.hp_key,
+        result.score(),
+        result.repeats,
+        result.wallclock_seconds,
+        result.simulated_seconds
     );
     Ok(())
 }
 
-use tunetuner::util::rng::Rng;
+/// Progress reporter for hypertuning campaigns: one log line per scored
+/// hyperparameter configuration (the per-run detail stays at debug via
+/// `--verbose`).
+struct HypertuneProgress;
+
+impl Observer for HypertuneProgress {
+    fn config_scored(&self, config_idx: usize, hp_key: &str, score: f64) {
+        log_info!("config {config_idx} [{hp_key}]: score {score:.3}");
+    }
+}
 
 fn cmd_hypertune(args: &Args) -> Result<()> {
-    let c = ctx(args)?;
+    let json = args.flag("json");
+    let mut c = ctx(args)?;
+    if !json {
+        c = c.with_observer(Arc::new(HypertuneProgress));
+    }
     let algo = args
         .positional
         .first()
@@ -243,6 +260,10 @@ fn cmd_hypertune(args: &Args) -> Result<()> {
         "extended" => c.extended_results(&algo)?,
         other => bail!("unknown kind {other:?}"),
     };
+    if json {
+        println!("{}", results.to_json().to_pretty());
+        return Ok(());
+    }
     println!(
         "{algo} ({kind}): {} configurations evaluated, {} repeats",
         results.results.len(),

@@ -1,17 +1,20 @@
 //! Eq. (3): aggregation of performance scores across search spaces, and
 //! the central `evaluate_algorithm` entry point the hyperparameter tuner
 //! maximizes (Eq. 4).
+//!
+//! `evaluate_algorithm` is a thin wrapper over
+//! [`crate::campaign::Campaign`]: the campaign owns job decomposition,
+//! deterministic seeding and the persistent executor pool; this module
+//! owns the scoring (prepared [`SpaceEval`]s and the Eq. 2/Eq. 3 math).
 
 use super::baseline::Baseline;
 use super::curve::{sampling_times, PerformanceCurve};
 use super::score::score_at;
 use crate::dataset::cache::CacheData;
-use crate::optimizers::{self, HyperParams};
-use crate::runner::{Budget, SimulationRunner, Trace, Tuning};
+use crate::error::Result;
+use crate::optimizers::HyperParams;
+use crate::runner::Trace;
 use crate::searchspace::SearchSpace;
-use crate::util::rng::{mix64, Rng};
-use anyhow::Result;
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 /// A search space prepared for scoring: budget, sampling times and
@@ -55,13 +58,13 @@ impl SpaceEval {
 
     /// Score one set of repeated traces on this space (Eq. 2 per point).
     pub fn score_traces(&self, traces: &[Trace]) -> Vec<f64> {
-        let mut i = 0usize;
-        let fallback = |_t: f64| {
-            let v = self.baseline_values[i];
-            i += 1;
-            v
-        };
-        let curve = PerformanceCurve::from_traces(traces, &self.times, fallback);
+        // The fallback is indexed by sampling point, so it cannot drift
+        // out of register with the baseline (the old closure counted its
+        // own calls and silently depended on being called exactly once
+        // per point, in order).
+        let curve = PerformanceCurve::from_traces(traces, &self.times, |i| {
+            self.baseline_values[i]
+        });
         curve
             .values
             .iter()
@@ -83,6 +86,24 @@ pub struct AggregateResult {
 }
 
 impl AggregateResult {
+    /// Eq. (3) from per-space Eq. (2) curves: mean over spaces at each
+    /// sampling point, then mean over points.
+    pub fn from_per_space_scores(per_space_scores: Vec<Vec<f64>>) -> AggregateResult {
+        let points = per_space_scores[0].len();
+        let aggregate_curve: Vec<f64> = (0..points)
+            .map(|t| {
+                per_space_scores.iter().map(|s| s[t]).sum::<f64>()
+                    / per_space_scores.len() as f64
+            })
+            .collect();
+        let score = crate::util::stats::mean(&aggregate_curve);
+        AggregateResult {
+            per_space_scores,
+            aggregate_curve,
+            score,
+        }
+    }
+
     /// Mean score per space (for the per-space impact figures 4 and 7).
     pub fn per_space_means(&self) -> Vec<f64> {
         self.per_space_scores
@@ -93,9 +114,11 @@ impl AggregateResult {
 }
 
 /// Run `repeats` simulated tuning runs of `algo(hp)` on every space and
-/// aggregate the scores (Eq. 3). Runs are parallelized over
-/// (space, repeat) pairs; seeds are deterministic per (seed, space,
-/// repeat), so results are reproducible regardless of thread scheduling.
+/// aggregate the scores (Eq. 3). A thin wrapper over
+/// [`crate::campaign::Campaign`] on the process-wide executor: runs are
+/// parallelized over (space, repeat) pairs with seeds deterministic per
+/// (seed, space, repeat), so results are reproducible regardless of
+/// thread scheduling.
 pub fn evaluate_algorithm(
     algo: &str,
     hp: &HyperParams,
@@ -103,82 +126,13 @@ pub fn evaluate_algorithm(
     repeats: usize,
     seed: u64,
 ) -> Result<AggregateResult> {
-    // Validate the algorithm name once, up front.
-    optimizers::create(algo, hp)?;
-    let n_jobs = spaces.len() * repeats;
-    let next = AtomicUsize::new(0);
-    let workers = std::thread::available_parallelism()
-        .map(|p| p.get())
-        .unwrap_or(4)
-        .min(n_jobs.max(1));
-
-    // Lock-free scatter/gather: every job writes a distinct trace slot, so
-    // workers accumulate (job, trace) pairs locally and the slots are
-    // filled after join — no shared Mutex on the hot path.
-    let mut slots: Vec<Option<Trace>> = Vec::new();
-    slots.resize_with(n_jobs, || None);
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = (0..workers)
-            .map(|_| {
-                scope.spawn(|| {
-                    // Per-worker optimizer instance (Optimizer is stateless
-                    // across runs but create() is cheap anyway).
-                    let opt = optimizers::create(algo, hp).expect("validated above");
-                    let mut local: Vec<(usize, Trace)> = Vec::new();
-                    loop {
-                        let job = next.fetch_add(1, Ordering::Relaxed);
-                        if job >= n_jobs {
-                            break;
-                        }
-                        let s = job / repeats;
-                        let r = job % repeats;
-                        let se = &spaces[s];
-                        let mut sim = SimulationRunner::new_unchecked(
-                            Arc::clone(&se.space),
-                            Arc::clone(&se.cache),
-                        );
-                        // Proposal cap: no real tuning run proposes more than a
-                        // few multiples of the space size; this bounds the real
-                        // cost of schedule-heavy configs that spin on (cheap)
-                        // cache revisits.
-                        let budget = Budget::seconds(se.budget_seconds)
-                            .with_proposal_cap(4 * se.space.len() + 10_000);
-                        let mut tuning = Tuning::new(&mut sim, budget);
-                        let mut rng = Rng::new(mix64(seed, mix64(s as u64, r as u64)));
-                        opt.run(&mut tuning, &mut rng);
-                        local.push((job, tuning.finish()));
-                    }
-                    local
-                })
-            })
-            .collect();
-        for h in handles {
-            for (job, trace) in h.join().expect("evaluation worker panicked") {
-                slots[job] = Some(trace);
-            }
-        }
-    });
-
-    let mut per_space_scores = Vec::with_capacity(spaces.len());
-    for (s, se) in spaces.iter().enumerate() {
-        let ts: Vec<Trace> = slots[s * repeats..(s + 1) * repeats]
-            .iter_mut()
-            .map(|t| t.take().expect("job slot unfilled"))
-            .collect();
-        per_space_scores.push(se.score_traces(&ts));
-    }
-    let points = per_space_scores[0].len();
-    let aggregate_curve: Vec<f64> = (0..points)
-        .map(|t| {
-            per_space_scores.iter().map(|s| s[t]).sum::<f64>() / per_space_scores.len() as f64
-        })
-        .collect();
-    let score = crate::util::stats::mean(&aggregate_curve);
-    Ok(AggregateResult {
-        per_space_scores,
-        aggregate_curve,
-        score,
-    })
+    let result = crate::campaign::Campaign::new(algo)
+        .hyperparams(hp.clone())
+        .space_evals(spaces.to_vec())
+        .repeats(repeats)
+        .seed(seed)
+        .run()?;
+    Ok(result.aggregate)
 }
 
 #[cfg(test)]
@@ -188,7 +142,7 @@ mod tests {
     use crate::gpu::specs::{A100, W7800};
     use crate::kernels;
     use crate::perfmodel::NoiseModel;
-    use crate::runner::LiveRunner;
+    use crate::runner::{LiveRunner, TracePoint};
     use crate::runtime::Engine;
     use std::sync::OnceLock;
 
@@ -273,5 +227,54 @@ mod tests {
     #[test]
     fn unknown_algorithm_rejected() {
         assert!(evaluate_algorithm("nope", &HyperParams::new(), spaces(), 2, 1).is_err());
+    }
+
+    /// Regression for the index-coupled fallback: a trace whose first
+    /// result lands *after* the first sampling points must score exactly
+    /// 0 (baseline parity) at every point it hasn't reached — for every
+    /// sampling point, not just the first.
+    #[test]
+    fn late_starting_trace_scores_baseline_until_first_result() {
+        let se = &spaces()[0];
+        // One evaluation, landing 60% into the budget with the optimum.
+        let late_clock = se.budget_seconds * 0.6;
+        let trace = Trace {
+            points: vec![TracePoint {
+                config: 0,
+                value: se.optimum,
+                clock: late_clock,
+                cached: false,
+            }],
+            elapsed: late_clock,
+            unique_evals: 1,
+        };
+        let scores = se.score_traces(&[trace]);
+        assert_eq!(scores.len(), se.times.len());
+        for (i, (&t, &s)) in se.times.iter().zip(&scores).enumerate() {
+            if t < late_clock {
+                // Fallback = baseline value at *this* point => score 0.
+                assert!(
+                    s.abs() < 1e-12,
+                    "point {i} (t={t:.2}) should be baseline parity, got {s}"
+                );
+            } else {
+                // After the optimum lands the score is exactly 1.
+                assert!(
+                    (s - 1.0).abs() < 1e-12,
+                    "point {i} (t={t:.2}) should be 1.0, got {s}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn from_per_space_scores_matches_manual_math() {
+        let agg = AggregateResult::from_per_space_scores(vec![
+            vec![0.0, 0.4, 0.8],
+            vec![0.2, 0.6, 1.0],
+        ]);
+        assert_eq!(agg.aggregate_curve, vec![0.1, 0.5, 0.9]);
+        assert!((agg.score - 0.5).abs() < 1e-12);
+        assert_eq!(agg.per_space_means(), vec![0.4, 0.6]);
     }
 }

@@ -24,9 +24,14 @@ pub fn sampling_times(budget_seconds: f64, points: usize) -> Vec<f64> {
 }
 
 impl PerformanceCurve {
-    /// Build from repeated traces. `fallback(t)` supplies the value to use
-    /// when a repeat has no valid result at time `t` (the baseline value,
-    /// so that "found nothing" scores 0).
+    /// Build from repeated traces. `fallback(i)` supplies the value to
+    /// use when a repeat has no valid result at sampling point `i` — the
+    /// baseline value at `times[i]`, so that "found nothing" scores 0.
+    ///
+    /// The fallback is *index-addressed* so callers hand over a slice of
+    /// precomputed baseline values directly; the old time-addressed
+    /// closure invited callers to count invocations, silently coupling
+    /// them to this function calling it exactly once per point, in order.
     ///
     /// Single pass per trace: `times` must be ascending (sampling_times
     /// produces them so), letting a cursor walk each trace once instead of
@@ -34,11 +39,11 @@ impl PerformanceCurve {
     pub fn from_traces(
         traces: &[Trace],
         times: &[f64],
-        mut fallback: impl FnMut(f64) -> f64,
+        mut fallback: impl FnMut(usize) -> f64,
     ) -> PerformanceCurve {
         assert!(!traces.is_empty());
         debug_assert!(times.windows(2).all(|w| w[0] <= w[1]), "times must ascend");
-        let fallbacks: Vec<f64> = times.iter().map(|&t| fallback(t)).collect();
+        let fallbacks: Vec<f64> = (0..times.len()).map(&mut fallback).collect();
         let mut sums = vec![0.0f64; times.len()];
         for trace in traces {
             let mut cursor = 0usize;
@@ -104,6 +109,21 @@ mod tests {
         let t1 = trace(&[(5.0, 1.0)]);
         let c = PerformanceCurve::from_traces(&[t1], &[1.0, 6.0], |_| 42.0);
         assert_eq!(c.values, vec![42.0, 1.0]);
+    }
+
+    /// The fallback is addressed by sampling-point index: a trace that
+    /// only starts after several points must receive each point's own
+    /// fallback value, not a value that depends on invocation order.
+    #[test]
+    fn fallback_is_index_addressed() {
+        let baseline = [10.0, 9.0, 8.0, 7.0];
+        let t1 = trace(&[(2.5, 1.0)]);
+        let c = PerformanceCurve::from_traces(
+            &[t1],
+            &[1.0, 2.0, 3.0, 4.0],
+            |i| baseline[i],
+        );
+        assert_eq!(c.values, vec![10.0, 9.0, 1.0, 1.0]);
     }
 
     #[test]

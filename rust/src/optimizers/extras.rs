@@ -4,7 +4,7 @@
 //! be hypertuned or used as a meta-strategy).
 
 use super::localsearch::{self, DescentRule};
-use super::schema::{Descriptor, HyperSchema};
+use super::schema::{self, Descriptor, HyperSchema};
 use super::{relative_delta, HyperParams, Optimizer};
 use crate::runner::Tuning;
 use crate::searchspace::Neighborhood;
@@ -107,14 +107,17 @@ impl Optimizer for DifferentialEvolution {
 // ---------------------------------------------------------------------------
 // Basin hopping
 
-/// Registry entry for basin hopping.
+/// Registry entry for basin hopping. Declares `limited` grids (ROADMAP:
+/// meta-strategy sweep over the full registry), so a derived
+/// hyperparameter space exists — `Descriptor::paper` stays false, keeping
+/// the paper-replication drivers pinned to the original four.
 pub fn basin_hopping_descriptor() -> Descriptor {
     Descriptor {
         name: "basin_hopping",
         paper: false,
         schema: vec![
-            HyperSchema::float("T", 1.0),
-            HyperSchema::int("perturbation", 2),
+            HyperSchema::float("T", 1.0).limited(schema::floats(&[0.5, 1.0, 1.5])),
+            HyperSchema::int("perturbation", 2).limited(schema::ints(&[1, 2, 3])),
         ],
         build: |hp| Ok(Box::new(BasinHopping::new(hp))),
     }
@@ -265,14 +268,16 @@ impl Optimizer for Mls {
 // ---------------------------------------------------------------------------
 // Greedy iterated local search
 
-/// Registry entry for greedy iterated local search.
+/// Registry entry for greedy iterated local search. Like basin hopping,
+/// carries `limited` grids so the hypertuner can derive its space without
+/// joining the paper's Table III set.
 pub fn greedy_ils_descriptor() -> Descriptor {
     Descriptor {
         name: "greedy_ils",
         paper: false,
         schema: vec![
-            HyperSchema::int("perturbation", 1),
-            HyperSchema::int("restart", 5),
+            HyperSchema::int("perturbation", 1).limited(schema::ints(&[1, 2, 3])),
+            HyperSchema::int("restart", 5).limited(schema::ints(&[3, 5, 10])),
         ],
         build: |hp| Ok(Box::new(GreedyIls::new(hp))),
     }

@@ -13,7 +13,8 @@ use super::{HyperParams, Optimizer};
 use crate::runner::Tuning;
 use crate::searchspace::SearchSpace;
 use crate::util::rng::Rng;
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::error::Result;
 
 pub const CROSSOVER_METHODS: [&str; 4] =
     ["single_point", "two_point", "uniform", "disruptive_uniform"];

@@ -47,7 +47,7 @@ pub use schema::{Descriptor, HyperKind, HyperSchema};
 use crate::runner::Tuning;
 use crate::searchspace::{SearchSpace, Value};
 use crate::util::rng::Rng;
-use anyhow::Result;
+use crate::error::Result;
 use std::collections::BTreeMap;
 use std::sync::OnceLock;
 
@@ -132,12 +132,13 @@ pub fn registry() -> &'static [Descriptor] {
 
 /// Look up a registered optimizer's descriptor by name.
 pub fn descriptor(name: &str) -> Result<&'static Descriptor> {
-    registry().iter().find(|d| d.name == name).ok_or_else(|| {
-        anyhow::anyhow!(
-            "unknown optimizer {name:?}; registered: {}",
-            optimizer_names().join(", ")
-        )
-    })
+    registry()
+        .iter()
+        .find(|d| d.name == name)
+        .ok_or_else(|| crate::error::TuneError::UnknownAlgorithm {
+            name: name.to_string(),
+            known: optimizer_names().join(", "),
+        })
 }
 
 /// All registered optimizer names, in registration order.

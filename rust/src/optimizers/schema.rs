@@ -14,7 +14,7 @@
 
 use super::{HyperParams, Optimizer};
 use crate::searchspace::Value;
-use anyhow::{bail, Result};
+use crate::error::{Result, TuneError};
 
 /// The value type a hyperparameter accepts.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -101,31 +101,31 @@ impl HyperSchema {
             // coercion this validation exists to eliminate.
             HyperKind::Float => {
                 if matches!(v, Value::Bool(_)) || v.as_f64().is_none() {
-                    bail!(
+                    return Err(TuneError::SchemaViolation(format!(
                         "hyperparameter {:?} of {owner} expects a float, got {v:?}",
                         self.name
-                    );
+                    )));
                 }
             }
             HyperKind::Int => {
                 if matches!(v, Value::Bool(_)) || v.as_i64().is_none() {
-                    bail!(
+                    return Err(TuneError::SchemaViolation(format!(
                         "hyperparameter {:?} of {owner} expects an integer, got {v:?}",
                         self.name
-                    );
+                    )));
                 }
             }
             HyperKind::Str => {
                 let Some(s) = v.as_str() else {
-                    bail!(
+                    return Err(TuneError::SchemaViolation(format!(
                         "hyperparameter {:?} of {owner} expects a string, got {v:?}",
                         self.name
-                    );
+                    )));
                 };
                 if !self.choices.is_empty()
                     && !self.choices.iter().any(|c| c.as_str() == Some(s))
                 {
-                    bail!(
+                    return Err(TuneError::SchemaViolation(format!(
                         "hyperparameter {:?} of {owner} has no choice {s:?}; \
                          valid choices: {}",
                         self.name,
@@ -134,7 +134,7 @@ impl HyperSchema {
                             .map(|c| c.key())
                             .collect::<Vec<_>>()
                             .join(", ")
-                    );
+                    )));
                 }
             }
         }
@@ -179,12 +179,12 @@ impl Descriptor {
         for (key, value) in &hp.0 {
             let Some(schema) = self.schema.iter().find(|s| s.name == key.as_str()) else {
                 if self.schema.is_empty() {
-                    bail!(
+                    return Err(TuneError::SchemaViolation(format!(
                         "unknown hyperparameter {key:?}: {} takes no hyperparameters",
                         self.name
-                    );
+                    )));
                 }
-                bail!(
+                return Err(TuneError::SchemaViolation(format!(
                     "unknown hyperparameter {key:?} for {}; valid keys: {}",
                     self.name,
                     self.schema
@@ -192,7 +192,7 @@ impl Descriptor {
                         .map(|s| s.name)
                         .collect::<Vec<_>>()
                         .join(", ")
-                );
+                )));
             };
             schema.check(self.name, value)?;
         }

@@ -45,8 +45,9 @@ pub const BATCH_SIZES: [usize; 4] = [256, 1024, 4096, 16384];
 pub const CONTRACT_VERSION: u64 = 1;
 
 /// Validate a parsed `artifacts/contract.json` against this mirror.
-pub fn validate_contract(json: &crate::util::json::Json) -> anyhow::Result<()> {
-    use anyhow::{bail, Context};
+pub fn validate_contract(json: &crate::util::json::Json) -> crate::error::Result<()> {
+    use crate::bail;
+    use crate::error::Context;
     let get = |k: &str| {
         json.get(k)
             .with_context(|| format!("contract.json missing {k:?}"))

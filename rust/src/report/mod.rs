@@ -5,7 +5,7 @@
 
 use crate::util::plot::{self, Series};
 use crate::util::table::Table;
-use anyhow::Result;
+use crate::error::Result;
 use std::path::{Path, PathBuf};
 
 /// A sink for experiment outputs.

@@ -17,10 +17,12 @@ use crate::perfmodel::analytical;
 use crate::perfmodel::contract;
 use crate::perfmodel::contract::{NUM_DEVICE, NUM_FEATURES};
 #[cfg(feature = "pjrt")]
-use crate::util::json;
+use crate::bail;
 #[cfg(feature = "pjrt")]
-use anyhow::Context;
-use anyhow::{bail, Result};
+use crate::error::Context;
+use crate::error::{Result, TuneError};
+#[cfg(feature = "pjrt")]
+use crate::util::json;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
@@ -56,6 +58,14 @@ struct PjrtState {
 #[cfg(feature = "pjrt")]
 unsafe impl Send for PjrtState {}
 
+// XLA runtime failures surface as the typed `Engine` error class.
+#[cfg(feature = "pjrt")]
+impl From<xla::Error> for TuneError {
+    fn from(e: xla::Error) -> TuneError {
+        TuneError::Engine(e.to_string())
+    }
+}
+
 /// Placeholder so `Engine`'s layout is feature-independent; the `pjrt`
 /// field is always `None` without the `pjrt` feature.
 #[cfg(not(feature = "pjrt"))]
@@ -88,10 +98,11 @@ impl Engine {
     #[cfg(not(feature = "pjrt"))]
     pub fn pjrt(artifacts_dir: &Path) -> Result<Engine> {
         let _ = artifacts_dir;
-        bail!(
+        Err(TuneError::Engine(
             "built without the `pjrt` feature; add the vendored `xla` crate \
              to [dependencies] in Cargo.toml and rebuild with --features pjrt"
-        )
+                .into(),
+        ))
     }
 
     /// PJRT engine from an artifacts directory (validates contract.json).
@@ -197,7 +208,9 @@ impl Engine {
         _features: &[[f32; NUM_FEATURES]],
         _device: &[f32; NUM_DEVICE],
     ) -> Result<Vec<Measurement>> {
-        bail!("PJRT backend selected but built without the `pjrt` feature")
+        Err(TuneError::Engine(
+            "PJRT backend selected but built without the `pjrt` feature".into(),
+        ))
     }
 
     #[cfg(feature = "pjrt")]

@@ -27,7 +27,8 @@
 //! operands fall back to f64.
 
 use super::param::Value;
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::error::{Context, Result};
 use std::collections::HashMap;
 
 /// A compiled constraint: source text + AST + referenced parameter names.

@@ -36,7 +36,8 @@ use super::constraint::Constraint;
 use super::param::{TunableParam, Value};
 use crate::util::hash::FastMap;
 use crate::util::rng::Rng;
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::error::Result;
 use std::collections::HashMap;
 use std::sync::OnceLock;
 
@@ -369,6 +370,31 @@ impl SearchSpace {
             .map(|v| v.key())
             .collect::<Vec<_>>()
             .join(",")
+    }
+
+    /// Stable fingerprint of this space's structure (parameter names and
+    /// exact value grids, plus the enumerated size). Persisted with
+    /// campaign results as provenance: a later schema/grid change
+    /// invalidates stale caches instead of silently misdecoding their
+    /// config indices against a different grid.
+    pub fn fingerprint(&self) -> String {
+        // FNV-1a over the parameter names and rendered value keys.
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |s: &str| {
+            for &b in s.as_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0100_0000_01b3);
+            }
+            h ^= 0x1f;
+            h = h.wrapping_mul(0x0100_0000_01b3);
+        };
+        for p in &self.params {
+            eat(&p.name);
+            for v in &p.values {
+                eat(&v.key());
+            }
+        }
+        format!("{h:016x}-{}", self.len())
     }
 
     /// Uniform random valid configuration.

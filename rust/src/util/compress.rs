@@ -5,7 +5,7 @@
 //! automatically"); we do the same with flate2. Paths ending in `.gz` are
 //! compressed transparently by [`write_string`] / [`read_string`].
 
-use anyhow::{Context, Result};
+use crate::error::{Context, Result};
 use flate2::read::GzDecoder;
 use flate2::write::GzEncoder;
 use flate2::Compression;

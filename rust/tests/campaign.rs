@@ -1,0 +1,350 @@
+//! Campaign API end-to-end tests.
+//!
+//! The refactor contract: `Campaign` (persistent executor, observer
+//! events, typed errors) must reproduce the pre-refactor
+//! `evaluate_algorithm` pipeline **byte-for-byte**. The reference
+//! implementation below is a faithful copy of the old per-call
+//! `thread::scope` evaluator; the tests pin the new path against it on
+//! the synthetic kernel in simulation mode at quick scale.
+
+// Same style-lint policy as the library crate (see rust/src/lib.rs);
+// integration tests and benches are separate crates and do not inherit it.
+#![allow(clippy::needless_range_loop, clippy::type_complexity)]
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use tunetuner::campaign::{Campaign, Executor, Observer};
+use tunetuner::dataset::bruteforce;
+use tunetuner::gpu::specs::{A100, MI250X, W6600};
+use tunetuner::kernels;
+use tunetuner::methodology::{evaluate_algorithm, AggregateResult, SpaceEval};
+use tunetuner::optimizers::{self, HyperParams};
+use tunetuner::perfmodel::NoiseModel;
+use tunetuner::runner::{Budget, LiveRunner, SimulationRunner, Trace, Tuning};
+use tunetuner::runtime::Engine;
+use tunetuner::util::rng::{mix64, Rng};
+
+/// Three synthetic-kernel spaces on distinct simulated devices.
+fn spaces() -> &'static Vec<SpaceEval> {
+    static SPACES: OnceLock<Vec<SpaceEval>> = OnceLock::new();
+    SPACES.get_or_init(|| {
+        let engine = Arc::new(Engine::native());
+        [&A100, &MI250X, &W6600]
+            .iter()
+            .map(|dev| {
+                let kernel = kernels::kernel_by_name("synthetic").unwrap();
+                let mut live = LiveRunner::new(
+                    kernels::kernel_by_name("synthetic").unwrap(),
+                    dev,
+                    Arc::clone(&engine),
+                    NoiseModel::default(),
+                    42,
+                );
+                let cache = Arc::new(bruteforce::bruteforce(&mut live).unwrap());
+                SpaceEval::new(kernel.space_arc(), cache, 0.95, 25)
+            })
+            .collect()
+    })
+}
+
+/// The pre-refactor `evaluate_algorithm`: a fresh `thread::scope` per
+/// call, lock-free scatter/gather into job slots, seeds derived per
+/// (seed, space, repeat). Kept verbatim as the golden reference.
+fn reference_evaluate(
+    algo: &str,
+    hp: &HyperParams,
+    spaces: &[SpaceEval],
+    repeats: usize,
+    seed: u64,
+) -> AggregateResult {
+    optimizers::create(algo, hp).unwrap();
+    let n_jobs = spaces.len() * repeats;
+    let next = AtomicUsize::new(0);
+    let workers = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4)
+        .min(n_jobs.max(1));
+
+    let mut slots: Vec<Option<Trace>> = Vec::new();
+    slots.resize_with(n_jobs, || None);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                scope.spawn(|| {
+                    let opt = optimizers::create(algo, hp).expect("validated above");
+                    let mut local: Vec<(usize, Trace)> = Vec::new();
+                    loop {
+                        let job = next.fetch_add(1, Ordering::Relaxed);
+                        if job >= n_jobs {
+                            break;
+                        }
+                        let s = job / repeats;
+                        let r = job % repeats;
+                        let se = &spaces[s];
+                        let mut sim = SimulationRunner::new_unchecked(
+                            Arc::clone(&se.space),
+                            Arc::clone(&se.cache),
+                        );
+                        let budget = Budget::seconds(se.budget_seconds)
+                            .with_proposal_cap(4 * se.space.len() + 10_000);
+                        let mut tuning = Tuning::new(&mut sim, budget);
+                        let mut rng = Rng::new(mix64(seed, mix64(s as u64, r as u64)));
+                        opt.run(&mut tuning, &mut rng);
+                        local.push((job, tuning.finish()));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            for (job, trace) in h.join().expect("evaluation worker panicked") {
+                slots[job] = Some(trace);
+            }
+        }
+    });
+
+    let mut per_space_scores = Vec::with_capacity(spaces.len());
+    for (s, se) in spaces.iter().enumerate() {
+        let ts: Vec<Trace> = slots[s * repeats..(s + 1) * repeats]
+            .iter_mut()
+            .map(|t| t.take().expect("job slot unfilled"))
+            .collect();
+        per_space_scores.push(se.score_traces(&ts));
+    }
+    let points = per_space_scores[0].len();
+    let aggregate_curve: Vec<f64> = (0..points)
+        .map(|t| {
+            per_space_scores.iter().map(|s| s[t]).sum::<f64>() / per_space_scores.len() as f64
+        })
+        .collect();
+    let score = aggregate_curve.iter().sum::<f64>() / aggregate_curve.len() as f64;
+    AggregateResult {
+        per_space_scores,
+        aggregate_curve,
+        score,
+    }
+}
+
+fn assert_bitwise_equal(a: &AggregateResult, b: &AggregateResult, tag: &str) {
+    assert_eq!(a.score.to_bits(), b.score.to_bits(), "{tag}: score drift");
+    assert_eq!(
+        a.aggregate_curve.len(),
+        b.aggregate_curve.len(),
+        "{tag}: curve length"
+    );
+    for (i, (x, y)) in a.aggregate_curve.iter().zip(&b.aggregate_curve).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: curve point {i}");
+    }
+    for (s, (xs, ys)) in a
+        .per_space_scores
+        .iter()
+        .zip(&b.per_space_scores)
+        .enumerate()
+    {
+        for (i, (x, y)) in xs.iter().zip(ys).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{tag}: space {s} point {i}");
+        }
+    }
+}
+
+/// Every algorithm, through the campaign path, reproduces the
+/// pre-refactor evaluator bit-for-bit.
+#[test]
+fn campaign_reproduces_prerefactor_scores_bitwise() {
+    for algo in ["random_search", "pso", "genetic_algorithm", "simulated_annealing"] {
+        let reference = reference_evaluate(algo, &HyperParams::new(), spaces(), 8, 7);
+        let campaign = Campaign::new(algo)
+            .space_evals(spaces().clone())
+            .repeats(8)
+            .seed(7)
+            .run()
+            .unwrap();
+        assert_bitwise_equal(&campaign.aggregate, &reference, algo);
+        // And the evaluate_algorithm wrapper is the same thing.
+        let wrapper = evaluate_algorithm(algo, &HyperParams::new(), spaces(), 8, 7).unwrap();
+        assert_bitwise_equal(&wrapper, &reference, algo);
+    }
+}
+
+/// Non-default hyperparameters flow through identically.
+#[test]
+fn campaign_reproduces_prerefactor_scores_with_hyperparams() {
+    let hp = HyperParams::new()
+        .set("method", "two_point")
+        .set("popsize", 10i64)
+        .set("mutation_chance", 20i64);
+    let reference = reference_evaluate("genetic_algorithm", &hp, spaces(), 6, 13);
+    let campaign = Campaign::new("genetic_algorithm")
+        .hyperparams(hp)
+        .space_evals(spaces().clone())
+        .repeats(6)
+        .seed(13)
+        .run()
+        .unwrap();
+    assert_bitwise_equal(&campaign.aggregate, &reference, "ga+hp");
+}
+
+/// The same campaign is bit-stable across executor pool shapes (the
+/// seeds come from job indices, not threads).
+#[test]
+fn campaign_bit_stable_across_executors() {
+    let base = Campaign::new("dual_annealing")
+        .space_evals(spaces().clone())
+        .repeats(5)
+        .seed(21);
+    let on_global = base.clone().run().unwrap();
+    for workers in [0, 1, 7] {
+        let on_pool = base
+            .clone()
+            .executor(Arc::new(Executor::new(workers)))
+            .run()
+            .unwrap();
+        assert_bitwise_equal(
+            &on_pool.aggregate,
+            &on_global.aggregate,
+            &format!("pool size {workers}"),
+        );
+    }
+}
+
+/// Observer event stream: submitting-thread events are totally ordered,
+/// worker events respect the documented partial order, and counts match
+/// spaces × repeats exactly.
+#[derive(Default)]
+struct Recorder {
+    events: Mutex<Vec<String>>,
+}
+
+impl Observer for Recorder {
+    fn campaign_started(&self, algo: &str, _hp_key: &str, spaces: usize, repeats: usize) {
+        self.push(format!("campaign_started {algo} {spaces}x{repeats}"));
+    }
+    fn space_started(&self, s: usize, _label: &str, _budget: f64) {
+        self.push(format!("space_started {s}"));
+    }
+    fn run_started(&self, s: usize, r: usize) {
+        self.push(format!("run_started {s}.{r}"));
+    }
+    fn trace_completed(&self, s: usize, r: usize, best: f64, unique: usize, _elapsed: f64) {
+        assert!(best.is_finite() && unique > 0);
+        self.push(format!("trace_completed {s}.{r}"));
+    }
+    fn space_scored(&self, s: usize, _label: &str, _mean: f64) {
+        self.push(format!("space_scored {s}"));
+    }
+    fn campaign_finished(&self, _score: f64, _wall: f64) {
+        self.push("campaign_finished".to_string());
+    }
+}
+
+impl Recorder {
+    fn push(&self, e: String) {
+        self.events.lock().unwrap().push(e);
+    }
+}
+
+#[test]
+fn observer_event_order_and_counts() {
+    let rec = Arc::new(Recorder::default());
+    let (n_spaces, repeats) = (3usize, 4usize);
+    Campaign::new("mls")
+        .space_evals(spaces().clone())
+        .repeats(repeats)
+        .observer(Arc::clone(&rec) as Arc<dyn Observer>)
+        .run()
+        .unwrap();
+    let events = rec.events.lock().unwrap().clone();
+
+    // Bookends.
+    assert_eq!(events.first().unwrap(), "campaign_started mls 3x4");
+    assert_eq!(events.last().unwrap(), "campaign_finished");
+
+    // Exact counts: one start/completion per (space, repeat), one
+    // started/scored per space.
+    let count = |prefix: &str| events.iter().filter(|e| e.starts_with(prefix)).count();
+    assert_eq!(count("space_started"), n_spaces);
+    assert_eq!(count("space_scored"), n_spaces);
+    assert_eq!(count("run_started"), n_spaces * repeats);
+    assert_eq!(count("trace_completed"), n_spaces * repeats);
+
+    // Partial order: all space_started before any run event; every run's
+    // start before its completion; all completions before any scoring;
+    // scoring in space order.
+    let pos = |e: &str| events.iter().position(|x| x == e).unwrap();
+    let last_space_started = events
+        .iter()
+        .rposition(|e| e.starts_with("space_started"))
+        .unwrap();
+    let first_run = events
+        .iter()
+        .position(|e| e.starts_with("run_started"))
+        .unwrap();
+    assert!(last_space_started < first_run);
+    for s in 0..n_spaces {
+        for r in 0..repeats {
+            assert!(
+                pos(&format!("run_started {s}.{r}")) < pos(&format!("trace_completed {s}.{r}"))
+            );
+        }
+    }
+    let last_trace = events
+        .iter()
+        .rposition(|e| e.starts_with("trace_completed"))
+        .unwrap();
+    let first_scored = events
+        .iter()
+        .position(|e| e.starts_with("space_scored"))
+        .unwrap();
+    assert!(last_trace < first_scored);
+    for s in 1..n_spaces {
+        assert!(pos(&format!("space_scored {}", s - 1)) < pos(&format!("space_scored {s}")));
+    }
+}
+
+/// `config_scored` threads through the hypertuning layer: one event per
+/// configuration, in enumeration order.
+#[test]
+fn exhaustive_tuning_emits_config_scored() {
+    #[derive(Default)]
+    struct Configs(Mutex<Vec<(usize, f64)>>);
+    impl Observer for Configs {
+        fn config_scored(&self, idx: usize, _hp_key: &str, score: f64) {
+            self.0.lock().unwrap().push((idx, score));
+        }
+    }
+    let obs = Arc::new(Configs::default());
+    let hp_space = tunetuner::hypertuning::limited_space("dual_annealing").unwrap();
+    let results = tunetuner::hypertuning::exhaustive_tuning_observed(
+        "dual_annealing",
+        &hp_space,
+        "limited",
+        &spaces()[..1],
+        2,
+        5,
+        Arc::clone(&obs) as Arc<dyn Observer>,
+    )
+    .unwrap();
+    let seen = obs.0.lock().unwrap().clone();
+    assert_eq!(seen.len(), hp_space.len());
+    for (i, (idx, score)) in seen.iter().enumerate() {
+        assert_eq!(*idx, i);
+        assert_eq!(score.to_bits(), results.results[i].score.to_bits());
+    }
+}
+
+/// Typed errors at the library boundary.
+#[test]
+fn campaign_errors_are_typed() {
+    use tunetuner::TuneError;
+    let err = Campaign::new("warp_drive")
+        .space_evals(spaces().clone())
+        .run()
+        .unwrap_err();
+    assert!(matches!(err, TuneError::UnknownAlgorithm { .. }), "{err:#}");
+    let err = Campaign::new("pso")
+        .hyperparams(HyperParams::new().set("warp", 9.9))
+        .space_evals(spaces().clone())
+        .run()
+        .unwrap_err();
+    assert!(matches!(err, TuneError::SchemaViolation(_)), "{err:#}");
+}
