@@ -5,14 +5,19 @@
 //! Groups:
 //!   space      — search-space enumeration per kernel (constraint engine)
 //!   engine     — batched device-model evaluation, PJRT vs native (L1/L2)
-//!   sim        — simulation-mode replay rate (the paper's feasibility core)
+//!   sim        — simulation-mode replay rate (the paper's feasibility core):
+//!                eval_lite lookup throughput + SimTable build
+//!   cache      — on-disk cache load: gzipped JSON vs the T4B binary sidecar
+//!   tuning     — per-run buffer pooling: scratch_reuse vs fresh_alloc
 //!   baseline   — methodology baseline/budget computation per space
 //!   optimizer  — optimizer stepping rate in simulation mode
 //!   bruteforce — full-space brute-force (Table II regeneration cost)
+//!   executor   — persistent pool vs spawn-per-call + campaign rate
 //!   hypertune  — one exhaustive campaign + meta-level scoring (Tables III/IV,
 //!                Figs 2-9 building block)
 //!
-//! Filter with `cargo bench -- <substring>`.
+//! Filter with `cargo bench -- <substring>`; comma separates alternatives
+//! (`cargo bench -- sim/,cache/,tuning/` runs the three replay groups).
 //!
 //! Results are also written as machine-readable JSON (group → mean seconds,
 //! items/s) to `BENCH.json` (override with `BENCH_JSON=<path>`), so the
@@ -31,14 +36,14 @@
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
-use tunetuner::dataset::{bruteforce, hub::Hub};
+use tunetuner::dataset::{bruteforce, cache::CacheData, hub::Hub, simtable::SimTable, t4b};
 use tunetuner::gpu::specs::{all_devices, A100};
 use tunetuner::hypertuning;
 use tunetuner::kernels;
 use tunetuner::methodology::{evaluate_algorithm, SpaceEval};
 use tunetuner::optimizers::{self, HyperParams};
 use tunetuner::perfmodel::NoiseModel;
-use tunetuner::runner::{Budget, LiveRunner, SimulationRunner, Tuning};
+use tunetuner::runner::{Budget, LiveRunner, Runner, SimulationRunner, Tuning, TuningScratch};
 use tunetuner::runtime::Engine;
 use tunetuner::util::json::Json;
 use tunetuner::util::rng::Rng;
@@ -64,7 +69,10 @@ impl Bench {
     /// (~0.4s, ~40ms in smoke mode), after warmup.
     fn run<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> Option<Duration> {
         if let Some(filter) = &self.filter {
-            if !name.contains(filter.as_str()) {
+            if !filter
+                .split(',')
+                .any(|alt| !alt.is_empty() && name.contains(alt))
+            {
                 return None;
             }
         }
@@ -311,7 +319,10 @@ fn main() {
     let wants_executor = b
         .filter
         .as_ref()
-        .map(|f| executor_bench_names.contains(f.as_str()))
+        .map(|f| {
+            f.split(',')
+                .any(|alt| !alt.is_empty() && executor_bench_names.contains(alt))
+        })
         .unwrap_or(true);
     if wants_executor {
         let kernel = kernels::kernel_by_name("synthetic").unwrap();
@@ -382,6 +393,118 @@ fn main() {
         b.throughput("executor/campaign_run/4-repeats", 4, || {
             std::hint::black_box(campaign.run().unwrap().score());
         });
+    }
+
+    // ---- sim replay stack: SimTable lookups, cache formats, scratch pooling -------
+    // The simulator's throughput is the denominator of every meta-sweep.
+    // sim/eval_lite is the raw columnar-lookup rate (the PR-4 acceptance
+    // gate: >= 10x the record-walk rate it replaced), sim/table_build the
+    // one-time cost it amortizes, cache/load_* the JSON-vs-T4B startup
+    // delta, and tuning/* the pooled-scratch vs fresh-alloc delta. Runs on
+    // the synthetic kernel (no hub needed); setup is filter-gated.
+    let sim_bench_names = "sim/eval_lite/10k sim/table_build/synthetic \
+         cache/load_json/synthetic cache/load_t4b/synthetic \
+         tuning/scratch_reuse/20x50-evals tuning/fresh_alloc/20x50-evals";
+    let wants_sim = b
+        .filter
+        .as_ref()
+        .map(|f| {
+            f.split(',')
+                .any(|alt| !alt.is_empty() && sim_bench_names.contains(alt))
+        })
+        .unwrap_or(true);
+    if wants_sim {
+        let kernel = kernels::kernel_by_name("synthetic").unwrap();
+        let space = kernel.space_arc();
+        let mut live = LiveRunner::new(
+            kernels::kernel_by_name("synthetic").unwrap(),
+            &A100,
+            Arc::clone(&engine),
+            NoiseModel::default(),
+            42,
+        );
+        let cache = Arc::new(bruteforce::bruteforce(&mut live).unwrap());
+        let n = space.len();
+
+        {
+            let mut sim =
+                SimulationRunner::new_unchecked(Arc::clone(&space), Arc::clone(&cache));
+            b.throughput("sim/eval_lite/10k", 10_000, move || {
+                let mut acc = 0.0f64;
+                for i in 0..10_000usize {
+                    let (value, cost) = sim.evaluate_lite(i % n);
+                    acc += value.min(1e9) + cost;
+                }
+                std::hint::black_box(acc);
+            });
+        }
+        b.run("sim/table_build/synthetic", || {
+            // Direct build, bypassing the per-cache memo.
+            SimTable::build(&cache).n_valid
+        });
+
+        let dir = std::env::temp_dir().join(format!("tt_bench_cache_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).ok();
+        let json_path = dir.join("synthetic.json.gz");
+        cache.save(&json_path).unwrap();
+        let t4b_path = t4b::sidecar_path(&json_path);
+        t4b::write(
+            &cache,
+            &space.fingerprint(),
+            t4b::SrcStamp::of(&json_path),
+            &t4b_path,
+        )
+        .unwrap();
+        b.run("cache/load_json/synthetic", || {
+            CacheData::load(&json_path).unwrap().records.len()
+        });
+        b.run("cache/load_t4b/synthetic", || {
+            t4b::read(&t4b_path).unwrap().0.records.len()
+        });
+
+        {
+            let space2 = Arc::clone(&space);
+            let cache2 = Arc::clone(&cache);
+            b.throughput("tuning/fresh_alloc/20x50-evals", 20 * 50, move || {
+                let mut acc = 0usize;
+                for r in 0..20u64 {
+                    let mut sim = SimulationRunner::new_unchecked(
+                        Arc::clone(&space2),
+                        Arc::clone(&cache2),
+                    );
+                    let mut tuning = Tuning::new(&mut sim, Budget::evals(50));
+                    let mut rng = Rng::new(r);
+                    while !tuning.done() {
+                        tuning.eval(rng.below(n));
+                    }
+                    acc += tuning.finish().unique_evals;
+                }
+                std::hint::black_box(acc);
+            });
+        }
+        {
+            let space2 = Arc::clone(&space);
+            let cache2 = Arc::clone(&cache);
+            let mut scratch = TuningScratch::new();
+            b.throughput("tuning/scratch_reuse/20x50-evals", 20 * 50, move || {
+                let mut acc = 0usize;
+                for r in 0..20u64 {
+                    let mut sim = SimulationRunner::new_unchecked(
+                        Arc::clone(&space2),
+                        Arc::clone(&cache2),
+                    );
+                    let mut tuning =
+                        Tuning::with_scratch(&mut sim, Budget::evals(50), &mut scratch);
+                    let mut rng = Rng::new(r);
+                    while !tuning.done() {
+                        tuning.eval(rng.below(n));
+                    }
+                    acc += tuning.finish().unique_evals;
+                }
+                std::hint::black_box(acc);
+            });
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     // ---- shared hub-backed setup for sim/optimizer/hypertune benches --------------

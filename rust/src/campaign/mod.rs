@@ -57,7 +57,7 @@ use crate::kernels;
 use crate::methodology::{AggregateResult, SpaceEval};
 use crate::optimizers::{self, HyperParams};
 use crate::perfmodel::NoiseModel;
-use crate::runner::{Budget, LiveRunner, SimulationRunner, Trace, Tuning};
+use crate::runner::{Budget, LiveRunner, SimulationRunner, Trace, Tuning, TuningScratch};
 use crate::runtime::Engine;
 use crate::util::rng::{mix64, Rng};
 use std::sync::Arc;
@@ -346,13 +346,18 @@ impl Campaign {
             let opt = optimizers::create(&algo, &hp).expect("validated before scatter");
             let budget = budget.for_space(se);
             let mut rng = Rng::new(mix64(seed, mix64(s as u64, r as u64)));
-            let trace = match &backend {
+            // Pooled per-worker scratch: executor workers are persistent
+            // threads, so the spaces×repeats jobs of a campaign (and of
+            // every following campaign) reuse one set of space-sized
+            // buffers per worker slot instead of allocating and zeroing
+            // them per run.
+            let trace = TuningScratch::with_pooled(|scratch| match &backend {
                 Backend::Sim => {
                     let mut sim = SimulationRunner::new_unchecked(
                         Arc::clone(&se.space),
                         Arc::clone(&se.cache),
                     );
-                    let mut tuning = Tuning::new(&mut sim, budget);
+                    let mut tuning = Tuning::with_scratch(&mut sim, budget, scratch);
                     opt.run(&mut tuning, &mut rng);
                     tuning.finish()
                 }
@@ -368,11 +373,11 @@ impl Campaign {
                         NoiseModel::default(),
                         *seed,
                     );
-                    let mut tuning = Tuning::new(&mut live, budget);
+                    let mut tuning = Tuning::with_scratch(&mut live, budget, scratch);
                     opt.run(&mut tuning, &mut rng);
                     tuning.finish()
                 }
-            };
+            });
             job_observer.trace_completed(
                 s,
                 r,

@@ -25,22 +25,22 @@ pub fn bruteforce(runner: &mut LiveRunner) -> Result<CacheData> {
         }
     }
     let kernel = runner.kernel();
-    Ok(CacheData {
-        kernel: kernel.name.to_string(),
-        device: runner
+    Ok(CacheData::new(
+        kernel.name.to_string(),
+        runner
             .label()
             .split('@')
             .nth(1)
             .unwrap_or("?")
             .trim_end_matches(" live")
             .to_string(),
-        problem: kernel.problem.clone(),
-        space_seed: runner.space_seed,
-        observations_per_config: runner.observations,
-        bruteforce_seconds: device_seconds,
-        param_names: kernel.space().params.iter().map(|p| p.name.clone()).collect(),
+        kernel.problem.clone(),
+        runner.space_seed,
+        runner.observations,
+        device_seconds,
+        kernel.space().params.iter().map(|p| p.name.clone()).collect(),
         records,
-    })
+    ))
 }
 
 #[cfg(test)]

@@ -21,13 +21,15 @@
 //! keys against a freshly built space so that an out-of-date cache fails
 //! loudly instead of replaying the wrong values.
 
+use super::simtable::SimTable;
 use crate::runner::EvalResult;
 use crate::searchspace::SearchSpace;
 use crate::util::compress;
 use crate::util::json::{self, Json};
 use crate::bail;
-use crate::error::{Context, Result};
+use crate::error::{Context, Result, TuneError};
 use std::path::Path;
+use std::sync::{Arc, OnceLock};
 
 /// One configuration's brute-force record.
 #[derive(Clone, Debug)]
@@ -58,7 +60,7 @@ impl ConfigRecord {
 }
 
 /// A fully brute-forced search space.
-#[derive(Clone, Debug)]
+#[derive(Debug)]
 pub struct CacheData {
     pub kernel: String,
     pub device: String,
@@ -70,45 +72,83 @@ pub struct CacheData {
     pub param_names: Vec<String>,
     /// Index-aligned with the search space.
     pub records: Vec<ConfigRecord>,
+    /// Lazily built columnar eval table + memoized statistics (see
+    /// [`CacheData::sim_table`]).
+    table: OnceLock<Arc<SimTable>>,
+}
+
+impl Clone for CacheData {
+    /// Clones the records but not the memoized [`SimTable`] — the clone's
+    /// `records` are independently mutable, so its table is rebuilt on
+    /// first use.
+    fn clone(&self) -> CacheData {
+        CacheData::new(
+            self.kernel.clone(),
+            self.device.clone(),
+            self.problem.clone(),
+            self.space_seed,
+            self.observations_per_config,
+            self.bruteforce_seconds,
+            self.param_names.clone(),
+            self.records.clone(),
+        )
+    }
 }
 
 impl CacheData {
+    pub fn new(
+        kernel: impl Into<String>,
+        device: impl Into<String>,
+        problem: impl Into<String>,
+        space_seed: u64,
+        observations_per_config: usize,
+        bruteforce_seconds: f64,
+        param_names: Vec<String>,
+        records: Vec<ConfigRecord>,
+    ) -> CacheData {
+        CacheData {
+            kernel: kernel.into(),
+            device: device.into(),
+            problem: problem.into(),
+            space_seed,
+            observations_per_config,
+            bruteforce_seconds,
+            param_names,
+            records,
+            table: OnceLock::new(),
+        }
+    }
+
+    /// The columnar evaluation table and memoized baseline statistics for
+    /// this cache, built on first use and `Arc`-shared afterwards (the
+    /// simulation runners and the baseline both read it). `records` must
+    /// not be mutated after the first call — mutate-then-replay would
+    /// read the stale table (cloning resets the memo).
+    pub fn sim_table(&self) -> &Arc<SimTable> {
+        self.table.get_or_init(|| Arc::new(SimTable::build(self)))
+    }
+
     /// Sorted mean values of the valid configurations (ascending).
+    /// Memoized on the [`SimTable`]; this accessor clones — hot callers
+    /// should read `sim_table().sorted_valid_values` directly.
     pub fn sorted_valid_values(&self) -> Vec<f64> {
-        let mut v: Vec<f64> = self
-            .records
-            .iter()
-            .filter(|r| r.valid)
-            .map(|r| r.value)
-            .collect();
-        v.sort_by(f64::total_cmp);
-        v
+        self.sim_table().sorted_valid_values.clone()
     }
 
     /// The known optimum (lowest mean).
     pub fn optimum(&self) -> f64 {
-        self.records
-            .iter()
-            .filter(|r| r.valid)
-            .map(|r| r.value)
-            .fold(f64::INFINITY, f64::min)
+        self.sim_table().optimum
     }
 
     /// Index of the optimal configuration.
     pub fn optimum_index(&self) -> usize {
-        let mut best = 0;
-        let mut bv = f64::INFINITY;
-        for (i, r) in self.records.iter().enumerate() {
-            if r.valid && r.value < bv {
-                bv = r.value;
-                best = i;
-            }
-        }
-        best
+        self.sim_table().optimum_index
     }
 
     /// Mean evaluation cost in simulated seconds (used for the baseline
-    /// time axis); invalid configs cost compile + overhead only.
+    /// time axis); invalid configs cost compile + overhead only. The
+    /// standard-overhead value is memoized as `sim_table().mean_eval_cost`;
+    /// this general form still walks the records.
     pub fn mean_eval_cost(&self, overhead: f64) -> f64 {
         let total: f64 = self.records.iter().map(|r| r.total_cost(overhead)).sum();
         total / self.records.len() as f64
@@ -116,7 +156,7 @@ impl CacheData {
 
     /// Fraction of configurations that launch.
     pub fn valid_fraction(&self) -> f64 {
-        self.records.iter().filter(|r| r.valid).count() as f64 / self.records.len() as f64
+        self.sim_table().valid_fraction
     }
 
     // -- JSON (de)serialization -------------------------------------------------
@@ -182,40 +222,60 @@ impl CacheData {
                 .and_then(|v| v.as_f64())
                 .with_context(|| format!("cache missing {k:?}"))
         };
-        let param_names = j
+        // Strict decoding: a corrupt cache must fail loudly, not replay
+        // wrong values. Param names must all be strings and observations
+        // all numeric — the old lenient path defaulted/dropped them,
+        // which silently shifted every downstream cost and value.
+        let mut param_names = Vec::new();
+        for (i, v) in j
             .get("param_names")
             .and_then(|v| v.as_arr())
             .context("missing param_names")?
             .iter()
-            .map(|v| v.as_str().unwrap_or_default().to_string())
-            .collect();
+            .enumerate()
+        {
+            match v.as_str() {
+                Some(s) => param_names.push(s.to_string()),
+                None => {
+                    return Err(TuneError::Parse(format!(
+                        "cache param_names[{i}] is not a string: {v:?}"
+                    )))
+                }
+            }
+        }
         let mut records = Vec::new();
         for c in j
             .get("configs")
             .and_then(|v| v.as_arr())
             .context("missing configs")?
         {
+            let key = c
+                .get("key")
+                .and_then(|v| v.as_str())
+                .context("config missing key")?
+                .to_string();
             let valid = c.get("valid").and_then(|v| v.as_bool()).unwrap_or(false);
-            let observations: Vec<f64> = c
-                .get("obs")
-                .and_then(|v| v.as_arr())
-                .unwrap_or(&[])
-                .iter()
-                .filter_map(|x| x.as_f64())
-                .collect();
+            let obs_arr = c.get("obs").and_then(|v| v.as_arr()).unwrap_or(&[]);
+            let mut observations = Vec::with_capacity(obs_arr.len());
+            for (i, x) in obs_arr.iter().enumerate() {
+                match x.as_f64() {
+                    Some(f) => observations.push(f),
+                    None => {
+                        return Err(TuneError::Parse(format!(
+                            "cache config {key:?}: obs[{i}] is not a number: {x:?}"
+                        )))
+                    }
+                }
+            }
             records.push(ConfigRecord {
-                key: c
-                    .get("key")
-                    .and_then(|v| v.as_str())
-                    .context("config missing key")?
-                    .to_string(),
                 value: if valid {
                     c.get("avg")
                         .and_then(|v| v.as_f64())
-                        .context("valid config missing avg")?
+                        .with_context(|| format!("valid config {key:?} missing avg"))?
                 } else {
                     f64::INFINITY
                 },
+                key,
                 observations,
                 compile_time: c
                     .get("compile_time")
@@ -224,16 +284,16 @@ impl CacheData {
                 valid,
             });
         }
-        Ok(CacheData {
-            kernel: str_field("kernel")?,
-            device: str_field("device")?,
-            problem: str_field("problem")?,
-            space_seed: num_field("space_seed")? as u64,
-            observations_per_config: num_field("observations_per_config")? as usize,
-            bruteforce_seconds: num_field("bruteforce_seconds")?,
+        Ok(CacheData::new(
+            str_field("kernel")?,
+            str_field("device")?,
+            str_field("problem")?,
+            num_field("space_seed")? as u64,
+            num_field("observations_per_config")? as usize,
+            num_field("bruteforce_seconds")?,
             param_names,
             records,
-        })
+        ))
     }
 
     /// Save (gzip if path ends in .gz).
@@ -282,15 +342,15 @@ mod tests {
     use super::*;
 
     fn sample_cache() -> CacheData {
-        CacheData {
-            kernel: "synthetic".into(),
-            device: "A100".into(),
-            problem: "test".into(),
-            space_seed: 99,
-            observations_per_config: 3,
-            bruteforce_seconds: 1234.5,
-            param_names: vec!["a".into(), "b".into()],
-            records: vec![
+        CacheData::new(
+            "synthetic",
+            "A100",
+            "test",
+            99,
+            3,
+            1234.5,
+            vec!["a".into(), "b".into()],
+            vec![
                 ConfigRecord {
                     key: "1,1".into(),
                     value: 0.5,
@@ -313,7 +373,7 @@ mod tests {
                     valid: true,
                 },
             ],
-        }
+        )
     }
 
     #[test]
@@ -357,5 +417,37 @@ mod tests {
     fn rejects_wrong_schema() {
         let j = json::parse(r#"{"schema": "other"}"#).unwrap();
         assert!(CacheData::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn strict_decoding_rejects_non_numeric_observation() {
+        // The old lenient decoder filter_map'd non-numeric observations
+        // away, silently shortening the run_time of the config — the
+        // replayed clock would drift from what live tuning measured.
+        let mut j = sample_cache().to_json();
+        if let Some(Json::Arr(configs)) = j.get("configs").cloned() {
+            let mut cfgs = configs;
+            cfgs[0].set("obs", Json::Arr(vec![Json::Num(0.4), Json::Str("oops".into())]));
+            j.set("configs", Json::Arr(cfgs));
+        }
+        let err = CacheData::from_json(&j).unwrap_err();
+        assert!(matches!(err, TuneError::Parse(_)), "{err:#}");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("1,1"), "names the offending config: {msg}");
+        assert!(msg.contains("obs[1]"), "{msg}");
+    }
+
+    #[test]
+    fn strict_decoding_rejects_non_string_param_name() {
+        // The old decoder unwrap_or_default'd these to "", breaking the
+        // T1 interop metadata without any signal.
+        let mut j = sample_cache().to_json();
+        j.set(
+            "param_names",
+            Json::Arr(vec![Json::Str("a".into()), Json::Num(7.0)]),
+        );
+        let err = CacheData::from_json(&j).unwrap_err();
+        assert!(matches!(err, TuneError::Parse(_)), "{err:#}");
+        assert!(format!("{err:#}").contains("param_names[1]"), "{err:#}");
     }
 }

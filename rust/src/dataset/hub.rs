@@ -17,6 +17,7 @@
 use super::bruteforce;
 use super::cache::CacheData;
 use super::t1;
+use super::t4b;
 use crate::gpu::specs::{all_devices, device_by_name, DeviceModel};
 use crate::kernels::{self, Kernel};
 use crate::perfmodel::NoiseModel;
@@ -38,6 +39,12 @@ pub const HUB_KERNELS: [&str; 4] = ["dedispersion", "convolution", "hotspot", "g
 pub struct Hub {
     root: PathBuf,
     memo: Mutex<HashMap<(String, String), Arc<CacheData>>>,
+    /// Per-kernel space fingerprints (None = unregistered kernel).
+    /// Computing one builds the kernel's whole search space, so it is
+    /// memoized per hub instead of per (kernel, device) load — a full
+    /// hub scan would otherwise re-enumerate each kernel's space once
+    /// per device on the exact startup path T4B exists to make cheap.
+    fp_memo: Mutex<HashMap<String, Option<String>>>,
 }
 
 impl Hub {
@@ -45,6 +52,7 @@ impl Hub {
         Hub {
             root: root.into(),
             memo: Mutex::new(HashMap::new()),
+            fp_memo: Mutex::new(HashMap::new()),
         }
     }
 
@@ -63,25 +71,137 @@ impl Hub {
         self.root.join(kernel).join(format!("{device}.json.gz"))
     }
 
+    /// Path of the binary T4B sidecar next to the JSON cache.
+    pub fn sidecar_path(&self, kernel: &str, device: &str) -> PathBuf {
+        t4b::sidecar_path(&self.cache_path(kernel, device))
+    }
+
     pub fn exists(&self, kernel: &str, device: &str) -> bool {
         self.cache_path(kernel, device).exists()
     }
 
-    /// Load a cache (memoized); verifies alignment with the kernel space.
+    /// Load a cache (memoized). When a T4B sidecar is present, its
+    /// fingerprint matches the kernel's current search space, and the
+    /// JSON has not been modified since the sidecar was written, it is
+    /// served directly — the JSON is never read, let alone parsed. A
+    /// missing, stale, outdated (JSON newer) or unreadable sidecar falls
+    /// back to the JSON and (re)writes the sidecar so the next load is
+    /// binary; a JSON that is newer but unreadable falls back to a
+    /// fingerprint-fresh sidecar instead of failing the load.
     pub fn load(&self, kernel: &str, device: &str) -> Result<Arc<CacheData>> {
         let key = (kernel.to_string(), device.to_string());
         if let Some(c) = self.memo.lock().unwrap().get(&key) {
             return Ok(Arc::clone(c));
         }
+        let data = Arc::new(self.load_from_disk(kernel, device)?);
+        self.memo.lock().unwrap().insert(key, Arc::clone(&data));
+        Ok(data)
+    }
+
+    /// Fingerprint of the space a kernel's caches must index, memoized
+    /// per hub (computing it enumerates the kernel's search space). Hub
+    /// caches are always for registered kernels; anything else returns
+    /// None and skips the sidecar machinery, parsing JSON as before.
+    fn space_fingerprint(&self, kernel: &str) -> Option<String> {
+        if let Some(fp) = self.fp_memo.lock().unwrap().get(kernel) {
+            return fp.clone();
+        }
+        // Compute outside the lock: building a kernel enumerates its
+        // whole space, and holding the mutex for that would serialize
+        // unrelated kernels' loads. A racing thread computes the same
+        // deterministic value; first insert wins.
+        let fp = kernels::kernel_by_name(kernel)
+            .ok()
+            .map(|k| k.space().fingerprint());
+        self.fp_memo
+            .lock()
+            .unwrap()
+            .entry(kernel.to_string())
+            .or_insert(fp)
+            .clone()
+    }
+
+    /// Decode the sidecar if it matches the expected space fingerprint;
+    /// stale/unreadable sidecars warn and return None.
+    fn read_fresh_sidecar(
+        &self,
+        sidecar: &Path,
+        fingerprint: Option<&str>,
+    ) -> Option<(CacheData, t4b::SrcStamp)> {
+        let fp = fingerprint?;
+        if !sidecar.exists() {
+            return None;
+        }
+        match t4b::read(sidecar) {
+            Ok((cache, got, src)) if got == fp => Some((cache, src)),
+            Ok((_, got, _)) => {
+                crate::log_warn!(
+                    "hub: stale T4B sidecar {} (fingerprint {got} != {fp}), re-parsing JSON",
+                    sidecar.display()
+                );
+                None
+            }
+            Err(e) => {
+                crate::log_warn!(
+                    "hub: unreadable T4B sidecar {}: {e:#}; re-parsing JSON",
+                    sidecar.display()
+                );
+                None
+            }
+        }
+    }
+
+    /// Best-effort sidecar write, stamped with the JSON it mirrors — a
+    /// failure only costs the next load a JSON parse.
+    fn write_sidecar(&self, cache: &CacheData, fp: &str, json: &Path, sidecar: &Path) {
+        if let Err(e) = t4b::write(cache, fp, t4b::SrcStamp::of(json), sidecar) {
+            crate::log_warn!(
+                "hub: failed to write T4B sidecar {}: {e:#}",
+                sidecar.display()
+            );
+        }
+    }
+
+    fn load_from_disk(&self, kernel: &str, device: &str) -> Result<CacheData> {
         let path = self.cache_path(kernel, device);
-        let data = Arc::new(CacheData::load(&path).with_context(|| {
+        let fingerprint = self.space_fingerprint(kernel);
+        let sidecar = t4b::sidecar_path(&path);
+        if let Some((cache, src)) = self.read_fresh_sidecar(&sidecar, fingerprint.as_deref()) {
+            if sidecar_mirrors_json(&src, &path, &sidecar) {
+                // The warm path: the sidecar still mirrors the JSON next
+                // to it, which is never read, let alone parsed.
+                return Ok(cache);
+            }
+            // The JSON changed since the sidecar was written (a dropped-in
+            // re-measured cache keeps the same space fingerprint): the
+            // JSON wins — but if it turns out unreadable, the decoded
+            // sidecar (the last good parse) must not take the hub down.
+            match CacheData::load(&path) {
+                Ok(fresh) => {
+                    if let Some(fp) = &fingerprint {
+                        self.write_sidecar(&fresh, fp, &path, &sidecar);
+                    }
+                    return Ok(fresh);
+                }
+                Err(e) => {
+                    crate::log_warn!(
+                        "hub: cache {} unreadable ({e:#}); serving the T4B sidecar instead",
+                        path.display()
+                    );
+                    return Ok(cache);
+                }
+            }
+        }
+        let cache = CacheData::load(&path).with_context(|| {
             format!(
                 "load hub cache {} (build it with `tunetuner bruteforce`)",
                 path.display()
             )
-        })?);
-        self.memo.lock().unwrap().insert(key, Arc::clone(&data));
-        Ok(data)
+        })?;
+        if let Some(fp) = &fingerprint {
+            self.write_sidecar(&cache, fp, &path, &sidecar);
+        }
+        Ok(cache)
     }
 
     /// Brute-force one (kernel, device) space and store it.
@@ -100,7 +220,14 @@ impl Hub {
             seed,
         );
         let cache = Arc::new(bruteforce::bruteforce(&mut runner)?);
-        cache.save(&self.cache_path(kernel.name, device.name))?;
+        let path = self.cache_path(kernel.name, device.name);
+        cache.save(&path)?;
+        // Emit both formats up front: a fresh hub never pays the one-time
+        // JSON→T4B conversion on its first load. Best-effort, like the
+        // load path — the JSON already landed, so a failed sidecar write
+        // only costs the next load a parse.
+        let sidecar = t4b::sidecar_path(&path);
+        self.write_sidecar(&cache, &kernel.space().fingerprint(), &path, &sidecar);
         t1::write_t1(kernel, &self.root.join(kernel.name).join("t1.json"))?;
         self.memo.lock().unwrap().insert(
             (kernel.name.to_string(), device.name.to_string()),
@@ -199,6 +326,25 @@ impl Hub {
     }
 }
 
+/// True when the sidecar still mirrors the JSON next to it. The sidecar
+/// records the `(size, mtime)` identity of the JSON it was converted
+/// from (exact equality, immune to timestamp-granularity ties); a
+/// stamp-less sidecar falls back to an mtime comparison. A missing JSON
+/// counts as mirrored — the sidecar is all there is.
+fn sidecar_mirrors_json(src: &t4b::SrcStamp, json: &Path, sidecar: &Path) -> bool {
+    if !json.exists() {
+        return true;
+    }
+    if src.is_known() {
+        return t4b::SrcStamp::of(json) == *src;
+    }
+    let mtime = |p: &Path| std::fs::metadata(p).and_then(|m| m.modified()).ok();
+    match (mtime(json), mtime(sidecar)) {
+        (Some(j), Some(s)) => j <= s,
+        _ => true,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -227,6 +373,147 @@ mod tests {
         // Landscapes differ across devices.
         let w = hub2.load("synthetic", "W6600").unwrap();
         assert_ne!(c.optimum_index(), w.optimum_index());
+
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn build_synthetic_hub(tag: &str) -> (std::path::PathBuf, Hub) {
+        let dir = std::env::temp_dir().join(format!("tt_hub_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let hub = Hub::new(&dir);
+        hub.ensure(&["synthetic"], &["A100"], Arc::new(Engine::native()), 7)
+            .unwrap();
+        (dir, hub)
+    }
+
+    /// The acceptance property for the binary sidecar: a hub with a
+    /// fingerprint-fresh sidecar keeps loading even when the `.json.gz`
+    /// is corrupted — the warm path (untouched files) never reads the
+    /// JSON at all, and a JSON that is newer but unreadable falls back
+    /// to the sidecar instead of taking the hub down.
+    #[test]
+    fn fresh_sidecar_is_served_without_touching_json() {
+        let (dir, hub) = build_synthetic_hub("t4b_serve");
+        let sidecar = hub.sidecar_path("synthetic", "A100");
+        assert!(sidecar.exists(), "bruteforce must emit both formats");
+        let want = hub.load("synthetic", "A100").unwrap();
+
+        // Corrupt the JSON. A fresh hub handle (no memo) must still load,
+        // byte-identically, from the sidecar alone.
+        std::fs::write(hub.cache_path("synthetic", "A100"), b"not gzip, not json").unwrap();
+        let hub2 = Hub::new(&dir);
+        let got = hub2.load("synthetic", "A100").unwrap();
+        assert_eq!(got.records.len(), want.records.len());
+        for (a, b) in got.records.iter().zip(&want.records) {
+            assert_eq!(a.key, b.key);
+            assert_eq!(a.value.to_bits(), b.value.to_bits());
+            assert_eq!(a.observations, b.observations);
+            assert_eq!(a.compile_time.to_bits(), b.compile_time.to_bits());
+            assert_eq!(a.valid, b.valid);
+        }
+        assert_eq!(got.bruteforce_seconds.to_bits(), want.bruteforce_seconds.to_bits());
+
+        // The warm path proper: with the JSON *gone* the load can only
+        // succeed by serving the sidecar without ever touching the JSON.
+        std::fs::remove_file(hub.cache_path("synthetic", "A100")).unwrap();
+        let hub3 = Hub::new(&dir);
+        let warm = hub3.load("synthetic", "A100").unwrap();
+        assert_eq!(warm.records.len(), want.records.len());
+        assert_eq!(warm.optimum().to_bits(), want.optimum().to_bits());
+
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A sidecar with a stale fingerprint is rejected: the hub falls back
+    /// to the JSON and rewrites a fresh sidecar.
+    #[test]
+    fn stale_sidecar_falls_back_to_json_and_is_rewritten() {
+        let (dir, hub) = build_synthetic_hub("t4b_stale");
+        let want = hub.load("synthetic", "A100").unwrap();
+        let sidecar = hub.sidecar_path("synthetic", "A100");
+
+        // Overwrite the sidecar under a wrong fingerprint.
+        super::t4b::write(&want, "stale-fingerprint", super::t4b::SrcStamp::NONE, &sidecar)
+            .unwrap();
+        let hub2 = Hub::new(&dir);
+        let got = hub2.load("synthetic", "A100").unwrap();
+        assert_eq!(got.records.len(), want.records.len());
+        // The fallback parse rewrote the sidecar with the live fingerprint.
+        let fp = crate::kernels::kernel_by_name("synthetic")
+            .unwrap()
+            .space()
+            .fingerprint();
+        let (_, written_fp, _) = super::t4b::read(&sidecar).unwrap();
+        assert_eq!(written_fp, fp);
+
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A re-measured JSON dropped next to an older sidecar (same space,
+    /// same fingerprint — only the recorded source stamp distinguishes
+    /// it) must win: the hub re-parses the JSON and refreshes the
+    /// sidecar.
+    #[test]
+    fn updated_json_wins_over_older_sidecar() {
+        let (dir, hub) = build_synthetic_hub("t4b_mtime");
+        let original = hub.load("synthetic", "A100").unwrap();
+        let sidecar = hub.sidecar_path("synthetic", "A100");
+        let json_path = hub.cache_path("synthetic", "A100");
+        let (_, _, recorded) = super::t4b::read(&sidecar).unwrap();
+        assert!(recorded.is_known(), "hub sidecars carry a source stamp");
+
+        // "Re-measure": same space, perturbed values.
+        let mut updated = (*original).clone();
+        for r in &mut updated.records {
+            if r.valid {
+                r.value *= 2.0;
+            }
+        }
+        // Save until the JSON's identity differs from the recorded stamp
+        // (guards against coarse filesystem timestamp granularity in the
+        // astronomically unlikely same-size case).
+        for _ in 0..200 {
+            updated.save(&json_path).unwrap();
+            if super::t4b::SrcStamp::of(&json_path) != recorded {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(15));
+        }
+        assert_ne!(
+            super::t4b::SrcStamp::of(&json_path),
+            recorded,
+            "stamp setup failed"
+        );
+
+        let hub2 = Hub::new(&dir);
+        let got = hub2.load("synthetic", "A100").unwrap();
+        assert_eq!(
+            got.optimum().to_bits(),
+            (original.optimum() * 2.0).to_bits(),
+            "updated JSON must be served over the stale sidecar"
+        );
+        // And the sidecar was refreshed from the new JSON.
+        let (from_sidecar, _, _) = super::t4b::read(&sidecar).unwrap();
+        assert_eq!(from_sidecar.records.len(), got.records.len());
+        assert_eq!(
+            from_sidecar.optimum().to_bits(),
+            got.optimum().to_bits()
+        );
+
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A hub populated before the sidecar format existed (JSON only)
+    /// grows a sidecar on first load.
+    #[test]
+    fn json_only_hub_gains_sidecar_on_first_load() {
+        let (dir, hub) = build_synthetic_hub("t4b_gain");
+        let sidecar = hub.sidecar_path("synthetic", "A100");
+        std::fs::remove_file(&sidecar).unwrap();
+
+        let hub2 = Hub::new(&dir);
+        hub2.load("synthetic", "A100").unwrap();
+        assert!(sidecar.exists(), "JSON parse must write the sidecar");
 
         std::fs::remove_dir_all(&dir).ok();
     }

@@ -6,15 +6,26 @@
 //! * [`bruteforce`] — exhaustively evaluates a search space through the
 //!   live runner (batched through the PJRT engine) and records the
 //!   simulated device-hours (Table II).
+//! * [`simtable`] — the columnar, precomputed evaluation table behind
+//!   simulation mode: interleaved `(value, total_cost)` pairs, a validity
+//!   bitset, and memoized baseline statistics, built lazily once per
+//!   cache and `Arc`-shared across runs.
+//! * [`t4b`] — the binary columnar sidecar of the JSON cache (layout
+//!   documented byte-by-byte in the module docs): fingerprint-stamped,
+//!   loaded by the hub instead of re-parsing JSON on every startup.
 //! * [`t1`] — the T1-style input description (kernel, parameters,
 //!   constraints) written next to each cache for interoperability.
 //! * [`hub`] — the on-disk hub layout: build, save, load, and index the
-//!   24 (kernel × device) search spaces.
+//!   24 (kernel × device) search spaces. Serves the `.t4b` sidecar when
+//!   it is fingerprint-fresh and writes one after any JSON parse.
 
 pub mod cache;
+pub mod simtable;
+pub mod t4b;
 pub mod bruteforce;
 pub mod t1;
 pub mod hub;
 
 pub use cache::{CacheData, ConfigRecord};
 pub use hub::Hub;
+pub use simtable::SimTable;

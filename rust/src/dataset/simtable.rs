@@ -1,0 +1,217 @@
+//! `SimTable`: the columnar, precomputed evaluation table behind
+//! simulation mode.
+//!
+//! The simulator's throughput is the denominator of everything this repo
+//! does: every meta-strategy sweep and every Table III/IV cell is millions
+//! of `evaluate_lite` calls. Replaying those through the AoS
+//! [`ConfigRecord`](super::cache::ConfigRecord)s means a pointer chase
+//! into each record plus a 32-element observation-vector re-sum *per
+//! lookup* to recompute the total cost. The `SimTable` hoists all of that
+//! into one build pass per [`CacheData`](super::cache::CacheData):
+//!
+//! * **Interleaved `(value, total_cost)` pairs** in one contiguous buffer
+//!   — `SimulationRunner::evaluate_lite` becomes a single indexed load
+//!   (16 bytes, one cache line shared by adjacent configs), with cost
+//!   precomputed as `compile + Σobs + overhead` in exactly the summation
+//!   order the per-call path used, so replayed clocks are bit-identical.
+//! * **A validity bitset** (one bit per config).
+//! * **Memoized baseline statistics** — `sorted_valid_values`, `optimum`,
+//!   `optimum_index`, `mean_eval_cost`, `valid_fraction` — which were
+//!   previously recomputed O(n log n) per `Baseline::new` and O(n) per
+//!   hub-index write or test-quality call.
+//!
+//! The table is built lazily on first use and `Arc`-shared (the same
+//! pattern as the CSR neighbor graphs on `SearchSpace`): campaigns build
+//! it once on the preparing thread, and the spaces×repeats executor jobs
+//! share it read-only.
+
+use super::cache::CacheData;
+use crate::runner::live::FRAMEWORK_OVERHEAD;
+
+/// Columnar evaluation table derived from one brute-force cache.
+#[derive(Debug)]
+pub struct SimTable {
+    /// Interleaved `(mean value, total simulated cost)` per config, in
+    /// search-space index order. Cost includes [`FRAMEWORK_OVERHEAD`].
+    vc: Vec<(f64, f64)>,
+    /// Validity bitset: bit `i` of word `i / 64` is set iff config `i`
+    /// launched successfully.
+    valid: Vec<u64>,
+    /// Number of valid configurations.
+    pub n_valid: usize,
+    /// Mean values of the valid configurations, ascending.
+    pub sorted_valid_values: Vec<f64>,
+    /// Lowest valid mean value (INFINITY if nothing is valid).
+    pub optimum: f64,
+    /// Index of the optimal configuration (0 if nothing is valid).
+    pub optimum_index: usize,
+    /// Mean simulated cost of one evaluation at [`FRAMEWORK_OVERHEAD`].
+    pub mean_eval_cost: f64,
+    /// Fraction of configurations that launch.
+    pub valid_fraction: f64,
+}
+
+impl SimTable {
+    /// One build pass over the records. Every statistic is computed with
+    /// the same fold order as the former per-call `CacheData` methods, so
+    /// everything downstream (baseline budgets, replayed clocks) is
+    /// bit-identical to the pre-table code.
+    pub fn build(cache: &CacheData) -> SimTable {
+        let n = cache.records.len();
+        let mut vc = Vec::with_capacity(n);
+        let mut valid = vec![0u64; (n + 63) / 64];
+        let mut n_valid = 0usize;
+        let mut optimum_index = 0usize;
+        let mut optimum = f64::INFINITY;
+        for (i, r) in cache.records.iter().enumerate() {
+            vc.push((r.value, r.total_cost(FRAMEWORK_OVERHEAD)));
+            if r.valid {
+                valid[i >> 6] |= 1u64 << (i & 63);
+                n_valid += 1;
+                if r.value < optimum {
+                    optimum = r.value;
+                    optimum_index = i;
+                }
+            }
+        }
+        let mut sorted_valid_values: Vec<f64> = cache
+            .records
+            .iter()
+            .filter(|r| r.valid)
+            .map(|r| r.value)
+            .collect();
+        sorted_valid_values.sort_by(f64::total_cmp);
+        let mean_eval_cost = vc.iter().map(|&(_, c)| c).sum::<f64>() / n as f64;
+        let valid_fraction = n_valid as f64 / n as f64;
+        SimTable {
+            vc,
+            valid,
+            n_valid,
+            sorted_valid_values,
+            optimum,
+            optimum_index,
+            mean_eval_cost,
+            valid_fraction,
+        }
+    }
+
+    /// Number of configurations.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.vc.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.vc.is_empty()
+    }
+
+    /// The simulation hot path: `(value, total_cost)` as one indexed load
+    /// from the interleaved buffer — no record pointer chase, no
+    /// observation traversal, no allocation.
+    #[inline]
+    pub fn lookup(&self, idx: usize) -> (f64, f64) {
+        self.vc[idx]
+    }
+
+    /// Mean value of a configuration (INFINITY for invalid configs).
+    #[inline]
+    pub fn value(&self, idx: usize) -> f64 {
+        self.vc[idx].0
+    }
+
+    /// Total simulated cost of evaluating a configuration.
+    #[inline]
+    pub fn cost(&self, idx: usize) -> f64 {
+        self.vc[idx].1
+    }
+
+    /// Whether a configuration launched successfully.
+    #[inline]
+    pub fn is_valid(&self, idx: usize) -> bool {
+        self.valid[idx >> 6] & (1u64 << (idx & 63)) != 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::cache::ConfigRecord;
+
+    fn sample() -> CacheData {
+        CacheData::new(
+            "t",
+            "d",
+            "p",
+            1,
+            3,
+            0.0,
+            vec!["a".into()],
+            vec![
+                ConfigRecord {
+                    key: "1".into(),
+                    value: 0.5,
+                    observations: vec![0.4, 0.5, 0.6],
+                    compile_time: 2.0,
+                    valid: true,
+                },
+                ConfigRecord {
+                    key: "2".into(),
+                    value: f64::INFINITY,
+                    observations: vec![],
+                    compile_time: 3.0,
+                    valid: false,
+                },
+                ConfigRecord {
+                    key: "3".into(),
+                    value: 0.25,
+                    observations: vec![0.2, 0.25, 0.3],
+                    compile_time: 1.5,
+                    valid: true,
+                },
+            ],
+        )
+    }
+
+    #[test]
+    fn table_matches_record_walk() {
+        let cache = sample();
+        let t = SimTable::build(&cache);
+        assert_eq!(t.len(), 3);
+        for (i, r) in cache.records.iter().enumerate() {
+            assert_eq!(t.value(i).to_bits(), r.value.to_bits());
+            assert_eq!(
+                t.cost(i).to_bits(),
+                r.total_cost(FRAMEWORK_OVERHEAD).to_bits()
+            );
+            assert_eq!(t.is_valid(i), r.valid);
+            assert_eq!(t.lookup(i), (t.value(i), t.cost(i)));
+        }
+        assert_eq!(t.n_valid, 2);
+        assert_eq!(t.optimum, 0.25);
+        assert_eq!(t.optimum_index, 2);
+        assert_eq!(t.sorted_valid_values, vec![0.25, 0.5]);
+        assert!((t.valid_fraction - 2.0 / 3.0).abs() < 1e-12);
+        // Mean cost folds in the same order the per-record walk did.
+        let want = cache
+            .records
+            .iter()
+            .map(|r| r.total_cost(FRAMEWORK_OVERHEAD))
+            .sum::<f64>()
+            / 3.0;
+        assert_eq!(t.mean_eval_cost.to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn arc_shared_and_lazy_on_cache() {
+        let cache = sample();
+        let a = std::sync::Arc::clone(cache.sim_table());
+        let b = std::sync::Arc::clone(cache.sim_table());
+        assert!(std::sync::Arc::ptr_eq(&a, &b), "built once, shared");
+        // A clone starts with a fresh (unbuilt) memo.
+        let cloned = cache.clone();
+        let c = std::sync::Arc::clone(cloned.sim_table());
+        assert!(!std::sync::Arc::ptr_eq(&a, &c));
+        assert_eq!(c.optimum, a.optimum);
+    }
+}

@@ -1,0 +1,516 @@
+//! T4B: the binary columnar sidecar of the T4 JSON cache.
+//!
+//! Parsing a multi-MB gzipped JSON document per (kernel, device) space is
+//! the dominant cost of campaign startup on a warm hub. The T4B sidecar
+//! stores the same `CacheData` — field for field, including infinities
+//! and empty observation vectors — as flat little-endian sections that
+//! decode with `memcpy`-shaped loops, plus the structural fingerprint of
+//! the search space it indexes, so a stale sidecar is detected without
+//! touching the JSON. The header also records the `(size, mtime)`
+//! identity of the source JSON, so a dropped-in re-measured cache (same
+//! space fingerprint, different bytes) is detected exactly. The hub
+//! loads `<DEVICE>.t4b` when it is present, fingerprint-fresh, and still
+//! mirrors the JSON next to it (never parsing the JSON at all on that
+//! path) and writes one after any JSON parse; `tunetuner bruteforce`
+//! emits both formats up front.
+//!
+//! # Layout (version 1, all integers/floats little-endian)
+//!
+//! Strings are `u32` byte length followed by UTF-8 bytes. With `n` the
+//! record count and `w = ceil(n / 64)`:
+//!
+//! | offset        | size          | field                                   |
+//! |---------------|---------------|-----------------------------------------|
+//! | 0             | 8             | magic `"TUNET4B\0"`                     |
+//! | 8             | 4             | format version (`u32`, = 1)             |
+//! | 12            | …             | space fingerprint (string)              |
+//! | …             | 8             | source JSON byte size (`u64`, 0=unknown)|
+//! | …             | 8             | source JSON mtime, ns since epoch (`u64`, 0=unknown) |
+//! | …             | …             | kernel, device, problem (3 strings)     |
+//! | …             | 8             | `space_seed` (`u64`)                    |
+//! | …             | 8             | `observations_per_config` (`u64`)       |
+//! | …             | 8             | `bruteforce_seconds` (`f64`)            |
+//! | …             | 4 + …         | param count (`u32`) + names (strings)   |
+//! | …             | 8             | `n` — record count (`u64`)              |
+//! | …             | 8·n           | values (`f64`; INFINITY when invalid)   |
+//! | …             | 8·n           | compile times (`f64`)                   |
+//! | …             | 8·w           | validity bitset (`u64` words)           |
+//! | …             | 8·(n+1)       | observation offsets (`u64`, monotone)   |
+//! | …             | 8·offs[n]     | flattened observations (`f64`)          |
+//! | …             | 8·(n+1)       | key byte offsets (`u64`, monotone)      |
+//! | …             | koffs[n]      | key blob (UTF-8 bytes)                  |
+//!
+//! The file ends exactly at the key blob — trailing bytes are a decode
+//! error, as is any section that would read past the end, so a torn or
+//! foreign file can never half-decode. Writers stage through a temp file
+//! and `rename` so a crashed write never shadows the JSON.
+
+use super::cache::{CacheData, ConfigRecord};
+use crate::error::{Result, TuneError};
+use std::path::{Path, PathBuf};
+
+/// File magic, first 8 bytes.
+pub const MAGIC: [u8; 8] = *b"TUNET4B\0";
+
+/// Format version written by [`encode`].
+pub const VERSION: u32 = 1;
+
+/// Identity stamp of the source JSON a sidecar was converted from. The
+/// sidecar only mirrors that JSON: a replaced or re-measured JSON keeps
+/// the same space fingerprint, so `(size, mtime)` is what distinguishes
+/// it — exact equality, immune to filesystem timestamp granularity (an
+/// mtime *comparison* can tie on coarse-granularity filesystems).
+/// `NONE` (both zero) means "unknown"; readers then fall back to
+/// whatever freshness policy suits them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SrcStamp {
+    /// Source file size in bytes.
+    pub size: u64,
+    /// Source file mtime in nanoseconds since the epoch (truncated to
+    /// u64 — equality-compared only, and both sides truncate alike).
+    pub mtime_ns: u64,
+}
+
+impl SrcStamp {
+    /// No stamp recorded (standalone writes, unreadable metadata).
+    pub const NONE: SrcStamp = SrcStamp {
+        size: 0,
+        mtime_ns: 0,
+    };
+
+    /// Best-effort stamp of a file on disk; `NONE` if unreadable.
+    pub fn of(path: &Path) -> SrcStamp {
+        let stamp = || -> Option<SrcStamp> {
+            let meta = std::fs::metadata(path).ok()?;
+            let mtime = meta.modified().ok()?;
+            let ns = mtime
+                .duration_since(std::time::UNIX_EPOCH)
+                .ok()?
+                .as_nanos() as u64;
+            Some(SrcStamp {
+                size: meta.len(),
+                mtime_ns: ns,
+            })
+        };
+        stamp().unwrap_or(SrcStamp::NONE)
+    }
+
+    pub fn is_known(&self) -> bool {
+        *self != SrcStamp::NONE
+    }
+}
+
+/// Sidecar path next to a JSON cache file: `<stem>.t4b` with the
+/// `.json` / `.json.gz` suffix stripped (`A100.json.gz` → `A100.t4b`).
+pub fn sidecar_path(cache_path: &Path) -> PathBuf {
+    let name = cache_path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .unwrap_or("cache");
+    let stem = name
+        .strip_suffix(".json.gz")
+        .or_else(|| name.strip_suffix(".json"))
+        .unwrap_or(name);
+    cache_path.with_file_name(format!("{stem}.t4b"))
+}
+
+/// Serialize a cache (with the fingerprint of the space it indexes and
+/// the identity stamp of the JSON it mirrors) to the T4B byte layout
+/// documented in the module docs.
+pub fn encode(cache: &CacheData, fingerprint: &str, src: SrcStamp) -> Vec<u8> {
+    let n = cache.records.len();
+    let obs_total: usize = cache.records.iter().map(|r| r.observations.len()).sum();
+    let key_total: usize = cache.records.iter().map(|r| r.key.len()).sum();
+    let mut buf = Vec::with_capacity(80 + 8 * (4 * n + obs_total) + key_total);
+    buf.extend_from_slice(&MAGIC);
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    put_str(&mut buf, fingerprint);
+    buf.extend_from_slice(&src.size.to_le_bytes());
+    buf.extend_from_slice(&src.mtime_ns.to_le_bytes());
+    put_str(&mut buf, &cache.kernel);
+    put_str(&mut buf, &cache.device);
+    put_str(&mut buf, &cache.problem);
+    buf.extend_from_slice(&cache.space_seed.to_le_bytes());
+    buf.extend_from_slice(&(cache.observations_per_config as u64).to_le_bytes());
+    buf.extend_from_slice(&cache.bruteforce_seconds.to_le_bytes());
+    buf.extend_from_slice(&(cache.param_names.len() as u32).to_le_bytes());
+    for p in &cache.param_names {
+        put_str(&mut buf, p);
+    }
+    buf.extend_from_slice(&(n as u64).to_le_bytes());
+    for r in &cache.records {
+        buf.extend_from_slice(&r.value.to_le_bytes());
+    }
+    for r in &cache.records {
+        buf.extend_from_slice(&r.compile_time.to_le_bytes());
+    }
+    let mut words = vec![0u64; (n + 63) / 64];
+    for (i, r) in cache.records.iter().enumerate() {
+        if r.valid {
+            words[i >> 6] |= 1u64 << (i & 63);
+        }
+    }
+    for w in words {
+        buf.extend_from_slice(&w.to_le_bytes());
+    }
+    let mut off = 0u64;
+    buf.extend_from_slice(&off.to_le_bytes());
+    for r in &cache.records {
+        off += r.observations.len() as u64;
+        buf.extend_from_slice(&off.to_le_bytes());
+    }
+    for r in &cache.records {
+        for &x in &r.observations {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    let mut koff = 0u64;
+    buf.extend_from_slice(&koff.to_le_bytes());
+    for r in &cache.records {
+        koff += r.key.len() as u64;
+        buf.extend_from_slice(&koff.to_le_bytes());
+    }
+    for r in &cache.records {
+        buf.extend_from_slice(r.key.as_bytes());
+    }
+    buf
+}
+
+/// Decode a T4B buffer into the cache, the fingerprint it was written
+/// under, and the source-JSON stamp. Strict: bad magic/version, truncated
+/// sections, non-monotone offsets, invalid UTF-8 and trailing bytes are
+/// all [`TuneError::Parse`].
+pub fn decode(buf: &[u8]) -> Result<(CacheData, String, SrcStamp)> {
+    let mut c = Cursor { buf, pos: 0 };
+    if c.bytes(8)? != MAGIC {
+        return Err(TuneError::Parse("not a T4B file (bad magic)".into()));
+    }
+    let version = c.u32()?;
+    if version != VERSION {
+        return Err(TuneError::Parse(format!(
+            "unsupported T4B version {version} (expected {VERSION})"
+        )));
+    }
+    let fingerprint = c.string()?;
+    let src = SrcStamp {
+        size: c.u64()?,
+        mtime_ns: c.u64()?,
+    };
+    let kernel = c.string()?;
+    let device = c.string()?;
+    let problem = c.string()?;
+    let space_seed = c.u64()?;
+    let observations_per_config = c.u64()? as usize;
+    let bruteforce_seconds = c.f64()?;
+    let n_params = c.u32()? as usize;
+    let mut param_names = Vec::with_capacity(n_params.min(1 << 16));
+    for _ in 0..n_params {
+        param_names.push(c.string()?);
+    }
+    let n = c.u64()? as usize;
+    // Sanity-bound n by what the remaining bytes could possibly hold
+    // (values alone are 8n) so a corrupt count can't drive a huge alloc.
+    if n > c.remaining() / 8 {
+        return Err(TuneError::Parse(format!(
+            "T4B record count {n} exceeds file size"
+        )));
+    }
+    let values = c.f64s(n)?;
+    let compile_times = c.f64s(n)?;
+    let words = c.u64s((n + 63) / 64)?;
+    let obs_offsets = c.u64s(n + 1)?;
+    let obs_total = monotone_last(&obs_offsets, "observation")?;
+    // Bound like `n` above: an unchecked total would overflow the `8 * n`
+    // multiply inside the reader before its own range check fires.
+    if obs_total > c.remaining() / 8 {
+        return Err(TuneError::Parse(format!(
+            "T4B observation total {obs_total} exceeds file size"
+        )));
+    }
+    let obs = c.f64s(obs_total)?;
+    let key_offsets = c.u64s(n + 1)?;
+    let key_total = monotone_last(&key_offsets, "key")?;
+    let key_blob = c.bytes(key_total)?;
+    if c.pos != buf.len() {
+        return Err(TuneError::Parse(format!(
+            "trailing bytes in T4B file ({} past the key blob)",
+            buf.len() - c.pos
+        )));
+    }
+    let mut records = Vec::with_capacity(n);
+    for i in 0..n {
+        let raw_key = &key_blob[key_offsets[i] as usize..key_offsets[i + 1] as usize];
+        let key = std::str::from_utf8(raw_key)
+            .map_err(|e| TuneError::Parse(format!("T4B record {i}: key is not UTF-8: {e}")))?
+            .to_string();
+        records.push(ConfigRecord {
+            key,
+            value: values[i],
+            observations: obs[obs_offsets[i] as usize..obs_offsets[i + 1] as usize].to_vec(),
+            compile_time: compile_times[i],
+            valid: words[i >> 6] & (1u64 << (i & 63)) != 0,
+        });
+    }
+    Ok((
+        CacheData::new(
+            kernel,
+            device,
+            problem,
+            space_seed,
+            observations_per_config,
+            bruteforce_seconds,
+            param_names,
+            records,
+        ),
+        fingerprint,
+        src,
+    ))
+}
+
+/// Write a sidecar atomically (unique temp file + rename). The temp name
+/// carries pid + a process-wide counter so concurrent writers of the
+/// same sidecar never interleave into one staging file — each rename
+/// installs some writer's complete bytes.
+pub fn write(cache: &CacheData, fingerprint: &str, src: SrcStamp, path: &Path) -> Result<()> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let tmp = path.with_extension(format!(
+        "t4b.tmp.{}.{}",
+        std::process::id(),
+        TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let staged = std::fs::write(&tmp, encode(cache, fingerprint, src))
+        .and_then(|_| std::fs::rename(&tmp, path));
+    if staged.is_err() {
+        std::fs::remove_file(&tmp).ok();
+    }
+    staged?;
+    Ok(())
+}
+
+/// Read and decode a sidecar; returns `(cache, fingerprint, src_stamp)`.
+pub fn read(path: &Path) -> Result<(CacheData, String, SrcStamp)> {
+    let buf = std::fs::read(path)?;
+    decode(&buf).map_err(|e| e.wrap(format!("decode T4B sidecar {}", path.display())))
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    buf.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    buf.extend_from_slice(s.as_bytes());
+}
+
+/// Validate an offsets section (monotone non-decreasing, starts at 0)
+/// and return its final value as a usize.
+fn monotone_last(offsets: &[u64], what: &str) -> Result<usize> {
+    if offsets.first() != Some(&0) || offsets.windows(2).any(|w| w[0] > w[1]) {
+        return Err(TuneError::Parse(format!(
+            "T4B {what} offsets are not monotone from 0"
+        )));
+    }
+    Ok(offsets[offsets.len() - 1] as usize)
+}
+
+/// Bounds-checked little-endian reader over the raw file bytes.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(TuneError::Parse(format!(
+                "truncated T4B file: wanted {n} bytes at offset {}, have {}",
+                self.pos,
+                self.remaining()
+            )));
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        let raw = self.bytes(len)?;
+        String::from_utf8(raw.to_vec())
+            .map_err(|e| TuneError::Parse(format!("T4B string is not UTF-8: {e}")))
+    }
+
+    fn u64s(&mut self, n: usize) -> Result<Vec<u64>> {
+        let raw = self.bytes(8 * n)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn f64s(&mut self, n: usize) -> Result<Vec<f64>> {
+        Ok(self.u64s(n)?.into_iter().map(f64::from_bits).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CacheData {
+        CacheData::new(
+            "synthetic",
+            "A100",
+            "test problem",
+            0xFA1B,
+            3,
+            1234.5,
+            vec!["a".into(), "b".into()],
+            vec![
+                ConfigRecord {
+                    key: "1,1".into(),
+                    value: 0.5,
+                    observations: vec![0.4, 0.5, 0.6],
+                    compile_time: 2.0,
+                    valid: true,
+                },
+                ConfigRecord {
+                    key: "1,2".into(),
+                    value: f64::INFINITY,
+                    observations: vec![],
+                    compile_time: 3.0,
+                    valid: false,
+                },
+                ConfigRecord {
+                    key: "2,1".into(),
+                    value: 0.25,
+                    observations: vec![0.2, 0.25, 0.3],
+                    compile_time: 1.5,
+                    valid: true,
+                },
+            ],
+        )
+    }
+
+    fn assert_cache_eq(a: &CacheData, b: &CacheData) {
+        assert_eq!(a.kernel, b.kernel);
+        assert_eq!(a.device, b.device);
+        assert_eq!(a.problem, b.problem);
+        assert_eq!(a.space_seed, b.space_seed);
+        assert_eq!(a.observations_per_config, b.observations_per_config);
+        assert_eq!(a.bruteforce_seconds.to_bits(), b.bruteforce_seconds.to_bits());
+        assert_eq!(a.param_names, b.param_names);
+        assert_eq!(a.records.len(), b.records.len());
+        for (x, y) in a.records.iter().zip(&b.records) {
+            assert_eq!(x.key, y.key);
+            assert_eq!(x.value.to_bits(), y.value.to_bits());
+            assert_eq!(x.observations, y.observations);
+            assert_eq!(x.compile_time.to_bits(), y.compile_time.to_bits());
+            assert_eq!(x.valid, y.valid);
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_exact() {
+        let c = sample();
+        let stamp = SrcStamp {
+            size: 1234,
+            mtime_ns: 987_654_321,
+        };
+        let (back, fp, src) = decode(&encode(&c, "cafe-42", stamp)).unwrap();
+        assert_eq!(fp, "cafe-42");
+        assert_eq!(src, stamp);
+        assert!(src.is_known());
+        assert_cache_eq(&c, &back);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("tt_t4b_{}", std::process::id()));
+        let path = dir.join("A100.t4b");
+        let c = sample();
+        write(&c, "fp-1", SrcStamp::NONE, &path).unwrap();
+        let (back, fp, src) = read(&path).unwrap();
+        assert_eq!(fp, "fp-1");
+        assert!(!src.is_known());
+        assert_cache_eq(&c, &back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sidecar_path_strips_json_suffixes() {
+        let p = sidecar_path(Path::new("hub/gemm/A100.json.gz"));
+        assert_eq!(p, Path::new("hub/gemm/A100.t4b"));
+        let p = sidecar_path(Path::new("hub/gemm/A100.json"));
+        assert_eq!(p, Path::new("hub/gemm/A100.t4b"));
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let c = sample();
+        let good = encode(&c, "fp", SrcStamp::NONE);
+        // Bad magic.
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(matches!(decode(&bad), Err(TuneError::Parse(_))));
+        // Bad version.
+        let mut bad = good.clone();
+        bad[8] = 99;
+        assert!(matches!(decode(&bad), Err(TuneError::Parse(_))));
+        // Truncation anywhere must error, never panic or half-decode.
+        for cut in [10, 20, good.len() / 2, good.len() - 1] {
+            assert!(decode(&good[..cut]).is_err(), "cut at {cut}");
+        }
+        // Trailing garbage.
+        let mut bad = good.clone();
+        bad.push(0);
+        assert!(matches!(decode(&bad), Err(TuneError::Parse(_))));
+    }
+
+    /// A corrupt final observation offset (huge but monotone) must be a
+    /// Parse error, never an overflowing-multiply panic or a wild slice.
+    #[test]
+    fn rejects_huge_observation_offset() {
+        // One record, one-byte key "k", 3 observations: the file layout
+        // ends key_blob(1) | key_offsets(16) | obs(24) with obs_offsets(16)
+        // right before the obs section, so obs_offsets[1] sits at a fixed
+        // distance from the end.
+        let c = CacheData::new(
+            "s",
+            "d",
+            "p",
+            1,
+            3,
+            0.0,
+            vec!["a".into()],
+            vec![ConfigRecord {
+                key: "k".into(),
+                value: 0.5,
+                observations: vec![0.4, 0.5, 0.6],
+                compile_time: 2.0,
+                valid: true,
+            }],
+        );
+        let mut bad = encode(&c, "fp", SrcStamp::NONE);
+        assert_eq!(decode(&bad).unwrap().0.records[0].observations.len(), 3);
+        let pos = bad.len() - 1 - 16 - 24 - 8;
+        bad[pos..pos + 8].copy_from_slice(&((1u64 << 61) + 5).to_le_bytes());
+        assert!(matches!(decode(&bad), Err(TuneError::Parse(_))));
+    }
+}

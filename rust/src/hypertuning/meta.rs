@@ -147,20 +147,20 @@ pub fn meta_cache_from_results(
             }
         })
         .collect();
-    CacheData {
-        kernel: format!("hp-{}", results.algo),
-        device: "meta".to_string(),
-        problem: format!(
+    CacheData::new(
+        format!("hp-{}", results.algo),
+        "meta",
+        format!(
             "hyperparameter space of {} ({} configs)",
             results.algo,
             hp_space.len()
         ),
-        space_seed: results.seed,
-        observations_per_config: 1,
-        bruteforce_seconds: results.wallclock_seconds,
-        param_names: hp_space.params.iter().map(|p| p.name.clone()).collect(),
+        results.seed,
+        1,
+        results.wallclock_seconds,
+        hp_space.params.iter().map(|p| p.name.clone()).collect(),
         records,
-    }
+    )
 }
 
 #[cfg(test)]

@@ -17,8 +17,9 @@
 //!   (`artifacts/perfmodel_b*.hlo.txt`) produced by `python/compile/aot.py`.
 //! * [`runner`] — live runner (PJRT device model) and the paper's
 //!   **simulation mode** (trace replay with simulated-clock accounting).
-//! * [`dataset`] — brute-force driver, T1/T4 JSON formats, and the
-//!   gzip-compressed FAIR benchmark hub.
+//! * [`dataset`] — brute-force driver, T1/T4 JSON formats, the columnar
+//!   [`SimTable`](dataset::SimTable) behind simulation mode, the binary
+//!   T4B cache sidecar, and the gzip-compressed FAIR benchmark hub.
 //! * [`optimizers`] — ten optimization algorithms, each declaring a typed
 //!   hyperparameter schema in a self-describing registry (the single
 //!   source of truth for defaults, validation and the Table III/IV

@@ -15,13 +15,17 @@
 //! value, handled by scaling the draw count by the valid fraction.
 
 use crate::dataset::cache::CacheData;
-use crate::runner::live::FRAMEWORK_OVERHEAD;
+use crate::dataset::simtable::SimTable;
+use std::sync::Arc;
 
 /// The random-search baseline for one search space.
 #[derive(Clone, Debug)]
 pub struct Baseline {
-    /// Sorted (ascending) mean values of valid configurations.
-    sorted: Vec<f64>,
+    /// The cache's memoized statistics block (Arc-shared with every other
+    /// reader): `sorted_valid_values`, `optimum`, `mean_eval_cost`,
+    /// `valid_fraction` are computed once per cache instead of O(n log n)
+    /// per `Baseline::new`.
+    table: Arc<SimTable>,
     /// Memoized E[min after n valid draws] per integer n. A per-n memo
     /// (not a dense 1..n table) keeps the whole baseline O(m log m): the
     /// budget binary search touches ~log m distinct n, the sampling
@@ -38,19 +42,22 @@ pub struct Baseline {
 }
 
 impl Baseline {
-    /// Build from a brute-forced cache.
+    /// Build from a brute-forced cache. All distribution statistics come
+    /// from the cache's memoized [`SimTable`] (same fold orders as the
+    /// former per-call computations, so budgets are bit-identical).
     pub fn new(cache: &CacheData) -> Baseline {
-        let sorted = cache.sorted_valid_values();
+        let table = Arc::clone(cache.sim_table());
+        let sorted = &table.sorted_valid_values;
         assert!(!sorted.is_empty(), "space has no valid configurations");
         let optimum = sorted[0];
-        let median = crate::util::stats::percentile_sorted(&sorted, 50.0);
+        let median = crate::util::stats::percentile_sorted(sorted, 50.0);
         Baseline {
             memo: std::collections::HashMap::new(),
-            mean_cost: cache.mean_eval_cost(FRAMEWORK_OVERHEAD),
-            valid_fraction: cache.valid_fraction(),
+            mean_cost: table.mean_eval_cost,
+            valid_fraction: table.valid_fraction,
             optimum,
             median,
-            sorted,
+            table,
         }
     }
 
@@ -59,7 +66,7 @@ impl Baseline {
     /// `q_i = C(m-i, draws)/C(m, draws)` by the recurrence
     /// `q_i = q_(i-1) · (m-i-draws+1)/(m-i+1)`.
     fn expected_single(&mut self, draws: usize) -> f64 {
-        let m = self.sorted.len();
+        let m = self.table.sorted_valid_values.len();
         let draws = draws.clamp(1, m);
         if let Some(&v) = self.memo.get(&draws) {
             return v;
@@ -70,7 +77,7 @@ impl Baseline {
             let numer = (m as f64) - (i as f64) - (draws as f64) + 1.0;
             let denom = (m as f64) - (i as f64) + 1.0;
             let q = if numer <= 0.0 { 0.0 } else { q_prev * numer / denom };
-            e += self.sorted[i - 1] * (q_prev - q);
+            e += self.table.sorted_valid_values[i - 1] * (q_prev - q);
             q_prev = q;
             if q == 0.0 {
                 break;
@@ -83,7 +90,7 @@ impl Baseline {
     /// Expected best after `n_valid` valid draws (interpolated for
     /// fractional n).
     pub fn expected_best(&mut self, n_valid: f64) -> f64 {
-        let m = self.sorted.len();
+        let m = self.table.sorted_valid_values.len();
         if n_valid <= 1.0 {
             return self.expected_single(1);
         }
@@ -106,7 +113,7 @@ impl Baseline {
     /// `median - cutoff*(median - optimum)`, capped at draws = |space|.
     pub fn budget_seconds(&mut self, cutoff: f64) -> f64 {
         let target = self.median - cutoff * (self.median - self.optimum);
-        let m = self.sorted.len();
+        let m = self.table.sorted_valid_values.len();
         // Binary search over valid draw count (expected_best is monotone
         // non-increasing in n).
         let mut lo = 1usize;
@@ -133,15 +140,15 @@ mod tests {
     use crate::dataset::cache::{CacheData, ConfigRecord};
 
     fn cache_with_values(values: &[f64]) -> CacheData {
-        CacheData {
-            kernel: "t".into(),
-            device: "d".into(),
-            problem: String::new(),
-            space_seed: 0,
-            observations_per_config: 1,
-            bruteforce_seconds: 0.0,
-            param_names: vec!["x".into()],
-            records: values
+        CacheData::new(
+            "t",
+            "d",
+            "",
+            0,
+            1,
+            0.0,
+            vec!["x".into()],
+            values
                 .iter()
                 .enumerate()
                 .map(|(i, &v)| ConfigRecord {
@@ -152,7 +159,7 @@ mod tests {
                     valid: v.is_finite(),
                 })
                 .collect(),
-        }
+        )
     }
 
     #[test]

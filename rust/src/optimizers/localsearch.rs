@@ -162,16 +162,16 @@ mod tests {
                 valid: true,
             })
             .collect();
-        let cache = Arc::new(CacheData {
-            kernel: "ls".into(),
-            device: "x".into(),
-            problem: String::new(),
-            space_seed: 0,
-            observations_per_config: 1,
-            bruteforce_seconds: 0.0,
-            param_names: vec!["a".into()],
+        let cache = Arc::new(CacheData::new(
+            "ls",
+            "x",
+            "",
+            0,
+            1,
+            0.0,
+            vec!["a".into()],
             records,
-        });
+        ));
         let trace_for = |rule: DescentRule| {
             let mut sim =
                 SimulationRunner::new_unchecked(Arc::clone(&space), Arc::clone(&cache));

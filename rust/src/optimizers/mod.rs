@@ -209,7 +209,7 @@ pub(crate) mod testutil {
     use crate::gpu::specs::A100;
     use crate::kernels;
     use crate::perfmodel::NoiseModel;
-    use crate::runner::{Budget, LiveRunner, SimulationRunner, Trace};
+    use crate::runner::{Budget, LiveRunner, SimulationRunner, Trace, TuningScratch};
     use crate::runtime::Engine;
     use std::sync::Arc;
     use std::sync::OnceLock;
@@ -235,14 +235,18 @@ pub(crate) mod testutil {
     }
 
     /// Run an optimizer on the synthetic space with an eval budget.
+    /// Deliberately runs on the pooled per-thread scratch (the campaign
+    /// hot path), so every optimizer test also exercises scratch reuse.
     pub fn run_optimizer(name: &str, hp: &HyperParams, evals: usize, seed: u64) -> Trace {
         let (space, cache) = synthetic_cache();
         let mut sim = SimulationRunner::new(space, cache).unwrap();
-        let mut tuning = Tuning::new(&mut sim, Budget::evals(evals));
         let opt = create(name, hp).unwrap();
         let mut rng = Rng::new(seed);
-        opt.run(&mut tuning, &mut rng);
-        tuning.finish()
+        TuningScratch::with_pooled(|scratch| {
+            let mut tuning = Tuning::with_scratch(&mut sim, Budget::evals(evals), scratch);
+            opt.run(&mut tuning, &mut rng);
+            tuning.finish()
+        })
     }
 
     /// Fraction of the gap between space median and optimum closed.

@@ -13,6 +13,10 @@
 //! [`Tuning`] wraps a runner with budget tracking, the within-run
 //! configuration cache (revisits cost only framework overhead, as in
 //! Kernel Tuner), and the trace recording used by the methodology scoring.
+//! Its space-sized working buffers can be pooled across runs through
+//! [`TuningScratch`] — a campaign's spaces×repeats jobs reuse one scratch
+//! per executor worker instead of allocating and zeroing megabytes per
+//! run.
 
 pub mod live;
 pub mod sim;
@@ -158,17 +162,90 @@ impl Budget {
     }
 }
 
+/// Reusable per-run working memory for [`Tuning`]: the seen-bitset, the
+/// directly indexed value cache, and the trace-point vector. A fresh
+/// `Tuning` allocates (and zeroes) all three per run — megabytes per
+/// (space, repeat) job on the big spaces. Pooling one scratch per
+/// executor worker turns that into: re-zero the bitset (64× smaller than
+/// the value cache, which needs no zeroing — reads are gated by the
+/// bitset) and clear the point vector in place.
+#[derive(Default)]
+pub struct TuningScratch {
+    seen: Vec<u64>,
+    cached_values: Vec<f64>,
+    points: Vec<TracePoint>,
+}
+
+impl TuningScratch {
+    pub fn new() -> TuningScratch {
+        TuningScratch::default()
+    }
+
+    /// Reset for a run over `space_len` configurations: zero the bitset
+    /// words, grow (never shrink) the value cache without zeroing, clear
+    /// the points keeping their capacity.
+    fn reset(&mut self, space_len: usize) {
+        self.seen.clear();
+        self.seen.resize((space_len + 63) / 64, 0);
+        if self.cached_values.len() < space_len {
+            self.cached_values.resize(space_len, 0.0);
+        }
+        self.points.clear();
+    }
+
+    /// Run `f` with this thread's pooled scratch. Executor workers are
+    /// persistent threads, so this is one scratch per worker slot for the
+    /// process lifetime — exactly the reuse `Campaign::run` wants. Falls
+    /// back to a fresh scratch on re-entrant use (a nested tuning run on
+    /// the same thread), which stays correct, just unpooled.
+    pub fn with_pooled<R>(f: impl FnOnce(&mut TuningScratch) -> R) -> R {
+        thread_local! {
+            static POOLED: std::cell::RefCell<TuningScratch> =
+                std::cell::RefCell::new(TuningScratch::new());
+        }
+        POOLED.with(|cell| match cell.try_borrow_mut() {
+            Ok(mut scratch) => f(&mut scratch),
+            Err(_) => f(&mut TuningScratch::new()),
+        })
+    }
+}
+
+/// The run's working buffers: owned by this `Tuning` (the standalone
+/// constructor) or borrowed from a pooled [`TuningScratch`].
+enum Scratch<'a> {
+    Owned(TuningScratch),
+    Borrowed(&'a mut TuningScratch),
+}
+
+impl Scratch<'_> {
+    #[inline]
+    fn get(&mut self) -> &mut TuningScratch {
+        match self {
+            Scratch::Owned(s) => s,
+            Scratch::Borrowed(s) => s,
+        }
+    }
+}
+
 /// A budget-tracked tuning session over a runner: the interface the
 /// optimizers program against.
 pub struct Tuning<'a> {
     runner: &'a mut dyn Runner,
     budget: Budget,
-    trace: Trace,
+    /// Simulated seconds consumed so far.
+    elapsed: f64,
+    /// Unique configurations evaluated so far.
+    unique_evals: usize,
+    /// Total proposals including cache hits (== recorded trace points).
+    proposals: usize,
+    /// Running best value — kept current in `eval`, so `best_value` is
+    /// O(1) instead of a full trace scan per optimizer iteration.
+    best: f64,
     /// Within-run evaluation cache, directly indexed by config index:
-    /// `cached_values[i]` is meaningful iff bit `i` of `seen` is set. No
-    /// hashing on the revisit path — one bit test and one array read.
-    seen: Vec<u64>,
-    cached_values: Vec<f64>,
+    /// `scratch.cached_values[i]` is meaningful iff bit `i` of
+    /// `scratch.seen` is set. No hashing on the revisit path — one bit
+    /// test and one array read.
+    scratch: Scratch<'a>,
     /// Framework overhead charged on cache hits.
     cached_overhead: f64,
     /// Size of the search space (tuning is done once it is exhausted).
@@ -177,13 +254,39 @@ pub struct Tuning<'a> {
 
 impl<'a> Tuning<'a> {
     pub fn new(runner: &'a mut dyn Runner, budget: Budget) -> Tuning<'a> {
+        Tuning::build(runner, budget, None)
+    }
+
+    /// Like [`Tuning::new`], but running on borrowed scratch buffers —
+    /// see [`TuningScratch`]. The scratch is reset here; its contents
+    /// after [`finish`](Tuning::finish) are unspecified.
+    pub fn with_scratch(
+        runner: &'a mut dyn Runner,
+        budget: Budget,
+        scratch: &'a mut TuningScratch,
+    ) -> Tuning<'a> {
+        Tuning::build(runner, budget, Some(scratch))
+    }
+
+    fn build(
+        runner: &'a mut dyn Runner,
+        budget: Budget,
+        scratch: Option<&'a mut TuningScratch>,
+    ) -> Tuning<'a> {
         let space_len = runner.space().len();
+        let mut scratch = match scratch {
+            Some(s) => Scratch::Borrowed(s),
+            None => Scratch::Owned(TuningScratch::new()),
+        };
+        scratch.get().reset(space_len);
         Tuning {
             runner,
             budget,
-            trace: Trace::default(),
-            seen: vec![0u64; (space_len + 63) / 64],
-            cached_values: vec![0.0; space_len],
+            elapsed: 0.0,
+            unique_evals: 0,
+            proposals: 0,
+            best: f64::INFINITY,
+            scratch,
             // Kernel Tuner semantics: a cache hit returns instantly and
             // consumes no tuning time. Runaway revisit loops are bounded
             // by Budget::max_proposals and the space-exhaustion check.
@@ -201,54 +304,94 @@ impl<'a> Tuning<'a> {
     /// cache hits there is nothing left to learn (and an eval-count budget
     /// larger than the space could otherwise never be reached).
     pub fn done(&self) -> bool {
-        self.trace.elapsed >= self.budget.max_seconds
-            || self.trace.unique_evals >= self.budget.max_unique_evals
-            || self.trace.points.len() >= self.budget.max_proposals
-            || self.trace.unique_evals >= self.space_len
+        self.elapsed >= self.budget.max_seconds
+            || self.unique_evals >= self.budget.max_unique_evals
+            || self.proposals >= self.budget.max_proposals
+            || self.unique_evals >= self.space_len
     }
 
     /// Remaining simulated seconds.
     pub fn remaining(&self) -> f64 {
-        (self.budget.max_seconds - self.trace.elapsed).max(0.0)
+        (self.budget.max_seconds - self.elapsed).max(0.0)
+    }
+
+    /// Simulated seconds consumed so far.
+    pub fn elapsed(&self) -> f64 {
+        self.elapsed
     }
 
     /// Evaluate a configuration; INFINITY for failed configs. The
     /// simulated clock advances accordingly.
     pub fn eval(&mut self, config_idx: usize) -> f64 {
+        let Tuning {
+            runner,
+            scratch,
+            elapsed,
+            unique_evals,
+            proposals,
+            best,
+            cached_overhead,
+            ..
+        } = self;
+        let s = scratch.get();
         let (word, bit) = (config_idx >> 6, 1u64 << (config_idx & 63));
-        if self.seen[word] & bit != 0 {
-            let v = self.cached_values[config_idx];
-            self.trace.elapsed += self.cached_overhead;
-            self.trace.points.push(TracePoint {
+        if s.seen[word] & bit != 0 {
+            // Revisit: the value already went through the running-best
+            // fold when first evaluated.
+            let v = s.cached_values[config_idx];
+            *elapsed += *cached_overhead;
+            *proposals += 1;
+            s.points.push(TracePoint {
                 config: config_idx,
                 value: v,
-                clock: self.trace.elapsed,
+                clock: *elapsed,
                 cached: true,
             });
             return v;
         }
-        let (value, cost) = self.runner.evaluate_lite(config_idx);
-        self.trace.elapsed += cost;
-        self.trace.unique_evals += 1;
-        self.seen[word] |= bit;
-        self.cached_values[config_idx] = value;
-        self.trace.points.push(TracePoint {
+        let (value, cost) = runner.evaluate_lite(config_idx);
+        *elapsed += cost;
+        *unique_evals += 1;
+        *proposals += 1;
+        s.seen[word] |= bit;
+        s.cached_values[config_idx] = value;
+        if value < *best {
+            *best = value;
+        }
+        s.points.push(TracePoint {
             config: config_idx,
             value,
-            clock: self.trace.elapsed,
+            clock: *elapsed,
             cached: false,
         });
         value
     }
 
-    /// Current best value (INFINITY if nothing valid yet).
+    /// Current best value (INFINITY if nothing valid yet). O(1): the
+    /// running best maintained by `eval`.
     pub fn best_value(&self) -> f64 {
-        self.trace.best().unwrap_or(f64::INFINITY)
+        self.best
     }
 
-    /// Finish and return the trace.
+    /// Finish and return the trace. Owned scratch gives up its point
+    /// vector; borrowed (pooled) scratch is copied out exact-size so the
+    /// pool keeps its capacity for the next run.
     pub fn finish(self) -> Trace {
-        self.trace
+        let Tuning {
+            scratch,
+            elapsed,
+            unique_evals,
+            ..
+        } = self;
+        let points = match scratch {
+            Scratch::Owned(s) => s.points,
+            Scratch::Borrowed(s) => s.points.clone(),
+        };
+        Trace {
+            points,
+            elapsed,
+            unique_evals,
+        }
     }
 }
 
@@ -290,9 +433,9 @@ mod tests {
         let mut r = live_runner();
         let mut t = Tuning::new(&mut r, Budget::evals(100));
         let v1 = t.eval(3);
-        let clock1 = t.trace.elapsed;
+        let clock1 = t.elapsed();
         let v2 = t.eval(3);
-        let clock2 = t.trace.elapsed;
+        let clock2 = t.elapsed();
         assert_eq!(v1, v2);
         assert!(clock2 - clock1 < 0.01, "cache hit must be ~free");
         let trace = t.finish();
@@ -329,5 +472,130 @@ mod tests {
         let mut t = Tuning::new(&mut r, Budget::seconds(0.5));
         t.eval(0);
         assert!(t.done());
+    }
+
+    /// A synthetic-space sim runner over a hand-built cache with a known
+    /// value landscape including invalid (INFINITY) configurations.
+    fn sim_runner_with_invalids() -> SimulationRunner {
+        let space = crate::kernels::kernel_by_name("synthetic")
+            .unwrap()
+            .space_arc();
+        let records: Vec<crate::dataset::cache::ConfigRecord> = (0..space.len())
+            .map(|i| {
+                let valid = i % 3 != 1;
+                let v = if valid {
+                    2.0 + ((i as f64) * 0.61).sin()
+                } else {
+                    f64::INFINITY
+                };
+                crate::dataset::cache::ConfigRecord {
+                    key: space.key(i),
+                    value: v,
+                    observations: if valid { vec![v] } else { vec![] },
+                    compile_time: 1.0 + (i % 5) as f64 * 0.25,
+                    valid,
+                }
+            })
+            .collect();
+        let cache = Arc::new(crate::dataset::cache::CacheData::new(
+            "synthetic",
+            "x",
+            "",
+            0,
+            1,
+            0.0,
+            vec!["a".into()],
+            records,
+        ));
+        SimulationRunner::new_unchecked(space, cache)
+    }
+
+    /// The O(1) running best must track `trace.best()` through
+    /// interleaved uncached, cached, and invalid evaluations.
+    #[test]
+    fn running_best_matches_trace_best() {
+        let mut r = sim_runner_with_invalids();
+        let n = r.space().len();
+        let mut t = Tuning::new(&mut r, Budget::evals(usize::MAX));
+        // Mix fresh indices, revisits, and invalid configs (idx % 3 == 1).
+        let invalid_slots = ((n - 2) / 3).max(1);
+        let seq: Vec<usize> = (0..60)
+            .map(|i| match i % 4 {
+                0 => (i * 7) % n,                   // fresh-ish walk
+                1 => (i * 7) % n,                   // immediate revisit (cached)
+                2 => 1 + 3 * (i % invalid_slots),   // guaranteed invalid config
+                _ => seq_prev(i, n),                // revisit an earlier index
+            })
+            .collect();
+        let mut expected = f64::INFINITY;
+        for &i in &seq {
+            let v = t.eval(i);
+            if v < expected {
+                expected = v;
+            }
+            assert_eq!(
+                t.best_value().to_bits(),
+                expected.to_bits(),
+                "running best drifted at config {i}"
+            );
+        }
+        let best = t.best_value();
+        let trace = t.finish();
+        assert_eq!(best, trace.best().unwrap_or(f64::INFINITY));
+    }
+
+    fn seq_prev(i: usize, n: usize) -> usize {
+        (i.saturating_sub(4) * 7) % n
+    }
+
+    /// One pooled scratch reused across runs must replay bit-identically
+    /// to fresh per-run allocation, run after run.
+    #[test]
+    fn pooled_scratch_is_bit_identical_to_fresh_alloc() {
+        let mut scratch = TuningScratch::new();
+        for seed in 0..4usize {
+            let seq: Vec<usize> = (0..40).map(|i| (i * (seed + 3)) % 20).collect();
+            let run = |t: &mut Tuning| {
+                for &i in &seq {
+                    t.eval(i);
+                }
+            };
+            let mut r1 = sim_runner_with_invalids();
+            let mut fresh = Tuning::new(&mut r1, Budget::evals(1000));
+            run(&mut fresh);
+            let fresh = fresh.finish();
+            let mut r2 = sim_runner_with_invalids();
+            let mut pooled = Tuning::with_scratch(&mut r2, Budget::evals(1000), &mut scratch);
+            run(&mut pooled);
+            let pooled = pooled.finish();
+            assert_eq!(fresh.points.len(), pooled.points.len());
+            assert_eq!(fresh.unique_evals, pooled.unique_evals);
+            assert_eq!(fresh.elapsed.to_bits(), pooled.elapsed.to_bits());
+            for (a, b) in fresh.points.iter().zip(&pooled.points) {
+                assert_eq!(a.config, b.config);
+                assert_eq!(a.value.to_bits(), b.value.to_bits());
+                assert_eq!(a.clock.to_bits(), b.clock.to_bits());
+                assert_eq!(a.cached, b.cached);
+            }
+        }
+    }
+
+    /// The thread-local pool hands back the same buffers across calls and
+    /// survives (falls back) under re-entrant use.
+    #[test]
+    fn with_pooled_reuses_and_handles_reentrancy() {
+        let cap0 = TuningScratch::with_pooled(|s| {
+            s.points.reserve(1024);
+            s.points.capacity()
+        });
+        let cap1 = TuningScratch::with_pooled(|s| s.points.capacity());
+        assert!(cap1 >= cap0, "pooled capacity must persist");
+        // Nested use on the same thread gets a fresh scratch, not a panic.
+        TuningScratch::with_pooled(|outer| {
+            outer.points.clear();
+            TuningScratch::with_pooled(|inner| {
+                assert_eq!(inner.points.capacity(), 0, "nested call is unpooled");
+            });
+        });
     }
 }

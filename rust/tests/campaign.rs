@@ -15,13 +15,18 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 use tunetuner::campaign::{Campaign, Executor, Observer};
 use tunetuner::dataset::bruteforce;
+use tunetuner::dataset::cache::CacheData;
 use tunetuner::gpu::specs::{A100, MI250X, W6600};
 use tunetuner::kernels;
 use tunetuner::methodology::{evaluate_algorithm, AggregateResult, SpaceEval};
 use tunetuner::optimizers::{self, HyperParams};
 use tunetuner::perfmodel::NoiseModel;
-use tunetuner::runner::{Budget, LiveRunner, SimulationRunner, Trace, Tuning};
+use tunetuner::runner::live::FRAMEWORK_OVERHEAD;
+use tunetuner::runner::{
+    Budget, EvalResult, LiveRunner, Runner, SimulationRunner, Trace, Tuning, TuningScratch,
+};
 use tunetuner::runtime::Engine;
+use tunetuner::searchspace::SearchSpace;
 use tunetuner::util::rng::{mix64, Rng};
 
 /// Three synthetic-kernel spaces on distinct simulated devices.
@@ -182,6 +187,126 @@ fn campaign_reproduces_prerefactor_scores_with_hyperparams() {
         .run()
         .unwrap();
     assert_bitwise_equal(&campaign.aggregate, &reference, "ga+hp");
+}
+
+/// The pre-SimTable, pre-scratch simulation path, verbatim: a pointer
+/// chase into the AoS `ConfigRecord` plus an observation-vector re-sum
+/// per `evaluate_lite` (the old `SimulationRunner` hot path). Driven
+/// through `Tuning::new` (fresh space-sized buffers per run), it is the
+/// "before" side of the PR-4 replay-equivalence pin.
+struct RecordWalkRunner {
+    space: Arc<SearchSpace>,
+    cache: Arc<CacheData>,
+}
+
+impl Runner for RecordWalkRunner {
+    fn space(&self) -> &SearchSpace {
+        &self.space
+    }
+
+    fn evaluate(&mut self, config_idx: usize) -> EvalResult {
+        let rec = &self.cache.records[config_idx];
+        EvalResult {
+            value: rec.value,
+            observations: rec.observations.clone(),
+            compile_time: rec.compile_time,
+            run_time: rec.observations.iter().sum(),
+            overhead: FRAMEWORK_OVERHEAD,
+            valid: rec.valid,
+        }
+    }
+
+    fn label(&self) -> String {
+        "record-walk reference".into()
+    }
+
+    fn evaluate_lite(&mut self, config_idx: usize) -> (f64, f64) {
+        let rec = &self.cache.records[config_idx];
+        let cost = rec.compile_time + rec.observations.iter().sum::<f64>() + FRAMEWORK_OVERHEAD;
+        (rec.value, cost)
+    }
+}
+
+/// SimTable + pooled scratch replay bit-identically to the pre-change
+/// record-walk + fresh-allocation path: same seeds, same values, same
+/// clocks (asserted bitwise — stronger than the required 1e-12).
+#[test]
+fn simtable_and_pooled_scratch_replay_bit_identical_traces() {
+    let mut scratch = TuningScratch::new();
+    for (s, se) in spaces().iter().enumerate() {
+        for r in 0..3usize {
+            for algo in ["random_search", "genetic_algorithm", "mls"] {
+                let opt = optimizers::create(algo, &HyperParams::new()).unwrap();
+                let budget = Budget::seconds(se.budget_seconds)
+                    .with_proposal_cap(4 * se.space.len() + 10_000);
+                let seed = mix64(17, mix64(s as u64, r as u64));
+
+                let mut reference = RecordWalkRunner {
+                    space: Arc::clone(&se.space),
+                    cache: Arc::clone(&se.cache),
+                };
+                let mut t_ref = Tuning::new(&mut reference, budget);
+                opt.run(&mut t_ref, &mut Rng::new(seed));
+                let t_ref = t_ref.finish();
+
+                let mut sim = SimulationRunner::new_unchecked(
+                    Arc::clone(&se.space),
+                    Arc::clone(&se.cache),
+                );
+                let mut t_new = Tuning::with_scratch(&mut sim, budget, &mut scratch);
+                opt.run(&mut t_new, &mut Rng::new(seed));
+                let t_new = t_new.finish();
+
+                let tag = format!("space {s} repeat {r} {algo}");
+                assert_eq!(t_ref.points.len(), t_new.points.len(), "{tag}");
+                assert_eq!(t_ref.unique_evals, t_new.unique_evals, "{tag}");
+                assert_eq!(t_ref.elapsed.to_bits(), t_new.elapsed.to_bits(), "{tag}");
+                for (p, (a, b)) in t_ref.points.iter().zip(&t_new.points).enumerate() {
+                    assert_eq!(a.config, b.config, "{tag} point {p}");
+                    assert_eq!(a.value.to_bits(), b.value.to_bits(), "{tag} point {p}");
+                    assert!((a.clock - b.clock).abs() <= 1e-12, "{tag} point {p}");
+                    assert_eq!(a.clock.to_bits(), b.clock.to_bits(), "{tag} point {p}");
+                    assert_eq!(a.cached, b.cached, "{tag} point {p}");
+                }
+            }
+        }
+    }
+}
+
+/// The same pin at full `Campaign::run` granularity: the record-walking
+/// pre-change evaluator (fresh buffers, per-lookup re-sums) and the
+/// current campaign path (SimTable + per-worker pooled scratch) produce
+/// bit-identical aggregate scores.
+#[test]
+fn campaign_matches_prechange_record_walk_evaluator() {
+    let (algo, repeats, seed) = ("pso", 6, 29u64);
+    let opt = optimizers::create(algo, &HyperParams::new()).unwrap();
+    let mut per_space_scores = Vec::new();
+    for (s, se) in spaces().iter().enumerate() {
+        let mut traces = Vec::with_capacity(repeats);
+        for r in 0..repeats {
+            let mut reference = RecordWalkRunner {
+                space: Arc::clone(&se.space),
+                cache: Arc::clone(&se.cache),
+            };
+            let budget = Budget::seconds(se.budget_seconds)
+                .with_proposal_cap(4 * se.space.len() + 10_000);
+            let mut tuning = Tuning::new(&mut reference, budget);
+            let mut rng = Rng::new(mix64(seed, mix64(s as u64, r as u64)));
+            opt.run(&mut tuning, &mut rng);
+            traces.push(tuning.finish());
+        }
+        per_space_scores.push(se.score_traces(&traces));
+    }
+    let reference = AggregateResult::from_per_space_scores(per_space_scores);
+
+    let campaign = Campaign::new(algo)
+        .space_evals(spaces().clone())
+        .repeats(repeats)
+        .seed(seed)
+        .run()
+        .unwrap();
+    assert_bitwise_equal(&campaign.aggregate, &reference, "prechange record walk");
 }
 
 /// The same campaign is bit-stable across executor pool shapes (the

@@ -199,16 +199,16 @@ fn prop_optimizer_budget_and_range() {
                 }
             })
             .collect();
-        let cache = Arc::new(CacheData {
-            kernel: "prop".into(),
-            device: "x".into(),
-            problem: String::new(),
-            space_seed: 0,
-            observations_per_config: 1,
-            bruteforce_seconds: 0.0,
-            param_names: space.params.iter().map(|p| p.name.clone()).collect(),
+        let cache = Arc::new(CacheData::new(
+            "prop",
+            "x",
+            "",
+            0,
+            1,
+            0.0,
+            space.params.iter().map(|p| p.name.clone()).collect(),
             records,
-        });
+        ));
         let budget = 1 + rng.below(40);
         for name in optimizers::optimizer_names() {
             let mut sim = SimulationRunner::new_unchecked(Arc::clone(&space), Arc::clone(&cache));
@@ -257,6 +257,109 @@ fn prop_stats_invariants() {
         let sum: f64 = ranks.iter().sum();
         let expect = (n * (n + 1)) as f64 / 2.0;
         assert!((sum - expect).abs() < 1e-6, "{sum} != {expect}");
+    }
+}
+
+/// Random `CacheData` through the two on-disk formats — JSON roundtrip
+/// vs T4B roundtrip — must be field-for-field identical (infinities and
+/// empty observation vectors included) and must replay *identical* sim
+/// traces, cached revisits and invalid configs included.
+#[test]
+fn prop_t4b_and_json_load_paths_replay_identical_traces() {
+    use std::sync::Arc;
+    use tunetuner::dataset::cache::{CacheData, ConfigRecord};
+    use tunetuner::dataset::t4b;
+    use tunetuner::runner::{Budget, SimulationRunner, Tuning};
+
+    let mut rng = Rng::new(0x74B);
+    for case in 0..15 {
+        let space = Arc::new(random_space(&mut rng));
+        // Random landscape: mixed valid/invalid, varying observation
+        // counts (invalid configs carry none — matching what bruteforce
+        // writes, and what the JSON format can represent).
+        let records: Vec<ConfigRecord> = (0..space.len())
+            .map(|i| {
+                let valid = !rng.chance(0.2);
+                let n_obs = 1 + rng.below(4);
+                let observations: Vec<f64> = if valid {
+                    (0..n_obs).map(|_| rng.range_f64(1e-4, 2.0)).collect()
+                } else {
+                    Vec::new()
+                };
+                let value = if valid {
+                    observations.iter().sum::<f64>() / observations.len() as f64
+                } else {
+                    f64::INFINITY
+                };
+                ConfigRecord {
+                    key: space.key(i),
+                    value,
+                    observations,
+                    compile_time: rng.range_f64(0.1, 5.0),
+                    valid,
+                }
+            })
+            .collect();
+        let original = CacheData::new(
+            "prop",
+            "x",
+            "t4b property",
+            case as u64,
+            3,
+            rng.range_f64(0.0, 1e6),
+            space.params.iter().map(|p| p.name.clone()).collect(),
+            records,
+        );
+
+        // The two load paths.
+        let via_json = CacheData::from_json(&original.to_json()).unwrap();
+        let (via_t4b, fp, _) =
+            t4b::decode(&t4b::encode(&original, "prop-fp", t4b::SrcStamp::NONE)).unwrap();
+        assert_eq!(fp, "prop-fp", "case {case}");
+
+        assert_eq!(via_json.records.len(), via_t4b.records.len(), "case {case}");
+        for (i, (a, b)) in via_json.records.iter().zip(&via_t4b.records).enumerate() {
+            assert_eq!(a.key, b.key, "case {case} record {i}");
+            assert_eq!(a.value.to_bits(), b.value.to_bits(), "case {case} record {i}");
+            assert_eq!(a.observations, b.observations, "case {case} record {i}");
+            assert_eq!(
+                a.compile_time.to_bits(),
+                b.compile_time.to_bits(),
+                "case {case} record {i}"
+            );
+            assert_eq!(a.valid, b.valid, "case {case} record {i}");
+        }
+        assert_eq!(
+            via_json.bruteforce_seconds.to_bits(),
+            via_t4b.bruteforce_seconds.to_bits()
+        );
+        assert_eq!(via_json.param_names, via_t4b.param_names);
+        assert_eq!(via_json.space_seed, via_t4b.space_seed);
+
+        // Identical sim traces from both load paths: a revisit-heavy
+        // pseudorandom eval walk, bit-compared point by point.
+        let n = space.len();
+        let seq: Vec<usize> = (0..80).map(|i| (i * 13 + case * 7) % n).collect();
+        let replay = |cache: CacheData| {
+            let mut sim =
+                SimulationRunner::new_unchecked(Arc::clone(&space), Arc::new(cache));
+            let mut tuning = Tuning::new(&mut sim, Budget::evals(usize::MAX));
+            for &i in &seq {
+                tuning.eval(i);
+            }
+            tuning.finish()
+        };
+        let tj = replay(via_json);
+        let tb = replay(via_t4b);
+        assert_eq!(tj.points.len(), tb.points.len(), "case {case}");
+        assert_eq!(tj.unique_evals, tb.unique_evals, "case {case}");
+        assert_eq!(tj.elapsed.to_bits(), tb.elapsed.to_bits(), "case {case}");
+        for (p, (a, b)) in tj.points.iter().zip(&tb.points).enumerate() {
+            assert_eq!(a.config, b.config, "case {case} point {p}");
+            assert_eq!(a.value.to_bits(), b.value.to_bits(), "case {case} point {p}");
+            assert_eq!(a.clock.to_bits(), b.clock.to_bits(), "case {case} point {p}");
+            assert_eq!(a.cached, b.cached, "case {case} point {p}");
+        }
     }
 }
 
