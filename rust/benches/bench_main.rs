@@ -13,6 +13,8 @@
 //!   optimizer  — optimizer stepping rate in simulation mode
 //!   bruteforce — full-space brute-force (Table II regeneration cost)
 //!   executor   — persistent pool vs spawn-per-call + campaign rate
+//!   sweep      — full-registry hypertune sweep smoke (every grid-bearing
+//!                optimizer, tiny budget, synthetic kernel)
 //!   hypertune  — one exhaustive campaign + meta-level scoring (Tables III/IV,
 //!                Figs 2-9 building block)
 //!
@@ -505,6 +507,39 @@ fn main() {
             });
         }
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    // ---- sweep: full-registry hypertune smoke (PR 5) -------------------------------
+    // One sweep_registry pass over every grid-bearing registry optimizer
+    // (paper four + extras, ~300 campaigns) on a tiny synthetic training
+    // space: the sweep wall-clock lands in the perf trajectory
+    // (BENCH_5.json) alongside the PR 4 replay artifacts. Hub-free;
+    // setup is filter-gated like the other synthetic groups.
+    let wants_sweep = b
+        .filter
+        .as_ref()
+        .map(|f| {
+            f.split(',')
+                .any(|alt| !alt.is_empty() && "sweep/registry_smoke".contains(alt))
+        })
+        .unwrap_or(true);
+    if wants_sweep {
+        let kernel = kernels::kernel_by_name("synthetic").unwrap();
+        let mut live = LiveRunner::new(
+            kernels::kernel_by_name("synthetic").unwrap(),
+            &A100,
+            Arc::clone(&engine),
+            NoiseModel::default(),
+            42,
+        );
+        let syn_cache = Arc::new(bruteforce::bruteforce(&mut live).unwrap());
+        let train = vec![SpaceEval::new(kernel.space_arc(), syn_cache, 0.95, 15)];
+        let observer: Arc<dyn tunetuner::campaign::Observer> =
+            Arc::new(tunetuner::campaign::NullObserver);
+        b.run("sweep/registry_smoke", || {
+            let r = hypertuning::sweep_registry(&train, 1, 3, Arc::clone(&observer)).unwrap();
+            r.optimizers.len()
+        });
     }
 
     // ---- shared hub-backed setup for sim/optimizer/hypertune benches --------------

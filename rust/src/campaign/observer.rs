@@ -51,6 +51,34 @@ pub trait Observer: Send + Sync {
 
     /// The campaign finished with its scalar score.
     fn campaign_finished(&self, _score: f64, _wallclock_seconds: f64) {}
+
+    // ---- full-registry sweep events (`hypertuning::sweep`) ------------------
+    // Emitted from the sweep-driving thread, strictly ordered:
+    // `sweep_started`, then per optimizer `sweep_optimizer_started` ..
+    // campaign/config events .. `sweep_optimizer_finished`, and finally
+    // `sweep_finished`.
+
+    /// A full-registry sweep began: number of grid-bearing optimizers it
+    /// will hypertune and the repeats per (configuration, space).
+    fn sweep_started(&self, _optimizers: usize, _repeats: usize) {}
+
+    /// One optimizer's sweep leg began: its index in the sweep, name,
+    /// and limited-grid size.
+    fn sweep_optimizer_started(&self, _idx: usize, _algo: &str, _configs: usize) {}
+
+    /// One optimizer's sweep leg finished with its schema-default and
+    /// hypertuned-best Eq. 3 scores.
+    fn sweep_optimizer_finished(
+        &self,
+        _idx: usize,
+        _algo: &str,
+        _default_score: f64,
+        _best_score: f64,
+    ) {
+    }
+
+    /// The sweep finished with its mean improvement percentage.
+    fn sweep_finished(&self, _mean_improvement_pct: f64, _wallclock_seconds: f64) {}
 }
 
 /// Ignores every event (the default for batch/library use).
@@ -99,5 +127,24 @@ impl Observer for LogObserver {
 
     fn campaign_finished(&self, score: f64, wallclock_seconds: f64) {
         crate::log_info!("campaign done: score {score:.3} in {wallclock_seconds:.1}s");
+    }
+
+    fn sweep_started(&self, optimizers: usize, repeats: usize) {
+        crate::log_info!("registry sweep: {optimizers} optimizers x {repeats} repeats");
+    }
+
+    fn sweep_optimizer_started(&self, idx: usize, algo: &str, configs: usize) {
+        crate::log_info!("sweep [{idx}] {algo}: {configs} hyperparameter configs");
+    }
+
+    fn sweep_optimizer_finished(&self, idx: usize, algo: &str, default: f64, best: f64) {
+        crate::log_info!("sweep [{idx}] {algo}: default {default:.3} -> best {best:.3}");
+    }
+
+    fn sweep_finished(&self, mean_improvement_pct: f64, wallclock_seconds: f64) {
+        crate::log_info!(
+            "registry sweep done: mean improvement {mean_improvement_pct:+.1}% \
+             in {wallclock_seconds:.1}s"
+        );
     }
 }

@@ -5,7 +5,7 @@ use crate::campaign::{NullObserver, Observer};
 use crate::dataset::hub::{Hub, HUB_KERNELS, HUB_SEED};
 use crate::error::Result;
 use crate::gpu::specs::{TEST_DEVICES, TRAIN_DEVICES};
-use crate::hypertuning::{self, exhaustive, meta};
+use crate::hypertuning::{self, exhaustive, meta, sweep};
 use crate::kernels;
 use crate::methodology::{self, SpaceEval};
 use crate::optimizers::{self, HyperParams};
@@ -269,6 +269,29 @@ impl Ctx {
         let arc = Arc::new(results);
         self.hyper.lock().unwrap().insert(key, Arc::clone(&arc));
         Ok(arc)
+    }
+
+    /// The full-registry hypertuning sweep (`tunetuner sweep`): every
+    /// grid-bearing optimizer hypertuned over the training spaces, the
+    /// per-optimizer exhaustive results loaded/persisted through
+    /// [`Ctx::limited_results`] (so a sweep resumes from whatever
+    /// per-algorithm campaigns already ran at this scale). The assembled
+    /// envelope is persisted to the results dir as
+    /// `sweep_registry_<scale>.json.gz`.
+    pub fn registry_sweep(&self) -> Result<sweep::SweepResult> {
+        let train = self.train_spaces()?;
+        let result = sweep::sweep_registry_with(
+            &train,
+            self.scale.tuning_repeats,
+            self.seed,
+            Arc::clone(&self.observer),
+            |algo| self.limited_results(algo),
+        )?;
+        let path = self
+            .results_dir
+            .join(format!("sweep_registry_{}.json.gz", self.scale_name));
+        result.save(&path)?;
+        Ok(result)
     }
 }
 

@@ -21,7 +21,7 @@ pub fn run(ctx: &Ctx) -> Result<()> {
     for algo in limited_algos() {
         let results = ctx.limited_results(algo)?;
         let hp_space = Arc::new(limited_space(algo)?);
-        let cache = Arc::new(meta::meta_cache_from_results(&results, &hp_space));
+        let cache = Arc::new(meta::meta_cache_from_results(&results, &hp_space)?);
         meta_spaces.push(SpaceEval::new(
             hp_space,
             cache,

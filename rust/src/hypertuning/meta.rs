@@ -16,6 +16,7 @@
 use super::exhaustive::HyperTuningResults;
 use crate::campaign::{Campaign, Observer};
 use crate::dataset::cache::{CacheData, ConfigRecord};
+use crate::error::{Result, TuneError};
 use crate::methodology::SpaceEval;
 use crate::optimizers::HyperParams;
 use crate::runner::{EvalResult, Runner};
@@ -121,33 +122,83 @@ impl Runner for MetaRunner {
 /// the hyperparameter space, so the meta-level tuning problem can be
 /// replayed through the standard simulation mode (Fig. 6).
 ///
-/// Every hyperparameter evaluation is charged the campaign's *average real
-/// evaluation cost*, so the meta-time axis reads in real seconds of
-/// hyperparameter tuning.
+/// Every *successful* hyperparameter evaluation is charged the campaign's
+/// average real evaluation cost, so the meta-time axis reads in real
+/// seconds of hyperparameter tuning. The average deliberately runs over
+/// successful evaluations only: a failed meta-evaluation errors out
+/// before executing its tuning runs, so folding failures into the
+/// denominator would skew the replayed per-evaluation cost downward.
+///
+/// Failed evaluations (non-finite objective) become ordinary *invalid*
+/// records: infinite value, **no observations** (SimTable precomputes
+/// `total_cost = compile + Σobs + overhead`, so a non-finite observation
+/// would make that record's cost — and the memoized `mean_eval_cost` of
+/// the whole replay cache — non-finite, corrupting the Fig. 6 meta-time
+/// axis). An invalid record costs `compile + overhead` per the
+/// invalid-cost semantics documented on [`CacheData::mean_eval_cost`],
+/// with compile = 0 here: the failure consumed ~none of the measured
+/// wallclock (all of which is attributed to the successes above), so a
+/// replayed failure is charged only the framework overhead and the total
+/// replayed time stays conserved against the real wallclock.
+///
+/// A results/space length mismatch is a typed
+/// [`TuneError::InvalidInput`](crate::error::TuneError::InvalidInput)
+/// (stale results must never be silently misdecoded against a changed
+/// grid).
 pub fn meta_cache_from_results(
     results: &HyperTuningResults,
     hp_space: &SearchSpace,
-) -> CacheData {
-    assert_eq!(results.results.len(), hp_space.len(), "results/space mismatch");
-    let cost_per_eval =
-        (results.wallclock_seconds / results.results.len() as f64).max(1e-3);
+) -> Result<CacheData> {
+    if results.results.len() != hp_space.len() {
+        return Err(TuneError::InvalidInput(format!(
+            "hypertuning results for {} carry {} configs but hyperparameter \
+             space {} has {}",
+            results.algo,
+            results.results.len(),
+            hp_space.name,
+            hp_space.len()
+        )));
+    }
+    let successes = results
+        .results
+        .iter()
+        .filter(|r| (1.0 - r.score).is_finite())
+        .count();
+    let cost_per_eval = (results.wallclock_seconds / successes.max(1) as f64).max(1e-3);
     let records: Vec<ConfigRecord> = results
         .results
         .iter()
         .map(|r| {
             let value = 1.0 - r.score;
-            ConfigRecord {
-                key: hp_space.key(r.config_idx),
-                value,
-                observations: vec![value],
-                // Model the full evaluation cost as "compile" so the
-                // recorded run_time (= obs sum) stays a pure objective.
-                compile_time: cost_per_eval,
-                valid: value.is_finite(),
+            if value.is_finite() {
+                ConfigRecord {
+                    key: hp_space.key(r.config_idx),
+                    value,
+                    observations: vec![value],
+                    // Model the full evaluation cost as "compile" so the
+                    // recorded run_time (= obs sum) stays a pure objective.
+                    compile_time: cost_per_eval,
+                    valid: true,
+                }
+            } else {
+                // Failed meta-evaluation: the standard invalid-record
+                // shape (INFINITY value normalizes a NaN objective too,
+                // so replay comparisons never see a NaN). Zero compile:
+                // the wallclock is already fully attributed to the
+                // successful evaluations, so charging the per-success
+                // average here would replay more meta-time than was
+                // actually spent.
+                ConfigRecord {
+                    key: hp_space.key(r.config_idx),
+                    value: f64::INFINITY,
+                    observations: vec![],
+                    compile_time: 0.0,
+                    valid: false,
+                }
             }
         })
         .collect();
-    CacheData::new(
+    Ok(CacheData::new(
         format!("hp-{}", results.algo),
         "meta",
         format!(
@@ -160,7 +211,7 @@ pub fn meta_cache_from_results(
         results.wallclock_seconds,
         hp_space.params.iter().map(|p| p.name.clone()).collect(),
         records,
-    )
+    ))
 }
 
 #[cfg(test)]
@@ -250,7 +301,7 @@ mod tests {
             wallclock_seconds: 80.0,
             simulated_seconds: 1e6,
         };
-        let cache = meta_cache_from_results(&results, &hp_space);
+        let cache = meta_cache_from_results(&results, &hp_space).unwrap();
         assert_eq!(cache.records.len(), 8);
         // Best HP config (highest score) has the lowest objective.
         assert_eq!(cache.optimum_index(), 7);
@@ -261,5 +312,109 @@ mod tests {
         let r = sim.evaluate(7);
         assert!((r.value - (1.0 - 0.7)).abs() < 1e-12);
         assert!((r.compile_time - 10.0).abs() < 1e-12); // 80s / 8 configs
+    }
+
+    /// Regression: a failed meta-evaluation (non-finite objective) used
+    /// to store its infinite value as an observation on a record already
+    /// marked invalid. SimTable precomputes `total_cost = compile + Σobs
+    /// + overhead`, so that single record made the memoized
+    /// `mean_eval_cost` of the whole replay cache infinite, breaking the
+    /// Fig. 6 meta-time axis. Invalid records must carry no observations
+    /// and replay as invalid with a finite cost.
+    #[test]
+    fn failed_meta_eval_does_not_poison_replay_costs() {
+        let hp_space = limited_space("dual_annealing").unwrap();
+        let results = HyperTuningResults {
+            algo: "dual_annealing".into(),
+            space_kind: "limited".into(),
+            space_key: String::new(),
+            repeats: 25,
+            seed: 1,
+            results: (0..hp_space.len())
+                .map(|i| crate::hypertuning::exhaustive::HyperResult {
+                    config_idx: i,
+                    hp_key: format!("m{i}"),
+                    // Config 3 failed with an infinite objective
+                    // (score = -inf => value = +inf); config 5 failed
+                    // with a NaN score.
+                    score: match i {
+                        3 => f64::NEG_INFINITY,
+                        5 => f64::NAN,
+                        _ => 0.1 * i as f64,
+                    },
+                })
+                .collect(),
+            wallclock_seconds: 60.0,
+            simulated_seconds: 1e6,
+        };
+        let cache = meta_cache_from_results(&results, &hp_space).unwrap();
+        // Invalid records: infinite value, no observations, still valid=false.
+        for idx in [3usize, 5] {
+            assert!(!cache.records[idx].valid);
+            assert!(cache.records[idx].value.is_infinite());
+            assert!(
+                cache.records[idx].observations.is_empty(),
+                "invalid record {idx} must carry no observations"
+            );
+        }
+        // cost_per_eval averages over the 6 *successful* evaluations
+        // only: 60s / 6 = 10s (the old code spread it over all 8), and
+        // failed evaluations are charged no compile at all, so the total
+        // replayed compile time stays conserved against the wallclock.
+        assert!((cache.records[0].compile_time - 10.0).abs() < 1e-12);
+        assert_eq!(cache.records[3].compile_time, 0.0);
+        assert_eq!(cache.records[5].compile_time, 0.0);
+        let total_compile: f64 = cache.records.iter().map(|r| r.compile_time).sum();
+        assert!((total_compile - 60.0).abs() < 1e-9, "{total_compile}");
+        // The cost axis stays finite at every layer.
+        assert!(cache.mean_eval_cost(0.1).is_finite());
+        assert!(cache.sim_table().mean_eval_cost.is_finite());
+        assert!(cache.sim_table().cost(3).is_finite());
+        assert!(!cache.sim_table().is_valid(3));
+        // Replay through the ordinary simulation machinery skips the
+        // failed config as invalid: infinite value, finite cost.
+        let hp_space = Arc::new(hp_space);
+        let mut sim = SimulationRunner::new_unchecked(Arc::clone(&hp_space), Arc::new(cache));
+        let r = sim.evaluate(3);
+        assert!(!r.valid);
+        assert!(r.value.is_infinite());
+        assert!(r.total_cost().is_finite());
+        let (v, c) = sim.evaluate_lite(5);
+        assert!(v.is_infinite());
+        assert!(c.is_finite());
+        // A tuning run over the whole cache never selects a failed
+        // config as its best.
+        let mut tuning = Tuning::new(&mut sim, Budget::evals(hp_space.len()));
+        for i in 0..hp_space.len() {
+            tuning.eval(i);
+        }
+        let trace = tuning.finish();
+        assert!(trace.best().unwrap().is_finite());
+        assert!((trace.best().unwrap() - (1.0 - 0.7)).abs() < 1e-12);
+    }
+
+    /// Regression: a results/space length mismatch used to panic via
+    /// `assert_eq!`; it is now the library-wide typed error.
+    #[test]
+    fn results_space_mismatch_is_typed_error() {
+        let hp_space = limited_space("dual_annealing").unwrap();
+        let results = HyperTuningResults {
+            algo: "dual_annealing".into(),
+            space_kind: "limited".into(),
+            space_key: String::new(),
+            repeats: 1,
+            seed: 1,
+            results: vec![crate::hypertuning::exhaustive::HyperResult {
+                config_idx: 0,
+                hp_key: "m0".into(),
+                score: 0.5,
+            }],
+            wallclock_seconds: 1.0,
+            simulated_seconds: 1.0,
+        };
+        let err = meta_cache_from_results(&results, &hp_space).unwrap_err();
+        assert!(matches!(err, TuneError::InvalidInput(_)), "{err:#}");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("1 configs") && msg.contains("has 8"), "{msg}");
     }
 }

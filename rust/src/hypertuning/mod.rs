@@ -14,12 +14,17 @@
 //!   hyperparameter search, either live (running real simulations per
 //!   hyperparameter configuration, as in the paper's 7-day extended
 //!   tuning) or replayed from exhaustive results (Fig 6).
+//! * [`sweep`] — the full-registry hypertuning sweep: every grid-bearing
+//!   optimizer (paper four + extras) hypertuned and compared
+//!   default-vs-best in one versioned `tunetuner-sweep` envelope
+//!   (`tunetuner sweep` drives it from the CLI).
 //! * [`sensitivity`] — the Kruskal–Wallis + mutual-information screen used
 //!   to drop insensitive hyperparameters (the paper's PSO `W`).
 
 pub mod space;
 pub mod exhaustive;
 pub mod meta;
+pub mod sweep;
 pub mod sensitivity;
 
 pub use exhaustive::{
@@ -27,3 +32,7 @@ pub use exhaustive::{
 };
 pub use meta::{meta_cache_from_results, MetaRunner};
 pub use space::{extended_algos, extended_space, limited_algos, limited_space};
+pub use sweep::{
+    render_report as render_sweep_report, sweep_registry, sweep_registry_with, OptimizerSweep,
+    SweepResult,
+};

@@ -1,0 +1,810 @@
+//! Full-registry hypertuning sweep: hypertune *every* grid-bearing
+//! optimizer, not just the paper's four.
+//!
+//! The paper's headline (94.8% mean improvement from even limited
+//! hyperparameter tuning) is measured on its four Table III algorithms;
+//! this module turns that measurement into a first-class subsystem over
+//! the whole optimizer registry — the direction "Automated Algorithm
+//! Design for Auto-Tuning Optimizers" pushes, where the optimizer
+//! portfolio itself becomes the search space. For each optimizer whose
+//! schema declares a `limited` grid (the paper four plus the registry
+//! extras such as `greedy_ils` and `basin_hopping`) the sweep runs:
+//!
+//! 1. one reference [`Campaign`] with the schema-default hyperparameters
+//!    on the training spaces, and
+//! 2. the exhaustive limited-grid evaluation
+//!    ([`super::exhaustive_tuning_observed`]) — one campaign per
+//!    hyperparameter configuration, all sharing the prepared
+//!    [`SpaceEval`]s (and with them the Arc-shared SimTable/T4B caches)
+//!    on the persistent executor pool.
+//!
+//! Results aggregate into a versioned [`SweepResult`] envelope (schema
+//! [`SWEEP_SCHEMA`]) carrying per-optimizer default/best scores, the best
+//! hyperparameter key, the improvement percentage, and the space
+//! fingerprints as provenance. [`render_report`] draws the paper-style
+//! comparison table and per-grid score-distribution figure through the
+//! existing [`Report`] sink, so hypertuned extras can be compared
+//! head-to-head against the paper's set. `tunetuner sweep [--json]`
+//! drives it from the CLI; progress streams through the
+//! [`Observer::sweep_started`]-family events.
+
+use super::exhaustive::{self, HyperTuningResults};
+use super::space;
+use crate::campaign::{Campaign, Observer};
+use crate::error::{Context, Result, TuneError};
+use crate::methodology::SpaceEval;
+use crate::optimizers;
+use crate::report::Report;
+use crate::util::json::{self, Json};
+use crate::util::table::{fmt_duration, Table};
+use std::path::Path;
+use std::sync::Arc;
+
+/// Schema tag of the serialized sweep envelope.
+pub const SWEEP_SCHEMA: &str = "tunetuner-sweep";
+
+/// Version of the serialized sweep envelope; bump on breaking changes.
+pub const SWEEP_SCHEMA_VERSION: u64 = 1;
+
+/// The sweep outcome for one grid-bearing optimizer.
+#[derive(Clone, Debug)]
+pub struct OptimizerSweep {
+    pub algo: String,
+    /// Whether this optimizer is part of the paper's Table III set
+    /// (`Descriptor::paper`) or a registry extra.
+    pub paper: bool,
+    /// Size of the limited hyperparameter grid.
+    pub configs: usize,
+    /// [`crate::searchspace::SearchSpace::fingerprint`] of the
+    /// hyperparameter space the exhaustive results were computed on.
+    pub space_key: String,
+    /// Stable key of the schema-default hyperparameters.
+    pub default_hp_key: String,
+    /// Eq. 3 score of the schema-default configuration.
+    pub default_score: f64,
+    /// Stable key of the best hyperparameter configuration.
+    pub best_hp_key: String,
+    /// Index of the best configuration in the hyperparameter space.
+    pub best_config_idx: usize,
+    /// Eq. 3 score of the best configuration.
+    pub best_score: f64,
+    /// [`improvement_pct`] of best over default.
+    pub improvement_pct: f64,
+    /// Score of every hyperparameter configuration, in config-index
+    /// order (the per-grid distribution behind the sweep figure).
+    pub scores: Vec<f64>,
+    /// Real seconds this optimizer's sweep leg took.
+    pub wallclock_seconds: f64,
+}
+
+/// One prepared training space's identity, recorded as provenance.
+#[derive(Clone, Debug)]
+pub struct SweptSpace {
+    /// Display label (`kernel@device`).
+    pub label: String,
+    /// Structural fingerprint of the kernel search space.
+    pub space_fingerprint: String,
+}
+
+/// The complete, serializable outcome of a full-registry sweep.
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    /// Grid kind the sweep enumerated (currently always `"limited"` —
+    /// only Table III-style grids are exhaustively tractable).
+    pub space_kind: String,
+    /// Tuning runs per (configuration, space).
+    pub repeats: usize,
+    pub seed: u64,
+    /// The training spaces every campaign ran on, in space order.
+    pub train: Vec<SweptSpace>,
+    /// One entry per grid-bearing registry optimizer, in registration
+    /// order ([`optimizers::hypertunable`]).
+    pub optimizers: Vec<OptimizerSweep>,
+    /// Real seconds the whole sweep took.
+    pub wallclock_seconds: f64,
+}
+
+/// Relative improvement of the hypertuned-best over the default
+/// configuration, in percent — the fig5 convention: the score delta
+/// relative to `|default|` when the default score is meaningfully
+/// nonzero, and percentage points otherwise (a near-zero default would
+/// make the ratio explode).
+pub fn improvement_pct(default_score: f64, best_score: f64) -> f64 {
+    let delta = best_score - default_score;
+    if default_score.abs() > 1e-9 {
+        delta / default_score.abs() * 100.0
+    } else {
+        delta * 100.0
+    }
+}
+
+impl SweepResult {
+    /// Mean [`improvement_pct`] across the swept optimizers — the
+    /// sweep's analog of the paper's 94.8% headline.
+    pub fn mean_improvement_pct(&self) -> f64 {
+        if self.optimizers.is_empty() {
+            return 0.0;
+        }
+        let pcts: Vec<f64> = self.optimizers.iter().map(|o| o.improvement_pct).collect();
+        crate::util::stats::mean(&pcts)
+    }
+
+    // ---- persistence ---------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let train: Vec<Json> = self
+            .train
+            .iter()
+            .map(|t| {
+                let mut o = Json::obj();
+                o.set("label", t.label.as_str().into())
+                    .set("space_fingerprint", t.space_fingerprint.as_str().into());
+                o
+            })
+            .collect();
+        let opts: Vec<Json> = self
+            .optimizers
+            .iter()
+            .map(|o| {
+                let mut j = Json::obj();
+                j.set("algo", o.algo.as_str().into())
+                    .set("paper", o.paper.into())
+                    .set("configs", o.configs.into())
+                    .set("space_key", o.space_key.as_str().into())
+                    .set("default_hp_key", o.default_hp_key.as_str().into())
+                    .set("default_score", o.default_score.into())
+                    .set("best_hp_key", o.best_hp_key.as_str().into())
+                    .set("best_config_idx", o.best_config_idx.into())
+                    .set("best_score", o.best_score.into())
+                    .set("improvement_pct", o.improvement_pct.into())
+                    .set(
+                        "scores",
+                        Json::Arr(o.scores.iter().map(|&s| s.into()).collect()),
+                    )
+                    .set("wallclock_seconds", o.wallclock_seconds.into());
+                j
+            })
+            .collect();
+        let mut j = Json::obj();
+        j.set("schema", SWEEP_SCHEMA.into())
+            .set("schema_version", (SWEEP_SCHEMA_VERSION as f64).into())
+            .set("space_kind", self.space_kind.as_str().into())
+            .set("repeats", self.repeats.into())
+            // String, not number: JSON numbers are f64 and would corrupt
+            // seeds >= 2^53 on the round-trip (same as CampaignResult).
+            .set("seed", self.seed.to_string().as_str().into())
+            .set("train", Json::Arr(train))
+            .set("optimizers", Json::Arr(opts))
+            .set("wallclock_seconds", self.wallclock_seconds.into());
+        j
+    }
+
+    /// Parse an envelope previously produced by [`to_json`](Self::to_json).
+    pub fn from_json(j: &Json) -> Result<SweepResult> {
+        if j.get("schema").and_then(|v| v.as_str()) != Some(SWEEP_SCHEMA) {
+            crate::bail!("not a {SWEEP_SCHEMA} envelope");
+        }
+        let version = j
+            .get("schema_version")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0) as u64;
+        if version > SWEEP_SCHEMA_VERSION {
+            crate::bail!(
+                "sweep envelope version {version} is newer than this \
+                 binary's {SWEEP_SCHEMA_VERSION}"
+            );
+        }
+        let train = j
+            .get("train")
+            .and_then(|v| v.as_arr())
+            .unwrap_or(&[])
+            .iter()
+            .map(|t| SweptSpace {
+                label: t
+                    .get("label")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or_default()
+                    .to_string(),
+                space_fingerprint: t
+                    .get("space_fingerprint")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or_default()
+                    .to_string(),
+            })
+            .collect();
+        let mut optimizers_out = Vec::new();
+        for o in j
+            .get("optimizers")
+            .and_then(|v| v.as_arr())
+            .context("missing optimizers")?
+        {
+            let str_field = |k: &str| -> String {
+                o.get(k).and_then(|v| v.as_str()).unwrap_or_default().to_string()
+            };
+            let num_field =
+                |k: &str| -> f64 { o.get(k).and_then(|v| v.as_f64()).unwrap_or(f64::NAN) };
+            optimizers_out.push(OptimizerSweep {
+                algo: o
+                    .get("algo")
+                    .and_then(|v| v.as_str())
+                    .context("optimizer entry missing algo")?
+                    .to_string(),
+                paper: o.get("paper").and_then(|v| v.as_bool()).unwrap_or(false),
+                configs: o.get("configs").and_then(|v| v.as_usize()).unwrap_or(0),
+                space_key: str_field("space_key"),
+                default_hp_key: str_field("default_hp_key"),
+                default_score: num_field("default_score"),
+                best_hp_key: str_field("best_hp_key"),
+                best_config_idx: o
+                    .get("best_config_idx")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or(0),
+                best_score: num_field("best_score"),
+                improvement_pct: num_field("improvement_pct"),
+                // Positional, not filtered: a non-finite score serializes
+                // as JSON null, and dropping it would shift every later
+                // entry of this config-index-ordered array.
+                scores: o
+                    .get("scores")
+                    .and_then(|v| v.as_arr())
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|x| x.as_f64().unwrap_or(f64::NAN))
+                    .collect(),
+                wallclock_seconds: num_field("wallclock_seconds"),
+            });
+        }
+        Ok(SweepResult {
+            space_kind: j
+                .get("space_kind")
+                .and_then(|v| v.as_str())
+                .unwrap_or("limited")
+                .to_string(),
+            repeats: j.get("repeats").and_then(|v| v.as_usize()).unwrap_or(0),
+            seed: match j.get("seed") {
+                Some(Json::Str(s)) => s.parse().unwrap_or(0),
+                Some(v) => v.as_f64().unwrap_or(0.0) as u64,
+                None => 0,
+            },
+            train,
+            optimizers: optimizers_out,
+            wallclock_seconds: j
+                .get("wallclock_seconds")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0),
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        crate::util::compress::write_string(path, &self.to_json().to_string())
+    }
+
+    pub fn load(path: &Path) -> Result<SweepResult> {
+        SweepResult::from_json(&json::parse(&crate::util::compress::read_string(path)?)?)
+    }
+}
+
+/// Sweep every grid-bearing registry optimizer over `train`, computing
+/// the exhaustive limited-grid results fresh (see [`sweep_registry_with`]
+/// to supply persisted/memoized results instead, as the CLI's
+/// [`crate::experiments::Ctx::registry_sweep`] does).
+pub fn sweep_registry(
+    train: &[SpaceEval],
+    repeats: usize,
+    seed: u64,
+    observer: Arc<dyn Observer>,
+) -> Result<SweepResult> {
+    let obs = Arc::clone(&observer);
+    sweep_registry_with(train, repeats, seed, observer, move |algo| {
+        let hp_space = space::limited_space(algo)?;
+        exhaustive::exhaustive_tuning_observed(
+            algo,
+            &hp_space,
+            "limited",
+            train,
+            repeats,
+            seed,
+            Arc::clone(&obs),
+        )
+        .map(Arc::new)
+    })
+}
+
+/// [`sweep_registry`] with the exhaustive per-optimizer results supplied
+/// by `limited_results_for` (e.g. loaded from a results directory). The
+/// supplied results are verified against the current schema-derived
+/// space — a fingerprint or length mismatch is a typed
+/// [`TuneError::StaleCache`], never a silently misdecoded sweep.
+pub fn sweep_registry_with<F>(
+    train: &[SpaceEval],
+    repeats: usize,
+    seed: u64,
+    observer: Arc<dyn Observer>,
+    mut limited_results_for: F,
+) -> Result<SweepResult>
+where
+    F: FnMut(&str) -> Result<Arc<HyperTuningResults>>,
+{
+    if train.is_empty() {
+        return Err(TuneError::InvalidInput("sweep has no training spaces".into()));
+    }
+    let t0 = std::time::Instant::now();
+    let algos = optimizers::hypertunable();
+    observer.sweep_started(algos.len(), repeats);
+    // One shared Arc of the prepared spaces: every default campaign (and,
+    // through the SpaceEval clones inside exhaustive_tuning, every
+    // per-configuration campaign) reuses the same Arc-shared brute-force
+    // caches and their memoized SimTables.
+    let train_arc: Arc<Vec<SpaceEval>> = Arc::new(train.to_vec());
+    let mut optimizers_out = Vec::with_capacity(algos.len());
+    for (i, d) in algos.iter().enumerate() {
+        let hp_space = space::limited_space(d.name)?;
+        observer.sweep_optimizer_started(i, d.name, hp_space.len());
+        let ot0 = std::time::Instant::now();
+        // Reference leg: the schema-default hyperparameters, same
+        // repeats/seed as every grid configuration gets.
+        let default_result = Campaign::new(d.name)
+            .spaces_arc(Arc::clone(&train_arc))
+            .repeats(repeats)
+            .seed(seed)
+            .observer(Arc::clone(&observer))
+            .run()?;
+        let results = limited_results_for(d.name)?;
+        let fingerprint = hp_space.fingerprint();
+        if results.space_key != fingerprint {
+            return Err(TuneError::StaleCache(format!(
+                "hypertuning results for {} were computed on space {:?} \
+                 but the current schema derives {:?}",
+                d.name, results.space_key, fingerprint
+            )));
+        }
+        if results.results.len() != hp_space.len() {
+            return Err(TuneError::StaleCache(format!(
+                "hypertuning results for {} carry {} configs but its \
+                 hyperparameter space has {}",
+                d.name,
+                results.results.len(),
+                hp_space.len()
+            )));
+        }
+        // Per-config scores in config-index order (exhaustive results are
+        // already ordered, but index-address them so any provider works —
+        // with an out-of-space index a typed error, not a panic).
+        let mut scores = vec![f64::NAN; hp_space.len()];
+        for r in &results.results {
+            if r.config_idx >= hp_space.len() {
+                return Err(TuneError::StaleCache(format!(
+                    "hypertuning results for {} reference config {} outside \
+                     its {}-config hyperparameter space",
+                    d.name,
+                    r.config_idx,
+                    hp_space.len()
+                )));
+            }
+            scores[r.config_idx] = r.score;
+        }
+        let best = results.best();
+        let default_score = default_result.score();
+        observer.sweep_optimizer_finished(i, d.name, default_score, best.score);
+        optimizers_out.push(OptimizerSweep {
+            algo: d.name.to_string(),
+            paper: d.paper,
+            configs: hp_space.len(),
+            space_key: results.space_key.clone(),
+            default_hp_key: default_result.hp_key.clone(),
+            default_score,
+            best_hp_key: best.hp_key.clone(),
+            best_config_idx: best.config_idx,
+            best_score: best.score,
+            improvement_pct: improvement_pct(default_score, best.score),
+            scores,
+            wallclock_seconds: ot0.elapsed().as_secs_f64(),
+        });
+    }
+    let result = SweepResult {
+        space_kind: "limited".to_string(),
+        repeats,
+        seed,
+        train: train
+            .iter()
+            .map(|se| SweptSpace {
+                label: se.label.clone(),
+                space_fingerprint: se.space.fingerprint(),
+            })
+            .collect(),
+        optimizers: optimizers_out,
+        wallclock_seconds: t0.elapsed().as_secs_f64(),
+    };
+    observer.sweep_finished(result.mean_improvement_pct(), result.wallclock_seconds);
+    Ok(result)
+}
+
+/// Render the paper-style comparison artifacts through a [`Report`]
+/// sink: the per-optimizer default-vs-hypertuned table (paper four and
+/// extras side by side), the per-grid score-distribution violins, and
+/// the mean-improvement summary line.
+pub fn render_report(result: &SweepResult, report: &Report) -> Result<()> {
+    let mut table = Table::new(
+        &format!(
+            "Registry hypertuning sweep: {} grids, {} repeats, seed {}, {} training spaces",
+            result.space_kind,
+            result.repeats,
+            result.seed,
+            result.train.len()
+        ),
+        &[
+            "optimizer",
+            "set",
+            "configs",
+            "default",
+            "best",
+            "delta",
+            "improv %",
+            "best hyperparameters",
+        ],
+    );
+    for o in &result.optimizers {
+        table.row(vec![
+            o.algo.clone(),
+            if o.paper { "paper" } else { "extra" }.to_string(),
+            o.configs.to_string(),
+            format!("{:+.3}", o.default_score),
+            format!("{:+.3}", o.best_score),
+            format!("{:+.3}", o.best_score - o.default_score),
+            format!("{:+.1}", o.improvement_pct),
+            o.best_hp_key.clone(),
+        ]);
+    }
+    report.table(&table)?;
+    let dists: Vec<(String, Vec<f64>)> = result
+        .optimizers
+        .iter()
+        .map(|o| (o.algo.clone(), o.scores.iter().copied().filter(|s| s.is_finite()).collect()))
+        .collect();
+    report.violins(
+        "Score distribution over each optimizer's limited hyperparameter grid",
+        &dists,
+    )?;
+    report.summary(&format!(
+        "mean improvement of hypertuned-best over schema defaults: {:+.1}% \
+         across {} optimizers (paper, 4 algos: 94.8%); sweep took {}\n",
+        result.mean_improvement_pct(),
+        result.optimizers.len(),
+        fmt_duration(result.wallclock_seconds)
+    ))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::NullObserver;
+    use crate::dataset::bruteforce;
+    use crate::gpu::specs::A100;
+    use crate::kernels;
+    use crate::perfmodel::NoiseModel;
+    use crate::runner::LiveRunner;
+    use crate::runtime::Engine;
+    use std::sync::OnceLock;
+
+    fn train() -> &'static Vec<SpaceEval> {
+        static TRAIN: OnceLock<Vec<SpaceEval>> = OnceLock::new();
+        TRAIN.get_or_init(|| {
+            let kernel = kernels::kernel_by_name("synthetic").unwrap();
+            let mut live = LiveRunner::new(
+                kernels::kernel_by_name("synthetic").unwrap(),
+                &A100,
+                Arc::new(Engine::native()),
+                NoiseModel::default(),
+                42,
+            );
+            let cache = Arc::new(bruteforce::bruteforce(&mut live).unwrap());
+            vec![SpaceEval::new(kernel.space_arc(), cache, 0.95, 10)]
+        })
+    }
+
+    /// One shared sweep for the read-only assertions (a full registry
+    /// sweep is ~300 campaigns — run it once); the determinism golden
+    /// below runs its own second, fresh sweep to compare against.
+    fn run_sweep() -> &'static SweepResult {
+        static RESULT: OnceLock<SweepResult> = OnceLock::new();
+        RESULT.get_or_init(|| sweep_registry(train(), 1, 7, Arc::new(NullObserver)).unwrap())
+    }
+
+    /// Golden: the sweep covers exactly the grid-bearing registry set
+    /// (the same property `derived_spaces_exist_for_every_optimizer_with_grids`
+    /// pins at the space layer) — paper four plus extras — and two runs
+    /// with the same seed produce bitwise-equal scores.
+    #[test]
+    fn sweep_covers_registry_and_is_deterministic() {
+        let a = run_sweep();
+        let names: Vec<&str> = a.optimizers.iter().map(|o| o.algo.as_str()).collect();
+        assert_eq!(names, optimizers::hypertunable_names());
+        // Paper four present and flagged; ROADMAP extras present as extras.
+        for algo in crate::hypertuning::limited_algos() {
+            let o = a.optimizers.iter().find(|o| o.algo == algo).unwrap();
+            assert!(o.paper, "{algo} should carry the paper flag");
+        }
+        for extra in ["greedy_ils", "basin_hopping"] {
+            let o = a.optimizers.iter().find(|o| o.algo == extra).unwrap();
+            assert!(!o.paper, "{extra} must stay out of the paper set");
+        }
+        let b = sweep_registry(train(), 1, 7, Arc::new(NullObserver)).unwrap();
+        assert_eq!(a.optimizers.len(), b.optimizers.len());
+        for (oa, ob) in a.optimizers.iter().zip(&b.optimizers) {
+            assert_eq!(oa.algo, ob.algo);
+            assert_eq!(
+                oa.default_score.to_bits(),
+                ob.default_score.to_bits(),
+                "{}: default score drift",
+                oa.algo
+            );
+            assert_eq!(
+                oa.best_score.to_bits(),
+                ob.best_score.to_bits(),
+                "{}: best score drift",
+                oa.algo
+            );
+            assert_eq!(oa.best_config_idx, ob.best_config_idx, "{}", oa.algo);
+            assert_eq!(oa.best_hp_key, ob.best_hp_key, "{}", oa.algo);
+            assert_eq!(oa.scores.len(), oa.configs);
+            for (sa, sb) in oa.scores.iter().zip(&ob.scores) {
+                assert_eq!(sa.to_bits(), sb.to_bits(), "{}: grid score drift", oa.algo);
+            }
+        }
+    }
+
+    /// Per-optimizer invariants: the envelope's best is the max of its
+    /// grid scores, beats (or ties) the default reference, and the
+    /// improvement field matches the documented formula.
+    #[test]
+    fn sweep_envelope_is_internally_consistent() {
+        let r = run_sweep();
+        assert_eq!(r.space_kind, "limited");
+        assert_eq!(r.repeats, 1);
+        assert_eq!(r.train.len(), 1);
+        assert_eq!(r.train[0].label, "synthetic@A100");
+        assert!(!r.train[0].space_fingerprint.is_empty());
+        for o in &r.optimizers {
+            let grid_max = o.scores.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+            assert_eq!(o.best_score.to_bits(), grid_max.to_bits(), "{}", o.algo);
+            assert_eq!(
+                o.scores[o.best_config_idx].to_bits(),
+                o.best_score.to_bits(),
+                "{}",
+                o.algo
+            );
+            assert!(o.default_score.is_finite(), "{}", o.algo);
+            // Exhaustive best can never lose to a configuration drawn from
+            // defaults *within the grid*; defaults may sit off-grid, so
+            // only sanity-bound the improvement here.
+            assert!(
+                o.improvement_pct.is_finite(),
+                "{}: improvement {}",
+                o.algo,
+                o.improvement_pct
+            );
+            assert_eq!(
+                o.improvement_pct.to_bits(),
+                improvement_pct(o.default_score, o.best_score).to_bits(),
+                "{}",
+                o.algo
+            );
+            assert!(!o.space_key.is_empty(), "{}", o.algo);
+            assert!(!o.default_hp_key.is_empty(), "{}", o.algo);
+        }
+    }
+
+    #[test]
+    fn envelope_roundtrips_through_text() {
+        let r = run_sweep();
+        let text = r.to_json().to_pretty();
+        let back = SweepResult::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.space_kind, r.space_kind);
+        assert_eq!(back.repeats, r.repeats);
+        assert_eq!(back.seed, r.seed);
+        assert_eq!(back.train.len(), r.train.len());
+        assert_eq!(back.train[0].space_fingerprint, r.train[0].space_fingerprint);
+        assert_eq!(back.optimizers.len(), r.optimizers.len());
+        for (b, o) in back.optimizers.iter().zip(&r.optimizers) {
+            assert_eq!(b.algo, o.algo);
+            assert_eq!(b.paper, o.paper);
+            assert_eq!(b.configs, o.configs);
+            assert_eq!(b.space_key, o.space_key);
+            assert_eq!(b.best_hp_key, o.best_hp_key);
+            assert_eq!(b.best_config_idx, o.best_config_idx);
+            assert_eq!(b.default_score.to_bits(), o.default_score.to_bits());
+            assert_eq!(b.best_score.to_bits(), o.best_score.to_bits());
+            assert_eq!(b.scores.len(), o.scores.len());
+        }
+        // Mean improvement survives the round-trip bitwise.
+        assert_eq!(
+            back.mean_improvement_pct().to_bits(),
+            r.mean_improvement_pct().to_bits()
+        );
+    }
+
+    #[test]
+    fn envelope_rejects_foreign_and_future_schemas() {
+        let mut j = Json::obj();
+        j.set("schema", "something-else".into());
+        assert!(SweepResult::from_json(&j).is_err());
+        let mut j = run_sweep().to_json();
+        j.set("schema_version", 999.0.into());
+        assert!(SweepResult::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip_gz() {
+        let r = run_sweep();
+        let dir = std::env::temp_dir().join(format!("tt_sweep_{}", std::process::id()));
+        let path = dir.join("sweep.json.gz");
+        r.save(&path).unwrap();
+        let back = SweepResult::load(&path).unwrap();
+        assert_eq!(back.optimizers.len(), r.optimizers.len());
+        assert_eq!(back.seed, r.seed);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Stale persisted results (fingerprint from another grid) must fail
+    /// as a typed error instead of silently misdecoding config indices.
+    #[test]
+    fn stale_provider_results_are_typed_error() {
+        let err = sweep_registry_with(train(), 1, 7, Arc::new(NullObserver), |algo| {
+            let hp_space = space::limited_space(algo)?;
+            Ok(Arc::new(HyperTuningResults {
+                algo: algo.to_string(),
+                space_kind: "limited".into(),
+                space_key: "stale-fingerprint".into(),
+                repeats: 1,
+                seed: 7,
+                results: (0..hp_space.len())
+                    .map(|i| exhaustive::HyperResult {
+                        config_idx: i,
+                        hp_key: format!("c{i}"),
+                        score: 0.0,
+                    })
+                    .collect(),
+                wallclock_seconds: 1.0,
+                simulated_seconds: 1.0,
+            }))
+        })
+        .unwrap_err();
+        assert!(matches!(err, TuneError::StaleCache(_)), "{err:#}");
+    }
+
+    /// A provider result with a config index outside the derived space
+    /// (corrupt persisted file) is a typed error, not an index panic.
+    #[test]
+    fn out_of_space_config_idx_is_typed_error() {
+        let err = sweep_registry_with(train(), 1, 7, Arc::new(NullObserver), |algo| {
+            let hp_space = space::limited_space(algo)?;
+            Ok(Arc::new(HyperTuningResults {
+                algo: algo.to_string(),
+                space_kind: "limited".into(),
+                space_key: hp_space.fingerprint(),
+                repeats: 1,
+                seed: 7,
+                results: (0..hp_space.len())
+                    .map(|i| exhaustive::HyperResult {
+                        // Right count, but the last index points past
+                        // the end of the space.
+                        config_idx: if i + 1 == hp_space.len() { hp_space.len() } else { i },
+                        hp_key: format!("c{i}"),
+                        score: 0.0,
+                    })
+                    .collect(),
+                wallclock_seconds: 1.0,
+                simulated_seconds: 1.0,
+            }))
+        })
+        .unwrap_err();
+        assert!(matches!(err, TuneError::StaleCache(_)), "{err:#}");
+        assert!(format!("{err}").contains("outside"), "{err}");
+    }
+
+    #[test]
+    fn empty_training_set_rejected() {
+        let err = sweep_registry(&[], 1, 7, Arc::new(NullObserver)).unwrap_err();
+        assert!(matches!(err, TuneError::InvalidInput(_)), "{err}");
+    }
+
+    #[test]
+    fn report_renders_table_violins_summary() {
+        let r = run_sweep();
+        let dir = std::env::temp_dir().join(format!("tt_sweeprep_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let report = Report::new(&dir, "sweep");
+        render_report(r, &report).unwrap();
+        let table = std::fs::read_to_string(dir.join("sweep_table.txt")).unwrap();
+        for o in &r.optimizers {
+            assert!(table.contains(&o.algo), "table missing {}", o.algo);
+        }
+        assert!(table.contains("paper") && table.contains("extra"));
+        assert!(dir.join("sweep_data.csv").exists());
+        assert!(dir.join("sweep_violin.txt").exists());
+        assert!(dir.join("sweep_dist.csv").exists());
+        let summary = std::fs::read_to_string(dir.join("sweep_summary.txt")).unwrap();
+        assert!(summary.contains("mean improvement"), "{summary}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Sweep progress events fire from the driving thread in the
+    /// documented strict order, and a provider returning
+    /// correctly-fingerprinted results is accepted as-is (its scores
+    /// flow straight into the envelope).
+    #[test]
+    fn sweep_events_are_strictly_ordered() {
+        use std::sync::Mutex;
+
+        #[derive(Default)]
+        struct Collector(Mutex<Vec<String>>);
+        impl Observer for Collector {
+            fn sweep_started(&self, optimizers: usize, repeats: usize) {
+                self.0.lock().unwrap().push(format!("started {optimizers} {repeats}"));
+            }
+            fn sweep_optimizer_started(&self, idx: usize, algo: &str, _configs: usize) {
+                self.0.lock().unwrap().push(format!("opt_started {idx} {algo}"));
+            }
+            fn sweep_optimizer_finished(&self, idx: usize, algo: &str, _d: f64, _b: f64) {
+                self.0.lock().unwrap().push(format!("opt_finished {idx} {algo}"));
+            }
+            fn sweep_finished(&self, _pct: f64, _w: f64) {
+                self.0.lock().unwrap().push("finished".to_string());
+            }
+        }
+
+        let collector = Arc::new(Collector::default());
+        let result = sweep_registry_with(
+            train(),
+            1,
+            7,
+            Arc::clone(&collector) as Arc<dyn Observer>,
+            |algo| {
+                let hp_space = space::limited_space(algo)?;
+                Ok(Arc::new(HyperTuningResults {
+                    algo: algo.to_string(),
+                    space_kind: "limited".into(),
+                    space_key: hp_space.fingerprint(),
+                    repeats: 1,
+                    seed: 7,
+                    results: (0..hp_space.len())
+                        .map(|i| exhaustive::HyperResult {
+                            config_idx: i,
+                            hp_key: format!("c{i}"),
+                            score: 0.01 * i as f64,
+                        })
+                        .collect(),
+                    wallclock_seconds: 1.0,
+                    simulated_seconds: 1.0,
+                }))
+            },
+        )
+        .unwrap();
+        // Provider scores flow straight into the envelope: best is the
+        // highest-index config of each grid.
+        for o in &result.optimizers {
+            assert_eq!(o.best_config_idx, o.configs - 1, "{}", o.algo);
+            assert!((o.best_score - 0.01 * (o.configs - 1) as f64).abs() < 1e-12);
+        }
+        let events = collector.0.lock().unwrap().clone();
+        let n = result.optimizers.len();
+        assert_eq!(events[0], format!("started {n} 1"));
+        assert_eq!(events.last().unwrap(), "finished");
+        // Per optimizer: started immediately before finished, in sweep
+        // (= registration) order.
+        for (i, o) in result.optimizers.iter().enumerate() {
+            assert_eq!(events[1 + 2 * i], format!("opt_started {i} {}", o.algo));
+            assert_eq!(events[2 + 2 * i], format!("opt_finished {i} {}", o.algo));
+        }
+        assert_eq!(events.len(), 2 + 2 * n);
+    }
+
+    #[test]
+    fn improvement_pct_formula() {
+        assert!((improvement_pct(0.2, 0.4) - 100.0).abs() < 1e-9);
+        assert!((improvement_pct(-0.2, 0.2) - 200.0).abs() < 1e-9);
+        // Near-zero default: percentage points, not an exploding ratio.
+        assert!((improvement_pct(0.0, 0.5) - 50.0).abs() < 1e-9);
+    }
+}

@@ -33,7 +33,10 @@
 //!   events and serde-stable [`CampaignResult`] envelopes. Every tuning
 //!   run — exhaustive, meta, CLI — goes through it.
 //! * [`hypertuning`] — exhaustive and meta-strategy hyperparameter tuning
-//!   (Eq. 4), with the Table III / Table IV hyperparameter spaces.
+//!   (Eq. 4), with the Table III / Table IV hyperparameter spaces, plus
+//!   the full-registry sweep (`tunetuner sweep`): every grid-bearing
+//!   optimizer hypertuned and compared default-vs-best in one versioned
+//!   `tunetuner-sweep` envelope.
 //! * [`experiments`] — one regenerator per paper table/figure.
 //! * [`error`] — the typed [`TuneError`] every fallible library API
 //!   returns (the binary converts to `anyhow` at its boundary).

@@ -5,6 +5,7 @@
 //! tunetuner bruteforce [--kernels k1,k2] [--devices d1,d2]
 //! tunetuner tune <kernel> <device> [--algo NAME] [--hp k=v,k=v] [--repeats N]
 //! tunetuner hypertune <algo> [--kind limited|extended]
+//! tunetuner sweep [--json]
 //! tunetuner sensitivity <algo>
 //! tunetuner experiment <table2|table3|table4|fig2..fig9|all>
 //! ```
@@ -79,6 +80,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("bruteforce") => cmd_bruteforce(args),
         Some("tune") => cmd_tune(args),
         Some("hypertune") => cmd_hypertune(args),
+        Some("sweep") => cmd_sweep(args),
         Some("sensitivity") => cmd_sensitivity(args),
         Some("experiment") => cmd_experiment(args),
         Some("help") | None => {
@@ -101,6 +103,8 @@ subcommands:
       [--json]  print the campaign-result envelope instead of tables
   hypertune <algo>          tune the tuner (limited: exhaustive; extended: meta)
       [--kind limited|extended] [--json]
+  sweep                     hypertune every grid-bearing registry optimizer
+      [--json]  print the tunetuner-sweep envelope instead of the report
   sensitivity <algo>        Kruskal-Wallis + mutual-information screen
   experiment <id>           regenerate a paper table/figure (or 'all')
 
@@ -241,6 +245,18 @@ impl Observer for HypertuneProgress {
     fn config_scored(&self, config_idx: usize, hp_key: &str, score: f64) {
         log_info!("config {config_idx} [{hp_key}]: score {score:.3}");
     }
+
+    fn sweep_started(&self, optimizers: usize, repeats: usize) {
+        log_info!("registry sweep: {optimizers} optimizers x {repeats} repeats");
+    }
+
+    fn sweep_optimizer_started(&self, idx: usize, algo: &str, configs: usize) {
+        log_info!("sweep [{idx}] {algo}: {configs} hyperparameter configs");
+    }
+
+    fn sweep_optimizer_finished(&self, idx: usize, algo: &str, default: f64, best: f64) {
+        log_info!("sweep [{idx}] {algo}: default {default:.3} -> best {best:.3}");
+    }
 }
 
 fn cmd_hypertune(args: &Args) -> Result<()> {
@@ -282,6 +298,25 @@ fn cmd_hypertune(args: &Args) -> Result<()> {
         results.simulated_seconds / 3600.0,
         results.simulated_seconds / results.wallclock_seconds.max(1e-9)
     );
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let json = args.flag("json");
+    let mut c = ctx(args)?;
+    if !json {
+        c = c.with_observer(Arc::new(HypertuneProgress));
+    }
+    // One campaign per (grid-bearing optimizer, hyperparameter config)
+    // over the training spaces; per-optimizer exhaustive results are
+    // persisted in the results dir, so an interrupted sweep resumes from
+    // the algorithms already done.
+    let result = c.registry_sweep()?;
+    if json {
+        println!("{}", result.to_json().to_pretty());
+        return Ok(());
+    }
+    hypertuning::render_sweep_report(&result, &c.report("sweep"))?;
     Ok(())
 }
 

@@ -160,6 +160,20 @@ pub fn paper_algorithms() -> Vec<&'static str> {
     names
 }
 
+/// Descriptors of every hypertunable optimizer — those declaring a
+/// limited (Table III-style) grid, so a derived hyperparameter space
+/// exists for them — in registration order. This is the set the
+/// full-registry sweep (`hypertuning::sweep`) iterates: the paper four
+/// plus extras such as `greedy_ils`/`basin_hopping`.
+pub fn hypertunable() -> Vec<&'static Descriptor> {
+    registry().iter().filter(|d| d.has_limited_space()).collect()
+}
+
+/// Names of the [`hypertunable`] optimizers, in registration order.
+pub fn hypertunable_names() -> Vec<&'static str> {
+    hypertunable().iter().map(|d| d.name).collect()
+}
+
 /// One-line-per-optimizer rendering of the registry (name plus
 /// `key=default` pairs) — the source for the module-doc table and the
 /// `tunetuner info` listing.
@@ -276,6 +290,28 @@ mod tests {
         assert_eq!(hp.str("method", "x"), "uniform");
         assert_eq!(hp.f64("missing", 7.0), 7.0);
         assert_eq!(hp.key(), "T=1.5,method=uniform,popsize=20");
+    }
+
+    /// The hypertunable set is exactly the grid-bearing descriptors —
+    /// paper four plus the ROADMAP extras, never the grid-less
+    /// optimizers — in registration order.
+    #[test]
+    fn hypertunable_matches_grid_bearing_descriptors() {
+        let names = hypertunable_names();
+        let want: Vec<&str> = registry()
+            .iter()
+            .filter(|d| d.has_limited_space())
+            .map(|d| d.name)
+            .collect();
+        assert_eq!(names, want);
+        for algo in paper_algorithms() {
+            assert!(names.contains(&algo), "paper algo {algo} missing");
+        }
+        assert!(names.contains(&"greedy_ils"));
+        assert!(names.contains(&"basin_hopping"));
+        assert!(!names.contains(&"random_search"));
+        assert!(!names.contains(&"mls"));
+        assert!(names.len() > paper_algorithms().len(), "extras must extend the paper set");
     }
 
     #[test]

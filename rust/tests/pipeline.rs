@@ -106,7 +106,7 @@ fn mini_hypertuning_campaign() {
 
     // Meta replay: a random meta-strategy over the HP cache must find the
     // known-best HP config when allowed to exhaust the space.
-    let meta_cache = hypertuning::meta_cache_from_results(&results, &hp_space);
+    let meta_cache = hypertuning::meta_cache_from_results(&results, &hp_space).unwrap();
     let best_idx = meta_cache.optimum_index();
     assert_eq!(best_idx, results.best().config_idx);
     let mut sim =
