@@ -6,9 +6,11 @@
 //!   space      — search-space enumeration per kernel (constraint engine)
 //!   engine     — batched device-model evaluation, PJRT vs native (L1/L2)
 //!   sim        — simulation-mode replay rate (the paper's feasibility core):
-//!                eval_lite lookup throughput + SimTable build
+//!                eval_lite lookup throughput, eval_batch gather + SimTable build
 //!   cache      — on-disk cache load: gzipped JSON vs the T4B binary sidecar
-//!   tuning     — per-run buffer pooling: scratch_reuse vs fresh_alloc
+//!   tuning     — per-run buffer pooling (scratch_reuse vs fresh_alloc) and
+//!                batched proposals (batch_vs_scalar: gather vs eval loop)
+//!   methodology— batched campaign scoring (score_campaign over all traces)
 //!   baseline   — methodology baseline/budget computation per space
 //!   optimizer  — optimizer stepping rate in simulation mode
 //!   bruteforce — full-space brute-force (Table II regeneration cost)
@@ -45,7 +47,9 @@ use tunetuner::kernels;
 use tunetuner::methodology::{evaluate_algorithm, SpaceEval};
 use tunetuner::optimizers::{self, HyperParams};
 use tunetuner::perfmodel::NoiseModel;
-use tunetuner::runner::{Budget, LiveRunner, Runner, SimulationRunner, Tuning, TuningScratch};
+use tunetuner::runner::{
+    Budget, LiveRunner, Runner, SimulationRunner, Trace, TracePoint, Tuning, TuningScratch,
+};
 use tunetuner::runtime::Engine;
 use tunetuner::util::json::Json;
 use tunetuner::util::rng::Rng;
@@ -400,13 +404,18 @@ fn main() {
     // ---- sim replay stack: SimTable lookups, cache formats, scratch pooling -------
     // The simulator's throughput is the denominator of every meta-sweep.
     // sim/eval_lite is the raw columnar-lookup rate (the PR-4 acceptance
-    // gate: >= 10x the record-walk rate it replaced), sim/table_build the
-    // one-time cost it amortizes, cache/load_* the JSON-vs-T4B startup
-    // delta, and tuning/* the pooled-scratch vs fresh-alloc delta. Runs on
-    // the synthetic kernel (no hub needed); setup is filter-gated.
-    let sim_bench_names = "sim/eval_lite/10k sim/table_build/synthetic \
+    // gate: >= 10x the record-walk rate it replaced), sim/eval_batch the
+    // batched gather over the same table (the PR-6 acceptance gate: >= 2x
+    // the per-call loop), sim/table_build the one-time cost it amortizes,
+    // cache/load_* the JSON-vs-T4B startup delta, tuning/* the
+    // pooled-scratch and batched-proposal deltas, and methodology/* the
+    // one-pass campaign scoring. Runs on the synthetic kernel (no hub
+    // needed); setup is filter-gated.
+    let sim_bench_names = "sim/eval_lite/10k sim/eval_batch/10k sim/table_build/synthetic \
          cache/load_json/synthetic cache/load_t4b/synthetic \
-         tuning/scratch_reuse/20x50-evals tuning/fresh_alloc/20x50-evals";
+         tuning/scratch_reuse/20x50-evals tuning/fresh_alloc/20x50-evals \
+         tuning/batch_vs_scalar/gather tuning/batch_vs_scalar/scalar \
+         methodology/score_batch/2sp-25rep";
     let wants_sim = b
         .filter
         .as_ref()
@@ -435,6 +444,23 @@ fn main() {
                 let mut acc = 0.0f64;
                 for i in 0..10_000usize {
                     let (value, cost) = sim.evaluate_lite(i % n);
+                    acc += value.min(1e9) + cost;
+                }
+                std::hint::black_box(acc);
+            });
+        }
+        {
+            // Same 10k lookups served as one gather + one accounting
+            // commit — what a population optimizer's generation pays.
+            let mut sim =
+                SimulationRunner::new_unchecked(Arc::clone(&space), Arc::clone(&cache));
+            let idxs: Vec<usize> = (0..10_000usize).map(|i| i % n).collect();
+            let mut out: Vec<(f64, f64)> = Vec::new();
+            b.throughput("sim/eval_batch/10k", 10_000, move || {
+                sim.evaluate_batch_lite(&idxs, &mut out);
+                sim.batch_committed(&out);
+                let mut acc = 0.0f64;
+                for &(value, cost) in &out {
                     acc += value.min(1e9) + cost;
                 }
                 std::hint::black_box(acc);
@@ -504,6 +530,71 @@ fn main() {
                     acc += tuning.finish().unique_evals;
                 }
                 std::hint::black_box(acc);
+            });
+        }
+        // The same 64-proposal batches (fresh run each) served by the
+        // single-gather fast path vs routed through the bitwise-pinned
+        // scalar eval loop — the full-Tuning-accounting view of the
+        // eval_batch win.
+        let batch_proposals: Vec<Vec<usize>> = (0..20u64)
+            .map(|r| {
+                let mut rng = Rng::new(r + 100);
+                (0..64).map(|_| rng.below(n)).collect()
+            })
+            .collect();
+        for (name, fallback) in [
+            ("tuning/batch_vs_scalar/gather", false),
+            ("tuning/batch_vs_scalar/scalar", true),
+        ] {
+            let space2 = Arc::clone(&space);
+            let cache2 = Arc::clone(&cache);
+            let proposals = batch_proposals.clone();
+            let mut scratch = TuningScratch::new();
+            b.throughput(name, 20 * 64, move || {
+                let mut acc = 0usize;
+                for batch in &proposals {
+                    let mut sim = SimulationRunner::new_unchecked(
+                        Arc::clone(&space2),
+                        Arc::clone(&cache2),
+                    );
+                    let mut tuning =
+                        Tuning::with_scratch(&mut sim, Budget::evals(usize::MAX), &mut scratch);
+                    tuning.set_scalar_batch_fallback(fallback);
+                    acc += tuning.eval_batch(batch).len();
+                    acc += tuning.finish().unique_evals;
+                }
+                std::hint::black_box(acc);
+            });
+        }
+
+        // Batched campaign scoring: one score_campaign call over
+        // 2 spaces x 25 repeats of 40-point traces — the gather step every
+        // exhaustive-hypertune configuration pays once per campaign.
+        {
+            let se = SpaceEval::new(Arc::clone(&space), Arc::clone(&cache), 0.95, 50);
+            let spaces_eval = vec![se.clone(), se];
+            let repeats = 25usize;
+            let traces: Vec<Trace> = (0..spaces_eval.len() * repeats)
+                .map(|j| {
+                    let se = &spaces_eval[j / repeats];
+                    let m = 40usize;
+                    let points: Vec<TracePoint> = (0..m)
+                        .map(|k| TracePoint {
+                            config: k % n,
+                            value: se.optimum * (2.0 - k as f64 / m as f64),
+                            clock: se.budget_seconds * (k as f64 + 1.0) / m as f64,
+                            cached: false,
+                        })
+                        .collect();
+                    Trace {
+                        elapsed: se.budget_seconds,
+                        unique_evals: m.min(n),
+                        points,
+                    }
+                })
+                .collect();
+            b.run("methodology/score_batch/2sp-25rep", move || {
+                tunetuner::methodology::score_campaign(&spaces_eval, &traces, repeats).len()
             });
         }
         std::fs::remove_dir_all(&dir).ok();

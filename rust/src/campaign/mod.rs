@@ -388,14 +388,16 @@ impl Campaign {
             trace
         });
 
-        // Gather: score each space's repeats (traces are in job order).
+        // Gather: score the whole campaign's traces with one batched
+        // call (traces are in job order, grouped by space).
+        let per_space_scores =
+            crate::methodology::score_campaign(&self.spaces, &traces, self.repeats);
         let mut spaces_out = Vec::with_capacity(self.spaces.len());
-        let mut per_space_scores = Vec::with_capacity(self.spaces.len());
         let mut simulated = 0.0;
         for (s, se) in self.spaces.iter().enumerate() {
             let runs = &traces[s * self.repeats..(s + 1) * self.repeats];
-            let scores = se.score_traces(runs);
-            let mean_score = crate::util::stats::mean(&scores);
+            let scores = &per_space_scores[s];
+            let mean_score = crate::util::stats::mean(scores);
             self.observer.space_scored(s, &se.label, mean_score);
             simulated += runs.iter().map(|t| t.elapsed).sum::<f64>();
             spaces_out.push(SpaceOutcome {
@@ -414,7 +416,6 @@ impl Campaign {
                 mean_score,
                 scores: scores.clone(),
             });
-            per_space_scores.push(scores);
         }
         let aggregate = AggregateResult::from_per_space_scores(per_space_scores);
         let wallclock = t0.elapsed().as_secs_f64();

@@ -382,12 +382,11 @@ mod tests {
         let (v, c) = sim.evaluate_lite(5);
         assert!(v.is_infinite());
         assert!(c.is_finite());
-        // A tuning run over the whole cache never selects a failed
-        // config as its best.
+        // A tuning run over the whole cache (one exhaustive batch) never
+        // selects a failed config as its best.
         let mut tuning = Tuning::new(&mut sim, Budget::evals(hp_space.len()));
-        for i in 0..hp_space.len() {
-            tuning.eval(i);
-        }
+        let all: Vec<usize> = (0..hp_space.len()).collect();
+        assert_eq!(tuning.eval_batch(&all).len(), hp_space.len());
         let trace = tuning.finish();
         assert!(trace.best().unwrap().is_finite());
         assert!((trace.best().unwrap() - (1.0 - 0.7)).abs() < 1e-12);

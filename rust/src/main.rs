@@ -8,6 +8,7 @@
 //! tunetuner sweep [--json]
 //! tunetuner sensitivity <algo>
 //! tunetuner experiment <table2|table3|table4|fig2..fig9|all>
+//! tunetuner bench-trend [--dir D] [--threshold PCT] [--gate]
 //! ```
 //!
 //! Global flags: `--scale quick|paper`, `--seed N`, `--hub DIR`,
@@ -28,6 +29,7 @@ use tunetuner::hypertuning;
 use tunetuner::kernels;
 use tunetuner::optimizers;
 use tunetuner::optimizers::HyperParams;
+use tunetuner::report::bench_trend;
 use tunetuner::runtime::Engine;
 use tunetuner::searchspace::Value;
 use tunetuner::util::cli::Args;
@@ -83,6 +85,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("sweep") => cmd_sweep(args),
         Some("sensitivity") => cmd_sensitivity(args),
         Some("experiment") => cmd_experiment(args),
+        Some("bench-trend") => cmd_bench_trend(args),
         Some("help") | None => {
             print!("{HELP}");
             Ok(())
@@ -107,6 +110,8 @@ subcommands:
       [--json]  print the tunetuner-sweep envelope instead of the report
   sensitivity <algo>        Kruskal-Wallis + mutual-information screen
   experiment <id>           regenerate a paper table/figure (or 'all')
+  bench-trend               cross-PR perf trajectory from BENCH_<pr>.json files
+      [--dir .] [--threshold 25] [--gate]  (--gate: exit 1 on regression)
 
 global flags: --scale quick|paper  --seed N  --hub DIR  --results DIR
               --artifacts DIR  --backend pjrt|native  --verbose  --quiet
@@ -335,6 +340,34 @@ fn cmd_sensitivity(args: &Args) -> Result<()> {
         println!(
             "{:<18} {:>10.3} {:>10.4} {:>8.4}{flag}",
             s.param, s.h, s.p, s.mutual_information
+        );
+    }
+    Ok(())
+}
+
+fn cmd_bench_trend(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.opt_or("dir", "."));
+    // Threshold is given in percent (25 = fail when a group's mean is
+    // more than 25% slower than the previous snapshot's).
+    let threshold = args.opt_f64("threshold", 25.0) / 100.0;
+    let snapshots = bench_trend::discover(&dir)?;
+    print!("{}", bench_trend::render(&snapshots, threshold));
+    let regressed: Vec<String> = bench_trend::latest_deltas(&snapshots)
+        .iter()
+        .filter(|d| d.regressed(threshold))
+        .map(|d| {
+            format!(
+                "{} {:.2}x (PR {} -> PR {}, {} benches)",
+                d.group, d.ratio, d.from_pr, d.to_pr, d.common
+            )
+        })
+        .collect();
+    if !regressed.is_empty() && args.flag("gate") {
+        bail!(
+            "perf gate: {} group(s) regressed past {:.0}%: {}",
+            regressed.len(),
+            threshold * 100.0,
+            regressed.join("; ")
         );
     }
     Ok(())

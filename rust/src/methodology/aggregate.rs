@@ -43,8 +43,9 @@ impl SpaceEval {
         let mut baseline = Baseline::new(&cache);
         let budget_seconds = baseline.budget_seconds(cutoff);
         let times = sampling_times(budget_seconds, points);
-        let baseline_values: Vec<f64> =
-            times.iter().map(|&t| baseline.value_at_time(t)).collect();
+        // One multi-accumulator pass over the value distribution serves
+        // the whole sampling grid (bit-identical to per-point calls).
+        let baseline_values = baseline.values_at_times(&times);
         SpaceEval {
             label: format!("{}@{}", cache.kernel, cache.device),
             optimum: baseline.optimum,
@@ -72,6 +73,27 @@ impl SpaceEval {
             .map(|(&v, &b)| score_at(b, v, self.optimum))
             .collect()
     }
+}
+
+/// Score a whole campaign's traces in one call: `traces` holds
+/// `spaces.len() * repeats` runs grouped by space in campaign job order.
+/// Each space's repeat-group is scored against its precomputed baseline
+/// curve — the per-space Eq. (2) score matrix a campaign aggregates.
+pub fn score_campaign(
+    spaces: &[SpaceEval],
+    traces: &[Trace],
+    repeats: usize,
+) -> Vec<Vec<f64>> {
+    assert_eq!(
+        traces.len(),
+        spaces.len() * repeats,
+        "traces must be grouped per space"
+    );
+    spaces
+        .iter()
+        .enumerate()
+        .map(|(s, se)| se.score_traces(&traces[s * repeats..(s + 1) * repeats]))
+        .collect()
 }
 
 /// The outcome of evaluating one (algorithm, hyperparameters) pair.
@@ -263,6 +285,38 @@ mod tests {
                     (s - 1.0).abs() < 1e-12,
                     "point {i} (t={t:.2}) should be 1.0, got {s}"
                 );
+            }
+        }
+    }
+
+    /// `score_campaign` is exactly the per-space `score_traces` chunking.
+    #[test]
+    fn score_campaign_matches_per_space_chunks() {
+        let ses = spaces();
+        let repeats = 3usize;
+        let mut traces: Vec<Trace> = Vec::new();
+        for (s, se) in ses.iter().enumerate() {
+            for r in 0..repeats {
+                let clock = se.budget_seconds * (0.2 + 0.2 * r as f64);
+                traces.push(Trace {
+                    points: vec![TracePoint {
+                        config: s,
+                        value: se.optimum * (1.0 + 0.1 * r as f64),
+                        clock,
+                        cached: false,
+                    }],
+                    elapsed: clock,
+                    unique_evals: 1,
+                });
+            }
+        }
+        let batch = score_campaign(ses, &traces, repeats);
+        assert_eq!(batch.len(), ses.len());
+        for (s, se) in ses.iter().enumerate() {
+            let scalar = se.score_traces(&traces[s * repeats..(s + 1) * repeats]);
+            assert_eq!(batch[s].len(), scalar.len());
+            for (a, b) in batch[s].iter().zip(&scalar) {
+                assert_eq!(a.to_bits(), b.to_bits());
             }
         }
     }

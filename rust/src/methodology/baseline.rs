@@ -87,6 +87,91 @@ impl Baseline {
         e
     }
 
+    /// Batch counterpart of [`Baseline::expected_single`]: one pass over
+    /// the sorted valid values serves every requested draw count at once,
+    /// carrying one `q` accumulator per distinct count. Each count's
+    /// arithmetic is the exact scalar recurrence (same multiply/divide
+    /// sequence, same early termination at `q == 0`), so the memoized
+    /// results are bit-identical to per-count passes.
+    fn expected_many(&mut self, draws: &[usize]) {
+        struct Acc {
+            draws: usize,
+            q_prev: f64,
+            e: f64,
+            live: bool,
+        }
+        let m = self.table.sorted_valid_values.len();
+        let mut missing: Vec<usize> = draws
+            .iter()
+            .map(|&d| d.clamp(1, m))
+            .filter(|d| !self.memo.contains_key(d))
+            .collect();
+        missing.sort_unstable();
+        missing.dedup();
+        if missing.is_empty() {
+            return;
+        }
+        let mut acc: Vec<Acc> = missing
+            .iter()
+            .map(|&d| Acc {
+                draws: d,
+                q_prev: 1.0,
+                e: 0.0,
+                live: true,
+            })
+            .collect();
+        let mut live = acc.len();
+        for i in 1..=m {
+            if live == 0 {
+                break;
+            }
+            let v = self.table.sorted_valid_values[i - 1];
+            for a in acc.iter_mut() {
+                if !a.live {
+                    continue;
+                }
+                let numer = (m as f64) - (i as f64) - (a.draws as f64) + 1.0;
+                let denom = (m as f64) - (i as f64) + 1.0;
+                let q = if numer <= 0.0 {
+                    0.0
+                } else {
+                    a.q_prev * numer / denom
+                };
+                a.e += v * (a.q_prev - q);
+                a.q_prev = q;
+                if q == 0.0 {
+                    a.live = false;
+                    live -= 1;
+                }
+            }
+        }
+        for a in acc {
+            self.memo.insert(a.draws, a.e);
+        }
+    }
+
+    /// Batch counterpart of [`Baseline::value_at_time`]: warms the per-n
+    /// memo for every integer draw count the requested times touch with
+    /// one [`Baseline::expected_many`] pass, then maps each time through
+    /// the scalar path — all memo hits, so one multi-accumulator walk
+    /// over the value distribution serves the whole sampling grid.
+    pub fn values_at_times(&mut self, times: &[f64]) -> Vec<f64> {
+        let m = self.table.sorted_valid_values.len();
+        let mut wanted: Vec<usize> = Vec::with_capacity(times.len() * 2);
+        for &t in times {
+            // Mirror value_at_time → expected_best's draw derivation.
+            let n_valid = ((t / self.mean_cost) * self.valid_fraction).max(1.0);
+            if n_valid <= 1.0 {
+                wanted.push(1);
+            } else {
+                wanted.push((n_valid.floor() as usize).min(m));
+                wanted.push((n_valid.ceil() as usize).min(m));
+            }
+        }
+        self.expected_many(&wanted);
+        times.iter().map(|&t| self.value_at_time(t)).collect()
+    }
+
     /// Expected best after `n_valid` valid draws (interpolated for
     /// fractional n).
     pub fn expected_best(&mut self, n_valid: f64) -> f64 {
@@ -206,6 +291,39 @@ mod tests {
         let t = 10.0 * bv.mean_cost;
         assert!(bh.value_at_time(t) >= bv.value_at_time(t) - 1e-12);
         assert!(bh.valid_fraction < bv.valid_fraction);
+    }
+
+    #[test]
+    fn expected_many_matches_single_bitwise() {
+        let vals: Vec<f64> = (1..150).map(|i| ((i as f64) * 0.37).sin() + 2.0).collect();
+        let mut a = Baseline::new(&cache_with_values(&vals));
+        let mut b = Baseline::new(&cache_with_values(&vals));
+        // Duplicates and out-of-range counts must be handled (clamped)
+        // exactly as the scalar path clamps them.
+        let draws = [1usize, 2, 3, 7, 20, 20, 149, 200, 0];
+        b.expected_many(&draws);
+        for &d in &draws {
+            assert_eq!(
+                a.expected_single(d).to_bits(),
+                b.expected_single(d).to_bits(),
+                "draws={d}"
+            );
+        }
+    }
+
+    #[test]
+    fn values_at_times_matches_scalar_bitwise() {
+        let inf = f64::INFINITY;
+        let vals: Vec<f64> = (1..120)
+            .map(|i| if i % 5 == 0 { inf } else { (i as f64).sqrt() })
+            .collect();
+        let mut a = Baseline::new(&cache_with_values(&vals));
+        let mut b = Baseline::new(&cache_with_values(&vals));
+        let times: Vec<f64> = (0..40).map(|i| 0.3 + i as f64 * 2.1).collect();
+        let batch = b.values_at_times(&times);
+        for (k, &t) in times.iter().enumerate() {
+            assert_eq!(a.value_at_time(t).to_bits(), batch[k].to_bits(), "t={t}");
+        }
     }
 
     #[test]

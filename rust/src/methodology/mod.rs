@@ -22,7 +22,7 @@ pub mod curve;
 pub mod score;
 pub mod aggregate;
 
-pub use aggregate::{evaluate_algorithm, AggregateResult, SpaceEval};
+pub use aggregate::{evaluate_algorithm, score_campaign, AggregateResult, SpaceEval};
 pub use baseline::Baseline;
 pub use curve::PerformanceCurve;
 

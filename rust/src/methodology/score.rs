@@ -18,11 +18,13 @@ pub fn score_at(baseline_value: f64, algorithm_value: f64, optimum: f64) -> f64 
 /// Score curve for one search space: Eq. (2) applied at every sampling
 /// point of a performance curve.
 pub fn score_curve(baseline: &mut Baseline, curve: &PerformanceCurve) -> Vec<f64> {
-    curve
-        .times
+    // One batched baseline pass over the whole sampling grid
+    // (bit-identical to per-point value_at_time calls).
+    let baseline_values = baseline.values_at_times(&curve.times);
+    baseline_values
         .iter()
         .zip(&curve.values)
-        .map(|(&t, &v)| score_at(baseline.value_at_time(t), v, baseline.optimum))
+        .map(|(&b, &v)| score_at(b, v, baseline.optimum))
         .collect()
 }
 

@@ -349,9 +349,14 @@ fn cg(tuning: &mut Tuning<'_>, start: usize, start_val: f64, rng: &mut Rng) -> (
 }
 
 /// Powell: full line search along each dimension, cycled until no change.
+/// Every probe on a line shares one fixed base and consumes no RNG, so the
+/// whole line is served by a single batched evaluation and folded in
+/// order — bit-identical to the scalar probe loop, including mid-line
+/// budget truncation.
 fn powell(tuning: &mut Tuning<'_>, start: usize, start_val: f64) -> (usize, f64) {
     let dims: Vec<usize> = tuning.space().dims().to_vec();
     let (mut best, mut best_val) = (start, start_val);
+    let mut cand: Vec<usize> = Vec::new();
     let mut improved = true;
     while improved && !tuning.done() {
         improved = false;
@@ -361,22 +366,23 @@ fn powell(tuning: &mut Tuning<'_>, start: usize, start_val: f64) -> (usize, f64)
             }
             let base = best;
             let orig = tuning.space().encoded(base)[d];
+            cand.clear();
             for v_idx in 0..dims[d] as u16 {
-                if tuning.done() {
-                    break;
-                }
                 if v_idx == orig {
                     continue;
                 }
                 // One stride-delta per probe; no encoded-vector clones in
                 // the line search.
                 if let Some(i) = tuning.space().with_dim(base, d, v_idx) {
-                    let v = tuning.eval(i);
-                    if v < best_val {
-                        best = i;
-                        best_val = v;
-                        improved = true;
-                    }
+                    cand.push(i);
+                }
+            }
+            let vals = tuning.eval_batch(&cand);
+            for (k, &v) in vals.iter().enumerate() {
+                if v < best_val {
+                    best = cand[k];
+                    best_val = v;
+                    improved = true;
                 }
             }
         }

@@ -53,21 +53,25 @@ impl Optimizer for DifferentialEvolution {
         let dims: Vec<usize> = tuning.space().dims().to_vec();
         let ndim = dims.len();
         let n = tuning.space().len();
-        let mut pop: Vec<(usize, f64)> = Vec::new();
-        for idx in tuning.space().sample(rng, self.popsize.min(n)) {
+        let init = tuning.space().sample(rng, self.popsize.min(n));
+        let vals: Vec<f64> = tuning.eval_batch(&init).to_vec();
+        let mut pop: Vec<(usize, f64)> =
+            init.iter().zip(&vals).map(|(&i, &v)| (i, v)).collect();
+        if pop.len() < init.len() {
+            return;
+        }
+        // Reusable mutant-vector and trial-batch scratch.
+        let mut target = vec![0.0f64; ndim];
+        let mut cand: Vec<usize> = Vec::with_capacity(pop.len());
+        loop {
             if tuning.done() {
                 return;
             }
-            let v = tuning.eval(idx);
-            pop.push((idx, v));
-        }
-        // Reusable mutant-vector scratch: one allocation per run.
-        let mut target = vec![0.0f64; ndim];
-        loop {
+            // Generational sweep: every trial vector is built against the
+            // generation-start population snapshot, then the whole set is
+            // served by one batched evaluation; selection follows.
+            cand.clear();
             for i in 0..pop.len() {
-                if tuning.done() {
-                    return;
-                }
                 // Three distinct others.
                 let (a, b, c) = {
                     let mut picks = rng.sample_indices(pop.len(), 3.min(pop.len()));
@@ -78,7 +82,7 @@ impl Optimizer for DifferentialEvolution {
                 };
                 {
                     // Read parent genes straight from the SoA slices; the
-                    // borrows end before eval() needs &mut tuning.
+                    // borrows end before snap() needs the rng.
                     let space = tuning.space();
                     let ea = space.encoded(pop[a].0);
                     let eb = space.encoded(pop[b].0);
@@ -94,11 +98,16 @@ impl Optimizer for DifferentialEvolution {
                         };
                     }
                 }
-                let idx = tuning.space().snap(&target, rng);
-                let v = tuning.eval(idx);
+                cand.push(tuning.space().snap(&target, rng));
+            }
+            let vals: Vec<f64> = tuning.eval_batch(&cand).to_vec();
+            for (i, &v) in vals.iter().enumerate() {
                 if v < pop[i].1 {
-                    pop[i] = (idx, v);
+                    pop[i] = (cand[i], v);
                 }
+            }
+            if vals.len() < cand.len() {
+                return;
             }
         }
     }
@@ -399,33 +408,39 @@ impl Optimizer for Firefly {
         // positions + brightness (negated value: higher is better)
         let mut pos: Vec<Vec<f64>> = Vec::new();
         let mut val: Vec<f64> = Vec::new();
-        for idx in tuning.space().sample(rng, self.popsize.min(n)) {
-            if tuning.done() {
-                return;
-            }
-            let v = tuning.eval(idx);
+        let init = tuning.space().sample(rng, self.popsize.min(n));
+        let vals: Vec<f64> = tuning.eval_batch(&init).to_vec();
+        for (k, &v) in vals.iter().enumerate() {
             pos.push(
                 tuning
                     .space()
-                    .encoded(idx)
+                    .encoded(init[k])
                     .iter()
                     .map(|&e| e as f64)
                     .collect(),
             );
             val.push(v);
         }
+        if vals.len() < init.len() {
+            return;
+        }
         let m = pos.len();
-        // Reusable move-target scratch: one allocation per run.
+        // Reusable move-target and move-batch scratch.
         let mut target = vec![0.0f64; ndim];
+        let mut movers: Vec<usize> = Vec::new();
+        let mut cand: Vec<usize> = Vec::new();
         for _iter in 0..self.maxiter {
             if tuning.done() {
                 return;
             }
+            // Synchronous sweep: attractions are computed against the
+            // iteration-start brightness/position snapshot, every move is
+            // drawn, and the whole set is served by one batched
+            // evaluation before any firefly advances.
+            movers.clear();
+            cand.clear();
             for i in 0..m {
                 for j in 0..m {
-                    if tuning.done() {
-                        return;
-                    }
                     if !(val[j] < val[i]) {
                         continue; // j not brighter
                     }
@@ -440,14 +455,21 @@ impl Optimizer for Firefly {
                             + self.alpha * rng.range_f64(-1.0, 1.0) * dims[d] as f64 / 8.0;
                         target[d] = (pos[i][d] + step).clamp(0.0, (dims[d] - 1) as f64);
                     }
-                    let idx = tuning.space().snap(&target, rng);
-                    let v = tuning.eval(idx);
-                    if v < val[i] {
-                        val[i] = v;
-                        pos[i].clear();
-                        pos[i].extend(tuning.space().encoded(idx).iter().map(|&e| e as f64));
-                    }
+                    movers.push(i);
+                    cand.push(tuning.space().snap(&target, rng));
                 }
+            }
+            let vals: Vec<f64> = tuning.eval_batch(&cand).to_vec();
+            for (k, &v) in vals.iter().enumerate() {
+                let i = movers[k];
+                if v < val[i] {
+                    val[i] = v;
+                    pos[i].clear();
+                    pos[i].extend(tuning.space().encoded(cand[k]).iter().map(|&e| e as f64));
+                }
+            }
+            if vals.len() < cand.len() {
+                return;
             }
         }
     }

@@ -150,15 +150,17 @@ impl Optimizer for GeneticAlgorithm {
     }
 
     fn run(&self, tuning: &mut Tuning<'_>, rng: &mut Rng) {
-        // Initial population.
+        // Initial population, evaluated as one batch. Evaluations never
+        // consume optimizer RNG, so drawing the sample first and batching
+        // the evals replays the scalar per-eval loop bit for bit
+        // (including truncation when the budget expires mid-population).
         let n = tuning.space().len();
-        let mut pop: Vec<(usize, f64)> = Vec::with_capacity(self.popsize);
-        for idx in tuning.space().sample(rng, self.popsize.min(n)) {
-            if tuning.done() {
-                return;
-            }
-            let v = tuning.eval(idx);
-            pop.push((idx, v));
+        let init = tuning.space().sample(rng, self.popsize.min(n));
+        let vals = tuning.eval_batch(&init);
+        let mut pop: Vec<(usize, f64)> =
+            init.iter().zip(vals).map(|(&i, &v)| (i, v)).collect();
+        if pop.len() < init.len() {
+            return;
         }
         for _gen in 0..self.maxiter {
             if tuning.done() {
@@ -170,10 +172,12 @@ impl Optimizer for GeneticAlgorithm {
             let mut next: Vec<(usize, f64)> = Vec::with_capacity(self.popsize);
             // Elitism: carry the best through unchanged.
             next.push(pop[0]);
-            while next.len() < self.popsize {
-                if tuning.done() {
-                    return;
-                }
+            // Draw the whole generation's genetic operations up front in
+            // the scalar order (selection, crossover, mutation, snap per
+            // pushed child), then serve every child with one batch.
+            let target = self.popsize - 1;
+            let mut cand: Vec<usize> = Vec::with_capacity(target);
+            while cand.len() < target {
                 let pa = pop[rank_pick(pop.len(), rng)].0;
                 let pb = pop[rank_pick(pop.len(), rng)].0;
                 let ea = tuning.space().encoded(pa).to_vec();
@@ -182,13 +186,19 @@ impl Optimizer for GeneticAlgorithm {
                 self.mutate(&mut c1, tuning.space(), rng);
                 self.mutate(&mut c2, tuning.space(), rng);
                 for child in [c1, c2] {
-                    if next.len() >= self.popsize || tuning.done() {
+                    if cand.len() >= target {
                         break;
                     }
-                    let idx = self.materialize(&child, tuning.space(), rng);
-                    let v = tuning.eval(idx);
-                    next.push((idx, v));
+                    cand.push(self.materialize(&child, tuning.space(), rng));
                 }
+            }
+            let vals = tuning.eval_batch(&cand);
+            let consumed = vals.len();
+            for (k, &v) in vals.iter().enumerate() {
+                next.push((cand[k], v));
+            }
+            if consumed < cand.len() {
+                return;
             }
             pop = next;
         }

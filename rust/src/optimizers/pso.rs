@@ -4,7 +4,9 @@
 //!
 //! Particles live in the continuous encoded (value-index) space; positions
 //! are snapped to the nearest valid lattice point for evaluation. Velocity
-//! update is the canonical `w*v + c1*r1*(pbest - x) + c2*r2*(gbest - x)`.
+//! update is the canonical `w*v + c1*r1*(pbest - x) + c2*r2*(gbest - x)`,
+//! applied as a *synchronous* sweep: `gbest` is frozen per iteration and
+//! the whole swarm is evaluated with one [`Tuning::eval_batch`] call.
 
 use super::schema::{self, Descriptor, HyperSchema};
 use super::{HyperParams, Optimizer};
@@ -78,11 +80,13 @@ impl Optimizer for Pso {
         let mut gbest_pos: Vec<f64> = vec![0.0; ndim];
         let mut gbest_val = f64::INFINITY;
 
-        for idx in tuning.space().sample(rng, self.popsize.min(n)) {
-            if tuning.done() {
-                return;
-            }
-            let v = tuning.eval(idx);
+        // Initial swarm: one batched evaluation of the sample, then the
+        // per-particle velocity draws in the scalar order (evaluations
+        // consume no optimizer RNG, so the stream is unchanged).
+        let init = tuning.space().sample(rng, self.popsize.min(n));
+        let vals: Vec<f64> = tuning.eval_batch(&init).to_vec();
+        for (k, &v) in vals.iter().enumerate() {
+            let idx = init[k];
             let pos: Vec<f64> = tuning
                 .space()
                 .encoded(idx)
@@ -104,15 +108,19 @@ impl Optimizer for Pso {
                 vel,
             });
         }
+        if vals.len() < init.len() {
+            return;
+        }
 
         for _iter in 0..self.maxiter {
             if tuning.done() {
                 return;
             }
+            // Synchronous sweep: gbest is frozen for the iteration, every
+            // particle's velocity/position update and snap is drawn, and
+            // the whole swarm is served by one batched evaluation.
+            let mut cand: Vec<usize> = Vec::with_capacity(particles.len());
             for p in particles.iter_mut() {
-                if tuning.done() {
-                    return;
-                }
                 for d in 0..ndim {
                     let r1 = rng.next_f64();
                     let r2 = rng.next_f64();
@@ -124,8 +132,11 @@ impl Optimizer for Pso {
                     p.vel[d] = p.vel[d].clamp(-vmax, vmax);
                     p.pos[d] = (p.pos[d] + p.vel[d]).clamp(0.0, (dims[d] - 1) as f64);
                 }
-                let idx = tuning.space().snap(&p.pos, rng);
-                let v = tuning.eval(idx);
+                cand.push(tuning.space().snap(&p.pos, rng));
+            }
+            let vals: Vec<f64> = tuning.eval_batch(&cand).to_vec();
+            for (k, &v) in vals.iter().enumerate() {
+                let p = &mut particles[k];
                 if v < p.best_val {
                     p.best_val = v;
                     p.best_pos.copy_from_slice(&p.pos);
@@ -133,8 +144,12 @@ impl Optimizer for Pso {
                 if v < gbest_val {
                     gbest_val = v;
                     gbest_pos.clear();
-                    gbest_pos.extend(tuning.space().encoded(idx).iter().map(|&e| e as f64));
+                    gbest_pos
+                        .extend(tuning.space().encoded(cand[k]).iter().map(|&e| e as f64));
                 }
+            }
+            if vals.len() < cand.len() {
+                return;
             }
         }
     }

@@ -1,0 +1,365 @@
+//! Cross-PR benchmark trajectory (`tunetuner bench-trend`).
+//!
+//! Every PR's CI archives a `BENCH_<pr>.json` snapshot (see
+//! `benches/bench_main.rs`). This module reads the accumulated artifacts,
+//! renders the per-group trajectory across PRs, and flags groups whose
+//! mean time regressed past a threshold relative to the previous
+//! snapshot — the perf gate that keeps the replay stack honest.
+//!
+//! Only files named `BENCH_<digits>.json` participate (the numeric suffix
+//! is the PR number and orders the trajectory); ad-hoc artifacts like
+//! `BENCH_executor.json` or the working `BENCH.json` are ignored. Ratios
+//! are computed per bench name over the *intersection* of names between
+//! two consecutive snapshots, then combined per group as a geometric
+//! mean, so adding or removing benches never fakes a speedup or a
+//! regression. Snapshots should be compared like-for-like (CI compares
+//! smoke runs against smoke runs); a mixed-mode trajectory is rendered
+//! but flagged in the header.
+
+use crate::error::{Context, Result};
+use crate::util::json::{self, Json};
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+
+/// One parsed `BENCH_<pr>.json` artifact.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    /// PR number parsed from the filename suffix.
+    pub pr: u64,
+    pub path: PathBuf,
+    /// Smoke-mode run (CI) rather than a full sampling pass.
+    pub smoke: bool,
+    /// Bench name → mean seconds (finite, positive entries only).
+    pub means: BTreeMap<String, f64>,
+}
+
+/// One group's change between two consecutive snapshots.
+#[derive(Clone, Debug)]
+pub struct GroupDelta {
+    pub group: String,
+    pub from_pr: u64,
+    pub to_pr: u64,
+    /// Bench names present in both snapshots (the comparison basis).
+    pub common: usize,
+    /// Geometric-mean `mean_s` ratio (to / from) over the common names;
+    /// 1.0 = flat, above 1.0 = slower.
+    pub ratio: f64,
+}
+
+impl GroupDelta {
+    /// Regressed past `threshold_frac` (0.25 = 25% slower)?
+    pub fn regressed(&self, threshold_frac: f64) -> bool {
+        self.common > 0 && self.ratio > 1.0 + threshold_frac
+    }
+}
+
+/// The group of a bench name: the prefix before the first '/'.
+pub fn group_of(name: &str) -> &str {
+    name.split('/').next().unwrap_or(name)
+}
+
+/// Parse a PR number out of a `BENCH_<digits>.json` filename.
+pub fn pr_number(file_name: &str) -> Option<u64> {
+    let digits = file_name.strip_prefix("BENCH_")?.strip_suffix(".json")?;
+    if digits.is_empty() || !digits.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    digits.parse().ok()
+}
+
+/// Parse one snapshot artifact.
+pub fn parse_snapshot(pr: u64, path: &Path) -> Result<Snapshot> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let j = json::parse(&text)
+        .with_context(|| format!("parsing {}", path.display()))?;
+    if j.get("schema").and_then(Json::as_str) != Some("tunetuner-bench") {
+        crate::bail!("{}: not a tunetuner-bench artifact", path.display());
+    }
+    let mut means = BTreeMap::new();
+    for b in j.get("benches").and_then(Json::as_arr).unwrap_or(&[]) {
+        if let (Some(name), Some(mean_s)) = (
+            b.get("name").and_then(Json::as_str),
+            b.get("mean_s").and_then(Json::as_f64),
+        ) {
+            if mean_s.is_finite() && mean_s > 0.0 {
+                means.insert(name.to_string(), mean_s);
+            }
+        }
+    }
+    Ok(Snapshot {
+        pr,
+        path: path.to_path_buf(),
+        smoke: j.get("smoke").and_then(Json::as_bool).unwrap_or(false),
+        means,
+    })
+}
+
+/// Find and parse every `BENCH_<pr>.json` in `dir`, ordered by PR number.
+pub fn discover(dir: &Path) -> Result<Vec<Snapshot>> {
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("listing {}", dir.display()))?;
+    let mut found: Vec<(u64, PathBuf)> = Vec::new();
+    for entry in entries {
+        let entry = entry?;
+        if let Some(pr) = pr_number(&entry.file_name().to_string_lossy()) {
+            found.push((pr, entry.path()));
+        }
+    }
+    found.sort();
+    found
+        .into_iter()
+        .map(|(pr, path)| parse_snapshot(pr, &path))
+        .collect()
+}
+
+fn geomean(ratios: &[f64]) -> f64 {
+    if ratios.is_empty() {
+        return f64::NAN;
+    }
+    (ratios.iter().map(|r| r.ln()).sum::<f64>() / ratios.len() as f64).exp()
+}
+
+/// Per-group deltas between two consecutive snapshots, over the
+/// intersection of their bench names. Groups with no common names are
+/// omitted (nothing comparable — a brand-new group cannot regress).
+pub fn group_deltas(prev: &Snapshot, latest: &Snapshot) -> Vec<GroupDelta> {
+    let mut by_group: BTreeMap<&str, Vec<f64>> = BTreeMap::new();
+    for (name, &m_new) in &latest.means {
+        if let Some(&m_old) = prev.means.get(name) {
+            by_group.entry(group_of(name)).or_default().push(m_new / m_old);
+        }
+    }
+    by_group
+        .into_iter()
+        .map(|(group, ratios)| GroupDelta {
+            group: group.to_string(),
+            from_pr: prev.pr,
+            to_pr: latest.pr,
+            common: ratios.len(),
+            ratio: geomean(&ratios),
+        })
+        .collect()
+}
+
+/// The gate input: deltas between the last two snapshots (empty when
+/// fewer than two snapshots exist — nothing to compare, nothing fails).
+pub fn latest_deltas(snapshots: &[Snapshot]) -> Vec<GroupDelta> {
+    match snapshots {
+        [.., prev, latest] => group_deltas(prev, latest),
+        _ => Vec::new(),
+    }
+}
+
+fn fmt_secs(s: f64) -> String {
+    if !s.is_finite() {
+        "-".to_string()
+    } else if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.1}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.1}us", s * 1e6)
+    } else {
+        format!("{:.0}ns", s * 1e9)
+    }
+}
+
+/// Render the per-group trajectory table. Cells are the geometric mean of
+/// a group's bench times within one snapshot (absolute, informational);
+/// the `vs prev` column is the intersection-based [`GroupDelta`] ratio
+/// for the final snapshot pair, annotated when past `threshold_frac`.
+pub fn render(snapshots: &[Snapshot], threshold_frac: f64) -> String {
+    if snapshots.is_empty() {
+        return "bench-trend: no BENCH_<pr>.json snapshots found\n".to_string();
+    }
+    let mixed = snapshots.iter().any(|s| s.smoke) && snapshots.iter().any(|s| !s.smoke);
+    let mut out = format!(
+        "bench trend: {} snapshot(s), PR {} .. PR {}, threshold {:.0}%\n",
+        snapshots.len(),
+        snapshots[0].pr,
+        snapshots[snapshots.len() - 1].pr,
+        threshold_frac * 100.0
+    );
+    if mixed {
+        out.push_str("warning: mixing smoke and full snapshots — ratios are indicative only\n");
+    }
+    let groups: BTreeSet<&str> = snapshots
+        .iter()
+        .flat_map(|s| s.means.keys().map(|n| group_of(n)))
+        .collect();
+    let deltas = latest_deltas(snapshots);
+
+    out.push_str(&format!("{:<12}", "group"));
+    for s in snapshots {
+        let tag = format!("PR{}{}", s.pr, if s.smoke { "*" } else { "" });
+        out.push_str(&format!(" {tag:>10}"));
+    }
+    out.push_str(&format!(" {:>10}\n", "vs prev"));
+    for group in groups {
+        out.push_str(&format!("{group:<12}"));
+        for s in snapshots {
+            let times: Vec<f64> = s
+                .means
+                .iter()
+                .filter(|(n, _)| group_of(n) == group)
+                .map(|(_, &m)| m)
+                .collect();
+            let cell = if times.is_empty() {
+                "-".to_string()
+            } else {
+                fmt_secs(geomean(&times))
+            };
+            out.push_str(&format!(" {cell:>10}"));
+        }
+        match deltas.iter().find(|d| d.group == group) {
+            Some(d) => {
+                let mark = if d.regressed(threshold_frac) {
+                    "  REGRESSED"
+                } else {
+                    ""
+                };
+                out.push_str(&format!(" {:>9.2}x{mark}\n", d.ratio));
+            }
+            None => out.push_str(&format!(" {:>10}\n", "new")),
+        }
+    }
+    if snapshots.iter().any(|s| s.smoke) {
+        out.push_str("(* = smoke-mode snapshot)\n");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_snapshot(dir: &Path, name: &str, smoke: bool, benches: &[(&str, f64)]) {
+        let rows: Vec<String> = benches
+            .iter()
+            .map(|(n, m)| {
+                format!(
+                    "{{\"name\":\"{n}\",\"group\":\"{}\",\"mean_s\":{m},\
+                     \"stddev_frac\":0.01,\"iters\":5,\"items_per_s\":null}}",
+                    group_of(n)
+                )
+            })
+            .collect();
+        let body = format!(
+            "{{\"schema\":\"tunetuner-bench\",\"schema_version\":1,\
+             \"smoke\":{smoke},\"filter\":null,\"generated_unix\":1.0,\
+             \"benches\":[{}]}}",
+            rows.join(",")
+        );
+        std::fs::write(dir.join(name), body).unwrap();
+    }
+
+    fn fixture_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "tt_bench_trend_{}_{tag}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn pr_number_parses_only_numeric_suffixes() {
+        assert_eq!(pr_number("BENCH_6.json"), Some(6));
+        assert_eq!(pr_number("BENCH_42.json"), Some(42));
+        assert_eq!(pr_number("BENCH_executor.json"), None);
+        assert_eq!(pr_number("BENCH.json"), None);
+        assert_eq!(pr_number("BENCH_.json"), None);
+        assert_eq!(pr_number("BENCH_6.json.bak"), None);
+    }
+
+    #[test]
+    fn discover_orders_by_pr_and_skips_nonnumeric() {
+        let dir = fixture_dir("discover");
+        write_snapshot(&dir, "BENCH_5.json", true, &[("sim/a", 1e-3)]);
+        write_snapshot(&dir, "BENCH_4.json", true, &[("sim/a", 1e-3)]);
+        write_snapshot(&dir, "BENCH_executor.json", true, &[("executor/x", 1e-3)]);
+        write_snapshot(&dir, "BENCH.json", true, &[("sim/a", 1e-3)]);
+        let snaps = discover(&dir).unwrap();
+        assert_eq!(snaps.iter().map(|s| s.pr).collect::<Vec<_>>(), vec![4, 5]);
+        assert!(snaps[0].smoke);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The self-test the CI gate runs: an injected synthetic regression
+    /// must be flagged, and the healthy prefix must not be.
+    #[test]
+    fn injected_regression_is_flagged() {
+        let dir = fixture_dir("gate");
+        write_snapshot(
+            &dir,
+            "BENCH_4.json",
+            true,
+            &[("sim/a", 1.0e-3), ("sim/b", 2.0e-3), ("cache/x", 5.0e-4)],
+        );
+        write_snapshot(
+            &dir,
+            "BENCH_5.json",
+            true,
+            &[("sim/a", 1.02e-3), ("sim/b", 1.9e-3), ("cache/x", 5.1e-4)],
+        );
+        // PR 6: sim/a 2x slower — the sim group regresses; cache stays
+        // flat; a brand-new group cannot regress.
+        write_snapshot(
+            &dir,
+            "BENCH_6.json",
+            true,
+            &[
+                ("sim/a", 2.04e-3),
+                ("sim/b", 1.9e-3),
+                ("cache/x", 5.1e-4),
+                ("fresh/y", 1.0e-3),
+            ],
+        );
+        let snaps = discover(&dir).unwrap();
+        assert_eq!(snaps.len(), 3);
+
+        // Healthy pair: nothing past 25%.
+        let healthy = group_deltas(&snaps[0], &snaps[1]);
+        assert!(healthy.iter().all(|d| !d.regressed(0.25)), "{healthy:?}");
+
+        // Latest pair: exactly the sim group regresses.
+        let deltas = latest_deltas(&snaps);
+        let bad: Vec<&GroupDelta> =
+            deltas.iter().filter(|d| d.regressed(0.25)).collect();
+        assert_eq!(bad.len(), 1, "{deltas:?}");
+        assert_eq!(bad[0].group, "sim");
+        assert_eq!(bad[0].common, 2);
+        // geomean(2.0, 1.0) = sqrt(2).
+        assert!((bad[0].ratio - 2.0f64.sqrt()).abs() < 1e-9);
+        // cache is flat; the new group is absent from the deltas.
+        assert!(deltas.iter().any(|d| d.group == "cache" && !d.regressed(0.25)));
+        assert!(!deltas.iter().any(|d| d.group == "fresh"));
+
+        let rendered = render(&snaps, 0.25);
+        assert!(rendered.contains("REGRESSED"), "{rendered}");
+        assert!(rendered.contains("sim"), "{rendered}");
+        assert!(rendered.contains("new"), "{rendered}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn single_snapshot_has_no_gate_input() {
+        let dir = fixture_dir("single");
+        write_snapshot(&dir, "BENCH_6.json", false, &[("sim/a", 1e-3)]);
+        let snaps = discover(&dir).unwrap();
+        assert!(latest_deltas(&snaps).is_empty());
+        let rendered = render(&snaps, 0.25);
+        assert!(rendered.contains("PR 6"), "{rendered}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_foreign_schema() {
+        let dir = fixture_dir("schema");
+        std::fs::write(dir.join("BENCH_9.json"), "{\"schema\":\"other\"}").unwrap();
+        assert!(discover(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -3,10 +3,12 @@
 //! form to stdout, so `tunetuner experiment figN` output is directly
 //! comparable to the paper's figure.
 
+use crate::error::Result;
 use crate::util::plot::{self, Series};
 use crate::util::table::Table;
-use crate::error::Result;
 use std::path::{Path, PathBuf};
+
+pub mod bench_trend;
 
 /// A sink for experiment outputs.
 pub struct Report {

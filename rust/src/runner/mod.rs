@@ -17,6 +17,33 @@
 //! [`TuningScratch`] — a campaign's spaces×repeats jobs reuse one scratch
 //! per executor worker instead of allocating and zeroing megabytes per
 //! run.
+//!
+//! ## Batched evaluation
+//!
+//! Population optimizers propose whole candidate sets per generation;
+//! [`Tuning::eval_batch`] serves them with one seen-bitset probe per
+//! proposal and a single [`Runner::evaluate_batch_lite`] gather over the
+//! deduplicated fresh configurations (for the simulation runner: a tight
+//! indexed loop over the columnar `SimTable`). The semantics are defined
+//! to be *exactly* those of the scalar loop
+//! `for &i in idxs { if done() { break; } eval(i); }`:
+//!
+//! * **Dedup** — a config already evaluated (in this run or earlier in
+//!   the same batch) is a revisit: it costs only the cached overhead and
+//!   is served from the value cache, never re-gathered.
+//! * **Partial batches** — budget and cutoff checks run per proposal in
+//!   commit order; when the clock or a cap expires mid-batch, the tail
+//!   is discarded and only the consumed prefix appears in the trace (and
+//!   in the returned value slice). Unconsumed fresh configs have their
+//!   optimistically set seen-bits rolled back.
+//! * **Cost accounting** — the gather itself does no budget or runner
+//!   accounting; the consumed prefix is reported to
+//!   [`Runner::batch_committed`] in commit order, so clocks and lookup
+//!   counters stay bit-identical to a scalar `evaluate_lite` sequence.
+//!   (For *live* runners using the default scalar-loop gather, configs
+//!   past a mid-batch clock expiry are still executed and then
+//!   discarded — a divergence that can only occur on the final batch of
+//!   a run and never changes the trace.)
 
 pub mod live;
 pub mod sim;
@@ -66,6 +93,32 @@ pub trait Runner: Send {
         let r = self.evaluate(config_idx);
         (r.value, r.total_cost())
     }
+
+    /// Batched fast path: evaluate every index in `idxs`, filling `out`
+    /// (cleared first) with `(value, total_cost)` pairs in order. Called
+    /// by [`Tuning::eval_batch`] with the deduplicated fresh configs of
+    /// one proposal batch, already capped at the remaining unique-eval
+    /// allowance. Implementations must do no budget accounting here —
+    /// the tuning clock can expire mid-batch, discarding the tail; the
+    /// consumed prefix is reported to [`Runner::batch_committed`]. The
+    /// default is a scalar `evaluate_lite` loop, correct for any runner
+    /// whose per-call accounting lives in `evaluate`/`evaluate_lite`
+    /// (the discarded tail then only wastes work, never trace fidelity).
+    fn evaluate_batch_lite(&mut self, idxs: &[usize], out: &mut Vec<(f64, f64)>) {
+        out.clear();
+        out.reserve(idxs.len());
+        for &i in idxs {
+            out.push(self.evaluate_lite(i));
+        }
+    }
+
+    /// Accounting hook: the consumed prefix of the pairs produced by the
+    /// preceding [`Runner::evaluate_batch_lite`] call, in commit order.
+    /// Runners that override the gather to skip per-call accounting (the
+    /// simulation runner) fold their clock/lookup counters here so the
+    /// batched path stays bit-identical to a scalar `evaluate_lite`
+    /// sequence. Default: no-op (the default gather already accounted).
+    fn batch_committed(&mut self, _pairs: &[(f64, f64)]) {}
 }
 
 /// One point in a tuning trace.
@@ -174,6 +227,15 @@ pub struct TuningScratch {
     seen: Vec<u64>,
     cached_values: Vec<f64>,
     points: Vec<TracePoint>,
+    /// Batch-path buffers (see [`Tuning::eval_batch`]): deduplicated
+    /// fresh configs of the current batch, their gathered
+    /// `(value, total_cost)` pairs, the per-proposal classification
+    /// (rank into `batch_fresh`, `u32::MAX` = revisit), and the returned
+    /// value slice. Capacity persists across pooled runs like the rest.
+    batch_fresh: Vec<usize>,
+    batch_pairs: Vec<(f64, f64)>,
+    batch_class: Vec<u32>,
+    batch_values: Vec<f64>,
 }
 
 impl TuningScratch {
@@ -191,6 +253,10 @@ impl TuningScratch {
             self.cached_values.resize(space_len, 0.0);
         }
         self.points.clear();
+        self.batch_fresh.clear();
+        self.batch_pairs.clear();
+        self.batch_class.clear();
+        self.batch_values.clear();
     }
 
     /// Run `f` with this thread's pooled scratch. Executor workers are
@@ -227,6 +293,15 @@ impl Scratch<'_> {
     }
 }
 
+/// One probe into the seen-bitset: the word slot and the bit mask for
+/// `idx`. Callers test `*slot & bit`, then set (`*slot |= bit`) or roll
+/// back (`*slot &= !bit`) on the *same* slot — one indexed access per
+/// proposal, shared by the scalar and batch paths.
+#[inline]
+fn seen_slot(seen: &mut [u64], idx: usize) -> (&mut u64, u64) {
+    (&mut seen[idx >> 6], 1u64 << (idx & 63))
+}
+
 /// A budget-tracked tuning session over a runner: the interface the
 /// optimizers program against.
 pub struct Tuning<'a> {
@@ -250,6 +325,9 @@ pub struct Tuning<'a> {
     cached_overhead: f64,
     /// Size of the search space (tuning is done once it is exhausted).
     space_len: usize,
+    /// Test/bench hook: route [`Tuning::eval_batch`] through a scalar
+    /// [`Tuning::eval`] loop instead of the gather fast path.
+    scalar_batch_fallback: bool,
 }
 
 impl<'a> Tuning<'a> {
@@ -292,7 +370,17 @@ impl<'a> Tuning<'a> {
             // by Budget::max_proposals and the space-exhaustion check.
             cached_overhead: 0.0,
             space_len,
+            scalar_batch_fallback: false,
         }
+    }
+
+    /// Route [`Tuning::eval_batch`] through a scalar [`Tuning::eval`]
+    /// loop instead of the single-gather fast path. The two are pinned
+    /// bitwise-identical (values, trace, clocks, runner accounting), so
+    /// this exists only as the reference side of equivalence tests and
+    /// the `tuning/batch_vs_scalar` bench.
+    pub fn set_scalar_batch_fallback(&mut self, on: bool) {
+        self.scalar_batch_fallback = on;
     }
 
     pub fn space(&self) -> &SearchSpace {
@@ -334,8 +422,10 @@ impl<'a> Tuning<'a> {
             ..
         } = self;
         let s = scratch.get();
-        let (word, bit) = (config_idx >> 6, 1u64 << (config_idx & 63));
-        if s.seen[word] & bit != 0 {
+        // One bitset probe per proposal: the slot is reused for the set
+        // on the fresh path instead of re-indexing the word.
+        let (slot, bit) = seen_slot(&mut s.seen, config_idx);
+        if *slot & bit != 0 {
             // Revisit: the value already went through the running-best
             // fold when first evaluated.
             let v = s.cached_values[config_idx];
@@ -349,11 +439,11 @@ impl<'a> Tuning<'a> {
             });
             return v;
         }
+        *slot |= bit;
         let (value, cost) = runner.evaluate_lite(config_idx);
         *elapsed += cost;
         *unique_evals += 1;
         *proposals += 1;
-        s.seen[word] |= bit;
         s.cached_values[config_idx] = value;
         if value < *best {
             *best = value;
@@ -365,6 +455,140 @@ impl<'a> Tuning<'a> {
             cached: false,
         });
         value
+    }
+
+    /// Evaluate a whole proposal batch; returns the values of the
+    /// *consumed prefix* (scratch-backed, allocation-free on the steady
+    /// state). Semantics are exactly those of the scalar loop
+    /// `for &i in idxs { if self.done() { break; } self.eval(i); }` —
+    /// same trace points, same clocks, same runner accounting, same
+    /// budget-expiry truncation — but the fresh configurations are
+    /// served by one [`Runner::evaluate_batch_lite`] gather instead of
+    /// per-call dispatch. See the module docs for the full contract.
+    pub fn eval_batch(&mut self, idxs: &[usize]) -> &[f64] {
+        if self.scalar_batch_fallback {
+            return self.eval_batch_scalar(idxs);
+        }
+        let Tuning {
+            runner,
+            budget,
+            elapsed,
+            unique_evals,
+            proposals,
+            best,
+            scratch,
+            cached_overhead,
+            space_len,
+            ..
+        } = self;
+        let s = scratch.get();
+        s.batch_fresh.clear();
+        s.batch_class.clear();
+        s.batch_values.clear();
+
+        // Phase A: one seen-bitset probe per proposal. First occurrences
+        // of unseen configs get their bit set optimistically, so
+        // in-batch duplicates classify as revisits exactly as the scalar
+        // loop would see them; bits of fresh configs the budget ends up
+        // not consuming are rolled back after the commit.
+        for &idx in idxs {
+            let (slot, bit) = seen_slot(&mut s.seen, idx);
+            if *slot & bit != 0 {
+                s.batch_class.push(u32::MAX);
+            } else {
+                *slot |= bit;
+                s.batch_class.push(s.batch_fresh.len() as u32);
+                s.batch_fresh.push(idx);
+            }
+        }
+
+        // Phase B: one gather over the surviving ranks, capped at the
+        // remaining unique-eval allowance (the commit below can never
+        // consume a fresh pair past that cap; clock and proposal caps
+        // are checked per item in commit order).
+        let allowance = budget
+            .max_unique_evals
+            .min(*space_len)
+            .saturating_sub(*unique_evals);
+        let gathered = s.batch_fresh.len().min(allowance);
+        runner.evaluate_batch_lite(&s.batch_fresh[..gathered], &mut s.batch_pairs);
+
+        // Phase C: ordered commit with the scalar path's exact budget
+        // semantics — stop before the first proposal at which done()
+        // holds (inlined here: self is destructured).
+        let mut consumed_fresh = 0usize;
+        for (k, &idx) in idxs.iter().enumerate() {
+            let done = *elapsed >= budget.max_seconds
+                || *unique_evals >= budget.max_unique_evals
+                || *proposals >= budget.max_proposals
+                || *unique_evals >= *space_len;
+            if done {
+                break;
+            }
+            let class = s.batch_class[k];
+            if class == u32::MAX {
+                let v = s.cached_values[idx];
+                *elapsed += *cached_overhead;
+                *proposals += 1;
+                s.points.push(TracePoint {
+                    config: idx,
+                    value: v,
+                    clock: *elapsed,
+                    cached: true,
+                });
+                s.batch_values.push(v);
+            } else {
+                debug_assert_eq!(class as usize, consumed_fresh, "fresh commits in order");
+                let (value, cost) = s.batch_pairs[class as usize];
+                *elapsed += cost;
+                *unique_evals += 1;
+                *proposals += 1;
+                s.cached_values[idx] = value;
+                if value < *best {
+                    *best = value;
+                }
+                s.points.push(TracePoint {
+                    config: idx,
+                    value,
+                    clock: *elapsed,
+                    cached: false,
+                });
+                s.batch_values.push(value);
+                consumed_fresh = class as usize + 1;
+            }
+        }
+        // Roll back the optimistic bits of fresh configs the budget did
+        // not consume, so a later proposal of the same config is a real
+        // evaluation again.
+        for &idx in &s.batch_fresh[consumed_fresh..] {
+            let (slot, bit) = seen_slot(&mut s.seen, idx);
+            *slot &= !bit;
+        }
+        runner.batch_committed(&s.batch_pairs[..consumed_fresh]);
+        &s.batch_values
+    }
+
+    /// The scalar reference side of [`Tuning::eval_batch`]: a plain
+    /// `eval` loop with the same truncation and return contract.
+    fn eval_batch_scalar(&mut self, idxs: &[usize]) -> &[f64] {
+        let mut consumed = 0usize;
+        for &i in idxs {
+            if self.done() {
+                break;
+            }
+            self.eval(i);
+            consumed += 1;
+        }
+        let TuningScratch {
+            batch_values,
+            cached_values,
+            ..
+        } = self.scratch.get();
+        batch_values.clear();
+        for &i in &idxs[..consumed] {
+            batch_values.push(cached_values[i]);
+        }
+        batch_values
     }
 
     /// Current best value (INFINITY if nothing valid yet). O(1): the
@@ -578,6 +802,108 @@ mod tests {
                 assert_eq!(a.cached, b.cached);
             }
         }
+    }
+
+    fn assert_traces_bitwise(a: &Trace, b: &Trace) {
+        assert_eq!(a.points.len(), b.points.len());
+        assert_eq!(a.unique_evals, b.unique_evals);
+        assert_eq!(a.elapsed.to_bits(), b.elapsed.to_bits());
+        for (p, q) in a.points.iter().zip(&b.points) {
+            assert_eq!(p.config, q.config);
+            assert_eq!(p.value.to_bits(), q.value.to_bits());
+            assert_eq!(p.clock.to_bits(), q.clock.to_bits());
+            assert_eq!(p.cached, q.cached);
+        }
+    }
+
+    /// The gather fast path must be bit-identical to the scalar fallback
+    /// across fresh configs, cross-batch revisits, in-batch duplicates,
+    /// and empty batches — values, traces, clocks, runner accounting.
+    #[test]
+    fn eval_batch_matches_scalar_loop_bitwise() {
+        let mut rb = sim_runner_with_invalids();
+        let mut rs = sim_runner_with_invalids();
+        let n = rb.space().len();
+        let batches: Vec<Vec<usize>> = vec![
+            (0..8).map(|i| (i * 3) % n).collect(),
+            vec![5, 5, 7, 5, 1, 1],
+            (0..12).map(|i| (i * 7 + 2) % n).collect(),
+            vec![],
+            (0..6).map(|i| (i * 11 + 4) % n).collect(),
+        ];
+        let mut tb = Tuning::new(&mut rb, Budget::evals(1000));
+        let mut ts = Tuning::new(&mut rs, Budget::evals(1000));
+        ts.set_scalar_batch_fallback(true);
+        for batch in &batches {
+            let vb: Vec<f64> = tb.eval_batch(batch).to_vec();
+            let vs: Vec<f64> = ts.eval_batch(batch).to_vec();
+            assert_eq!(vb.len(), vs.len(), "batch {batch:?}");
+            for (a, b) in vb.iter().zip(&vs) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            assert_eq!(tb.best_value().to_bits(), ts.best_value().to_bits());
+            assert_eq!(tb.elapsed().to_bits(), ts.elapsed().to_bits());
+        }
+        assert_traces_bitwise(&tb.finish(), &ts.finish());
+        assert_eq!(rb.lookups, rs.lookups);
+        assert_eq!(
+            rb.simulated_elapsed.to_bits(),
+            rs.simulated_elapsed.to_bits()
+        );
+    }
+
+    /// A batch larger than the remaining eval allowance consumes exactly
+    /// the prefix, and the gather itself is capped (no wasted lookups).
+    #[test]
+    fn eval_batch_truncates_on_eval_budget() {
+        let mut r = sim_runner_with_invalids();
+        let mut t = Tuning::new(&mut r, Budget::evals(5));
+        let batch: Vec<usize> = (0..9).map(|i| i * 2).collect();
+        let vals = t.eval_batch(&batch).to_vec();
+        assert_eq!(vals.len(), 5);
+        assert!(t.done());
+        assert!(t.eval_batch(&[1, 3]).is_empty(), "done batch is a no-op");
+        let trace = t.finish();
+        assert_eq!(trace.unique_evals, 5);
+        assert_eq!(trace.points.len(), 5);
+        assert_eq!(r.lookups, 5, "gather must be capped at the allowance");
+    }
+
+    /// When the proposal cap cuts a batch, configs past the cut were
+    /// gathered optimistically but never consumed: their seen-bits must
+    /// roll back so a later direct `eval` treats them as fresh, exactly
+    /// as the scalar loop (which never saw them) would.
+    #[test]
+    fn eval_batch_rolls_back_unconsumed_seen_bits() {
+        let mut r = sim_runner_with_invalids();
+        let mut t = Tuning::new(&mut r, Budget::evals(100).with_proposal_cap(3));
+        let vals = t.eval_batch(&[0, 3, 6, 12]).to_vec();
+        assert_eq!(vals.len(), 3);
+        t.eval(12);
+        let trace = t.finish();
+        assert_eq!(trace.points.len(), 4);
+        assert!(
+            !trace.points[3].cached,
+            "rolled-back config must evaluate fresh"
+        );
+        assert_eq!(trace.unique_evals, 4);
+    }
+
+    /// A simulated-clock budget expiring mid-batch truncates at exactly
+    /// the same proposal as the scalar loop, bit for bit.
+    #[test]
+    fn eval_batch_time_budget_truncates_like_scalar() {
+        let mut rb = sim_runner_with_invalids();
+        let mut rs = sim_runner_with_invalids();
+        let mut tb = Tuning::new(&mut rb, Budget::seconds(3.5));
+        let mut ts = Tuning::new(&mut rs, Budget::seconds(3.5));
+        ts.set_scalar_batch_fallback(true);
+        let batch: Vec<usize> = (0..10).collect();
+        let vb = tb.eval_batch(&batch).to_vec();
+        let vs = ts.eval_batch(&batch).to_vec();
+        assert_eq!(vb.len(), vs.len());
+        assert!(vb.len() < batch.len(), "budget must truncate mid-batch");
+        assert_traces_bitwise(&tb.finish(), &ts.finish());
     }
 
     /// The thread-local pool hands back the same buffers across calls and

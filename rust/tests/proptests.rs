@@ -363,6 +363,168 @@ fn prop_t4b_and_json_load_paths_replay_identical_traces() {
     }
 }
 
+/// Build a synthetic brute-force cache over `space` with a rugged value
+/// landscape, mixed validity, and varied per-config costs.
+fn synthetic_cache(
+    space: &tunetuner::searchspace::SearchSpace,
+    rng: &mut Rng,
+    invalid_frac: f64,
+) -> tunetuner::dataset::cache::CacheData {
+    use tunetuner::dataset::cache::{CacheData, ConfigRecord};
+    let records: Vec<ConfigRecord> = (0..space.len())
+        .map(|i| {
+            let valid = !rng.chance(invalid_frac);
+            let v = if valid {
+                1.0 + ((i as f64 * 0.7919).sin() * 0.5 + 0.5)
+            } else {
+                f64::INFINITY
+            };
+            ConfigRecord {
+                key: space.key(i),
+                value: v,
+                observations: if valid { vec![v] } else { Vec::new() },
+                compile_time: 0.5 + (i % 7) as f64 * 0.3,
+                valid,
+            }
+        })
+        .collect();
+    CacheData::new(
+        "prop",
+        "x",
+        "",
+        0,
+        1,
+        0.0,
+        space.params.iter().map(|p| p.name.clone()).collect(),
+        records,
+    )
+}
+
+fn assert_traces_bitwise_eq(a: &tunetuner::runner::Trace, b: &tunetuner::runner::Trace, ctx: &str) {
+    assert_eq!(a.points.len(), b.points.len(), "{ctx}");
+    assert_eq!(a.unique_evals, b.unique_evals, "{ctx}");
+    assert_eq!(a.elapsed.to_bits(), b.elapsed.to_bits(), "{ctx}");
+    for (p, (x, y)) in a.points.iter().zip(&b.points).enumerate() {
+        assert_eq!(x.config, y.config, "{ctx} point {p}");
+        assert_eq!(x.value.to_bits(), y.value.to_bits(), "{ctx} point {p}");
+        assert_eq!(x.clock.to_bits(), y.clock.to_bits(), "{ctx} point {p}");
+        assert_eq!(x.cached, y.cached, "{ctx} point {p}");
+    }
+}
+
+/// `eval_batch` is exactly the scalar loop `for i in batch { if done()
+/// { break; } eval(i); }` — same returned values, same trace points,
+/// same clocks, same budget-expiry truncation — over random spaces,
+/// random budget kinds (unique-eval, wall-clock, proposal-cap) and
+/// revisit-heavy batch interleavings, empty batches included.
+#[test]
+fn prop_eval_batch_matches_scalar_loop_bitwise() {
+    use std::sync::Arc;
+    use tunetuner::runner::{Budget, SimulationRunner, Tuning};
+
+    let mut rng = Rng::new(0xBA7C);
+    for case in 0..20usize {
+        let space = Arc::new(random_space(&mut rng));
+        let n = space.len();
+        let cache = Arc::new(synthetic_cache(&space, &mut rng, 0.15));
+
+        // Random batch plan: mixed sizes, skewed toward a small index
+        // pool so in-batch duplicates and cross-batch revisits are dense.
+        let batches: Vec<Vec<usize>> = (0..8)
+            .map(|_| {
+                let len = rng.below(2 * n.min(40) + 1);
+                (0..len)
+                    .map(|_| {
+                        if rng.chance(0.4) {
+                            rng.below(1 + n / 3)
+                        } else {
+                            rng.below(n)
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        let budget = match rng.below(3) {
+            0 => Budget::evals(1 + rng.below(n)),
+            1 => Budget::seconds(rng.range_f64(0.5, 30.0)),
+            _ => Budget::evals(usize::MAX).with_proposal_cap(1 + rng.below(60)),
+        };
+
+        let mut sim_b =
+            SimulationRunner::new_unchecked(Arc::clone(&space), Arc::clone(&cache));
+        let mut batch = Tuning::new(&mut sim_b, budget);
+        let mut sim_s =
+            SimulationRunner::new_unchecked(Arc::clone(&space), Arc::clone(&cache));
+        let mut scalar = Tuning::new(&mut sim_s, budget);
+
+        for (bi, idxs) in batches.iter().enumerate() {
+            let got: Vec<f64> = batch.eval_batch(idxs).to_vec();
+            let mut want = Vec::new();
+            for &i in idxs {
+                if scalar.done() {
+                    break;
+                }
+                want.push(scalar.eval(i));
+            }
+            assert_eq!(got.len(), want.len(), "case {case} batch {bi}");
+            for (k, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "case {case} batch {bi} item {k}");
+            }
+            assert_eq!(batch.done(), scalar.done(), "case {case} batch {bi}");
+            assert_eq!(
+                batch.best_value().to_bits(),
+                scalar.best_value().to_bits(),
+                "case {case} batch {bi}"
+            );
+        }
+        // A direct scalar eval after the batches sees identical state
+        // (exercises the seen-bit rollback after truncated batches).
+        if !batch.done() {
+            let a = batch.eval(case % n);
+            let b = scalar.eval(case % n);
+            assert_eq!(a.to_bits(), b.to_bits(), "case {case} post-eval");
+        }
+        assert_traces_bitwise_eq(
+            &batch.finish(),
+            &scalar.finish(),
+            &format!("case {case}"),
+        );
+    }
+}
+
+/// Whole-run equivalence for the batched population optimizers: with the
+/// same seed, a run whose batches take the gather fast path is bitwise
+/// identical to one routed through the scalar per-eval fallback.
+#[test]
+fn prop_population_optimizer_batch_equals_scalar_fallback() {
+    use std::sync::Arc;
+    use tunetuner::runner::{Budget, SimulationRunner, Tuning};
+
+    let mut rng = Rng::new(0x6A50);
+    for case in 0..6u64 {
+        let space = Arc::new(random_space(&mut rng));
+        let cache = Arc::new(synthetic_cache(&space, &mut rng, 0.1));
+        let budget = 10 + rng.below(50);
+        for name in ["genetic_algorithm", "pso", "differential_evolution", "firefly"] {
+            let run = |fallback: bool| {
+                let mut sim = SimulationRunner::new_unchecked(
+                    Arc::clone(&space),
+                    Arc::clone(&cache),
+                );
+                let mut tuning = Tuning::new(&mut sim, Budget::evals(budget));
+                tuning.set_scalar_batch_fallback(fallback);
+                let opt = optimizers::create(name, &HyperParams::new()).unwrap();
+                let mut orng = Rng::new(case * 97 + 13);
+                opt.run(&mut tuning, &mut orng);
+                tuning.finish()
+            };
+            let fast = run(false);
+            let slow = run(true);
+            assert_traces_bitwise_eq(&fast, &slow, &format!("case {case} {name}"));
+        }
+    }
+}
+
 /// The GA crossover operators preserve per-gene provenance: every child
 /// gene comes from one of the two parents.
 #[test]
