@@ -277,6 +277,104 @@ fn main() {
         });
     }
 
+    // ---- space: constrained compressed-rank spaces (PR 7) ----------------------
+    // Synthetic spacegen spaces past the kernel scale: 128x128x64 = 2^20
+    // Cartesian ranks at ~1% validity, served by the compressed sampled-
+    // select index with the flat buffer elided, benched head-to-head
+    // against the bitset index on the *same* space (the PR 7 acceptance
+    // gate: compressed index_of within 2x of the bitset path). The full
+    // (non-smoke) pass adds a 512^3 = 1.3e8-rank hash-family space — the
+    // regime the bitset cannot represent at all.
+    let constrained_names = "space/constrained_build/mixed-1M \
+         space/constrained_index_of/compressed-10k space/constrained_index_of/bitset-10k \
+         space/constrained_neighbors/compressed-10k space/constrained_snap/compressed-10k \
+         space/constrained_build/hash-134M space/constrained_index_of/compressed-134M-10k";
+    let wants_constrained = b
+        .filter
+        .as_ref()
+        .map(|f| {
+            f.split(',')
+                .any(|alt| !alt.is_empty() && constrained_names.contains(alt))
+        })
+        .unwrap_or(true);
+    if wants_constrained {
+        use tunetuner::searchspace::{
+            BuildOptions, ConstraintFamily, FlatPolicy, IndexKind, Neighborhood, SpaceGenSpec,
+        };
+        let spec = SpaceGenSpec::new(vec![128, 128, 64], 0.01, ConstraintFamily::Mixed, 7);
+        b.run("space/constrained_build/mixed-1M", || {
+            spec.build().unwrap().len()
+        });
+        let compressed = spec
+            .build_with(BuildOptions {
+                index: IndexKind::Compressed,
+                flat: FlatPolicy::Elide,
+            })
+            .unwrap();
+        let bitset = spec
+            .build_with(BuildOptions {
+                index: IndexKind::Bitset,
+                flat: FlatPolicy::Materialize,
+            })
+            .unwrap();
+        for (name, sp) in [
+            ("space/constrained_index_of/compressed-10k", &compressed),
+            ("space/constrained_index_of/bitset-10k", &bitset),
+        ] {
+            let n = sp.len();
+            b.throughput(name, 10_000, || {
+                let mut acc = 0usize;
+                for i in 0..10_000usize {
+                    let idx = (i * 2654435761) % n;
+                    acc += sp.index_of_rank(sp.rank_of(idx)).unwrap();
+                }
+                std::hint::black_box(acc);
+            });
+        }
+        {
+            let n = compressed.len();
+            b.throughput("space/constrained_neighbors/compressed-10k", 10_000, || {
+                let mut rng = Rng::new(7);
+                let mut cur = 0usize;
+                for _ in 0..10_000usize {
+                    cur = compressed.random_neighbor(cur, Neighborhood::Hamming, &mut rng);
+                }
+                std::hint::black_box(cur % n);
+            });
+            b.throughput("space/constrained_snap/compressed-10k", 10_000, || {
+                let mut rng = Rng::new(9);
+                let dims = compressed.dims().to_vec();
+                let mut target: Vec<f64> = dims.iter().map(|&d| d as f64 / 2.0).collect();
+                let mut acc = 0usize;
+                for i in 0..10_000usize {
+                    let d = i % dims.len();
+                    target[d] = (i % dims[d].max(1)) as f64 + 0.4;
+                    acc += compressed.snap(&target, &mut rng);
+                }
+                std::hint::black_box(acc);
+            });
+        }
+        if !b.smoke {
+            // 512^3 = 134M Cartesian ranks at ~1% validity: enumeration
+            // bandwidth + compressed lookups where no bitset fits.
+            let big_spec =
+                SpaceGenSpec::new(vec![512, 512, 512], 0.01, ConstraintFamily::Hash, 7);
+            b.run("space/constrained_build/hash-134M", || {
+                big_spec.build().unwrap().len()
+            });
+            let big = big_spec.build().unwrap();
+            let n = big.len();
+            b.throughput("space/constrained_index_of/compressed-134M-10k", 10_000, || {
+                let mut acc = 0usize;
+                for i in 0..10_000usize {
+                    let idx = (i * 2654435761) % n;
+                    acc += big.index_of_rank(big.rank_of(idx)).unwrap();
+                }
+                std::hint::black_box(acc);
+            });
+        }
+    }
+
     // ---- engine: batched device-model evaluation --------------------------------
     let kernel = kernels::kernel_by_name("gemm").unwrap();
     let feats = kernel.all_features();

@@ -18,6 +18,9 @@
 //! * [`hub`] — the on-disk hub layout: build, save, load, and index the
 //!   24 (kernel × device) search spaces. Serves the `.t4b` sidecar when
 //!   it is fingerprint-fresh and writes one after any JSON parse.
+//! * [`synth`] — deterministic synthetic caches for generated
+//!   ([`crate::searchspace::spacegen`]) spaces, so simulated campaigns run
+//!   at million-config scale without brute-forcing real kernels.
 
 pub mod cache;
 pub mod simtable;
@@ -25,7 +28,9 @@ pub mod t4b;
 pub mod bruteforce;
 pub mod t1;
 pub mod hub;
+pub mod synth;
 
 pub use cache::{CacheData, ConfigRecord};
 pub use hub::Hub;
 pub use simtable::SimTable;
+pub use synth::synth_cache;

@@ -1,0 +1,164 @@
+//! Synthetic brute-force caches for generated search spaces.
+//!
+//! [`crate::searchspace::spacegen`] manufactures constrained spaces at
+//! arbitrary scale; this module gives them a deterministic performance
+//! landscape so a full simulated tuning campaign — SimTable build, batch
+//! gathers, budget accounting — runs against million-config spaces
+//! without ever brute-forcing real kernels. The landscape is a smooth
+//! multi-dimensional bowl (so optimizers have gradient structure to
+//! exploit) times hash-derived multiplicative ruggedness (so it is not
+//! trivially convex), and every record is a pure function of
+//! `(seed, rank)` — rebuilding the same spec yields bit-identical caches.
+
+use super::cache::{CacheData, ConfigRecord};
+use crate::searchspace::SearchSpace;
+use crate::util::rng::mix64;
+
+/// Uniform f64 in [0, 1) from a hash.
+#[inline]
+fn unit(h: u64) -> f64 {
+    (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Build a synthetic cache index-aligned with `space`.
+///
+/// * `seed` — landscape seed; values are functions of `(seed, rank)`.
+/// * `observations_per_config` — raw observations per valid record.
+/// * `invalid_fraction` — approximate fraction of configs that fail to
+///   launch (recorded with `value = INFINITY`, compile time only).
+pub fn synth_cache(
+    space: &SearchSpace,
+    seed: u64,
+    observations_per_config: usize,
+    invalid_fraction: f64,
+) -> CacheData {
+    let ndim = space.dims().len();
+    // Per-dimension bowl centers, fixed by the seed.
+    let centers: Vec<f64> = (0..ndim)
+        .map(|d| unit(mix64(seed ^ 0x63656e, d as u64)))
+        .collect();
+    let mut records = Vec::with_capacity(space.len());
+    let mut bruteforce_seconds = 0.0;
+    for i in 0..space.len() {
+        let rank = space.rank_of(i);
+        let h = mix64(seed, rank);
+        let compile_time = 0.2 + 2.0 * unit(mix64(h, 2));
+        let valid = unit(mix64(h, 1)) >= invalid_fraction;
+        let rec = if valid {
+            // Smooth bowl over normalized digits + a mild per-config
+            // multiplicative ruggedness term.
+            let mut bowl = 0.0;
+            for (d, &c) in centers.iter().enumerate() {
+                let card = space.dims()[d];
+                let x = if card > 1 {
+                    space.digit(i, d) as f64 / (card - 1) as f64
+                } else {
+                    0.5
+                };
+                bowl += (x - c) * (x - c);
+            }
+            let rugged = 1.0 + 0.3 * (unit(mix64(h, 3)) - 0.5);
+            let center = 0.05 * (1.0 + bowl) * rugged;
+            let observations: Vec<f64> = (0..observations_per_config)
+                .map(|j| center * (0.95 + 0.1 * unit(mix64(h, 100 + j as u64))))
+                .collect();
+            let value = observations.iter().sum::<f64>() / observations.len().max(1) as f64;
+            ConfigRecord {
+                key: space.key(i),
+                value,
+                observations,
+                compile_time,
+                valid: true,
+            }
+        } else {
+            ConfigRecord {
+                key: space.key(i),
+                value: f64::INFINITY,
+                observations: Vec::new(),
+                compile_time,
+                valid: false,
+            }
+        };
+        bruteforce_seconds += rec.total_cost(0.0);
+        records.push(rec);
+    }
+    CacheData::new(
+        space.name.clone(),
+        "synthetic-device",
+        "spacegen landscape",
+        seed,
+        observations_per_config,
+        bruteforce_seconds,
+        space.params.iter().map(|p| p.name.clone()).collect(),
+        records,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runner::{Budget, SimulationRunner, Tuning};
+    use crate::searchspace::spacegen::{ConstraintFamily, SpaceGenSpec};
+    use std::sync::Arc;
+
+    fn small_space() -> SearchSpace {
+        SpaceGenSpec::new(vec![16, 16, 8], 0.2, ConstraintFamily::Mixed, 5)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn deterministic_and_aligned() {
+        let space = small_space();
+        let a = synth_cache(&space, 9, 3, 0.05);
+        let b = synth_cache(&space, 9, 3, 0.05);
+        assert_eq!(a.records.len(), space.len());
+        a.verify_against(&space).unwrap();
+        for (ra, rb) in a.records.iter().zip(&b.records) {
+            assert_eq!(ra.value.to_bits(), rb.value.to_bits());
+            assert_eq!(ra.observations, rb.observations);
+            assert_eq!(ra.valid, rb.valid);
+        }
+        // A different seed gives a different landscape.
+        let c = synth_cache(&space, 10, 3, 0.05);
+        assert!(a
+            .records
+            .iter()
+            .zip(&c.records)
+            .any(|(x, y)| x.value.to_bits() != y.value.to_bits()));
+    }
+
+    #[test]
+    fn value_is_mean_of_observations_and_invalids_marked() {
+        let space = small_space();
+        let cache = synth_cache(&space, 3, 4, 0.25);
+        let mut invalid = 0usize;
+        for r in &cache.records {
+            if r.valid {
+                let mean = r.observations.iter().sum::<f64>() / r.observations.len() as f64;
+                assert_eq!(r.value.to_bits(), mean.to_bits());
+                assert_eq!(r.observations.len(), 4);
+            } else {
+                invalid += 1;
+                assert!(r.value.is_infinite());
+                assert!(r.observations.is_empty());
+            }
+        }
+        let frac = invalid as f64 / cache.records.len() as f64;
+        assert!((0.1..=0.4).contains(&frac), "invalid fraction {frac}");
+    }
+
+    #[test]
+    fn campaign_smoke_on_synthetic_cache() {
+        let space = Arc::new(small_space());
+        let cache = Arc::new(synth_cache(&space, 7, 3, 0.05));
+        let mut sim = SimulationRunner::new(Arc::clone(&space), cache).unwrap();
+        let mut tuning = Tuning::new(&mut sim, Budget::evals(64));
+        for i in 0..64 {
+            tuning.eval(i % space.len());
+        }
+        let trace = tuning.finish();
+        assert!(!trace.points.is_empty());
+        assert!(trace.points.iter().any(|p| p.value.is_finite()));
+    }
+}

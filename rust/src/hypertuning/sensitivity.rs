@@ -34,7 +34,7 @@ pub fn sensitivity(
         let mut groups: Vec<Vec<f64>> = vec![Vec::new(); param.cardinality()];
         let mut labels: Vec<usize> = Vec::with_capacity(scores.len());
         for r in &results.results {
-            let v = hp_space.encoded(r.config_idx)[d] as usize;
+            let v = hp_space.digit(r.config_idx, d) as usize;
             groups[v].push(r.score);
             labels.push(v);
         }

@@ -8,6 +8,7 @@
 //! tunetuner sweep [--json]
 //! tunetuner sensitivity <algo>
 //! tunetuner experiment <table2|table3|table4|fig2..fig9|all>
+//! tunetuner spacegen <AxBxC> [--validity F] [--family hash|product|mixed]
 //! tunetuner bench-trend [--dir D] [--threshold PCT] [--gate]
 //! ```
 //!
@@ -31,7 +32,9 @@ use tunetuner::optimizers;
 use tunetuner::optimizers::HyperParams;
 use tunetuner::report::bench_trend;
 use tunetuner::runtime::Engine;
-use tunetuner::searchspace::Value;
+use tunetuner::searchspace::{
+    BuildOptions, ConstraintFamily, FlatPolicy, IndexKind, SpaceGenSpec, Value,
+};
 use tunetuner::util::cli::Args;
 use tunetuner::util::log::{self, Level};
 use tunetuner::{log_info, log_warn};
@@ -85,6 +88,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("sweep") => cmd_sweep(args),
         Some("sensitivity") => cmd_sensitivity(args),
         Some("experiment") => cmd_experiment(args),
+        Some("spacegen") => cmd_spacegen(args),
         Some("bench-trend") => cmd_bench_trend(args),
         Some("help") | None => {
             print!("{HELP}");
@@ -110,6 +114,10 @@ subcommands:
       [--json]  print the tunetuner-sweep envelope instead of the report
   sensitivity <algo>        Kruskal-Wallis + mutual-information screen
   experiment <id>           regenerate a paper table/figure (or 'all')
+  spacegen <AxBxC>          build a synthetic constrained space (e.g. 4096x4096x64)
+      [--validity 0.01] [--family hash|product|mixed] [--gen-seed 7]
+      [--index auto|bitset|map|compressed] [--flat auto|materialize|elide]
+      [--campaign ALGO] [--evals 200]  run a simulated campaign on it
   bench-trend               cross-PR perf trajectory from BENCH_<pr>.json files
       [--dir .] [--threshold 25] [--gate]  (--gate: exit 1 on regression)
 
@@ -340,6 +348,85 @@ fn cmd_sensitivity(args: &Args) -> Result<()> {
         println!(
             "{:<18} {:>10.3} {:>10.4} {:>8.4}{flag}",
             s.param, s.h, s.p, s.mutual_information
+        );
+    }
+    Ok(())
+}
+
+fn cmd_spacegen(args: &Args) -> Result<()> {
+    let dims_str = args
+        .positional
+        .first()
+        .context("usage: spacegen <AxBxC dims>")?;
+    let spec = SpaceGenSpec::new(
+        SpaceGenSpec::parse_dims(dims_str)?,
+        args.opt_f64("validity", 0.01),
+        ConstraintFamily::parse(&args.opt_or("family", "hash"))?,
+        args.opt_u64("gen-seed", 7),
+    );
+    let index = match args.opt_or("index", "auto").as_str() {
+        "auto" => IndexKind::Auto,
+        "bitset" => IndexKind::Bitset,
+        "map" => IndexKind::Map,
+        "compressed" => IndexKind::Compressed,
+        other => bail!("unknown index kind {other:?} (auto|bitset|map|compressed)"),
+    };
+    let flat = match args.opt_or("flat", "auto").as_str() {
+        "auto" => FlatPolicy::Auto,
+        "materialize" => FlatPolicy::Materialize,
+        "elide" => FlatPolicy::Elide,
+        other => bail!("unknown flat policy {other:?} (auto|materialize|elide)"),
+    };
+    let t0 = std::time::Instant::now();
+    let space = spec.build_with(BuildOptions { index, flat })?;
+    let build_secs = t0.elapsed().as_secs_f64();
+    let cart = space.cartesian_size();
+    let stats = space.build_stats();
+    println!("space {}", space.name);
+    println!("  cartesian ranks:   {cart}");
+    println!(
+        "  valid configs:     {} ({:.4}% of cartesian)",
+        space.len(),
+        100.0 * space.len() as f64 / cart as f64
+    );
+    println!("  index kind:        {:?}", space.index_kind());
+    println!(
+        "  flat buffer:       {}",
+        if space.has_flat() { "materialized" } else { "elided" }
+    );
+    println!(
+        "  pruned (prefix):   {} configs, rejections by depth {:?}",
+        stats.pruned_configs, stats.prefix_rejections
+    );
+    println!("  build time:        {build_secs:.3}s");
+    if space.is_empty() {
+        return Ok(());
+    }
+
+    if let Some(algo) = args.opt("campaign") {
+        let seed = args.opt_u64("seed", 42);
+        let evals = args.opt_usize("evals", 200);
+        let hp = parse_hp(&args.opt_or("hp", ""));
+        let optimizer = optimizers::create(algo, &hp)?;
+        let space = Arc::new(space);
+        let cache = Arc::new(tunetuner::dataset::synth_cache(&space, spec.seed, 3, 0.02));
+        let mut sim =
+            tunetuner::runner::SimulationRunner::new(Arc::clone(&space), Arc::clone(&cache))?;
+        let t1 = std::time::Instant::now();
+        let mut tuning = tunetuner::runner::Tuning::new(
+            &mut sim,
+            tunetuner::runner::Budget::evals(evals.min(space.len())),
+        );
+        let mut rng = tunetuner::util::rng::Rng::new(seed);
+        optimizer.run(&mut tuning, &mut rng);
+        let trace = tuning.finish();
+        println!(
+            "campaign {algo} (seed {seed}, {} unique evals): best {:?} vs optimum {:.6} \
+             in {:.2}s wall-clock",
+            trace.unique_evals,
+            trace.best(),
+            cache.optimum(),
+            t1.elapsed().as_secs_f64()
         );
     }
     Ok(())

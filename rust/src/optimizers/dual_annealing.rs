@@ -141,7 +141,7 @@ fn heavy_tailed_jump(
     target: &mut Vec<f64>,
 ) -> usize {
     target.clear();
-    target.extend(space.encoded(from).iter().map(|&v| v as f64));
+    target.extend((0..dims.len()).map(|d| space.digit(from, d) as f64));
     let p_move = 0.3 + 0.5 * temp_frac;
     let mut moved = false;
     for (d, t) in target.iter_mut().enumerate() {
@@ -195,7 +195,7 @@ fn probe(
 ) -> Option<(usize, f64)> {
     let cand = {
         let space = tuning.space();
-        let next = space.encoded(base)[d] as i64 + delta;
+        let next = space.digit(base, d) as i64 + delta;
         if next < 0 || next >= space.dims()[d] as i64 {
             return None;
         }
@@ -263,12 +263,8 @@ fn lbfgsb(tuning: &mut Tuning<'_>, start: usize, start_val: f64, rng: &mut Rng) 
         if grad.iter().all(|&g| g == 0) {
             break;
         }
-        let target: Vec<f64> = tuning
-            .space()
-            .encoded(base)
-            .iter()
-            .zip(&grad)
-            .map(|(&e, &g)| e as f64 + g as f64)
+        let target: Vec<f64> = (0..ndim)
+            .map(|d| tuning.space().digit(base, d) as f64 + grad[d] as f64)
             .collect();
         let idx = tuning.space().snap(&target, rng);
         let v = tuning.eval(idx);
@@ -365,7 +361,7 @@ fn powell(tuning: &mut Tuning<'_>, start: usize, start_val: f64) -> (usize, f64)
                 break;
             }
             let base = best;
-            let orig = tuning.space().encoded(base)[d];
+            let orig = tuning.space().digit(base, d);
             cand.clear();
             for v_idx in 0..dims[d] as u16 {
                 if v_idx == orig {
@@ -418,18 +414,17 @@ fn nelder_mead(
         let ndims = tuning.space().dims().len();
         let mut centroid = vec![0.0f64; ndims];
         for (i, _) in &simplex[..simplex.len() - 1] {
-            for (c, &e) in centroid.iter_mut().zip(tuning.space().encoded(*i)) {
-                *c += e as f64;
+            for (d, c) in centroid.iter_mut().enumerate() {
+                *c += tuning.space().digit(*i, d) as f64;
             }
         }
         for c in centroid.iter_mut() {
             *c /= (simplex.len() - 1) as f64;
         }
-        let wenc = tuning.space().encoded(worst).to_vec();
         let reflected: Vec<f64> = centroid
             .iter()
-            .zip(&wenc)
-            .map(|(&c, &w)| 2.0 * c - w as f64)
+            .enumerate()
+            .map(|(d, &c)| 2.0 * c - tuning.space().digit(worst, d) as f64)
             .collect();
         let r_idx = tuning.space().snap(&reflected, rng);
         let r_val = tuning.eval(r_idx);
@@ -438,21 +433,17 @@ fn nelder_mead(
             simplex[last] = (r_idx, r_val);
         } else {
             // Shrink toward the best.
-            let best_enc: Vec<f64> = tuning
-                .space()
-                .encoded(simplex[0].0)
-                .iter()
-                .map(|&e| e as f64)
+            let best_enc: Vec<f64> = (0..ndims)
+                .map(|d| tuning.space().digit(simplex[0].0, d) as f64)
                 .collect();
             for item in simplex.iter_mut().skip(1) {
                 if tuning.done() {
                     break;
                 }
-                let enc = tuning.space().encoded(item.0).to_vec();
-                let target: Vec<f64> = enc
+                let target: Vec<f64> = best_enc
                     .iter()
-                    .zip(&best_enc)
-                    .map(|(&e, &b)| (e as f64 + b) / 2.0)
+                    .enumerate()
+                    .map(|(d, &b)| (tuning.space().digit(item.0, d) as f64 + b) / 2.0)
                     .collect();
                 let idx = tuning.space().snap(&target, rng);
                 let v = tuning.eval(idx);
@@ -526,7 +517,7 @@ fn trust_constr(
                 break;
             }
             target.clear();
-            target.extend(tuning.space().encoded(best).iter().map(|&e| e as f64));
+            target.extend((0..ndim).map(|d| tuning.space().digit(best, d) as f64));
             let mut remaining = radius;
             while remaining >= 1.0 {
                 let d = rng.below(ndim);

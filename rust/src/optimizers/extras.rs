@@ -81,20 +81,20 @@ impl Optimizer for DifferentialEvolution {
                     (picks[0], picks[1], picks[2])
                 };
                 {
-                    // Read parent genes straight from the SoA slices; the
-                    // borrows end before snap() needs the rng.
+                    // Read parent genes digit-by-digit (works whether or
+                    // not the flat buffer is materialized); the borrow
+                    // ends before snap() needs the rng.
                     let space = tuning.space();
-                    let ea = space.encoded(pop[a].0);
-                    let eb = space.encoded(pop[b].0);
-                    let ec = space.encoded(pop[c].0);
-                    let ex = space.encoded(pop[i].0);
+                    let (ia, ib, ic, ix) = (pop[a].0, pop[b].0, pop[c].0, pop[i].0);
                     let jrand = rng.below(ndim);
                     for d in 0..ndim {
                         target[d] = if d == jrand || rng.chance(self.cr) {
-                            (ea[d] as f64 + self.f * (eb[d] as f64 - ec[d] as f64))
+                            (space.digit(ia, d) as f64
+                                + self.f
+                                    * (space.digit(ib, d) as f64 - space.digit(ic, d) as f64))
                                 .clamp(0.0, (dims[d] - 1) as f64)
                         } else {
-                            ex[d] as f64
+                            space.digit(ix, d) as f64
                         };
                     }
                 }
@@ -171,7 +171,7 @@ impl Optimizer for BasinHopping {
             }
             // Kick: perturb `perturbation` dimensions.
             target.clear();
-            target.extend(tuning.space().encoded(current).iter().map(|&e| e as f64));
+            target.extend((0..dims.len()).map(|d| tuning.space().digit(current, d) as f64));
             for _ in 0..self.perturbation {
                 let d = rng.below(dims.len());
                 target[d] = rng.below(dims[d]) as f64;
@@ -338,7 +338,8 @@ impl Optimizer for GreedyIls {
                 }
                 // Kick the incumbent.
                 target.clear();
-                target.extend(tuning.space().encoded(incumbent).iter().map(|&e| e as f64));
+                target
+                    .extend((0..dims.len()).map(|d| tuning.space().digit(incumbent, d) as f64));
                 for _ in 0..self.perturbation {
                     let d = rng.below(dims.len());
                     target[d] = rng.below(dims[d]) as f64;
@@ -411,14 +412,7 @@ impl Optimizer for Firefly {
         let init = tuning.space().sample(rng, self.popsize.min(n));
         let vals: Vec<f64> = tuning.eval_batch(&init).to_vec();
         for (k, &v) in vals.iter().enumerate() {
-            pos.push(
-                tuning
-                    .space()
-                    .encoded(init[k])
-                    .iter()
-                    .map(|&e| e as f64)
-                    .collect(),
-            );
+            pos.push((0..ndim).map(|d| tuning.space().digit(init[k], d) as f64).collect());
             val.push(v);
         }
         if vals.len() < init.len() {
@@ -465,7 +459,7 @@ impl Optimizer for Firefly {
                 if v < val[i] {
                     val[i] = v;
                     pos[i].clear();
-                    pos[i].extend(tuning.space().encoded(cand[k]).iter().map(|&e| e as f64));
+                    pos[i].extend((0..ndim).map(|d| tuning.space().digit(cand[k], d) as f64));
                 }
             }
             if vals.len() < cand.len() {

@@ -180,8 +180,8 @@ impl Optimizer for GeneticAlgorithm {
             while cand.len() < target {
                 let pa = pop[rank_pick(pop.len(), rng)].0;
                 let pb = pop[rank_pick(pop.len(), rng)].0;
-                let ea = tuning.space().encoded(pa).to_vec();
-                let eb = tuning.space().encoded(pb).to_vec();
+                let ea = tuning.space().encoded_vec(pa);
+                let eb = tuning.space().encoded_vec(pb);
                 let (mut c1, mut c2) = self.crossover.apply(&ea, &eb, rng);
                 self.mutate(&mut c1, tuning.space(), rng);
                 self.mutate(&mut c2, tuning.space(), rng);

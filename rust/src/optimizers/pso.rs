@@ -87,12 +87,8 @@ impl Optimizer for Pso {
         let vals: Vec<f64> = tuning.eval_batch(&init).to_vec();
         for (k, &v) in vals.iter().enumerate() {
             let idx = init[k];
-            let pos: Vec<f64> = tuning
-                .space()
-                .encoded(idx)
-                .iter()
-                .map(|&e| e as f64)
-                .collect();
+            let pos: Vec<f64> =
+                (0..ndim).map(|d| tuning.space().digit(idx, d) as f64).collect();
             let vel: Vec<f64> = dims
                 .iter()
                 .map(|&d| rng.range_f64(-1.0, 1.0) * (d as f64 / 4.0))
@@ -144,8 +140,7 @@ impl Optimizer for Pso {
                 if v < gbest_val {
                     gbest_val = v;
                     gbest_pos.clear();
-                    gbest_pos
-                        .extend(tuning.space().encoded(cand[k]).iter().map(|&e| e as f64));
+                    gbest_pos.extend((0..ndim).map(|d| tuning.space().digit(cand[k], d) as f64));
                 }
             }
             if vals.len() < cand.len() {

@@ -26,7 +26,7 @@
 //! the Python constraints in Kernel Tuner specs); mixed or fractional
 //! operands fall back to f64.
 
-use super::param::Value;
+use super::param::{TunableParam, Value};
 use crate::bail;
 use crate::error::{Context, Result};
 use std::collections::HashMap;
@@ -69,9 +69,39 @@ impl Constraint {
         }
     }
 
-    /// Evaluate with a HashMap environment (convenience).
+    /// Evaluate with a HashMap environment (convenience). Kept as the
+    /// slow-path *reference oracle* for tests; the enumeration hot path
+    /// goes through [`Constraint::compile`] + [`CompiledConstraint`].
     pub fn eval_map(&self, env: &HashMap<String, Value>) -> Result<bool> {
         self.eval(&|name| env.get(name).cloned())
+    }
+
+    /// Lower this constraint to typed stack bytecode bound to `params`
+    /// (dimension order = parameter order). Every variable is resolved to
+    /// a per-dimension slot at compile time, and each slot carries the
+    /// parameter's value grid pre-converted to immediate [`CVal`]s
+    /// (strings interned, so equality is id equality) — evaluation then
+    /// does no name lookups, no `Value` clones and no allocation beyond
+    /// the caller-provided stack scratch.
+    ///
+    /// Errors when a variable names no parameter in `params`.
+    pub fn compile(&self, params: &[TunableParam]) -> Result<CompiledConstraint> {
+        let mut c = Compiler {
+            params,
+            source: &self.source,
+            ops: Vec::new(),
+            slots: Vec::new(),
+            slot_of_dim: HashMap::new(),
+            interned: HashMap::new(),
+            max_dim: 0,
+        };
+        c.emit(&self.expr)?;
+        Ok(CompiledConstraint {
+            source: self.source.clone(),
+            max_dim: c.max_dim,
+            ops: c.ops,
+            slots: c.slots,
+        })
     }
 }
 
@@ -434,6 +464,391 @@ fn truthy(n: Num) -> Result<bool> {
     })
 }
 
+// ---------------------------------------------------------------------------
+// Compiled bytecode
+//
+// The AST interpreter above allocates an env lookup per variable and clones
+// `Value`s on every evaluation — fine for a handful of calls, ruinous when
+// enumerating 10^8+ Cartesian ranks. `CompiledConstraint` is the hot-path
+// form: a flat op tape over `Copy` immediates, with variables pre-resolved
+// to (dimension, value-table) slots so an evaluation is one `u16` digit
+// read and one table index per variable. Semantics are pinned bit-for-bit
+// to the interpreter by the oracle tests below.
+
+/// Immediate value on the compiled evaluation stack. Strings are interned
+/// at compile time with content dedup, so `Str` id equality is exactly
+/// string equality.
+#[derive(Clone, Copy, Debug)]
+enum CVal {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(u32),
+}
+
+fn cval_f64(v: CVal) -> Result<f64> {
+    Ok(match v {
+        CVal::Int(i) => i as f64,
+        CVal::Float(x) => x,
+        CVal::Bool(b) => b as i64 as f64,
+        CVal::Str(_) => bail!("string used in numeric context"),
+    })
+}
+
+fn cval_truthy(v: CVal) -> Result<bool> {
+    Ok(match v {
+        CVal::Bool(b) => b,
+        CVal::Int(i) => i != 0,
+        CVal::Float(x) => x != 0.0,
+        CVal::Str(_) => bail!("string used as boolean"),
+    })
+}
+
+/// Binary operators of the compiled form.
+#[derive(Clone, Copy, Debug)]
+enum BOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Mod,
+    Eq,
+    Ne,
+    Lt,
+    Gt,
+    Le,
+    Ge,
+}
+
+impl BOp {
+    fn of(op: &str) -> Option<BOp> {
+        Some(match op {
+            "+" => BOp::Add,
+            "-" => BOp::Sub,
+            "*" => BOp::Mul,
+            "/" => BOp::Div,
+            "%" => BOp::Mod,
+            "==" => BOp::Eq,
+            "!=" => BOp::Ne,
+            "<" => BOp::Lt,
+            ">" => BOp::Gt,
+            "<=" => BOp::Le,
+            ">=" => BOp::Ge,
+            _ => return None,
+        })
+    }
+
+    fn symbol(self) -> &'static str {
+        match self {
+            BOp::Add => "+",
+            BOp::Sub => "-",
+            BOp::Mul => "*",
+            BOp::Div => "/",
+            BOp::Mod => "%",
+            BOp::Eq => "==",
+            BOp::Ne => "!=",
+            BOp::Lt => "<",
+            BOp::Gt => ">",
+            BOp::Le => "<=",
+            BOp::Ge => ">=",
+        }
+    }
+}
+
+/// One op of the compiled tape.
+#[derive(Clone, Copy, Debug)]
+enum COp {
+    /// Push an immediate.
+    Push(CVal),
+    /// Push the current value of slot `.0` (digit read + table index).
+    Load(u32),
+    /// Integer-preserving negation (interpreter `Unary("-")` semantics).
+    Neg,
+    /// Boolean negation with the interpreter's truthiness coercion.
+    Not,
+    /// Coerce top-of-stack to `Bool` via truthiness (errors on strings).
+    ToBool,
+    /// Short-circuit jump: top-of-stack is a Bool (always preceded by
+    /// `ToBool`); when it equals `cond`, jump to `to` *keeping* the Bool
+    /// as the result, otherwise pop it and fall through to the other arm.
+    JumpIf { cond: bool, to: u32 },
+    /// Binary operator (exact-i64 / f64-fallback triage as interpreted).
+    Bin(BOp),
+    Min,
+    Max,
+}
+
+/// Per-variable slot: the dimension it reads and the parameter's value
+/// grid pre-converted to immediates.
+#[derive(Clone, Debug)]
+struct Slot {
+    dim: usize,
+    values: Vec<CVal>,
+}
+
+/// Reusable evaluation stack for [`CompiledConstraint::eval_encoded`];
+/// one per build/evaluation loop, cleared on every call.
+#[derive(Default)]
+pub struct EvalScratch {
+    stack: Vec<CVal>,
+}
+
+/// A constraint lowered to typed stack bytecode over encoded `u16` digits.
+#[derive(Clone, Debug)]
+pub struct CompiledConstraint {
+    /// Source text (diagnostics only).
+    pub source: String,
+    /// Highest dimension index referenced: the constraint is fully bound
+    /// once the odometer has assigned dimensions `0..=max_dim` (0 for
+    /// constant constraints).
+    pub max_dim: usize,
+    ops: Vec<COp>,
+    slots: Vec<Slot>,
+}
+
+impl CompiledConstraint {
+    /// Evaluate against encoded digits: `digit(d)` returns the value
+    /// *index* of dimension `d` (only dimensions `<= max_dim` are read).
+    /// Result coercion matches [`Constraint::eval`] exactly.
+    pub fn eval_encoded(
+        &self,
+        mut digit: impl FnMut(usize) -> u16,
+        scratch: &mut EvalScratch,
+    ) -> Result<bool> {
+        let stack = &mut scratch.stack;
+        stack.clear();
+        let mut pc = 0usize;
+        while pc < self.ops.len() {
+            match self.ops[pc] {
+                COp::Push(v) => stack.push(v),
+                COp::Load(s) => {
+                    let slot = &self.slots[s as usize];
+                    stack.push(slot.values[digit(slot.dim) as usize]);
+                }
+                COp::Neg => {
+                    let v = stack.pop().expect("compiled stack underflow");
+                    stack.push(match v {
+                        CVal::Int(i) => CVal::Int(-i),
+                        other => CVal::Float(-cval_f64(other)?),
+                    });
+                }
+                COp::Not => {
+                    let v = stack.pop().expect("compiled stack underflow");
+                    stack.push(CVal::Bool(match v {
+                        CVal::Bool(b) => !b,
+                        CVal::Int(i) => i == 0,
+                        CVal::Float(x) => x == 0.0,
+                        CVal::Str(_) => bail!("! applied to string"),
+                    }));
+                }
+                COp::ToBool => {
+                    let v = stack.pop().expect("compiled stack underflow");
+                    stack.push(CVal::Bool(cval_truthy(v)?));
+                }
+                COp::JumpIf { cond, to } => {
+                    let CVal::Bool(b) = *stack.last().expect("compiled stack underflow") else {
+                        unreachable!("JumpIf over a non-Bool (compiler always emits ToBool first)")
+                    };
+                    if b == cond {
+                        pc = to as usize;
+                        continue;
+                    }
+                    stack.pop();
+                }
+                COp::Bin(op) => {
+                    let b = stack.pop().expect("compiled stack underflow");
+                    let a = stack.pop().expect("compiled stack underflow");
+                    stack.push(eval_bin(op, a, b)?);
+                }
+                COp::Min | COp::Max => {
+                    let b = stack.pop().expect("compiled stack underflow");
+                    let a = stack.pop().expect("compiled stack underflow");
+                    let is_min = matches!(self.ops[pc], COp::Min);
+                    stack.push(match (a, b) {
+                        (CVal::Int(x), CVal::Int(y)) => {
+                            CVal::Int(if is_min { x.min(y) } else { x.max(y) })
+                        }
+                        _ => {
+                            let (x, y) = (cval_f64(a)?, cval_f64(b)?);
+                            CVal::Float(if is_min { x.min(y) } else { x.max(y) })
+                        }
+                    });
+                }
+            }
+            pc += 1;
+        }
+        match stack.pop().expect("compiled stack underflow") {
+            CVal::Bool(b) => Ok(b),
+            CVal::Int(i) => Ok(i != 0),
+            CVal::Float(x) => Ok(x != 0.0),
+            CVal::Str(_) => bail!("constraint {:?} evaluated to a string", self.source),
+        }
+    }
+}
+
+/// Binary-op triage, mirroring the interpreter's `Expr::Binary` arm:
+/// string==string first, then exact i64, then the f64 fallback.
+fn eval_bin(op: BOp, a: CVal, b: CVal) -> Result<CVal> {
+    if let (CVal::Str(x), CVal::Str(y)) = (a, b) {
+        return Ok(match op {
+            BOp::Eq => CVal::Bool(x == y),
+            BOp::Ne => CVal::Bool(x != y),
+            _ => bail!("operator {} not defined on strings", op.symbol()),
+        });
+    }
+    if let (CVal::Int(x), CVal::Int(y)) = (a, b) {
+        return Ok(match op {
+            BOp::Add => CVal::Int(x.wrapping_add(y)),
+            BOp::Sub => CVal::Int(x.wrapping_sub(y)),
+            BOp::Mul => CVal::Int(x.wrapping_mul(y)),
+            BOp::Div => {
+                if y == 0 {
+                    bail!("division by zero");
+                }
+                CVal::Int(x / y)
+            }
+            BOp::Mod => {
+                if y == 0 {
+                    bail!("modulo by zero");
+                }
+                CVal::Int(x.rem_euclid(y))
+            }
+            BOp::Eq => CVal::Bool(x == y),
+            BOp::Ne => CVal::Bool(x != y),
+            BOp::Lt => CVal::Bool(x < y),
+            BOp::Gt => CVal::Bool(x > y),
+            BOp::Le => CVal::Bool(x <= y),
+            BOp::Ge => CVal::Bool(x >= y),
+        });
+    }
+    let x = cval_f64(a)?;
+    let y = cval_f64(b)?;
+    Ok(match op {
+        BOp::Add => CVal::Float(x + y),
+        BOp::Sub => CVal::Float(x - y),
+        BOp::Mul => CVal::Float(x * y),
+        BOp::Div => CVal::Float(x / y),
+        BOp::Mod => CVal::Float(x.rem_euclid(y)),
+        BOp::Eq => CVal::Bool(x == y),
+        BOp::Ne => CVal::Bool(x != y),
+        BOp::Lt => CVal::Bool(x < y),
+        BOp::Gt => CVal::Bool(x > y),
+        BOp::Le => CVal::Bool(x <= y),
+        BOp::Ge => CVal::Bool(x >= y),
+    })
+}
+
+struct Compiler<'a> {
+    params: &'a [TunableParam],
+    source: &'a str,
+    ops: Vec<COp>,
+    slots: Vec<Slot>,
+    slot_of_dim: HashMap<usize, u32>,
+    interned: HashMap<String, u32>,
+    max_dim: usize,
+}
+
+impl Compiler<'_> {
+    fn intern(&mut self, s: &str) -> u32 {
+        if let Some(&id) = self.interned.get(s) {
+            return id;
+        }
+        let id = self.interned.len() as u32;
+        self.interned.insert(s.to_string(), id);
+        id
+    }
+
+    fn slot(&mut self, name: &str) -> Result<u32> {
+        let dim = match self.params.iter().position(|p| p.name == name) {
+            Some(d) => d,
+            None => bail!(
+                "constraint {:?} references unknown parameter {name:?}",
+                self.source
+            ),
+        };
+        self.max_dim = self.max_dim.max(dim);
+        if let Some(&s) = self.slot_of_dim.get(&dim) {
+            return Ok(s);
+        }
+        let values = self.params[dim]
+            .values
+            .iter()
+            .map(|v| match v {
+                Value::Int(i) => CVal::Int(*i),
+                Value::Float(x) => CVal::Float(*x),
+                Value::Bool(b) => CVal::Bool(*b),
+                Value::Str(s) => CVal::Str(self.intern(s)),
+            })
+            .collect();
+        let s = self.slots.len() as u32;
+        self.slots.push(Slot { dim, values });
+        self.slot_of_dim.insert(dim, s);
+        Ok(s)
+    }
+
+    fn emit(&mut self, e: &Expr) -> Result<()> {
+        match e {
+            Expr::Int(i) => self.ops.push(COp::Push(CVal::Int(*i))),
+            Expr::Float(x) => self.ops.push(COp::Push(CVal::Float(*x))),
+            Expr::Str(s) => {
+                let id = self.intern(s);
+                self.ops.push(COp::Push(CVal::Str(id)));
+            }
+            Expr::Var(name) => {
+                let s = self.slot(name)?;
+                self.ops.push(COp::Load(s));
+            }
+            Expr::Unary("-", a) => {
+                self.emit(a)?;
+                self.ops.push(COp::Neg);
+            }
+            Expr::Unary("!", a) => {
+                self.emit(a)?;
+                self.ops.push(COp::Not);
+            }
+            Expr::Unary(op, _) => bail!("unknown unary {op}"),
+            Expr::Call(f, args) => {
+                self.emit(&args[0])?;
+                self.emit(&args[1])?;
+                match *f {
+                    "min" => self.ops.push(COp::Min),
+                    "max" => self.ops.push(COp::Max),
+                    other => bail!("unknown function {other}"),
+                }
+            }
+            Expr::Binary(op @ ("&&" | "||"), a, b) => {
+                // Short-circuit: coerce the left arm, keep it as the
+                // result when it decides the outcome, otherwise pop it
+                // and take the coerced right arm. Errors in the skipped
+                // arm are skipped too, exactly like the interpreter.
+                self.emit(a)?;
+                self.ops.push(COp::ToBool);
+                let patch = self.ops.len();
+                self.ops.push(COp::JumpIf {
+                    cond: *op == "||",
+                    to: 0,
+                });
+                self.emit(b)?;
+                self.ops.push(COp::ToBool);
+                let end = self.ops.len() as u32;
+                let COp::JumpIf { to, .. } = &mut self.ops[patch] else {
+                    unreachable!()
+                };
+                *to = end;
+            }
+            Expr::Binary(op, a, b) => {
+                self.emit(a)?;
+                self.emit(b)?;
+                match BOp::of(op) {
+                    Some(bop) => self.ops.push(COp::Bin(bop)),
+                    None => bail!("unknown operator {op}"),
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -525,5 +940,123 @@ mod tests {
                 ("tile", Value::Int(4)),
             ]))
             .unwrap());
+    }
+
+    // -- compiled bytecode vs interpreter oracle --------------------------
+
+    /// Assert the compiled form agrees with `eval_map` on the *entire*
+    /// cross product of `params` — Ok values bitwise, Err-ness matched.
+    fn assert_compiled_matches_oracle(src: &str, params: &[TunableParam]) {
+        let c = Constraint::parse(src).unwrap();
+        let cc = c.compile(params).unwrap();
+        let dims: Vec<usize> = params.iter().map(|p| p.cardinality()).collect();
+        let mut cursor = vec![0usize; dims.len()];
+        let mut scratch = EvalScratch::default();
+        loop {
+            let env: HashMap<String, Value> = params
+                .iter()
+                .zip(&cursor)
+                .map(|(p, &i)| (p.name.clone(), p.values[i].clone()))
+                .collect();
+            let oracle = c.eval_map(&env);
+            let got = cc.eval_encoded(|d| cursor[d] as u16, &mut scratch);
+            match (&oracle, &got) {
+                (Ok(a), Ok(b)) => assert_eq!(a, b, "{src} @ {cursor:?}"),
+                (Err(_), Err(_)) => {}
+                _ => panic!("divergence on {src} @ {cursor:?}: {oracle:?} vs {got:?}"),
+            }
+            // Odometer over the cross product.
+            let mut d = dims.len();
+            loop {
+                if d == 0 {
+                    return;
+                }
+                d -= 1;
+                cursor[d] += 1;
+                if cursor[d] < dims[d] {
+                    break;
+                }
+                cursor[d] = 0;
+            }
+        }
+    }
+
+    #[test]
+    fn compiled_matches_interpreter_on_kernel_style_constraints() {
+        let params = vec![
+            TunableParam::new("MWG", vec![16i64, 32, 48, 64]),
+            TunableParam::new("MDIMC", vec![8i64, 16, 32]),
+            TunableParam::new("VWM", vec![1i64, 2, 4]),
+        ];
+        assert_compiled_matches_oracle("MWG % (MDIMC * VWM) == 0", &params);
+        assert_compiled_matches_oracle(
+            "(MDIMC * VWM) % 32 == 0 || (MDIMC * VWM) % 64 == 0",
+            &params,
+        );
+        assert_compiled_matches_oracle("MWG * MDIMC <= 1024 && (MWG == 32 || MDIMC >= 16)", &params);
+        assert_compiled_matches_oracle("min(MWG, MDIMC) < max(VWM, 8)", &params);
+        assert_compiled_matches_oracle("!(MWG > 32) && -MDIMC < 0", &params);
+    }
+
+    #[test]
+    fn compiled_matches_interpreter_on_mixed_types_and_errors() {
+        let params = vec![
+            TunableParam::new("x", vec![0i64, 1, 2, 5]),
+            TunableParam::new("t", vec![0.0f64, 0.4, 0.5]),
+            TunableParam::new(
+                "method",
+                vec!["uniform".to_string(), "two_point".to_string()],
+            ),
+            TunableParam::new("pad", vec![false, true]),
+        ];
+        // Division/modulo by a zero-valued parameter: error parity.
+        assert_compiled_matches_oracle("8 % x == 0", &params);
+        assert_compiled_matches_oracle("8 / x >= 2", &params);
+        // Short-circuit guards must skip the erroring arm on both paths.
+        assert_compiled_matches_oracle("x == 0 || 8 / x >= 2", &params);
+        assert_compiled_matches_oracle("x != 0 && 8 % x == 0", &params);
+        // Float fallback + bool coercion.
+        assert_compiled_matches_oracle("t * 2.0 >= 1.0", &params);
+        assert_compiled_matches_oracle("pad + 1 == 2", &params);
+        assert_compiled_matches_oracle("pad == 1 || x == 1", &params);
+        // String equality (interned ids) and string-misuse errors.
+        assert_compiled_matches_oracle("method == 'uniform' || method == \"two_point\"", &params);
+        assert_compiled_matches_oracle("method != 'uniform'", &params);
+        assert_compiled_matches_oracle("method == 1", &params);
+        assert_compiled_matches_oracle("method + 1 == 2", &params);
+        assert_compiled_matches_oracle("!method", &params);
+        // Constant expressions bind at depth 0 and still agree.
+        assert_compiled_matches_oracle("2 + 3 * 4 == 14", &params);
+        assert_compiled_matches_oracle("True && !False", &params);
+    }
+
+    #[test]
+    fn compile_reports_max_dim_and_rejects_unknowns() {
+        let params = vec![
+            TunableParam::new("a", vec![1i64, 2]),
+            TunableParam::new("b", vec![1i64, 2]),
+            TunableParam::new("c", vec![1i64, 2]),
+        ];
+        let c = Constraint::parse("a + b <= 3").unwrap();
+        assert_eq!(c.compile(&params).unwrap().max_dim, 1);
+        let c = Constraint::parse("c > 0").unwrap();
+        assert_eq!(c.compile(&params).unwrap().max_dim, 2);
+        let c = Constraint::parse("1 == 1").unwrap();
+        assert_eq!(c.compile(&params).unwrap().max_dim, 0);
+        let c = Constraint::parse("nope == 1").unwrap();
+        assert!(c.compile(&params).is_err());
+    }
+
+    #[test]
+    fn compiled_string_interning_spans_literals_and_params() {
+        // The same text must compare equal whether it came from a literal
+        // or from two different parameters' value grids.
+        let params = vec![
+            TunableParam::new("m1", vec!["a".to_string(), "b".to_string()]),
+            TunableParam::new("m2", vec!["b".to_string(), "c".to_string()]),
+        ];
+        assert_compiled_matches_oracle("m1 == m2", &params);
+        assert_compiled_matches_oracle("m1 == 'b' && m2 == 'b'", &params);
+        assert_compiled_matches_oracle("m1 != 'a' || m2 != 'c'", &params);
     }
 }

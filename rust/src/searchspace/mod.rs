@@ -21,16 +21,28 @@
 //!   a single `u64` Cartesian rank `Σ enc[d] * strides[d]`. Moving one
 //!   dimension is one add/subtract of a stride — neighbor candidates and
 //!   local-search probes never materialize an encoded vector.
-//! * **Bitset rank/select.** Validity is a bitset over Cartesian ranks
-//!   with a per-64-bit-word popcount prefix. `index_of` = bit test +
-//!   `prefix[word] + popcnt(word & below)`: two array reads and a
-//!   popcount, no hashing, no allocation. Cartesian products beyond 2^26
-//!   fall back to a `u64 → usize` hash map (still allocation-free per
-//!   lookup). Memory: ≤ 8 MiB bits + 4 MiB prefix at the threshold.
-//! * **Memory layout.** All valid encoded configs live in one row-major
-//!   `Vec<u16>` SoA buffer (`flat`, stride = ndim) — the single source of
-//!   truth for decoding and the cache-friendly scan that `snap()` uses;
-//!   per-index ranks are a parallel `Vec<u64>`. There is no vec-of-vecs.
+//! * **Rank select.** Validity lookup (`index_of_rank`) is served by one
+//!   of three interchangeable indexes ([`space::IndexKind`]). Up to 2^26
+//!   Cartesian ranks, a bitset with a per-64-bit-word popcount prefix:
+//!   bit test + `prefix[word] + popcnt(word & below)` — two array reads
+//!   and a popcount (≤ 8 MiB bits + 4 MiB prefix at the threshold).
+//!   Beyond, a **compressed sampled-select** over the sorted valid ranks:
+//!   `rank >> shift` buckets of average occupancy ≤ 4 plus a tiny binary
+//!   search, with memory proportional to the *valid* count — there is no
+//!   Cartesian-size ceiling. A `u64 → usize` hash map remains as the
+//!   reference implementation. All three return identical indices.
+//! * **Memory layout.** Valid encoded configs live in one row-major
+//!   `Vec<u16>` SoA buffer (`flat`, stride = ndim) while small; past
+//!   [`space::FlatPolicy`]'s 64 MiB threshold the buffer is elided and
+//!   decode is stride-based off the packed rank (`digit`,
+//!   `encoded_into`); per-index ranks are a parallel `Vec<u64>`. There is
+//!   no vec-of-vecs.
+//! * **Compiled constraints.** Enumeration evaluates constraints through
+//!   [`constraint::CompiledConstraint`] — typed stack bytecode with
+//!   variables resolved to per-dimension slots over encoded digits — so
+//!   prefix pruning costs no name lookups or per-eval allocation;
+//!   per-depth pruning counters land in [`space::BuildStats`]. Synthetic
+//!   constrained spaces at any scale come from [`spacegen`].
 //!
 //! * **CSR neighbor graphs.** Each `(space, neighborhood)` pair lazily
 //!   builds a compressed-sparse-row adjacency on first use, after which
@@ -50,7 +62,9 @@
 pub mod param;
 pub mod constraint;
 pub mod space;
+pub mod spacegen;
 
-pub use constraint::Constraint;
+pub use constraint::{CompiledConstraint, Constraint, EvalScratch};
 pub use param::{TunableParam, Value};
-pub use space::{Neighborhood, SearchSpace};
+pub use space::{BuildOptions, BuildStats, FlatPolicy, IndexKind, Neighborhood, SearchSpace};
+pub use spacegen::{ConstraintFamily, SpaceGenSpec};

@@ -72,6 +72,11 @@ impl From<&str> for Value {
         Value::Str(v.to_string())
     }
 }
+impl From<String> for Value {
+    fn from(v: String) -> Self {
+        Value::Str(v)
+    }
+}
 impl From<bool> for Value {
     fn from(v: bool) -> Self {
         Value::Bool(v)

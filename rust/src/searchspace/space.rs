@@ -13,13 +13,27 @@
 //! (`strides[d] = Π dims[d+1..]`, so `rank = Σ enc[d] * strides[d]`).
 //! Because enumeration is lexicographic, ranks of valid configurations are
 //! strictly increasing, and the valid-config index is exactly the number
-//! of valid ranks below a given rank. Validity is stored as a bitset over
-//! Cartesian ranks with a per-word popcount prefix, so [`SearchSpace::index_of`]
-//! is two array reads plus one `popcnt` — no hashing, no allocation. For
-//! Cartesian products too large for a bitset, a `u64 → usize` hash map
-//! takes over (still allocation-free per lookup). Encoded configurations
-//! live in one row-major `Vec<u16>` (the SoA `flat` buffer), the single
-//! source of truth for decoding.
+//! of valid ranks below a given rank. Three interchangeable rank indexes
+//! serve that select ([`IndexKind`]): a bitset over Cartesian ranks with a
+//! per-word popcount prefix (two array reads plus one `popcnt`; memory
+//! proportional to the *Cartesian* size, so only worthwhile up to 2^26
+//! ranks), a `u64 → usize` hash map (reference/fallback), and the default
+//! past the bitset range — a **compressed sampled-select** over the sorted
+//! valid ranks (`rank >> shift` buckets of average occupancy ≤ 4, one
+//! shift plus a tiny binary search per lookup; memory proportional to the
+//! *valid* count, so there is no Cartesian-size ceiling at all). All three
+//! return identical indices; tuning traces are bitwise-equal across them.
+//!
+//! Encoded configurations live in one row-major `Vec<u16>` (the SoA
+//! `flat` buffer) while the space is small; above [`FlatPolicy`]'s
+//! threshold the buffer is elided and decode is stride-based from the
+//! packed rank ([`SearchSpace::digit`] / [`SearchSpace::encoded_into`]),
+//! halving resident memory on million-config constrained spaces.
+//!
+//! Constraints are evaluated during enumeration through their compiled
+//! bytecode form ([`super::constraint::CompiledConstraint`]) bound
+//! directly to encoded digits — no name lookups or per-eval allocation —
+//! with per-depth prefix-pruning counters recorded in [`BuildStats`].
 //!
 //! # CSR neighbor graphs
 //!
@@ -32,22 +46,75 @@
 //! traversals (and is what the CSR build itself uses, so the two paths
 //! agree element-for-element by construction).
 
-use super::constraint::Constraint;
+use super::constraint::{CompiledConstraint, Constraint, EvalScratch};
 use super::param::{TunableParam, Value};
 use crate::util::hash::FastMap;
 use crate::util::rng::Rng;
 use crate::bail;
-use crate::error::Result;
-use std::collections::HashMap;
+use crate::error::{Result, TuneError};
 use std::sync::OnceLock;
 
 /// Encoded configuration: per-dimension value indices.
 pub type Encoded = Vec<u16>;
 
-/// Largest Cartesian product served by the rank/select bitset; beyond
-/// this, `index_of` falls back to a packed-`u64` hash map. 2^26 ranks cost
-/// at most 8 MiB of bits + 4 MiB of prefix counts.
+/// Largest Cartesian product served by the rank/select bitset under
+/// [`IndexKind::Auto`]; past this the compressed sampled-select index
+/// takes over (the old hard 2^26 ceiling is gone). 2^26 ranks cost at
+/// most 8 MiB of bits + 4 MiB of prefix counts.
 const BITSET_MAX_RANKS: u128 = 1 << 26;
+
+/// Largest `len() * ndim` (in u16 cells, 64 MiB) for which
+/// [`FlatPolicy::Auto`] materializes the row-major `flat` decode buffer;
+/// beyond this, decode is stride-based from the packed rank.
+const FLAT_MAX_CELLS: usize = 1 << 25;
+
+/// Which rank-index variant backs [`SearchSpace::index_of_rank`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum IndexKind {
+    /// Bitset up to [`BITSET_MAX_RANKS`] Cartesian ranks, compressed
+    /// sampled-select beyond. The right choice everywhere; the explicit
+    /// variants exist for tests and benchmarks.
+    #[default]
+    Auto,
+    /// Rank/select bitset over Cartesian ranks. Errors at build time past
+    /// 2^26 Cartesian ranks (memory is proportional to the Cartesian
+    /// product, not the valid count).
+    Bitset,
+    /// `u64 → usize` hash map (reference implementation).
+    Map,
+    /// Bucketed sampled-select over the sorted valid ranks; memory is
+    /// proportional to the valid count only.
+    Compressed,
+}
+
+/// Whether to materialize the row-major `flat` decode buffer.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FlatPolicy {
+    /// Materialize up to [`FLAT_MAX_CELLS`] cells, elide beyond.
+    #[default]
+    Auto,
+    Materialize,
+    Elide,
+}
+
+/// Build-time knobs for [`SearchSpace::build_with`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BuildOptions {
+    pub index: IndexKind,
+    pub flat: FlatPolicy,
+}
+
+/// Per-depth prefix-pruning counters recorded during enumeration.
+#[derive(Clone, Debug, Default)]
+pub struct BuildStats {
+    /// Prefix assignments rejected at each odometer depth; a rejection at
+    /// depth `d` prunes the whole `Π dims[d+1..]`-config subtree without
+    /// visiting it.
+    pub prefix_rejections: Vec<u64>,
+    /// Total Cartesian configs ruled out by those rejections (counting 1
+    /// for a leaf-depth rejection).
+    pub pruned_configs: u128,
+}
 
 /// Neighborhood definitions for local-search moves.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -80,8 +147,36 @@ struct CsrGraph {
 enum RankIndex {
     /// Bitset with per-word rank (popcount prefix) for O(1) select.
     Bitset { words: Vec<u64>, prefix: Vec<u32> },
-    /// Fallback for Cartesian products past `BITSET_MAX_RANKS`.
+    /// Hash-map reference implementation.
     Map(FastMap<u64, usize>),
+    /// Bucketed sampled-select over the sorted `ranks` array: a rank's
+    /// bucket is `rank >> shift`, and `starts[b]..starts[b + 1]` bounds
+    /// the slice of `ranks` falling in bucket `b`. Bucket count is ~len/4
+    /// (average occupancy ≤ 4), so a lookup is one shift plus a tiny
+    /// binary search — no bitset, no hashing, and ~2 bytes per valid
+    /// config regardless of the Cartesian size.
+    Compressed { starts: Vec<u64>, shift: u32 },
+}
+
+/// Build the compressed sampled-select index over sorted valid ranks.
+/// `cart` is the (already range-checked) Cartesian size, `>= 1`.
+fn build_compressed(ranks: &[u64], cart: u128) -> RankIndex {
+    let cart_m1 = (cart - 1) as u64;
+    // Bits needed to address any rank; 0 when the space has one rank.
+    let rank_bits = 64 - cart_m1.leading_zeros();
+    let ceil_log2 = |x: u64| if x <= 1 { 0 } else { 64 - (x - 1).leading_zeros() };
+    // ~len/4 power-of-two buckets.
+    let bucket_bits = ceil_log2(ranks.len().max(1) as u64).saturating_sub(2);
+    let shift = rank_bits.saturating_sub(bucket_bits);
+    let nbuckets = (cart_m1 >> shift) as usize + 1;
+    let mut starts = vec![0u64; nbuckets + 1];
+    for &r in ranks {
+        starts[(r >> shift) as usize + 1] += 1;
+    }
+    for b in 1..starts.len() {
+        starts[b] += starts[b - 1];
+    }
+    RankIndex::Compressed { starts, shift }
 }
 
 /// A fully enumerated, constraint-filtered search space.
@@ -94,10 +189,14 @@ pub struct SearchSpace {
     pub constraints: Vec<Constraint>,
     /// Row-major SoA of all valid encoded configs (stride = ndim):
     /// contiguous storage for decode and the snap() distance scan.
-    flat: Vec<u16>,
+    /// `None` when elided per [`FlatPolicy`]; decode then goes
+    /// stride-based through [`SearchSpace::digit`].
+    flat: Option<Vec<u16>>,
     /// Packed Cartesian rank of each valid config (ascending).
     ranks: Vec<u64>,
     index: RankIndex,
+    /// Prefix-pruning counters from the build enumeration.
+    stats: BuildStats,
     /// Per-dimension cardinalities.
     dims: Vec<usize>,
     /// Mixed-radix strides: `strides[d] = Π dims[d+1..]`.
@@ -126,11 +225,23 @@ impl SearchSpace {
         self.len() <= Self::CSR_AMORTIZE_MAX_CONFIGS
     }
 
-    /// Enumerate the valid configurations of `params` under `constraints`.
+    /// Enumerate the valid configurations of `params` under `constraints`
+    /// with default options (auto index, auto flat policy).
     pub fn build(
         name: &str,
         params: Vec<TunableParam>,
         constraints: Vec<Constraint>,
+    ) -> Result<SearchSpace> {
+        Self::build_with(name, params, constraints, BuildOptions::default())
+    }
+
+    /// Enumerate with explicit index/flat choices (tests and benchmarks;
+    /// [`SearchSpace::build`] is the everyday entry point).
+    pub fn build_with(
+        name: &str,
+        params: Vec<TunableParam>,
+        constraints: Vec<Constraint>,
+        opts: BuildOptions,
     ) -> Result<SearchSpace> {
         let n = params.len();
         if n == 0 {
@@ -140,12 +251,51 @@ impl SearchSpace {
             bail!("too many parameters");
         }
         let dims: Vec<usize> = params.iter().map(|p| p.cardinality()).collect();
-        let cart: u128 = dims.iter().map(|&d| d as u128).product();
+        for (d, &card) in dims.iter().enumerate() {
+            if card > (1 << 16) {
+                return Err(TuneError::InvalidInput(format!(
+                    "search space {name:?}: parameter {:?} has {card} values, \
+                     past the 2^16 u16-encoding limit",
+                    params[d].name
+                )));
+            }
+        }
+        // Checked product: the packed-rank arithmetic in pack()/strides is
+        // u64, so anything past u64::MAX must be a hard typed error, not a
+        // silent overflow (and the product itself must not overflow u128).
+        let mut cart: u128 = 1;
+        for &d in &dims {
+            cart = match cart.checked_mul(d as u128) {
+                Some(c) => c,
+                None => {
+                    return Err(TuneError::InvalidInput(format!(
+                        "search space {name:?}: Cartesian product exceeds the \
+                         2^64 packed-rank limit (overflows u128)"
+                    )))
+                }
+            };
+        }
         if cart > u64::MAX as u128 {
-            bail!(
+            return Err(TuneError::InvalidInput(format!(
                 "search space {name:?}: Cartesian product {cart} exceeds the \
                  2^64 packed-rank limit"
-            );
+            )));
+        }
+        let kind = match opts.index {
+            IndexKind::Auto => {
+                if cart <= BITSET_MAX_RANKS {
+                    IndexKind::Bitset
+                } else {
+                    IndexKind::Compressed
+                }
+            }
+            k => k,
+        };
+        if kind == IndexKind::Bitset && cart > BITSET_MAX_RANKS {
+            return Err(TuneError::InvalidInput(format!(
+                "search space {name:?}: explicit bitset index over {cart} \
+                 Cartesian ranks (> 2^26); use Auto or Compressed"
+            )));
         }
         let mut strides = vec![0u64; n];
         let mut acc = 1u64;
@@ -153,54 +303,52 @@ impl SearchSpace {
             strides[d] = acc;
             acc = acc.saturating_mul(dims[d] as u64);
         }
-        let name_to_dim: HashMap<&str, usize> = params
-            .iter()
-            .enumerate()
-            .map(|(i, p)| (p.name.as_str(), i))
-            .collect();
 
-        // Bind each constraint to the earliest odometer depth at which all
-        // of its variables are assigned.
-        let mut by_depth: Vec<Vec<&Constraint>> = vec![Vec::new(); n];
-        for c in &constraints {
-            let mut max_dim = 0usize;
-            for v in &c.vars {
-                match name_to_dim.get(v.as_str()) {
-                    Some(&d) => max_dim = max_dim.max(d),
-                    None => bail!(
-                        "constraint {:?} references unknown parameter {v:?}",
-                        c.source
-                    ),
-                }
-            }
-            by_depth[max_dim].push(c);
+        // Lower every constraint to digit-addressed bytecode (this also
+        // rejects references to unknown parameters) and bind each to the
+        // earliest odometer depth at which all of its variables are
+        // assigned.
+        let compiled: Vec<CompiledConstraint> = constraints
+            .iter()
+            .map(|c| c.compile(&params))
+            .collect::<Result<_>>()?;
+        let mut by_depth: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (ci, cc) in compiled.iter().enumerate() {
+            by_depth[cc.max_dim].push(ci);
         }
 
         let mut flat: Vec<u16> = Vec::new();
+        // Auto flat policy materializes optimistically and drops the
+        // buffer the moment it crosses the threshold, bounding both the
+        // final footprint and the build's transient peak.
+        let mut keep_flat = opts.flat != FlatPolicy::Elide;
+        let auto_flat = opts.flat == FlatPolicy::Auto;
         let mut ranks: Vec<u64> = Vec::new();
+        let mut stats = BuildStats {
+            prefix_rejections: vec![0u64; n],
+            pruned_configs: 0,
+        };
+        let mut scratch = EvalScratch::default();
         let mut cursor: Encoded = vec![0; n];
-        // env closure over a prefix of assignments
         let mut depth = 0usize;
         'outer: loop {
             // Check constraints that become fully bound at this depth.
-            let assignment_ok = {
-                let cursor_ref = &cursor;
-                let params_ref = &params;
-                let env = |name: &str| -> Option<Value> {
-                    let d = *name_to_dim.get(name)?;
-                    if d > depth {
-                        return None;
-                    }
-                    Some(params_ref[d].values[cursor_ref[d] as usize].clone())
-                };
-                by_depth[depth]
-                    .iter()
-                    .all(|c| c.eval(&env).unwrap_or(false))
-            };
+            let cursor_ref = &cursor;
+            let assignment_ok = by_depth[depth].iter().all(|&ci| {
+                compiled[ci]
+                    .eval_encoded(|d| cursor_ref[d], &mut scratch)
+                    .unwrap_or(false)
+            });
 
             if assignment_ok {
                 if depth + 1 == n {
-                    flat.extend_from_slice(&cursor);
+                    if keep_flat {
+                        flat.extend_from_slice(&cursor);
+                        if auto_flat && flat.len() > FLAT_MAX_CELLS {
+                            flat = Vec::new();
+                            keep_flat = false;
+                        }
+                    }
                     ranks.push(
                         cursor
                             .iter()
@@ -213,12 +361,16 @@ impl SearchSpace {
                     cursor[depth] = 0;
                     continue 'outer;
                 }
+            } else {
+                stats.prefix_rejections[depth] += 1;
+                stats.pruned_configs += strides[depth] as u128;
             }
 
             // Advance odometer at current depth, backtracking when exhausted.
             loop {
-                cursor[depth] += 1;
-                if (cursor[depth] as usize) < dims[depth] {
+                let next = cursor[depth] as usize + 1;
+                if next < dims[depth] {
+                    cursor[depth] = next as u16;
                     break;
                 }
                 if depth == 0 {
@@ -228,32 +380,38 @@ impl SearchSpace {
             }
         }
 
-        // Lexicographic enumeration ⇒ ranks ascend, so the bitset's select
-        // (prefix popcount) recovers exactly the enumeration index.
+        // Lexicographic enumeration ⇒ ranks ascend, so every index
+        // variant's select recovers exactly the enumeration index.
         debug_assert!(ranks.windows(2).all(|w| w[0] < w[1]));
-        let index = if cart <= BITSET_MAX_RANKS {
-            let nwords = (cart as usize + 63) / 64;
-            let mut words = vec![0u64; nwords.max(1)];
-            for &r in &ranks {
-                words[(r >> 6) as usize] |= 1u64 << (r & 63);
+        let index = match kind {
+            IndexKind::Bitset => {
+                let nwords = (cart as usize + 63) / 64;
+                let mut words = vec![0u64; nwords.max(1)];
+                for &r in &ranks {
+                    words[(r >> 6) as usize] |= 1u64 << (r & 63);
+                }
+                let mut prefix = Vec::with_capacity(words.len());
+                let mut seen = 0u32;
+                for &w in &words {
+                    prefix.push(seen);
+                    seen += w.count_ones();
+                }
+                RankIndex::Bitset { words, prefix }
             }
-            let mut prefix = Vec::with_capacity(words.len());
-            let mut seen = 0u32;
-            for &w in &words {
-                prefix.push(seen);
-                seen += w.count_ones();
+            IndexKind::Map => {
+                RankIndex::Map(ranks.iter().enumerate().map(|(i, &r)| (r, i)).collect())
             }
-            RankIndex::Bitset { words, prefix }
-        } else {
-            RankIndex::Map(ranks.iter().enumerate().map(|(i, &r)| (r, i)).collect())
+            IndexKind::Compressed => build_compressed(&ranks, cart),
+            IndexKind::Auto => unreachable!("Auto resolved above"),
         };
         Ok(SearchSpace {
             name: name.to_string(),
             params,
             constraints,
-            flat,
+            flat: keep_flat.then_some(flat),
             ranks,
             index,
+            stats,
             dims,
             strides,
             csr: [OnceLock::new(), OnceLock::new()],
@@ -278,10 +436,80 @@ impl SearchSpace {
         &self.dims
     }
 
+    /// Which rank-index variant this space was built with (never `Auto`).
+    pub fn index_kind(&self) -> IndexKind {
+        match self.index {
+            RankIndex::Bitset { .. } => IndexKind::Bitset,
+            RankIndex::Map(_) => IndexKind::Map,
+            RankIndex::Compressed { .. } => IndexKind::Compressed,
+        }
+    }
+
+    /// True when the row-major `flat` decode buffer is materialized.
+    /// When false, use [`SearchSpace::digit`] / [`SearchSpace::encoded_into`]
+    /// instead of [`SearchSpace::encoded`].
+    pub fn has_flat(&self) -> bool {
+        self.flat.is_some()
+    }
+
+    /// Prefix-pruning counters recorded while enumerating this space.
+    pub fn build_stats(&self) -> &BuildStats {
+        &self.stats
+    }
+
     /// Encoded configuration at a valid index (slice into the SoA buffer).
+    ///
+    /// Panics when the flat buffer was elided ([`FlatPolicy`]); elide-safe
+    /// callers use [`SearchSpace::digit`] or [`SearchSpace::encoded_into`].
     pub fn encoded(&self, idx: usize) -> &[u16] {
         let n = self.dims.len();
-        &self.flat[idx * n..(idx + 1) * n]
+        match &self.flat {
+            Some(f) => &f[idx * n..(idx + 1) * n],
+            None => panic!(
+                "encoded() on search space {:?} whose flat buffer is elided; \
+                 use digit()/encoded_into()",
+                self.name
+            ),
+        }
+    }
+
+    /// Value index of dimension `d` in configuration `idx`: one flat read
+    /// when materialized, one divide + modulo off the packed rank when
+    /// elided. The elide-safe scalar decode primitive.
+    #[inline]
+    pub fn digit(&self, idx: usize, d: usize) -> u16 {
+        match &self.flat {
+            Some(f) => f[idx * self.dims.len() + d],
+            None => ((self.ranks[idx] / self.strides[d]) % self.dims[d] as u64) as u16,
+        }
+    }
+
+    /// Decode a configuration into a caller-owned buffer (cleared first).
+    /// Works with or without the flat buffer.
+    pub fn encoded_into(&self, idx: usize, out: &mut Encoded) {
+        out.clear();
+        match &self.flat {
+            Some(f) => {
+                let n = self.dims.len();
+                out.extend_from_slice(&f[idx * n..(idx + 1) * n]);
+            }
+            None => {
+                let rank = self.ranks[idx];
+                out.extend(
+                    self.strides
+                        .iter()
+                        .zip(&self.dims)
+                        .map(|(&s, &d)| ((rank / s) % d as u64) as u16),
+                );
+            }
+        }
+    }
+
+    /// Owned decode of a configuration (elide-safe `encoded().to_vec()`).
+    pub fn encoded_vec(&self, idx: usize) -> Encoded {
+        let mut out = Encoded::with_capacity(self.dims.len());
+        self.encoded_into(idx, &mut out);
+        out
     }
 
     /// Packed Cartesian rank of a valid index.
@@ -324,6 +552,15 @@ impl SearchSpace {
                 }
             }
             RankIndex::Map(m) => m.get(&rank).copied(),
+            RankIndex::Compressed { starts, shift } => {
+                let b = (rank >> shift) as usize;
+                let lo = *starts.get(b)? as usize;
+                let hi = *starts.get(b + 1)? as usize;
+                match self.ranks[lo..hi].binary_search(&rank) {
+                    Ok(pos) => Some(lo + pos),
+                    Err(_) => None,
+                }
+            }
         }
     }
 
@@ -340,26 +577,31 @@ impl SearchSpace {
         if (v as usize) >= self.dims[d] {
             return None;
         }
-        let orig = self.encoded(idx)[d] as u64;
+        let orig = self.digit(idx, d) as u64;
         let rank = self.ranks[idx] - orig * self.strides[d] + v as u64 * self.strides[d];
         self.index_of_rank(rank)
     }
 
     /// Decode to parameter values.
     pub fn values(&self, idx: usize) -> Vec<Value> {
-        self.encoded(idx)
+        self.params
             .iter()
-            .zip(&self.params)
-            .map(|(&vi, p)| p.values[vi as usize].clone())
+            .enumerate()
+            .map(|(d, p)| p.values[self.digit(idx, d) as usize].clone())
             .collect()
     }
 
     /// name=value map for a configuration (for JSON output).
     pub fn named_values(&self, idx: usize) -> Vec<(String, Value)> {
-        self.encoded(idx)
+        self.params
             .iter()
-            .zip(&self.params)
-            .map(|(&vi, p)| (p.name.clone(), p.values[vi as usize].clone()))
+            .enumerate()
+            .map(|(d, p)| {
+                (
+                    p.name.clone(),
+                    p.values[self.digit(idx, d) as usize].clone(),
+                )
+            })
             .collect()
     }
 
@@ -422,7 +664,7 @@ impl SearchSpace {
     ) {
         let base = self.ranks[idx];
         for d in 0..self.dims.len() {
-            let orig = self.encoded(idx)[d] as u64;
+            let orig = self.digit(idx, d) as u64;
             let stride = self.strides[d];
             // Rank with dimension d zeroed; candidates are floor + v*stride.
             let floor = base - orig * stride;
@@ -513,7 +755,7 @@ impl SearchSpace {
             if self.dims[d] < 2 {
                 continue;
             }
-            let orig = self.encoded(idx)[d];
+            let orig = self.digit(idx, d);
             let cand = match hood {
                 Neighborhood::Hamming => {
                     let mut v = rng.below(self.dims[d]) as u16;
@@ -582,19 +824,13 @@ impl SearchSpace {
                 return i;
             }
         }
-        // Distance-biased random-candidate search over the flat SoA rows.
-        let ndim = self.dims.len();
+        // Distance-biased random-candidate search over decoded rows.
         let mut best = usize::MAX;
         let mut best_dist = f64::INFINITY;
         let n = self.len();
         for _ in 0..64.min(n) {
             let cand = rng.below(n);
-            let row = &self.flat[cand * ndim..(cand + 1) * ndim];
-            let dist: f64 = row
-                .iter()
-                .zip(target)
-                .map(|(&v, &t)| (v as f64 - t).abs())
-                .sum();
+            let dist = self.cand_dist_f64(cand, target);
             if dist < best_dist {
                 best_dist = dist;
                 best = cand;
@@ -623,18 +859,12 @@ impl SearchSpace {
         if let Some(i) = self.index_of(enc) {
             return i;
         }
-        let ndim = self.dims.len();
         let mut best = usize::MAX;
         let mut best_dist = u64::MAX;
         let n = self.len();
         for _ in 0..64.min(n) {
             let cand = rng.below(n);
-            let row = &self.flat[cand * ndim..(cand + 1) * ndim];
-            let dist: u64 = row
-                .iter()
-                .zip(enc)
-                .map(|(&v, &t)| (v as i64 - t as i64).unsigned_abs())
-                .sum();
+            let dist = self.cand_dist_u16(cand, enc);
             if dist < best_dist {
                 best_dist = dist;
                 best = cand;
@@ -642,6 +872,52 @@ impl SearchSpace {
         }
         debug_assert_ne!(best, usize::MAX);
         best
+    }
+
+    /// L1 distance of config `cand` to a float target: flat-row scan when
+    /// materialized, stride decode off the packed rank when elided (same
+    /// digits either way, so snap picks identical candidates).
+    fn cand_dist_f64(&self, cand: usize, target: &[f64]) -> f64 {
+        let ndim = self.dims.len();
+        match &self.flat {
+            Some(f) => f[cand * ndim..(cand + 1) * ndim]
+                .iter()
+                .zip(target)
+                .map(|(&v, &t)| (v as f64 - t).abs())
+                .sum(),
+            None => {
+                let rank = self.ranks[cand];
+                self.strides
+                    .iter()
+                    .zip(&self.dims)
+                    .zip(target)
+                    .map(|((&s, &d), &t)| (((rank / s) % d as u64) as f64 - t).abs())
+                    .sum()
+            }
+        }
+    }
+
+    /// Integer L1 distance of config `cand` to an encoded target.
+    fn cand_dist_u16(&self, cand: usize, enc: &[u16]) -> u64 {
+        let ndim = self.dims.len();
+        match &self.flat {
+            Some(f) => f[cand * ndim..(cand + 1) * ndim]
+                .iter()
+                .zip(enc)
+                .map(|(&v, &t)| (v as i64 - t as i64).unsigned_abs())
+                .sum(),
+            None => {
+                let rank = self.ranks[cand];
+                self.strides
+                    .iter()
+                    .zip(&self.dims)
+                    .zip(enc)
+                    .map(|((&s, &d), &t)| {
+                        (((rank / s) % d as u64) as i64 - t as i64).unsigned_abs()
+                    })
+                    .sum()
+            }
+        }
     }
 }
 
@@ -858,5 +1134,171 @@ mod tests {
         let s = space_2d();
         let i = s.index_of(&[1u16, 2]).unwrap();
         assert_eq!(s.key(i), "2,4");
+    }
+
+    fn space_2d_with(opts: BuildOptions) -> SearchSpace {
+        SearchSpace::build_with(
+            "t",
+            vec![
+                TunableParam::new("a", vec![1i64, 2, 4, 8]),
+                TunableParam::new("b", vec![1i64, 2, 4]),
+            ],
+            vec![Constraint::parse("a * b <= 8").unwrap()],
+            opts,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn build_rejects_past_u64_product() {
+        // 8 params × 256 values = 2^64, one past the u64 rank range:
+        // must be a typed InvalidInput, not silent rank wraparound.
+        let params: Vec<TunableParam> = (0..8)
+            .map(|i| TunableParam::int_range(&format!("p{i}"), 0, 255, 1))
+            .collect();
+        let err = SearchSpace::build("huge", params, vec![]).unwrap_err();
+        assert!(matches!(err, TuneError::InvalidInput(_)), "{err:?}");
+
+        // 16 params × 256 values = 2^128: the product overflows u128
+        // itself; the checked fold must catch it rather than panic/wrap.
+        let params: Vec<TunableParam> = (0..16)
+            .map(|i| TunableParam::int_range(&format!("p{i}"), 0, 255, 1))
+            .collect();
+        let err = SearchSpace::build("huger", params, vec![]).unwrap_err();
+        assert!(matches!(err, TuneError::InvalidInput(_)), "{err:?}");
+    }
+
+    #[test]
+    fn build_rejects_cardinality_past_u16() {
+        // 2^16 + 1 values cannot be encoded in a u16 digit.
+        let p = TunableParam::int_range("a", 0, 1 << 16, 1);
+        let err = SearchSpace::build("wide", vec![p], vec![]).unwrap_err();
+        assert!(matches!(err, TuneError::InvalidInput(_)), "{err:?}");
+    }
+
+    #[test]
+    fn index_variants_and_flat_policies_agree() {
+        let base = space_2d();
+        assert_eq!(base.index_kind(), IndexKind::Bitset);
+        assert!(base.has_flat());
+        for index in [IndexKind::Bitset, IndexKind::Map, IndexKind::Compressed] {
+            for flat in [FlatPolicy::Materialize, FlatPolicy::Elide] {
+                let s = space_2d_with(BuildOptions { index, flat });
+                assert_eq!(s.index_kind(), index);
+                assert_eq!(s.has_flat(), flat == FlatPolicy::Materialize);
+                assert_eq!(s.len(), base.len());
+                for i in 0..base.len() {
+                    assert_eq!(s.rank_of(i), base.rank_of(i));
+                    assert_eq!(s.index_of_rank(s.rank_of(i)), Some(i));
+                    assert_eq!(s.encoded_vec(i), base.encoded(i).to_vec());
+                    assert_eq!(s.values(i), base.values(i));
+                    for d in 0..base.dims().len() {
+                        assert_eq!(s.digit(i, d), base.encoded(i)[d]);
+                        for v in 0..=base.dims()[d] as u16 {
+                            assert_eq!(
+                                s.with_dim(i, d, v),
+                                base.with_dim(i, d, v),
+                                "{index:?}/{flat:?} idx {i} d {d} v {v}"
+                            );
+                        }
+                    }
+                    // Same-seed stochastic paths are bitwise-identical.
+                    let (mut r1, mut r2) = (Rng::new(42), Rng::new(42));
+                    assert_eq!(
+                        s.random_neighbor(i, Neighborhood::Hamming, &mut r1),
+                        base.random_neighbor(i, Neighborhood::Hamming, &mut r2)
+                    );
+                    let (mut r1, mut r2) = (Rng::new(7), Rng::new(7));
+                    assert_eq!(s.snap(&[2.7, 0.2], &mut r1), base.snap(&[2.7, 0.2], &mut r2));
+                }
+                // Invalid / out-of-range probes agree too.
+                assert_eq!(s.index_of(&[3u16, 2]), None);
+                assert_eq!(s.index_of(&[9u16, 0]), None);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "flat buffer is elided")]
+    fn encoded_panics_when_flat_elided() {
+        let s = space_2d_with(BuildOptions {
+            index: IndexKind::Auto,
+            flat: FlatPolicy::Elide,
+        });
+        let _ = s.encoded(0);
+    }
+
+    #[test]
+    fn compressed_index_past_bitset_ceiling() {
+        // 65536 × 65536 × 16 = 2^36 Cartesian ranks — far past the old
+        // 2^26 bitset ceiling — kept enumerable by hard prefix pruning.
+        let params = vec![
+            TunableParam::int_range("a", 0, 65535, 1),
+            TunableParam::int_range("b", 0, 65535, 1),
+            TunableParam::int_range("c", 0, 15, 1),
+        ];
+        let cs = vec![
+            Constraint::parse("a % 4096 == 0").unwrap(),
+            Constraint::parse("b % 4096 == 0").unwrap(),
+        ];
+        let s = SearchSpace::build("big", params.clone(), cs.clone()).unwrap();
+        assert_eq!(s.index_kind(), IndexKind::Compressed);
+        assert_eq!(s.cartesian_size(), 1u128 << 36);
+        assert_eq!(s.len(), 16 * 16 * 16);
+        for i in (0..s.len()).step_by(97) {
+            assert_eq!(s.index_of_rank(s.rank_of(i)), Some(i));
+            assert_eq!(s.index_of(&s.encoded_vec(i)), Some(i));
+            for d in 0..3 {
+                let v = s.digit(i, d);
+                assert_eq!(s.with_dim(i, d, v), Some(i));
+            }
+        }
+        // Pruning ruled out nearly the whole Cartesian product.
+        let stats = s.build_stats();
+        assert_eq!(stats.prefix_rejections[0], 65536 - 16);
+        assert!(stats.pruned_configs > 1u128 << 35);
+        // An explicit bitset at this size must be a typed error, not an
+        // 8 GiB allocation.
+        let err = SearchSpace::build_with(
+            "big",
+            params,
+            cs,
+            BuildOptions {
+                index: IndexKind::Bitset,
+                flat: FlatPolicy::Auto,
+            },
+        )
+        .unwrap_err();
+        assert!(matches!(err, TuneError::InvalidInput(_)), "{err:?}");
+    }
+
+    #[test]
+    fn compressed_on_empty_and_single_spaces() {
+        let s = SearchSpace::build_with(
+            "empty",
+            vec![TunableParam::new("a", vec![1i64, 2])],
+            vec![Constraint::parse("a > 10").unwrap()],
+            BuildOptions {
+                index: IndexKind::Compressed,
+                flat: FlatPolicy::Auto,
+            },
+        )
+        .unwrap();
+        assert_eq!(s.len(), 0);
+        assert_eq!(s.index_of(&[0u16]), None);
+        let s = SearchSpace::build_with(
+            "one",
+            vec![TunableParam::new("a", vec![5i64])],
+            vec![],
+            BuildOptions {
+                index: IndexKind::Compressed,
+                flat: FlatPolicy::Elide,
+            },
+        )
+        .unwrap();
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.index_of(&[0u16]), Some(0));
+        assert_eq!(s.encoded_vec(0), vec![0u16]);
+        assert_eq!(s.key(0), "5");
     }
 }

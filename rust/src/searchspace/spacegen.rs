@@ -1,0 +1,288 @@
+//! Deterministic synthetic constrained-space generator.
+//!
+//! Real auto-tuning spaces are heavily constrained and far larger than the
+//! seed kernels; `spacegen` manufactures such spaces on demand so builds,
+//! CSR graphs, SimTables and whole tuning campaigns can be exercised at
+//! million-to-billion-Cartesian-rank scale with a *tunable validity
+//! fraction*. Everything is a pure function of the [`SpaceGenSpec`]
+//! (dims × validity × family × seed): the same spec always produces the
+//! same parameters, constraint strings and therefore the same enumerated
+//! space, so benchmarks and tests are reproducible across machines.
+//!
+//! Two constraint shapes (and their combination) cover the interesting
+//! regimes:
+//!
+//! * [`ConstraintFamily::Hash`] — one multiplicative-hash residue test
+//!   over *all* dimensions, `(Σ p_d·c_d) % M < K` with prime `M`. Binds
+//!   only at leaf depth (no prefix pruning): the worst case, measuring raw
+//!   enumeration + compiled-eval bandwidth, with achieved validity ≈ K/M.
+//! * [`ConstraintFamily::Product`] — adjacent-pair bounds
+//!   `p_j * p_{j+1} <= B_j`, each binding as soon as its second dimension
+//!   is assigned: the best case for prefix pruning, with every `B_j`
+//!   chosen by exact quantile so the per-pair validities multiply out to
+//!   the requested fraction.
+//! * [`ConstraintFamily::Mixed`] — both at √validity each.
+
+use super::constraint::Constraint;
+use super::param::TunableParam;
+use super::space::{BuildOptions, SearchSpace};
+use crate::bail;
+use crate::error::{Context, Result};
+use crate::util::rng::{mix64, Rng};
+
+/// Prime modulus of the hash-family residue constraint.
+const HASH_MODULUS: i64 = 1_048_573;
+
+/// Constraint shape of a generated space.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConstraintFamily {
+    /// One leaf-bound residue test over all dimensions (no pruning).
+    Hash,
+    /// Adjacent-pair product bounds (prefix pruning at every depth).
+    Product,
+    /// Hash and product at √validity each.
+    Mixed,
+}
+
+impl ConstraintFamily {
+    pub fn parse(s: &str) -> Result<ConstraintFamily> {
+        Ok(match s {
+            "hash" => ConstraintFamily::Hash,
+            "product" => ConstraintFamily::Product,
+            "mixed" => ConstraintFamily::Mixed,
+            other => bail!("unknown constraint family {other:?} (hash|product|mixed)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ConstraintFamily::Hash => "hash",
+            ConstraintFamily::Product => "product",
+            ConstraintFamily::Mixed => "mixed",
+        }
+    }
+}
+
+/// Full specification of a synthetic constrained space.
+#[derive(Clone, Debug)]
+pub struct SpaceGenSpec {
+    /// Per-dimension cardinalities (Cartesian size = their product).
+    pub dims: Vec<usize>,
+    /// Target fraction of the Cartesian product that is valid, in (0, 1].
+    pub validity: f64,
+    pub family: ConstraintFamily,
+    pub seed: u64,
+}
+
+impl SpaceGenSpec {
+    pub fn new(
+        dims: Vec<usize>,
+        validity: f64,
+        family: ConstraintFamily,
+        seed: u64,
+    ) -> SpaceGenSpec {
+        SpaceGenSpec {
+            dims,
+            validity,
+            family,
+            seed,
+        }
+    }
+
+    /// Parse an `AxBxC`-style dims string, e.g. `32x32x16x8`.
+    pub fn parse_dims(s: &str) -> Result<Vec<usize>> {
+        let dims: Vec<usize> = s
+            .split('x')
+            .map(|part| {
+                part.parse::<usize>()
+                    .with_context(|| format!("bad dimension {part:?} in dims {s:?}"))
+            })
+            .collect::<Result<_>>()?;
+        if dims.is_empty() || dims.iter().any(|&d| d == 0) {
+            bail!("dims {s:?} must be nonempty positive integers");
+        }
+        Ok(dims)
+    }
+
+    /// Stable space name, e.g. `gen-hash-32x32x16-s7`.
+    pub fn name(&self) -> String {
+        let dims = self
+            .dims
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join("x");
+        format!("gen-{}-{}-s{}", self.family.name(), dims, self.seed)
+    }
+
+    /// The generated parameters: `p{d}` over `1..=dims[d]` (values start
+    /// at 1 so product constraints are meaningful; the encoded digit of a
+    /// value `v` is `v - 1`).
+    pub fn params(&self) -> Vec<TunableParam> {
+        self.dims
+            .iter()
+            .enumerate()
+            .map(|(d, &card)| TunableParam::int_range(&format!("p{d}"), 1, card as i64, 1))
+            .collect()
+    }
+
+    /// The generated constraint set for the requested family/validity.
+    pub fn constraints(&self) -> Result<Vec<Constraint>> {
+        let v = self.validity;
+        if !(v > 0.0 && v <= 1.0) {
+            bail!("validity {v} out of (0, 1]");
+        }
+        let mut sources = Vec::new();
+        match self.family {
+            ConstraintFamily::Hash => self.push_hash(v, &mut sources),
+            ConstraintFamily::Product => self.push_product(v, &mut sources)?,
+            ConstraintFamily::Mixed => {
+                let split = v.sqrt();
+                self.push_hash(split, &mut sources);
+                self.push_product(split, &mut sources)?;
+            }
+        }
+        sources
+            .iter()
+            .map(|s| Constraint::parse(s))
+            .collect::<Result<_>>()
+    }
+
+    /// `(p0*c0 + p1*c1 + ...) % M < K`: pseudo-random odd-ish coefficients
+    /// from the seed, `K = round(validity * M)`. Exact i64 arithmetic —
+    /// digits ≤ 2^16 and coefficients < 2^20, so no overflow for any
+    /// realistic dimension count.
+    fn push_hash(&self, validity: f64, out: &mut Vec<String>) {
+        let mut rng = Rng::new(mix64(self.seed, 0x7370_6163_6567_656e)); // "spacegen"
+        let terms: Vec<String> = self
+            .dims
+            .iter()
+            .enumerate()
+            .map(|(d, _)| {
+                let c = 1 + (rng.next_u64() % (HASH_MODULUS as u64 - 1)) as i64;
+                format!("p{d} * {c}")
+            })
+            .collect();
+        let k = ((validity * HASH_MODULUS as f64).round() as i64).clamp(1, HASH_MODULUS);
+        out.push(format!("({}) % {HASH_MODULUS} < {k}", terms.join(" + ")));
+    }
+
+    /// Adjacent-pair bounds `p{j} * p{j+1} <= B_j`, each `B_j` the exact
+    /// quantile of the pair-product distribution such that the per-pair
+    /// validities multiply out to the requested overall fraction.
+    fn push_product(&self, validity: f64, out: &mut Vec<String>) -> Result<()> {
+        let npairs = self.dims.len().saturating_sub(1);
+        if npairs == 0 {
+            bail!("product constraint family needs at least 2 dimensions");
+        }
+        let per_pair = validity.powf(1.0 / npairs as f64);
+        for j in 0..npairs {
+            let (da, db) = (self.dims[j] as u64, self.dims[j + 1] as u64);
+            let target = (per_pair * (da as f64) * (db as f64)).round().max(1.0) as u64;
+            let bound = pair_product_quantile(da, db, target);
+            out.push(format!("p{j} * p{} <= {bound}", j + 1));
+        }
+        Ok(())
+    }
+
+    /// Enumerate the space with default build options.
+    pub fn build(&self) -> Result<SearchSpace> {
+        self.build_with(BuildOptions::default())
+    }
+
+    /// Enumerate with explicit index/flat choices.
+    pub fn build_with(&self, opts: BuildOptions) -> Result<SearchSpace> {
+        SearchSpace::build_with(&self.name(), self.params(), self.constraints()?, opts)
+    }
+}
+
+/// Number of pairs `(a, b) ∈ [1,da]×[1,db]` with `a*b <= bound`.
+fn pairs_within(da: u64, db: u64, bound: u64) -> u64 {
+    (1..=da).map(|a| db.min(bound / a)).sum()
+}
+
+/// Smallest bound whose `pairs_within` count reaches `target`.
+fn pair_product_quantile(da: u64, db: u64, target: u64) -> u64 {
+    let target = target.min(da * db);
+    let (mut lo, mut hi) = (1u64, da * db);
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if pairs_within(da, db, mid) >= target {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    lo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_dims_and_family() {
+        assert_eq!(SpaceGenSpec::parse_dims("32x32x16").unwrap(), vec![32, 32, 16]);
+        assert!(SpaceGenSpec::parse_dims("32x0x16").is_err());
+        assert!(SpaceGenSpec::parse_dims("").is_err());
+        assert!(SpaceGenSpec::parse_dims("32xpotato").is_err());
+        assert_eq!(ConstraintFamily::parse("hash").unwrap(), ConstraintFamily::Hash);
+        assert!(ConstraintFamily::parse("nope").is_err());
+    }
+
+    #[test]
+    fn deterministic_across_builds() {
+        let spec = SpaceGenSpec::new(vec![16, 16, 8], 0.05, ConstraintFamily::Mixed, 7);
+        let a = spec.build().unwrap();
+        let b = spec.build().unwrap();
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert!(!a.is_empty());
+    }
+
+    #[test]
+    fn hash_family_hits_target_validity() {
+        // 32×32×32 = 32768 Cartesian ranks at 5% → expect ~1638 valid.
+        let spec = SpaceGenSpec::new(vec![32, 32, 32], 0.05, ConstraintFamily::Hash, 3);
+        let s = spec.build().unwrap();
+        let achieved = s.len() as f64 / 32768.0;
+        assert!(
+            (0.025..=0.10).contains(&achieved),
+            "achieved validity {achieved} far from 0.05 (len {})",
+            s.len()
+        );
+        // Leaf-bound: no prefix pruning above the last dimension.
+        assert_eq!(s.build_stats().prefix_rejections[0], 0);
+        assert_eq!(s.build_stats().prefix_rejections[1], 0);
+    }
+
+    #[test]
+    fn product_family_prunes_prefixes() {
+        let spec = SpaceGenSpec::new(vec![64, 64, 64], 0.01, ConstraintFamily::Product, 11);
+        let s = spec.build().unwrap();
+        let cart = 64.0 * 64.0 * 64.0;
+        let achieved = s.len() as f64 / cart;
+        // Pair constraints share dimensions, so validities don't multiply
+        // exactly — a loose band is the contract here.
+        assert!(
+            (0.002..=0.08).contains(&achieved),
+            "achieved validity {achieved} far from 0.01 (len {})",
+            s.len()
+        );
+        // Pair constraints bind at depth 1, so whole subtrees are pruned.
+        let stats = s.build_stats();
+        assert!(stats.prefix_rejections[1] > 0);
+        assert!(stats.pruned_configs > 0);
+    }
+
+    #[test]
+    fn pair_quantile_is_exact() {
+        for (da, db, target) in [(8u64, 8, 13), (64, 16, 1), (16, 64, 1024), (5, 7, 35)] {
+            let b = pair_product_quantile(da, db, target);
+            assert!(pairs_within(da, db, b) >= target.min(da * db));
+            if b > 1 {
+                assert!(pairs_within(da, db, b - 1) < target.min(da * db));
+            }
+        }
+    }
+}

@@ -24,9 +24,7 @@ use tunetuner::util::rng::Rng;
 /// Reference config→index map built the way the old engine did it:
 /// a hash map keyed by the full encoded vector.
 fn reference_index(space: &SearchSpace) -> FastMap<Vec<u16>, usize> {
-    (0..space.len())
-        .map(|i| (space.encoded(i).to_vec(), i))
-        .collect()
+    (0..space.len()).map(|i| (space.encoded_vec(i), i)).collect()
 }
 
 /// Reference neighbors built the way the old engine did it: clone a probe
@@ -37,7 +35,7 @@ fn reference_neighbors(
     idx: usize,
     hood: Neighborhood,
 ) -> Vec<usize> {
-    let enc = space.encoded(idx).to_vec();
+    let enc = space.encoded_vec(idx);
     let dims = space.dims();
     let mut out = Vec::new();
     let mut probe = enc.clone();
@@ -88,7 +86,7 @@ fn check_space(space: &SearchSpace, label: &str) {
 
     let mut rng = Rng::new(0x5EED ^ space.len() as u64);
     for i in probe_indices(space.len()) {
-        let enc = space.encoded(i).to_vec();
+        let enc = space.encoded_vec(i);
         // index_of roundtrip matches the reference hash index exactly.
         assert_eq!(space.index_of(&enc), Some(i), "{label}: roundtrip {i}");
         assert_eq!(reference.get(&enc), Some(&i), "{label}: reference {i}");
@@ -143,7 +141,7 @@ fn check_space(space: &SearchSpace, label: &str) {
 
     // Out-of-range encodings never resolve (no rank aliasing).
     if !space.is_empty() {
-        let mut probe = space.encoded(0).to_vec();
+        let mut probe = space.encoded_vec(0);
         for d in 0..space.dims().len() {
             let orig = probe[d];
             probe[d] = space.dims()[d] as u16;
@@ -182,6 +180,36 @@ fn packed_rank_matches_reference_on_random_spaces() {
             _ => continue,
         };
         check_space(&space, &format!("random case {case}"));
+    }
+}
+
+#[test]
+fn all_index_variants_match_reference_on_generated_spaces() {
+    // The full reference battery on spacegen spaces, once per
+    // (index kind x flat policy) build: every variant must be a drop-in
+    // replacement, including with the flat decode buffer elided.
+    use tunetuner::searchspace::{
+        BuildOptions, ConstraintFamily, FlatPolicy, IndexKind, SpaceGenSpec,
+    };
+    let cases = [
+        (ConstraintFamily::Hash, vec![16usize, 16, 12], 0.08),
+        (ConstraintFamily::Product, vec![24, 24, 8], 0.05),
+        (ConstraintFamily::Mixed, vec![12, 12, 12, 6], 0.10),
+    ];
+    for (family, dims, validity) in cases {
+        let spec = SpaceGenSpec::new(dims, validity, family, 3);
+        for index in [IndexKind::Bitset, IndexKind::Map, IndexKind::Compressed] {
+            for flat in [FlatPolicy::Materialize, FlatPolicy::Elide] {
+                let space = spec.build_with(BuildOptions { index, flat }).unwrap();
+                assert!(!space.is_empty(), "{} produced an empty space", spec.name());
+                assert_eq!(space.index_kind(), index);
+                assert_eq!(space.has_flat(), flat == FlatPolicy::Materialize);
+                check_space(
+                    &space,
+                    &format!("{}[{index:?},{flat:?}]", spec.name()),
+                );
+            }
+        }
     }
 }
 

@@ -19,9 +19,11 @@ use tunetuner::util::json::{self, Json};
 use tunetuner::util::rng::Rng;
 use tunetuner::util::stats;
 
-/// Generate a random search space: 2–5 dims, small value lists, and a
-/// random product constraint.
-fn random_space(rng: &mut Rng) -> SearchSpace {
+/// Random search-space ingredients: 2–5 dims, small value lists, and a
+/// random product constraint (shared by [`random_space`] and the
+/// index-variant equivalence property, which rebuilds the same space
+/// under every [`tunetuner::searchspace::BuildOptions`] combination).
+fn random_space_parts(rng: &mut Rng) -> (Vec<TunableParam>, Vec<Constraint>) {
     let ndim = 2 + rng.below(4);
     let mut params = Vec::new();
     for d in 0..ndim {
@@ -32,11 +34,77 @@ fn random_space(rng: &mut Rng) -> SearchSpace {
     // Constrain the product of the first two dims.
     let bound = 1 << (3 + rng.below(5));
     let constraints = vec![Constraint::parse(&format!("p0 * p1 <= {bound}")).unwrap()];
+    (params, constraints)
+}
+
+/// Generate a random search space from [`random_space_parts`].
+fn random_space(rng: &mut Rng) -> SearchSpace {
+    let (params, constraints) = random_space_parts(rng);
     match SearchSpace::build("prop", params, constraints) {
         Ok(s) if !s.is_empty() => s,
         _ => {
             // Regenerate on empty spaces (rare with these bounds).
             random_space(rng)
+        }
+    }
+}
+
+/// Every (index kind x flat policy) build of the same space is bitwise
+/// interchangeable: same ranks, same encodings, same index_of_rank
+/// answers, and identical same-seed random_neighbor walks and snap
+/// streams (the optimizer-facing RNG-consuming paths).
+#[test]
+fn prop_index_variants_and_flat_policies_bitwise_equivalent() {
+    use tunetuner::searchspace::{BuildOptions, FlatPolicy, IndexKind};
+    let mut rng = Rng::new(0x1DE);
+    for case in 0..20u64 {
+        let (params, constraints) = random_space_parts(&mut rng);
+        let base = match SearchSpace::build("prop", params.clone(), constraints.clone()) {
+            Ok(s) if !s.is_empty() => s,
+            _ => continue,
+        };
+        for index in [IndexKind::Bitset, IndexKind::Map, IndexKind::Compressed] {
+            for flat in [FlatPolicy::Materialize, FlatPolicy::Elide] {
+                let v = SearchSpace::build_with(
+                    "prop",
+                    params.clone(),
+                    constraints.clone(),
+                    BuildOptions { index, flat },
+                )
+                .unwrap();
+                let ctx = format!("case {case} {index:?} {flat:?}");
+                assert_eq!(v.len(), base.len(), "{ctx}");
+                for i in 0..base.len() {
+                    assert_eq!(v.rank_of(i), base.rank_of(i), "{ctx} config {i}");
+                    assert_eq!(v.encoded_vec(i), base.encoded_vec(i), "{ctx} config {i}");
+                    assert_eq!(v.index_of_rank(base.rank_of(i)), Some(i), "{ctx} config {i}");
+                }
+                // Same-seed random-neighbor walks are identical streams.
+                let (mut ra, mut rb) = (Rng::new(case + 1), Rng::new(case + 1));
+                let (mut ca, mut cb) = (0usize, 0usize);
+                for hood in [Neighborhood::Hamming, Neighborhood::Adjacent] {
+                    for step in 0..40 {
+                        ca = base.random_neighbor(ca, hood, &mut ra);
+                        cb = v.random_neighbor(cb, hood, &mut rb);
+                        assert_eq!(ca, cb, "{ctx} {hood:?} step {step}");
+                    }
+                }
+                // Same-seed snap streams on shared off-lattice targets.
+                let (mut ra, mut rb) = (Rng::new(case + 77), Rng::new(case + 77));
+                for k in 0..20usize {
+                    let t: Vec<f64> = base
+                        .dims()
+                        .iter()
+                        .enumerate()
+                        .map(|(d, &dim)| ((k * 7 + d * 3) % (dim + 2)) as f64 - 0.7)
+                        .collect();
+                    assert_eq!(
+                        base.snap(&t, &mut ra),
+                        v.snap(&t, &mut rb),
+                        "{ctx} snap {k}"
+                    );
+                }
+            }
         }
     }
 }
