@@ -17,6 +17,8 @@
 //!   executor   — persistent pool vs spawn-per-call + campaign rate
 //!   sweep      — full-registry hypertune sweep smoke (every grid-bearing
 //!                optimizer, tiny budget, synthetic kernel)
+//!   metasweep  — meta-strategy race smoke (all registered strategies vs a
+//!                prebuilt exhaustive reference, synthetic kernel)
 //!   hypertune  — one exhaustive campaign + meta-level scoring (Tables III/IV,
 //!                Figs 2-9 building block)
 //!
@@ -728,6 +730,51 @@ fn main() {
         b.run("sweep/registry_smoke", || {
             let r = hypertuning::sweep_registry(&train, 1, 3, Arc::clone(&observer)).unwrap();
             r.optimizers.len()
+        });
+    }
+
+    // ---- metasweep: meta-strategy race smoke (PR 8) --------------------------------
+    // Every registered meta-strategy raced against a prebuilt exhaustive
+    // reference on the same tiny synthetic training space: the race
+    // wall-clock lands in the perf trajectory (BENCH_8.json) next to the
+    // sweep smoke it budgets against. The reference sweep is built once
+    // outside the timed body — the bench measures the strategies, not the
+    // exhaustive grid they are scored against.
+    let wants_metasweep = b
+        .filter
+        .as_ref()
+        .map(|f| {
+            f.split(',')
+                .any(|alt| !alt.is_empty() && "metasweep/registry_smoke".contains(alt))
+        })
+        .unwrap_or(true);
+    if wants_metasweep {
+        let kernel = kernels::kernel_by_name("synthetic").unwrap();
+        let mut live = LiveRunner::new(
+            kernels::kernel_by_name("synthetic").unwrap(),
+            &A100,
+            Arc::clone(&engine),
+            NoiseModel::default(),
+            42,
+        );
+        let syn_cache = Arc::new(bruteforce::bruteforce(&mut live).unwrap());
+        let train = vec![SpaceEval::new(kernel.space_arc(), syn_cache, 0.95, 15)];
+        let observer: Arc<dyn tunetuner::campaign::Observer> =
+            Arc::new(tunetuner::campaign::NullObserver);
+        let reference =
+            hypertuning::sweep_registry(&train, 2, 3, Arc::clone(&observer)).unwrap();
+        let config = hypertuning::MetaSweepConfig::default();
+        b.run("metasweep/registry_smoke", || {
+            let r = hypertuning::metasweep_registry(
+                &train,
+                2,
+                3,
+                &reference,
+                &config,
+                Arc::clone(&observer),
+            )
+            .unwrap();
+            r.strategies.len()
         });
     }
 

@@ -14,6 +14,12 @@
 //! scheduling. The guaranteed partial order: every `space_started`
 //! precedes every `run_started`/`trace_completed` of the campaign, and
 //! every `trace_completed` precedes every `space_scored`.
+//!
+//! Higher-level drivers reuse the same trait: the registry sweep emits
+//! the `sweep_*` family and the metasweep the `meta_*` family, both
+//! strictly ordered from their driving thread (see the per-family
+//! comments below), wrapped around the campaign events of the runs they
+//! launch.
 
 /// Receives campaign progress events. Implementations must be cheap and
 /// non-blocking — `trace_completed` fires on the tuning hot path.
@@ -79,6 +85,54 @@ pub trait Observer: Send + Sync {
 
     /// The sweep finished with its mean improvement percentage.
     fn sweep_finished(&self, _mean_improvement_pct: f64, _wallclock_seconds: f64) {}
+
+    // ---- metasweep events (`hypertuning::metasweep`) ------------------------
+    // Emitted from the metasweep-driving thread, strictly ordered:
+    // `meta_sweep_started`, then per (strategy, target) leg
+    // `meta_leg_started` .. `meta_eval_scored`* .. `meta_leg_finished`,
+    // and finally `meta_sweep_finished`. Every `meta_eval_scored` fires
+    // after the underlying campaign's `campaign_finished`; legs replayed
+    // from a resumed envelope emit `meta_leg_started`/`meta_leg_finished`
+    // with no `meta_eval_scored` in between.
+
+    /// A metasweep began: number of strategies raced and the full-budget
+    /// repeat count (the cost-unit denominator).
+    fn meta_sweep_started(&self, _strategies: usize, _repeats: usize) {}
+
+    /// One (strategy, target) leg began with its grid size and budget in
+    /// full-repeat-equivalent units. `target` is an optimizer name, or
+    /// `"registry"` for registry-wide strategies.
+    fn meta_leg_started(&self, _strategy: &str, _target: &str, _configs: usize, _budget_cost: f64) {
+    }
+
+    /// A strategy's fresh (non-memoized) meta-evaluation was scored:
+    /// running eval count within the leg, the evaluated hyperparameter
+    /// key, the repeats it ran at, and its Eq. 3 score.
+    fn meta_eval_scored(
+        &self,
+        _strategy: &str,
+        _target: &str,
+        _eval: usize,
+        _hp_key: &str,
+        _repeats: usize,
+        _score: f64,
+    ) {
+    }
+
+    /// One leg finished: best full-repeat score found, cost actually
+    /// spent, and fresh evaluations performed.
+    fn meta_leg_finished(
+        &self,
+        _strategy: &str,
+        _target: &str,
+        _best_score: f64,
+        _spent_cost: f64,
+        _evals: usize,
+    ) {
+    }
+
+    /// The metasweep finished.
+    fn meta_sweep_finished(&self, _wallclock_seconds: f64) {}
 }
 
 /// Ignores every event (the default for batch/library use).
@@ -146,5 +200,48 @@ impl Observer for LogObserver {
             "registry sweep done: mean improvement {mean_improvement_pct:+.1}% \
              in {wallclock_seconds:.1}s"
         );
+    }
+
+    fn meta_sweep_started(&self, strategies: usize, repeats: usize) {
+        crate::log_info!("metasweep: {strategies} strategies, {repeats} full repeats");
+    }
+
+    fn meta_leg_started(&self, strategy: &str, target: &str, configs: usize, budget_cost: f64) {
+        crate::log_info!(
+            "metasweep {strategy}/{target}: {configs} configs, budget {budget_cost:.1}"
+        );
+    }
+
+    fn meta_eval_scored(
+        &self,
+        strategy: &str,
+        target: &str,
+        eval: usize,
+        hp_key: &str,
+        repeats: usize,
+        score: f64,
+    ) {
+        let hp = if hp_key.is_empty() { "defaults" } else { hp_key };
+        crate::log_debug!(
+            "  {strategy}/{target} eval {eval} [{hp}] @{repeats}r: score {score:.3}"
+        );
+    }
+
+    fn meta_leg_finished(
+        &self,
+        strategy: &str,
+        target: &str,
+        best_score: f64,
+        spent_cost: f64,
+        evals: usize,
+    ) {
+        crate::log_info!(
+            "metasweep {strategy}/{target}: best {best_score:.3} \
+             ({evals} evals, {spent_cost:.1} units)"
+        );
+    }
+
+    fn meta_sweep_finished(&self, wallclock_seconds: f64) {
+        crate::log_info!("metasweep done in {wallclock_seconds:.1}s");
     }
 }

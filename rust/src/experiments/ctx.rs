@@ -169,18 +169,33 @@ impl Ctx {
         self.spaces_for(&devices, "all")
     }
 
-    /// Exhaustive limited hypertuning results for an algorithm, loaded
-    /// from the results dir when present, else computed and persisted.
+    /// Exhaustive limited hypertuning results for an algorithm at the
+    /// scale's tuning repeats, loaded from the results dir when present,
+    /// else computed and persisted.
     pub fn limited_results(&self, algo: &str) -> Result<Arc<exhaustive::HyperTuningResults>> {
-        let key = format!("{algo}-limited");
+        self.limited_results_at(algo, self.scale.tuning_repeats)
+    }
+
+    /// [`Ctx::limited_results`] at an explicit repeat count (`tunetuner
+    /// sweep --repeats`). Off-scale repeat counts persist under a
+    /// repeats-tagged filename so they never shadow the scale's own
+    /// results.
+    pub fn limited_results_at(
+        &self,
+        algo: &str,
+        repeats: usize,
+    ) -> Result<Arc<exhaustive::HyperTuningResults>> {
+        let key = format!("{algo}-limited-r{repeats}");
         if let Some(r) = self.hyper.lock().unwrap().get(&key) {
             return Ok(Arc::clone(r));
         }
-        let path = self
-            .results_dir
-            .join(format!("hypertuning_{algo}_limited_{}.json.gz", self.scale_name));
+        let path = self.results_dir.join(format!(
+            "hypertuning_{algo}_limited_{}{}.json.gz",
+            self.scale_name,
+            self.repeats_suffix(repeats)
+        ));
         let hp_space = hypertuning::limited_space(algo)?;
-        let results = if let Some(r) = load_if_current(&path, &hp_space)? {
+        let results = if let Some(r) = load_if_current(&path, &hp_space, repeats)? {
             r
         } else {
             let train = self.train_spaces()?;
@@ -188,14 +203,14 @@ impl Ctx {
                 "exhaustive hypertuning {algo}: {} configs x {} spaces x {} repeats",
                 hp_space.len(),
                 train.len(),
-                self.scale.tuning_repeats
+                repeats
             );
             let r = exhaustive::exhaustive_tuning_observed(
                 algo,
                 &hp_space,
                 "limited",
                 &train,
-                self.scale.tuning_repeats,
+                repeats,
                 self.seed,
                 Arc::clone(&self.observer),
             )?;
@@ -218,7 +233,8 @@ impl Ctx {
             .results_dir
             .join(format!("hypertuning_{algo}_extended_{}.json.gz", self.scale_name));
         let hp_space = Arc::new(hypertuning::extended_space(algo)?);
-        let results = if let Some(r) = load_if_current(&path, &hp_space)? {
+        let results = if let Some(r) = load_if_current(&path, &hp_space, self.scale.tuning_repeats)?
+        {
             r
         } else {
             let train = self.train_spaces()?;
@@ -279,39 +295,101 @@ impl Ctx {
     /// envelope is persisted to the results dir as
     /// `sweep_registry_<scale>.json.gz`.
     pub fn registry_sweep(&self) -> Result<sweep::SweepResult> {
+        self.registry_sweep_at(None)
+    }
+
+    /// [`Ctx::registry_sweep`] at an explicit repeat count (`tunetuner
+    /// sweep --repeats`); `None` uses the scale's tuning repeats.
+    /// Off-scale repeat counts persist under a repeats-tagged filename.
+    pub fn registry_sweep_at(&self, repeats_override: Option<usize>) -> Result<sweep::SweepResult> {
+        let repeats = repeats_override.unwrap_or(self.scale.tuning_repeats);
         let train = self.train_spaces()?;
         let result = sweep::sweep_registry_with(
             &train,
-            self.scale.tuning_repeats,
+            repeats,
             self.seed,
             Arc::clone(&self.observer),
-            |algo| self.limited_results(algo),
+            |algo| self.limited_results_at(algo, repeats),
         )?;
-        let path = self
-            .results_dir
-            .join(format!("sweep_registry_{}.json.gz", self.scale_name));
+        let path = self.results_dir.join(format!(
+            "sweep_registry_{}{}.json.gz",
+            self.scale_name,
+            self.repeats_suffix(repeats)
+        ));
         result.save(&path)?;
         Ok(result)
+    }
+
+    /// The metasweep (`tunetuner metasweep`): race the configured
+    /// meta-strategies against the exhaustive registry sweep at the same
+    /// repeats/seed. The reference sweep is loaded/computed through
+    /// [`Ctx::registry_sweep_at`] (resuming from persisted per-algorithm
+    /// campaigns); the metasweep itself resumes from a previously
+    /// persisted `metasweep_registry_<scale>.json.gz` envelope when its
+    /// fingerprints and parameters still match.
+    pub fn registry_metasweep(
+        &self,
+        config: &hypertuning::MetaSweepConfig,
+        repeats_override: Option<usize>,
+    ) -> Result<hypertuning::MetaSweepResult> {
+        let repeats = repeats_override.unwrap_or(self.scale.tuning_repeats);
+        let reference = self.registry_sweep_at(repeats_override)?;
+        let train = self.train_spaces()?;
+        let path = self.results_dir.join(format!(
+            "metasweep_registry_{}{}.json.gz",
+            self.scale_name,
+            self.repeats_suffix(repeats)
+        ));
+        // A stale/corrupt prior is never fatal: the driver re-verifies
+        // every fingerprint and simply re-runs what doesn't match.
+        let prior = if path.exists() {
+            hypertuning::MetaSweepResult::load(&path).ok()
+        } else {
+            None
+        };
+        let result = hypertuning::metasweep_registry_with(
+            &train,
+            repeats,
+            self.seed,
+            &reference,
+            config,
+            prior.as_ref(),
+            Arc::clone(&self.observer),
+        )?;
+        result.save(&path)?;
+        Ok(result)
+    }
+
+    fn repeats_suffix(&self, repeats: usize) -> String {
+        if repeats == self.scale.tuning_repeats {
+            String::new()
+        } else {
+            format!("_r{repeats}")
+        }
     }
 }
 
 /// Load persisted hypertuning results only when their space fingerprint
-/// matches the current schema-derived space. A stale (or pre-fingerprint)
-/// file triggers recomputation instead of silently misdecoding its
-/// `config_idx` values against a changed grid.
+/// matches the current schema-derived space and their repeat count
+/// matches the request. A stale (or pre-fingerprint) file triggers
+/// recomputation instead of silently misdecoding its `config_idx`
+/// values against a changed grid — or comparing scores averaged over a
+/// different number of repeats.
 fn load_if_current(
     path: &std::path::Path,
     hp_space: &crate::searchspace::SearchSpace,
+    repeats: usize,
 ) -> Result<Option<exhaustive::HyperTuningResults>> {
     if !path.exists() {
         return Ok(None);
     }
     let r = exhaustive::HyperTuningResults::load(path)?;
-    if r.space_key == exhaustive::space_fingerprint(hp_space) {
+    if r.space_key == exhaustive::space_fingerprint(hp_space) && r.repeats == repeats {
         Ok(Some(r))
     } else {
         crate::log_warn!(
-            "stale hypertuning results at {} (hyperparameter space changed); recomputing",
+            "stale hypertuning results at {} (hyperparameter space or repeats changed); \
+             recomputing",
             path.display()
         );
         Ok(None)

@@ -1,0 +1,1456 @@
+//! Metasweep: race every registered meta-strategy against the
+//! exhaustive sweep's optimum.
+//!
+//! The exhaustive sweep ([`super::sweep`]) is the golden reference: it
+//! scores every configuration of every limited grid, so its best is the
+//! true optimum and its cost is the ceiling (one full-repeat-equivalent
+//! unit per configuration). The metasweep gives each registered
+//! [`MetaStrategy`](super::strategy::MetaStrategy) a fraction of that
+//! cost ([`DEFAULT_BUDGET_FRACTION`] unless overridden) and scores the
+//! *methodology*: how much of the exhaustive best-vs-default improvement
+//! does the strategy recover, at what fraction of the exhaustive
+//! meta-evaluations, and with how much regret against the optimum?
+//! Because a full-repeat meta-evaluation reproduces the exhaustive
+//! campaign bitwise, regret is exact — the strategy's best is a member
+//! of the reference score array, never an estimate.
+//!
+//! Results aggregate into a versioned [`MetaSweepResult`] envelope
+//! (schema [`METASWEEP_SCHEMA`]) carrying per-(strategy, target) legs
+//! with budgets, spent cost, best keys/scores, regret and recovery,
+//! plus the training-space and hyperparameter-space fingerprints as
+//! staleness provenance: [`metasweep_registry_with`] reuses a prior
+//! envelope's legs only when seed, repeats, rung parameters, budgets
+//! and every fingerprint still match. `tunetuner metasweep
+//! [--strategy S] [--budget N] [--json]` drives it from the CLI;
+//! progress streams through the [`Observer::meta_sweep_started`]-family
+//! events.
+
+use super::space;
+use super::strategy::{self, MetaBudget, MetaCampaign};
+use super::sweep::{improvement_pct, SweepResult, SweptSpace};
+use crate::campaign::Observer;
+use crate::error::{Context, Result, TuneError};
+use crate::methodology::SpaceEval;
+use crate::optimizers;
+use crate::report::Report;
+use crate::util::json::{self, Json};
+use crate::util::rng::{mix64, Rng};
+use crate::util::table::{fmt_duration, Table};
+use std::path::Path;
+use std::sync::Arc;
+
+/// Schema tag of the serialized metasweep envelope.
+pub const METASWEEP_SCHEMA: &str = "tunetuner-metasweep";
+
+/// Version of the serialized metasweep envelope; bump on breaking changes.
+pub const METASWEEP_SCHEMA_VERSION: u64 = 1;
+
+/// Fraction of the exhaustive sweep's cost a strategy may spend when no
+/// explicit `--budget` override is given: the paper's "a quarter of the
+/// grid" operating point the acceptance gates are phrased against.
+pub const DEFAULT_BUDGET_FRACTION: f64 = 0.25;
+
+/// Full-repeat evaluation floor granted to non-racing (surrogate)
+/// strategies on tiny grids: a quarter of an 8-config grid would be two
+/// evaluations, too few for any surrogate to act on.
+const SMALL_GRID_FLOOR: f64 = 8.0;
+
+/// How a metasweep is parameterized beyond (train, repeats, seed).
+#[derive(Clone, Debug)]
+pub struct MetaSweepConfig {
+    /// Strategy names to race, in this order; empty means the whole
+    /// registry ([`strategy::strategies`] order).
+    pub strategies: Vec<String>,
+    /// Per-leg budget override in full-repeat-equivalent units (per
+    /// optimizer leg for per-optimizer strategies, total for the
+    /// registry-wide portfolio leg). `None` uses the
+    /// [`DEFAULT_BUDGET_FRACTION`] allocator.
+    pub budget: Option<f64>,
+    /// Racing rung growth factor (see [`MetaBudget::eta`]).
+    pub eta: usize,
+    /// Repeats of the cheapest racing rung.
+    pub min_repeats: usize,
+}
+
+impl Default for MetaSweepConfig {
+    fn default() -> MetaSweepConfig {
+        MetaSweepConfig {
+            strategies: Vec::new(),
+            budget: None,
+            eta: 4,
+            min_repeats: 1,
+        }
+    }
+}
+
+/// One (strategy, target) leg of a metasweep.
+#[derive(Clone, Debug)]
+pub struct StrategyLeg {
+    pub strategy: String,
+    /// Optimizer name, or `"registry"` for registry-wide strategies.
+    pub target: String,
+    /// Optimizer of the best configuration (equals `target` except for
+    /// registry-wide legs, where it is the race winner).
+    pub algo: String,
+    /// Fingerprint of the hyperparameter space the best configuration
+    /// lives in (staleness provenance for resume).
+    pub hp_space_key: String,
+    /// Exhaustive meta-evaluations of the reference this leg is measured
+    /// against: the grid size, or the sum of all grids for registry-wide
+    /// legs.
+    pub configs: usize,
+    /// Budget granted, in full-repeat-equivalent units.
+    pub budget_cost: f64,
+    /// Cost actually charged.
+    pub spent_cost: f64,
+    /// Fresh (non-memoized) evaluations performed.
+    pub evals: usize,
+    pub best_config_idx: usize,
+    pub best_hp_key: String,
+    /// Best full-repeat Eq. 3 score the strategy found.
+    pub best_score: f64,
+    /// The reference default: the schema-default score of `target`, or
+    /// the best default across the registry for registry-wide legs.
+    pub default_score: f64,
+    /// The exhaustive optimum this leg is chasing.
+    pub exhaustive_best_score: f64,
+    /// `exhaustive_best_score - best_score` — exact, not estimated,
+    /// because full-repeat meta-evaluations match the reference bitwise.
+    pub regret: f64,
+    /// [`leg_recovery`] of this leg, clamped to `[0, 1]` for display.
+    pub improvement_recovered: f64,
+    /// `spent_cost / configs` — the leg's cost relative to exhaustive.
+    pub cost_fraction: f64,
+    /// Real seconds this leg took (0 when replayed from a prior
+    /// envelope).
+    pub wallclock_seconds: f64,
+}
+
+/// All legs of one strategy, in leg (= optimizer registration) order.
+#[derive(Clone, Debug)]
+pub struct StrategyRun {
+    pub strategy: String,
+    pub legs: Vec<StrategyLeg>,
+    pub wallclock_seconds: f64,
+}
+
+impl StrategyRun {
+    /// Mean [`improvement_pct`] of the strategy's bests over the
+    /// reference defaults.
+    pub fn mean_improvement_pct(&self) -> f64 {
+        let pcts: Vec<f64> = self
+            .legs
+            .iter()
+            .map(|l| improvement_pct(l.default_score, l.best_score))
+            .collect();
+        crate::util::stats::mean(&pcts)
+    }
+
+    /// Mean [`improvement_pct`] of the exhaustive optima over the same
+    /// defaults — what a 100% recovery would score.
+    pub fn exhaustive_mean_improvement_pct(&self) -> f64 {
+        let pcts: Vec<f64> = self
+            .legs
+            .iter()
+            .map(|l| improvement_pct(l.default_score, l.exhaustive_best_score))
+            .collect();
+        crate::util::stats::mean(&pcts)
+    }
+
+    /// Fraction of the exhaustive mean improvement this strategy
+    /// recovered: the ratio of the two means above (so legs with large
+    /// improvements dominate, and near-degenerate legs cannot blow the
+    /// ratio up). When the exhaustive mean itself is not meaningfully
+    /// positive there is nothing to recover: matching it counts as 1.0,
+    /// falling short as 0.0.
+    pub fn recovery(&self) -> f64 {
+        if self.legs.is_empty() {
+            return 0.0;
+        }
+        let got = self.mean_improvement_pct();
+        let exh = self.exhaustive_mean_improvement_pct();
+        if exh > 1e-9 {
+            got / exh
+        } else if got >= exh - 1e-9 {
+            1.0
+        } else {
+            0.0
+        }
+    }
+
+    /// Total cost spent relative to the exhaustive meta-evaluations of
+    /// every target this strategy raced.
+    pub fn cost_fraction(&self) -> f64 {
+        let configs: usize = self.legs.iter().map(|l| l.configs).sum();
+        if configs == 0 {
+            return 0.0;
+        }
+        self.spent_cost() / configs as f64
+    }
+
+    /// Total cost charged across legs, in full-repeat-equivalent units.
+    pub fn spent_cost(&self) -> f64 {
+        self.legs.iter().map(|l| l.spent_cost).sum()
+    }
+
+    /// Total fresh evaluations across legs.
+    pub fn evals(&self) -> usize {
+        self.legs.iter().map(|l| l.evals).sum()
+    }
+}
+
+/// Per-leg recovered-improvement fraction, clamped to `[0, 1]`:
+/// `(best - default) / (exhaustive_best - default)`. A degenerate leg
+/// (exhaustive best within `1e-12` of the default) counts as fully
+/// recovered when the strategy matched it.
+pub fn leg_recovery(default_score: f64, best_score: f64, exhaustive_best: f64) -> f64 {
+    let exh = exhaustive_best - default_score;
+    let got = best_score - default_score;
+    if exh.abs() <= 1e-12 {
+        if got >= -1e-12 {
+            1.0
+        } else {
+            0.0
+        }
+    } else {
+        (got / exh).clamp(0.0, 1.0)
+    }
+}
+
+/// The complete, serializable outcome of a metasweep.
+#[derive(Clone, Debug)]
+pub struct MetaSweepResult {
+    /// Grid kind the strategies searched (always `"limited"`, matching
+    /// the reference sweep).
+    pub space_kind: String,
+    /// Full-budget repeat count — the exhaustive sweep's repeats, and
+    /// the cost-unit denominator.
+    pub repeats: usize,
+    pub seed: u64,
+    /// Racing rung growth factor the run used.
+    pub eta: usize,
+    /// Cheapest-rung repeats the run used.
+    pub min_repeats: usize,
+    /// The training spaces every campaign ran on, in space order.
+    pub train: Vec<SweptSpace>,
+    /// The reference sweep's mean improvement (provenance: which
+    /// exhaustive result the regrets were computed against).
+    pub reference_mean_improvement_pct: f64,
+    /// One run per raced strategy, in race order.
+    pub strategies: Vec<StrategyRun>,
+    /// Real seconds the whole metasweep took.
+    pub wallclock_seconds: f64,
+}
+
+impl MetaSweepResult {
+    /// The run for `strategy`, if it was raced.
+    pub fn run(&self, strategy: &str) -> Option<&StrategyRun> {
+        self.strategies.iter().find(|s| s.strategy == strategy)
+    }
+
+    // ---- persistence ---------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let train: Vec<Json> = self
+            .train
+            .iter()
+            .map(|t| {
+                let mut o = Json::obj();
+                o.set("label", t.label.as_str().into())
+                    .set("space_fingerprint", t.space_fingerprint.as_str().into());
+                o
+            })
+            .collect();
+        let runs: Vec<Json> = self
+            .strategies
+            .iter()
+            .map(|s| {
+                let legs: Vec<Json> = s
+                    .legs
+                    .iter()
+                    .map(|l| {
+                        let mut j = Json::obj();
+                        j.set("strategy", l.strategy.as_str().into())
+                            .set("target", l.target.as_str().into())
+                            .set("algo", l.algo.as_str().into())
+                            .set("hp_space_key", l.hp_space_key.as_str().into())
+                            .set("configs", l.configs.into())
+                            .set("budget_cost", l.budget_cost.into())
+                            .set("spent_cost", l.spent_cost.into())
+                            .set("evals", l.evals.into())
+                            .set("best_config_idx", l.best_config_idx.into())
+                            .set("best_hp_key", l.best_hp_key.as_str().into())
+                            .set("best_score", l.best_score.into())
+                            .set("default_score", l.default_score.into())
+                            .set("exhaustive_best_score", l.exhaustive_best_score.into())
+                            .set("regret", l.regret.into())
+                            .set("improvement_recovered", l.improvement_recovered.into())
+                            .set("cost_fraction", l.cost_fraction.into())
+                            .set("wallclock_seconds", l.wallclock_seconds.into());
+                        j
+                    })
+                    .collect();
+                let mut j = Json::obj();
+                j.set("strategy", s.strategy.as_str().into())
+                    .set("legs", Json::Arr(legs))
+                    .set("wallclock_seconds", s.wallclock_seconds.into());
+                j
+            })
+            .collect();
+        let mut j = Json::obj();
+        j.set("schema", METASWEEP_SCHEMA.into())
+            .set("schema_version", (METASWEEP_SCHEMA_VERSION as f64).into())
+            .set("space_kind", self.space_kind.as_str().into())
+            .set("repeats", self.repeats.into())
+            // String, not number: JSON numbers are f64 and would corrupt
+            // seeds >= 2^53 on the round-trip (same as SweepResult).
+            .set("seed", self.seed.to_string().as_str().into())
+            .set("eta", self.eta.into())
+            .set("min_repeats", self.min_repeats.into())
+            .set("train", Json::Arr(train))
+            .set(
+                "reference_mean_improvement_pct",
+                self.reference_mean_improvement_pct.into(),
+            )
+            .set("strategies", Json::Arr(runs))
+            .set("wallclock_seconds", self.wallclock_seconds.into());
+        j
+    }
+
+    /// Parse an envelope previously produced by [`to_json`](Self::to_json).
+    pub fn from_json(j: &Json) -> Result<MetaSweepResult> {
+        if j.get("schema").and_then(|v| v.as_str()) != Some(METASWEEP_SCHEMA) {
+            crate::bail!("not a {METASWEEP_SCHEMA} envelope");
+        }
+        let version = j
+            .get("schema_version")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0) as u64;
+        if version > METASWEEP_SCHEMA_VERSION {
+            crate::bail!(
+                "metasweep envelope version {version} is newer than this \
+                 binary's {METASWEEP_SCHEMA_VERSION}"
+            );
+        }
+        let train = j
+            .get("train")
+            .and_then(|v| v.as_arr())
+            .unwrap_or(&[])
+            .iter()
+            .map(|t| SweptSpace {
+                label: t
+                    .get("label")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or_default()
+                    .to_string(),
+                space_fingerprint: t
+                    .get("space_fingerprint")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or_default()
+                    .to_string(),
+            })
+            .collect();
+        let mut runs = Vec::new();
+        for s in j
+            .get("strategies")
+            .and_then(|v| v.as_arr())
+            .context("missing strategies")?
+        {
+            let mut legs = Vec::new();
+            for l in s.get("legs").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+                let str_field = |k: &str| -> String {
+                    l.get(k).and_then(|v| v.as_str()).unwrap_or_default().to_string()
+                };
+                let num_field =
+                    |k: &str| -> f64 { l.get(k).and_then(|v| v.as_f64()).unwrap_or(f64::NAN) };
+                legs.push(StrategyLeg {
+                    strategy: str_field("strategy"),
+                    target: l
+                        .get("target")
+                        .and_then(|v| v.as_str())
+                        .context("leg missing target")?
+                        .to_string(),
+                    algo: str_field("algo"),
+                    hp_space_key: str_field("hp_space_key"),
+                    configs: l.get("configs").and_then(|v| v.as_usize()).unwrap_or(0),
+                    budget_cost: num_field("budget_cost"),
+                    spent_cost: num_field("spent_cost"),
+                    evals: l.get("evals").and_then(|v| v.as_usize()).unwrap_or(0),
+                    best_config_idx: l
+                        .get("best_config_idx")
+                        .and_then(|v| v.as_usize())
+                        .unwrap_or(0),
+                    best_hp_key: str_field("best_hp_key"),
+                    best_score: num_field("best_score"),
+                    default_score: num_field("default_score"),
+                    exhaustive_best_score: num_field("exhaustive_best_score"),
+                    regret: num_field("regret"),
+                    improvement_recovered: num_field("improvement_recovered"),
+                    cost_fraction: num_field("cost_fraction"),
+                    wallclock_seconds: num_field("wallclock_seconds"),
+                });
+            }
+            runs.push(StrategyRun {
+                strategy: s
+                    .get("strategy")
+                    .and_then(|v| v.as_str())
+                    .context("run missing strategy")?
+                    .to_string(),
+                legs,
+                wallclock_seconds: s
+                    .get("wallclock_seconds")
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(0.0),
+            });
+        }
+        Ok(MetaSweepResult {
+            space_kind: j
+                .get("space_kind")
+                .and_then(|v| v.as_str())
+                .unwrap_or("limited")
+                .to_string(),
+            repeats: j.get("repeats").and_then(|v| v.as_usize()).unwrap_or(0),
+            seed: match j.get("seed") {
+                Some(Json::Str(s)) => s.parse().unwrap_or(0),
+                Some(v) => v.as_f64().unwrap_or(0.0) as u64,
+                None => 0,
+            },
+            eta: j.get("eta").and_then(|v| v.as_usize()).unwrap_or(4),
+            min_repeats: j.get("min_repeats").and_then(|v| v.as_usize()).unwrap_or(1),
+            train,
+            reference_mean_improvement_pct: j
+                .get("reference_mean_improvement_pct")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(f64::NAN),
+            strategies: runs,
+            wallclock_seconds: j
+                .get("wallclock_seconds")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0),
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        crate::util::compress::write_string(path, &self.to_json().to_string())
+    }
+
+    pub fn load(path: &Path) -> Result<MetaSweepResult> {
+        MetaSweepResult::from_json(&json::parse(&crate::util::compress::read_string(path)?)?)
+    }
+}
+
+/// Per-optimizer leg budgets, in full-repeat-equivalent units.
+///
+/// Racing strategies spend mostly cheap low-repeat rungs, so their
+/// budget scales purely with grid size: `DEFAULT_BUDGET_FRACTION * g`
+/// per grid. Full-repeat (surrogate) strategies additionally get a
+/// [`SMALL_GRID_FLOOR`] on tiny grids, with the excess shaved
+/// proportionally from the over-floor legs so the total still fits
+/// `DEFAULT_BUDGET_FRACTION * sum(g)`. If even the floors alone exceed
+/// that cap (a registry of only tiny grids), the floors are granted
+/// as-is — a surrogate with two evaluations is noise, not a strategy.
+pub(crate) fn allocate_budgets(grids: &[usize], racing: bool) -> Vec<f64> {
+    let prop: Vec<f64> = grids
+        .iter()
+        .map(|&g| g as f64 * DEFAULT_BUDGET_FRACTION)
+        .collect();
+    if racing {
+        return prop;
+    }
+    let cap: f64 = prop.iter().sum();
+    let floors: Vec<f64> = grids.iter().map(|&g| (g as f64).min(SMALL_GRID_FLOOR)).collect();
+    let mut want: Vec<f64> = prop
+        .iter()
+        .zip(&floors)
+        .map(|(&p, &f)| p.max(f))
+        .collect();
+    let total: f64 = want.iter().sum();
+    let excess = total - cap;
+    if excess <= 1e-9 {
+        return want;
+    }
+    let slack: f64 = want.iter().zip(&floors).map(|(&w, &f)| w - f).sum();
+    if slack <= excess + 1e-9 {
+        return floors;
+    }
+    for (w, &f) in want.iter_mut().zip(&floors) {
+        *w -= (*w - f) / slack * excess;
+    }
+    want
+}
+
+/// Everything the driver needs about one per-optimizer target.
+struct LegTarget {
+    algo: &'static str,
+    hp_space: Arc<crate::searchspace::SearchSpace>,
+    default_score: f64,
+    exhaustive_best: f64,
+}
+
+/// Race the configured meta-strategies over `train`, measuring each
+/// against `reference` (a [`SweepResult`] from the same train/repeats/
+/// seed). See [`metasweep_registry_with`] for resuming from a prior
+/// envelope.
+pub fn metasweep_registry(
+    train: &[SpaceEval],
+    repeats: usize,
+    seed: u64,
+    reference: &SweepResult,
+    config: &MetaSweepConfig,
+    observer: Arc<dyn Observer>,
+) -> Result<MetaSweepResult> {
+    metasweep_registry_with(train, repeats, seed, reference, config, None, observer)
+}
+
+/// [`metasweep_registry`] resuming from `prior`: a leg is replayed (not
+/// re-run) when the prior envelope was produced under the same seed,
+/// repeats, rung parameters and budgets, and every fingerprint —
+/// training spaces, the leg's hyperparameter space, and the reference
+/// scores it was measured against — still matches. Anything stale is
+/// simply re-run; a prior from a different setup is ignored wholesale.
+pub fn metasweep_registry_with(
+    train: &[SpaceEval],
+    repeats: usize,
+    seed: u64,
+    reference: &SweepResult,
+    config: &MetaSweepConfig,
+    prior: Option<&MetaSweepResult>,
+    observer: Arc<dyn Observer>,
+) -> Result<MetaSweepResult> {
+    if train.is_empty() {
+        return Err(TuneError::InvalidInput(
+            "metasweep has no training spaces".into(),
+        ));
+    }
+    if repeats == 0 {
+        return Err(TuneError::InvalidInput("metasweep needs repeats >= 1".into()));
+    }
+    if reference.repeats != repeats || reference.seed != seed {
+        return Err(TuneError::InvalidInput(format!(
+            "reference sweep ran at {} repeats / seed {} but the metasweep \
+             wants {repeats} / {seed}: scores would not be comparable",
+            reference.repeats, reference.seed
+        )));
+    }
+    if reference.train.len() != train.len() {
+        return Err(TuneError::StaleCache(format!(
+            "reference sweep saw {} training spaces, metasweep has {}",
+            reference.train.len(),
+            train.len()
+        )));
+    }
+    for (rt, se) in reference.train.iter().zip(train) {
+        if rt.space_fingerprint != se.space.fingerprint() {
+            return Err(TuneError::StaleCache(format!(
+                "training space {:?} changed since the reference sweep \
+                 (fingerprint {:?} vs {:?})",
+                se.label,
+                se.space.fingerprint(),
+                rt.space_fingerprint
+            )));
+        }
+    }
+    // Resolve strategies up front: unknown or duplicate names are input
+    // errors before any campaign runs.
+    let descs: Vec<&'static strategy::StrategyDescriptor> = if config.strategies.is_empty() {
+        strategy::strategies().iter().collect()
+    } else {
+        config
+            .strategies
+            .iter()
+            .map(|n| strategy::strategy_by_name(n))
+            .collect::<Result<Vec<_>>>()?
+    };
+    for (i, d) in descs.iter().enumerate() {
+        if descs[..i].iter().any(|o| o.name == d.name) {
+            return Err(TuneError::InvalidInput(format!(
+                "meta-strategy {:?} listed twice",
+                d.name
+            )));
+        }
+    }
+    // Per-optimizer targets, verified against the reference: a missing
+    // entry or a drifted hyperparameter grid is stale, not comparable.
+    let mut targets = Vec::new();
+    for d in optimizers::hypertunable() {
+        let entry = reference.entry(d.name).ok_or_else(|| {
+            TuneError::StaleCache(format!(
+                "reference sweep has no entry for {:?}; re-run `tunetuner sweep`",
+                d.name
+            ))
+        })?;
+        let hp_space = Arc::new(space::limited_space(d.name)?);
+        if entry.space_key != hp_space.fingerprint() {
+            return Err(TuneError::StaleCache(format!(
+                "reference sweep for {} was computed on hyperparameter space \
+                 {:?} but the current schema derives {:?}",
+                d.name,
+                entry.space_key,
+                hp_space.fingerprint()
+            )));
+        }
+        if entry.configs != hp_space.len() {
+            return Err(TuneError::StaleCache(format!(
+                "reference sweep for {} carries {} configs but its \
+                 hyperparameter space has {}",
+                d.name,
+                entry.configs,
+                hp_space.len()
+            )));
+        }
+        targets.push(LegTarget {
+            algo: d.name,
+            hp_space,
+            default_score: entry.default_score,
+            exhaustive_best: entry.best_score,
+        });
+    }
+    // A prior envelope is usable only if produced under identical
+    // determinism inputs; otherwise ignore it wholesale.
+    let prior = prior.filter(|p| {
+        p.repeats == repeats
+            && p.seed == seed
+            && p.eta == config.eta
+            && p.min_repeats == config.min_repeats
+            && p.train.len() == train.len()
+            && p.train
+                .iter()
+                .zip(train)
+                .all(|(pt, se)| pt.space_fingerprint == se.space.fingerprint())
+    });
+    let t0 = std::time::Instant::now();
+    let train_arc: Arc<Vec<SpaceEval>> = Arc::new(train.to_vec());
+    observer.meta_sweep_started(descs.len(), repeats);
+    let registry_configs = reference.total_configs();
+    let mut runs = Vec::with_capacity(descs.len());
+    for desc in &descs {
+        let st0 = std::time::Instant::now();
+        let mut legs = Vec::new();
+        if desc.per_optimizer {
+            let grids: Vec<usize> = targets.iter().map(|t| t.hp_space.len()).collect();
+            let budgets: Vec<f64> = match config.budget {
+                Some(b) => vec![b; targets.len()],
+                None => allocate_budgets(&grids, desc.racing),
+            };
+            for (i, target) in targets.iter().enumerate() {
+                legs.push(run_leg(
+                    desc,
+                    target.algo,
+                    target.algo,
+                    Some(Arc::clone(&target.hp_space)),
+                    target.hp_space.len(),
+                    budgets[i],
+                    target.default_score,
+                    target.exhaustive_best,
+                    i as u64,
+                    &train_arc,
+                    repeats,
+                    seed,
+                    config,
+                    prior,
+                    &observer,
+                )?);
+            }
+        } else {
+            // Registry-wide leg: measured against the whole sweep — the
+            // best default any optimizer gets for free, the best score
+            // any grid reaches, and the sum of all grids as cost.
+            let default_score = best_finite(targets.iter().map(|t| t.default_score));
+            let exhaustive_best = best_finite(targets.iter().map(|t| t.exhaustive_best));
+            let budget = config
+                .budget
+                .unwrap_or(DEFAULT_BUDGET_FRACTION * registry_configs as f64);
+            legs.push(run_leg(
+                desc,
+                "registry",
+                "",
+                None,
+                registry_configs,
+                budget,
+                default_score,
+                exhaustive_best,
+                0,
+                &train_arc,
+                repeats,
+                seed,
+                config,
+                prior,
+                &observer,
+            )?);
+        }
+        runs.push(StrategyRun {
+            strategy: desc.name.to_string(),
+            legs,
+            wallclock_seconds: st0.elapsed().as_secs_f64(),
+        });
+    }
+    let result = MetaSweepResult {
+        space_kind: "limited".to_string(),
+        repeats,
+        seed,
+        eta: config.eta,
+        min_repeats: config.min_repeats,
+        train: train
+            .iter()
+            .map(|se| SweptSpace {
+                label: se.label.clone(),
+                space_fingerprint: se.space.fingerprint(),
+            })
+            .collect(),
+        reference_mean_improvement_pct: reference.mean_improvement_pct(),
+        strategies: runs,
+        wallclock_seconds: t0.elapsed().as_secs_f64(),
+    };
+    observer.meta_sweep_finished(result.wallclock_seconds);
+    Ok(result)
+}
+
+/// Best finite value of an iterator (NaN demoted), or NaN when empty /
+/// all-NaN.
+fn best_finite(values: impl Iterator<Item = f64>) -> f64 {
+    values.fold(f64::NAN, |acc, v| {
+        if v.is_nan() || (!acc.is_nan() && v <= acc) {
+            acc
+        } else {
+            v
+        }
+    })
+}
+
+/// Run (or replay from `prior`) one (strategy, target) leg.
+#[allow(clippy::too_many_arguments)]
+fn run_leg(
+    desc: &strategy::StrategyDescriptor,
+    target: &str,
+    algo: &str,
+    hp_space: Option<Arc<crate::searchspace::SearchSpace>>,
+    configs: usize,
+    budget_cost: f64,
+    default_score: f64,
+    exhaustive_best: f64,
+    leg_idx: u64,
+    train_arc: &Arc<Vec<SpaceEval>>,
+    repeats: usize,
+    seed: u64,
+    config: &MetaSweepConfig,
+    prior: Option<&MetaSweepResult>,
+    observer: &Arc<dyn Observer>,
+) -> Result<StrategyLeg> {
+    observer.meta_leg_started(desc.name, target, configs, budget_cost);
+    if let Some(leg) = prior
+        .and_then(|p| p.run(desc.name))
+        .and_then(|r| r.legs.iter().find(|l| l.target == target))
+        .filter(|l| {
+            l.budget_cost.to_bits() == budget_cost.to_bits()
+                && l.configs == configs
+                && l.default_score.to_bits() == default_score.to_bits()
+                && l.exhaustive_best_score.to_bits() == exhaustive_best.to_bits()
+                && leg_space_key(hp_space.as_deref(), &l.algo)
+                    .is_some_and(|k| k == l.hp_space_key)
+        })
+    {
+        let leg = leg.clone();
+        observer.meta_leg_finished(desc.name, target, leg.best_score, leg.spent_cost, leg.evals);
+        return Ok(leg);
+    }
+    let lt0 = std::time::Instant::now();
+    let mut mc = MetaCampaign::new(
+        algo,
+        hp_space.clone(),
+        Arc::clone(train_arc),
+        repeats,
+        seed,
+        MetaBudget {
+            max_cost: budget_cost,
+            max_wallclock: None,
+            eta: config.eta,
+            min_repeats: config.min_repeats,
+        },
+        Arc::clone(observer),
+        desc.name,
+        target,
+    )?;
+    let mut rng = Rng::new(mix64(seed, desc.tag)).fork(leg_idx);
+    let outcome = (desc.build)().run(&mut mc, &mut rng)?;
+    let hp_space_key = leg_space_key(hp_space.as_deref(), &outcome.algo).ok_or_else(|| {
+        TuneError::InvalidInput(format!(
+            "strategy {:?} returned unknown optimizer {:?}",
+            desc.name, outcome.algo
+        ))
+    })?;
+    observer.meta_leg_finished(desc.name, target, outcome.best_score, mc.spent(), mc.evals());
+    Ok(StrategyLeg {
+        strategy: desc.name.to_string(),
+        target: target.to_string(),
+        algo: outcome.algo.clone(),
+        hp_space_key,
+        configs,
+        budget_cost,
+        spent_cost: mc.spent(),
+        evals: mc.evals(),
+        best_config_idx: outcome.best_config_idx,
+        best_hp_key: outcome.best_hp_key,
+        best_score: outcome.best_score,
+        default_score,
+        exhaustive_best_score: exhaustive_best,
+        regret: exhaustive_best - outcome.best_score,
+        improvement_recovered: leg_recovery(default_score, outcome.best_score, exhaustive_best),
+        cost_fraction: if configs == 0 {
+            0.0
+        } else {
+            mc.spent() / configs as f64
+        },
+        wallclock_seconds: lt0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Fingerprint of the hyperparameter space a leg's best configuration
+/// lives in: the leg's own space for per-optimizer legs, the winner's
+/// derived limited space for registry-wide legs. `None` when `algo`
+/// has no limited grid (a registry-wide strategy misbehaving).
+fn leg_space_key(
+    hp_space: Option<&crate::searchspace::SearchSpace>,
+    algo: &str,
+) -> Option<String> {
+    match hp_space {
+        Some(s) => Some(s.fingerprint()),
+        None => space::limited_space(algo).ok().map(|s| s.fingerprint()),
+    }
+}
+
+/// Render the paper-style strategy-vs-exhaustive artifacts through a
+/// [`Report`] sink: the per-leg table and the per-strategy recovery/
+/// cost summary.
+pub fn render_report(result: &MetaSweepResult, report: &Report) -> Result<()> {
+    let mut table = Table::new(
+        &format!(
+            "Metasweep: {} strategies vs the exhaustive {} sweep, {} repeats, seed {}",
+            result.strategies.len(),
+            result.space_kind,
+            result.repeats,
+            result.seed
+        ),
+        &[
+            "strategy",
+            "target",
+            "configs",
+            "spent",
+            "evals",
+            "best",
+            "exh best",
+            "recov %",
+            "cost %",
+            "best hyperparameters",
+        ],
+    );
+    for s in &result.strategies {
+        for l in &s.legs {
+            table.row(vec![
+                l.strategy.clone(),
+                if l.target == l.algo || l.algo.is_empty() {
+                    l.target.clone()
+                } else {
+                    format!("{} -> {}", l.target, l.algo)
+                },
+                l.configs.to_string(),
+                format!("{:.1}", l.spent_cost),
+                l.evals.to_string(),
+                format!("{:+.3}", l.best_score),
+                format!("{:+.3}", l.exhaustive_best_score),
+                format!("{:.1}", l.improvement_recovered * 100.0),
+                format!("{:.1}", l.cost_fraction * 100.0),
+                l.best_hp_key.clone(),
+            ]);
+        }
+    }
+    report.table(&table)?;
+    let mut lines = String::new();
+    for s in &result.strategies {
+        lines.push_str(&format!(
+            "{}: recovered {:.1}% of the exhaustive improvement ({:+.1}% of \
+             {:+.1}%) at {:.1}% of its meta-evaluations ({:.1} units, {} evals)\n",
+            s.strategy,
+            s.recovery() * 100.0,
+            s.mean_improvement_pct(),
+            s.exhaustive_mean_improvement_pct(),
+            s.cost_fraction() * 100.0,
+            s.spent_cost(),
+            s.evals(),
+        ));
+    }
+    lines.push_str(&format!(
+        "reference: exhaustive sweep mean improvement {:+.1}%; metasweep took {}\n",
+        result.reference_mean_improvement_pct,
+        fmt_duration(result.wallclock_seconds)
+    ));
+    report.summary(&lines)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::NullObserver;
+    use crate::dataset::bruteforce;
+    use crate::gpu::specs::A100;
+    use crate::kernels;
+    use crate::perfmodel::NoiseModel;
+    use crate::runner::LiveRunner;
+    use crate::runtime::Engine;
+    use std::sync::{Mutex, OnceLock};
+
+    /// Full-budget repeats of the shared fixture: 8 gives the halving
+    /// ladder [1, 8] a whole-grid cheap rung within the 25% budget.
+    const REPEATS: usize = 8;
+    const SEED: u64 = 7;
+
+    fn train() -> &'static Vec<SpaceEval> {
+        static TRAIN: OnceLock<Vec<SpaceEval>> = OnceLock::new();
+        TRAIN.get_or_init(|| {
+            let kernel = kernels::kernel_by_name("synthetic").unwrap();
+            let mut live = LiveRunner::new(
+                kernels::kernel_by_name("synthetic").unwrap(),
+                &A100,
+                std::sync::Arc::new(Engine::native()),
+                NoiseModel::default(),
+                42,
+            );
+            let cache = Arc::new(bruteforce::bruteforce(&mut live).unwrap());
+            vec![SpaceEval::new(kernel.space_arc(), cache, 0.95, 10)]
+        })
+    }
+
+    /// The exhaustive reference every assertion compares against — one
+    /// full-registry sweep at the fixture repeats (~300 campaigns).
+    fn reference() -> &'static SweepResult {
+        static REF: OnceLock<SweepResult> = OnceLock::new();
+        REF.get_or_init(|| {
+            super::super::sweep::sweep_registry(train(), REPEATS, SEED, Arc::new(NullObserver))
+                .unwrap()
+        })
+    }
+
+    fn config() -> MetaSweepConfig {
+        MetaSweepConfig {
+            eta: 8,
+            ..MetaSweepConfig::default()
+        }
+    }
+
+    /// One shared metasweep of every registered strategy for the
+    /// read-only assertions; the determinism test runs its own second,
+    /// fresh metasweep (with a collecting observer) to compare against.
+    fn run_metasweep() -> &'static MetaSweepResult {
+        static RESULT: OnceLock<MetaSweepResult> = OnceLock::new();
+        RESULT.get_or_init(|| {
+            metasweep_registry(
+                train(),
+                REPEATS,
+                SEED,
+                reference(),
+                &config(),
+                Arc::new(NullObserver),
+            )
+            .unwrap()
+        })
+    }
+
+    /// Event collector: ordering trace plus every fresh meta-evaluation
+    /// (strategy, target, hp key, repeats) for the rung-monotonicity
+    /// assertion.
+    #[derive(Default)]
+    struct MetaCollector {
+        events: Mutex<Vec<String>>,
+        evals: Mutex<Vec<(String, String, String, usize)>>,
+    }
+
+    impl Observer for MetaCollector {
+        fn meta_sweep_started(&self, strategies: usize, repeats: usize) {
+            self.events
+                .lock()
+                .unwrap()
+                .push(format!("sweep_started {strategies} {repeats}"));
+        }
+        fn meta_leg_started(&self, strategy: &str, target: &str, _c: usize, _b: f64) {
+            self.events
+                .lock()
+                .unwrap()
+                .push(format!("leg_started {strategy} {target}"));
+        }
+        fn meta_eval_scored(
+            &self,
+            strategy: &str,
+            target: &str,
+            _eval: usize,
+            hp_key: &str,
+            repeats: usize,
+            _score: f64,
+        ) {
+            self.events
+                .lock()
+                .unwrap()
+                .push(format!("eval {strategy} {target}"));
+            self.evals.lock().unwrap().push((
+                strategy.to_string(),
+                target.to_string(),
+                hp_key.to_string(),
+                repeats,
+            ));
+        }
+        fn meta_leg_finished(&self, strategy: &str, target: &str, _b: f64, _s: f64, _e: usize) {
+            self.events
+                .lock()
+                .unwrap()
+                .push(format!("leg_finished {strategy} {target}"));
+        }
+        fn meta_sweep_finished(&self, _wallclock: f64) {
+            self.events.lock().unwrap().push("sweep_finished".to_string());
+        }
+    }
+
+    fn assert_bitwise_equal(a: &MetaSweepResult, b: &MetaSweepResult) {
+        assert_eq!(a.repeats, b.repeats);
+        assert_eq!(a.seed, b.seed);
+        assert_eq!(a.eta, b.eta);
+        assert_eq!(a.min_repeats, b.min_repeats);
+        assert_eq!(a.strategies.len(), b.strategies.len());
+        for (ra, rb) in a.strategies.iter().zip(&b.strategies) {
+            assert_eq!(ra.strategy, rb.strategy);
+            assert_eq!(ra.legs.len(), rb.legs.len(), "{}", ra.strategy);
+            for (la, lb) in ra.legs.iter().zip(&rb.legs) {
+                let tag = format!("{}/{}", la.strategy, la.target);
+                assert_eq!(la.target, lb.target, "{tag}");
+                assert_eq!(la.algo, lb.algo, "{tag}");
+                assert_eq!(la.hp_space_key, lb.hp_space_key, "{tag}");
+                assert_eq!(la.configs, lb.configs, "{tag}");
+                assert_eq!(la.budget_cost.to_bits(), lb.budget_cost.to_bits(), "{tag}");
+                assert_eq!(la.spent_cost.to_bits(), lb.spent_cost.to_bits(), "{tag}");
+                assert_eq!(la.evals, lb.evals, "{tag}");
+                assert_eq!(la.best_config_idx, lb.best_config_idx, "{tag}");
+                assert_eq!(la.best_hp_key, lb.best_hp_key, "{tag}");
+                assert_eq!(la.best_score.to_bits(), lb.best_score.to_bits(), "{tag}");
+                assert_eq!(
+                    la.default_score.to_bits(),
+                    lb.default_score.to_bits(),
+                    "{tag}"
+                );
+                assert_eq!(
+                    la.exhaustive_best_score.to_bits(),
+                    lb.exhaustive_best_score.to_bits(),
+                    "{tag}"
+                );
+                assert_eq!(la.regret.to_bits(), lb.regret.to_bits(), "{tag}");
+                assert_eq!(
+                    la.improvement_recovered.to_bits(),
+                    lb.improvement_recovered.to_bits(),
+                    "{tag}"
+                );
+                assert_eq!(la.cost_fraction.to_bits(), lb.cost_fraction.to_bits(), "{tag}");
+            }
+        }
+    }
+
+    /// Same seed, bitwise-identical envelope — for *every* registered
+    /// strategy at once. The second (collected) run doubles as the event
+    /// fixture: strict sweep/leg/eval ordering, and halving's rung
+    /// monotonicity (no configuration ever re-evaluated at fewer
+    /// repeats than a previous rung gave it).
+    #[test]
+    fn metasweep_is_bitwise_deterministic_and_events_are_ordered() {
+        let a = run_metasweep();
+        let collector = Arc::new(MetaCollector::default());
+        let b = metasweep_registry(
+            train(),
+            REPEATS,
+            SEED,
+            reference(),
+            &config(),
+            Arc::clone(&collector) as Arc<dyn Observer>,
+        )
+        .unwrap();
+        assert_bitwise_equal(a, &b);
+
+        let events = collector.events.lock().unwrap().clone();
+        let n_strategies = strategy::strategies().len();
+        assert_eq!(events[0], format!("sweep_started {n_strategies} {REPEATS}"));
+        assert_eq!(events.last().unwrap(), "sweep_finished");
+        // Legs bracket their evals: inside a leg only its own
+        // (strategy, target) evaluations may fire.
+        let mut open: Option<String> = None;
+        for e in &events[1..events.len() - 1] {
+            if let Some(rest) = e.strip_prefix("leg_started ") {
+                assert!(open.is_none(), "nested leg: {e}");
+                open = Some(rest.to_string());
+            } else if let Some(rest) = e.strip_prefix("leg_finished ") {
+                assert_eq!(open.as_deref(), Some(rest), "unbalanced {e}");
+                open = None;
+            } else if let Some(rest) = e.strip_prefix("eval ") {
+                assert_eq!(open.as_deref(), Some(rest), "stray {e}");
+            } else {
+                panic!("unexpected event {e}");
+            }
+        }
+        assert!(open.is_none());
+
+        // Halving monotonicity (the behavioral half of the schedule
+        // proptest): per (target, hp config), repeats strictly increase
+        // across re-evaluations — a survivor is only ever promoted.
+        let evals = collector.evals.lock().unwrap().clone();
+        let mut last: std::collections::HashMap<(String, String), usize> =
+            std::collections::HashMap::new();
+        let mut halving_evals = 0usize;
+        for (strategy, target, hp_key, repeats) in evals {
+            if strategy != "halving" {
+                continue;
+            }
+            halving_evals += 1;
+            if let Some(&prev) = last.get(&(target.clone(), hp_key.clone())) {
+                assert!(
+                    repeats > prev,
+                    "halving re-evaluated {target}/{hp_key} at {repeats} <= {prev} repeats"
+                );
+            }
+            last.insert((target, hp_key), repeats);
+        }
+        assert!(halving_evals > 0);
+    }
+
+    /// The acceptance gate: the surrogate (tpe) and racing (halving)
+    /// strategies each recover >= 90% of the exhaustive sweep's
+    /// best-vs-default improvement at <= 25% of its meta-evaluations.
+    #[test]
+    fn tpe_and_halving_hit_90pct_recovery_at_quarter_cost() {
+        let r = run_metasweep();
+        for name in ["tpe", "halving"] {
+            let run = r.run(name).unwrap();
+            let detail: Vec<String> = run
+                .legs
+                .iter()
+                .map(|l| {
+                    format!(
+                        "{}: rec {:.3} cost {:.3} (best {:+.4} exh {:+.4} def {:+.4})",
+                        l.target,
+                        l.improvement_recovered,
+                        l.cost_fraction,
+                        l.best_score,
+                        l.exhaustive_best_score,
+                        l.default_score
+                    )
+                })
+                .collect();
+            assert!(
+                run.recovery() >= 0.90,
+                "{name}: recovered only {:.1}% of the exhaustive improvement\n{}",
+                run.recovery() * 100.0,
+                detail.join("\n")
+            );
+            assert!(
+                run.cost_fraction() <= DEFAULT_BUDGET_FRACTION + 1e-9,
+                "{name}: spent {:.1}% of the exhaustive meta-evaluations\n{}",
+                run.cost_fraction() * 100.0,
+                detail.join("\n")
+            );
+            assert!(run.evals() > 0, "{name}");
+        }
+    }
+
+    /// Per-leg invariants, including the bitwise-membership property:
+    /// a per-optimizer leg's best score IS an entry of the reference
+    /// grid's score array (same campaign, same seed), so regret is
+    /// exact and never negative.
+    #[test]
+    fn legs_are_internally_consistent_and_bitwise_members_of_the_reference() {
+        let r = run_metasweep();
+        assert_eq!(r.space_kind, "limited");
+        assert_eq!(r.repeats, REPEATS);
+        assert_eq!(r.train.len(), 1);
+        assert!(!r.train[0].space_fingerprint.is_empty());
+        let names = strategy::strategy_names();
+        assert_eq!(
+            r.strategies.iter().map(|s| s.strategy.as_str()).collect::<Vec<_>>(),
+            names
+        );
+        for s in &r.strategies {
+            let desc = strategy::strategy_by_name(&s.strategy).unwrap();
+            if desc.per_optimizer {
+                assert_eq!(
+                    s.legs.iter().map(|l| l.target.as_str()).collect::<Vec<_>>(),
+                    optimizers::hypertunable_names()
+                );
+            } else {
+                assert_eq!(s.legs.len(), 1);
+                assert_eq!(s.legs[0].target, "registry");
+                assert!(
+                    optimizers::hypertunable_names().contains(&s.legs[0].algo.as_str()),
+                    "{}",
+                    s.legs[0].algo
+                );
+                assert_eq!(s.legs[0].configs, reference().total_configs());
+            }
+            for l in &s.legs {
+                let tag = format!("{}/{}", l.strategy, l.target);
+                assert!(l.spent_cost <= l.budget_cost + 1e-9, "{tag}: over budget");
+                assert!(l.evals > 0, "{tag}");
+                assert!(l.best_score.is_finite(), "{tag}");
+                assert!(l.regret >= 0.0, "{tag}: beat the exhaustive optimum?");
+                assert_eq!(
+                    l.regret.to_bits(),
+                    (l.exhaustive_best_score - l.best_score).to_bits(),
+                    "{tag}"
+                );
+                assert!(
+                    (0.0..=1.0).contains(&l.improvement_recovered),
+                    "{tag}: {}",
+                    l.improvement_recovered
+                );
+                let entry = reference().entry(&l.algo).unwrap();
+                assert_eq!(l.hp_space_key, entry.space_key, "{tag}");
+                // The membership property: full-repeat meta-evaluations
+                // reproduce the exhaustive campaigns bitwise.
+                assert_eq!(
+                    l.best_score.to_bits(),
+                    entry.scores[l.best_config_idx].to_bits(),
+                    "{tag}: best is not a bitwise member of the reference grid"
+                );
+                if desc.per_optimizer {
+                    assert_eq!(l.algo, l.target, "{tag}");
+                    assert_eq!(
+                        l.default_score.to_bits(),
+                        entry.default_score.to_bits(),
+                        "{tag}"
+                    );
+                    assert_eq!(
+                        l.exhaustive_best_score.to_bits(),
+                        entry.best_score.to_bits(),
+                        "{tag}"
+                    );
+                    assert_eq!(l.configs, entry.configs, "{tag}");
+                }
+            }
+        }
+    }
+
+    /// Resume: a prior envelope produced under identical inputs replays
+    /// every leg (sentinel wallclocks survive untouched); a stale prior
+    /// (different eta) is ignored and everything re-runs.
+    #[test]
+    fn resume_replays_matching_legs_and_ignores_stale_priors() {
+        let mut prior = run_metasweep().clone();
+        for s in &mut prior.strategies {
+            for l in &mut s.legs {
+                l.wallclock_seconds = 12345.0;
+            }
+        }
+        let resumed = metasweep_registry_with(
+            train(),
+            REPEATS,
+            SEED,
+            reference(),
+            &config(),
+            Some(&prior),
+            Arc::new(NullObserver),
+        )
+        .unwrap();
+        assert_bitwise_equal(run_metasweep(), &resumed);
+        for s in &resumed.strategies {
+            for l in &s.legs {
+                assert_eq!(
+                    l.wallclock_seconds, 12345.0,
+                    "{}/{} was re-run instead of replayed",
+                    l.strategy, l.target
+                );
+            }
+        }
+        // Same prior under a different eta: determinism inputs changed,
+        // so the prior must NOT be replayed. Restrict to the cheapest
+        // strategy (random ignores eta) to keep the re-run small.
+        let cheap = MetaSweepConfig {
+            strategies: vec!["random".into()],
+            budget: Some(1.0),
+            eta: 5,
+            ..config()
+        };
+        let rerun = metasweep_registry_with(
+            train(),
+            REPEATS,
+            SEED,
+            reference(),
+            &cheap,
+            Some(&prior),
+            Arc::new(NullObserver),
+        )
+        .unwrap();
+        for s in &rerun.strategies {
+            for l in &s.legs {
+                assert_ne!(l.wallclock_seconds, 12345.0, "{}/{}", l.strategy, l.target);
+            }
+        }
+    }
+
+    #[test]
+    fn envelope_roundtrips_through_text_and_gz() {
+        let r = run_metasweep();
+        let text = r.to_json().to_pretty();
+        let back = MetaSweepResult::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_bitwise_equal(r, &back);
+        assert_eq!(back.space_kind, r.space_kind);
+        assert_eq!(back.train[0].label, r.train[0].label);
+        assert_eq!(back.train[0].space_fingerprint, r.train[0].space_fingerprint);
+        assert_eq!(
+            back.reference_mean_improvement_pct.to_bits(),
+            r.reference_mean_improvement_pct.to_bits()
+        );
+        for (bs, rs) in back.strategies.iter().zip(&r.strategies) {
+            assert_eq!(bs.recovery().to_bits(), rs.recovery().to_bits());
+            assert_eq!(bs.cost_fraction().to_bits(), rs.cost_fraction().to_bits());
+        }
+        let dir = std::env::temp_dir().join(format!("tt_metasweep_{}", std::process::id()));
+        let path = dir.join("metasweep.json.gz");
+        r.save(&path).unwrap();
+        let loaded = MetaSweepResult::load(&path).unwrap();
+        assert_bitwise_equal(r, &loaded);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn envelope_rejects_foreign_and_future_schemas() {
+        let mut j = Json::obj();
+        j.set("schema", "something-else".into());
+        assert!(MetaSweepResult::from_json(&j).is_err());
+        let mut j = run_metasweep().to_json();
+        j.set("schema_version", 999.0.into());
+        assert!(MetaSweepResult::from_json(&j).is_err());
+    }
+
+    /// Mismatched or stale references fail typed before any campaign
+    /// runs: wrong repeats/seed is an input error, a drifted training
+    /// space or hyperparameter grid is a stale cache.
+    #[test]
+    fn stale_or_mismatched_references_are_typed_errors() {
+        let obs: Arc<dyn Observer> = Arc::new(NullObserver);
+        let err = metasweep_registry(
+            train(),
+            REPEATS + 1,
+            SEED,
+            reference(),
+            &config(),
+            Arc::clone(&obs),
+        )
+        .unwrap_err();
+        assert!(matches!(err, TuneError::InvalidInput(_)), "{err}");
+        let err = metasweep_registry(
+            train(),
+            REPEATS,
+            SEED + 1,
+            reference(),
+            &config(),
+            Arc::clone(&obs),
+        )
+        .unwrap_err();
+        assert!(matches!(err, TuneError::InvalidInput(_)), "{err}");
+
+        let mut tampered = reference().clone();
+        tampered.train[0].space_fingerprint = "stale-fingerprint".into();
+        let err =
+            metasweep_registry(train(), REPEATS, SEED, &tampered, &config(), Arc::clone(&obs))
+                .unwrap_err();
+        assert!(matches!(err, TuneError::StaleCache(_)), "{err}");
+
+        let mut tampered = reference().clone();
+        tampered.optimizers[0].space_key = "stale-grid".into();
+        let err =
+            metasweep_registry(train(), REPEATS, SEED, &tampered, &config(), Arc::clone(&obs))
+                .unwrap_err();
+        assert!(matches!(err, TuneError::StaleCache(_)), "{err}");
+
+        let mut tampered = reference().clone();
+        tampered.optimizers.remove(0);
+        let err =
+            metasweep_registry(train(), REPEATS, SEED, &tampered, &config(), Arc::clone(&obs))
+                .unwrap_err();
+        assert!(matches!(err, TuneError::StaleCache(_)), "{err}");
+
+        let bad = MetaSweepConfig {
+            strategies: vec!["nope".into()],
+            ..config()
+        };
+        let err = metasweep_registry(train(), REPEATS, SEED, reference(), &bad, Arc::clone(&obs))
+            .unwrap_err();
+        assert!(matches!(err, TuneError::InvalidInput(_)), "{err}");
+
+        let dup = MetaSweepConfig {
+            strategies: vec!["random".into(), "random".into()],
+            ..config()
+        };
+        let err = metasweep_registry(train(), REPEATS, SEED, reference(), &dup, Arc::clone(&obs))
+            .unwrap_err();
+        assert!(matches!(err, TuneError::InvalidInput(_)), "{err}");
+
+        let err = metasweep_registry(&[], REPEATS, SEED, reference(), &config(), obs).unwrap_err();
+        assert!(matches!(err, TuneError::InvalidInput(_)), "{err}");
+    }
+
+    #[test]
+    fn report_renders_table_and_summary() {
+        let r = run_metasweep();
+        let dir = std::env::temp_dir().join(format!("tt_metasweeprep_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let report = Report::new(&dir, "metasweep");
+        render_report(r, &report).unwrap();
+        let table = std::fs::read_to_string(dir.join("metasweep_table.txt")).unwrap();
+        for name in strategy::strategy_names() {
+            assert!(table.contains(name), "table missing {name}");
+        }
+        assert!(table.contains("registry"));
+        let summary = std::fs::read_to_string(dir.join("metasweep_summary.txt")).unwrap();
+        assert!(summary.contains("recovered"), "{summary}");
+        assert!(summary.contains("exhaustive sweep mean improvement"), "{summary}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    // ---- pure-function units -------------------------------------------------
+
+    /// Golden: the registry's actual grid sizes under the default 25%
+    /// fraction. Racing budgets are purely proportional; surrogate
+    /// budgets keep an 8-eval floor on the tiny grids, paid for by
+    /// shaving the large ones — and the total never exceeds the cap.
+    #[test]
+    fn budget_allocator_respects_floors_and_cap() {
+        let grids = [8usize, 108, 81, 81, 9, 9];
+        let cap: f64 = grids.iter().map(|&g| g as f64 * DEFAULT_BUDGET_FRACTION).sum();
+        let racing = allocate_budgets(&grids, true);
+        for (b, &g) in racing.iter().zip(&grids) {
+            assert!((b - g as f64 * DEFAULT_BUDGET_FRACTION).abs() < 1e-12);
+        }
+        let floored = allocate_budgets(&grids, false);
+        assert_eq!(floored.len(), grids.len());
+        for (b, &g) in floored.iter().zip(&grids) {
+            assert!(*b >= (g as f64).min(8.0) - 1e-9, "grid {g}: budget {b}");
+            assert!(*b <= g as f64 + 1e-9, "grid {g}: budget {b}");
+        }
+        let total: f64 = floored.iter().sum();
+        assert!(total <= cap + 1e-6, "total {total} > cap {cap}");
+        // The tiny grids sit exactly on their floors; the big grids keep
+        // more than the floor but less than pure proportionality.
+        assert!((floored[0] - 8.0).abs() < 1e-9);
+        assert!(floored[1] < 27.0 && floored[1] > 8.0);
+    }
+
+    #[test]
+    fn leg_recovery_clamps_and_handles_degenerate_legs() {
+        assert!((leg_recovery(0.2, 0.3, 0.4) - 0.5).abs() < 1e-12);
+        assert!((leg_recovery(0.2, 0.4, 0.4) - 1.0).abs() < 1e-12);
+        // Worse than the default clamps to 0, not negative.
+        assert_eq!(leg_recovery(0.2, 0.1, 0.4), 0.0);
+        // Degenerate: nothing to recover — matching the default is 1.0.
+        assert_eq!(leg_recovery(0.2, 0.2, 0.2), 1.0);
+        assert_eq!(leg_recovery(0.2, 0.1, 0.2), 0.0);
+    }
+
+    #[test]
+    fn best_finite_demotes_nan() {
+        assert_eq!(best_finite([f64::NAN, 0.3, 0.1].into_iter()), 0.3);
+        assert!(best_finite(std::iter::empty()).is_nan());
+        assert!(best_finite([f64::NAN].into_iter()).is_nan());
+    }
+}

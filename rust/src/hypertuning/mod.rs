@@ -18,12 +18,23 @@
 //!   optimizer (paper four + extras) hypertuned and compared
 //!   default-vs-best in one versioned `tunetuner-sweep` envelope
 //!   (`tunetuner sweep` drives it from the CLI).
+//! * [`strategy`] — the meta-strategy engine: a self-describing registry
+//!   of budgeted hyperparameter searchers (`random`, `tpe`, `halving`,
+//!   `portfolio`) proposing configurations to a memoized, cost-charged
+//!   [`strategy::MetaCampaign`] whose full-repeat evaluations reproduce
+//!   the exhaustive sweep's scores bitwise.
+//! * [`metasweep`] — races the registered meta-strategies against the
+//!   exhaustive sweep's optimum: per-strategy recovery/regret/cost in a
+//!   versioned `tunetuner-metasweep` envelope (`tunetuner metasweep`
+//!   drives it from the CLI).
 //! * [`sensitivity`] — the Kruskal–Wallis + mutual-information screen used
 //!   to drop insensitive hyperparameters (the paper's PSO `W`).
 
 pub mod space;
 pub mod exhaustive;
 pub mod meta;
+pub mod metasweep;
+pub mod strategy;
 pub mod sweep;
 pub mod sensitivity;
 
@@ -31,7 +42,15 @@ pub use exhaustive::{
     exhaustive_tuning, exhaustive_tuning_observed, HyperResult, HyperTuningResults,
 };
 pub use meta::{meta_cache_from_results, MetaRunner};
+pub use metasweep::{
+    metasweep_registry, metasweep_registry_with, render_report as render_metasweep_report,
+    MetaSweepConfig, MetaSweepResult, StrategyLeg, StrategyRun,
+};
 pub use space::{extended_algos, extended_space, limited_algos, limited_space};
+pub use strategy::{
+    halving_schedule, strategies, strategy_by_name, strategy_names, MetaBudget, MetaCampaign,
+    MetaOutcome, MetaStrategy, Rung, StrategyDescriptor,
+};
 pub use sweep::{
     render_report as render_sweep_report, sweep_registry, sweep_registry_with, OptimizerSweep,
     SweepResult,

@@ -96,6 +96,31 @@ mod tests {
         );
     }
 
+    /// The schema-declared grid sizes (`tunetuner info`'s per-optimizer
+    /// column) always agree with the derived spaces — the sizes are
+    /// computed from the same declarations the spaces are built from.
+    #[test]
+    fn declared_grid_sizes_match_derived_spaces() {
+        for d in crate::optimizers::hypertunable() {
+            assert_eq!(
+                d.limited_grid_size(),
+                limited_space(d.name).unwrap().len(),
+                "{}: limited",
+                d.name
+            );
+            if d.has_extended_space() {
+                assert_eq!(
+                    d.extended_grid_size(),
+                    extended_space(d.name).unwrap().len(),
+                    "{}: extended",
+                    d.name
+                );
+            } else {
+                assert_eq!(d.extended_grid_size(), 0, "{}", d.name);
+            }
+        }
+    }
+
     #[test]
     fn limited_space_sizes_match_table3() {
         // Table III cardinalities: DA 8, GA 4*3*3*3=108, PSO 3*3*3*3=81,

@@ -1,0 +1,224 @@
+//! Successive-halving / Hyperband racing over low-repeat replay rungs.
+//!
+//! The simulator makes a 1-repeat campaign nearly free, so the cheapest
+//! rung can afford to score the *entire* grid: rung 0 runs every sampled
+//! configuration at `min_repeats`, each subsequent rung keeps the top
+//! `1/eta` and multiplies repeats by `eta`, and the final rung always
+//! runs at `full_repeats` — so the winner's score is bitwise-comparable
+//! to the exhaustive sweep. The schedule itself is a pure function
+//! ([`halving_schedule`]), pinned by a golden test and a repeat-
+//! monotonicity proptest.
+
+use super::{sort_scored_desc, MetaCampaign, MetaOutcome, MetaStrategy};
+use crate::error::{Result, TuneError};
+use crate::optimizers::HyperParams;
+use crate::util::rng::Rng;
+
+/// One racing rung: how many configurations survive into it and at how
+/// many repeats each is (re)evaluated.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Rung {
+    pub n: usize,
+    pub repeats: usize,
+}
+
+/// Compute the successive-halving schedule for a grid of `grid`
+/// configurations under `budget_cost` full-repeat-equivalent units.
+///
+/// The repeat ladder starts at `min_repeats` and multiplies by `eta`
+/// until it reaches `full_repeats` (always included, so the last rung is
+/// exhaustive-comparable). The starting cohort is the largest `n0 <=
+/// grid` whose total cost — `sum_i max(1, n0 / eta^i) * r_i /
+/// full_repeats` — fits the budget; survivors shrink by `eta` per rung.
+/// Degenerate budgets still yield a schedule with `n0 = 1` (one config
+/// raced up the ladder), so callers never receive an empty plan.
+pub fn halving_schedule(
+    grid: usize,
+    full_repeats: usize,
+    budget_cost: f64,
+    eta: usize,
+    min_repeats: usize,
+) -> Vec<Rung> {
+    let grid = grid.max(1);
+    let full = full_repeats.max(1);
+    let eta = eta.max(2);
+    let min_r = min_repeats.clamp(1, full);
+    // Repeat ladder: min_r, min_r*eta, ... capped at (and ending with) full.
+    let mut ladder = Vec::new();
+    let mut r = min_r;
+    loop {
+        ladder.push(r);
+        if r >= full {
+            break;
+        }
+        r = (r * eta).min(full);
+    }
+    let cohort = |n0: usize, i: usize| -> usize {
+        let mut n = n0;
+        for _ in 0..i {
+            n /= eta;
+        }
+        n.max(1)
+    };
+    let cost = |n0: usize| -> f64 {
+        ladder
+            .iter()
+            .enumerate()
+            .map(|(i, &r)| cohort(n0, i) as f64 * r as f64 / full as f64)
+            .sum()
+    };
+    // Largest affordable starting cohort (monotone in n0 -> binary search).
+    let (mut lo, mut hi) = (1usize, grid);
+    while lo < hi {
+        let mid = lo + (hi - lo + 1) / 2;
+        if cost(mid) <= budget_cost + 1e-9 {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    ladder
+        .iter()
+        .enumerate()
+        .map(|(i, &r)| Rung {
+            n: cohort(lo, i),
+            repeats: r,
+        })
+        .collect()
+}
+
+pub struct Halving;
+
+impl MetaStrategy for Halving {
+    fn run(&self, mc: &mut MetaCampaign, rng: &mut Rng) -> Result<MetaOutcome> {
+        let space = mc
+            .hp_space
+            .clone()
+            .ok_or_else(|| TuneError::InvalidInput("halving needs an hp space".into()))?;
+        let n = space.len();
+        let schedule = halving_schedule(
+            n,
+            mc.full_repeats,
+            mc.remaining(),
+            mc.budget.eta,
+            mc.budget.min_repeats,
+        );
+        // Starting cohort: the whole grid when affordable, else a uniform
+        // sample without replacement.
+        let mut pool: Vec<usize> = if schedule[0].n >= n {
+            (0..n).collect()
+        } else {
+            let mut order: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut order);
+            order.truncate(schedule[0].n);
+            order.sort_unstable();
+            order
+        };
+        let mut best_full: Option<(usize, f64)> = None;
+        'rungs: for rung in &schedule {
+            pool.truncate(rung.n);
+            let mut scored: Vec<(usize, f64)> = Vec::with_capacity(pool.len());
+            for &cfg in &pool {
+                match mc.evaluate(cfg, rung.repeats)? {
+                    Some(score) => scored.push((cfg, score)),
+                    // Budget exhausted mid-rung (only possible when the
+                    // leg started with part of its budget already spent):
+                    // race ends with the best full-repeat result so far.
+                    None => break 'rungs,
+                }
+            }
+            sort_scored_desc(&mut scored);
+            if rung.repeats == mc.full_repeats {
+                if let Some(&(cfg, score)) = scored.first() {
+                    let better = match best_full {
+                        Some((bc, bs)) => {
+                            score > bs || (score == bs && cfg < bc) || bs.is_nan()
+                        }
+                        None => true,
+                    };
+                    if better {
+                        best_full = Some((cfg, score));
+                    }
+                }
+            }
+            pool = scored.into_iter().map(|(cfg, _)| cfg).collect();
+        }
+        let Some((best_config_idx, best_score)) = best_full else {
+            return Err(TuneError::InvalidInput(format!(
+                "halving budget {} never reached a full-repeat rung",
+                mc.budget.max_cost
+            )));
+        };
+        Ok(MetaOutcome {
+            algo: mc.algo.clone(),
+            best_config_idx,
+            best_hp_key: HyperParams::from_space_config(&space, best_config_idx).key(),
+            best_score,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Golden: the exact rung/promotion schedule for the acceptance-test
+    /// shape — a 108-config grid (GA's Table III), 8 full repeats, a 25%
+    /// budget (27 units) and eta 8: the whole grid at 1 repeat, then the
+    /// top 13 at the full 8.
+    #[test]
+    fn golden_schedule_ga_quarter_budget() {
+        assert_eq!(
+            halving_schedule(108, 8, 27.0, 8, 1),
+            vec![Rung { n: 108, repeats: 1 }, Rung { n: 13, repeats: 8 }]
+        );
+        // cost: 108 * 1/8 + 13 * 8/8 = 26.5 <= 27.
+    }
+
+    /// Golden: the multi-rung Hyperband shape — 81 configs, 16 full
+    /// repeats, eta 4 gives the [1, 4, 16] ladder with 4x shrinkage.
+    #[test]
+    fn golden_schedule_multi_rung() {
+        assert_eq!(
+            halving_schedule(81, 16, 20.0, 4, 1),
+            vec![
+                Rung { n: 81, repeats: 1 },
+                Rung { n: 20, repeats: 4 },
+                Rung { n: 5, repeats: 16 },
+            ]
+        );
+    }
+
+    #[test]
+    fn schedule_always_ends_at_full_repeats() {
+        for &(grid, full, budget, eta, min_r) in &[
+            (8usize, 8usize, 2.0f64, 8usize, 1usize),
+            (108, 8, 27.0, 8, 1),
+            (81, 16, 20.0, 4, 1),
+            (9, 4, 0.1, 2, 1), // degenerate budget: n0 = 1
+            (300, 25, 75.0, 3, 2),
+        ] {
+            let s = halving_schedule(grid, full, budget, eta, min_r);
+            assert!(!s.is_empty());
+            assert_eq!(s.last().unwrap().repeats, full, "{s:?}");
+            assert!(s[0].n <= grid, "{s:?}");
+            for w in s.windows(2) {
+                assert!(w[1].repeats > w[0].repeats, "{s:?}");
+                assert!(w[1].n <= w[0].n, "{s:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn schedule_cost_fits_budget_or_is_minimal() {
+        let cost = |s: &[Rung], full: usize| -> f64 {
+            s.iter().map(|r| r.n as f64 * r.repeats as f64 / full as f64).sum()
+        };
+        let s = halving_schedule(108, 8, 27.0, 8, 1);
+        assert!(cost(&s, 8) <= 27.0 + 1e-9);
+        // A budget below even the minimal ladder still yields the n0=1
+        // plan rather than an empty schedule.
+        let s = halving_schedule(50, 4, 0.01, 2, 1);
+        assert!(s.iter().all(|r| r.n == 1), "{s:?}");
+    }
+}

@@ -1,0 +1,385 @@
+//! Meta-strategies: searching a hyperparameter space *without*
+//! enumerating it.
+//!
+//! The exhaustive sweep ([`super::sweep`]) scores every configuration of
+//! every limited grid — the golden reference, but also the cost ceiling.
+//! This module is the paper's answer to that ceiling: a [`MetaStrategy`]
+//! proposes hyperparameter configurations, receives Eq. 3 methodology
+//! scores from replayed campaigns, and spends a [`MetaBudget`] measured
+//! in *full-repeat-equivalent evaluations* — the unit in which the
+//! exhaustive sweep costs exactly `grid_size`.
+//!
+//! * [`MetaCampaign`] — the evaluation substrate: one memoized,
+//!   budget-charged entry point that turns (algorithm, hyperparameters,
+//!   repeats) into a [`Campaign`](crate::campaign::Campaign) on the
+//!   shared training [`SpaceEval`]s (and with them the Arc-shared
+//!   SimTable caches on the persistent executor pool). A full-repeat
+//!   evaluation reproduces the exhaustive sweep's score for the same
+//!   configuration *bitwise* — both run the identical campaign — so a
+//!   meta-strategy's best is always a member of the exhaustive score
+//!   array and regret-vs-optimum is exact, not estimated.
+//! * [`strategies`] — the self-describing registry, mirroring
+//!   [`crate::optimizers::registry`]: `random` (baseline), `tpe`
+//!   (tree-structured Parzen surrogate), `halving` (successive-halving
+//!   racing over cheap low-repeat rungs), `portfolio` (bandit race over
+//!   the whole optimizer registry).
+//!
+//! Determinism: every strategy draws from an [`Rng`] derived as
+//! `mix64(sweep_seed, descriptor.tag)` forked per leg, and evaluation
+//! scores come from seeded campaigns — same seed in, bitwise-identical
+//! envelope out (pinned by the metasweep tests).
+
+use crate::campaign::{Campaign, Observer};
+use crate::error::{Result, TuneError};
+use crate::methodology::SpaceEval;
+use crate::optimizers::HyperParams;
+use crate::searchspace::SearchSpace;
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+pub mod halving;
+pub mod portfolio;
+pub mod random;
+pub mod tpe;
+
+pub use halving::{halving_schedule, Rung};
+
+/// Budget of one meta-strategy leg, in full-repeat-equivalent
+/// evaluations: an evaluation at `r` repeats costs `r / full_repeats`
+/// units, so the exhaustive grid costs exactly `grid_size` units and a
+/// budget of `0.25 * grid_size` is "25% of the exhaustive sweep".
+#[derive(Clone, Copy, Debug)]
+pub struct MetaBudget {
+    /// Hard cost ceiling; [`MetaCampaign::evaluate`] refuses (returns
+    /// `Ok(None)`) any fresh evaluation that would exceed it.
+    pub max_cost: f64,
+    /// Optional wall-clock ceiling in seconds. `None` (the default
+    /// everywhere determinism matters) never cuts a leg short — a
+    /// wall-clock cut would make envelopes machine-dependent.
+    pub max_wallclock: Option<f64>,
+    /// Rung growth factor of the racing schedule (successive halving
+    /// keeps the top `1/eta` per rung and multiplies repeats by `eta`).
+    pub eta: usize,
+    /// Repeats of the cheapest rung.
+    pub min_repeats: usize,
+}
+
+impl MetaBudget {
+    pub fn new(max_cost: f64) -> MetaBudget {
+        MetaBudget {
+            max_cost,
+            max_wallclock: None,
+            eta: 4,
+            min_repeats: 1,
+        }
+    }
+}
+
+/// What a strategy found: the best configuration it evaluated *at full
+/// repeats* (so the score is exhaustive-comparable).
+#[derive(Clone, Debug)]
+pub struct MetaOutcome {
+    /// Optimizer the best configuration belongs to (differs from the
+    /// leg's primary algorithm only for registry-wide strategies).
+    pub algo: String,
+    /// Index in that optimizer's limited hyperparameter space.
+    pub best_config_idx: usize,
+    pub best_hp_key: String,
+    pub best_score: f64,
+}
+
+/// The evaluation substrate handed to a [`MetaStrategy`]: memoized,
+/// budget-charged campaign evaluations over the shared training spaces.
+pub struct MetaCampaign {
+    /// Primary optimizer of this leg (`""` for registry-wide legs).
+    pub algo: String,
+    /// The hyperparameter space being searched (`None` for registry-wide
+    /// legs, which derive spaces themselves).
+    pub hp_space: Option<Arc<SearchSpace>>,
+    pub train: Arc<Vec<SpaceEval>>,
+    /// Repeats of a full-budget evaluation — the exhaustive sweep's
+    /// repeat count, and the denominator of the cost unit.
+    pub full_repeats: usize,
+    pub seed: u64,
+    pub budget: MetaBudget,
+    observer: Arc<dyn Observer>,
+    strategy: String,
+    target: String,
+    spent: f64,
+    evals: usize,
+    started: std::time::Instant,
+    memo: HashMap<(String, String, usize), f64>,
+}
+
+impl MetaCampaign {
+    pub fn new(
+        algo: &str,
+        hp_space: Option<Arc<SearchSpace>>,
+        train: Arc<Vec<SpaceEval>>,
+        full_repeats: usize,
+        seed: u64,
+        budget: MetaBudget,
+        observer: Arc<dyn Observer>,
+        strategy: &str,
+        target: &str,
+    ) -> Result<MetaCampaign> {
+        if train.is_empty() {
+            return Err(TuneError::InvalidInput(
+                "meta-campaign has no training spaces".into(),
+            ));
+        }
+        if full_repeats == 0 {
+            return Err(TuneError::InvalidInput(
+                "meta-campaign needs full_repeats >= 1".into(),
+            ));
+        }
+        Ok(MetaCampaign {
+            algo: algo.to_string(),
+            hp_space,
+            train,
+            full_repeats,
+            seed,
+            budget,
+            observer,
+            strategy: strategy.to_string(),
+            target: target.to_string(),
+            spent: 0.0,
+            evals: 0,
+            started: std::time::Instant::now(),
+            memo: HashMap::new(),
+        })
+    }
+
+    /// Cost already charged, in full-repeat-equivalent evaluations.
+    pub fn spent(&self) -> f64 {
+        self.spent
+    }
+
+    /// Budget still available.
+    pub fn remaining(&self) -> f64 {
+        (self.budget.max_cost - self.spent).max(0.0)
+    }
+
+    /// Fresh (non-memoized) evaluations performed so far.
+    pub fn evals(&self) -> usize {
+        self.evals
+    }
+
+    fn cost_of(&self, repeats: usize) -> f64 {
+        repeats as f64 / self.full_repeats as f64
+    }
+
+    /// Whether a fresh evaluation at `repeats` fits the remaining budget.
+    pub fn affords(&self, repeats: usize) -> bool {
+        if let Some(limit) = self.budget.max_wallclock {
+            if self.started.elapsed().as_secs_f64() > limit {
+                return false;
+            }
+        }
+        self.spent + self.cost_of(repeats) <= self.budget.max_cost + 1e-9
+    }
+
+    /// Evaluate configuration `config_idx` of the leg's own
+    /// hyperparameter space at `repeats` repeats. Returns `Ok(None)` when
+    /// the budget cannot afford the evaluation (strategies treat that as
+    /// "stop"); memoized repeats are free and always served.
+    pub fn evaluate(&mut self, config_idx: usize, repeats: usize) -> Result<Option<f64>> {
+        let Some(space) = self.hp_space.clone() else {
+            return Err(TuneError::InvalidInput(format!(
+                "meta-campaign for {:?} has no hyperparameter space",
+                self.target
+            )));
+        };
+        let algo = self.algo.clone();
+        let hp = HyperParams::from_space_config(&space, config_idx);
+        self.evaluate_in(&algo, &hp, repeats)
+    }
+
+    /// Evaluate `algo` with its schema defaults (registry-wide racing).
+    pub fn evaluate_default(&mut self, algo: &str, repeats: usize) -> Result<Option<f64>> {
+        self.evaluate_in(algo, &HyperParams::new(), repeats)
+    }
+
+    /// Evaluate an explicit (algorithm, hyperparameters) pair. The memo
+    /// key is `(algo, hp.key(), repeats)` — a rung promotion to higher
+    /// repeats is a fresh charge, a re-proposal at the same repeats is
+    /// free.
+    pub fn evaluate_in(
+        &mut self,
+        algo: &str,
+        hp: &HyperParams,
+        repeats: usize,
+    ) -> Result<Option<f64>> {
+        if repeats == 0 || repeats > self.full_repeats {
+            return Err(TuneError::InvalidInput(format!(
+                "meta-evaluation at {repeats} repeats outside 1..={}",
+                self.full_repeats
+            )));
+        }
+        let key = (algo.to_string(), hp.key(), repeats);
+        if let Some(&score) = self.memo.get(&key) {
+            return Ok(Some(score));
+        }
+        if !self.affords(repeats) {
+            return Ok(None);
+        }
+        // Same constructor chain as the exhaustive grid's per-config
+        // campaigns: at full repeats the score matches the sweep bitwise.
+        let result = Campaign::new(algo)
+            .hyperparams(hp.clone())
+            .spaces_arc(Arc::clone(&self.train))
+            .repeats(repeats)
+            .seed(self.seed)
+            .observer(Arc::clone(&self.observer))
+            .run()?;
+        let score = result.score();
+        self.spent += self.cost_of(repeats);
+        self.evals += 1;
+        self.observer.meta_eval_scored(
+            &self.strategy,
+            &self.target,
+            self.evals,
+            &result.hp_key,
+            repeats,
+            score,
+        );
+        self.memo.insert(key, score);
+        Ok(Some(score))
+    }
+}
+
+/// A meta-strategy: searches a hyperparameter space through a
+/// [`MetaCampaign`], returning the best full-repeat configuration found.
+/// Implementations must be deterministic given (`mc` state, `rng`).
+pub trait MetaStrategy: Send + Sync {
+    fn run(&self, mc: &mut MetaCampaign, rng: &mut Rng) -> Result<MetaOutcome>;
+}
+
+/// A registered meta-strategy: name, one-line summary, and shape flags
+/// the sweep driver uses for budget allocation.
+pub struct StrategyDescriptor {
+    pub name: &'static str,
+    pub summary: &'static str,
+    /// Stable RNG tag: the per-strategy stream is
+    /// `Rng::new(mix64(seed, tag))`. Never reuse or renumber — envelopes
+    /// are pinned bitwise against it.
+    pub tag: u64,
+    /// `true`: one leg per grid-bearing optimizer (random/tpe/halving).
+    /// `false`: a single registry-wide leg (portfolio).
+    pub per_optimizer: bool,
+    /// `true` for racing strategies whose evaluations are mostly cheap
+    /// low-repeat rungs: their budget scales purely with grid size. Full-
+    /// repeat strategies instead get a small-grid floor (see
+    /// [`super::metasweep`]'s allocator).
+    pub racing: bool,
+    pub build: fn() -> Box<dyn MetaStrategy>,
+}
+
+/// The meta-strategy registry, in presentation order. Like
+/// [`crate::optimizers::registry`] this is the single registration
+/// point: [`strategy_names`], [`strategy_by_name`], the metasweep driver
+/// and `tunetuner metasweep --strategy` all follow it.
+pub fn strategies() -> &'static [StrategyDescriptor] {
+    &[
+        StrategyDescriptor {
+            name: "random",
+            summary: "uniform random search at full repeats (baseline)",
+            tag: 1,
+            per_optimizer: true,
+            racing: false,
+            build: || Box::new(random::RandomSearch),
+        },
+        StrategyDescriptor {
+            name: "tpe",
+            summary: "tree-structured Parzen surrogate over the mixed grids",
+            tag: 2,
+            per_optimizer: true,
+            racing: false,
+            build: || Box::new(tpe::Tpe),
+        },
+        StrategyDescriptor {
+            name: "halving",
+            summary: "successive-halving racing over low-repeat replay rungs",
+            tag: 3,
+            per_optimizer: true,
+            racing: true,
+            build: || Box::new(halving::Halving),
+        },
+        StrategyDescriptor {
+            name: "portfolio",
+            summary: "races every registry optimizer, then tunes the winner",
+            tag: 4,
+            per_optimizer: false,
+            racing: true,
+            build: || Box::new(portfolio::Portfolio),
+        },
+    ]
+}
+
+pub fn strategy_names() -> Vec<&'static str> {
+    strategies().iter().map(|s| s.name).collect()
+}
+
+pub fn strategy_by_name(name: &str) -> Result<&'static StrategyDescriptor> {
+    strategies().iter().find(|s| s.name == name).ok_or_else(|| {
+        TuneError::InvalidInput(format!(
+            "unknown meta-strategy {name:?}; registered: {}",
+            strategy_names().join(", ")
+        ))
+    })
+}
+
+/// NaN-safe descending sort of `(config, score)` pairs: finite scores
+/// first (higher better), NaN demoted, config index as the deterministic
+/// tiebreak. Shared by the racing strategies' promotion steps.
+pub(crate) fn sort_scored_desc(scored: &mut [(usize, f64)]) {
+    scored.sort_by(|a, b| {
+        let an = a.1.is_nan();
+        let bn = b.1.is_nan();
+        match (an, bn) {
+            (true, true) => a.0.cmp(&b.0),
+            (true, false) => std::cmp::Ordering::Greater,
+            (false, true) => std::cmp::Ordering::Less,
+            (false, false) => b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)),
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_self_consistent() {
+        let names = strategy_names();
+        assert_eq!(names, vec!["random", "tpe", "halving", "portfolio"]);
+        for d in strategies() {
+            assert!(!d.summary.is_empty(), "{}", d.name);
+            assert!(strategy_by_name(d.name).unwrap().tag == d.tag);
+            // Tags are the seed derivation — they must stay unique.
+            assert_eq!(
+                strategies().iter().filter(|o| o.tag == d.tag).count(),
+                1,
+                "{}: duplicate tag",
+                d.name
+            );
+            let _ = (d.build)();
+        }
+        assert!(strategy_by_name("nope").is_err());
+    }
+
+    #[test]
+    fn sort_scored_demotes_nan_and_breaks_ties_by_index() {
+        let mut v = vec![
+            (3, f64::NAN),
+            (2, 0.5),
+            (0, 0.7),
+            (4, 0.5),
+            (1, f64::NAN),
+        ];
+        sort_scored_desc(&mut v);
+        let order: Vec<usize> = v.iter().map(|x| x.0).collect();
+        assert_eq!(order, vec![0, 2, 4, 1, 3]);
+    }
+}

@@ -1,0 +1,90 @@
+//! Bandit-style portfolio scheduler: race the whole optimizer registry,
+//! then spend the remaining budget tuning the winner.
+//!
+//! The cheap first slice of "Automated Algorithm Design for Auto-Tuning
+//! Optimizers" (PAPERS.md, arXiv 2510.17899): instead of treating the
+//! optimizer as fixed and tuning its hyperparameters, treat the
+//! *optimizer choice itself* as the first decision. Phase 1 races every
+//! grid-bearing optimizer at its schema defaults through a
+//! successive-halving ladder of repeat counts; phase 2 random-searches
+//! the winner's limited grid at full repeats, so the reported best is
+//! exhaustive-comparable against the whole sweep's optimum.
+
+use super::{sort_scored_desc, MetaCampaign, MetaOutcome, MetaStrategy};
+use crate::error::{Result, TuneError};
+use crate::hypertuning::space;
+use crate::optimizers::{self, HyperParams};
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+pub struct Portfolio;
+
+impl MetaStrategy for Portfolio {
+    fn run(&self, mc: &mut MetaCampaign, rng: &mut Rng) -> Result<MetaOutcome> {
+        let full = mc.full_repeats;
+        let eta = mc.budget.eta.max(2);
+        let names: Vec<&'static str> = optimizers::hypertunable_names();
+        // Phase 1: successive-halving race over schema defaults. Pool
+        // entries are (registry index, name); the index doubles as the
+        // deterministic tiebreak.
+        let mut pool: Vec<(usize, &'static str)> = names.iter().copied().enumerate().collect();
+        let mut repeats = mc.budget.min_repeats.clamp(1, full);
+        'race: while pool.len() > 1 {
+            let mut scored: Vec<(usize, f64)> = Vec::with_capacity(pool.len());
+            for &(i, algo) in &pool {
+                match mc.evaluate_default(algo, repeats)? {
+                    Some(score) => scored.push((i, score)),
+                    None => break 'race, // budget gone: rank what we have
+                }
+            }
+            sort_scored_desc(&mut scored);
+            let keep = if repeats >= full {
+                1
+            } else {
+                (scored.len() + eta - 1) / eta
+            };
+            pool = scored
+                .iter()
+                .take(keep.max(1))
+                .map(|&(i, _)| (i, names[i]))
+                .collect();
+            repeats = (repeats * eta).min(full);
+        }
+        let Some(&(_, winner)) = pool.first() else {
+            return Err(TuneError::InvalidInput(
+                "portfolio race eliminated every optimizer".into(),
+            ));
+        };
+        // Phase 2: random search of the winner's limited grid at full
+        // repeats with everything left in the budget.
+        let hp_space = Arc::new(space::limited_space(winner)?);
+        let n = hp_space.len();
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let mut scored: Vec<(usize, f64)> = Vec::new();
+        for cfg in order {
+            if !mc.affords(full) {
+                break;
+            }
+            let hp = HyperParams::from_space_config(&hp_space, cfg);
+            match mc.evaluate_in(winner, &hp, full)? {
+                Some(score) => scored.push((cfg, score)),
+                None => break,
+            }
+        }
+        if scored.is_empty() {
+            return Err(TuneError::InvalidInput(format!(
+                "portfolio budget {} spent before tuning winner {winner:?}",
+                mc.budget.max_cost
+            )));
+        }
+        sort_scored_desc(&mut scored);
+        let (best_config_idx, best_score) = scored[0];
+        Ok(MetaOutcome {
+            algo: winner.to_string(),
+            best_config_idx,
+            best_hp_key: HyperParams::from_space_config(&hp_space, best_config_idx).key(),
+            best_score,
+        })
+    }
+}

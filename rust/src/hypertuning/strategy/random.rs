@@ -1,0 +1,51 @@
+//! Uniform random search at full repeats — the baseline every other
+//! strategy must beat (the paper's random-sampling reference).
+
+use super::{sort_scored_desc, MetaCampaign, MetaOutcome, MetaStrategy};
+use crate::error::{Result, TuneError};
+use crate::optimizers::HyperParams;
+use crate::util::rng::Rng;
+
+pub struct RandomSearch;
+
+impl MetaStrategy for RandomSearch {
+    fn run(&self, mc: &mut MetaCampaign, rng: &mut Rng) -> Result<MetaOutcome> {
+        let space = mc
+            .hp_space
+            .clone()
+            .ok_or_else(|| TuneError::InvalidInput("random search needs an hp space".into()))?;
+        let n = space.len();
+        let full = mc.full_repeats;
+        // Sample without replacement: a repeated proposal would be served
+        // from the memo for free and waste nothing, but distinct draws
+        // maximize coverage per unit budget.
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let mut scored: Vec<(usize, f64)> = Vec::new();
+        for cfg in order {
+            if !mc.affords(full) {
+                break;
+            }
+            match mc.evaluate(cfg, full)? {
+                Some(score) => scored.push((cfg, score)),
+                None => break,
+            }
+        }
+        if scored.is_empty() {
+            return Err(TuneError::InvalidInput(format!(
+                "random search budget {} cannot afford one full-repeat evaluation",
+                mc.budget.max_cost
+            )));
+        }
+        sort_scored_desc(&mut scored);
+        let (best_config_idx, best_score) = scored[0];
+        Ok(MetaOutcome {
+            algo: mc.algo.clone(),
+            best_config_idx,
+            // Same rendering the exhaustive results carry (stable
+            // HyperParams key, not the space's positional key).
+            best_hp_key: HyperParams::from_space_config(&space, best_config_idx).key(),
+            best_score,
+        })
+    }
+}

@@ -129,6 +129,53 @@ impl SweepResult {
         crate::util::stats::mean(&pcts)
     }
 
+    // ---- lookups (the metasweep's regret reference) --------------------------
+
+    /// The sweep entry for `algo`, if it was swept.
+    pub fn entry(&self, algo: &str) -> Option<&OptimizerSweep> {
+        self.optimizers.iter().find(|o| o.algo == algo)
+    }
+
+    /// Exhaustive-best Eq. 3 score of `algo`'s limited grid.
+    pub fn best_score_for(&self, algo: &str) -> Option<f64> {
+        self.entry(algo).map(|o| o.best_score)
+    }
+
+    /// Schema-default Eq. 3 score of `algo`.
+    pub fn default_score_for(&self, algo: &str) -> Option<f64> {
+        self.entry(algo).map(|o| o.default_score)
+    }
+
+    /// Regret of `score` against `algo`'s exhaustive optimum:
+    /// `best_score - score`, i.e. 0 when the optimum was recovered and
+    /// positive otherwise. `None` when `algo` was not swept.
+    pub fn optimum_regret(&self, algo: &str, score: f64) -> Option<f64> {
+        self.best_score_for(algo).map(|best| best - score)
+    }
+
+    /// Total exhaustive meta-evaluations the sweep performed (the sum of
+    /// all grid sizes) — the cost baseline registry-wide strategies are
+    /// measured against.
+    pub fn total_configs(&self) -> usize {
+        self.optimizers.iter().map(|o| o.configs).sum()
+    }
+
+    /// The best (optimizer, score) over every swept grid — the
+    /// registry-wide optimum. NaN scores are demoted; ties break toward
+    /// the earlier-registered optimizer. `None` on an empty sweep.
+    pub fn overall_best(&self) -> Option<(&str, f64)> {
+        self.optimizers
+            .iter()
+            .map(|o| (o.algo.as_str(), o.best_score))
+            .reduce(|acc, cur| {
+                if cur.1.is_nan() || (!acc.1.is_nan() && cur.1 <= acc.1) {
+                    acc
+                } else {
+                    cur
+                }
+            })
+    }
+
     // ---- persistence ---------------------------------------------------------
 
     pub fn to_json(&self) -> Json {
@@ -798,6 +845,43 @@ mod tests {
             assert_eq!(events[2 + 2 * i], format!("opt_finished {i} {}", o.algo));
         }
         assert_eq!(events.len(), 2 + 2 * n);
+    }
+
+    /// The lookup accessors the metasweep's regret computation rests on:
+    /// per-algo best/default scores, zero regret at the optimum, and the
+    /// registry-wide totals.
+    #[test]
+    fn lookup_accessors_agree_with_entries() {
+        let r = run_sweep();
+        for o in &r.optimizers {
+            assert_eq!(
+                r.best_score_for(&o.algo).unwrap().to_bits(),
+                o.best_score.to_bits()
+            );
+            assert_eq!(
+                r.default_score_for(&o.algo).unwrap().to_bits(),
+                o.default_score.to_bits()
+            );
+            // Recovering the optimum exactly means zero regret (bitwise:
+            // x - x is +0.0 for finite x); any worse score is positive.
+            assert_eq!(r.optimum_regret(&o.algo, o.best_score), Some(0.0));
+            assert!(r.optimum_regret(&o.algo, o.best_score - 0.5).unwrap() > 0.0);
+        }
+        assert!(r.entry("no_such_optimizer").is_none());
+        assert!(r.best_score_for("no_such_optimizer").is_none());
+        assert!(r.optimum_regret("no_such_optimizer", 0.0).is_none());
+        assert_eq!(
+            r.total_configs(),
+            r.optimizers.iter().map(|o| o.configs).sum::<usize>()
+        );
+        let (best_algo, best_score) = r.overall_best().unwrap();
+        let max = r
+            .optimizers
+            .iter()
+            .map(|o| o.best_score)
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(best_score.to_bits(), max.to_bits());
+        assert_eq!(r.best_score_for(best_algo).unwrap().to_bits(), max.to_bits());
     }
 
     #[test]

@@ -36,7 +36,11 @@
 //!   (Eq. 4), with the Table III / Table IV hyperparameter spaces, plus
 //!   the full-registry sweep (`tunetuner sweep`): every grid-bearing
 //!   optimizer hypertuned and compared default-vs-best in one versioned
-//!   `tunetuner-sweep` envelope.
+//!   `tunetuner-sweep` envelope. A self-describing registry of budgeted
+//!   meta-strategies (`random`, `tpe`, `halving`, `portfolio`) races
+//!   against that sweep's optimum (`tunetuner metasweep`), reporting
+//!   per-strategy recovery/regret/cost in a `tunetuner-metasweep`
+//!   envelope.
 //! * [`experiments`] — one regenerator per paper table/figure.
 //! * [`error`] — the typed [`TuneError`] every fallible library API
 //!   returns (the binary converts to `anyhow` at its boundary).

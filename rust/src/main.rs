@@ -5,7 +5,8 @@
 //! tunetuner bruteforce [--kernels k1,k2] [--devices d1,d2]
 //! tunetuner tune <kernel> <device> [--algo NAME] [--hp k=v,k=v] [--repeats N]
 //! tunetuner hypertune <algo> [--kind limited|extended]
-//! tunetuner sweep [--json]
+//! tunetuner sweep [--repeats N] [--json]
+//! tunetuner metasweep [--strategy S] [--budget N] [--json]
 //! tunetuner sensitivity <algo>
 //! tunetuner experiment <table2|table3|table4|fig2..fig9|all>
 //! tunetuner spacegen <AxBxC> [--validity F] [--family hash|product|mixed]
@@ -30,7 +31,7 @@ use tunetuner::hypertuning;
 use tunetuner::kernels;
 use tunetuner::optimizers;
 use tunetuner::optimizers::HyperParams;
-use tunetuner::report::bench_trend;
+use tunetuner::report::{bench_trend, Report};
 use tunetuner::runtime::Engine;
 use tunetuner::searchspace::{
     BuildOptions, ConstraintFamily, FlatPolicy, IndexKind, SpaceGenSpec, Value,
@@ -86,6 +87,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("tune") => cmd_tune(args),
         Some("hypertune") => cmd_hypertune(args),
         Some("sweep") => cmd_sweep(args),
+        Some("metasweep") => cmd_metasweep(args),
         Some("sensitivity") => cmd_sensitivity(args),
         Some("experiment") => cmd_experiment(args),
         Some("spacegen") => cmd_spacegen(args),
@@ -111,7 +113,16 @@ subcommands:
   hypertune <algo>          tune the tuner (limited: exhaustive; extended: meta)
       [--kind limited|extended] [--json]
   sweep                     hypertune every grid-bearing registry optimizer
+      [--repeats N]  override the scale's repeat count (results tagged _rN)
       [--json]  print the tunetuner-sweep envelope instead of the report
+  metasweep                 race meta-strategies against the exhaustive sweep
+      [--strategy random,tpe,halving,portfolio] [--budget COST] [--eta 4]
+      [--min-repeats 1] [--repeats N]
+      [--synthetic AxBxC] [--validity 0.05] [--family hash|product|mixed]
+      [--gen-seed 7]  hub-free run on a generated space (nothing persisted)
+      [--min-recovery PCT] [--max-cost PCT]  gate: exit 1 when any raced
+          strategy recovers less / spends more than the given percentages
+      [--json]  print the tunetuner-metasweep envelope instead of the report
   sensitivity <algo>        Kruskal-Wallis + mutual-information screen
   experiment <id>           regenerate a paper table/figure (or 'all')
   spacegen <AxBxC>          build a synthetic constrained space (e.g. 4096x4096x64)
@@ -150,6 +161,17 @@ fn cmd_info(args: &Args) -> Result<()> {
     // this listing can never drift from what `--hp` actually accepts.
     println!("\noptimizers (hyperparameter=default):");
     print!("{}", optimizers::schema_table());
+    // Grid sizes come from the same declared schemas the derived search
+    // spaces enumerate, so `sweep`/`metasweep` budgets can be sized from
+    // this listing without building the spaces.
+    println!("\nhypertuning grids (limited / extended configs):");
+    for d in optimizers::hypertunable() {
+        let extended = match d.extended_grid_size() {
+            0 => "-".to_string(),
+            n => n.to_string(),
+        };
+        println!("  {:22} {:>7} / {:>7}", d.name, d.limited_grid_size(), extended);
+    }
     Ok(())
 }
 
@@ -270,6 +292,28 @@ impl Observer for HypertuneProgress {
     fn sweep_optimizer_finished(&self, idx: usize, algo: &str, default: f64, best: f64) {
         log_info!("sweep [{idx}] {algo}: default {default:.3} -> best {best:.3}");
     }
+
+    fn meta_sweep_started(&self, strategies: usize, repeats: usize) {
+        log_info!("metasweep: {strategies} strategies, {repeats} full repeats");
+    }
+
+    fn meta_leg_started(&self, strategy: &str, target: &str, configs: usize, budget_cost: f64) {
+        log_info!("metasweep {strategy}/{target}: {configs} configs, budget {budget_cost:.1}");
+    }
+
+    fn meta_leg_finished(
+        &self,
+        strategy: &str,
+        target: &str,
+        best_score: f64,
+        spent_cost: f64,
+        evals: usize,
+    ) {
+        log_info!(
+            "metasweep {strategy}/{target}: best {best_score:.3} \
+             ({evals} evals, {spent_cost:.1} full-repeat units)"
+        );
+    }
 }
 
 fn cmd_hypertune(args: &Args) -> Result<()> {
@@ -314,6 +358,13 @@ fn cmd_hypertune(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `--repeats` as an override: present means "use exactly this many", absent
+/// means "defer to the scale's default" (`opt_usize` handles the parse
+/// diagnostics; the default is unreachable when the option is present).
+fn opt_repeats(args: &Args) -> Option<usize> {
+    args.opt("repeats").map(|_| args.opt_usize("repeats", 0))
+}
+
 fn cmd_sweep(args: &Args) -> Result<()> {
     let json = args.flag("json");
     let mut c = ctx(args)?;
@@ -324,12 +375,106 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     // over the training spaces; per-optimizer exhaustive results are
     // persisted in the results dir, so an interrupted sweep resumes from
     // the algorithms already done.
-    let result = c.registry_sweep()?;
+    let result = c.registry_sweep_at(opt_repeats(args))?;
     if json {
         println!("{}", result.to_json().to_pretty());
         return Ok(());
     }
     hypertuning::render_sweep_report(&result, &c.report("sweep"))?;
+    Ok(())
+}
+
+fn cmd_metasweep(args: &Args) -> Result<()> {
+    let json = args.flag("json");
+    let config = hypertuning::MetaSweepConfig {
+        strategies: args
+            .opt_or("strategy", "")
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(str::to_string)
+            .collect(),
+        budget: args.opt("budget").map(|_| args.opt_f64("budget", 0.0)),
+        eta: args.opt_usize("eta", 4),
+        min_repeats: args.opt_usize("min-repeats", 1),
+    };
+    let repeats_override = opt_repeats(args);
+
+    let (result, report) = if let Some(dims) = args.opt("synthetic") {
+        // Hub-free path: a generated constrained space with a synthetic
+        // cost model stands in for the brute-forced kernel hub, so CI can
+        // race the full strategy registry from a cold checkout. Nothing
+        // is persisted; the reference sweep is recomputed each run.
+        let spec = SpaceGenSpec::new(
+            SpaceGenSpec::parse_dims(dims)?,
+            args.opt_f64("validity", 0.05),
+            ConstraintFamily::parse(&args.opt_or("family", "hash"))?,
+            args.opt_u64("gen-seed", 7),
+        );
+        let space = Arc::new(spec.build()?);
+        if space.is_empty() {
+            bail!("synthetic space {} has no valid configurations", space.name);
+        }
+        let cache = Arc::new(tunetuner::dataset::synth_cache(&space, spec.seed, 3, 0.02));
+        let train = vec![tunetuner::methodology::SpaceEval::new(space, cache, 0.95, 15)];
+        let scale = Scale::parse(&args.opt_or("scale", "quick"))?;
+        let repeats = repeats_override.unwrap_or(scale.tuning_repeats);
+        let seed = args.opt_u64("seed", 42);
+        let observer: Arc<dyn Observer> = if json {
+            Arc::new(tunetuner::campaign::NullObserver)
+        } else {
+            Arc::new(HypertuneProgress)
+        };
+        let reference = hypertuning::sweep_registry(&train, repeats, seed, Arc::clone(&observer))?;
+        let result =
+            hypertuning::metasweep_registry(&train, repeats, seed, &reference, &config, observer)?;
+        let report = Report::new(&PathBuf::from(args.opt_or("results", "results")), "metasweep");
+        (result, report)
+    } else {
+        let mut c = ctx(args)?;
+        if !json {
+            c = c.with_observer(Arc::new(HypertuneProgress));
+        }
+        let result = c.registry_metasweep(&config, repeats_override)?;
+        let report = c.report("metasweep");
+        (result, report)
+    };
+
+    if json {
+        println!("{}", result.to_json().to_pretty());
+    } else {
+        hypertuning::render_metasweep_report(&result, &report)?;
+    }
+
+    // CI gates: every raced strategy must clear both bars (expressed in
+    // percent, matching the report's recovery/cost columns).
+    let min_recovery = args.opt("min-recovery").map(|_| args.opt_f64("min-recovery", 0.0));
+    let max_cost = args.opt("max-cost").map(|_| args.opt_f64("max-cost", 100.0));
+    let mut failures = Vec::new();
+    for run in &result.strategies {
+        let recovery = run.recovery() * 100.0;
+        let cost = run.cost_fraction() * 100.0;
+        if let Some(floor) = min_recovery {
+            if recovery < floor {
+                failures.push(format!(
+                    "{}: recovered {recovery:.1}% of the exhaustive improvement \
+                     (gate: >= {floor:.0}%)",
+                    run.strategy
+                ));
+            }
+        }
+        if let Some(cap) = max_cost {
+            if cost > cap + 1e-9 {
+                failures.push(format!(
+                    "{}: spent {cost:.1}% of the exhaustive cost (gate: <= {cap:.0}%)",
+                    run.strategy
+                ));
+            }
+        }
+    }
+    if !failures.is_empty() {
+        bail!("metasweep gate failed: {}", failures.join("; "));
+    }
     Ok(())
 }
 

@@ -172,6 +172,19 @@ impl Descriptor {
         self.schema.iter().any(|s| !s.extended.is_empty())
     }
 
+    /// Size of the limited (Table III) hyperparameter grid: the product
+    /// of the non-empty `limited` value lists, or 0 when the optimizer
+    /// declares none (no limited space can be derived).
+    pub fn limited_grid_size(&self) -> usize {
+        grid_size(self.schema.iter().map(|s| s.limited.len()))
+    }
+
+    /// Size of the extended (Table IV) hyperparameter grid, or 0 when
+    /// the optimizer declares none.
+    pub fn extended_grid_size(&self) -> usize {
+        grid_size(self.schema.iter().map(|s| s.extended.len()))
+    }
+
     /// Hard-validate an assignment: unknown keys, type mismatches and
     /// out-of-choice categoricals are errors (listing the valid keys),
     /// rather than silently falling back to defaults.
@@ -212,6 +225,17 @@ impl Descriptor {
         }
         Ok(full)
     }
+}
+
+/// Product of the non-empty grid lengths (0 when every grid is empty —
+/// hyperparameters without a grid don't contribute a dimension, they
+/// stay at their defaults).
+fn grid_size(lens: impl Iterator<Item = usize>) -> usize {
+    let mut size = 0usize;
+    for len in lens.filter(|&l| l > 0) {
+        size = if size == 0 { len } else { size * len };
+    }
+    size
 }
 
 // ---------------------------------------------------------------------------

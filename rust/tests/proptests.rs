@@ -623,3 +623,59 @@ fn prop_crossover_provenance() {
         }
     }
 }
+
+/// The successive-halving schedule is well-formed for arbitrary inputs:
+/// never empty, starts within the grid at the requested minimum repeats,
+/// ends at full repeats, repeats strictly increase rung to rung (so a
+/// survivor is never re-evaluated at fewer repeats than a previous rung)
+/// while cohorts never grow, and the plan's cost fits the budget — with
+/// the starting cohort maximal under it — unless even the minimal n0=1
+/// ladder exceeds it.
+#[test]
+fn prop_halving_schedule_invariants() {
+    use tunetuner::hypertuning::halving_schedule;
+    let mut rng = Rng::new(0x4A1F);
+    for case in 0..300u64 {
+        let grid = 1 + rng.below(4000);
+        let full = 1 + rng.below(32);
+        let eta = 2 + rng.below(9);
+        let min_r = 1 + rng.below(full);
+        let budget = rng.range_f64(0.0, 2.0 * grid as f64);
+        let s = halving_schedule(grid, full, budget, eta, min_r);
+        let ctx = format!(
+            "case {case}: grid={grid} full={full} eta={eta} min_r={min_r} \
+             budget={budget:.3} -> {s:?}"
+        );
+        assert!(!s.is_empty(), "{ctx}");
+        assert!(s[0].n >= 1 && s[0].n <= grid, "{ctx}");
+        assert_eq!(s[0].repeats, min_r, "{ctx}");
+        assert_eq!(s.last().unwrap().repeats, full, "{ctx}");
+        for w in s.windows(2) {
+            assert!(w[1].repeats > w[0].repeats, "{ctx}");
+            assert!(w[1].repeats <= w[0].repeats * eta, "{ctx}");
+            assert!(w[1].n <= w[0].n, "{ctx}");
+        }
+        // Reconstruct the cost of an arbitrary starting cohort on this
+        // ladder (same integer-division shrinkage the planner uses).
+        let cost_of = |n0: usize| -> f64 {
+            s.iter()
+                .enumerate()
+                .map(|(i, r)| {
+                    let mut n = n0;
+                    for _ in 0..i {
+                        n /= eta;
+                    }
+                    n.max(1) as f64 * r.repeats as f64 / full as f64
+                })
+                .sum()
+        };
+        let cost = cost_of(s[0].n);
+        if s[0].n > 1 {
+            assert!(cost <= budget + 1e-9, "{ctx}: cost {cost}");
+        }
+        // Maximality: a larger starting cohort would blow the budget.
+        if s[0].n < grid {
+            assert!(cost_of(s[0].n + 1) > budget + 1e-9, "{ctx}");
+        }
+    }
+}
