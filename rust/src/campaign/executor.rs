@@ -12,12 +12,24 @@
 //! * **gather** — every job writes its own slot; results come back in job
 //!   order, so downstream scoring is independent of thread scheduling.
 //!
+//! ## Fault isolation
+//!
+//! Every job runs under `catch_unwind`: a panicking job never takes the
+//! batch (or the pool) down with it. [`Executor::scatter_result`] is the
+//! fault-isolating gather — the batch always drains, and each slot comes
+//! back as `Ok(T)` or a typed [`JobFailure`] carrying the job index and
+//! the captured panic payload. The legacy [`Executor::scatter`] is a
+//! thin wrapper that re-raises the first (lowest-index) failure after
+//! the drain, preserving `thread::scope` semantics for callers that
+//! treat a panic as fatal — now with the original payload message
+//! instead of a bare "executor job panicked".
+//!
 //! Determinism is unaffected by pooling: job payloads derive their RNG
 //! streams from the job index, never from the executing thread.
 
 use std::cell::Cell;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
@@ -36,7 +48,6 @@ struct Batch {
     next: AtomicUsize,
     /// Jobs finished (success or panic).
     completed: AtomicUsize,
-    panicked: AtomicBool,
     /// Runs job `i`; the closure writes its result into slot `i`.
     job: Box<dyn Fn(usize) + Send + Sync>,
 }
@@ -129,13 +140,45 @@ impl Executor {
 
     /// Run `n_jobs` independent jobs and gather their results in job
     /// order. Blocks until every job finished; panics (after the batch
-    /// drains) if any job panicked, mirroring `thread::scope` semantics.
+    /// drains) if any job panicked, mirroring `thread::scope` semantics —
+    /// the re-raised panic carries the first (lowest-index) failing job's
+    /// captured payload. Fault-tolerant callers use
+    /// [`Executor::scatter_result`] instead.
     ///
     /// Not reentrant: a job (or an observer it calls) must not scatter on
     /// any executor from inside the job — the calling batch would wait on
     /// the nested one while holding its slot. Detected and panicked with
     /// a diagnosis rather than deadlocking.
     pub fn scatter<T, F>(&self, n_jobs: usize, job: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(usize) -> T + Send + Sync + 'static,
+    {
+        let mut out = Vec::with_capacity(n_jobs);
+        let mut first_failure: Option<JobFailure> = None;
+        for r in self.scatter_result(n_jobs, job) {
+            match r {
+                Ok(v) => out.push(v),
+                Err(f) => {
+                    if first_failure.is_none() {
+                        first_failure = Some(f);
+                    }
+                }
+            }
+        }
+        if let Some(f) = first_failure {
+            panic!("executor job {} panicked: {}", f.job, f.message);
+        }
+        out
+    }
+
+    /// Fault-isolating scatter: run `n_jobs` independent jobs and gather
+    /// a per-slot `Result` in job order. Panicking jobs are contained by
+    /// `catch_unwind` — the batch always drains, the pool stays usable,
+    /// and each failed slot carries a [`JobFailure`] with the job index
+    /// and the captured panic payload. Same reentrancy contract as
+    /// [`Executor::scatter`].
+    pub fn scatter_result<T, F>(&self, n_jobs: usize, job: F) -> Vec<Result<T, JobFailure>>
     where
         T: Send + 'static,
         F: Fn(usize) -> T + Send + Sync + 'static,
@@ -150,17 +193,22 @@ impl Executor {
         if n_jobs == 0 {
             return Vec::new();
         }
-        let slots: Arc<Vec<Mutex<Option<T>>>> =
-            Arc::new((0..n_jobs).map(|_| Mutex::new(None)).collect());
+        type Slot<T> = Mutex<Option<Result<T, JobFailure>>>;
+        let slots: Arc<Vec<Slot<T>>> = Arc::new((0..n_jobs).map(|_| Mutex::new(None)).collect());
         let write_slots = Arc::clone(&slots);
         let batch = Arc::new(Batch {
             n_jobs,
             next: AtomicUsize::new(0),
             completed: AtomicUsize::new(0),
-            panicked: AtomicBool::new(false),
             job: Box::new(move |i| {
-                let v = job(i);
-                *write_slots[i].lock().unwrap() = Some(v);
+                // The inner catch keeps the payload; run_jobs' outer
+                // catch_unwind stays as a backstop for anything that
+                // escapes (e.g. a panic while writing the slot).
+                let r = catch_unwind(AssertUnwindSafe(|| job(i))).map_err(|payload| JobFailure {
+                    job: i,
+                    message: panic_message(payload.as_ref()),
+                });
+                *write_slots[i].lock().unwrap() = Some(r);
             }),
         });
 
@@ -184,13 +232,50 @@ impl Executor {
         drop(st);
         drop(submit);
 
-        if batch.panicked.load(Ordering::Relaxed) {
-            panic!("executor job panicked");
-        }
         slots
             .iter()
-            .map(|m| m.lock().unwrap().take().expect("job slot unfilled"))
+            .enumerate()
+            .map(|(i, m)| {
+                let slot = match m.lock() {
+                    Ok(mut s) => s.take(),
+                    Err(poisoned) => poisoned.into_inner().take(),
+                };
+                slot.unwrap_or_else(|| {
+                    Err(JobFailure {
+                        job: i,
+                        message: "executor job aborted before writing its slot".into(),
+                    })
+                })
+            })
             .collect()
+    }
+}
+
+/// A contained job panic from [`Executor::scatter_result`]: which job
+/// failed and the captured panic payload (the `&str`/`String` message
+/// when the payload was one, a placeholder otherwise).
+#[derive(Clone, Debug)]
+pub struct JobFailure {
+    /// Index of the failed job within its batch.
+    pub job: usize,
+    /// Captured panic payload message.
+    pub message: String,
+}
+
+impl std::fmt::Display for JobFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "job {} panicked: {}", self.job, self.message)
+    }
+}
+
+/// Extract the human-readable message from a panic payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 
@@ -239,11 +324,12 @@ fn run_jobs(shared: &Shared, batch: &Batch) {
             return;
         }
         IN_EXECUTOR_JOB.with(|f| f.set(true));
-        let ok = catch_unwind(AssertUnwindSafe(|| (batch.job)(i)));
+        // Backstop: the scatter closure already catches job panics to
+        // capture their payloads; this outer catch only guards batch
+        // bookkeeping (the drain must complete even if slot-writing
+        // itself paniced — the gather reports such slots as failures).
+        let _ = catch_unwind(AssertUnwindSafe(|| (batch.job)(i)));
         IN_EXECUTOR_JOB.with(|f| f.set(false));
-        if ok.is_err() {
-            batch.panicked.store(true, Ordering::Relaxed);
-        }
         shared.jobs_completed.fetch_add(1, Ordering::Relaxed);
         let done = batch.completed.fetch_add(1, Ordering::AcqRel) + 1;
         if done == batch.n_jobs {
@@ -322,7 +408,7 @@ mod tests {
     }
 
     #[test]
-    fn job_panic_propagates_to_submitter() {
+    fn job_panic_propagates_to_submitter_with_payload() {
         let ex = Executor::new(2);
         let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
             ex.scatter(10, |i| {
@@ -332,8 +418,67 @@ mod tests {
                 i
             })
         }));
-        assert!(r.is_err());
+        // The re-raised panic carries the original payload, not a bare
+        // "executor job panicked".
+        let payload = r.expect_err("scatter must re-raise the job panic");
+        let msg = panic_message(payload.as_ref());
+        assert!(msg.contains("boom"), "payload lost: {msg:?}");
+        assert!(msg.contains("job 5"), "job index lost: {msg:?}");
         // The pool survives a panicked batch.
         assert_eq!(ex.scatter(3, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn scatter_result_isolates_failures_and_drains() {
+        let ex = Executor::new(3);
+        let faulty = [2usize, 5, 7];
+        let out = ex.scatter_result(10, move |i| {
+            if faulty.contains(&i) {
+                panic!("injected failure in job {i}");
+            }
+            i * 10
+        });
+        assert_eq!(out.len(), 10, "batch must drain every slot");
+        for (i, r) in out.iter().enumerate() {
+            if faulty.contains(&i) {
+                let f = r.as_ref().expect_err("faulty slot must be Err");
+                assert_eq!(f.job, i);
+                assert!(
+                    f.message.contains(&format!("injected failure in job {i}")),
+                    "payload lost: {}",
+                    f.message
+                );
+            } else {
+                assert_eq!(*r.as_ref().unwrap(), i * 10);
+            }
+        }
+        assert_eq!(ex.jobs_completed(), 10, "failed jobs still count as drained");
+        // The pool is immediately reusable after a faulted batch.
+        let again = ex.scatter_result(4, |i| i);
+        assert!(again.iter().all(|r| r.is_ok()));
+    }
+
+    #[test]
+    fn scatter_result_all_jobs_failing_still_drains() {
+        let ex = Executor::new(2);
+        let out = ex.scatter_result(6, |i| -> usize { panic!("fail {i}") });
+        assert_eq!(out.len(), 6);
+        for (i, r) in out.iter().enumerate() {
+            let f = r.as_ref().unwrap_err();
+            assert_eq!(f.job, i);
+            assert!(f.message.contains(&format!("fail {i}")));
+        }
+        assert_eq!(ex.scatter(2, |i| i), vec![0, 1], "pool survives");
+    }
+
+    #[test]
+    fn scatter_result_captures_string_payloads() {
+        let ex = Executor::new(0);
+        let out = ex.scatter_result(1, |_| -> usize {
+            // A formatted (heap-allocated String) payload.
+            panic!("formatted {} payload", 42);
+        });
+        let f = out[0].as_ref().unwrap_err();
+        assert_eq!(f.message, "formatted 42 payload");
     }
 }

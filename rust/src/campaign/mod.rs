@@ -38,6 +38,11 @@
 //!   structural fingerprint as provenance.
 //! * Seeds are deterministic per (campaign seed, space index, repeat):
 //!   results are bit-reproducible regardless of pool size or scheduling.
+//! * Jobs are fault-isolated: a panicking run never takes down the batch
+//!   (see [`Executor::scatter_result`]), is retried under the
+//!   [`RetryPolicy`] — replaying its exact RNG stream — and surfaces as
+//!   a typed [`TuneError::WorkerPanic`] when retries exhaust, so the
+//!   sweep drivers quarantine one leg instead of losing a whole sweep.
 //!
 //! `methodology::evaluate_algorithm`, `hypertuning::exhaustive_tuning`
 //! and `hypertuning::MetaRunner` are thin wrappers over this module.
@@ -46,12 +51,13 @@ pub mod executor;
 pub mod observer;
 pub mod result;
 
-pub use executor::Executor;
+pub use executor::{Executor, JobFailure};
 pub use observer::{LogObserver, NullObserver, Observer};
 pub use result::{CampaignResult, SpaceOutcome, SCHEMA, SCHEMA_VERSION};
 
 use crate::dataset::hub::{Hub, HUB_SEED};
 use crate::error::{Result, TuneError};
+use crate::faults::{FaultKind, FaultPlan, FaultyRunner};
 use crate::gpu::specs::device_by_name;
 use crate::kernels;
 use crate::methodology::{AggregateResult, SpaceEval};
@@ -117,6 +123,24 @@ impl Backend {
     }
 }
 
+/// How many times a panicked tuning job is attempted in total before the
+/// campaign gives up with [`TuneError::WorkerPanic`]. Retries are
+/// deterministic: a job's RNG stream derives from its (space, repeat)
+/// identity — not from the attempt number — so a retried job that
+/// survives reproduces bitwise the trace a faultless run would have
+/// produced.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Total attempts per job (initial run + retries). Minimum 1.
+    pub max_attempts: usize,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy { max_attempts: 2 }
+    }
+}
+
 /// A configured tuning campaign: one algorithm + hyperparameter
 /// assignment, run `repeats` times on every prepared space, scored with
 /// the methodology's Eq. 2/Eq. 3. Build with [`Campaign::new`] and the
@@ -134,6 +158,8 @@ pub struct Campaign {
     backend: Backend,
     observer: Arc<dyn Observer>,
     executor: Arc<Executor>,
+    retry: RetryPolicy,
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl Campaign {
@@ -152,6 +178,8 @@ impl Campaign {
             backend: Backend::Sim,
             observer: Arc::new(NullObserver),
             executor: Executor::global(),
+            retry: RetryPolicy::default(),
+            faults: None,
         }
     }
 
@@ -272,6 +300,21 @@ impl Campaign {
         self
     }
 
+    /// Retry policy for panicked jobs (default: one retry).
+    pub fn retry(mut self, retry: RetryPolicy) -> Campaign {
+        self.retry = retry;
+        self
+    }
+
+    /// Fault-injection plan scoped to this campaign's jobs (chaos
+    /// testing; default none). The sweep drivers thread their plan
+    /// through here, so campaigns they *don't* hand it to — reference
+    /// sweeps, unrelated tests — stay fault-free.
+    pub fn faults(mut self, faults: Option<Arc<FaultPlan>>) -> Campaign {
+        self.faults = faults;
+        self
+    }
+
     /// The prepared spaces.
     pub fn spaces(&self) -> &[SpaceEval] {
         &self.spaces
@@ -327,7 +370,10 @@ impl Campaign {
 
         // Scatter: one job per (space, repeat); every job derives its RNG
         // from the job index, so gather order == job order and results
-        // are scheduling-independent.
+        // are scheduling-independent. The closure is shared with the
+        // retry path below: a retried job re-derives the identical RNG
+        // stream from its identity, so a job that panicked transiently
+        // replays its original trace bitwise on the next attempt.
         let n_jobs = self.spaces.len() * self.repeats;
         let job_spaces = Arc::clone(&self.spaces);
         let job_observer = Arc::clone(&self.observer);
@@ -337,10 +383,15 @@ impl Campaign {
         let seed = self.seed;
         let budget = self.budget.clone();
         let backend = self.backend.clone();
-        let traces: Vec<Trace> = self.executor.scatter(n_jobs, move |job| {
+        let faults = self.faults.clone();
+        let run_job: Arc<dyn Fn(usize) -> Trace + Send + Sync> = Arc::new(move |job| {
             let (s, r) = (job / repeats, job % repeats);
             let se = &job_spaces[s];
             job_observer.run_started(s, r);
+            let fault = faults.as_ref().and_then(|p| p.job_fault(&algo, job));
+            if fault == Some(FaultKind::Panic) {
+                panic!("injected fault: panic ({algo} job {job})");
+            }
             // Per-job optimizer instance (Optimizer is stateless across
             // runs, and create() is cheap).
             let opt = optimizers::create(&algo, &hp).expect("validated before scatter");
@@ -353,13 +404,27 @@ impl Campaign {
             // them per run.
             let trace = TuningScratch::with_pooled(|scratch| match &backend {
                 Backend::Sim => {
-                    let mut sim = SimulationRunner::new_unchecked(
+                    let sim = SimulationRunner::new_unchecked(
                         Arc::clone(&se.space),
                         Arc::clone(&se.cache),
                     );
-                    let mut tuning = Tuning::with_scratch(&mut sim, budget, scratch);
-                    opt.run(&mut tuning, &mut rng);
-                    tuning.finish()
+                    // Injected nan/stall faults corrupt evaluations
+                    // through a wrapper; the job itself still completes,
+                    // exercising the scoring path under poisoned data.
+                    match fault {
+                        Some(kind) => {
+                            let mut faulty = FaultyRunner::new(sim, kind);
+                            let mut tuning = Tuning::with_scratch(&mut faulty, budget, scratch);
+                            opt.run(&mut tuning, &mut rng);
+                            tuning.finish()
+                        }
+                        None => {
+                            let mut sim = sim;
+                            let mut tuning = Tuning::with_scratch(&mut sim, budget, scratch);
+                            opt.run(&mut tuning, &mut rng);
+                            tuning.finish()
+                        }
+                    }
                 }
                 Backend::Live { engine, seed } => {
                     let kernel = kernels::kernel_by_name(&se.cache.kernel)
@@ -387,6 +452,64 @@ impl Campaign {
             );
             trace
         });
+
+        let scatter_job = Arc::clone(&run_job);
+        let mut results = self
+            .executor
+            .scatter_result(n_jobs, move |job| scatter_job(job));
+        // Deterministic retry: only the failed jobs are re-scattered, up
+        // to the policy's attempt cap. On exhaustion the first failure
+        // surfaces as a typed [`TuneError::WorkerPanic`] so the sweep
+        // drivers can quarantine this leg instead of aborting the sweep.
+        let max_attempts = self.retry.max_attempts.max(1);
+        let mut attempts = 1;
+        while attempts < max_attempts && results.iter().any(|res| res.is_err()) {
+            attempts += 1;
+            let failed: Vec<usize> = results
+                .iter()
+                .enumerate()
+                .filter_map(|(i, res)| res.is_err().then_some(i))
+                .collect();
+            for &i in &failed {
+                if let Err(f) = &results[i] {
+                    let (s, r) = (i / self.repeats, i % self.repeats);
+                    self.observer.leg_retried(
+                        &format!("{}[s{s}r{r}]", self.algo),
+                        attempts,
+                        max_attempts,
+                        &f.message,
+                    );
+                }
+            }
+            let retry_map = failed.clone();
+            let retry_job = Arc::clone(&run_job);
+            let retried = self
+                .executor
+                .scatter_result(failed.len(), move |k| retry_job(retry_map[k]));
+            for (k, res) in retried.into_iter().enumerate() {
+                results[failed[k]] = res.map_err(|mut f| {
+                    // A retry batch's failure indices are positions in the
+                    // compacted batch; restore the original job id.
+                    f.job = failed[k];
+                    f
+                });
+            }
+        }
+        if let Some((job, f)) = results
+            .iter()
+            .enumerate()
+            .find_map(|(i, res)| res.as_ref().err().map(|f| (i, f)))
+        {
+            return Err(TuneError::WorkerPanic {
+                job,
+                attempts,
+                message: f.message.clone(),
+            });
+        }
+        let traces: Vec<Trace> = results
+            .into_iter()
+            .map(|res| res.expect("failures handled above"))
+            .collect();
 
         // Gather: score the whole campaign's traces with one batched
         // call (traces are in job order, grouped by space).
@@ -654,5 +777,100 @@ mod tests {
             .unwrap();
         assert!(pos("space_scored 0") > last_trace);
         assert!(pos("space_scored 0") < pos("space_scored 1"));
+    }
+
+    /// Collects only the fault-tolerance events.
+    #[derive(Default)]
+    struct RetryCollector(Mutex<Vec<String>>);
+
+    impl Observer for RetryCollector {
+        fn leg_retried(&self, leg: &str, attempt: usize, max_attempts: usize, error: &str) {
+            self.0
+                .lock()
+                .unwrap()
+                .push(format!("{leg} {attempt}/{max_attempts} {error}"));
+        }
+    }
+
+    /// A transiently panicking job is retried on its identity-derived RNG
+    /// stream, so the final envelope is bitwise identical to a fault-free
+    /// run.
+    #[test]
+    fn injected_panic_is_retried_and_reproduces_clean_result() {
+        let clean = Campaign::new("pso")
+            .space_evals(spaces().clone())
+            .repeats(3)
+            .seed(17)
+            .run()
+            .unwrap();
+        let collector = Arc::new(RetryCollector::default());
+        let plan = Arc::new(crate::faults::FaultPlan::parse("panic@pso.j3").unwrap());
+        let retried = Campaign::new("pso")
+            .space_evals(spaces().clone())
+            .repeats(3)
+            .seed(17)
+            .faults(Some(plan))
+            .observer(Arc::clone(&collector) as Arc<dyn Observer>)
+            .run()
+            .unwrap();
+        assert_eq!(clean.score().to_bits(), retried.score().to_bits());
+        assert_eq!(
+            clean.aggregate.aggregate_curve,
+            retried.aggregate.aggregate_curve
+        );
+        let events = collector.0.lock().unwrap().clone();
+        // Job 3 with 3 repeats is (space 1, repeat 0); one retry at the
+        // default two-attempt policy, carrying the captured panic payload.
+        assert_eq!(events.len(), 1, "{events:?}");
+        assert!(events[0].starts_with("pso[s1r0] 2/2"), "{}", events[0]);
+        assert!(events[0].contains("injected fault"), "{}", events[0]);
+    }
+
+    /// A job that panics on every attempt exhausts the retry budget and
+    /// surfaces as a typed `WorkerPanic` — and the executor pool survives
+    /// to run the next campaign.
+    #[test]
+    fn exhausted_retries_are_typed_worker_panic() {
+        let plan = Arc::new(crate::faults::FaultPlan::parse("panic@pso.j1x*").unwrap());
+        let base = Campaign::new("pso")
+            .space_evals(spaces().clone())
+            .repeats(3)
+            .seed(23);
+        let err = base.clone().faults(Some(plan)).run().unwrap_err();
+        match &err {
+            TuneError::WorkerPanic {
+                job,
+                attempts,
+                message,
+            } => {
+                assert_eq!(*job, 1);
+                assert_eq!(*attempts, 2);
+                assert!(message.contains("injected fault"), "{message}");
+            }
+            other => panic!("expected WorkerPanic, got {other}"),
+        }
+        // The shared pool is unharmed: the same campaign minus the plan
+        // completes normally.
+        base.run().unwrap();
+    }
+
+    /// nan/stall faults corrupt evaluations without killing the job: the
+    /// campaign completes (possibly with degraded scores) and never errors.
+    #[test]
+    fn nan_and_stall_faults_complete_without_error() {
+        let plan = Arc::new(
+            crate::faults::FaultPlan::parse("nan@random_search.j0; stall@random_search.j1")
+                .unwrap(),
+        );
+        let c = Campaign::new("random_search")
+            .space_evals(spaces().clone())
+            .repeats(3)
+            .seed(31)
+            .faults(Some(plan))
+            .run()
+            .unwrap();
+        assert_eq!(c.spaces.len(), 2);
+        // The stalled job burned its whole budget on one evaluation.
+        assert!(c.spaces[0].mean_unique_evals >= 1.0);
     }
 }

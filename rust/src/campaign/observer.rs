@@ -133,6 +133,29 @@ pub trait Observer: Send + Sync {
 
     /// The metasweep finished.
     fn meta_sweep_finished(&self, _wallclock_seconds: f64) {}
+
+    // ---- fault-tolerance events (campaign retry, sweep quarantine,
+    // checkpointing) ----------------------------------------------------------
+    // `leg_retried` is emitted from the campaign-driving thread between
+    // scatter rounds; `leg_failed` from the sweep/metasweep driver when a
+    // leg exhausts its retries and is quarantined; `checkpoint_saved`
+    // after each successful incremental envelope save.
+
+    /// A failed job/leg is about to be retried: which leg (a
+    /// human-readable identity like `"pso[s0r3]"`), the attempt number
+    /// being started (2 = first retry), the retry policy's cap, and the
+    /// captured error of the previous attempt. Retries re-derive the
+    /// job's RNG stream from its identity, so a transient fault replays
+    /// the original trace bitwise.
+    fn leg_retried(&self, _leg: &str, _attempt: usize, _max_attempts: usize, _error: &str) {}
+
+    /// A leg exhausted its retry budget and was quarantined into the
+    /// envelope's `failed_legs` instead of aborting the sweep.
+    fn leg_failed(&self, _leg: &str, _error: &str, _attempts: usize) {}
+
+    /// An incremental checkpoint of the sweep/metasweep envelope was
+    /// atomically saved after `completed_legs` finished legs.
+    fn checkpoint_saved(&self, _path: &str, _completed_legs: usize) {}
 }
 
 /// Ignores every event (the default for batch/library use).
@@ -243,5 +266,17 @@ impl Observer for LogObserver {
 
     fn meta_sweep_finished(&self, wallclock_seconds: f64) {
         crate::log_info!("metasweep done in {wallclock_seconds:.1}s");
+    }
+
+    fn leg_retried(&self, leg: &str, attempt: usize, max_attempts: usize, error: &str) {
+        crate::log_warn!("retrying {leg} (attempt {attempt}/{max_attempts}): {error}");
+    }
+
+    fn leg_failed(&self, leg: &str, error: &str, attempts: usize) {
+        crate::log_warn!("quarantined {leg} after {attempts} attempt(s): {error}");
+    }
+
+    fn checkpoint_saved(&self, path: &str, completed_legs: usize) {
+        crate::log_debug!("checkpoint: {completed_legs} legs -> {path}");
     }
 }

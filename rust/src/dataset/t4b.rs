@@ -267,28 +267,13 @@ pub fn decode(buf: &[u8]) -> Result<(CacheData, String, SrcStamp)> {
     ))
 }
 
-/// Write a sidecar atomically (unique temp file + rename). The temp name
-/// carries pid + a process-wide counter so concurrent writers of the
-/// same sidecar never interleave into one staging file — each rename
-/// installs some writer's complete bytes.
+/// Write a sidecar atomically via [`crate::util::fsio::atomic_write`]
+/// (unique pid+counter temp file + rename, the pattern this writer
+/// originated): concurrent writers of the same sidecar never interleave
+/// into one staging file — each rename installs some writer's complete
+/// bytes.
 pub fn write(cache: &CacheData, fingerprint: &str, src: SrcStamp, path: &Path) -> Result<()> {
-    use std::sync::atomic::{AtomicU64, Ordering};
-    static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
-    if let Some(parent) = path.parent() {
-        std::fs::create_dir_all(parent)?;
-    }
-    let tmp = path.with_extension(format!(
-        "t4b.tmp.{}.{}",
-        std::process::id(),
-        TMP_SEQ.fetch_add(1, Ordering::Relaxed)
-    ));
-    let staged = std::fs::write(&tmp, encode(cache, fingerprint, src))
-        .and_then(|_| std::fs::rename(&tmp, path));
-    if staged.is_err() {
-        std::fs::remove_file(&tmp).ok();
-    }
-    staged?;
-    Ok(())
+    crate::util::fsio::atomic_write(path, &encode(cache, fingerprint, src))
 }
 
 /// Read and decode a sidecar; returns `(cache, fingerprint, src_stamp)`.

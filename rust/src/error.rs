@@ -46,6 +46,17 @@ pub enum TuneError {
     Io(std::io::Error),
     /// Malformed input that fits no more specific class.
     InvalidInput(String),
+    /// An executor job (one (space, repeat) tuning run) panicked and
+    /// exhausted its retry budget. Carries the first captured panic
+    /// payload; sweep drivers quarantine the leg on this variant.
+    WorkerPanic {
+        /// Job index within the campaign's (space × repeat) matrix.
+        job: usize,
+        /// Attempts performed (initial run + retries).
+        attempts: usize,
+        /// First captured panic payload message.
+        message: String,
+    },
     /// Free-form message (the [`crate::bail!`] macro produces these).
     Msg(String),
     /// A lower-level error wrapped with a context message.
@@ -75,6 +86,11 @@ impl TuneError {
             | TuneError::Engine(m)
             | TuneError::InvalidInput(m)
             | TuneError::Msg(m) => m.clone(),
+            TuneError::WorkerPanic {
+                job,
+                attempts,
+                message,
+            } => format!("tuning job {job} panicked after {attempts} attempt(s): {message}"),
             TuneError::Io(e) => e.to_string(),
             TuneError::Context { msg, .. } => msg.clone(),
         }

@@ -64,6 +64,10 @@ pub struct Ctx {
     /// context launches (the CLI installs a progress logger; batch runs
     /// keep the no-op default).
     observer: Arc<dyn Observer>,
+    /// Explicit fault plan injected into the sweep/metasweep campaigns
+    /// this context launches (the CLI wires `--inject-faults` /
+    /// `TUNETUNER_FAULTS` here; batch runs keep `None`).
+    faults: Option<Arc<crate::faults::FaultPlan>>,
     spaces: Mutex<HashMap<String, Arc<Vec<SpaceEval>>>>,
     hyper: Mutex<HashMap<String, Arc<exhaustive::HyperTuningResults>>>,
 }
@@ -86,6 +90,7 @@ impl Ctx {
             scale_name: scale_name.to_string(),
             seed,
             observer: Arc::new(NullObserver),
+            faults: None,
             spaces: Mutex::new(HashMap::new()),
             hyper: Mutex::new(HashMap::new()),
         }
@@ -95,6 +100,13 @@ impl Ctx {
     /// launches.
     pub fn with_observer(mut self, observer: Arc<dyn Observer>) -> Ctx {
         self.observer = observer;
+        self
+    }
+
+    /// Inject a deterministic fault plan into the sweep/metasweep
+    /// campaigns this context launches (chaos testing).
+    pub fn with_faults(mut self, faults: Option<Arc<crate::faults::FaultPlan>>) -> Ctx {
+        self.faults = faults;
         self
     }
 
@@ -304,18 +316,24 @@ impl Ctx {
     pub fn registry_sweep_at(&self, repeats_override: Option<usize>) -> Result<sweep::SweepResult> {
         let repeats = repeats_override.unwrap_or(self.scale.tuning_repeats);
         let train = self.train_spaces()?;
-        let result = sweep::sweep_registry_with(
-            &train,
-            repeats,
-            self.seed,
-            Arc::clone(&self.observer),
-            |algo| self.limited_results_at(algo, repeats),
-        )?;
         let path = self.results_dir.join(format!(
             "sweep_registry_{}{}.json.gz",
             self.scale_name,
             self.repeats_suffix(repeats)
         ));
+        // Checkpoint the envelope after every leg: a crash costs at most
+        // one optimizer's campaigns (and the per-algorithm results are
+        // persisted separately by `limited_results_at` anyway).
+        let checkpoint = sweep::Checkpoint::new(path.clone(), 1);
+        let result = sweep::sweep_registry_checkpointed(
+            &train,
+            repeats,
+            self.seed,
+            Arc::clone(&self.observer),
+            Some(&checkpoint),
+            self.faults.clone(),
+            |algo| self.limited_results_at(algo, repeats),
+        )?;
         result.save(&path)?;
         Ok(result)
     }
@@ -340,20 +358,22 @@ impl Ctx {
             self.scale_name,
             self.repeats_suffix(repeats)
         ));
-        // A stale/corrupt prior is never fatal: the driver re-verifies
-        // every fingerprint and simply re-runs what doesn't match.
-        let prior = if path.exists() {
-            hypertuning::MetaSweepResult::load(&path).ok()
-        } else {
-            None
-        };
-        let result = hypertuning::metasweep_registry_with(
+        // A stale/corrupt prior is never fatal: load_tolerant warns and
+        // starts fresh, and the driver re-verifies every fingerprint and
+        // simply re-runs what doesn't match. The prior doubles as the
+        // crash-resume path — the incremental checkpoint below rewrites
+        // this same file after every completed leg.
+        let prior = hypertuning::MetaSweepResult::load_tolerant(&path);
+        let checkpoint = sweep::Checkpoint::new(path.clone(), 1);
+        let result = hypertuning::metasweep_registry_checkpointed(
             &train,
             repeats,
             self.seed,
             &reference,
             config,
             prior.as_ref(),
+            Some(&checkpoint),
+            self.faults.clone(),
             Arc::clone(&self.observer),
         )?;
         result.save(&path)?;
@@ -374,7 +394,10 @@ impl Ctx {
 /// matches the request. A stale (or pre-fingerprint) file triggers
 /// recomputation instead of silently misdecoding its `config_idx`
 /// values against a changed grid — or comparing scores averaged over a
-/// different number of repeats.
+/// different number of repeats. A corrupt or truncated file (which
+/// [`crate::util::fsio::atomic_write`] makes rare, but a foreign file
+/// can still produce) is likewise a warning + recompute, never an
+/// abort.
 fn load_if_current(
     path: &std::path::Path,
     hp_space: &crate::searchspace::SearchSpace,
@@ -383,7 +406,16 @@ fn load_if_current(
     if !path.exists() {
         return Ok(None);
     }
-    let r = exhaustive::HyperTuningResults::load(path)?;
+    let r = match exhaustive::HyperTuningResults::load(path) {
+        Ok(r) => r,
+        Err(e) => {
+            crate::log_warn!(
+                "ignoring unreadable hypertuning results at {}: {e:#}; recomputing",
+                path.display()
+            );
+            return Ok(None);
+        }
+    };
     if r.space_key == exhaustive::space_fingerprint(hp_space) && r.repeats == repeats {
         Ok(Some(r))
     } else {
@@ -393,5 +425,25 @@ fn load_if_current(
             path.display()
         );
         Ok(None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A truncated artifact (half-written by a kill before fsio existed,
+    /// or a foreign file) must read as "recompute", not crash the run.
+    #[test]
+    fn load_if_current_treats_truncated_files_as_missing() {
+        let dir = std::env::temp_dir().join(format!("tt_ctxload_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let space = hypertuning::limited_space("pso").unwrap();
+        let absent = dir.join("absent.json.gz");
+        assert!(load_if_current(&absent, &space, 5).unwrap().is_none());
+        let truncated = dir.join("truncated.json");
+        std::fs::write(&truncated, "{\"schema\": \"tunetuner-hypertuning\", \"res").unwrap();
+        assert!(load_if_current(&truncated, &space, 5).unwrap().is_none());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,0 +1,387 @@
+//! Deterministic fault injection for chaos-testing the execution stack.
+//!
+//! A [`FaultPlan`] is a parsed list of fault specs, each addressed at a
+//! campaign job (`panic` / `nan` / `stall`) or at a persisted-artifact
+//! save (`truncate-save`), with a fire budget. Faults are keyed by
+//! *identity* (optimizer name + job index + how many times the spec has
+//! fired), not by wall-clock or randomness, so a replay under the same
+//! plan faults at exactly the same points — which is what lets the tests
+//! kill a metasweep mid-flight, resume it, and pin the merged envelope
+//! bitwise against an uninterrupted run.
+//!
+//! ## Spec grammar
+//!
+//! A plan is `;`- or `,`-separated entries of the form `KIND@TARGET`:
+//!
+//! | entry                     | effect                                             |
+//! |---------------------------|----------------------------------------------------|
+//! | `panic@pso.j0`            | job 0 of the next `pso` campaign panics (once)     |
+//! | `panic@pso.j0x*`          | …on every attempt (retries exhaust → quarantine)   |
+//! | `nan@greedy_ils.j2x3`     | evals of that job score NaN, first 3 attempts      |
+//! | `stall@*.j1`              | job 1 of any campaign stalls (simulated clock jam) |
+//! | `truncate-save@s0`        | the first artifact save is truncated mid-write     |
+//! | `truncate-save@*x2`       | the next two saves are truncated                   |
+//!
+//! Job-fault targets are `ALGO[.jN][xCOUNT]` — `ALGO` is an optimizer
+//! registry name or `*`, `.jN` pins one job index (omit to match any
+//! job), and `xCOUNT` caps how many times the spec fires (default 1,
+//! `x*` = unlimited). Save targets are `sN` (the Nth save this process
+//! performs, 0-based) or `*`.
+//!
+//! The CLI installs a process-global plan from `--inject-faults SPEC` or
+//! the `TUNETUNER_FAULTS` environment variable; that global is consulted
+//! by [`crate::util::fsio::atomic_write`] and handed by `main` to the
+//! sweep drivers, which scope it to their own campaigns (reference
+//! sweeps stay fault-free). Library code and tests pass explicit plans
+//! (`Campaign::faults`, the `*_checkpointed` drivers) so parallel tests
+//! never leak faults into each other.
+
+use crate::error::{Result, TuneError};
+use crate::runner::{EvalResult, Runner};
+use crate::searchspace::SearchSpace;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+
+/// Simulated seconds an injected stall jams onto every evaluation: far
+/// past any campaign cutoff, so the first faulted eval exhausts the
+/// budget deterministically (a *simulated* hang — the worker thread
+/// itself never blocks).
+pub const STALL_SECONDS: f64 = 1.0e9;
+
+/// What an injected job fault does to the victim.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The job panics (exercises `catch_unwind` isolation + retry).
+    Panic,
+    /// Every evaluation the job performs scores NaN.
+    NanScore,
+    /// Every evaluation costs [`STALL_SECONDS`] extra simulated seconds.
+    Stall,
+}
+
+impl FaultKind {
+    fn name(self) -> &'static str {
+        match self {
+            FaultKind::Panic => "panic",
+            FaultKind::NanScore => "nan",
+            FaultKind::Stall => "stall",
+        }
+    }
+}
+
+enum Target {
+    /// A campaign job: optimizer name (`"*"` = any) and job index
+    /// (`None` = any job of a matching campaign).
+    Job { algo: String, job: Option<usize> },
+    /// A persisted-artifact save, by process-wide ordinal (`None` = any).
+    Save { ordinal: Option<u64> },
+}
+
+struct Spec {
+    kind: Option<FaultKind>, // None = truncate-save
+    target: Target,
+    /// How many times this spec may fire (u32::MAX = unlimited).
+    count: u32,
+    fired: AtomicU32,
+}
+
+impl Spec {
+    /// Atomically consume one firing if the budget allows.
+    fn consume(&self) -> bool {
+        self.fired
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |f| {
+                (f < self.count).then(|| f.saturating_add(1))
+            })
+            .is_ok()
+    }
+}
+
+/// A parsed, thread-safe fault plan. Cheap to consult (a short spec scan
+/// per job start / save); drivers that receive `None` skip even that.
+pub struct FaultPlan {
+    specs: Vec<Spec>,
+    /// Process-wide save ordinal (only advanced while a plan is active).
+    saves: AtomicU64,
+}
+
+impl FaultPlan {
+    /// Parse a plan from the spec grammar (see the module docs).
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut specs = Vec::new();
+        for entry in spec.split([';', ',']) {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let (kind_str, target_str) = entry.split_once('@').ok_or_else(|| {
+                TuneError::InvalidInput(format!(
+                    "fault spec {entry:?}: expected KIND@TARGET (e.g. panic@pso.j0x*)"
+                ))
+            })?;
+            let (target_str, count) = split_count(target_str)?;
+            match kind_str {
+                "truncate-save" => {
+                    let ordinal = match target_str {
+                        "*" => None,
+                        s => Some(parse_prefixed(s, 's').ok_or_else(|| {
+                            TuneError::InvalidInput(format!(
+                                "fault spec {entry:?}: truncate-save target must be sN or *"
+                            ))
+                        })?),
+                    };
+                    specs.push(Spec {
+                        kind: None,
+                        target: Target::Save { ordinal },
+                        count,
+                        fired: AtomicU32::new(0),
+                    });
+                }
+                "panic" | "nan" | "stall" => {
+                    let kind = match kind_str {
+                        "panic" => FaultKind::Panic,
+                        "nan" => FaultKind::NanScore,
+                        _ => FaultKind::Stall,
+                    };
+                    let (algo, job) = match target_str.rsplit_once(".j") {
+                        Some((algo, digits)) => {
+                            let job = digits.parse::<usize>().map_err(|_| {
+                                TuneError::InvalidInput(format!(
+                                    "fault spec {entry:?}: bad job index {digits:?}"
+                                ))
+                            })?;
+                            (algo, Some(job))
+                        }
+                        None => (target_str, None),
+                    };
+                    if algo.is_empty() {
+                        return Err(TuneError::InvalidInput(format!(
+                            "fault spec {entry:?}: empty optimizer target"
+                        )));
+                    }
+                    specs.push(Spec {
+                        kind: Some(kind),
+                        target: Target::Job {
+                            algo: algo.to_string(),
+                            job,
+                        },
+                        count,
+                        fired: AtomicU32::new(0),
+                    });
+                }
+                other => {
+                    return Err(TuneError::InvalidInput(format!(
+                        "fault spec {entry:?}: unknown kind {other:?} \
+                         (panic | nan | stall | truncate-save)"
+                    )));
+                }
+            }
+        }
+        if specs.is_empty() {
+            return Err(TuneError::InvalidInput(
+                "empty fault plan: no KIND@TARGET entries".into(),
+            ));
+        }
+        Ok(FaultPlan {
+            specs,
+            saves: AtomicU64::new(0),
+        })
+    }
+
+    /// Fault to inject into job `job` of a campaign running `algo`, if
+    /// any spec matches and still has fire budget. Called exactly once
+    /// per job attempt, so `xCOUNT` budgets count *attempts*.
+    pub fn job_fault(&self, algo: &str, job: usize) -> Option<FaultKind> {
+        for spec in &self.specs {
+            let Some(kind) = spec.kind else { continue };
+            let Target::Job {
+                algo: ref a,
+                job: j,
+            } = spec.target
+            else {
+                continue;
+            };
+            if (a == "*" || a == algo) && (j.is_none() || j == Some(job)) && spec.consume() {
+                return Some(kind);
+            }
+        }
+        None
+    }
+
+    /// Whether the save now being performed should be truncated.
+    /// Advances the process-wide save ordinal.
+    pub fn save_fault(&self) -> bool {
+        let ordinal = self.saves.fetch_add(1, Ordering::SeqCst);
+        for spec in &self.specs {
+            let Target::Save { ordinal: o } = spec.target else {
+                continue;
+            };
+            if (o.is_none() || o == Some(ordinal)) && spec.consume() {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+/// Split a trailing `xCOUNT` / `x*` fire budget off a target string.
+fn split_count(target: &str) -> Result<(&str, u32)> {
+    if let Some((head, suffix)) = target.rsplit_once('x') {
+        if !head.is_empty() {
+            if suffix == "*" {
+                return Ok((head, u32::MAX));
+            }
+            if !suffix.is_empty() && suffix.bytes().all(|b| b.is_ascii_digit()) {
+                let n: u32 = suffix.parse().map_err(|_| {
+                    TuneError::InvalidInput(format!("fault count x{suffix} out of range"))
+                })?;
+                if n == 0 {
+                    return Err(TuneError::InvalidInput(
+                        "fault count x0 would never fire".into(),
+                    ));
+                }
+                return Ok((head, n));
+            }
+        }
+    }
+    Ok((target, 1))
+}
+
+fn parse_prefixed(s: &str, prefix: char) -> Option<u64> {
+    s.strip_prefix(prefix)?.parse().ok()
+}
+
+static GLOBAL: OnceLock<Arc<FaultPlan>> = OnceLock::new();
+
+/// Install the process-global fault plan (the CLI entry point, from
+/// `--inject-faults` / `TUNETUNER_FAULTS`). First install wins; library
+/// code and tests should prefer explicit plans over this global.
+pub fn install(plan: FaultPlan) -> Arc<FaultPlan> {
+    Arc::clone(GLOBAL.get_or_init(|| Arc::new(plan)))
+}
+
+/// The process-global fault plan, if one was installed.
+pub fn global() -> Option<Arc<FaultPlan>> {
+    GLOBAL.get().cloned()
+}
+
+/// A [`Runner`] wrapper that corrupts evaluations according to an
+/// injected [`FaultKind`]: `nan` poisons every value, `stall` jams
+/// [`STALL_SECONDS`] onto every cost (the simulated clock exhausts the
+/// budget after one eval; the worker thread never actually blocks, so
+/// the batch always drains). `Campaign::run` wraps the sim runner in
+/// this when the job's fault plan says so.
+pub struct FaultyRunner<R: Runner> {
+    inner: R,
+    kind: FaultKind,
+}
+
+impl<R: Runner> FaultyRunner<R> {
+    pub fn new(inner: R, kind: FaultKind) -> FaultyRunner<R> {
+        FaultyRunner { inner, kind }
+    }
+
+    #[inline]
+    fn corrupt(&self, value: f64, cost: f64) -> (f64, f64) {
+        match self.kind {
+            FaultKind::NanScore => (f64::NAN, cost),
+            FaultKind::Stall => (value, cost + STALL_SECONDS),
+            FaultKind::Panic => (value, cost),
+        }
+    }
+}
+
+impl<R: Runner> Runner for FaultyRunner<R> {
+    fn space(&self) -> &SearchSpace {
+        self.inner.space()
+    }
+
+    fn evaluate(&mut self, config_idx: usize) -> EvalResult {
+        let mut r = self.inner.evaluate(config_idx);
+        match self.kind {
+            FaultKind::NanScore => r.value = f64::NAN,
+            FaultKind::Stall => r.overhead += STALL_SECONDS,
+            FaultKind::Panic => {}
+        }
+        r
+    }
+
+    fn label(&self) -> String {
+        format!("{} [fault:{}]", self.inner.label(), self.kind.name())
+    }
+
+    fn evaluate_lite(&mut self, config_idx: usize) -> (f64, f64) {
+        let (v, c) = self.inner.evaluate_lite(config_idx);
+        self.corrupt(v, c)
+    }
+
+    fn evaluate_batch_lite(&mut self, idxs: &[usize], out: &mut Vec<(f64, f64)>) {
+        self.inner.evaluate_batch_lite(idxs, out);
+        for pair in out.iter_mut() {
+            *pair = self.corrupt(pair.0, pair.1);
+        }
+    }
+
+    fn batch_committed(&mut self, pairs: &[(f64, f64)]) {
+        self.inner.batch_committed(pairs);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_job_specs_with_counts() {
+        let plan = FaultPlan::parse("panic@pso.j3x2; nan@greedy_ils; stall@*.j0x*").unwrap();
+        // panic@pso.j3 fires twice, on job 3 only.
+        assert_eq!(plan.job_fault("pso", 2), None);
+        assert_eq!(plan.job_fault("pso", 3), Some(FaultKind::Panic));
+        assert_eq!(plan.job_fault("pso", 3), Some(FaultKind::Panic));
+        assert_eq!(plan.job_fault("pso", 3), None, "x2 budget exhausted");
+        // nan@greedy_ils matches any job, once.
+        assert_eq!(plan.job_fault("greedy_ils", 7), Some(FaultKind::NanScore));
+        assert_eq!(plan.job_fault("greedy_ils", 7), None);
+        // stall@*.j0 is unlimited and algo-wildcarded.
+        for algo in ["a", "b", "a"] {
+            assert_eq!(plan.job_fault(algo, 0), Some(FaultKind::Stall));
+            assert_eq!(plan.job_fault(algo, 1), None);
+        }
+    }
+
+    #[test]
+    fn parses_save_specs_by_ordinal() {
+        let plan = FaultPlan::parse("truncate-save@s1").unwrap();
+        assert!(!plan.save_fault(), "save 0 passes");
+        assert!(plan.save_fault(), "save 1 is truncated");
+        assert!(!plan.save_fault(), "save 2 passes");
+
+        let any = FaultPlan::parse("truncate-save@*x2").unwrap();
+        assert!(any.save_fault());
+        assert!(any.save_fault());
+        assert!(!any.save_fault(), "x2 budget exhausted");
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "",
+            "panic",
+            "panic@",
+            "explode@pso",
+            "panic@pso.jx",
+            "panic@pso.jNaN",
+            "truncate-save@pso",
+            "nan@pso.j1x0",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn underscore_algo_names_survive_count_splitting() {
+        // `x` only splits a count when the suffix is digits or `*`:
+        // names like `random_search` parse intact.
+        let plan = FaultPlan::parse("panic@random_search.j1").unwrap();
+        assert_eq!(plan.job_fault("random_search", 1), Some(FaultKind::Panic));
+    }
+}

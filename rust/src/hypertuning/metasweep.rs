@@ -27,9 +27,10 @@
 
 use super::space;
 use super::strategy::{self, MetaBudget, MetaCampaign};
-use super::sweep::{improvement_pct, SweepResult, SweptSpace};
+use super::sweep::{improvement_pct, Checkpoint, FailedLeg, SweepResult, SweptSpace};
 use crate::campaign::Observer;
 use crate::error::{Context, Result, TuneError};
+use crate::faults::FaultPlan;
 use crate::methodology::SpaceEval;
 use crate::optimizers;
 use crate::report::Report;
@@ -236,8 +237,13 @@ pub struct MetaSweepResult {
     /// The reference sweep's mean improvement (provenance: which
     /// exhaustive result the regrets were computed against).
     pub reference_mean_improvement_pct: f64,
-    /// One run per raced strategy, in race order.
+    /// One run per raced strategy, in race order. Quarantined legs are
+    /// absent from their run and present in
+    /// [`failed_legs`](Self::failed_legs).
     pub strategies: Vec<StrategyRun>,
+    /// `strategy/target` legs that exhausted their campaign retry budget
+    /// and were quarantined (empty on a fully healthy metasweep).
+    pub failed_legs: Vec<FailedLeg>,
     /// Real seconds the whole metasweep took.
     pub wallclock_seconds: f64,
 }
@@ -313,6 +319,10 @@ impl MetaSweepResult {
                 self.reference_mean_improvement_pct.into(),
             )
             .set("strategies", Json::Arr(runs))
+            .set(
+                "failed_legs",
+                Json::Arr(self.failed_legs.iter().map(|f| f.to_json()).collect()),
+            )
             .set("wallclock_seconds", self.wallclock_seconds.into());
         j
     }
@@ -423,6 +433,7 @@ impl MetaSweepResult {
                 .and_then(|v| v.as_f64())
                 .unwrap_or(f64::NAN),
             strategies: runs,
+            failed_legs: FailedLeg::vec_from_json(j),
             wallclock_seconds: j
                 .get("wallclock_seconds")
                 .and_then(|v| v.as_f64())
@@ -436,6 +447,27 @@ impl MetaSweepResult {
 
     pub fn load(path: &Path) -> Result<MetaSweepResult> {
         MetaSweepResult::from_json(&json::parse(&crate::util::compress::read_string(path)?)?)
+    }
+
+    /// [`load`](Self::load) that treats a missing, corrupt, truncated or
+    /// foreign file as "no prior": logs a warning and returns `None` so
+    /// resume paths start fresh instead of dying on a half-written
+    /// artifact (which [`crate::util::fsio::atomic_write`] makes rare
+    /// but a foreign file can still produce).
+    pub fn load_tolerant(path: &Path) -> Option<MetaSweepResult> {
+        if !path.exists() {
+            return None;
+        }
+        match MetaSweepResult::load(path) {
+            Ok(r) => Some(r),
+            Err(e) => {
+                crate::log_warn!(
+                    "ignoring unreadable prior metasweep envelope {}: {e:#}",
+                    path.display()
+                );
+                None
+            }
+        }
     }
 }
 
@@ -508,6 +540,10 @@ pub fn metasweep_registry(
 /// training spaces, the leg's hyperparameter space, and the reference
 /// scores it was measured against — still matches. Anything stale is
 /// simply re-run; a prior from a different setup is ignored wholesale.
+/// Because an incremental checkpoint envelope is just a prefix of the
+/// final one, this same filter is the crash-resume path: feed the
+/// checkpoint back as `prior` and the finished legs replay bit-for-bit
+/// while the lost tail re-runs.
 pub fn metasweep_registry_with(
     train: &[SpaceEval],
     repeats: usize,
@@ -515,6 +551,31 @@ pub fn metasweep_registry_with(
     reference: &SweepResult,
     config: &MetaSweepConfig,
     prior: Option<&MetaSweepResult>,
+    observer: Arc<dyn Observer>,
+) -> Result<MetaSweepResult> {
+    metasweep_registry_checkpointed(
+        train, repeats, seed, reference, config, prior, None, None, observer,
+    )
+}
+
+/// [`metasweep_registry_with`] plus the fault-tolerance layers: an
+/// optional incremental [`Checkpoint`] (the partial envelope is
+/// atomically rewritten every `every_legs` completed legs) and an
+/// optional explicit [`FaultPlan`] injected into every meta-evaluation
+/// campaign (chaos testing). A leg whose campaign exhausts its retry
+/// budget ([`TuneError::WorkerPanic`]) is quarantined into the
+/// envelope's `failed_legs` while the remaining legs complete; any
+/// other error class stays fatal.
+#[allow(clippy::too_many_arguments)]
+pub fn metasweep_registry_checkpointed(
+    train: &[SpaceEval],
+    repeats: usize,
+    seed: u64,
+    reference: &SweepResult,
+    config: &MetaSweepConfig,
+    prior: Option<&MetaSweepResult>,
+    checkpoint: Option<&Checkpoint>,
+    faults: Option<Arc<FaultPlan>>,
     observer: Arc<dyn Observer>,
 ) -> Result<MetaSweepResult> {
     if train.is_empty() {
@@ -622,61 +683,136 @@ pub fn metasweep_registry_with(
     let train_arc: Arc<Vec<SpaceEval>> = Arc::new(train.to_vec());
     observer.meta_sweep_started(descs.len(), repeats);
     let registry_configs = reference.total_configs();
-    let mut runs = Vec::with_capacity(descs.len());
+    let swept_train: Vec<SweptSpace> = train
+        .iter()
+        .map(|se| SweptSpace {
+            label: se.label.clone(),
+            space_fingerprint: se.space.fingerprint(),
+        })
+        .collect();
+    let reference_pct = reference.mean_improvement_pct();
+    let mut runs: Vec<StrategyRun> = Vec::with_capacity(descs.len());
+    let mut failed_legs: Vec<FailedLeg> = Vec::new();
+    // Successes + quarantines, for the checkpoint cadence.
+    let mut completed = 0usize;
+    // Assemble and best-effort-save a partial envelope: a checkpoint that
+    // cannot be written must not kill a sweep that is otherwise healthy.
+    let save_checkpoint =
+        |strategies: Vec<StrategyRun>, failed: Vec<FailedLeg>, done: usize| {
+            let Some(cp) = checkpoint else { return };
+            let partial = MetaSweepResult {
+                space_kind: "limited".to_string(),
+                repeats,
+                seed,
+                eta: config.eta,
+                min_repeats: config.min_repeats,
+                train: swept_train.clone(),
+                reference_mean_improvement_pct: reference_pct,
+                strategies,
+                failed_legs: failed,
+                wallclock_seconds: t0.elapsed().as_secs_f64(),
+            };
+            match partial.save(&cp.path) {
+                Ok(()) => observer.checkpoint_saved(&cp.path.display().to_string(), done),
+                Err(e) => crate::log_warn!(
+                    "metasweep checkpoint {} failed: {e:#}",
+                    cp.path.display()
+                ),
+            }
+        };
     for desc in &descs {
         let st0 = std::time::Instant::now();
         let mut legs = Vec::new();
-        if desc.per_optimizer {
+        // (target, leg args) pairs this strategy will run, in leg order.
+        let specs: Vec<LegSpec> = if desc.per_optimizer {
             let grids: Vec<usize> = targets.iter().map(|t| t.hp_space.len()).collect();
             let budgets: Vec<f64> = match config.budget {
                 Some(b) => vec![b; targets.len()],
                 None => allocate_budgets(&grids, desc.racing),
             };
-            for (i, target) in targets.iter().enumerate() {
-                legs.push(run_leg(
-                    desc,
-                    target.algo,
-                    target.algo,
-                    Some(Arc::clone(&target.hp_space)),
-                    target.hp_space.len(),
-                    budgets[i],
-                    target.default_score,
-                    target.exhaustive_best,
-                    i as u64,
-                    &train_arc,
-                    repeats,
-                    seed,
-                    config,
-                    prior,
-                    &observer,
-                )?);
-            }
+            targets
+                .iter()
+                .enumerate()
+                .map(|(i, target)| LegSpec {
+                    target: target.algo,
+                    algo: target.algo,
+                    hp_space: Some(Arc::clone(&target.hp_space)),
+                    configs: target.hp_space.len(),
+                    budget_cost: budgets[i],
+                    default_score: target.default_score,
+                    exhaustive_best: target.exhaustive_best,
+                    leg_idx: i as u64,
+                })
+                .collect()
         } else {
             // Registry-wide leg: measured against the whole sweep — the
             // best default any optimizer gets for free, the best score
             // any grid reaches, and the sum of all grids as cost.
-            let default_score = best_finite(targets.iter().map(|t| t.default_score));
-            let exhaustive_best = best_finite(targets.iter().map(|t| t.exhaustive_best));
-            let budget = config
-                .budget
-                .unwrap_or(DEFAULT_BUDGET_FRACTION * registry_configs as f64);
-            legs.push(run_leg(
+            vec![LegSpec {
+                target: "registry",
+                algo: "",
+                hp_space: None,
+                configs: registry_configs,
+                budget_cost: config
+                    .budget
+                    .unwrap_or(DEFAULT_BUDGET_FRACTION * registry_configs as f64),
+                default_score: best_finite(targets.iter().map(|t| t.default_score)),
+                exhaustive_best: best_finite(targets.iter().map(|t| t.exhaustive_best)),
+                leg_idx: 0,
+            }]
+        };
+        for spec in specs {
+            match run_leg(
                 desc,
-                "registry",
-                "",
-                None,
-                registry_configs,
-                budget,
-                default_score,
-                exhaustive_best,
-                0,
+                spec.target,
+                spec.algo,
+                spec.hp_space,
+                spec.configs,
+                spec.budget_cost,
+                spec.default_score,
+                spec.exhaustive_best,
+                spec.leg_idx,
                 &train_arc,
                 repeats,
                 seed,
                 config,
                 prior,
+                faults.clone(),
                 &observer,
-            )?);
+            ) {
+                Ok(leg) => legs.push(leg),
+                // A leg whose campaign exhausted its retries is
+                // quarantined so the remaining legs still complete; any
+                // other error class (stale cache, invalid input, IO)
+                // would poison every leg equally and stays fatal.
+                Err(TuneError::WorkerPanic {
+                    job,
+                    attempts,
+                    message,
+                }) => {
+                    let leg_id = format!("{}/{}", desc.name, spec.target);
+                    let error = format!(
+                        "tuning job {job} panicked after {attempts} attempt(s): {message}"
+                    );
+                    observer.leg_failed(&leg_id, &error, attempts);
+                    failed_legs.push(FailedLeg {
+                        leg: leg_id,
+                        error,
+                        attempts,
+                    });
+                }
+                Err(e) => return Err(e),
+            }
+            completed += 1;
+            if checkpoint.is_some_and(|cp| completed % cp.every_legs == 0) {
+                let mut snapshot = runs.clone();
+                snapshot.push(StrategyRun {
+                    strategy: desc.name.to_string(),
+                    legs: legs.clone(),
+                    wallclock_seconds: st0.elapsed().as_secs_f64(),
+                });
+                save_checkpoint(snapshot, failed_legs.clone(), completed);
+            }
         }
         runs.push(StrategyRun {
             strategy: desc.name.to_string(),
@@ -690,19 +826,28 @@ pub fn metasweep_registry_with(
         seed,
         eta: config.eta,
         min_repeats: config.min_repeats,
-        train: train
-            .iter()
-            .map(|se| SweptSpace {
-                label: se.label.clone(),
-                space_fingerprint: se.space.fingerprint(),
-            })
-            .collect(),
-        reference_mean_improvement_pct: reference.mean_improvement_pct(),
+        train: swept_train,
+        reference_mean_improvement_pct: reference_pct,
         strategies: runs,
+        failed_legs,
         wallclock_seconds: t0.elapsed().as_secs_f64(),
     };
     observer.meta_sweep_finished(result.wallclock_seconds);
     Ok(result)
+}
+
+/// The per-leg arguments the driver feeds [`run_leg`], precomputed so
+/// per-optimizer and registry-wide strategies share one quarantine /
+/// checkpoint loop.
+struct LegSpec {
+    target: &'static str,
+    algo: &'static str,
+    hp_space: Option<Arc<crate::searchspace::SearchSpace>>,
+    configs: usize,
+    budget_cost: f64,
+    default_score: f64,
+    exhaustive_best: f64,
+    leg_idx: u64,
 }
 
 /// Best finite value of an iterator (NaN demoted), or NaN when empty /
@@ -734,6 +879,7 @@ fn run_leg(
     seed: u64,
     config: &MetaSweepConfig,
     prior: Option<&MetaSweepResult>,
+    faults: Option<Arc<FaultPlan>>,
     observer: &Arc<dyn Observer>,
 ) -> Result<StrategyLeg> {
     observer.meta_leg_started(desc.name, target, configs, budget_cost);
@@ -770,6 +916,7 @@ fn run_leg(
         desc.name,
         target,
     )?;
+    mc.set_faults(faults);
     let mut rng = Rng::new(mix64(seed, desc.tag)).fork(leg_idx);
     let outcome = (desc.build)().run(&mut mc, &mut rng)?;
     let hp_space_key = leg_space_key(hp_space.as_deref(), &outcome.algo).ok_or_else(|| {
@@ -864,6 +1011,7 @@ pub fn render_report(result: &MetaSweepResult, report: &Report) -> Result<()> {
         }
     }
     report.table(&table)?;
+    super::sweep::render_failed_legs(&result.failed_legs, report)?;
     let mut lines = String::new();
     for s in &result.strategies {
         lines.push_str(&format!(
@@ -883,6 +1031,12 @@ pub fn render_report(result: &MetaSweepResult, report: &Report) -> Result<()> {
         result.reference_mean_improvement_pct,
         fmt_duration(result.wallclock_seconds)
     ));
+    if !result.failed_legs.is_empty() {
+        lines.push_str(&format!(
+            "{} leg(s) QUARANTINED: partial results\n",
+            result.failed_legs.len()
+        ));
+    }
     report.summary(&lines)?;
     Ok(())
 }
@@ -1013,40 +1167,51 @@ mod tests {
         assert_eq!(a.seed, b.seed);
         assert_eq!(a.eta, b.eta);
         assert_eq!(a.min_repeats, b.min_repeats);
+        assert_eq!(a.failed_legs.len(), b.failed_legs.len());
+        for (fa, fb) in a.failed_legs.iter().zip(&b.failed_legs) {
+            assert_eq!(fa.leg, fb.leg);
+            assert_eq!(fa.error, fb.error);
+            assert_eq!(fa.attempts, fb.attempts);
+        }
         assert_eq!(a.strategies.len(), b.strategies.len());
         for (ra, rb) in a.strategies.iter().zip(&b.strategies) {
             assert_eq!(ra.strategy, rb.strategy);
-            assert_eq!(ra.legs.len(), rb.legs.len(), "{}", ra.strategy);
-            for (la, lb) in ra.legs.iter().zip(&rb.legs) {
-                let tag = format!("{}/{}", la.strategy, la.target);
-                assert_eq!(la.target, lb.target, "{tag}");
-                assert_eq!(la.algo, lb.algo, "{tag}");
-                assert_eq!(la.hp_space_key, lb.hp_space_key, "{tag}");
-                assert_eq!(la.configs, lb.configs, "{tag}");
-                assert_eq!(la.budget_cost.to_bits(), lb.budget_cost.to_bits(), "{tag}");
-                assert_eq!(la.spent_cost.to_bits(), lb.spent_cost.to_bits(), "{tag}");
-                assert_eq!(la.evals, lb.evals, "{tag}");
-                assert_eq!(la.best_config_idx, lb.best_config_idx, "{tag}");
-                assert_eq!(la.best_hp_key, lb.best_hp_key, "{tag}");
-                assert_eq!(la.best_score.to_bits(), lb.best_score.to_bits(), "{tag}");
-                assert_eq!(
-                    la.default_score.to_bits(),
-                    lb.default_score.to_bits(),
-                    "{tag}"
-                );
-                assert_eq!(
-                    la.exhaustive_best_score.to_bits(),
-                    lb.exhaustive_best_score.to_bits(),
-                    "{tag}"
-                );
-                assert_eq!(la.regret.to_bits(), lb.regret.to_bits(), "{tag}");
-                assert_eq!(
-                    la.improvement_recovered.to_bits(),
-                    lb.improvement_recovered.to_bits(),
-                    "{tag}"
-                );
-                assert_eq!(la.cost_fraction.to_bits(), lb.cost_fraction.to_bits(), "{tag}");
-            }
+            assert_legs_bitwise_equal(&ra.legs, &rb.legs);
+        }
+    }
+
+    /// Every wallclock-independent field of two leg sequences, bitwise.
+    fn assert_legs_bitwise_equal(a: &[StrategyLeg], b: &[StrategyLeg]) {
+        assert_eq!(a.len(), b.len());
+        for (la, lb) in a.iter().zip(b) {
+            let tag = format!("{}/{}", la.strategy, la.target);
+            assert_eq!(la.target, lb.target, "{tag}");
+            assert_eq!(la.algo, lb.algo, "{tag}");
+            assert_eq!(la.hp_space_key, lb.hp_space_key, "{tag}");
+            assert_eq!(la.configs, lb.configs, "{tag}");
+            assert_eq!(la.budget_cost.to_bits(), lb.budget_cost.to_bits(), "{tag}");
+            assert_eq!(la.spent_cost.to_bits(), lb.spent_cost.to_bits(), "{tag}");
+            assert_eq!(la.evals, lb.evals, "{tag}");
+            assert_eq!(la.best_config_idx, lb.best_config_idx, "{tag}");
+            assert_eq!(la.best_hp_key, lb.best_hp_key, "{tag}");
+            assert_eq!(la.best_score.to_bits(), lb.best_score.to_bits(), "{tag}");
+            assert_eq!(
+                la.default_score.to_bits(),
+                lb.default_score.to_bits(),
+                "{tag}"
+            );
+            assert_eq!(
+                la.exhaustive_best_score.to_bits(),
+                lb.exhaustive_best_score.to_bits(),
+                "{tag}"
+            );
+            assert_eq!(la.regret.to_bits(), lb.regret.to_bits(), "{tag}");
+            assert_eq!(
+                la.improvement_recovered.to_bits(),
+                lb.improvement_recovered.to_bits(),
+                "{tag}"
+            );
+            assert_eq!(la.cost_fraction.to_bits(), lb.cost_fraction.to_bits(), "{tag}");
         }
     }
 
@@ -1405,6 +1570,190 @@ mod tests {
         let summary = std::fs::read_to_string(dir.join("metasweep_summary.txt")).unwrap();
         assert!(summary.contains("recovered"), "{summary}");
         assert!(summary.contains("exhaustive sweep mean improvement"), "{summary}");
+        assert!(!summary.contains("QUARANTINED"), "{summary}");
+        assert!(!dir.join("metasweep_failures.txt").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    // ---- fault tolerance -----------------------------------------------------
+
+    /// Chaos: an always-panicking job quarantines exactly the victim
+    /// leg while every other leg completes bitwise clean, and the
+    /// quarantine record survives the envelope round-trip.
+    #[test]
+    fn panicked_leg_is_quarantined_while_other_legs_complete() {
+        #[derive(Default)]
+        struct FailureCollector(Mutex<Vec<(String, String, usize)>>);
+        impl Observer for FailureCollector {
+            fn leg_failed(&self, leg: &str, error: &str, attempts: usize) {
+                self.0
+                    .lock()
+                    .unwrap()
+                    .push((leg.to_string(), error.to_string(), attempts));
+            }
+        }
+        let victim = optimizers::hypertunable_names()[0];
+        let plan = Arc::new(FaultPlan::parse(&format!("panic@{victim}.j0x*")).unwrap());
+        let cfg = MetaSweepConfig {
+            strategies: vec!["random".into()],
+            ..config()
+        };
+        let collector = Arc::new(FailureCollector::default());
+        let r = metasweep_registry_checkpointed(
+            train(),
+            REPEATS,
+            SEED,
+            reference(),
+            &cfg,
+            None,
+            None,
+            Some(plan),
+            Arc::clone(&collector) as Arc<dyn Observer>,
+        )
+        .unwrap();
+        assert_eq!(r.failed_legs.len(), 1);
+        let f = &r.failed_legs[0];
+        assert_eq!(f.leg, format!("random/{victim}"));
+        assert_eq!(f.attempts, 2);
+        assert!(f.error.contains("injected fault"), "{}", f.error);
+        let events = collector.0.lock().unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].0, f.leg);
+        // Every surviving leg is bitwise identical to the healthy run:
+        // budgets and leg RNG streams depend only on (seed, strategy,
+        // leg index), never on what happened to other legs.
+        let healthy = run_metasweep().run("random").unwrap();
+        let expected: Vec<StrategyLeg> = healthy
+            .legs
+            .iter()
+            .filter(|l| l.target != victim)
+            .cloned()
+            .collect();
+        assert_legs_bitwise_equal(&r.strategies[0].legs, &expected);
+        let back =
+            MetaSweepResult::from_json(&json::parse(&r.to_json().to_string()).unwrap()).unwrap();
+        assert_bitwise_equal(&r, &back);
+    }
+
+    /// A transient fault (panics exactly once) is retried into a
+    /// bitwise-identical envelope: the retry re-derives the job's RNG
+    /// stream, so nothing is quarantined and nothing drifts.
+    #[test]
+    fn transient_fault_retries_to_bitwise_identical_legs() {
+        let victim = optimizers::hypertunable_names()[0];
+        let plan = Arc::new(FaultPlan::parse(&format!("panic@{victim}.j0")).unwrap());
+        let cfg = MetaSweepConfig {
+            strategies: vec!["random".into()],
+            ..config()
+        };
+        let r = metasweep_registry_checkpointed(
+            train(),
+            REPEATS,
+            SEED,
+            reference(),
+            &cfg,
+            None,
+            None,
+            Some(plan),
+            Arc::new(NullObserver),
+        )
+        .unwrap();
+        assert!(r.failed_legs.is_empty());
+        assert_legs_bitwise_equal(
+            &r.strategies[0].legs,
+            &run_metasweep().run("random").unwrap().legs,
+        );
+    }
+
+    /// The crash-recovery acceptance path: snapshot the incremental
+    /// checkpoint mid-metasweep (atomic_write guarantees any instant's
+    /// file equals what a SIGKILL would leave behind), then resume a
+    /// fresh metasweep from the snapshot. The finished legs replay
+    /// without a single fresh meta-evaluation and the merged envelope
+    /// is bitwise identical to the uninterrupted run.
+    #[test]
+    fn killed_metasweep_resumes_bitwise_identical_from_checkpoint() {
+        struct Snatcher {
+            at: usize,
+            src: std::path::PathBuf,
+            dst: std::path::PathBuf,
+        }
+        impl Observer for Snatcher {
+            fn checkpoint_saved(&self, _path: &str, completed: usize) {
+                if completed == self.at {
+                    std::fs::copy(&self.src, &self.dst).unwrap();
+                }
+            }
+        }
+        let dir = std::env::temp_dir().join(format!("tt_metackpt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let cp = Checkpoint::new(dir.join("metasweep.ckpt.json"), 1);
+        let snatched = dir.join("killed.json");
+        let cfg = MetaSweepConfig {
+            strategies: vec!["random".into()],
+            ..config()
+        };
+        let obs = Arc::new(Snatcher {
+            at: 2,
+            src: cp.path.clone(),
+            dst: snatched.clone(),
+        });
+        let full = metasweep_registry_checkpointed(
+            train(),
+            REPEATS,
+            SEED,
+            reference(),
+            &cfg,
+            None,
+            Some(&cp),
+            None,
+            obs,
+        )
+        .unwrap();
+        // The snapshot is a valid, partial envelope: exactly the legs
+        // that had finished when the "kill" hit.
+        let prior = MetaSweepResult::load(&snatched).unwrap();
+        assert_eq!(prior.strategies.len(), 1);
+        assert_eq!(prior.strategies[0].legs.len(), 2);
+        // Resume: the finished legs replay (zero fresh evaluations),
+        // the lost tail re-runs, and the merge matches bitwise.
+        let collector = Arc::new(MetaCollector::default());
+        let resumed = metasweep_registry_with(
+            train(),
+            REPEATS,
+            SEED,
+            reference(),
+            &cfg,
+            Some(&prior),
+            Arc::clone(&collector) as Arc<dyn Observer>,
+        )
+        .unwrap();
+        assert_bitwise_equal(&full, &resumed);
+        let evals = collector.evals.lock().unwrap();
+        let replayed: Vec<&str> = prior.strategies[0]
+            .legs
+            .iter()
+            .map(|l| l.target.as_str())
+            .collect();
+        assert!(
+            evals
+                .iter()
+                .all(|(_, target, _, _)| !replayed.contains(&target.as_str())),
+            "a replayed leg re-ran fresh meta-evaluations"
+        );
+        assert!(!evals.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A corrupt or missing prior envelope is "no prior", not an abort.
+    #[test]
+    fn load_tolerant_ignores_corrupt_and_missing_envelopes() {
+        let dir = std::env::temp_dir().join(format!("tt_metatol_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(MetaSweepResult::load_tolerant(&dir.join("absent.json")).is_none());
+        let garbled = dir.join("garbled.json");
+        std::fs::write(&garbled, "{\"schema\": \"tunetuner-metasweep\", \"strateg").unwrap();
+        assert!(MetaSweepResult::load_tolerant(&garbled).is_none());
         std::fs::remove_dir_all(&dir).ok();
     }
 

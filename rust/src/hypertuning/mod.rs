@@ -43,8 +43,9 @@ pub use exhaustive::{
 };
 pub use meta::{meta_cache_from_results, MetaRunner};
 pub use metasweep::{
-    metasweep_registry, metasweep_registry_with, render_report as render_metasweep_report,
-    MetaSweepConfig, MetaSweepResult, StrategyLeg, StrategyRun,
+    metasweep_registry, metasweep_registry_checkpointed, metasweep_registry_with,
+    render_report as render_metasweep_report, MetaSweepConfig, MetaSweepResult, StrategyLeg,
+    StrategyRun,
 };
 pub use space::{extended_algos, extended_space, limited_algos, limited_space};
 pub use strategy::{
@@ -52,6 +53,6 @@ pub use strategy::{
     MetaOutcome, MetaStrategy, Rung, StrategyDescriptor,
 };
 pub use sweep::{
-    render_report as render_sweep_report, sweep_registry, sweep_registry_with, OptimizerSweep,
-    SweepResult,
+    render_report as render_sweep_report, sweep_registry, sweep_registry_checkpointed,
+    sweep_registry_with, Checkpoint, FailedLeg, OptimizerSweep, SweepResult,
 };

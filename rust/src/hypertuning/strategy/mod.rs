@@ -110,6 +110,9 @@ pub struct MetaCampaign {
     evals: usize,
     started: std::time::Instant,
     memo: HashMap<(String, String, usize), f64>,
+    /// Explicit fault plan threaded into every campaign this
+    /// meta-campaign launches (chaos testing); `None` everywhere else.
+    faults: Option<Arc<crate::faults::FaultPlan>>,
 }
 
 impl MetaCampaign {
@@ -148,7 +151,16 @@ impl MetaCampaign {
             evals: 0,
             started: std::time::Instant::now(),
             memo: HashMap::new(),
+            faults: None,
         })
+    }
+
+    /// Inject a deterministic [`FaultPlan`](crate::faults::FaultPlan)
+    /// into every campaign this meta-campaign launches. Faults corrupt
+    /// individual tuning jobs, not the meta-level bookkeeping, so a
+    /// plan that never fires leaves the envelope bitwise unchanged.
+    pub fn set_faults(&mut self, faults: Option<Arc<crate::faults::FaultPlan>>) {
+        self.faults = faults;
     }
 
     /// Cost already charged, in full-repeat-equivalent evaluations.
@@ -232,6 +244,7 @@ impl MetaCampaign {
             .repeats(repeats)
             .seed(self.seed)
             .observer(Arc::clone(&self.observer))
+            .faults(self.faults.clone())
             .run()?;
         let score = result.score();
         self.spent += self.cost_of(repeats);

@@ -27,17 +27,35 @@
 //! head-to-head against the paper's set. `tunetuner sweep [--json]`
 //! drives it from the CLI; progress streams through the
 //! [`Observer::sweep_started`]-family events.
+//!
+//! ## Fault tolerance
+//!
+//! A sweep is hours of compute; one bad leg must not discard the rest.
+//! [`sweep_registry_checkpointed`] adds two robustness layers over the
+//! plain drivers:
+//!
+//! * **Quarantine** — a leg whose campaign exhausts its retry budget
+//!   ([`TuneError::WorkerPanic`]) is recorded in the envelope's
+//!   `failed_legs` (a [`FailedLeg`] per casualty) while every other leg
+//!   completes; [`render_report`] draws the failure table and the CLI
+//!   exits nonzero *after* saving the partial envelope. Any other error
+//!   class stays fatal — a stale cache poisons every leg equally.
+//! * **Checkpointing** — with a [`Checkpoint`] policy the partial
+//!   envelope is atomically rewritten (via
+//!   [`crate::util::fsio::atomic_write`]) every `every_legs` completed
+//!   legs, so a crash loses at most that many legs of work.
 
 use super::exhaustive::{self, HyperTuningResults};
 use super::space;
 use crate::campaign::{Campaign, Observer};
 use crate::error::{Context, Result, TuneError};
+use crate::faults::FaultPlan;
 use crate::methodology::SpaceEval;
 use crate::optimizers;
 use crate::report::Report;
 use crate::util::json::{self, Json};
 use crate::util::table::{fmt_duration, Table};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 /// Schema tag of the serialized sweep envelope.
@@ -77,6 +95,78 @@ pub struct OptimizerSweep {
     pub wallclock_seconds: f64,
 }
 
+/// A leg that exhausted its retry budget and was quarantined instead of
+/// aborting the sweep. Serialized into the envelope's `failed_legs` so a
+/// partial artifact is explicit about what it is missing.
+#[derive(Clone, Debug)]
+pub struct FailedLeg {
+    /// Leg identity: an optimizer name for the registry sweep, a
+    /// `strategy/target` pair for the metasweep.
+    pub leg: String,
+    /// The captured failure (first panic payload, attempt count).
+    pub error: String,
+    /// Attempts performed before quarantine (initial run + retries).
+    pub attempts: usize,
+}
+
+impl FailedLeg {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("leg", self.leg.as_str().into())
+            .set("error", self.error.as_str().into())
+            .set("attempts", self.attempts.into());
+        j
+    }
+
+    pub fn from_json(j: &Json) -> FailedLeg {
+        FailedLeg {
+            leg: j
+                .get("leg")
+                .and_then(|v| v.as_str())
+                .unwrap_or_default()
+                .to_string(),
+            error: j
+                .get("error")
+                .and_then(|v| v.as_str())
+                .unwrap_or_default()
+                .to_string(),
+            attempts: j.get("attempts").and_then(|v| v.as_usize()).unwrap_or(0),
+        }
+    }
+
+    /// Parse an envelope's optional `failed_legs` array (absent in
+    /// pre-fault-tolerance envelopes → empty).
+    pub fn vec_from_json(j: &Json) -> Vec<FailedLeg> {
+        j.get("failed_legs")
+            .and_then(|v| v.as_arr())
+            .unwrap_or(&[])
+            .iter()
+            .map(FailedLeg::from_json)
+            .collect()
+    }
+}
+
+/// Incremental-checkpoint policy for the sweep drivers: after every
+/// `every_legs` completed (or quarantined) legs, the partial envelope is
+/// atomically rewritten at `path` — a crash or kill loses at most
+/// `every_legs` legs of finished work. A failed checkpoint save is
+/// logged and skipped (the sweep itself must not die to a flaky disk);
+/// the final save at the call site still reports its error normally.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    pub path: PathBuf,
+    pub every_legs: usize,
+}
+
+impl Checkpoint {
+    pub fn new(path: impl Into<PathBuf>, every_legs: usize) -> Checkpoint {
+        Checkpoint {
+            path: path.into(),
+            every_legs: every_legs.max(1),
+        }
+    }
+}
+
 /// One prepared training space's identity, recorded as provenance.
 #[derive(Clone, Debug)]
 pub struct SweptSpace {
@@ -98,8 +188,12 @@ pub struct SweepResult {
     /// The training spaces every campaign ran on, in space order.
     pub train: Vec<SweptSpace>,
     /// One entry per grid-bearing registry optimizer, in registration
-    /// order ([`optimizers::hypertunable`]).
+    /// order ([`optimizers::hypertunable`]). Quarantined optimizers are
+    /// absent here and present in [`failed_legs`](Self::failed_legs).
     pub optimizers: Vec<OptimizerSweep>,
+    /// Legs that exhausted their retry budget and were quarantined
+    /// (empty on a fully healthy sweep).
+    pub failed_legs: Vec<FailedLeg>,
     /// Real seconds the whole sweep took.
     pub wallclock_seconds: f64,
 }
@@ -222,6 +316,10 @@ impl SweepResult {
             .set("seed", self.seed.to_string().as_str().into())
             .set("train", Json::Arr(train))
             .set("optimizers", Json::Arr(opts))
+            .set(
+                "failed_legs",
+                Json::Arr(self.failed_legs.iter().map(|f| f.to_json()).collect()),
+            )
             .set("wallclock_seconds", self.wallclock_seconds.into());
         j
     }
@@ -315,6 +413,7 @@ impl SweepResult {
             },
             train,
             optimizers: optimizers_out,
+            failed_legs: FailedLeg::vec_from_json(j),
             wallclock_seconds: j
                 .get("wallclock_seconds")
                 .and_then(|v| v.as_f64())
@@ -328,6 +427,26 @@ impl SweepResult {
 
     pub fn load(path: &Path) -> Result<SweepResult> {
         SweepResult::from_json(&json::parse(&crate::util::compress::read_string(path)?)?)
+    }
+
+    /// [`load`](Self::load) that treats a missing, corrupt, truncated or
+    /// foreign file as "no prior": logs a warning and returns `None` so
+    /// resume paths start fresh instead of dying on a half-written
+    /// artifact.
+    pub fn load_tolerant(path: &Path) -> Option<SweepResult> {
+        if !path.exists() {
+            return None;
+        }
+        match SweepResult::load(path) {
+            Ok(r) => Some(r),
+            Err(e) => {
+                crate::log_warn!(
+                    "ignoring unreadable prior sweep envelope {}: {e:#}",
+                    path.display()
+                );
+                None
+            }
+        }
     }
 }
 
@@ -367,6 +486,28 @@ pub fn sweep_registry_with<F>(
     repeats: usize,
     seed: u64,
     observer: Arc<dyn Observer>,
+    limited_results_for: F,
+) -> Result<SweepResult>
+where
+    F: FnMut(&str) -> Result<Arc<HyperTuningResults>>,
+{
+    sweep_registry_checkpointed(train, repeats, seed, observer, None, None, limited_results_for)
+}
+
+/// [`sweep_registry_with`] plus the fault-tolerance layers: an optional
+/// incremental [`Checkpoint`] and an optional explicit [`FaultPlan`]
+/// injected into the reference campaigns (chaos testing). Legs that
+/// exhaust their campaign retry budget are quarantined into the
+/// envelope's `failed_legs` — from whichever side of the leg the
+/// [`TuneError::WorkerPanic`] arose, the reference campaign or the
+/// results provider — while the remaining legs complete.
+pub fn sweep_registry_checkpointed<F>(
+    train: &[SpaceEval],
+    repeats: usize,
+    seed: u64,
+    observer: Arc<dyn Observer>,
+    checkpoint: Option<&Checkpoint>,
+    faults: Option<Arc<FaultPlan>>,
     mut limited_results_for: F,
 ) -> Result<SweepResult>
 where
@@ -383,83 +524,137 @@ where
     // per-configuration campaign) reuses the same Arc-shared brute-force
     // caches and their memoized SimTables.
     let train_arc: Arc<Vec<SpaceEval>> = Arc::new(train.to_vec());
-    let mut optimizers_out = Vec::with_capacity(algos.len());
+    let swept_train: Vec<SweptSpace> = train
+        .iter()
+        .map(|se| SweptSpace {
+            label: se.label.clone(),
+            space_fingerprint: se.space.fingerprint(),
+        })
+        .collect();
+    let mut optimizers_out: Vec<OptimizerSweep> = Vec::with_capacity(algos.len());
+    let mut failed_legs: Vec<FailedLeg> = Vec::new();
     for (i, d) in algos.iter().enumerate() {
         let hp_space = space::limited_space(d.name)?;
         observer.sweep_optimizer_started(i, d.name, hp_space.len());
         let ot0 = std::time::Instant::now();
-        // Reference leg: the schema-default hyperparameters, same
-        // repeats/seed as every grid configuration gets.
-        let default_result = Campaign::new(d.name)
-            .spaces_arc(Arc::clone(&train_arc))
-            .repeats(repeats)
-            .seed(seed)
-            .observer(Arc::clone(&observer))
-            .run()?;
-        let results = limited_results_for(d.name)?;
-        let fingerprint = hp_space.fingerprint();
-        if results.space_key != fingerprint {
-            return Err(TuneError::StaleCache(format!(
-                "hypertuning results for {} were computed on space {:?} \
-                 but the current schema derives {:?}",
-                d.name, results.space_key, fingerprint
-            )));
-        }
-        if results.results.len() != hp_space.len() {
-            return Err(TuneError::StaleCache(format!(
-                "hypertuning results for {} carry {} configs but its \
-                 hyperparameter space has {}",
-                d.name,
-                results.results.len(),
-                hp_space.len()
-            )));
-        }
-        // Per-config scores in config-index order (exhaustive results are
-        // already ordered, but index-address them so any provider works —
-        // with an out-of-space index a typed error, not a panic).
-        let mut scores = vec![f64::NAN; hp_space.len()];
-        for r in &results.results {
-            if r.config_idx >= hp_space.len() {
+        let leg = (|| -> Result<OptimizerSweep> {
+            // Reference leg: the schema-default hyperparameters, same
+            // repeats/seed as every grid configuration gets.
+            let default_result = Campaign::new(d.name)
+                .spaces_arc(Arc::clone(&train_arc))
+                .repeats(repeats)
+                .seed(seed)
+                .observer(Arc::clone(&observer))
+                .faults(faults.clone())
+                .run()?;
+            let results = limited_results_for(d.name)?;
+            let fingerprint = hp_space.fingerprint();
+            if results.space_key != fingerprint {
                 return Err(TuneError::StaleCache(format!(
-                    "hypertuning results for {} reference config {} outside \
-                     its {}-config hyperparameter space",
+                    "hypertuning results for {} were computed on space {:?} \
+                     but the current schema derives {:?}",
+                    d.name, results.space_key, fingerprint
+                )));
+            }
+            if results.results.len() != hp_space.len() {
+                return Err(TuneError::StaleCache(format!(
+                    "hypertuning results for {} carry {} configs but its \
+                     hyperparameter space has {}",
                     d.name,
-                    r.config_idx,
+                    results.results.len(),
                     hp_space.len()
                 )));
             }
-            scores[r.config_idx] = r.score;
+            // Per-config scores in config-index order (exhaustive results are
+            // already ordered, but index-address them so any provider works —
+            // with an out-of-space index a typed error, not a panic).
+            let mut scores = vec![f64::NAN; hp_space.len()];
+            for r in &results.results {
+                if r.config_idx >= hp_space.len() {
+                    return Err(TuneError::StaleCache(format!(
+                        "hypertuning results for {} reference config {} outside \
+                         its {}-config hyperparameter space",
+                        d.name,
+                        r.config_idx,
+                        hp_space.len()
+                    )));
+                }
+                scores[r.config_idx] = r.score;
+            }
+            let best = results.best();
+            let default_score = default_result.score();
+            Ok(OptimizerSweep {
+                algo: d.name.to_string(),
+                paper: d.paper,
+                configs: hp_space.len(),
+                space_key: results.space_key.clone(),
+                default_hp_key: default_result.hp_key.clone(),
+                default_score,
+                best_hp_key: best.hp_key.clone(),
+                best_config_idx: best.config_idx,
+                best_score: best.score,
+                improvement_pct: improvement_pct(default_score, best.score),
+                scores,
+                wallclock_seconds: ot0.elapsed().as_secs_f64(),
+            })
+        })();
+        match leg {
+            Ok(o) => {
+                observer.sweep_optimizer_finished(i, d.name, o.default_score, o.best_score);
+                optimizers_out.push(o);
+            }
+            // Quarantine: a panicked-out leg must not discard the rest of
+            // the sweep. Every other error class (stale caches, schema
+            // violations, I/O) poisons the whole sweep equally and stays
+            // fatal.
+            Err(TuneError::WorkerPanic {
+                job,
+                attempts,
+                message,
+            }) => {
+                let error =
+                    format!("tuning job {job} panicked after {attempts} attempt(s): {message}");
+                observer.leg_failed(d.name, &error, attempts);
+                failed_legs.push(FailedLeg {
+                    leg: d.name.to_string(),
+                    error,
+                    attempts,
+                });
+            }
+            Err(e) => return Err(e),
         }
-        let best = results.best();
-        let default_score = default_result.score();
-        observer.sweep_optimizer_finished(i, d.name, default_score, best.score);
-        optimizers_out.push(OptimizerSweep {
-            algo: d.name.to_string(),
-            paper: d.paper,
-            configs: hp_space.len(),
-            space_key: results.space_key.clone(),
-            default_hp_key: default_result.hp_key.clone(),
-            default_score,
-            best_hp_key: best.hp_key.clone(),
-            best_config_idx: best.config_idx,
-            best_score: best.score,
-            improvement_pct: improvement_pct(default_score, best.score),
-            scores,
-            wallclock_seconds: ot0.elapsed().as_secs_f64(),
-        });
+        if let Some(cp) = checkpoint {
+            let completed = optimizers_out.len() + failed_legs.len();
+            if completed % cp.every_legs == 0 {
+                let partial = SweepResult {
+                    space_kind: "limited".to_string(),
+                    repeats,
+                    seed,
+                    train: swept_train.clone(),
+                    optimizers: optimizers_out.clone(),
+                    failed_legs: failed_legs.clone(),
+                    wallclock_seconds: t0.elapsed().as_secs_f64(),
+                };
+                // Best-effort: a flaky disk must not kill the sweep; the
+                // final save at the call site reports its error normally.
+                match partial.save(&cp.path) {
+                    Ok(()) => observer
+                        .checkpoint_saved(&cp.path.display().to_string(), completed),
+                    Err(e) => crate::log_warn!(
+                        "sweep checkpoint {} failed: {e:#}",
+                        cp.path.display()
+                    ),
+                }
+            }
+        }
     }
     let result = SweepResult {
         space_kind: "limited".to_string(),
         repeats,
         seed,
-        train: train
-            .iter()
-            .map(|se| SweptSpace {
-                label: se.label.clone(),
-                space_fingerprint: se.space.fingerprint(),
-            })
-            .collect(),
+        train: swept_train,
         optimizers: optimizers_out,
+        failed_legs,
         wallclock_seconds: t0.elapsed().as_secs_f64(),
     };
     observer.sweep_finished(result.mean_improvement_pct(), result.wallclock_seconds);
@@ -512,13 +707,36 @@ pub fn render_report(result: &SweepResult, report: &Report) -> Result<()> {
         "Score distribution over each optimizer's limited hyperparameter grid",
         &dists,
     )?;
+    render_failed_legs(&result.failed_legs, report)?;
     report.summary(&format!(
         "mean improvement of hypertuned-best over schema defaults: {:+.1}% \
-         across {} optimizers (paper, 4 algos: 94.8%); sweep took {}\n",
+         across {} optimizers (paper, 4 algos: 94.8%); sweep took {}{}\n",
         result.mean_improvement_pct(),
         result.optimizers.len(),
-        fmt_duration(result.wallclock_seconds)
+        fmt_duration(result.wallclock_seconds),
+        if result.failed_legs.is_empty() {
+            String::new()
+        } else {
+            format!("; {} leg(s) QUARANTINED", result.failed_legs.len())
+        }
     ))?;
+    Ok(())
+}
+
+/// Render the quarantined-legs table (shared by the sweep and metasweep
+/// reports); a no-op when the sweep was fully healthy.
+pub fn render_failed_legs(failed: &[FailedLeg], report: &Report) -> Result<()> {
+    if failed.is_empty() {
+        return Ok(());
+    }
+    let mut table = Table::new(
+        &format!("Quarantined legs ({}): partial results", failed.len()),
+        &["leg", "attempts", "error"],
+    );
+    for f in failed {
+        table.row(vec![f.leg.clone(), f.attempts.to_string(), f.error.clone()]);
+    }
+    report.table_as("failures", &table)?;
     Ok(())
 }
 
@@ -773,6 +991,8 @@ mod tests {
         assert!(dir.join("sweep_dist.csv").exists());
         let summary = std::fs::read_to_string(dir.join("sweep_summary.txt")).unwrap();
         assert!(summary.contains("mean improvement"), "{summary}");
+        // A healthy sweep writes no failure table.
+        assert!(!dir.join("sweep_failures.txt").exists());
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -882,6 +1102,133 @@ mod tests {
             .fold(f64::NEG_INFINITY, f64::max);
         assert_eq!(best_score.to_bits(), max.to_bits());
         assert_eq!(r.best_score_for(best_algo).unwrap().to_bits(), max.to_bits());
+    }
+
+    /// Synthetic exhaustive results keyed to the current schema spaces —
+    /// the cheap provider the fault-tolerance tests sweep with.
+    fn synthetic_provider(algo: &str) -> Result<Arc<HyperTuningResults>> {
+        let hp_space = space::limited_space(algo)?;
+        Ok(Arc::new(HyperTuningResults {
+            algo: algo.to_string(),
+            space_kind: "limited".into(),
+            space_key: hp_space.fingerprint(),
+            repeats: 1,
+            seed: 7,
+            results: (0..hp_space.len())
+                .map(|i| exhaustive::HyperResult {
+                    config_idx: i,
+                    hp_key: format!("c{i}"),
+                    score: 0.01 * i as f64,
+                })
+                .collect(),
+            wallclock_seconds: 1.0,
+            simulated_seconds: 1.0,
+        }))
+    }
+
+    /// The tentpole quarantine property: a leg whose campaign panics on
+    /// every attempt lands in `failed_legs` while every other optimizer
+    /// completes, and the record survives the JSON roundtrip.
+    #[test]
+    fn panicked_leg_is_quarantined_while_others_complete() {
+        use std::sync::Mutex;
+
+        #[derive(Default)]
+        struct FailureCollector(Mutex<Vec<String>>);
+        impl Observer for FailureCollector {
+            fn leg_failed(&self, leg: &str, error: &str, attempts: usize) {
+                self.0
+                    .lock()
+                    .unwrap()
+                    .push(format!("{leg} {attempts} {error}"));
+            }
+        }
+
+        let victim = optimizers::hypertunable_names()[0];
+        let plan = Arc::new(FaultPlan::parse(&format!("panic@{victim}.j0x*")).unwrap());
+        let collector = Arc::new(FailureCollector::default());
+        let r = sweep_registry_checkpointed(
+            train(),
+            1,
+            7,
+            Arc::clone(&collector) as Arc<dyn Observer>,
+            None,
+            Some(plan),
+            synthetic_provider,
+        )
+        .unwrap();
+        let all = optimizers::hypertunable_names();
+        assert_eq!(r.failed_legs.len(), 1);
+        assert_eq!(r.failed_legs[0].leg, victim);
+        assert_eq!(r.failed_legs[0].attempts, 2, "default retry policy");
+        assert!(
+            r.failed_legs[0].error.contains("injected fault"),
+            "{}",
+            r.failed_legs[0].error
+        );
+        assert_eq!(r.optimizers.len(), all.len() - 1);
+        assert!(r.entry(victim).is_none());
+        let events = collector.0.lock().unwrap().clone();
+        assert_eq!(events.len(), 1);
+        assert!(events[0].starts_with(&format!("{victim} 2")), "{}", events[0]);
+        // The quarantine record survives the envelope roundtrip.
+        let back = SweepResult::from_json(&r.to_json()).unwrap();
+        assert_eq!(back.failed_legs.len(), 1);
+        assert_eq!(back.failed_legs[0].leg, victim);
+        assert_eq!(back.failed_legs[0].attempts, 2);
+    }
+
+    /// With a checkpoint policy the partial envelope lands on disk every
+    /// N legs; the surviving file is a loadable prefix of the final
+    /// result — exactly the state a killed sweep resumes from.
+    #[test]
+    fn checkpoint_saves_loadable_partial_envelopes() {
+        let dir = std::env::temp_dir().join(format!("tt_sweep_cp_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sweep_checkpoint.json.gz");
+        let cp = Checkpoint::new(&path, 2);
+        let r = sweep_registry_checkpointed(
+            train(),
+            1,
+            7,
+            Arc::new(NullObserver),
+            Some(&cp),
+            None,
+            synthetic_provider,
+        )
+        .unwrap();
+        let cp_result = SweepResult::load(&path).unwrap();
+        // The last checkpoint fired at the largest multiple of every_legs.
+        let expect = r.optimizers.len() - r.optimizers.len() % 2;
+        assert_eq!(cp_result.optimizers.len(), expect);
+        for (a, b) in cp_result.optimizers.iter().zip(&r.optimizers) {
+            assert_eq!(a.algo, b.algo);
+            assert_eq!(a.default_score.to_bits(), b.default_score.to_bits());
+            assert_eq!(a.best_score.to_bits(), b.best_score.to_bits());
+        }
+        assert_eq!(cp_result.seed, r.seed);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A sweep with quarantined legs renders the failure table and flags
+    /// the summary; a healthy sweep writes no failures artifact.
+    #[test]
+    fn report_renders_failure_table_for_quarantined_legs() {
+        let mut r = run_sweep().clone();
+        r.failed_legs.push(FailedLeg {
+            leg: "pso".into(),
+            error: "tuning job 0 panicked after 2 attempt(s): boom".into(),
+            attempts: 2,
+        });
+        let dir = std::env::temp_dir().join(format!("tt_sweepq_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let report = Report::new(&dir, "sweepq");
+        render_report(&r, &report).unwrap();
+        let failures = std::fs::read_to_string(dir.join("sweepq_failures.txt")).unwrap();
+        assert!(failures.contains("pso") && failures.contains("boom"), "{failures}");
+        let summary = std::fs::read_to_string(dir.join("sweepq_summary.txt")).unwrap();
+        assert!(summary.contains("QUARANTINED"), "{summary}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -44,8 +44,11 @@
 //! * [`experiments`] — one regenerator per paper table/figure.
 //! * [`error`] — the typed [`TuneError`] every fallible library API
 //!   returns (the binary converts to `anyhow` at its boundary).
+//! * [`faults`] — the deterministic fault-injection harness
+//!   (`--inject-faults` / `TUNETUNER_FAULTS`) used to chaos-test job
+//!   isolation, retry/quarantine, and crash-safe persistence.
 //! * [`util`] — offline substrates (JSON, RNG, stats, CLI, logging,
-//!   compression, ASCII tables/plots).
+//!   compression, crash-safe file staging, ASCII tables/plots).
 //!
 //! [`Campaign`]: campaign::Campaign
 //! [`Executor`]: campaign::Executor
@@ -72,6 +75,7 @@
 )]
 
 pub mod error;
+pub mod faults;
 pub mod util;
 pub mod searchspace;
 pub mod kernels;

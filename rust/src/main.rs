@@ -15,7 +15,8 @@
 //!
 //! Global flags: `--scale quick|paper`, `--seed N`, `--hub DIR`,
 //! `--results DIR`, `--artifacts DIR`, `--backend pjrt|native`,
-//! `--verbose`, `--quiet`.
+//! `--verbose`, `--quiet`, `--inject-faults SPEC` (deterministic chaos
+//! testing, also via `TUNETUNER_FAULTS`; see [`tunetuner::faults`]).
 
 // Same style-lint policy as the library crate (see rust/src/lib.rs).
 #![allow(clippy::needless_range_loop, clippy::collapsible_if, clippy::collapsible_else_if)]
@@ -38,7 +39,7 @@ use tunetuner::searchspace::{
 };
 use tunetuner::util::cli::Args;
 use tunetuner::util::log::{self, Level};
-use tunetuner::{log_info, log_warn};
+use tunetuner::{log_debug, log_info, log_warn};
 
 fn main() {
     log::init_from_env();
@@ -48,10 +49,27 @@ fn main() {
     } else if args.flag("quiet") {
         log::set_level(Level::Warn);
     }
-    if let Err(e) = dispatch(&args) {
+    if let Err(e) = install_faults(&args).and_then(|()| dispatch(&args)) {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
+}
+
+/// Install the process-global deterministic fault plan from
+/// `--inject-faults SPEC` (or the `TUNETUNER_FAULTS` environment
+/// variable) before any subcommand runs — save faults take effect on
+/// every artifact write, job faults on every campaign the drivers
+/// launch. No spec, no fault plan: the hot path stays untouched.
+fn install_faults(args: &Args) -> Result<()> {
+    let spec = args
+        .opt("inject-faults")
+        .map(str::to_string)
+        .or_else(|| std::env::var("TUNETUNER_FAULTS").ok());
+    if let Some(spec) = spec {
+        tunetuner::faults::install(tunetuner::faults::FaultPlan::parse(&spec)?);
+        log_warn!("deterministic fault injection active: {spec}");
+    }
+    Ok(())
 }
 
 fn engine(args: &Args) -> Arc<Engine> {
@@ -77,7 +95,8 @@ fn ctx(args: &Args) -> Result<Ctx> {
         scale,
         &scale_name,
         args.opt_u64("seed", 42),
-    ))
+    )
+    .with_faults(tunetuner::faults::global()))
 }
 
 fn dispatch(args: &Args) -> Result<()> {
@@ -120,6 +139,8 @@ subcommands:
       [--min-repeats 1] [--repeats N]
       [--synthetic AxBxC] [--validity 0.05] [--family hash|product|mixed]
       [--gen-seed 7]  hub-free run on a generated space (nothing persisted)
+      [--envelope PATH]  (synthetic only) checkpoint/resume envelope: finished
+          legs replay bitwise from PATH, which is rewritten after every leg
       [--min-recovery PCT] [--max-cost PCT]  gate: exit 1 when any raced
           strategy recovers less / spends more than the given percentages
       [--json]  print the tunetuner-metasweep envelope instead of the report
@@ -134,6 +155,9 @@ subcommands:
 
 global flags: --scale quick|paper  --seed N  --hub DIR  --results DIR
               --artifacts DIR  --backend pjrt|native  --verbose  --quiet
+              --inject-faults SPEC  deterministic fault injection (chaos
+                  testing; also via TUNETUNER_FAULTS): KIND@TARGET list like
+                  'panic@pso.j0x*; nan@greedy_ils; truncate-save@s1'
 ";
 
 fn cmd_info(args: &Args) -> Result<()> {
@@ -314,6 +338,18 @@ impl Observer for HypertuneProgress {
              ({evals} evals, {spent_cost:.1} full-repeat units)"
         );
     }
+
+    fn leg_retried(&self, leg: &str, attempt: usize, max_attempts: usize, error: &str) {
+        log_warn!("retrying {leg} (attempt {attempt}/{max_attempts}): {error}");
+    }
+
+    fn leg_failed(&self, leg: &str, error: &str, attempts: usize) {
+        log_warn!("quarantined {leg} after {attempts} attempt(s): {error}");
+    }
+
+    fn checkpoint_saved(&self, path: &str, completed_legs: usize) {
+        log_debug!("checkpoint: {completed_legs} legs -> {path}");
+    }
 }
 
 fn cmd_hypertune(args: &Args) -> Result<()> {
@@ -378,9 +414,18 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let result = c.registry_sweep_at(opt_repeats(args))?;
     if json {
         println!("{}", result.to_json().to_pretty());
-        return Ok(());
+    } else {
+        hypertuning::render_sweep_report(&result, &c.report("sweep"))?;
     }
-    hypertuning::render_sweep_report(&result, &c.report("sweep"))?;
+    // Quarantined legs exit nonzero — but only after the envelope was
+    // saved and rendered, so the completed legs are never discarded.
+    if !result.failed_legs.is_empty() {
+        bail!(
+            "{} sweep leg(s) quarantined after exhausting retries; \
+             the saved envelope retains every completed leg",
+            result.failed_legs.len()
+        );
+    }
     Ok(())
 }
 
@@ -425,9 +470,36 @@ fn cmd_metasweep(args: &Args) -> Result<()> {
         } else {
             Arc::new(HypertuneProgress)
         };
+        // `--envelope PATH` turns the hub-free run into a durable,
+        // resumable campaign: a prior envelope at PATH replays its
+        // finished legs, the file is checkpointed after every completed
+        // leg, and the final merge is saved back — so a killed or
+        // fault-quarantined run resumes instead of starting over. The
+        // reference sweep stays fault-free (it is the yardstick every
+        // leg is measured against); job faults apply to the metasweep's
+        // own campaigns.
+        let envelope = args.opt("envelope").map(PathBuf::from);
+        let prior = envelope
+            .as_deref()
+            .and_then(hypertuning::MetaSweepResult::load_tolerant);
+        let checkpoint = envelope
+            .as_ref()
+            .map(|p| hypertuning::Checkpoint::new(p.clone(), 1));
         let reference = hypertuning::sweep_registry(&train, repeats, seed, Arc::clone(&observer))?;
-        let result =
-            hypertuning::metasweep_registry(&train, repeats, seed, &reference, &config, observer)?;
+        let result = hypertuning::metasweep_registry_checkpointed(
+            &train,
+            repeats,
+            seed,
+            &reference,
+            &config,
+            prior.as_ref(),
+            checkpoint.as_ref(),
+            tunetuner::faults::global(),
+            observer,
+        )?;
+        if let Some(path) = &envelope {
+            result.save(path)?;
+        }
         let report = Report::new(&PathBuf::from(args.opt_or("results", "results")), "metasweep");
         (result, report)
     } else {
@@ -444,6 +516,17 @@ fn cmd_metasweep(args: &Args) -> Result<()> {
         println!("{}", result.to_json().to_pretty());
     } else {
         hypertuning::render_metasweep_report(&result, &report)?;
+    }
+
+    // Quarantined legs exit nonzero — after the envelope was saved and
+    // the failure table rendered, so completed legs are never discarded
+    // and a faultless re-run resumes from them.
+    if !result.failed_legs.is_empty() {
+        bail!(
+            "{} metasweep leg(s) quarantined after exhausting retries; \
+             the saved envelope retains every completed leg",
+            result.failed_legs.len()
+        );
     }
 
     // CI gates: every raced strategy must clear both bars (expressed in

@@ -40,6 +40,16 @@ impl Report {
         Ok(())
     }
 
+    /// Emit an auxiliary table under a custom suffix (`{id}_{suffix}.txt`)
+    /// so it does not clobber the report's main `*_table.txt` — used for
+    /// the quarantined-legs failure table.
+    pub fn table_as(&self, suffix: &str, table: &Table) -> Result<()> {
+        let rendered = table.render();
+        println!("{rendered}");
+        self.write(&format!("{suffix}.txt"), &rendered)?;
+        Ok(())
+    }
+
     /// Emit a line plot: prints ASCII and writes .txt + .csv.
     pub fn lines(&self, title: &str, series: &[Series]) -> Result<()> {
         let rendered = plot::line_plot(title, series, 100, 24);

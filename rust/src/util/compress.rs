@@ -4,6 +4,11 @@
 //! storage and portability, output files are compressed and decompressed
 //! automatically"); we do the same with flate2. Paths ending in `.gz` are
 //! compressed transparently by [`write_string`] / [`read_string`].
+//!
+//! All writes are staged through [`super::fsio::atomic_write`]: the
+//! bytes (compressed or not) are fully assembled in memory, written to a
+//! unique temp file, and renamed over the target — a crash mid-save can
+//! never leave a truncated envelope or cache behind.
 
 use crate::error::{Context, Result};
 use flate2::read::GzDecoder;
@@ -12,22 +17,18 @@ use flate2::Compression;
 use std::io::{Read, Write};
 use std::path::Path;
 
-/// Write a string; gzip if the extension is `.gz`.
+/// Write a string atomically; gzip if the extension is `.gz`.
 pub fn write_string(path: &Path, contents: &str) -> Result<()> {
-    if let Some(parent) = path.parent() {
-        std::fs::create_dir_all(parent)?;
-    }
     if path.extension().map(|e| e == "gz").unwrap_or(false) {
-        let file = std::fs::File::create(path)
-            .with_context(|| format!("create {}", path.display()))?;
-        let mut enc = GzEncoder::new(file, Compression::fast());
+        let mut enc = GzEncoder::new(Vec::new(), Compression::fast());
         enc.write_all(contents.as_bytes())?;
-        enc.finish()?;
+        let bytes = enc.finish()?;
+        super::fsio::atomic_write(path, &bytes)
+            .with_context(|| format!("write {}", path.display()))
     } else {
-        std::fs::write(path, contents)
-            .with_context(|| format!("write {}", path.display()))?;
+        super::fsio::atomic_write(path, contents.as_bytes())
+            .with_context(|| format!("write {}", path.display()))
     }
-    Ok(())
 }
 
 /// Read a string; gunzip if the extension is `.gz`.

@@ -1,0 +1,127 @@
+//! Crash-safe persistence: every artifact the tuner writes (envelope
+//! JSON, `.json.gz` caches, T4B sidecars) goes through [`atomic_write`] —
+//! the staged-temp-plus-rename pattern generalized from the T4B sidecar
+//! writer. The temp name carries pid + a process-wide counter so
+//! concurrent writers of the same path never interleave into one staging
+//! file; each rename installs some writer's *complete* bytes, and a
+//! crash (or an injected [`crate::faults`] truncation) mid-stage leaves
+//! the previously installed file untouched.
+
+use crate::error::Result;
+use crate::faults::FaultPlan;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Unique staging path next to `path`: `<stem>.tmp.<pid>.<seq>`.
+fn staging_path(path: &Path) -> PathBuf {
+    path.with_extension(format!(
+        "tmp.{}.{}",
+        std::process::id(),
+        TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+/// Write `bytes` to `path` atomically: stage into a unique temp file in
+/// the same directory, then rename over the target. Readers only ever
+/// see the old complete file or the new complete file — never a
+/// truncated mix. Consults the process-global [`crate::faults`] plan for
+/// injected save faults (chaos testing); library callers that hold an
+/// explicit plan use [`atomic_write_with`].
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    atomic_write_with(path, bytes, crate::faults::global().as_deref())
+}
+
+/// [`atomic_write`] with an explicit fault plan (None = no injection).
+/// An injected `truncate-save` fault simulates a crash mid-stage: a
+/// truncated temp file is left behind (harmless debris, never renamed)
+/// and the write reports an `Io` error — the previous file at `path`
+/// stays intact, which is exactly the property the resume path depends
+/// on.
+pub fn atomic_write_with(path: &Path, bytes: &[u8], faults: Option<&FaultPlan>) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let tmp = staging_path(path);
+    if let Some(plan) = faults {
+        if plan.save_fault() {
+            let cut = bytes.len() / 2;
+            std::fs::write(&tmp, &bytes[..cut]).ok();
+            return Err(std::io::Error::other(format!(
+                "injected fault: truncated write of {} ({} of {} bytes staged)",
+                path.display(),
+                cut,
+                bytes.len()
+            ))
+            .into());
+        }
+    }
+    let staged = std::fs::write(&tmp, bytes).and_then(|_| std::fs::rename(&tmp, path));
+    if staged.is_err() {
+        std::fs::remove_file(&tmp).ok();
+    }
+    staged?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("tunetuner_fsio_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn atomic_write_creates_and_replaces() {
+        let dir = tmp_dir("roundtrip");
+        let path = dir.join("artifact.json");
+        atomic_write(&path, b"first").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"first");
+        atomic_write(&path, b"second, longer contents").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second, longer contents");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn atomic_write_creates_missing_parent_dirs() {
+        let dir = tmp_dir("parents");
+        let path = dir.join("a/b/c.bin");
+        atomic_write(&path, &[1, 2, 3]).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), vec![1, 2, 3]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The satellite regression: a truncated-write fault mid-save must
+    /// leave the previously installed file intact (the old non-atomic
+    /// `File::create` path would have destroyed it first).
+    #[test]
+    fn truncated_save_fault_leaves_previous_file_intact() {
+        let dir = tmp_dir("truncate");
+        let path = dir.join("envelope.json");
+        atomic_write_with(&path, b"the good envelope", None).unwrap();
+
+        let plan = FaultPlan::parse("truncate-save@*").unwrap();
+        let err = atomic_write_with(&path, b"the replacement that crashes", Some(&plan))
+            .expect_err("injected truncation must report an error");
+        assert!(
+            err.to_string().contains("injected fault"),
+            "unexpected error: {err}"
+        );
+        assert_eq!(
+            std::fs::read(&path).unwrap(),
+            b"the good envelope",
+            "previous file must survive a truncated save"
+        );
+
+        // The fault spec fires once; the retry goes through cleanly.
+        atomic_write_with(&path, b"the replacement", Some(&plan)).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"the replacement");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

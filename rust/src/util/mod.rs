@@ -11,6 +11,7 @@ pub mod stats;
 pub mod cli;
 pub mod log;
 pub mod compress;
+pub mod fsio;
 pub mod table;
 pub mod plot;
 pub mod hash;

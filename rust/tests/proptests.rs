@@ -679,3 +679,57 @@ fn prop_halving_schedule_invariants() {
         }
     }
 }
+
+/// Fault isolation in the worker pool: for random job counts, worker
+/// counts and faulty-job subsets, `scatter_result` always drains the
+/// whole batch, reports a captured [`JobFailure`] in exactly the faulty
+/// slots and an `Ok` in exactly the healthy ones — and the pool stays
+/// usable for the next batch, faulted or clean.
+#[test]
+fn prop_executor_scatter_result_isolates_random_faults() {
+    use std::sync::Arc;
+    use tunetuner::campaign::Executor;
+
+    let mut rng = Rng::new(0xFA17);
+    for case in 0..25u64 {
+        let workers = rng.below(5);
+        let pool = Executor::new(workers);
+        for round in 0..3u64 {
+            let n_jobs = 1 + rng.below(24);
+            let faulty: Arc<Vec<bool>> = Arc::new((0..n_jobs).map(|_| rng.chance(0.3)).collect());
+            let jobs = Arc::clone(&faulty);
+            let results = pool.scatter_result(n_jobs, move |i| {
+                if jobs[i] {
+                    panic!("boom {i}");
+                }
+                i * 10
+            });
+            let ctx = format!("case {case} round {round}: {n_jobs} jobs, {workers} workers");
+            assert_eq!(results.len(), n_jobs, "{ctx}");
+            for (i, r) in results.iter().enumerate() {
+                match r {
+                    Ok(v) => {
+                        assert!(!faulty[i], "{ctx}: job {i} should have failed");
+                        assert_eq!(*v, i * 10, "{ctx}");
+                    }
+                    Err(f) => {
+                        assert!(faulty[i], "{ctx}: job {i} should have succeeded");
+                        assert_eq!(f.job, i, "{ctx}");
+                        assert!(
+                            f.message.contains(&format!("boom {i}")),
+                            "{ctx}: payload lost: {}",
+                            f.message
+                        );
+                    }
+                }
+            }
+        }
+        // The pool survives any number of faulted batches: a clean
+        // follow-up batch completes in full.
+        let clean = pool.scatter_result(8, |i| i + 1);
+        assert_eq!(clean.len(), 8);
+        for (i, r) in clean.into_iter().enumerate() {
+            assert_eq!(r.expect("clean batch must succeed"), i + 1, "case {case}");
+        }
+    }
+}
