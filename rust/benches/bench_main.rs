@@ -175,7 +175,8 @@ impl Bench {
             )
             .set("generated_unix", unix.into())
             .set("benches", Json::Arr(benches));
-        match std::fs::write(&path, j.to_pretty()) {
+        let out = std::path::Path::new(&path);
+        match tunetuner::util::fsio::atomic_write(out, j.to_pretty().as_bytes()) {
             Ok(()) => println!("(wrote {} results to {path})", self.records.len()),
             Err(e) => eprintln!("(failed to write {path}: {e})"),
         }

@@ -1,0 +1,227 @@
+//! The inline suppression grammar for lint diagnostics.
+//!
+//! Every suppression must name the rule(s) it silences *and* carry a
+//! non-empty justification, so exceptions are documented at the site
+//! rather than in a central exclusion list. The grammar, anchored
+//! anywhere inside a line or block comment:
+//!
+//! ```text
+//! lint: allow(W01, reason = "wallclock telemetry, stripped from diffs")
+//! lint: allow(W01, W03, reason = "shared justification for both rules")
+//! ```
+//!
+//! A directive suppresses matching diagnostics on its own line and on
+//! the next line that contains code (so both trailing-comment and
+//! comment-above placement work). A directive that does not parse —
+//! missing reason, empty reason, unknown rule id, bad syntax — is
+//! itself reported as rule `W00`, which is always denied: a malformed
+//! suppression must never silently succeed.
+
+use super::rules::RuleId;
+
+/// A successfully parsed allow directive.
+#[derive(Clone, Debug)]
+pub struct AllowDirective {
+    pub rules: Vec<RuleId>,
+    pub reason: String,
+    /// Line the directive's comment starts on.
+    pub line: u32,
+}
+
+/// A malformed directive (reported as W00).
+#[derive(Clone, Debug)]
+pub struct BadDirective {
+    pub line: u32,
+    pub col: u32,
+    pub message: String,
+}
+
+const MARKER: &str = "lint: allow";
+
+/// Scan one comment token's text for an allow directive. Returns
+/// `None` when the comment does not contain the allow marker.
+pub fn parse_comment(
+    text: &str,
+    line: u32,
+    col: u32,
+) -> Option<Result<AllowDirective, BadDirective>> {
+    let start = text.find(MARKER)?;
+    let rest = text[start + MARKER.len()..].trim_start();
+    let bad = |message: String| BadDirective { line, col, message };
+    let Some(body) = rest.strip_prefix('(') else {
+        return Some(Err(bad("expected '(' after `lint: allow`".into())));
+    };
+    // The closing paren must be found outside the quoted reason (which
+    // may itself contain parens).
+    let mut close = None;
+    let mut quoted = false;
+    for (idx, c) in body.char_indices() {
+        match c {
+            '"' => quoted = !quoted,
+            ')' if !quoted => {
+                close = Some(idx);
+                break;
+            }
+            _ => {}
+        }
+    }
+    let Some(close) = close else {
+        return Some(Err(bad("unterminated `lint: allow(...)` directive".into())));
+    };
+    let body = &body[..close];
+
+    // Split on commas outside the quoted reason string.
+    let mut parts: Vec<String> = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in body.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            ',' if !in_str => {
+                parts.push(cur.trim().to_string());
+                cur = String::new();
+            }
+            _ => cur.push(c),
+        }
+    }
+    parts.push(cur.trim().to_string());
+
+    let mut rules = Vec::new();
+    let mut reason: Option<String> = None;
+    for part in &parts {
+        if part.is_empty() {
+            return Some(Err(bad("empty clause in `lint: allow(...)`".into())));
+        }
+        if let Some(val) = part.strip_prefix("reason") {
+            let val = val.trim_start();
+            let Some(val) = val.strip_prefix('=') else {
+                return Some(Err(bad("expected `reason = \"...\"`".into())));
+            };
+            let val = val.trim();
+            if val.len() < 2 || !val.starts_with('"') || !val.ends_with('"') {
+                return Some(Err(bad("reason must be a double-quoted string".into())));
+            }
+            let inner = val[1..val.len() - 1].trim();
+            if inner.is_empty() {
+                return Some(Err(bad("reason must not be empty".into())));
+            }
+            reason = Some(inner.to_string());
+        } else {
+            match RuleId::parse(part) {
+                Some(id) => rules.push(id),
+                None => {
+                    let msg = format!("unknown rule id `{part}` (expected W01..W05)");
+                    return Some(Err(bad(msg)));
+                }
+            }
+        }
+    }
+    if rules.is_empty() {
+        return Some(Err(bad("directive names no rules".into())));
+    }
+    let Some(reason) = reason else {
+        return Some(Err(bad("directive is missing `reason = \"...\"`".into())));
+    };
+    Some(Ok(AllowDirective {
+        rules,
+        reason,
+        line,
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ok(text: &str) -> AllowDirective {
+        match parse_comment(text, 1, 1) {
+            Some(Ok(d)) => d,
+            other => panic!("expected well-formed directive, got {other:?}"),
+        }
+    }
+
+    fn rejected(text: &str) -> BadDirective {
+        match parse_comment(text, 1, 1) {
+            Some(Err(e)) => e,
+            other => panic!("expected malformed directive, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn well_formed_single_rule() {
+        let d = ok("// lint: allow(W03, reason = \"guarded by chunks_exact\")");
+        assert_eq!(d.rules, vec![RuleId::W03]);
+        assert_eq!(d.reason, "guarded by chunks_exact");
+    }
+
+    #[test]
+    fn well_formed_multi_rule() {
+        let d = ok("// lint: allow(W01, W03, reason = \"telemetry only\")");
+        assert_eq!(d.rules, vec![RuleId::W01, RuleId::W03]);
+    }
+
+    #[test]
+    fn non_directive_comment_ignored() {
+        assert!(parse_comment("// plain comment about linting", 1, 1).is_none());
+        assert!(parse_comment("// allow me to explain", 1, 1).is_none());
+    }
+
+    #[test]
+    fn missing_reason_rejected() {
+        let e = rejected("// lint: allow(W03)");
+        assert!(e.message.contains("missing"), "{}", e.message);
+    }
+
+    #[test]
+    fn empty_reason_rejected() {
+        let e = rejected("// lint: allow(W03, reason = \"\")");
+        assert!(e.message.contains("empty"), "{}", e.message);
+        let e = rejected("// lint: allow(W03, reason = \"   \")");
+        assert!(e.message.contains("empty"), "{}", e.message);
+    }
+
+    #[test]
+    fn unknown_rule_rejected() {
+        let e = rejected("// lint: allow(W99, reason = \"nope\")");
+        assert!(e.message.contains("W99"), "{}", e.message);
+    }
+
+    #[test]
+    fn w00_not_allowable() {
+        let e = rejected("// lint: allow(W00, reason = \"meta\")");
+        assert!(e.message.contains("W00"), "{}", e.message);
+    }
+
+    #[test]
+    fn unquoted_reason_rejected() {
+        let e = rejected("// lint: allow(W03, reason = because)");
+        assert!(e.message.contains("quoted"), "{}", e.message);
+    }
+
+    #[test]
+    fn missing_parens_rejected() {
+        let e = rejected("// lint: allow W03");
+        assert!(e.message.contains("'('"), "{}", e.message);
+    }
+
+    #[test]
+    fn comma_inside_reason_ok() {
+        let d = ok("// lint: allow(W01, reason = \"a, b, and c\")");
+        assert_eq!(d.reason, "a, b, and c");
+    }
+
+    #[test]
+    fn parens_inside_reason_ok() {
+        let d = ok("// lint: allow(W03, reason = \"chunks_exact(8) guarantees len\")");
+        assert_eq!(d.reason, "chunks_exact(8) guarantees len");
+    }
+
+    #[test]
+    fn block_comment_form_ok() {
+        let d = ok("/* lint: allow(W02, reason = \"fixture writes a temp file\") */");
+        assert_eq!(d.rules, vec![RuleId::W02]);
+    }
+}

@@ -1,0 +1,497 @@
+//! Span-accurate Rust token scanner for the invariant lint engine.
+//!
+//! A deliberately small lexer — not a full Rust grammar — that splits a
+//! source file into the token classes the rules in
+//! [`super::rules`] match on: identifiers, numeric/string/char literals,
+//! lifetimes, single-character punctuation, and comments (kept as
+//! tokens, because the allow-directive suppression grammar lives in
+//! them). Every token carries a 1-based `line:col` span so diagnostics
+//! point at the exact site.
+//!
+//! Handled literal forms: `"…"` with escapes (multi-line allowed),
+//! raw strings `r"…"`/`r#"…"#` at any guard depth, byte strings
+//! `b"…"`/`br#"…"#`, char literals (incl. `'\u{…}'` and `b'x'`),
+//! lifetimes (`'a` without a closing quote), nested block comments, and
+//! numeric literals with suffixes. Known simplification: an exponent
+//! with a sign (`1e-9`) lexes as `1e` `-` `9`; no rule gives numeric
+//! tokens semantics beyond "is a literal", so the span split is
+//! harmless.
+
+/// Token class. Punctuation is one token per character (`::` is two
+/// `Punct(':')` tokens); rules match multi-character operators by
+/// looking at adjacent tokens.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword.
+    Ident,
+    /// Numeric literal (integer or float, any base, with suffix).
+    Num,
+    /// String literal of any form (escaped, raw, byte).
+    Str,
+    /// Char literal (`'a'`, `'\n'`, `b'x'`).
+    Char,
+    /// Lifetime (`'a` — no closing quote).
+    Lifetime,
+    /// Single punctuation character.
+    Punct,
+    /// Line or block comment, doc comments included. The full comment
+    /// text (markers kept) is preserved for the allow-directive parser.
+    Comment,
+}
+
+/// One token with its source span (1-based line and column, counted in
+/// characters).
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+    pub col: u32,
+}
+
+/// Character cursor that tracks line/column.
+struct Cursor {
+    chars: Vec<char>,
+    pos: usize,
+    line: u32,
+    col: u32,
+}
+
+impl Cursor {
+    fn new(source: &str) -> Cursor {
+        Cursor {
+            chars: source.chars().collect(),
+            pos: 0,
+            line: 1,
+            col: 1,
+        }
+    }
+
+    fn peek(&self) -> Option<char> {
+        self.chars.get(self.pos).copied()
+    }
+
+    fn peek_at(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.pos + ahead).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.peek()?;
+        self.pos += 1;
+        if c == '\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        Some(c)
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Tokenize a source file. Never fails: unterminated literals and
+/// comments lex as a final token running to end of input (the rules
+/// still see every token before the malformed tail, and rustc itself
+/// rejects such files long before CI runs the linter).
+pub fn tokenize(source: &str) -> Vec<Token> {
+    let mut cur = Cursor::new(source);
+    let mut out = Vec::new();
+    while let Some(c) = cur.peek() {
+        let (line, col) = (cur.line, cur.col);
+        if c.is_whitespace() {
+            cur.bump();
+            continue;
+        }
+        if c == '/' && cur.peek_at(1) == Some('/') {
+            out.push(tok(TokKind::Comment, line_comment(&mut cur), line, col));
+            continue;
+        }
+        if c == '/' && cur.peek_at(1) == Some('*') {
+            out.push(tok(TokKind::Comment, block_comment(&mut cur), line, col));
+            continue;
+        }
+        // Raw / byte string prefixes take precedence over identifiers.
+        if let Some(text) = raw_or_byte_literal(&mut cur) {
+            out.push(tok(text.1, text.0, line, col));
+            continue;
+        }
+        if is_ident_start(c) {
+            out.push(tok(TokKind::Ident, ident(&mut cur), line, col));
+            continue;
+        }
+        if c.is_ascii_digit() {
+            out.push(tok(TokKind::Num, number(&mut cur), line, col));
+            continue;
+        }
+        if c == '"' {
+            out.push(tok(TokKind::Str, string_literal(&mut cur), line, col));
+            continue;
+        }
+        if c == '\'' {
+            let (text, kind) = char_or_lifetime(&mut cur);
+            out.push(tok(kind, text, line, col));
+            continue;
+        }
+        cur.bump();
+        out.push(tok(TokKind::Punct, c.to_string(), line, col));
+    }
+    out
+}
+
+fn tok(kind: TokKind, text: String, line: u32, col: u32) -> Token {
+    Token {
+        kind,
+        text,
+        line,
+        col,
+    }
+}
+
+fn line_comment(cur: &mut Cursor) -> String {
+    let mut s = String::new();
+    while let Some(c) = cur.peek() {
+        if c == '\n' {
+            break;
+        }
+        s.push(c);
+        cur.bump();
+    }
+    s
+}
+
+fn block_comment(cur: &mut Cursor) -> String {
+    let mut s = String::new();
+    let mut depth = 0usize;
+    while let Some(c) = cur.peek() {
+        if c == '/' && cur.peek_at(1) == Some('*') {
+            depth += 1;
+            s.push('/');
+            s.push('*');
+            cur.bump();
+            cur.bump();
+            continue;
+        }
+        if c == '*' && cur.peek_at(1) == Some('/') {
+            depth = depth.saturating_sub(1);
+            s.push('*');
+            s.push('/');
+            cur.bump();
+            cur.bump();
+            if depth == 0 {
+                break;
+            }
+            continue;
+        }
+        s.push(c);
+        cur.bump();
+    }
+    s
+}
+
+fn ident(cur: &mut Cursor) -> String {
+    let mut s = String::new();
+    while let Some(c) = cur.peek() {
+        if !is_ident_continue(c) {
+            break;
+        }
+        s.push(c);
+        cur.bump();
+    }
+    s
+}
+
+fn number(cur: &mut Cursor) -> String {
+    let mut s = String::new();
+    while let Some(c) = cur.peek() {
+        if !is_ident_continue(c) {
+            break;
+        }
+        s.push(c);
+        cur.bump();
+    }
+    // Fractional part: `.` followed by a digit (so `0..n` and `1.max(2)`
+    // stay a separate `.` token).
+    if cur.peek() == Some('.') && cur.peek_at(1).map(|c| c.is_ascii_digit()).unwrap_or(false) {
+        s.push('.');
+        cur.bump();
+        while let Some(c) = cur.peek() {
+            if !is_ident_continue(c) {
+                break;
+            }
+            s.push(c);
+            cur.bump();
+        }
+    }
+    s
+}
+
+/// Consume `r"…"`, `r#"…"#`, `b"…"`, `br#"…"#`, or `b'x'` when the
+/// cursor sits on such a prefix; returns None (consuming nothing) for a
+/// plain identifier starting with `r`/`b`.
+fn raw_or_byte_literal(cur: &mut Cursor) -> Option<(String, TokKind)> {
+    let c = cur.peek()?;
+    if c != 'r' && c != 'b' {
+        return None;
+    }
+    // Figure out the literal shape from the next couple of characters.
+    let mut ahead = 1;
+    let mut raw = c == 'r';
+    if c == 'b' {
+        match cur.peek_at(1) {
+            Some('r') => {
+                raw = true;
+                ahead = 2;
+            }
+            Some('"') => {
+                // b"…" — plain (escaped) byte string.
+                let mut s = String::from("b");
+                cur.bump();
+                s.push_str(&string_literal(cur));
+                return Some((s, TokKind::Str));
+            }
+            Some('\'') => {
+                // b'x' — byte char.
+                let mut s = String::from("b");
+                cur.bump();
+                let (body, _) = char_or_lifetime(cur);
+                s.push_str(&body);
+                return Some((s, TokKind::Char));
+            }
+            _ => return None,
+        }
+    }
+    if !raw {
+        return None;
+    }
+    // r / br followed by zero-or-more '#' then '"'.
+    let mut guards = 0usize;
+    while cur.peek_at(ahead + guards) == Some('#') {
+        guards += 1;
+    }
+    if cur.peek_at(ahead + guards) != Some('"') {
+        return None;
+    }
+    let mut s = String::new();
+    for _ in 0..(ahead + guards + 1) {
+        if let Some(ch) = cur.bump() {
+            s.push(ch);
+        }
+    }
+    // Body runs to `"` followed by `guards` hashes.
+    while let Some(ch) = cur.peek() {
+        if ch == '"' {
+            let mut ok = true;
+            for g in 0..guards {
+                if cur.peek_at(1 + g) != Some('#') {
+                    ok = false;
+                    break;
+                }
+            }
+            if ok {
+                for _ in 0..(guards + 1) {
+                    if let Some(q) = cur.bump() {
+                        s.push(q);
+                    }
+                }
+                break;
+            }
+        }
+        s.push(ch);
+        cur.bump();
+    }
+    Some((s, TokKind::Str))
+}
+
+fn string_literal(cur: &mut Cursor) -> String {
+    let mut s = String::new();
+    if let Some(q) = cur.bump() {
+        s.push(q); // opening quote
+    }
+    while let Some(c) = cur.peek() {
+        if c == '\\' {
+            s.push(c);
+            cur.bump();
+            if let Some(esc) = cur.bump() {
+                s.push(esc);
+            }
+            continue;
+        }
+        s.push(c);
+        cur.bump();
+        if c == '"' {
+            break;
+        }
+    }
+    s
+}
+
+/// Disambiguate `'a'` / `'\n'` / `'\u{…}'` (char literal) from `'a`
+/// (lifetime). Called with the cursor on the opening `'`.
+fn char_or_lifetime(cur: &mut Cursor) -> (String, TokKind) {
+    let mut s = String::new();
+    if let Some(q) = cur.bump() {
+        s.push(q);
+    }
+    match cur.peek() {
+        Some('\\') => {
+            // Escaped char literal: consume escape, then to closing quote.
+            s.push('\\');
+            cur.bump();
+            if let Some(esc) = cur.bump() {
+                s.push(esc);
+                if esc == 'u' && cur.peek() == Some('{') {
+                    while let Some(c) = cur.peek() {
+                        s.push(c);
+                        cur.bump();
+                        if c == '}' {
+                            break;
+                        }
+                    }
+                }
+            }
+            if cur.peek() == Some('\'') {
+                s.push('\'');
+                cur.bump();
+            }
+            (s, TokKind::Char)
+        }
+        Some(c) if is_ident_start(c) => {
+            if cur.peek_at(1) == Some('\'') {
+                // 'x' — single-character char literal.
+                s.push(c);
+                cur.bump();
+                s.push('\'');
+                cur.bump();
+                (s, TokKind::Char)
+            } else {
+                // 'lifetime — consume the identifier, no closing quote.
+                s.push_str(&ident(cur));
+                (s, TokKind::Lifetime)
+            }
+        }
+        Some(c) => {
+            // Punctuation char literal like '(' or '0'.
+            s.push(c);
+            cur.bump();
+            if cur.peek() == Some('\'') {
+                s.push('\'');
+                cur.bump();
+            }
+            (s, TokKind::Char)
+        }
+        None => (s, TokKind::Char),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        tokenize(src)
+            .into_iter()
+            .map(|t| (t.kind, t.text))
+            .collect()
+    }
+
+    #[test]
+    fn idents_puncts_and_spans() {
+        let toks = tokenize("let x = a::b;\nlet y = 2;");
+        assert_eq!(toks[0].text, "let");
+        assert_eq!((toks[0].line, toks[0].col), (1, 1));
+        let colons: Vec<&Token> = toks.iter().filter(|t| t.text == ":").collect();
+        assert_eq!(colons.len(), 2, "`::` lexes as two ':' puncts");
+        let second_let = toks.iter().filter(|t| t.text == "let").nth(1).unwrap();
+        assert_eq!((second_let.line, second_let.col), (2, 1));
+    }
+
+    #[test]
+    fn comments_are_tokens_with_text() {
+        let toks = kinds("a // trailing note\n/* block */ b");
+        assert_eq!(
+            toks[1],
+            (TokKind::Comment, "// trailing note".to_string())
+        );
+        assert_eq!(toks[2], (TokKind::Comment, "/* block */".to_string()));
+        assert_eq!(toks[3], (TokKind::Ident, "b".to_string()));
+    }
+
+    #[test]
+    fn nested_block_comment() {
+        let toks = kinds("/* outer /* inner */ tail */ x");
+        assert_eq!(toks.len(), 2);
+        assert_eq!(toks[0].0, TokKind::Comment);
+        assert_eq!(toks[1], (TokKind::Ident, "x".to_string()));
+    }
+
+    #[test]
+    fn string_forms_swallow_contents() {
+        // Identifier-looking text inside every string form must not
+        // produce Ident tokens (rules would otherwise match inside
+        // fixture snippets and documentation strings).
+        for src in [
+            "let s = \"fs::write inside\";",
+            "let s = r\"fs::write inside\";",
+            "let s = r#\"fs::write \" inside\"#;",
+            "let s = b\"fs::write inside\";",
+            "let s = \"esc \\\" fs::write\";",
+        ] {
+            let idents: Vec<String> = tokenize(src)
+                .into_iter()
+                .filter(|t| t.kind == TokKind::Ident)
+                .map(|t| t.text)
+                .collect();
+            assert_eq!(idents, vec!["let", "s"], "src: {src}");
+        }
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let toks = kinds("fn f<'a>(x: &'a u8) { let c = 'x'; let n = '\\n'; }");
+        let lifetimes: Vec<&(TokKind, String)> =
+            toks.iter().filter(|t| t.0 == TokKind::Lifetime).collect();
+        assert_eq!(lifetimes.len(), 2);
+        assert!(lifetimes.iter().all(|t| t.1 == "'a"));
+        let chars: Vec<&(TokKind, String)> =
+            toks.iter().filter(|t| t.0 == TokKind::Char).collect();
+        assert_eq!(chars.len(), 2);
+    }
+
+    #[test]
+    fn byte_char_and_unicode_escape() {
+        let toks = kinds("m(b'{')?; let u = '\\u{1F600}';");
+        assert!(toks.iter().any(|t| t.0 == TokKind::Char && t.1 == "b'{'"));
+        assert!(toks
+            .iter()
+            .any(|t| t.0 == TokKind::Char && t.1 == "'\\u{1F600}'"));
+    }
+
+    #[test]
+    fn numbers_and_ranges() {
+        let toks = kinds("0..n 1.5 0xFF 1_000 idx.0");
+        assert_eq!(toks[0], (TokKind::Num, "0".to_string()));
+        assert_eq!(toks[1], (TokKind::Punct, ".".to_string()));
+        assert_eq!(toks[2], (TokKind::Punct, ".".to_string()));
+        assert_eq!(toks[3], (TokKind::Ident, "n".to_string()));
+        assert_eq!(toks[4], (TokKind::Num, "1.5".to_string()));
+        assert_eq!(toks[5], (TokKind::Num, "0xFF".to_string()));
+        assert_eq!(toks[6], (TokKind::Num, "1_000".to_string()));
+        assert_eq!(toks[7], (TokKind::Ident, "idx".to_string()));
+        assert_eq!(toks[8], (TokKind::Punct, ".".to_string()));
+        assert_eq!(toks[9], (TokKind::Num, "0".to_string()));
+    }
+
+    #[test]
+    fn multiline_string_keeps_line_numbers() {
+        let toks = tokenize("let s = \"one\ntwo\";\nlet t = 1;");
+        let t_tok = toks.iter().find(|t| t.text == "t").unwrap();
+        assert_eq!(t_tok.line, 3, "line count continues through the string");
+    }
+}

@@ -1,0 +1,562 @@
+//! Rule-based static analysis over the repo's own source (`tunetuner
+//! lint`): the determinism, persistence, and panic-discipline contracts
+//! PRs 1–9 established by convention, codified as checkable rules and
+//! gated in CI.
+//!
+//! The engine is a span-accurate token walk ([`lexer`]) — `syn` is not
+//! vendored, and the rules only need token patterns, not types. Each
+//! file is tokenized once; [`test_mask`] marks `#[test]`/`#[cfg(test)]`
+//! regions (exempt from every rule but W00), [`rules::check`] produces
+//! raw diagnostics, and inline allow directives ([`allow`]) suppress
+//! individual sites with a mandatory written justification. Malformed
+//! directives are themselves reported as rule `W00` and can never be
+//! suppressed or un-denied.
+//!
+//! Entry points: [`lint_source`] for one in-memory file (what the
+//! fixture tests drive) and [`lint_tree`] for a directory walk (what
+//! the CLI and the `repo_is_lint_clean` golden test drive). Rendering
+//! and the versioned `tunetuner-lint` JSON envelope live in [`report`].
+
+pub mod allow;
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+use crate::error::Result;
+use lexer::{TokKind, Token};
+use std::path::Path;
+
+pub use rules::RuleId;
+
+/// One finding: a rule violation at an exact source location.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub rule: RuleId,
+    /// `/`-normalized path as given to the engine.
+    pub path: String,
+    pub line: u32,
+    pub col: u32,
+    pub message: String,
+}
+
+/// Lint result for a single file.
+#[derive(Debug, Default)]
+pub struct FileLint {
+    /// Violations that survived suppression, in (line, col) order.
+    pub diagnostics: Vec<Diagnostic>,
+    /// Violations silenced by a well-formed allow directive.
+    pub suppressed: usize,
+    /// Well-formed allow directives seen in the file.
+    pub allows: usize,
+}
+
+/// Aggregated lint result for a directory tree.
+#[derive(Debug)]
+pub struct LintReport {
+    /// Root the walk started from, as given.
+    pub root: String,
+    /// Number of `.rs` files scanned.
+    pub files: usize,
+    pub diagnostics: Vec<Diagnostic>,
+    pub suppressed: usize,
+    pub allows: usize,
+}
+
+/// Which rules fail the run (vs merely report). Parsed from `--deny`:
+/// `all`, `none`, or a comma list like `W01,W03`. `W00` is always
+/// denied regardless of the spec — a malformed suppression must never
+/// pass silently.
+#[derive(Clone, Debug)]
+pub struct DenySet {
+    all: bool,
+    rules: Vec<RuleId>,
+}
+
+impl DenySet {
+    pub fn parse(spec: &str) -> Result<DenySet> {
+        let spec = spec.trim();
+        match spec {
+            "all" => {
+                return Ok(DenySet {
+                    all: true,
+                    rules: Vec::new(),
+                })
+            }
+            "none" => {
+                return Ok(DenySet {
+                    all: false,
+                    rules: Vec::new(),
+                })
+            }
+            _ => {}
+        }
+        let mut rules = Vec::new();
+        for part in spec.split(',') {
+            match RuleId::parse(part) {
+                Some(id) => rules.push(id),
+                None => crate::bail!(
+                    "--deny expects `all`, `none`, or a comma list of W01..W05; got {part:?}"
+                ),
+            }
+        }
+        Ok(DenySet { all: false, rules })
+    }
+
+    /// Does a diagnostic with this rule fail the run?
+    pub fn denies(&self, rule: RuleId) -> bool {
+        rule == RuleId::W00 || self.all || self.rules.contains(&rule)
+    }
+}
+
+/// Mark every token inside test code: an item annotated `#[test]` /
+/// `#[cfg(test)]` (any attribute whose idents include `test` but not
+/// `not`, so `#[cfg(not(test))]` items stay live code), through the
+/// item's closing brace (or terminating `;`). An inner `#![cfg(test)]`
+/// marks the whole file.
+pub fn test_mask(tokens: &[Token]) -> Vec<bool> {
+    let mut mask = vec![false; tokens.len()];
+    let is_punct = |i: usize, c: char| {
+        tokens
+            .get(i)
+            .map(|t| t.kind == TokKind::Punct && t.text.chars().next() == Some(c))
+            .unwrap_or(false)
+    };
+    let mut i = 0usize;
+    while i < tokens.len() {
+        if !is_punct(i, '#') {
+            i += 1;
+            continue;
+        }
+        let attr_start = i;
+        let mut j = i + 1;
+        let inner = is_punct(j, '!');
+        if inner {
+            j += 1;
+        }
+        if !is_punct(j, '[') {
+            i += 1;
+            continue;
+        }
+        // Scan to the matching `]`, noting the idents inside.
+        let mut depth = 0usize;
+        let mut has_test = false;
+        let mut has_not = false;
+        let mut k = j;
+        while k < tokens.len() {
+            let t = &tokens[k];
+            if t.kind == TokKind::Punct {
+                match t.text.chars().next() {
+                    Some('[') => depth += 1,
+                    Some(']') => {
+                        depth = depth.saturating_sub(1);
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+            } else if t.kind == TokKind::Ident {
+                if t.text == "test" {
+                    has_test = true;
+                } else if t.text == "not" {
+                    has_not = true;
+                }
+            }
+            k += 1;
+        }
+        if !(has_test && !has_not) {
+            i = k + 1;
+            continue;
+        }
+        if inner {
+            for m in mask.iter_mut() {
+                *m = true;
+            }
+            return mask;
+        }
+        // Skip any further attributes between this one and the item.
+        let mut p = k + 1;
+        while is_punct(p, '#') && is_punct(p + 1, '[') {
+            let mut d = 0usize;
+            let mut q = p + 1;
+            while q < tokens.len() {
+                if is_punct(q, '[') {
+                    d += 1;
+                } else if is_punct(q, ']') {
+                    d = d.saturating_sub(1);
+                    if d == 0 {
+                        break;
+                    }
+                }
+                q += 1;
+            }
+            p = q + 1;
+        }
+        // The item runs to its matching close brace, or to a `;` for
+        // brace-less items (`#[cfg(test)] use ...;`, `mod tests;`).
+        let mut end = tokens.len().saturating_sub(1);
+        let mut q = p;
+        while q < tokens.len() {
+            if is_punct(q, ';') {
+                end = q;
+                break;
+            }
+            if is_punct(q, '{') {
+                let mut d = 0usize;
+                let mut r = q;
+                end = tokens.len().saturating_sub(1);
+                while r < tokens.len() {
+                    if is_punct(r, '{') {
+                        d += 1;
+                    } else if is_punct(r, '}') {
+                        d = d.saturating_sub(1);
+                        if d == 0 {
+                            end = r;
+                            break;
+                        }
+                    }
+                    r += 1;
+                }
+                break;
+            }
+            q += 1;
+        }
+        for m in mask.iter_mut().take(end + 1).skip(attr_start) {
+            *m = true;
+        }
+        i = end + 1;
+    }
+    mask
+}
+
+/// Lint one file's source. `rel_path` is used for diagnostics and for
+/// the per-module whitelists (suffix-matched, `/`-normalized).
+pub fn lint_source(rel_path: &str, source: &str) -> FileLint {
+    let tokens = lexer::tokenize(source);
+    let mask = test_mask(&tokens);
+    let mut diags = rules::check(rel_path, &tokens, &mask);
+    let path_norm = rel_path.replace('\\', "/");
+
+    // Collect directives; malformed ones become W00 diagnostics.
+    let mut covers: Vec<(Vec<RuleId>, [u32; 3])> = Vec::new();
+    for t in &tokens {
+        if t.kind != TokKind::Comment {
+            continue;
+        }
+        match allow::parse_comment(&t.text, t.line, t.col) {
+            None => {}
+            Some(Ok(d)) => {
+                let end = d.line + t.text.matches('\n').count() as u32;
+                covers.push((d.rules, [d.line, end, 0]));
+            }
+            Some(Err(b)) => diags.push(Diagnostic {
+                rule: RuleId::W00,
+                path: path_norm.clone(),
+                line: b.line,
+                col: b.col,
+                message: b.message,
+            }),
+        }
+    }
+    let allows = covers.len();
+
+    // A directive covers its own line(s) plus the next line holding
+    // code — so both trailing-comment and comment-above placement work.
+    let mut suppressed = 0usize;
+    if !covers.is_empty() {
+        let code_lines: Vec<u32> = tokens
+            .iter()
+            .filter(|t| t.kind != TokKind::Comment)
+            .map(|t| t.line)
+            .collect();
+        for (_, lines) in covers.iter_mut() {
+            let end = lines[1];
+            lines[2] = code_lines
+                .iter()
+                .copied()
+                .filter(|&l| l > end)
+                .min()
+                .unwrap_or(0);
+        }
+        diags.retain(|d| {
+            if d.rule == RuleId::W00 {
+                return true;
+            }
+            let hit = covers
+                .iter()
+                .any(|(rules, lines)| rules.contains(&d.rule) && lines.contains(&d.line));
+            if hit {
+                suppressed += 1;
+            }
+            !hit
+        });
+    }
+
+    diags.sort_by_key(|d| (d.line, d.col, d.rule));
+    FileLint {
+        diagnostics: diags,
+        suppressed,
+        allows,
+    }
+}
+
+/// Recursively collect `.rs` files under `dir`, sorted by path so the
+/// report (and the envelope) is deterministic.
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> Result<()> {
+    let mut entries = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        entries.push(entry?.path());
+    }
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `root` (the CLI default is `rust/src`).
+pub fn lint_tree(root: &Path) -> Result<LintReport> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    let mut report = LintReport {
+        root: root.to_string_lossy().replace('\\', "/"),
+        files: files.len(),
+        diagnostics: Vec::new(),
+        suppressed: 0,
+        allows: 0,
+    };
+    for f in &files {
+        let source = std::fs::read_to_string(f)?;
+        let rel = f.to_string_lossy().replace('\\', "/");
+        let fl = lint_source(&rel, &source);
+        report.diagnostics.extend(fl.diagnostics);
+        report.suppressed += fl.suppressed;
+        report.allows += fl.allows;
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fired(src: &str) -> Vec<RuleId> {
+        lint_source("x/sample.rs", src)
+            .diagnostics
+            .iter()
+            .map(|d| d.rule)
+            .collect()
+    }
+
+    // ---- W01: nondeterminism ----------------------------------------
+
+    #[test]
+    fn w01_fires_on_wallclock() {
+        let src = "fn f() -> u64 { let t = std::time::Instant::now(); 0 }";
+        assert_eq!(fired(src), vec![RuleId::W01]);
+        let src = "fn f() { let t = SystemTime::now(); }";
+        assert_eq!(fired(src), vec![RuleId::W01]);
+    }
+
+    #[test]
+    fn w01_silent_on_corrected_and_whitelisted() {
+        assert!(fired("fn f(start_ns: u64) -> u64 { start_ns }").is_empty());
+        let src = "fn f() { let t = Instant::now(); }";
+        let fl = lint_source("rust/src/util/log.rs", src);
+        assert!(fl.diagnostics.is_empty(), "timing module is whitelisted");
+    }
+
+    #[test]
+    fn w01_fires_on_std_hashmap() {
+        let src = "use std::collections::HashMap;\nfn f(m: &HashMap<u32, u32>) {}";
+        assert_eq!(fired(src), vec![RuleId::W01, RuleId::W01]);
+    }
+
+    #[test]
+    fn w01_silent_on_fastmap_and_in_hash_module() {
+        let src = "use crate::util::hash::FastMap;\nfn f(m: &FastMap<u32, u32>) {}";
+        assert!(fired(src).is_empty());
+        let src = "use std::collections::HashMap;";
+        let fl = lint_source("rust/src/util/hash.rs", src);
+        assert!(fl.diagnostics.is_empty(), "hash wrapper is whitelisted");
+    }
+
+    // ---- W02: persistence -------------------------------------------
+
+    #[test]
+    fn w02_fires_on_raw_writes() {
+        let src = "fn save(p: &Path) { std::fs::write(p, b\"x\").ok(); }";
+        assert_eq!(fired(src), vec![RuleId::W02]);
+        let src = "fn save(p: &Path) { let f = File::create(p); }";
+        assert_eq!(fired(src), vec![RuleId::W02]);
+        let src = "fn mv(a: &Path, b: &Path) { fs::rename(a, b).ok(); }";
+        assert_eq!(fired(src), vec![RuleId::W02]);
+    }
+
+    #[test]
+    fn w02_silent_on_atomic_write_and_in_fsio() {
+        let src = "fn save(p: &Path, b: &[u8]) -> Result<()> { atomic_write(p, b) }";
+        assert!(fired(src).is_empty());
+        let src = "fn stage(p: &Path) { std::fs::write(p, b\"x\").ok(); }";
+        let fl = lint_source("rust/src/util/fsio.rs", src);
+        assert!(fl.diagnostics.is_empty(), "fsio implements the discipline");
+    }
+
+    #[test]
+    fn w02_silent_in_test_code() {
+        let src = "#[cfg(test)]\nmod tests {\n fn f() { std::fs::write(\"t\", b\"x\").ok(); }\n}";
+        assert!(fired(src).is_empty());
+    }
+
+    // ---- W03: panic discipline --------------------------------------
+
+    #[test]
+    fn w03_fires_on_unwrap_expect_panic() {
+        assert_eq!(fired("fn f(o: Option<u8>) -> u8 { o.unwrap() }"), vec![RuleId::W03]);
+        let src = "fn f(o: Option<u8>) -> u8 { o.expect(\"present\") }";
+        assert_eq!(fired(src), vec![RuleId::W03]);
+        assert_eq!(fired("fn f() { panic!(\"boom\"); }"), vec![RuleId::W03]);
+        assert_eq!(fired("fn f() { todo!(); }"), vec![RuleId::W03]);
+    }
+
+    #[test]
+    fn w03_silent_on_typed_errors_and_idioms() {
+        let src = "fn f(o: Option<u8>) -> Result<u8> { o.context(\"missing\") }";
+        assert!(fired(src).is_empty());
+        // Mutex-poisoning propagation idiom: unwrap directly on lock().
+        assert!(fired("fn f(m: &Mutex<u8>) -> u8 { *m.lock().unwrap() }").is_empty());
+        let src = "fn f(p: Pool) -> u8 { p.inner.wait(g).unwrap().1 }";
+        assert!(fired(src).is_empty());
+        // A fallible user `expect` method propagated with `?`.
+        assert!(fired("fn f(&mut self) -> Result<()> { self.expect(b'{')?; Ok(()) }").is_empty());
+        // Invariant assertion stays allowed.
+        assert!(fired("fn f(x: u8) { if x > 2 { unreachable!() } }").is_empty());
+    }
+
+    #[test]
+    fn w03_silent_in_test_fn() {
+        let src = "#[test]\nfn t() { assert_eq!(parse(\"x\").unwrap(), 1); }";
+        assert!(fired(src).is_empty());
+    }
+
+    // ---- W04: float ordering ----------------------------------------
+
+    #[test]
+    fn w04_fires_on_partial_cmp() {
+        let src = "fn f(v: &mut [f64]) { v.sort_by(|a, b| a.partial_cmp(b).unwrap()); }";
+        let rules = fired(src);
+        assert!(rules.contains(&RuleId::W04), "{rules:?}");
+    }
+
+    #[test]
+    fn w04_silent_on_total_cmp() {
+        let src = "fn f(v: &mut [f64]) { v.sort_by(|a, b| a.total_cmp(b)); }";
+        assert!(fired(src).is_empty());
+    }
+
+    // ---- W05: RNG discipline ----------------------------------------
+
+    #[test]
+    fn w05_fires_on_foreign_rng_and_literal_seed() {
+        assert_eq!(fired("fn f() { let mut r = thread_rng(); }"), vec![RuleId::W05]);
+        assert_eq!(fired("fn f() { let r = Rng::new(42); }"), vec![RuleId::W05]);
+        let src = "fn f() { let r = Rng::new(0xDEAD_BEEF); }";
+        assert_eq!(fired(src), vec![RuleId::W05]);
+    }
+
+    #[test]
+    fn w05_silent_on_derived_seed_and_in_rng_module() {
+        assert!(fired("fn f(seed: u64) { let r = Rng::new(seed); }").is_empty());
+        let src = "fn f(s: u64) { let r = Rng::new(mix64(s, 7)); }";
+        assert!(fired(src).is_empty());
+        let fl = lint_source("rust/src/util/rng.rs", "fn f() { let r = Rng::new(1); }");
+        assert!(fl.diagnostics.is_empty(), "rng module is whitelisted");
+    }
+
+    // ---- allow directives -------------------------------------------
+
+    #[test]
+    fn allow_suppresses_next_code_line() {
+        let src = "fn f(o: Option<u8>) -> u8 {\n\
+                   // lint: allow(W03, reason = \"guarded by caller\")\n\
+                   o.unwrap()\n}";
+        let fl = lint_source("x/sample.rs", src);
+        assert!(fl.diagnostics.is_empty(), "{:?}", fl.diagnostics);
+        assert_eq!(fl.suppressed, 1);
+        assert_eq!(fl.allows, 1);
+    }
+
+    #[test]
+    fn allow_suppresses_trailing_comment_line() {
+        let src = "fn f(o: Option<u8>) -> u8 {\n\
+                   o.unwrap() // lint: allow(W03, reason = \"guarded\")\n}";
+        let fl = lint_source("x/sample.rs", src);
+        assert!(fl.diagnostics.is_empty(), "{:?}", fl.diagnostics);
+        assert_eq!(fl.suppressed, 1);
+    }
+
+    #[test]
+    fn allow_for_other_rule_does_not_suppress() {
+        let src = "fn f(o: Option<u8>) -> u8 {\n\
+                   // lint: allow(W01, reason = \"wrong rule\")\n\
+                   o.unwrap()\n}";
+        let fl = lint_source("x/sample.rs", src);
+        assert_eq!(fl.diagnostics.len(), 1);
+        assert_eq!(fl.diagnostics[0].rule, RuleId::W03);
+        assert_eq!(fl.suppressed, 0);
+    }
+
+    #[test]
+    fn malformed_allow_reports_w00() {
+        let src = "fn f(o: Option<u8>) -> u8 {\n\
+                   // lint: allow(W03)\n\
+                   o.unwrap()\n}";
+        let fl = lint_source("x/sample.rs", src);
+        let rules: Vec<RuleId> = fl.diagnostics.iter().map(|d| d.rule).collect();
+        assert!(rules.contains(&RuleId::W00), "{rules:?}");
+        assert!(rules.contains(&RuleId::W03), "broken directive must not suppress");
+    }
+
+    // ---- deny set ----------------------------------------------------
+
+    #[test]
+    fn deny_set_parsing_and_membership() {
+        let all = DenySet::parse("all").unwrap();
+        assert!(all.denies(RuleId::W03) && all.denies(RuleId::W00));
+        let none = DenySet::parse("none").unwrap();
+        assert!(!none.denies(RuleId::W03));
+        assert!(none.denies(RuleId::W00), "W00 is always denied");
+        let some = DenySet::parse("W01,W04").unwrap();
+        assert!(some.denies(RuleId::W04) && !some.denies(RuleId::W03));
+        assert!(DenySet::parse("bogus").is_err());
+    }
+
+    // ---- spans and test-mask edges ----------------------------------
+
+    #[test]
+    fn diagnostics_carry_exact_spans() {
+        let src = "fn f(o: Option<u8>) -> u8 {\n    o.unwrap()\n}";
+        let fl = lint_source("x/sample.rs", src);
+        assert_eq!(fl.diagnostics.len(), 1);
+        let d = &fl.diagnostics[0];
+        assert_eq!((d.line, d.col), (2, 7), "points at the `unwrap` ident");
+        assert_eq!(d.path, "x/sample.rs");
+    }
+
+    #[test]
+    fn cfg_not_test_is_still_live_code() {
+        let src = "#[cfg(not(test))]\nfn f(o: Option<u8>) -> u8 { o.unwrap() }";
+        assert_eq!(fired(src), vec![RuleId::W03]);
+    }
+
+    #[test]
+    fn code_after_test_region_is_live_again() {
+        let src = "#[test]\nfn t() { x.unwrap(); }\n\
+                   fn live(o: Option<u8>) -> u8 { o.unwrap() }";
+        assert_eq!(fired(src), vec![RuleId::W03]);
+    }
+}

@@ -1,0 +1,159 @@
+//! Lint output: human-readable text and the versioned `tunetuner-lint`
+//! JSON envelope (schema + per-rule counts + diagnostics), persisted
+//! through [`crate::util::fsio::atomic_write`] like every other
+//! artifact the tuner writes.
+
+use super::rules::RuleId;
+use super::LintReport;
+use crate::error::Result;
+use crate::util::fsio;
+use crate::util::json::Json;
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Envelope schema tag.
+pub const LINT_SCHEMA: &str = "tunetuner-lint";
+/// Envelope schema version (bump on breaking shape changes).
+pub const LINT_SCHEMA_VERSION: u32 = 1;
+
+/// Per-rule violation counts over the surviving diagnostics, in rule
+/// order (so tables and envelopes are stable).
+pub fn rule_counts(report: &LintReport) -> Vec<(RuleId, usize)> {
+    RuleId::all()
+        .iter()
+        .map(|&id| {
+            let n = report.diagnostics.iter().filter(|d| d.rule == id).count();
+            (id, n)
+        })
+        .collect()
+}
+
+/// Human-readable report: one `path:line:col: RULE: message` line per
+/// diagnostic (clickable in most terminals/editors), then a summary.
+pub fn render_text(report: &LintReport) -> String {
+    let mut out = String::new();
+    for d in &report.diagnostics {
+        let _ = writeln!(
+            out,
+            "{}:{}:{}: {}: {}",
+            d.path,
+            d.line,
+            d.col,
+            d.rule.as_str(),
+            d.message
+        );
+    }
+    if !report.diagnostics.is_empty() {
+        out.push('\n');
+        for (id, n) in rule_counts(report) {
+            if n > 0 {
+                let _ = writeln!(out, "  {} x{:<4} {}", id.as_str(), n, id.summary());
+            }
+        }
+    }
+    let _ = writeln!(
+        out,
+        "{} file(s) checked: {} violation(s), {} suppressed by {} lint allow(s)",
+        report.files,
+        report.diagnostics.len(),
+        report.suppressed,
+        report.allows
+    );
+    out
+}
+
+/// The `tunetuner-lint` envelope.
+pub fn to_json(report: &LintReport) -> Json {
+    let mut counts = Json::obj();
+    for (id, n) in rule_counts(report) {
+        counts.set(id.as_str(), Json::Num(n as f64));
+    }
+    let diags: Vec<Json> = report
+        .diagnostics
+        .iter()
+        .map(|d| {
+            let mut j = Json::obj();
+            j.set("rule", Json::Str(d.rule.as_str().to_string()))
+                .set("path", Json::Str(d.path.clone()))
+                .set("line", Json::Num(d.line as f64))
+                .set("col", Json::Num(d.col as f64))
+                .set("message", Json::Str(d.message.clone()));
+            j
+        })
+        .collect();
+    let mut j = Json::obj();
+    j.set("schema", Json::Str(LINT_SCHEMA.to_string()))
+        .set("schema_version", Json::Num(LINT_SCHEMA_VERSION as f64))
+        .set("root", Json::Str(report.root.clone()))
+        .set("files", Json::Num(report.files as f64))
+        .set("violations", Json::Num(report.diagnostics.len() as f64))
+        .set("suppressed", Json::Num(report.suppressed as f64))
+        .set("allows", Json::Num(report.allows as f64))
+        .set("counts", counts)
+        .set("diagnostics", Json::Arr(diags));
+    j
+}
+
+/// Persist the envelope crash-safely (staged temp + rename).
+pub fn save(report: &LintReport, path: &Path) -> Result<()> {
+    let mut body = to_json(report).to_pretty();
+    body.push('\n');
+    fsio::atomic_write(path, body.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lint_source;
+
+    fn sample_report() -> LintReport {
+        let src = "fn f(o: Option<u8>) -> u8 {\n    o.unwrap()\n}";
+        let fl = lint_source("x/sample.rs", src);
+        LintReport {
+            root: "x".to_string(),
+            files: 1,
+            diagnostics: fl.diagnostics,
+            suppressed: fl.suppressed,
+            allows: fl.allows,
+        }
+    }
+
+    #[test]
+    fn text_has_span_and_summary() {
+        let text = render_text(&sample_report());
+        assert!(text.contains("x/sample.rs:2:7: W03:"), "{text}");
+        assert!(text.contains("1 violation(s)"), "{text}");
+    }
+
+    #[test]
+    fn envelope_shape() {
+        let j = to_json(&sample_report());
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some(LINT_SCHEMA));
+        assert_eq!(j.get("schema_version").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(j.get("violations").and_then(Json::as_f64), Some(1.0));
+        let w03 = j.at(&["counts", "W03"]).and_then(Json::as_f64);
+        assert_eq!(w03, Some(1.0));
+        let rule = j.at(&["diagnostics", "0", "rule"]).and_then(Json::as_str);
+        assert_eq!(rule, Some("W03"));
+        let line = j.at(&["diagnostics", "0", "line"]).and_then(Json::as_f64);
+        assert_eq!(line, Some(2.0));
+    }
+
+    #[test]
+    fn envelope_roundtrips_through_parser() {
+        let body = to_json(&sample_report()).to_pretty();
+        let parsed = crate::util::json::parse(&body).expect("valid json");
+        assert_eq!(parsed, to_json(&sample_report()));
+    }
+
+    #[test]
+    fn save_writes_atomically() {
+        let dir = std::env::temp_dir().join(format!("tunetuner_lint_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("lint_report.json");
+        save(&sample_report(), &path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.contains("tunetuner-lint"));
+        std::fs::remove_file(&path).ok();
+    }
+}

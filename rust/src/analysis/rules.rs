@@ -1,0 +1,395 @@
+//! The invariant rules W01–W05 (plus W00, the meta-rule for malformed
+//! suppressions). Each rule codifies a contract an earlier PR
+//! established by convention; see the README "Static analysis &
+//! invariants" section for the full rationale per rule.
+//!
+//! Rules run over the comment-stripped token stream of one file.
+//! Tokens inside test code (`#[test]` / `#[cfg(test)]` regions, as
+//! computed by [`super::test_mask`]) are exempt from every rule except
+//! W00 — tests may panic, write scratch files, and time things.
+
+use super::lexer::{TokKind, Token};
+use super::Diagnostic;
+
+/// Rule identifiers. `W00` is the meta-rule (a malformed allow
+/// directive); it can never itself be allowed and is always denied.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum RuleId {
+    W00,
+    W01,
+    W02,
+    W03,
+    W04,
+    W05,
+}
+
+impl RuleId {
+    /// Parse a rule id as written in allow directives and `--deny`.
+    /// `W00` is deliberately not parseable: the suppression grammar
+    /// itself cannot be suppressed.
+    pub fn parse(s: &str) -> Option<RuleId> {
+        match s.trim() {
+            "W01" | "w01" => Some(RuleId::W01),
+            "W02" | "w02" => Some(RuleId::W02),
+            "W03" | "w03" => Some(RuleId::W03),
+            "W04" | "w04" => Some(RuleId::W04),
+            "W05" | "w05" => Some(RuleId::W05),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RuleId::W00 => "W00",
+            RuleId::W01 => "W01",
+            RuleId::W02 => "W02",
+            RuleId::W03 => "W03",
+            RuleId::W04 => "W04",
+            RuleId::W05 => "W05",
+        }
+    }
+
+    /// One-line summary, used by the text report and the JSON envelope.
+    pub fn summary(&self) -> &'static str {
+        match self {
+            RuleId::W00 => "malformed `lint: allow` directive",
+            RuleId::W01 => "nondeterminism (wallclock time, unordered std collections)",
+            RuleId::W02 => "persistence outside util::fsio::atomic_write",
+            RuleId::W03 => "panic in library code (unwrap/expect/panic!)",
+            RuleId::W04 => "float ordering via partial_cmp instead of total_cmp",
+            RuleId::W05 => "RNG construction outside util::rng seed derivation",
+        }
+    }
+
+    /// Every reportable rule, in id order (for stable count tables).
+    pub fn all() -> [RuleId; 6] {
+        [
+            RuleId::W00,
+            RuleId::W01,
+            RuleId::W02,
+            RuleId::W03,
+            RuleId::W04,
+            RuleId::W05,
+        ]
+    }
+}
+
+/// Does `path` (any prefix, `/`-normalized) denote the module `tail`,
+/// e.g. `in_module("rust/src/util/fsio.rs", "util/fsio.rs")`?
+fn in_module(path: &str, tail: &str) -> bool {
+    path == tail || path.ends_with(&format!("/{tail}"))
+}
+
+/// A code token (comments stripped) plus its test-region flag.
+struct Code<'a> {
+    toks: Vec<&'a Token>,
+    in_test: Vec<bool>,
+}
+
+impl<'a> Code<'a> {
+    fn id(&self, i: usize, name: &str) -> bool {
+        self.toks
+            .get(i)
+            .map(|t| t.kind == TokKind::Ident && t.text == name)
+            .unwrap_or(false)
+    }
+
+    fn id_in(&self, i: usize, names: &[&str]) -> bool {
+        self.toks
+            .get(i)
+            .map(|t| t.kind == TokKind::Ident && names.contains(&t.text.as_str()))
+            .unwrap_or(false)
+    }
+
+    fn punct(&self, i: usize, c: char) -> bool {
+        self.toks
+            .get(i)
+            .map(|t| t.kind == TokKind::Punct && t.text.chars().next() == Some(c))
+            .unwrap_or(false)
+    }
+
+    /// Index of the `)` matching the `(` at `open`, if any.
+    fn close_paren(&self, open: usize) -> Option<usize> {
+        let mut depth = 0usize;
+        for (off, t) in self.toks.iter().enumerate().skip(open) {
+            if t.kind != TokKind::Punct {
+                continue;
+            }
+            match t.text.chars().next() {
+                Some('(') => depth += 1,
+                Some(')') => {
+                    depth = depth.saturating_sub(1);
+                    if depth == 0 {
+                        return Some(off);
+                    }
+                }
+                _ => {}
+            }
+        }
+        None
+    }
+
+    /// Index of the `(` matching the `)` at `close`, if any.
+    fn open_paren(&self, close: usize) -> Option<usize> {
+        let mut depth = 0usize;
+        for off in (0..=close).rev() {
+            let t = self.toks[off];
+            if t.kind != TokKind::Punct {
+                continue;
+            }
+            match t.text.chars().next() {
+                Some(')') => depth += 1,
+                Some('(') => {
+                    depth = depth.saturating_sub(1);
+                    if depth == 0 {
+                        return Some(off);
+                    }
+                }
+                _ => {}
+            }
+        }
+        None
+    }
+}
+
+/// Run every rule over one file's token stream. `in_test[i]` marks
+/// `tokens[i]` as inside test code; `rel_path` selects the per-module
+/// whitelists (`util/log.rs` for W01 timing, `util/hash.rs` for the
+/// deterministic-hasher wrapper, `util/fsio.rs` for W02, `util/rng.rs`
+/// for W05).
+pub fn check(rel_path: &str, tokens: &[Token], in_test: &[bool]) -> Vec<Diagnostic> {
+    let path = rel_path.replace('\\', "/");
+    let mut code = Code {
+        toks: Vec::new(),
+        in_test: Vec::new(),
+    };
+    for (i, t) in tokens.iter().enumerate() {
+        if t.kind != TokKind::Comment {
+            code.toks.push(t);
+            code.in_test.push(in_test.get(i).copied().unwrap_or(false));
+        }
+    }
+
+    let mut out = Vec::new();
+    let mut diag = |rule: RuleId, t: &Token, message: String| {
+        out.push(Diagnostic {
+            rule,
+            path: path.clone(),
+            line: t.line,
+            col: t.col,
+            message,
+        });
+    };
+
+    let timing_module = in_module(&path, "util/log.rs");
+    let hash_module = in_module(&path, "util/hash.rs");
+    let fsio_module = in_module(&path, "util/fsio.rs");
+    let rng_module = in_module(&path, "util/rng.rs");
+
+    for i in 0..code.toks.len() {
+        if code.in_test[i] {
+            continue;
+        }
+        let t = code.toks[i];
+
+        // ---- W01: nondeterminism -------------------------------------
+        // Wallclock reads (`Instant::now` / `SystemTime::now`) outside
+        // the timing module make envelopes differ run to run.
+        if !timing_module
+            && code.id(i, "now")
+            && i >= 3
+            && code.punct(i - 1, ':')
+            && code.punct(i - 2, ':')
+            && code.id_in(i - 3, &["Instant", "SystemTime"])
+        {
+            let src = &code.toks[i - 3].text;
+            diag(
+                RuleId::W01,
+                code.toks[i - 3],
+                format!(
+                    "wallclock read `{src}::now()`; keep timing in util::log \
+                     or justify with a lint allow"
+                ),
+            );
+        }
+        // Unordered std collections: iteration order is nondeterministic
+        // across runs, which poisons anything serialized from it. The
+        // repo-wide replacements are FastMap/FastSet (deterministic
+        // FxHasher, util::hash) or BTreeMap for sorted envelopes.
+        if !hash_module && code.id_in(i, &["HashMap", "HashSet"]) {
+            let name = &t.text;
+            diag(
+                RuleId::W01,
+                t,
+                format!(
+                    "std {name} has nondeterministic iteration order; \
+                     use util::hash::FastMap/FastSet or BTreeMap"
+                ),
+            );
+        }
+
+        // ---- W02: persistence ----------------------------------------
+        // Raw writes bypass the staged-temp-plus-rename discipline; a
+        // crash mid-write leaves a torn artifact the resume path then
+        // trusts. All persistence funnels through util::fsio.
+        if !fsio_module
+            && code.id_in(i, &["write", "rename", "create"])
+            && i >= 3
+            && code.punct(i - 1, ':')
+            && code.punct(i - 2, ':')
+            && code.id_in(i - 3, &["fs", "File"])
+        {
+            let what = format!("{}::{}", code.toks[i - 3].text, t.text);
+            diag(
+                RuleId::W02,
+                t,
+                format!("raw `{what}` outside util::fsio; use util::fsio::atomic_write"),
+            );
+        }
+
+        // ---- W03: panic discipline -----------------------------------
+        // Library code returns TuneError; panics tear down worker
+        // threads and turn typed failures into WorkerPanic quarantines.
+        if code.id_in(i, &["panic", "todo", "unimplemented"]) && code.punct(i + 1, '!') {
+            diag(
+                RuleId::W03,
+                t,
+                format!("`{}!` in library code; return a TuneError instead", t.text),
+            );
+        }
+        if code.id(i, "unwrap")
+            && i >= 1
+            && code.punct(i - 1, '.')
+            && code.punct(i + 1, '(')
+            && code.punct(i + 2, ')')
+            && !unwrap_of_poison_chain(&code, i)
+        {
+            diag(
+                RuleId::W03,
+                t,
+                "`.unwrap()` in library code; return a TuneError \
+                 (or justify with a lint allow)"
+                    .to_string(),
+            );
+        }
+        if code.id(i, "expect")
+            && i >= 1
+            && code.punct(i - 1, '.')
+            && code.punct(i + 1, '(')
+            && !expect_is_fallible_method(&code, i)
+        {
+            diag(
+                RuleId::W03,
+                t,
+                "`.expect(..)` in library code; return a TuneError \
+                 (or justify with a lint allow)"
+                    .to_string(),
+            );
+        }
+
+        // ---- W04: float ordering -------------------------------------
+        // `partial_cmp(..).unwrap()` panics on NaN (the exact bug class
+        // PR 1 fixed); `f64::total_cmp` is total and panic-free.
+        if code.id(i, "partial_cmp") && !(i >= 1 && code.id(i - 1, "fn")) {
+            diag(
+                RuleId::W04,
+                t,
+                "float ordering via `partial_cmp` (panics or misorders on NaN); \
+                 use `f64::total_cmp`"
+                    .to_string(),
+            );
+        }
+
+        // ---- W05: RNG discipline -------------------------------------
+        // Replay and retry are bitwise only because every stream is
+        // derived from the campaign seed via util::rng (mix64/fork).
+        if !rng_module
+            && code.id_in(
+                i,
+                &[
+                    "thread_rng",
+                    "from_entropy",
+                    "OsRng",
+                    "StdRng",
+                    "SmallRng",
+                    "ThreadRng",
+                    "getrandom",
+                ],
+            )
+        {
+            diag(
+                RuleId::W05,
+                t,
+                format!(
+                    "foreign RNG `{}`; derive streams from the campaign seed \
+                     via util::rng (mix64/fork)",
+                    t.text
+                ),
+            );
+        }
+        if !rng_module
+            && code.id(i, "Rng")
+            && code.punct(i + 1, ':')
+            && code.punct(i + 2, ':')
+            && code.id(i + 3, "new")
+            && code.punct(i + 4, '(')
+            && rng_new_args_all_literal(&code, i + 4)
+        {
+            diag(
+                RuleId::W05,
+                t,
+                "`Rng::new` with a hard-coded seed in library code; derive the \
+                 seed from the campaign seed via mix64/fork"
+                    .to_string(),
+            );
+        }
+    }
+    out
+}
+
+/// `.unwrap()` directly on a `lock()`/`wait()`/`into_inner()` result is
+/// the repo's mutex-poisoning idiom: the only failure is a poisoned
+/// lock, i.e. another thread already panicked, and propagating that
+/// panic is the documented policy (PR 9's catch_unwind boundary turns
+/// it into a typed JobFailure). `unwrap_idx` points at the `unwrap`
+/// ident; the preceding chain must be `<recv>.{lock,wait,into_inner}(..)`.
+fn unwrap_of_poison_chain(code: &Code<'_>, unwrap_idx: usize) -> bool {
+    if unwrap_idx < 2 {
+        return false;
+    }
+    let close = unwrap_idx - 2;
+    if !code.punct(close, ')') {
+        return false;
+    }
+    let Some(open) = code.open_paren(close) else {
+        return false;
+    };
+    open >= 1 && code.id_in(open - 1, &["lock", "wait", "into_inner"])
+}
+
+/// `self.expect(b'{')?` — an `expect` *method* whose result is
+/// immediately propagated with `?` is a fallible user API (the JSON
+/// parser's token assertion), not `Option::expect`/`Result::expect`.
+/// `open_idx` points at the `(` after the `expect` ident.
+fn expect_is_fallible_method(code: &Code<'_>, expect_idx: usize) -> bool {
+    let Some(close) = code.close_paren(expect_idx + 1) else {
+        return false;
+    };
+    code.punct(close + 1, '?')
+}
+
+/// Are the arguments of the call whose `(` sits at `open_idx` composed
+/// solely of literals and punctuation (no identifiers)? Such a
+/// `Rng::new(12345)` is a hard-coded seed; `Rng::new(seed)` or
+/// `Rng::new(mix64(base, tag))` reference a derived value and pass.
+fn rng_new_args_all_literal(code: &Code<'_>, open_idx: usize) -> bool {
+    let Some(close) = code.close_paren(open_idx) else {
+        return false;
+    };
+    if close == open_idx + 1 {
+        return false; // no args at all — not a seed literal
+    }
+    code.toks[open_idx + 1..close]
+        .iter()
+        .all(|t| matches!(t.kind, TokKind::Num | TokKind::Punct))
+}

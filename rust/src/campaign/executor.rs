@@ -99,6 +99,7 @@ impl Executor {
                 std::thread::Builder::new()
                     .name(format!("tt-exec-{i}"))
                     .spawn(move || worker_loop(&shared))
+                    // lint: allow(W03, reason = "thread spawn failure at startup is unrecoverable")
                     .expect("spawn executor worker")
             })
             .collect();
@@ -167,6 +168,7 @@ impl Executor {
             }
         }
         if let Some(f) = first_failure {
+            // lint: allow(W03, reason = "re-raises a worker panic on the caller thread")
             panic!("executor job {} panicked: {}", f.job, f.message);
         }
         out
@@ -184,6 +186,7 @@ impl Executor {
         F: Fn(usize) -> T + Send + Sync + 'static,
     {
         if IN_EXECUTOR_JOB.with(|f| f.get()) {
+            // lint: allow(W03, reason = "documented contract: scatter must not be nested")
             panic!(
                 "Executor::scatter called from inside an executor job; nested \
                  scatter/Campaign::run would deadlock the pool — restructure so \

@@ -323,6 +323,7 @@ impl Campaign {
     /// Validate, scatter all (space, repeat) runs onto the executor,
     /// gather and score the traces, and assemble the result envelope.
     pub fn run(&self) -> Result<CampaignResult> {
+        // lint: allow(W01, reason = "elapsed-time telemetry; never feeds tuning decisions")
         let t0 = std::time::Instant::now();
         // Validate up front: algorithm + hyperparameters against the
         // registry schema (typed errors), spaces and repeats non-empty,
@@ -390,10 +391,12 @@ impl Campaign {
             job_observer.run_started(s, r);
             let fault = faults.as_ref().and_then(|p| p.job_fault(&algo, job));
             if fault == Some(FaultKind::Panic) {
+                // lint: allow(W03, reason = "deliberate injected fault (chaos tests)")
                 panic!("injected fault: panic ({algo} job {job})");
             }
             // Per-job optimizer instance (Optimizer is stateless across
             // runs, and create() is cheap).
+            // lint: allow(W03, reason = "algorithm validated before scatter")
             let opt = optimizers::create(&algo, &hp).expect("validated before scatter");
             let budget = budget.for_space(se);
             let mut rng = Rng::new(mix64(seed, mix64(s as u64, r as u64)));
@@ -428,8 +431,10 @@ impl Campaign {
                 }
                 Backend::Live { engine, seed } => {
                     let kernel = kernels::kernel_by_name(&se.cache.kernel)
+                        // lint: allow(W03, reason = "kernel name validated before scatter")
                         .expect("validated before scatter");
                     let device = device_by_name(&se.cache.device)
+                        // lint: allow(W03, reason = "device name validated before scatter")
                         .expect("validated before scatter");
                     let mut live = LiveRunner::new(
                         kernel,
@@ -508,6 +513,7 @@ impl Campaign {
         }
         let traces: Vec<Trace> = results
             .into_iter()
+            // lint: allow(W03, reason = "failures re-raised above; all results are Some")
             .map(|res| res.expect("failures handled above"))
             .collect();
 

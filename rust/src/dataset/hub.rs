@@ -25,7 +25,7 @@ use crate::runner::LiveRunner;
 use crate::runtime::Engine;
 use crate::util::json::Json;
 use crate::error::{Context, Result};
-use std::collections::HashMap;
+use crate::util::hash::FastMap;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
@@ -38,21 +38,21 @@ pub const HUB_KERNELS: [&str; 4] = ["dedispersion", "convolution", "hotspot", "g
 /// A handle to a hub directory.
 pub struct Hub {
     root: PathBuf,
-    memo: Mutex<HashMap<(String, String), Arc<CacheData>>>,
+    memo: Mutex<FastMap<(String, String), Arc<CacheData>>>,
     /// Per-kernel space fingerprints (None = unregistered kernel).
     /// Computing one builds the kernel's whole search space, so it is
     /// memoized per hub instead of per (kernel, device) load — a full
     /// hub scan would otherwise re-enumerate each kernel's space once
     /// per device on the exact startup path T4B exists to make cheap.
-    fp_memo: Mutex<HashMap<String, Option<String>>>,
+    fp_memo: Mutex<FastMap<String, Option<String>>>,
 }
 
 impl Hub {
     pub fn new<P: Into<PathBuf>>(root: P) -> Hub {
         Hub {
             root: root.into(),
-            memo: Mutex::new(HashMap::new()),
-            fp_memo: Mutex::new(HashMap::new()),
+            memo: Mutex::new(FastMap::default()),
+            fp_memo: Mutex::new(FastMap::default()),
         }
     }
 
@@ -400,7 +400,8 @@ mod tests {
 
         // Corrupt the JSON. A fresh hub handle (no memo) must still load,
         // byte-identically, from the sidecar alone.
-        std::fs::write(hub.cache_path("synthetic", "A100"), b"not gzip, not json").unwrap();
+        crate::util::fsio::atomic_write(&hub.cache_path("synthetic", "A100"), b"not gzip, not json")
+            .unwrap();
         let hub2 = Hub::new(&dir);
         let got = hub2.load("synthetic", "A100").unwrap();
         assert_eq!(got.records.len(), want.records.len());

@@ -323,10 +323,12 @@ impl<'a> Cursor<'a> {
     }
 
     fn u32(&mut self) -> Result<u32> {
+        // lint: allow(W03, reason = "bytes(4) yields exactly 4 bytes")
         Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
     }
 
     fn u64(&mut self) -> Result<u64> {
+        // lint: allow(W03, reason = "bytes(8) yields exactly 8 bytes")
         Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
     }
 
@@ -345,6 +347,7 @@ impl<'a> Cursor<'a> {
         let raw = self.bytes(8 * n)?;
         Ok(raw
             .chunks_exact(8)
+            // lint: allow(W03, reason = "chunks_exact(8) yields 8-byte slices")
             .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
             .collect())
     }

@@ -114,7 +114,9 @@ pub fn repeats(ctx: &Ctx) -> Result<()> {
 /// Noise-amplitude sensitivity: rebuild one space with different sigma and
 /// examine what the dataset looks like.
 pub fn noise(ctx: &Ctx) -> Result<()> {
-    let device = device_by_name("A100").unwrap();
+    let Some(device) = device_by_name("A100") else {
+        crate::bail!("noise ablation requires the A100 device model");
+    };
     let mut table = Table::new(
         "Ablation: measurement-noise amplitude (convolution @ A100)",
         &["Sigma", "Optimum (ms)", "Optimum idx", "Obs spread (p95/p5)", "GA score"],

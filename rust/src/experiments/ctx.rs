@@ -12,8 +12,8 @@ use crate::optimizers::{self, HyperParams};
 use crate::report::Report;
 use crate::runner::{Budget, Tuning};
 use crate::runtime::Engine;
+use crate::util::hash::FastMap;
 use crate::util::rng::Rng;
-use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 
@@ -68,8 +68,8 @@ pub struct Ctx {
     /// this context launches (the CLI wires `--inject-faults` /
     /// `TUNETUNER_FAULTS` here; batch runs keep `None`).
     faults: Option<Arc<crate::faults::FaultPlan>>,
-    spaces: Mutex<HashMap<String, Arc<Vec<SpaceEval>>>>,
-    hyper: Mutex<HashMap<String, Arc<exhaustive::HyperTuningResults>>>,
+    spaces: Mutex<FastMap<String, Arc<Vec<SpaceEval>>>>,
+    hyper: Mutex<FastMap<String, Arc<exhaustive::HyperTuningResults>>>,
 }
 
 impl Ctx {
@@ -91,8 +91,8 @@ impl Ctx {
             seed,
             observer: Arc::new(NullObserver),
             faults: None,
-            spaces: Mutex::new(HashMap::new()),
-            hyper: Mutex::new(HashMap::new()),
+            spaces: Mutex::new(FastMap::default()),
+            hyper: Mutex::new(FastMap::default()),
         }
     }
 
@@ -255,6 +255,7 @@ impl Ctx {
                 hp_space.len(),
                 self.scale.meta_evals
             );
+            // lint: allow(W01, reason = "elapsed-time telemetry; never feeds tuning decisions")
             let t0 = std::time::Instant::now();
             let mut runner = meta::MetaRunner::new(
                 algo,
@@ -442,7 +443,8 @@ mod tests {
         let absent = dir.join("absent.json.gz");
         assert!(load_if_current(&absent, &space, 5).unwrap().is_none());
         let truncated = dir.join("truncated.json");
-        std::fs::write(&truncated, "{\"schema\": \"tunetuner-hypertuning\", \"res").unwrap();
+        let body = b"{\"schema\": \"tunetuner-hypertuning\", \"res";
+        crate::util::fsio::atomic_write(&truncated, body).unwrap();
         assert!(load_if_current(&truncated, &space, 5).unwrap().is_none());
         std::fs::remove_dir_all(&dir).ok();
     }

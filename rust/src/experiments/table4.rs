@@ -18,7 +18,9 @@ pub fn run(ctx: &Ctx) -> Result<()> {
         let space = extended_space(algo)?;
         let best = space.named_values(results.best().config_idx);
         for (d, param) in space.params.iter().enumerate() {
+            // lint: allow(W03, reason = "param value grids are non-empty by construction")
             let first = param.values.first().unwrap().key();
+            // lint: allow(W03, reason = "param value grids are non-empty by construction")
             let last = param.values.last().unwrap().key();
             table.row(vec![
                 algo.to_string(),

@@ -78,6 +78,7 @@ impl HyperTuningResults {
         self.results
             .iter()
             .max_by(|a, b| Self::nan_last(a.score).total_cmp(&Self::nan_last(b.score)))
+            // lint: allow(W03, reason = "results are non-empty after a sweep")
             .expect("no results")
     }
 
@@ -88,6 +89,7 @@ impl HyperTuningResults {
         self.results
             .iter()
             .min_by(|a, b| key(a.score).total_cmp(&key(b.score)))
+            // lint: allow(W03, reason = "results are non-empty after a sweep")
             .expect("no results")
     }
 
@@ -116,6 +118,7 @@ impl HyperTuningResults {
                     .abs()
                     .total_cmp(&(b.score - mean).abs())
             })
+            // lint: allow(W03, reason = "results are non-empty after a sweep")
             .expect("no results")
     }
 
@@ -255,6 +258,7 @@ pub fn exhaustive_tuning_observed(
     seed: u64,
     observer: Arc<dyn Observer>,
 ) -> Result<HyperTuningResults> {
+    // lint: allow(W01, reason = "elapsed-time telemetry; never feeds tuning decisions")
     let t0 = std::time::Instant::now();
     // One campaign per configuration, all sharing the prepared spaces and
     // the persistent executor pool.

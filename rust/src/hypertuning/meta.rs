@@ -78,6 +78,7 @@ impl Runner for MetaRunner {
     }
 
     fn evaluate(&mut self, config_idx: usize) -> EvalResult {
+        // lint: allow(W01, reason = "elapsed-time telemetry; never feeds tuning decisions")
         let t0 = std::time::Instant::now();
         let hp = HyperParams::from_space_config(&self.hp_space, config_idx);
         let result = self.campaign.with_hyperparams(&hp).run();

@@ -679,6 +679,7 @@ pub fn metasweep_registry_checkpointed(
                 .zip(train)
                 .all(|(pt, se)| pt.space_fingerprint == se.space.fingerprint())
     });
+    // lint: allow(W01, reason = "elapsed-time telemetry; never feeds tuning decisions")
     let t0 = std::time::Instant::now();
     let train_arc: Arc<Vec<SpaceEval>> = Arc::new(train.to_vec());
     observer.meta_sweep_started(descs.len(), repeats);
@@ -721,6 +722,7 @@ pub fn metasweep_registry_checkpointed(
             }
         };
     for desc in &descs {
+        // lint: allow(W01, reason = "elapsed-time telemetry; never feeds tuning decisions")
         let st0 = std::time::Instant::now();
         let mut legs = Vec::new();
         // (target, leg args) pairs this strategy will run, in leg order.
@@ -899,6 +901,7 @@ fn run_leg(
         observer.meta_leg_finished(desc.name, target, leg.best_score, leg.spent_cost, leg.evals);
         return Ok(leg);
     }
+    // lint: allow(W01, reason = "elapsed-time telemetry; never feeds tuning decisions")
     let lt0 = std::time::Instant::now();
     let mut mc = MetaCampaign::new(
         algo,
@@ -1752,7 +1755,8 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         assert!(MetaSweepResult::load_tolerant(&dir.join("absent.json")).is_none());
         let garbled = dir.join("garbled.json");
-        std::fs::write(&garbled, "{\"schema\": \"tunetuner-metasweep\", \"strateg").unwrap();
+        let body = b"{\"schema\": \"tunetuner-metasweep\", \"strateg";
+        crate::util::fsio::atomic_write(&garbled, body).unwrap();
         assert!(MetaSweepResult::load_tolerant(&garbled).is_none());
         std::fs::remove_dir_all(&dir).ok();
     }

@@ -34,8 +34,8 @@ use crate::error::{Result, TuneError};
 use crate::methodology::SpaceEval;
 use crate::optimizers::HyperParams;
 use crate::searchspace::SearchSpace;
+use crate::util::hash::FastMap;
 use crate::util::rng::Rng;
-use std::collections::HashMap;
 use std::sync::Arc;
 
 pub mod halving;
@@ -109,7 +109,7 @@ pub struct MetaCampaign {
     spent: f64,
     evals: usize,
     started: std::time::Instant,
-    memo: HashMap<(String, String, usize), f64>,
+    memo: FastMap<(String, String, usize), f64>,
     /// Explicit fault plan threaded into every campaign this
     /// meta-campaign launches (chaos testing); `None` everywhere else.
     faults: Option<Arc<crate::faults::FaultPlan>>,
@@ -149,8 +149,9 @@ impl MetaCampaign {
             target: target.to_string(),
             spent: 0.0,
             evals: 0,
+            // lint: allow(W01, reason = "elapsed-time telemetry; never feeds tuning decisions")
             started: std::time::Instant::now(),
-            memo: HashMap::new(),
+            memo: FastMap::default(),
             faults: None,
         })
     }

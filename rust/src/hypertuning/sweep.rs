@@ -516,6 +516,7 @@ where
     if train.is_empty() {
         return Err(TuneError::InvalidInput("sweep has no training spaces".into()));
     }
+    // lint: allow(W01, reason = "elapsed-time telemetry; never feeds tuning decisions")
     let t0 = std::time::Instant::now();
     let algos = optimizers::hypertunable();
     observer.sweep_started(algos.len(), repeats);
@@ -536,6 +537,7 @@ where
     for (i, d) in algos.iter().enumerate() {
         let hp_space = space::limited_space(d.name)?;
         observer.sweep_optimizer_started(i, d.name, hp_space.len());
+        // lint: allow(W01, reason = "elapsed-time telemetry; never feeds tuning decisions")
         let ot0 = std::time::Instant::now();
         let leg = (|| -> Result<OptimizerSweep> {
             // Reference leg: the schema-default hyperparameters, same

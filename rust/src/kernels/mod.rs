@@ -106,6 +106,7 @@ pub fn kernel_by_name(name: &str) -> Result<Kernel> {
 
 /// Shorthand used by the kernel definitions.
 pub(crate) fn geti(values: &[Value], i: usize) -> f64 {
+    // lint: allow(W03, reason = "kernel definitions pass numeric params only")
     values[i].as_f64().expect("numeric parameter")
 }
 

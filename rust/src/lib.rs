@@ -41,6 +41,12 @@
 //!   against that sweep's optimum (`tunetuner metasweep`), reporting
 //!   per-strategy recovery/regret/cost in a `tunetuner-metasweep`
 //!   envelope.
+//! * [`analysis`] — the self-dogfooded static-analysis engine behind
+//!   `tunetuner lint`: a span-accurate token walk enforcing the repo's
+//!   determinism (W01), persistence (W02), panic-discipline (W03),
+//!   float-ordering (W04), and RNG-discipline (W05) invariants, with a
+//!   justification-required inline suppression grammar and a versioned
+//!   `tunetuner-lint` envelope.
 //! * [`experiments`] — one regenerator per paper table/figure.
 //! * [`error`] — the typed [`TuneError`] every fallible library API
 //!   returns (the binary converts to `anyhow` at its boundary).
@@ -74,6 +80,7 @@
     clippy::type_complexity
 )]
 
+pub mod analysis;
 pub mod error;
 pub mod faults;
 pub mod util;

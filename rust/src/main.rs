@@ -24,6 +24,7 @@
 use anyhow::{bail, Context, Result};
 use std::path::PathBuf;
 use std::sync::Arc;
+use tunetuner::analysis;
 use tunetuner::campaign::{Campaign, LogObserver, Observer};
 use tunetuner::dataset::hub::{Hub, HUB_SEED};
 use tunetuner::experiments::{self, Ctx, Scale};
@@ -111,6 +112,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("experiment") => cmd_experiment(args),
         Some("spacegen") => cmd_spacegen(args),
         Some("bench-trend") => cmd_bench_trend(args),
+        Some("lint") => cmd_lint(args),
         Some("help") | None => {
             print!("{HELP}");
             Ok(())
@@ -152,6 +154,11 @@ subcommands:
       [--campaign ALGO] [--evals 200]  run a simulated campaign on it
   bench-trend               cross-PR perf trajectory from BENCH_<pr>.json files
       [--dir .] [--threshold 25] [--gate]  (--gate: exit 1 on regression)
+  lint                      static analysis: the repo's own invariants (W01..W05)
+      [--root rust/src] [--deny all|none|W01,W03] [--json] [--out PATH]
+      rules: W01 nondeterminism, W02 raw persistence, W03 panic discipline,
+      W04 partial_cmp float ordering, W05 foreign/hard-seeded RNG; suppress a
+      site with `// lint: allow(RULE, reason = "...")` (justification required)
 
 global flags: --scale quick|paper  --seed N  --hub DIR  --results DIR
               --artifacts DIR  --backend pjrt|native  --verbose  --quiet
@@ -605,6 +612,7 @@ fn cmd_spacegen(args: &Args) -> Result<()> {
         "elide" => FlatPolicy::Elide,
         other => bail!("unknown flat policy {other:?} (auto|materialize|elide)"),
     };
+    // lint: allow(W01, reason = "elapsed-time telemetry; never feeds tuning decisions")
     let t0 = std::time::Instant::now();
     let space = spec.build_with(BuildOptions { index, flat })?;
     let build_secs = t0.elapsed().as_secs_f64();
@@ -640,6 +648,7 @@ fn cmd_spacegen(args: &Args) -> Result<()> {
         let cache = Arc::new(tunetuner::dataset::synth_cache(&space, spec.seed, 3, 0.02));
         let mut sim =
             tunetuner::runner::SimulationRunner::new(Arc::clone(&space), Arc::clone(&cache))?;
+        // lint: allow(W01, reason = "elapsed-time telemetry; never feeds tuning decisions")
         let t1 = std::time::Instant::now();
         let mut tuning = tunetuner::runner::Tuning::new(
             &mut sim,
@@ -688,6 +697,34 @@ fn cmd_bench_trend(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Self-dogfooded static analysis: run the invariant rules over the
+/// library source and fail on denied violations. CI runs
+/// `lint --deny all --json --out lint_report.json` before tier-1.
+fn cmd_lint(args: &Args) -> Result<()> {
+    let root = PathBuf::from(args.opt_or("root", "rust/src"));
+    let deny = analysis::DenySet::parse(&args.opt_or("deny", "all"))?;
+    let report = analysis::lint_tree(&root)
+        .with_context(|| format!("linting {}", root.display()))?;
+    if args.flag("json") {
+        println!("{}", analysis::report::to_json(&report).to_pretty());
+    } else {
+        print!("{}", analysis::report::render_text(&report));
+    }
+    if let Some(out) = args.opt("out") {
+        analysis::report::save(&report, std::path::Path::new(out))?;
+        log_info!("lint envelope written to {out}");
+    }
+    let denied = report
+        .diagnostics
+        .iter()
+        .filter(|d| deny.denies(d.rule))
+        .count();
+    if denied > 0 {
+        bail!("lint: {denied} denied violation(s) (see report above)");
+    }
+    Ok(())
+}
+
 fn cmd_experiment(args: &Args) -> Result<()> {
     let c = ctx(args)?;
     let id = args
@@ -698,6 +735,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     if c.engine.backend() == tunetuner::runtime::EngineBackend::Native {
         log_warn!("running with the native oracle backend (no PJRT artifacts)");
     }
+    // lint: allow(W01, reason = "elapsed-time telemetry; never feeds tuning decisions")
     let t0 = std::time::Instant::now();
     experiments::run(&c, &id)?;
     log_info!("experiment {id} done in {:.1}s", t0.elapsed().as_secs_f64());

@@ -30,7 +30,7 @@ pub struct Baseline {
     /// (not a dense 1..n table) keeps the whole baseline O(m log m): the
     /// budget binary search touches ~log m distinct n, the sampling
     /// points ~2·points more, each evaluated with one O(m) pass.
-    memo: std::collections::HashMap<usize, f64>,
+    memo: crate::util::hash::FastMap<usize, f64>,
     /// Mean simulated cost of one evaluation (over all configs).
     pub mean_cost: f64,
     /// Fraction of configurations that are valid.
@@ -52,7 +52,7 @@ impl Baseline {
         let optimum = sorted[0];
         let median = crate::util::stats::percentile_sorted(sorted, 50.0);
         Baseline {
-            memo: std::collections::HashMap::new(),
+            memo: crate::util::hash::FastMap::default(),
             mean_cost: table.mean_eval_cost,
             valid_fraction: table.valid_fraction,
             optimum,

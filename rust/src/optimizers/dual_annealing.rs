@@ -409,6 +409,7 @@ fn nelder_mead(
             break;
         }
         simplex.sort_by(|a, b| a.1.total_cmp(&b.1));
+        // lint: allow(W03, reason = "simplex always has dim+1 vertices")
         let worst = simplex.last().unwrap().0;
         // Centroid of all but worst, reflected through the worst point.
         let ndims = tuning.space().dims().len();

@@ -251,7 +251,7 @@ mod tests {
              \"benches\":[{}]}}",
             rows.join(",")
         );
-        std::fs::write(dir.join(name), body).unwrap();
+        crate::util::fsio::atomic_write(&dir.join(name), body.as_bytes()).unwrap();
     }
 
     fn fixture_dir(tag: &str) -> PathBuf {
@@ -358,7 +358,8 @@ mod tests {
     #[test]
     fn rejects_foreign_schema() {
         let dir = fixture_dir("schema");
-        std::fs::write(dir.join("BENCH_9.json"), "{\"schema\":\"other\"}").unwrap();
+        crate::util::fsio::atomic_write(&dir.join("BENCH_9.json"), b"{\"schema\":\"other\"}")
+            .unwrap();
         assert!(discover(&dir).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }

@@ -75,6 +75,7 @@ impl LiveRunner {
         let ms = self
             .engine
             .measure(&feats, &self.device_vec)
+            // lint: allow(W03, reason = "engine failure is fatal on the live path")
             .expect("engine evaluation failed");
         config_idxs
             .iter()
@@ -119,6 +120,7 @@ impl Runner for LiveRunner {
     }
 
     fn evaluate(&mut self, config_idx: usize) -> EvalResult {
+        // lint: allow(W03, reason = "a one-element batch yields one result")
         self.evaluate_batch(&[config_idx]).pop().unwrap()
     }
 

@@ -219,6 +219,7 @@ impl Engine {
         features: &[[f32; NUM_FEATURES]],
         device: &[f32; NUM_DEVICE],
     ) -> Result<Vec<Measurement>> {
+        // lint: allow(W03, reason = "measure requires a loaded PJRT backend")
         let state = self.pjrt.as_ref().unwrap().lock().unwrap();
         let mut out = Vec::with_capacity(features.len());
         let mut offset = 0usize;
@@ -230,6 +231,7 @@ impl Engine {
                 .iter()
                 .find(|(n, _)| *n >= remaining)
                 .or_else(|| state.executables.last())
+                // lint: allow(W03, reason = "executables is non-empty once loaded")
                 .unwrap();
             let take = remaining.min(*batch);
             let chunk = &features[offset..offset + take];

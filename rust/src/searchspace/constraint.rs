@@ -29,7 +29,8 @@
 use super::param::{TunableParam, Value};
 use crate::bail;
 use crate::error::{Context, Result};
-use std::collections::HashMap;
+use crate::util::hash::FastMap;
+use std::collections::BTreeMap;
 
 /// A compiled constraint: source text + AST + referenced parameter names.
 #[derive(Clone, Debug)]
@@ -69,10 +70,10 @@ impl Constraint {
         }
     }
 
-    /// Evaluate with a HashMap environment (convenience). Kept as the
+    /// Evaluate with a sorted-map environment (convenience). Kept as the
     /// slow-path *reference oracle* for tests; the enumeration hot path
     /// goes through [`Constraint::compile`] + [`CompiledConstraint`].
-    pub fn eval_map(&self, env: &HashMap<String, Value>) -> Result<bool> {
+    pub fn eval_map(&self, env: &BTreeMap<String, Value>) -> Result<bool> {
         self.eval(&|name| env.get(name).cloned())
     }
 
@@ -91,8 +92,8 @@ impl Constraint {
             source: &self.source,
             ops: Vec::new(),
             slots: Vec::new(),
-            slot_of_dim: HashMap::new(),
-            interned: HashMap::new(),
+            slot_of_dim: FastMap::default(),
+            interned: FastMap::default(),
             max_dim: 0,
         };
         c.emit(&self.expr)?;
@@ -486,6 +487,14 @@ enum CVal {
     Str(u32),
 }
 
+/// Pop the compiled evaluation stack. The emit pass is arity-checked —
+/// every op's operands are pushed before the op that consumes them — so
+/// an underflow here would be a compiler bug, not bad user input.
+fn pop(stack: &mut Vec<CVal>) -> CVal {
+    // lint: allow(W03, reason = "emit pass is arity-checked; underflow is a compiler bug")
+    stack.pop().expect("compiled stack underflow")
+}
+
 fn cval_f64(v: CVal) -> Result<f64> {
     Ok(match v {
         CVal::Int(i) => i as f64,
@@ -626,14 +635,14 @@ impl CompiledConstraint {
                     stack.push(slot.values[digit(slot.dim) as usize]);
                 }
                 COp::Neg => {
-                    let v = stack.pop().expect("compiled stack underflow");
+                    let v = pop(stack);
                     stack.push(match v {
                         CVal::Int(i) => CVal::Int(-i),
                         other => CVal::Float(-cval_f64(other)?),
                     });
                 }
                 COp::Not => {
-                    let v = stack.pop().expect("compiled stack underflow");
+                    let v = pop(stack);
                     stack.push(CVal::Bool(match v {
                         CVal::Bool(b) => !b,
                         CVal::Int(i) => i == 0,
@@ -642,27 +651,28 @@ impl CompiledConstraint {
                     }));
                 }
                 COp::ToBool => {
-                    let v = stack.pop().expect("compiled stack underflow");
+                    let v = pop(stack);
                     stack.push(CVal::Bool(cval_truthy(v)?));
                 }
                 COp::JumpIf { cond, to } => {
-                    let CVal::Bool(b) = *stack.last().expect("compiled stack underflow") else {
+                    let v = pop(stack);
+                    let CVal::Bool(b) = v else {
                         unreachable!("JumpIf over a non-Bool (compiler always emits ToBool first)")
                     };
                     if b == cond {
+                        stack.push(v);
                         pc = to as usize;
                         continue;
                     }
-                    stack.pop();
                 }
                 COp::Bin(op) => {
-                    let b = stack.pop().expect("compiled stack underflow");
-                    let a = stack.pop().expect("compiled stack underflow");
+                    let b = pop(stack);
+                    let a = pop(stack);
                     stack.push(eval_bin(op, a, b)?);
                 }
                 COp::Min | COp::Max => {
-                    let b = stack.pop().expect("compiled stack underflow");
-                    let a = stack.pop().expect("compiled stack underflow");
+                    let b = pop(stack);
+                    let a = pop(stack);
                     let is_min = matches!(self.ops[pc], COp::Min);
                     stack.push(match (a, b) {
                         (CVal::Int(x), CVal::Int(y)) => {
@@ -677,7 +687,7 @@ impl CompiledConstraint {
             }
             pc += 1;
         }
-        match stack.pop().expect("compiled stack underflow") {
+        match pop(stack) {
             CVal::Bool(b) => Ok(b),
             CVal::Int(i) => Ok(i != 0),
             CVal::Float(x) => Ok(x != 0.0),
@@ -743,8 +753,8 @@ struct Compiler<'a> {
     source: &'a str,
     ops: Vec<COp>,
     slots: Vec<Slot>,
-    slot_of_dim: HashMap<usize, u32>,
-    interned: HashMap<String, u32>,
+    slot_of_dim: FastMap<usize, u32>,
+    interned: FastMap<String, u32>,
     max_dim: usize,
 }
 
@@ -853,7 +863,7 @@ impl Compiler<'_> {
 mod tests {
     use super::*;
 
-    fn env_of(pairs: &[(&str, Value)]) -> HashMap<String, Value> {
+    fn env_of(pairs: &[(&str, Value)]) -> BTreeMap<String, Value> {
         pairs
             .iter()
             .map(|(k, v)| (k.to_string(), v.clone()))
@@ -915,9 +925,9 @@ mod tests {
     #[test]
     fn precedence() {
         let c = Constraint::parse("2 + 3 * 4 == 14").unwrap();
-        assert!(c.eval_map(&HashMap::new()).unwrap());
+        assert!(c.eval_map(&BTreeMap::new()).unwrap());
         let c = Constraint::parse("(2 + 3) * 4 == 20").unwrap();
-        assert!(c.eval_map(&HashMap::new()).unwrap());
+        assert!(c.eval_map(&BTreeMap::new()).unwrap());
     }
 
     #[test]
@@ -926,9 +936,9 @@ mod tests {
         assert!(Constraint::parse("(a").is_err());
         assert!(Constraint::parse("a ==").is_err());
         let c = Constraint::parse("missing == 1").unwrap();
-        assert!(c.eval_map(&HashMap::new()).is_err());
+        assert!(c.eval_map(&BTreeMap::new()).is_err());
         let c = Constraint::parse("1 / 0 == 1").unwrap();
-        assert!(c.eval_map(&HashMap::new()).is_err());
+        assert!(c.eval_map(&BTreeMap::new()).is_err());
     }
 
     #[test]
@@ -953,7 +963,7 @@ mod tests {
         let mut cursor = vec![0usize; dims.len()];
         let mut scratch = EvalScratch::default();
         loop {
-            let env: HashMap<String, Value> = params
+            let env: BTreeMap<String, Value> = params
                 .iter()
                 .zip(&cursor)
                 .map(|(p, &i)| (p.name.clone(), p.values[i].clone()))

@@ -465,6 +465,7 @@ impl SearchSpace {
         let n = self.dims.len();
         match &self.flat {
             Some(f) => &f[idx * n..(idx + 1) * n],
+            // lint: allow(W03, reason = "documented panic: flat buffer was elided")
             None => panic!(
                 "encoded() on search space {:?} whose flat buffer is elided; \
                  use digit()/encoded_into()",

@@ -30,6 +30,7 @@ impl Args {
                     .map(|n| !n.starts_with("--"))
                     .unwrap_or(false)
                 {
+                    // lint: allow(W03, reason = "peek guaranteed a value token follows")
                     let val = iter.next().unwrap();
                     args.options.insert(rest.to_string(), val);
                 } else {
@@ -65,6 +66,7 @@ impl Args {
         self.opt(name)
             .map(|s| {
                 s.parse()
+                    // lint: allow(W03, reason = "CLI usage error; abort with a message")
                     .unwrap_or_else(|_| panic!("--{name} expects an integer, got {s:?}"))
             })
             .unwrap_or(default)
@@ -74,6 +76,7 @@ impl Args {
         self.opt(name)
             .map(|s| {
                 s.parse()
+                    // lint: allow(W03, reason = "CLI usage error; abort with a message")
                     .unwrap_or_else(|_| panic!("--{name} expects a number, got {s:?}"))
             })
             .unwrap_or(default)
@@ -83,6 +86,7 @@ impl Args {
         self.opt(name)
             .map(|s| {
                 s.parse()
+                    // lint: allow(W03, reason = "CLI usage error; abort with a message")
                     .unwrap_or_else(|_| panic!("--{name} expects an integer, got {s:?}"))
             })
             .unwrap_or(default)

@@ -39,6 +39,9 @@ pub fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
 /// and the write reports an `Io` error — the previous file at `path`
 /// stays intact, which is exactly the property the resume path depends
 /// on.
+// The one place raw writes are allowed: everything else goes through here
+// (clippy's disallowed_methods and the lint engine's W02 both point at it).
+#[allow(clippy::disallowed_methods)]
 pub fn atomic_write_with(path: &Path, bytes: &[u8], faults: Option<&FaultPlan>) -> Result<()> {
     if let Some(parent) = path.parent() {
         if !parent.as_os_str().is_empty() {

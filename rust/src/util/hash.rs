@@ -5,8 +5,13 @@
 //! cache keyed by `usize`). This is an FxHash-style multiply-rotate
 //! hasher: not DoS-resistant, which is fine for internal keys derived
 //! from configuration indices.
+//!
+//! This module is the lint engine's W01 whitelist for std hash
+//! collections: [`FastMap`]/[`FastSet`] pin a fixed-seed hasher, so
+//! (given deterministic insertion) iteration order is reproducible
+//! across runs — unlike std's randomly-seeded defaults.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::hash::{BuildHasherDefault, Hasher};
 
 const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
@@ -34,6 +39,7 @@ impl Hasher for FxHasher {
     fn write(&mut self, bytes: &[u8]) {
         let mut chunks = bytes.chunks_exact(8);
         for c in &mut chunks {
+            // lint: allow(W03, reason = "chunks_exact(8) guarantees 8-byte slices")
             self.mix(u64::from_le_bytes(c.try_into().unwrap()));
         }
         let rest = chunks.remainder();
@@ -63,6 +69,9 @@ impl Hasher for FxHasher {
 
 /// HashMap with the fast hasher.
 pub type FastMap<K, V> = HashMap<K, V, BuildHasherDefault<FxHasher>>;
+
+/// HashSet with the fast hasher.
+pub type FastSet<T> = HashSet<T, BuildHasherDefault<FxHasher>>;
 
 #[cfg(test)]
 mod tests {

@@ -30,6 +30,7 @@ impl Json {
             Json::Obj(map) => {
                 map.insert(key.to_string(), value);
             }
+            // lint: allow(W03, reason = "documented contract: set requires an object")
             _ => panic!("Json::set on non-object"),
         }
         self
@@ -482,6 +483,7 @@ impl<'a> Parser<'a> {
                 self.pos += 1;
             }
         }
+        // lint: allow(W03, reason = "digit bytes are ASCII, always valid UTF-8")
         let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
         s.parse::<f64>()
             .map(Json::Num)

@@ -135,7 +135,7 @@ pub fn series_csv(series: &[Series]) -> String {
             }
         }
     }
-    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs.sort_by(|a, b| a.total_cmp(b));
     let maps: Vec<BTreeMap<u64, f64>> = series
         .iter()
         .map(|s| {

@@ -146,7 +146,10 @@ impl Rng {
         assert!(k <= n, "cannot sample {k} from {n}");
         // For small k relative to n use rejection; otherwise shuffle.
         if k * 4 <= n {
-            let mut seen = std::collections::HashSet::with_capacity(k);
+            // Membership-only use (iteration order never observed), but
+            // FastSet keeps the whole module std-HashSet-free (W01).
+            let mut seen =
+                crate::util::hash::FastSet::with_capacity_and_hasher(k, Default::default());
             let mut out = Vec::with_capacity(k);
             while out.len() < k {
                 let i = self.below(n);

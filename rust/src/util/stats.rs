@@ -32,7 +32,7 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return f64::NAN;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     percentile_sorted(&v, p)
 }
 
@@ -67,7 +67,7 @@ pub fn max(xs: &[f64]) -> f64 {
 pub fn midranks(xs: &[f64]) -> Vec<f64> {
     let n = xs.len();
     let mut idx: Vec<usize> = (0..n).collect();
-    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    idx.sort_by(|&a, &b| xs[a].total_cmp(&xs[b]));
     let mut ranks = vec![0.0; n];
     let mut i = 0;
     while i < n {
@@ -113,7 +113,7 @@ pub fn kruskal_wallis(groups: &[Vec<f64>]) -> (f64, f64) {
 
     // Tie correction.
     let mut sorted = all.clone();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(|a, b| a.total_cmp(b));
     let mut tie_sum = 0.0;
     let mut i = 0;
     while i < sorted.len() {
@@ -231,7 +231,7 @@ pub fn mutual_information(labels: &[usize], values: &[f64], bins: usize) -> f64 
     }
     // Equal-frequency bin edges.
     let mut sorted = values.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(|a, b| a.total_cmp(b));
     let bin_of = |v: f64| -> usize {
         // rank of v within sorted data -> bin
         let pos = sorted.partition_point(|&s| s < v);

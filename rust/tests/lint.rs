@@ -1,0 +1,190 @@
+//! Integration tests for the invariant lint engine.
+//!
+//! The unit tests in `rust/src/analysis/` cover the lexer, the allow
+//! grammar, and each rule against in-memory fixtures. This suite covers
+//! the on-disk surface: walking a real fixture tree with `lint_tree`,
+//! the persisted JSON envelope, and — most importantly — the golden
+//! check that the repository's own `rust/src` is lint-clean, which is
+//! the invariant CI enforces via `tunetuner lint --deny all`.
+
+use std::path::{Path, PathBuf};
+
+use tunetuner::analysis::report;
+use tunetuner::analysis::{lint_source, lint_tree, DenySet, RuleId};
+use tunetuner::util::fsio;
+use tunetuner::util::json;
+
+fn repo_src() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src")
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tt_lint_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// A fixture tree with one file per rule violation plus one clean file.
+/// Returns the root. Written with `atomic_write` (which also creates
+/// the parent directories).
+fn write_fixture_tree(root: &Path) {
+    let put = |rel: &str, src: &str| {
+        fsio::atomic_write(&root.join(rel), src.as_bytes()).unwrap();
+    };
+    put(
+        "w01_time.rs",
+        "fn stamp() -> std::time::Instant { std::time::Instant::now() }\n",
+    );
+    put(
+        "w01_map.rs",
+        "use std::collections::HashMap;\npub fn f(m: &HashMap<u8, u8>) -> usize { m.len() }\n",
+    );
+    put(
+        "sub/w02_write.rs",
+        "fn save(p: &std::path::Path) { std::fs::write(p, b\"x\").ok(); }\n",
+    );
+    put(
+        "sub/w03_unwrap.rs",
+        "pub fn f(o: Option<u8>) -> u8 { o.unwrap() }\n",
+    );
+    put(
+        "w04_partial.rs",
+        "pub fn f(v: &mut [f64]) { v.sort_by(|a, b| a.partial_cmp(b).unwrap()); }\n",
+    );
+    put("w05_rng.rs", "pub fn f() { let r = Rng::new(42); }\n");
+    put(
+        "clean.rs",
+        "pub fn add(a: u64, b: u64) -> u64 { a.wrapping_add(b) }\n",
+    );
+}
+
+// ---------------------------------------------------------------------
+// Golden test: the repository's own sources must be lint-clean.
+
+#[test]
+fn repo_is_lint_clean() {
+    let report = lint_tree(&repo_src()).unwrap();
+    assert!(report.files > 50, "walk found only {} files", report.files);
+    let rendered = report::render_text(&report);
+    assert!(
+        report.diagnostics.is_empty(),
+        "rust/src has lint violations:\n{rendered}"
+    );
+    // Every suppression in the tree carries a justified allow.
+    assert!(report.allows >= report.suppressed);
+}
+
+// ---------------------------------------------------------------------
+// Fixture tree through the real directory walk.
+
+#[test]
+fn fixture_tree_reports_every_rule() {
+    let root = tmp_dir("tree");
+    write_fixture_tree(&root);
+    let report = lint_tree(&root).unwrap();
+    assert_eq!(report.files, 7);
+
+    let fired: Vec<RuleId> = report.diagnostics.iter().map(|d| d.rule).collect();
+    for rule in [RuleId::W01, RuleId::W02, RuleId::W03, RuleId::W04, RuleId::W05] {
+        assert!(fired.contains(&rule), "{rule:?} missing from {fired:?}");
+    }
+    // The clean file contributes nothing.
+    assert!(report.diagnostics.iter().all(|d| !d.path.ends_with("clean.rs")));
+    // Paths are /-normalized and relative to the root, spans exact.
+    let w02 = report
+        .diagnostics
+        .iter()
+        .find(|d| d.rule == RuleId::W02)
+        .unwrap();
+    assert_eq!(w02.path, "sub/w02_write.rs");
+    assert_eq!(w02.line, 1);
+    assert!(w02.col > 1);
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn fixture_tree_walk_is_deterministic() {
+    let root = tmp_dir("det");
+    write_fixture_tree(&root);
+    let a = lint_tree(&root).unwrap();
+    let b = lint_tree(&root).unwrap();
+    assert_eq!(a.diagnostics, b.diagnostics);
+    std::fs::remove_dir_all(&root).ok();
+}
+
+// ---------------------------------------------------------------------
+// Allow grammar end to end: suppression counted, malformed rejected.
+
+#[test]
+fn justified_allow_suppresses_and_is_counted() {
+    let src = "pub fn f(o: Option<u8>) -> u8 {\n\
+               // lint: allow(W03, reason = \"caller checks is_some first\")\n\
+               o.unwrap()\n\
+               }\n";
+    let fl = lint_source("x/allowed.rs", src);
+    assert!(fl.diagnostics.is_empty(), "{:?}", fl.diagnostics);
+    assert_eq!((fl.suppressed, fl.allows), (1, 1));
+}
+
+#[test]
+fn unjustified_allow_is_w00_and_never_deniable_off() {
+    let src = "pub fn f(o: Option<u8>) -> u8 {\n\
+               // lint: allow(W03)\n\
+               o.unwrap()\n\
+               }\n";
+    let fl = lint_source("x/bad.rs", src);
+    let rules: Vec<RuleId> = fl.diagnostics.iter().map(|d| d.rule).collect();
+    assert!(rules.contains(&RuleId::W00), "{rules:?}");
+    assert!(rules.contains(&RuleId::W03), "directive must not suppress");
+    // Even `--deny none` still fails on malformed suppressions.
+    let none = DenySet::parse("none").unwrap();
+    assert!(none.denies(RuleId::W00));
+    assert!(!none.denies(RuleId::W03));
+}
+
+#[test]
+fn deny_list_selects_rules() {
+    let some = DenySet::parse("W01,W03").unwrap();
+    assert!(some.denies(RuleId::W01));
+    assert!(some.denies(RuleId::W03));
+    assert!(!some.denies(RuleId::W04));
+    assert!(DenySet::parse("all").unwrap().denies(RuleId::W05));
+    assert!(DenySet::parse("W06").is_err());
+    assert!(DenySet::parse("W00").is_err(), "W00 is implicit, not optable");
+}
+
+// ---------------------------------------------------------------------
+// Envelope: versioned schema, saved atomically, round-trips.
+
+#[test]
+fn envelope_saves_and_round_trips() {
+    let root = tmp_dir("env");
+    write_fixture_tree(&root);
+    let report = lint_tree(&root).unwrap();
+    let out = root.join("report/lint.json");
+    report::save(&report, &out).unwrap();
+
+    let body = std::fs::read_to_string(&out).unwrap();
+    assert!(body.ends_with('\n'));
+    let j = json::parse(&body).unwrap();
+    assert_eq!(j.at(&["schema"]).and_then(|v| v.as_str()), Some("tunetuner-lint"));
+    assert_eq!(j.at(&["schema_version"]).and_then(|v| v.as_usize()), Some(1));
+    assert_eq!(j.at(&["files"]).and_then(|v| v.as_usize()), Some(7));
+    let n = j.at(&["violations"]).and_then(|v| v.as_usize()).unwrap();
+    let diags = j.at(&["diagnostics"]).and_then(|v| v.as_arr()).unwrap();
+    assert_eq!(diags.len(), n);
+    assert!(n >= 5, "expected at least one violation per rule, got {n}");
+    // Counts sum to the violation total.
+    let counts = j.at(&["counts"]).and_then(|v| v.as_obj()).unwrap();
+    let sum: usize = counts.values().filter_map(|v| v.as_usize()).sum();
+    assert_eq!(sum, n);
+    // No stray staging debris from the atomic write.
+    let dir = out.parent().unwrap();
+    let stray = std::fs::read_dir(dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| e.file_name() != "lint.json")
+        .count();
+    assert_eq!(stray, 0);
+    std::fs::remove_dir_all(&root).ok();
+}

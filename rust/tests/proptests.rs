@@ -12,7 +12,7 @@
     clippy::type_complexity
 )]
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use tunetuner::optimizers::{self, HyperParams};
 use tunetuner::searchspace::{Constraint, Neighborhood, SearchSpace, TunableParam, Value};
 use tunetuner::util::json::{self, Json};
@@ -120,7 +120,7 @@ fn prop_space_invariants() {
         for i in (0..space.len()).step_by(1 + space.len() / 50) {
             assert_eq!(space.index_of(space.encoded(i)), Some(i), "case {case}");
             // Constraint satisfaction.
-            let env: HashMap<String, Value> = space.named_values(i).into_iter().collect();
+            let env: BTreeMap<String, Value> = space.named_values(i).into_iter().collect();
             for c in &space.constraints {
                 assert!(c.eval_map(&env).unwrap(), "case {case} config {i}");
             }
