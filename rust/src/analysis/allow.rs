@@ -10,9 +10,11 @@
 //! lint: allow(W01, W03, reason = "shared justification for both rules")
 //! ```
 //!
-//! A directive suppresses matching diagnostics on its own line and on
-//! the next line that contains code (so both trailing-comment and
-//! comment-above placement work). A directive that does not parse —
+//! A directive on a comment-only line suppresses matching diagnostics
+//! on the next line that contains code (comment-above placement); a
+//! directive sharing its line with code (trailing placement) suppresses
+//! only that line, never the statement after it. A directive that does
+//! not parse —
 //! missing reason, empty reason, unknown rule id, bad syntax — is
 //! itself reported as rule `W00`, which is always denied: a malformed
 //! suppression must never silently succeed.

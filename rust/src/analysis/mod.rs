@@ -32,7 +32,8 @@ pub use rules::RuleId;
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Diagnostic {
     pub rule: RuleId,
-    /// `/`-normalized path as given to the engine.
+    /// `/`-normalized path as given to the engine; [`lint_tree`] passes
+    /// paths relative to the walk root.
     pub path: String,
     pub line: u32,
     pub col: u32,
@@ -230,7 +231,8 @@ pub fn test_mask(tokens: &[Token]) -> Vec<bool> {
 }
 
 /// Lint one file's source. `rel_path` is used for diagnostics and for
-/// the per-module whitelists (suffix-matched, `/`-normalized).
+/// the per-module whitelists (root-anchored, `/`-normalized; see
+/// `rules::in_module`).
 pub fn lint_source(rel_path: &str, source: &str) -> FileLint {
     let tokens = lexer::tokenize(source);
     let mask = test_mask(&tokens);
@@ -260,8 +262,11 @@ pub fn lint_source(rel_path: &str, source: &str) -> FileLint {
     }
     let allows = covers.len();
 
-    // A directive covers its own line(s) plus the next line holding
-    // code — so both trailing-comment and comment-above placement work.
+    // A directive on a comment-only line covers its own line(s) plus
+    // the next line holding code (comment-above placement). A directive
+    // sharing a line with code (trailing placement) covers only its own
+    // line(s) — extending it would let one justified allow silently
+    // suppress an unrelated violation on the following statement.
     let mut suppressed = 0usize;
     if !covers.is_empty() {
         let code_lines: Vec<u32> = tokens
@@ -270,13 +275,18 @@ pub fn lint_source(rel_path: &str, source: &str) -> FileLint {
             .map(|t| t.line)
             .collect();
         for (_, lines) in covers.iter_mut() {
-            let end = lines[1];
-            lines[2] = code_lines
-                .iter()
-                .copied()
-                .filter(|&l| l > end)
-                .min()
-                .unwrap_or(0);
+            let (start, end) = (lines[0], lines[1]);
+            let trailing = code_lines.iter().any(|&l| l >= start && l <= end);
+            lines[2] = if trailing {
+                0 // lines are 1-based, so 0 matches no diagnostic
+            } else {
+                code_lines
+                    .iter()
+                    .copied()
+                    .filter(|&l| l > end)
+                    .min()
+                    .unwrap_or(0)
+            };
         }
         diags.retain(|d| {
             if d.rule == RuleId::W00 {
@@ -305,11 +315,19 @@ pub fn lint_source(rel_path: &str, source: &str) -> FileLint {
 fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> Result<()> {
     let mut entries = Vec::new();
     for entry in std::fs::read_dir(dir)? {
-        entries.push(entry?.path());
+        let entry = entry?;
+        // DirEntry::file_type does not follow symlinks: a link is
+        // skipped outright, so a directory-symlink cycle cannot recurse
+        // forever and out-of-tree targets are never linted as in-tree.
+        let ft = entry.file_type()?;
+        if ft.is_symlink() {
+            continue;
+        }
+        entries.push((entry.path(), ft.is_dir()));
     }
     entries.sort();
-    for p in entries {
-        if p.is_dir() {
+    for (p, is_dir) in entries {
+        if is_dir {
             collect_rs(&p, out)?;
         } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
             out.push(p);
@@ -331,7 +349,8 @@ pub fn lint_tree(root: &Path) -> Result<LintReport> {
     };
     for f in &files {
         let source = std::fs::read_to_string(f)?;
-        let rel = f.to_string_lossy().replace('\\', "/");
+        let rel = f.strip_prefix(root).unwrap_or(f.as_path());
+        let rel = rel.to_string_lossy().replace('\\', "/");
         let fl = lint_source(&rel, &source);
         report.diagnostics.extend(fl.diagnostics);
         report.suppressed += fl.suppressed;
@@ -497,6 +516,32 @@ mod tests {
         let fl = lint_source("x/sample.rs", src);
         assert!(fl.diagnostics.is_empty(), "{:?}", fl.diagnostics);
         assert_eq!(fl.suppressed, 1);
+    }
+
+    #[test]
+    fn trailing_allow_does_not_cover_next_line() {
+        let src = "fn f(a: Option<u8>, b: Option<u8>) -> u8 {\n\
+                   let x = a.unwrap(); // lint: allow(W03, reason = \"guarded\")\n\
+                   x + b.unwrap()\n}";
+        let fl = lint_source("x/sample.rs", src);
+        assert_eq!(fl.diagnostics.len(), 1, "{:?}", fl.diagnostics);
+        assert_eq!(fl.diagnostics[0].rule, RuleId::W03);
+        assert_eq!(fl.diagnostics[0].line, 3, "line 3's unwrap needs its own allow");
+        assert_eq!(fl.suppressed, 1);
+    }
+
+    #[test]
+    fn module_whitelist_is_root_anchored_not_suffix_matched() {
+        // A file that merely *ends* in a whitelisted module path (a
+        // fixture tree, vendored code) must not inherit the exemption.
+        let src = "fn f() { let r = Rng::new(1); }";
+        let fl = lint_source("fixtures/util/rng.rs", src);
+        assert_eq!(fl.diagnostics.len(), 1, "{:?}", fl.diagnostics);
+        assert_eq!(fl.diagnostics[0].rule, RuleId::W05);
+        let src = "fn stage(p: &Path) { std::fs::write(p, b\"x\").ok(); }";
+        let fl = lint_source("vendor/other/src/util/fsio.rs", src);
+        assert_eq!(fl.diagnostics.len(), 1, "{:?}", fl.diagnostics);
+        assert_eq!(fl.diagnostics[0].rule, RuleId::W02);
     }
 
     #[test]

@@ -74,10 +74,15 @@ impl RuleId {
     }
 }
 
-/// Does `path` (any prefix, `/`-normalized) denote the module `tail`,
-/// e.g. `in_module("rust/src/util/fsio.rs", "util/fsio.rs")`?
+/// Does the `/`-normalized `path` denote the whitelisted crate module
+/// `tail` (e.g. `util/fsio.rs`)? Anchored, not suffix-matched: the path
+/// must *be* the module path — either relative to the lint root
+/// (`lint_tree` strips the `rust/src` walk root) or spelled
+/// repo-relative (`rust/src/util/fsio.rs`, as the in-memory fixtures
+/// do). A fixture tree or vendored file whose path merely *ends* in
+/// `util/fsio.rs` does not inherit the exemption.
 fn in_module(path: &str, tail: &str) -> bool {
-    path == tail || path.ends_with(&format!("/{tail}"))
+    path == tail || path.strip_prefix("rust/src/") == Some(tail)
 }
 
 /// A code token (comments stripped) plus its test-region flag.
@@ -156,7 +161,7 @@ impl<'a> Code<'a> {
 /// `tokens[i]` as inside test code; `rel_path` selects the per-module
 /// whitelists (`util/log.rs` for W01 timing, `util/hash.rs` for the
 /// deterministic-hasher wrapper, `util/fsio.rs` for W02, `util/rng.rs`
-/// for W05).
+/// for W05 — root-anchored, see [`in_module`]).
 pub fn check(rel_path: &str, tokens: &[Token], in_test: &[bool]) -> Vec<Diagnostic> {
     let path = rel_path.replace('\\', "/");
     let mut code = Code {

@@ -102,6 +102,24 @@ fn fixture_tree_reports_every_rule() {
     std::fs::remove_dir_all(&root).ok();
 }
 
+#[cfg(unix)]
+#[test]
+fn symlinks_are_skipped_not_followed() {
+    let root = tmp_dir("sym");
+    write_fixture_tree(&root);
+    let outside = tmp_dir("sym_outside");
+    fsio::atomic_write(&outside.join("evil.rs"), b"fn f() { panic!(\"x\"); }\n").unwrap();
+    // A directory-symlink cycle must not recurse, and an out-of-tree
+    // file symlink must not be linted as if in-tree.
+    std::os::unix::fs::symlink(&root, root.join("cycle")).unwrap();
+    std::os::unix::fs::symlink(outside.join("evil.rs"), root.join("evil_link.rs")).unwrap();
+    let report = lint_tree(&root).unwrap();
+    assert_eq!(report.files, 7, "symlinked entries must be skipped");
+    assert!(report.diagnostics.iter().all(|d| !d.path.contains("evil")));
+    std::fs::remove_dir_all(&root).ok();
+    std::fs::remove_dir_all(&outside).ok();
+}
+
 #[test]
 fn fixture_tree_walk_is_deterministic() {
     let root = tmp_dir("det");
